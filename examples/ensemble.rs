@@ -1,0 +1,177 @@
+//! Perspectives scenario: an *ensemble* of networks trained through one
+//! shared photonic co-processor.
+//!
+//! The paper's closing remark — "future tests will involve scaling to
+//! even larger networks or ensembles of networks" — is an architecture
+//! question: can one OPU serve many concurrent trainers?  This example
+//! runs N independent DFA trainers against a single simulated device via
+//! the projection service (dynamic frame batching), then reports
+//! per-member and majority-vote accuracy plus the device's utilization.
+//!
+//! ```bash
+//! cargo run --release --example ensemble
+//! LITL_ENSEMBLE_N=8 cargo run --release --example ensemble
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use litl::coordinator::host::{HostAlgo, HostMlp, HostTrainer};
+use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::service::{ProjectionService, ServiceConfig};
+use litl::coordinator::ProjectionClient;
+use litl::data::{self, Split};
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::OpuParams;
+use litl::tensor::Tensor;
+use litl::util::rng::Pcg64;
+
+/// Projector adapter over a service client (each trainer thread holds
+/// one; the physical device lives behind the dispatcher).
+struct ServiceProjector {
+    client: ProjectionClient,
+    modes: usize,
+    frames: u64,
+}
+
+impl Projector for ServiceProjector {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        self.frames += frames.rows() as u64;
+        self.client.project(frames.clone())
+    }
+    fn modes(&self) -> usize {
+        self.modes
+    }
+    fn sim_seconds(&self) -> f64 {
+        self.frames as f64 / 1500.0
+    }
+    fn energy_joules(&self) -> f64 {
+        self.sim_seconds() * 30.0
+    }
+    fn kind(&self) -> &'static str {
+        "service"
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+    let members: usize = std::env::var("LITL_ENSEMBLE_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let hidden = 128usize;
+    let layers = vec![784usize, hidden, hidden, 10];
+    let epochs = 5usize;
+    let batch = 32usize;
+    let train_size = 6_000usize;
+    let test_size = 1_000usize;
+
+    let ds = Arc::new(data::load_or_synth(9, train_size, test_size)?);
+    println!(
+        "ensemble: {members} members (784-{hidden}-{hidden}-10), one shared OPU, \
+         {epochs} epochs x {train_size} samples"
+    );
+
+    // One physical device for everyone.
+    let medium = TransmissionMatrix::sample(77, 10, hidden);
+    let device = Box::new(NativeOpticalProjector::new(
+        OpuParams::default(),
+        medium,
+        123,
+    ));
+    let metrics = Registry::new();
+    let svc = ProjectionService::start(
+        device,
+        10,
+        ServiceConfig {
+            max_batch: 128,
+            queue_depth: 256,
+        },
+        metrics.clone(),
+    );
+
+    let t0 = std::time::Instant::now();
+    let results: Arc<Mutex<Vec<(usize, f32, HostMlp)>>> = Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = (0..members)
+        .map(|i| {
+            let client = svc.client();
+            let ds = ds.clone();
+            let results = results.clone();
+            let layers = layers.clone();
+            std::thread::spawn(move || {
+                let projector = Box::new(ServiceProjector {
+                    client,
+                    modes: layers[1],
+                    frames: 0,
+                });
+                let mut tr = HostTrainer::new(
+                    1000 + i as u64,
+                    &layers,
+                    0.001,
+                    HostAlgo::DfaTernary { theta: 0.1 },
+                    projector,
+                );
+                let mut rng = Pcg64::new(55, i as u64);
+                for _ in 0..epochs {
+                    for (x, y) in ds.batches(Split::Train, batch, &mut rng) {
+                        tr.step(&x, &y).unwrap();
+                    }
+                }
+                let idxs: Vec<usize> = (0..ds.len(Split::Test)).collect();
+                let (tx, ty) = ds.gather(Split::Test, &idxs);
+                let acc = tr.mlp.accuracy(&tx, &ty);
+                results.lock().unwrap().push((i, acc, tr.mlp.clone()));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+
+    let mut results = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
+    results.sort_by_key(|(i, _, _)| *i);
+
+    // Majority-vote ensemble accuracy.
+    let idxs: Vec<usize> = (0..ds.len(Split::Test)).collect();
+    let (tx, ty) = ds.gather(Split::Test, &idxs);
+    let mut vote_correct = 0usize;
+    let n_test = tx.rows();
+    let member_probs: Vec<_> = results.iter().map(|(_, _, m)| m.forward(&tx).probs).collect();
+    for r in 0..n_test {
+        let mut scores = [0.0f32; 10];
+        for probs in &member_probs {
+            for c in 0..10 {
+                scores[c] += probs.at(r, c);
+            }
+        }
+        let pred = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let truth = (0..10).find(|&c| ty.at(r, c) > 0.5).unwrap();
+        if pred == truth {
+            vote_correct += 1;
+        }
+    }
+
+    println!("\n=== results ===");
+    for (i, acc, _) in &results {
+        println!("  member {i}: {:.2}%", acc * 100.0);
+    }
+    println!("  ensemble (soft vote): {:.2}%", 100.0 * vote_correct as f32 / n_test as f32);
+
+    let snap = metrics.snapshot();
+    let frames = snap["service_frames"];
+    let batches = snap["service_batches"];
+    println!("\n=== shared OPU utilization ===");
+    println!("  frames projected  : {frames}");
+    println!("  device batches    : {batches} (mean occupancy {:.1} frames)", frames / batches);
+    println!("  simulated OPU time: {:.1} s @ 1.5 kHz", frames / 1500.0);
+    println!("  simulated energy  : {:.1} J @ 30 W", frames / 1500.0 * 30.0);
+    println!("  wall time         : {wall:.1} s ({members} trainers, 1 core)");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! RSS-stability probe for the engine hot path (regression guard for the
+//! vendored xla_rs.cc input-buffer leak; see runtime/engine.rs).
+use litl::runtime::Engine;
+use litl::tensor::Tensor;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    s.lines()
+        .find(|l| l.starts_with("VmRSS"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|kb| kb.parse::<f64>().ok())
+        .map(|kb| kb / 1024.0)
+        .unwrap_or(0.0)
+}
+fn main() {
+    let mut engine = Engine::new("artifacts").unwrap();
+    let e = Tensor::zeros(&[32, 10]);
+    let b = Tensor::zeros(&[10, 256]);
+    for _ in 0..50 {
+        let _ = engine.call("project_exact", "small", &[&e, &b, &b]).unwrap();
+    }
+    let r0 = rss_mb();
+    for _ in 0..2000 {
+        let _ = engine.call("project_exact", "small", &[&e, &b, &b]).unwrap();
+    }
+    let grown = rss_mb() - r0;
+    println!("RSS growth over 2000 calls: {grown:+.1} MB");
+    assert!(grown < 10.0, "engine hot path leaks: {grown} MB / 2000 calls");
+    println!("leak guard OK");
+}

@@ -1,0 +1,108 @@
+//! End-to-end driver for the paper's §III experiment (E1): trains the
+//! 784→1024→1024→10 tanh MLP with all four feedback algorithms and
+//! prints the accuracy table next to the paper's numbers, plus the
+//! device timing/energy accounting.  Loss curves go to `runs/` as CSV.
+//!
+//! ```bash
+//! cargo run --release --example mnist_dfa_train                  # reduced budget
+//! LITL_E1_EPOCHS=10 LITL_E1_TRAIN=60000 \
+//!   cargo run --release --example mnist_dfa_train                # paper scale
+//! LITL_E1_CONFIG=small cargo run --release --example mnist_dfa_train  # fast smoke
+//! ```
+//!
+//! The recorded run for EXPERIMENTS.md uses the default reduced budget
+//! (single CPU core): epochs=2, train=12000, test=2000, hidden=1024.
+
+use litl::config::{Algo, TrainConfig};
+use litl::coordinator::{TrainReport, Trainer};
+use litl::data;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+    let epochs = env_usize("LITL_E1_EPOCHS", 2);
+    let train_size = env_usize("LITL_E1_TRAIN", 12_000);
+    let test_size = env_usize("LITL_E1_TEST", 2_000);
+    let config = std::env::var("LITL_E1_CONFIG").unwrap_or("paper".into());
+    let seed = env_usize("LITL_E1_SEED", 42) as u64;
+
+    let ds = data::load_or_synth(seed, train_size, test_size)?;
+    println!(
+        "E1: {epochs} epochs x {train_size} train / {test_size} test, \
+         artifact config '{config}'"
+    );
+
+    // The paper's rows: (algo, lr, paper accuracy %).  Optical appears
+    // twice: at the paper's lr=0.01 and at 0.001 (our simulated device's
+    // noise/task combination prefers the smaller rate at this budget).
+    let rows: Vec<(Algo, f32, Option<f64>)> = vec![
+        (Algo::Bp, 0.001, None), // implicit BP reference
+        (Algo::DfaFloat, 0.001, Some(97.7)),
+        (Algo::DfaTernary, 0.001, Some(97.6)),
+        (Algo::Optical, 0.01, Some(95.8)),
+        (Algo::Optical, 0.001, None),
+    ];
+
+    let mut reports: Vec<TrainReport> = Vec::new();
+    for (algo, lr, _) in &rows {
+        let cfg = TrainConfig {
+            artifact_config: config.clone(),
+            algo: *algo,
+            epochs,
+            train_size,
+            test_size,
+            lr: *lr,
+            seed,
+            out_dir: Some("runs".into()),
+            ..TrainConfig::default()
+        };
+        log::info!("=== {} (lr={lr}) ===", algo.name());
+        let mut trainer = Trainer::new(cfg)?;
+        let report = trainer.run(&ds)?;
+        trainer.save_checkpoint(&format!("runs/{}_lr{}.ckpt", algo.name(), lr))?;
+        reports.push(report);
+    }
+
+    println!("\n=== E1: test accuracy (paper §III vs this run) ===");
+    println!(
+        "{:<14} {:>6} {:>10} {:>11} {:>9} {:>11} {:>9}",
+        "algo", "lr", "paper", "measured", "wall s", "OPU sim s", "OPU J"
+    );
+    for ((algo, lr, paper), rep) in rows.iter().zip(&reports) {
+        println!(
+            "{:<14} {:>6} {:>10} {:>10.2}% {:>9.1} {:>11.1} {:>9.1}",
+            algo.name(),
+            lr,
+            paper.map(|p| format!("{p:.1}%")).unwrap_or("—".into()),
+            rep.final_accuracy_pct(),
+            rep.wall_seconds,
+            rep.sim_device_seconds,
+            rep.device_energy_joules,
+        );
+    }
+    println!(
+        "\nnote: dataset is {} (paper used MNIST); the claim under test is\n\
+         the ORDERING optical ≤ dfa-ternary ≤ dfa-float ≤ bp and gap scale,\n\
+         not absolute accuracy. See DESIGN.md §2 and EXPERIMENTS.md §E1.",
+        if std::env::var("LITL_MNIST_DIR").is_ok() {
+            "real MNIST"
+        } else {
+            "synthetic MNIST-like digits"
+        }
+    );
+
+    let ordering_ok = reports[3].final_eval.accuracy
+        <= reports[1].final_eval.accuracy + 0.02
+        && reports[2].final_eval.accuracy <= reports[1].final_eval.accuracy + 0.02;
+    println!(
+        "ordering check: {}",
+        if ordering_ok { "PASS" } else { "DIVERGES (see notes)" }
+    );
+    Ok(())
+}

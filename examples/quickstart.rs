@@ -1,0 +1,61 @@
+//! Quickstart: train the paper's MLP with light in the loop, five lines
+//! of API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the `small` build config (784→256→256→10) and a reduced data
+//! budget so it finishes in ~a minute on one core.  The full paper-scale
+//! run is `examples/mnist_dfa_train.rs`.
+
+use litl::config::{Algo, TrainConfig};
+use litl::coordinator::Trainer;
+use litl::data;
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+
+    // 1. Configure: hybrid optical-DFA training, reduced budget.
+    let cfg = TrainConfig {
+        artifact_config: "small".into(),
+        algo: Algo::Optical,
+        epochs: 5,
+        train_size: 6_400,
+        test_size: 1_000,
+        lr: 0.001,
+        ..TrainConfig::default()
+    };
+
+    // 2. Data: real MNIST if LITL_MNIST_DIR is set, else synthetic digits.
+    let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
+
+    // 3. Train: forward + update in XLA, error projection through the
+    //    simulated photonic co-processor.
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run(&ds)?;
+
+    // 4. Results.
+    println!("\n=== quickstart: optical DFA (simulated OPU) ===");
+    println!("final test accuracy : {:.2}%", report.final_accuracy_pct());
+    println!("parameters          : {}", report.num_params);
+    println!("wall time           : {:.1} s", report.wall_seconds);
+    println!(
+        "simulated OPU time  : {:.1} s ({} frames @ 1.5 kHz)",
+        report.sim_device_seconds, report.frames
+    );
+    println!(
+        "simulated OPU energy: {:.1} J ({:.1} mJ / projection)",
+        report.device_energy_joules,
+        1e3 * report.device_energy_joules / report.frames as f64
+    );
+    for ep in &report.epochs {
+        println!(
+            "  epoch {}: loss {:.4}, acc {:.2}%",
+            ep.epoch,
+            ep.mean_loss,
+            ep.eval.unwrap().accuracy * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,291 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.json.
+
+This is the single point where python runs: ``make artifacts`` invokes it
+once, producing ``artifacts/*.hlo.txt`` and ``artifacts/manifest.json``;
+the rust coordinator is self-contained afterwards.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each lowered entry point is recorded in the manifest with its full input
+and output signature (name, shape) plus the OPU physical constants, so
+the rust side never has to guess shapes and both sides describe the same
+simulated device.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, optics
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """One (batch, hidden) instantiation of the static-shape artifacts."""
+
+    name: str
+    batch: int
+    hidden: int
+    eval_batch: int
+
+    @property
+    def sizes(self):
+        return model.layer_sizes(self.hidden)
+
+    @property
+    def modes(self):
+        # One complex mode feeds one unit of each hidden layer (re/im).
+        return self.hidden
+
+
+CONFIGS = {
+    "paper": BuildConfig("paper", batch=128, hidden=1024, eval_batch=500),
+    "small": BuildConfig("small", batch=32, hidden=256, eval_batch=200),
+}
+
+ERR_DIM = 10  # output classes = optical input dimension
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _param_specs(sizes):
+    out = []
+    for d_in, d_out in zip(sizes[:-1], sizes[1:]):
+        out.append(_spec(d_in, d_out))
+        out.append(_spec(d_out))
+    return out
+
+
+def _param_names(prefix=""):
+    names = []
+    for i in (1, 2, 3):
+        names += [f"{prefix}w{i}", f"{prefix}b{i}"]
+    return names
+
+
+def entry_points(cfg: BuildConfig, opu: optics.OpuConfig):
+    """(name, fn, input_specs, input_names, output_names) per artifact."""
+    sizes = cfg.sizes
+    b, h = cfg.batch, cfg.hidden
+    p_specs = _param_specs(sizes)
+    p_names = _param_names()
+    m_names = [n.replace("w", "mw").replace("b", "mb") for n in p_names]
+    v_names = [n.replace("w", "vw").replace("b", "vb") for n in p_names]
+    npix = opu.npix(cfg.modes)
+
+    def fwd_train(*args):
+        params, (x, yoh, theta) = args[:6], args[6:]
+        return model.fwd_train(params, x, yoh, theta)
+
+    def dfa_apply(*args):
+        params, m, v = args[:6], args[6:12], args[12:18]
+        t, lr, x, h1, h2, e, p1, p2 = args[18:]
+        p, m2, v2 = model.dfa_apply(params, m, v, t, lr, x, h1, h2, e, p1, p2)
+        return (*p, *m2, *v2)
+
+    def bp_step(*args):
+        params, m, v = args[:6], args[6:12], args[12:18]
+        t, lr, x, yoh = args[18:]
+        p, m2, v2, loss = model.bp_step(params, m, v, t, lr, x, yoh)
+        return (*p, *m2, *v2, loss)
+
+    def dfa_digital_step(*args):
+        params, m, v = args[:6], args[6:12], args[12:18]
+        t, lr, x, yoh, b_re, b_im, theta = args[18:]
+        p, m2, v2, loss = model.dfa_digital_step(
+            params, m, v, t, lr, x, yoh, b_re, b_im, theta)
+        return (*p, *m2, *v2, loss)
+
+    def eval_batch(*args):
+        params, (x, yoh) = args[:6], args[6:]
+        return model.eval_batch(params, x, yoh)
+
+    def opu_project(e_t, b_re, b_im, n1, n2, n_ph, read_sigma, cosk, sink):
+        # carrier tables are runtime inputs: large constants do not
+        # survive the HLO-text interchange (see optics.opu_project).
+        return optics.opu_project(e_t, b_re, b_im, n1, n2, n_ph,
+                                  read_sigma, opu, cosk, sink)
+
+    def project_exact(e, b_re, b_im):
+        return optics.project_exact(e, b_re, b_im)
+
+    def alignment(*args):
+        params = args[:6]
+        x, yoh, b_re, b_im, theta = args[6:]
+        return model.alignment(params, x, yoh, b_re, b_im, theta)
+
+    proj_specs = [_spec(ERR_DIM, cfg.modes)] * 2
+    state_specs = p_specs * 3
+    state_names = p_names + m_names + v_names
+    xyoh = [_spec(b, 784), _spec(b, ERR_DIM)]
+
+    return [
+        ("fwd_train", fwd_train,
+         p_specs + xyoh + [_spec()],
+         p_names + ["x", "yoh", "theta"],
+         ["h1", "h2", "e", "e_t", "loss"]),
+        ("dfa_apply", dfa_apply,
+         state_specs + [_spec(), _spec(), _spec(b, 784), _spec(b, h),
+                        _spec(b, h), _spec(b, ERR_DIM), _spec(b, h),
+                        _spec(b, h)],
+         state_names + ["t", "lr", "x", "h1", "h2", "e", "p1", "p2"],
+         state_names),
+        ("bp_step", bp_step,
+         state_specs + [_spec(), _spec()] + xyoh,
+         state_names + ["t", "lr", "x", "yoh"],
+         state_names + ["loss"]),
+        ("dfa_digital_step", dfa_digital_step,
+         state_specs + [_spec(), _spec()] + xyoh + proj_specs + [_spec()],
+         state_names + ["t", "lr", "x", "yoh", "b_re", "b_im", "theta"],
+         state_names + ["loss"]),
+        ("eval_batch", eval_batch,
+         p_specs + [_spec(cfg.eval_batch, 784), _spec(cfg.eval_batch, ERR_DIM)],
+         p_names + ["x", "yoh"],
+         ["correct", "loss"]),
+        ("opu_project", opu_project,
+         [_spec(b, ERR_DIM)] + proj_specs + [_spec(b, npix), _spec(b, npix),
+                                             _spec(), _spec(),
+                                             _spec(1, npix), _spec(1, npix)],
+         ["e_t", "b_re", "b_im", "n1", "n2", "n_ph", "read_sigma",
+          "cosk", "sink"],
+         ["p1", "p2"]),
+        ("project_exact", project_exact,
+         [_spec(b, ERR_DIM)] + proj_specs,
+         ["e", "b_re", "b_im"],
+         ["p1", "p2"]),
+        ("alignment", alignment,
+         p_specs + xyoh + proj_specs + [_spec()],
+         p_names + ["x", "yoh", "b_re", "b_im", "theta"],
+         ["cos1", "cos2"]),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg: BuildConfig, opu: optics.OpuConfig, out_dir: str,
+                 only=None):
+    """Lower every entry point of one BuildConfig; returns manifest rows."""
+    rows = []
+    for name, fn, specs, in_names, out_names in entry_points(cfg, opu):
+        if only and name not in only:
+            continue
+        fname = f"{name}__b{cfg.batch}_h{cfg.hidden}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        if "constant({..." in text:
+            raise RuntimeError(
+                f"{name}: HLO text contains an elided large constant "
+                "(would read back as zeros in the rust runtime) — pass "
+                "the offending array as a runtime input instead")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            list(o.shape) for o in lowered.out_info
+        ] if hasattr(lowered, "out_info") else None
+        rows.append({
+            "entry": name,
+            "config": cfg.name,
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s.shape)}
+                for n, s in zip(in_names, specs)
+            ],
+            "outputs": [{"name": n} for n in out_names],
+        })
+        print(f"  {fname}: {len(text)/1e6:.2f} MB, "
+              f"{len(specs)} inputs, {len(out_names)} outputs")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="paper,small",
+                    help="comma-separated BuildConfig names")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated entry names to (re)build")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    opu = optics.DEFAULT_OPU
+    only = set(args.only.split(",")) if args.only else None
+
+    # Partial rebuilds (--only and/or a subset of --configs) start from
+    # the existing manifest so the other entries survive.
+    prior = {}
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            prior = json.load(f)
+
+    manifest = {
+        "version": 1,
+        "err_dim": ERR_DIM,
+        "opu": {
+            "oversample": opu.oversample,
+            "carrier": opu.carrier,
+            "amp": opu.amp,
+            "n_ph": opu.n_ph,
+            "read_sigma": opu.read_sigma,
+            "adc_gain_err": opu.gain_for(ERR_DIM),
+            "frame_rate_hz": opu.frame_rate_hz,
+            "power_watts": opu.power_watts,
+            "max_modes": opu.max_modes,
+        },
+        "configs": [],
+        "artifacts": [],
+    }
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        print(f"config {cfg.name}: batch={cfg.batch} hidden={cfg.hidden}")
+        manifest["configs"].append({
+            "name": cfg.name,
+            "batch": cfg.batch,
+            "hidden": cfg.hidden,
+            "eval_batch": cfg.eval_batch,
+            "modes": cfg.modes,
+            "layers": list(cfg.sizes),
+        })
+        manifest["artifacts"] += lower_config(cfg, opu, args.out_dir, only)
+
+    if prior:
+        rebuilt = {(a["entry"], a["config"]) for a in manifest["artifacts"]}
+        kept = [
+            a for a in prior.get("artifacts", [])
+            if (a["entry"], a["config"]) not in rebuilt
+            and os.path.exists(os.path.join(args.out_dir, a["file"]))
+        ]
+        manifest["artifacts"] += kept
+        built_cfgs = {c["name"] for c in manifest["configs"]}
+        manifest["configs"] += [
+            c for c in prior.get("configs", []) if c["name"] not in built_cfgs
+        ]
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

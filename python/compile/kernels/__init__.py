@@ -1,0 +1,26 @@
+"""L1 — Pallas kernels (interpret=True) for the light-in-the-loop stack.
+
+Every kernel here is the compute hot-spot of one stage of the hybrid
+optical-DFA training pipeline, and has a pure-jnp oracle in `ref.py`
+against which pytest/hypothesis validate it bit-for-tolerance.
+
+Kernels are written TPU-idiomatically (MXU-sized blocks, VMEM-resident
+tiles, fused elementwise gates) but lowered with ``interpret=True`` so the
+resulting HLO runs on any PJRT backend, including the rust CPU client on
+the request path.  See DESIGN.md §Hardware-Adaptation.
+"""
+
+from .matmul import matmul, matmul_pallas_raw
+from .dfa_update import dfa_grads
+from .adam import adam_update
+from .ternary import ternarize
+from .intensity import camera_intensity
+
+__all__ = [
+    "matmul",
+    "matmul_pallas_raw",
+    "dfa_grads",
+    "adam_update",
+    "ternarize",
+    "camera_intensity",
+]

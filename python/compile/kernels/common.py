@@ -1,0 +1,48 @@
+"""Shared helpers for the Pallas kernels: block sizing and padding.
+
+TPU MXU tiles are 128x128; VMEM is ~16 MiB per core.  Our model dims
+(784, 1024, 10, batch 128) are not all multiples of 128, so every kernel
+wrapper pads its operands up to the block grid and slices the result back.
+The pad is zeros, which is exact for matmul/outer-product reductions and
+for the elementwise kernels (the padded lanes are discarded).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Default block edge: two MXU tiles per side (256x256 = 4 MXU tiles per
+# grid step).  Perf iteration #1 (EXPERIMENTS.md §Perf): 128-edge tiles
+# made every interpret-mode grid step a tiny while-loop iteration — at
+# the paper shapes the dfa_apply artifact ran 56+ iterations per matmul.
+# 256-edge tiles keep VMEM modest (3 x 256KB) while quartering the grid.
+BLOCK = 512
+
+# All pallas_call sites go through interpret mode: real-TPU lowering emits
+# a Mosaic custom-call that the CPU PJRT plugin cannot execute.
+INTERPRET = True
+
+
+def round_up(x: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``x``."""
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, preferred: int = BLOCK) -> int:
+    """Block edge for a dimension: `preferred` when the dim is big
+    enough, otherwise the whole (padded-to-128-or-8) dimension in one
+    block (a 129..255-wide dim pads to one 256 block rather than
+    splitting into 128+pad)."""
+    if dim >= preferred:
+        return preferred
+    if dim > 128:
+        return 256
+    return max(8, round_up(dim, 8))
+
+
+def pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad a 2-D array up to ``(rows, cols)``."""
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))

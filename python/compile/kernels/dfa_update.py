@@ -1,0 +1,101 @@
+"""Fused DFA weight-gradient Pallas kernel.
+
+The DFA update for a hidden layer is (paper Eq. 3, transposed to our
+row-major ``h @ W`` convention)::
+
+    G  = P ⊙ f'(a)          # P = B e, the (optically) projected error
+    δW = h_prev^T @ G        # [fan_in, units]
+    δb = Σ_batch G           # [units]
+
+with ``f = tanh`` so ``f'(a) = 1 - h²`` (computed from the activation
+``h = tanh(a)``, saving the pre-activation round-trip).
+
+Fusing the gate into the outer-product kernel means the gated error ``G``
+never exists in HBM — each ``(bk × bn)`` tile of ``P`` and ``h`` is gated
+in VMEM registers immediately before feeding the MXU.  The bias gradient
+is accumulated in the same pass (on the ``i == 0`` column stripe so each
+``(k, j)`` tile contributes exactly once).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad2, pick_block, round_up
+
+
+def _dfa_kernel(hprev_ref, p_ref, h_ref, dw_ref, db_ref):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init_dw():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    # Gate in-register: G = P * (1 - h^2)  (tanh derivative).
+    g = p_ref[...] * (1.0 - h_ref[...] * h_ref[...])
+    dw_ref[...] += jnp.dot(
+        hprev_ref[...].T, g, preferred_element_type=jnp.float32
+    )
+
+    # Bias gradient: each (k, j) pair must contribute once, so only the
+    # i == 0 stripe of the grid accumulates it.
+    @pl.when((i == 0) & (k == 0))
+    def _init_db():
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    @pl.when(i == 0)
+    def _acc_db():
+        db_ref[...] += jnp.sum(g, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bn", "bk"))
+def _dfa_raw(hprev, p, h, *, bi: int, bn: int, bk: int):
+    b, fan_in = hprev.shape
+    _, units = p.shape
+    grid = (fan_in // bi, units // bn, b // bk)
+    return pl.pallas_call(
+        _dfa_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bi), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((fan_in, units), jnp.float32),
+            jax.ShapeDtypeStruct((1, units), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(hprev, p, h)
+
+
+def dfa_grads(hprev: jnp.ndarray, p: jnp.ndarray, h: jnp.ndarray):
+    """``(δW, δb)`` for one hidden layer.
+
+    Args:
+      hprev: ``[B, fan_in]`` upstream activations (``h_{i-1}``).
+      p:     ``[B, units]`` projected error ``B_i e`` (from the OPU).
+      h:     ``[B, units]`` this layer's tanh activations.
+
+    Returns:
+      ``δW [fan_in, units]``, ``δb [units]`` — *gradients* (caller negates
+      / feeds the optimizer).
+    """
+    b, fan_in = hprev.shape
+    _, units = p.shape
+    bi, bn, bk = pick_block(fan_in), pick_block(units), pick_block(b)
+    fp, up, bp_ = round_up(fan_in, bi), round_up(units, bn), round_up(b, bk)
+    hprev_p = pad2(hprev.astype(jnp.float32), bp_, fp)
+    p_p = pad2(p.astype(jnp.float32), bp_, up)
+    h_p = pad2(h.astype(jnp.float32), bp_, up)
+    dw, db = _dfa_raw(hprev_p, p_p, h_p, bi=bi, bn=bn, bk=bk)
+    return dw[:fan_in, :units], db[0, :units]

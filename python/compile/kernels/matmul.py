@@ -1,0 +1,72 @@
+"""Tiled matmul Pallas kernel — the random-projection hot-spot.
+
+On the physical OPU the projection ``B @ e`` is performed by light
+scattering and is O(1) in the matrix size.  On the digital baseline (and
+inside the optics twin, which needs the *field* before the camera) it is a
+matmul whose operand ``B`` is far too large to hold on-chip — exactly the
+regime TPU Pallas is built for: stream HBM->VMEM block-by-block via
+BlockSpec, accumulate in a VMEM-resident output tile on the MXU.
+
+Grid layout: ``(M/bm, N/bn, K/bk)`` with the K axis innermost so each
+``(i, j)`` output tile stays resident in VMEM across the whole reduction
+(`o_ref` is revision-accumulated; zeroed when ``k == 0``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad2, pick_block, round_up
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    # K is the innermost grid axis: zero the VMEM accumulator on the first
+    # K-step, then accumulate one MXU tile-product per step.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas_raw(x, y, *, bm: int, bn: int, bk: int):
+    """Blocked ``x @ y`` for pre-padded operands (shapes divide blocks)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+def matmul(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """``x @ y`` with automatic padding to the block grid.
+
+    Zero padding is exact for a sum reduction; the result is sliced back
+    to the true ``(M, N)``.
+    """
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = pick_block(m), pick_block(n), pick_block(k)
+    mp, np_, kp = round_up(m, bm), round_up(n, bn), round_up(k, bk)
+    xp = pad2(x.astype(jnp.float32), mp, kp)
+    yp = pad2(y.astype(jnp.float32), kp, np_)
+    out = matmul_pallas_raw(xp, yp, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+Each function here is the mathematically-obvious implementation of one
+kernel in `kernels/`.  pytest + hypothesis sweep randomized shapes and
+values and require allclose agreement; the AOT artifacts additionally get
+an end-to-end oracle check in `python/tests/test_model.py`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def matmul(x, y):
+    """Plain ``x @ y`` in f32."""
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def dfa_grads(hprev, p, h):
+    """DFA layer gradients: ``G = P ⊙ (1 - h²)``; ``δW = hprevᵀG``, ``δb = ΣG``."""
+    g = p * (1.0 - h * h)
+    dw = hprev.T @ g
+    db = jnp.sum(g, axis=0)
+    return dw, db
+
+
+def adam_update(param, grad, m, v, t, lr):
+    """Textbook Adam (Kingma & Ba 2015) with bias correction."""
+    t = jnp.asarray(t, jnp.float32)
+    m2 = BETA1 * m + (1.0 - BETA1) * grad
+    v2 = BETA2 * v + (1.0 - BETA2) * grad * grad
+    mhat = m2 / (1.0 - BETA1**t)
+    vhat = v2 / (1.0 - BETA2**t)
+    return param - lr * mhat / (jnp.sqrt(vhat) + EPS), m2, v2
+
+
+def ternarize(x, threshold):
+    """Paper Eq. 4: sign(x) gated on |x| > θ."""
+    return jnp.where(x > threshold, 1.0, jnp.where(x < -threshold, -1.0, 0.0))
+
+
+def camera_intensity(yre, yim, cosk, sink, n1, n2, n_ph, read_sigma, *,
+                     amp, adc_gain):
+    """Interference + shot/read noise + 8-bit ADC, unfused."""
+    fre = yre + amp * cosk
+    fim = yim + amp * sink
+    intensity = fre * fre + fim * fim
+    shot = jnp.sqrt(jnp.maximum(intensity, 0.0) / n_ph) * n1
+    noisy = intensity + shot + read_sigma * n2
+    return jnp.clip(jnp.round(noisy / adc_gain), 0.0, 255.0)

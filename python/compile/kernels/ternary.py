@@ -1,0 +1,54 @@
+"""Ternary error quantization Pallas kernel (paper Eq. 4).
+
+The OPU's input device (a binary/ternary DMD-backed SLM) cannot display
+float values, so the error vector is quantized::
+
+    f(x) =  1   if x >  θ
+            0   if -θ < x < θ
+           -1   if x < -θ
+
+with θ = 0.1 in the paper.  θ is a runtime ``(1, 1)`` input so the E5
+threshold-sweep ablation reuses one compiled artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pad2, pick_block, round_up
+
+
+def _ternary_kernel(x_ref, th_ref, o_ref):
+    x = x_ref[...]
+    th = th_ref[0, 0]
+    o_ref[...] = jnp.where(x > th, 1.0, jnp.where(x < -th, -1.0, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("br", "bc"))
+def _ternary_raw(x, th, *, br: int, bc: int):
+    rows, cols = x.shape
+    grid = (rows // br, cols // bc)
+    tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _ternary_kernel,
+        grid=grid,
+        in_specs=[tile, scalar],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=INTERPRET,
+    )(x, th)
+
+
+def ternarize(x: jnp.ndarray, threshold) -> jnp.ndarray:
+    """Eq. 4 quantization of a ``[B, D]`` error matrix to {-1, 0, +1}."""
+    b, d = x.shape
+    br, bc = pick_block(b), pick_block(d)
+    bp_, dp = round_up(b, br), round_up(d, bc)
+    xp = pad2(x.astype(jnp.float32), bp_, dp)
+    th = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+    return _ternary_raw(xp, th, br=br, bc=bc)[:b, :d]

@@ -1,0 +1,193 @@
+"""L2 — the paper's model and training steps in JAX (build-time only).
+
+The network is the paper's §III configuration: a fully-connected
+``784 → H → H → 10`` tanh MLP (H = 1024 in the paper) with softmax
+cross-entropy, trained with Adam.  Three trainers are defined:
+
+* **BP** (`bp_step`) — the classical baseline, Eq. 2.  The backward pass
+  is written out manually (three matmuls + gates) so that every matmul
+  goes through the L1 Pallas kernel rather than autodiff.
+* **Digital DFA** (`dfa_digital_step`) — Eq. 3 with the projection
+  computed exactly on silicon.  A runtime threshold θ selects the paper's
+  float (θ < 0) vs ternary (θ = 0.1) error variants.
+* **Hybrid optical DFA** — split across artifacts so the rust coordinator
+  can put the *light in the loop*: `fwd_train` produces the error (plus
+  its ternarized form), the OPU device performs the projection (either
+  the rust-native physics or the `opu_project` artifact from
+  `optics.py`), and `dfa_apply` consumes the projected error and applies
+  the fused DFA + Adam update.
+
+Conventions: activations are row-major ``[batch, features]``; weights are
+``[fan_in, fan_out]`` so a layer is ``h @ W + b``; the "error" is
+``e = softmax(logits) - onehot(y)`` (per-sample, *not* batch-averaged —
+the 1/B normalization happens inside the update steps so that the
+quantities crossing the optical link match the paper's).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_update, dfa_grads, matmul, ternarize
+
+LAYERS = (784, 1024, 1024, 10)  # paper §III; H overridable via aot.py
+
+
+def layer_sizes(hidden: int):
+    """The paper's topology with a configurable hidden width."""
+    return (784, hidden, hidden, 10)
+
+
+def init_params(key, sizes):
+    """He-style init: ``W ~ N(0, 1/√fan_in)``, ``b = 0`` (paper-standard)."""
+    params = []
+    for d_in, d_out in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (d_in, d_out), jnp.float32) / jnp.sqrt(d_in)
+        params += [w, jnp.zeros((d_out,), jnp.float32)]
+    return tuple(params)
+
+
+def init_opt_state(sizes):
+    """Zeroed Adam moments, one (m, v) pair per parameter tensor."""
+    shapes = []
+    for d_in, d_out in zip(sizes[:-1], sizes[1:]):
+        shapes += [(d_in, d_out), (d_out,)]
+    m = tuple(jnp.zeros(s, jnp.float32) for s in shapes)
+    v = tuple(jnp.zeros(s, jnp.float32) for s in shapes)
+    return m, v
+
+
+def _forward(params, x):
+    """Forward pass through the 2-hidden-layer tanh MLP (Eq. 1)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jnp.tanh(matmul(x, w1) + b1)
+    h2 = jnp.tanh(matmul(h1, w2) + b2)
+    logits = matmul(h2, w3) + b3
+    return h1, h2, logits
+
+
+def _loss_err(logits, y_onehot):
+    """Softmax CE loss (mean) and per-sample error ``e = p - y``."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+    e = jnp.exp(logp) - y_onehot
+    return loss, e
+
+
+def fwd_train(params, x, y_onehot, theta):
+    """Training-mode forward: activations + error + ternarized error.
+
+    ``theta`` is the Eq. 4 threshold; ``theta < 0`` keeps the float error
+    (digital float-DFA mode / diagnostics).  Returns
+    ``(h1, h2, e, e_t, loss)``.
+    """
+    h1, h2, logits = _forward(params, x)
+    loss, e = _loss_err(logits, y_onehot)
+    e_t = jnp.where(theta >= 0.0, ternarize(e, jnp.abs(theta)), e)
+    return h1, h2, e, e_t, loss
+
+
+def _adam_all(params, grads, m, v, t, lr):
+    """Apply the fused Adam kernel to every parameter tensor."""
+    new_p, new_m, new_v = [], [], []
+    for p, g, mm, vv in zip(params, grads, m, v):
+        p2, m2, v2 = adam_update(p, g, mm, vv, t, lr)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return tuple(new_p), tuple(new_m), tuple(new_v)
+
+
+def dfa_apply(params, m, v, t, lr, x, h1, h2, e, p1, p2):
+    """DFA update (Eq. 3) given *already projected* error signals.
+
+    ``p1, p2`` are the OPU outputs ``B₁e``/``B₂e`` for the two hidden
+    layers (real/imaginary quadratures of a single optical frame).  The
+    output layer always receives the true error (standard DFA: the last
+    layer's feedback IS ``e``).
+    """
+    bsz = x.shape[0]
+    inv_b = 1.0 / bsz
+    dw1, db1 = dfa_grads(x, p1 * inv_b, h1)
+    dw2, db2 = dfa_grads(h1, p2 * inv_b, h2)
+    # Output layer: exact gradient δW₃ = h₂ᵀ e / B (linear head ⇒ gate 1).
+    dw3 = matmul(h2.T, e) * inv_b
+    db3 = jnp.sum(e, axis=0) * inv_b
+    grads = (dw1, db1, dw2, db2, dw3, db3)
+    return _adam_all(params, grads, m, v, t, lr)
+
+
+def _bp_grads(params, x, y_onehot):
+    """Manual backprop (Eq. 2) through the 2-hidden-layer MLP.
+
+    Hand-written so each matmul runs on the L1 Pallas kernel (autodiff
+    through `pallas_call` is unsupported for this kernel set).
+    """
+    w1, b1, w2, b2, w3, b3 = params
+    h1, h2, logits = _forward(params, x)
+    loss, e = _loss_err(logits, y_onehot)
+    bsz = x.shape[0]
+    d3 = e / bsz
+    dw3 = matmul(h2.T, d3)
+    db3 = jnp.sum(d3, axis=0)
+    d2 = matmul(d3, w3.T) * (1.0 - h2 * h2)
+    dw2 = matmul(h1.T, d2)
+    db2 = jnp.sum(d2, axis=0)
+    d1 = matmul(d2, w2.T) * (1.0 - h1 * h1)
+    dw1 = matmul(x.T, d1)
+    db1 = jnp.sum(d1, axis=0)
+    return (dw1, db1, dw2, db2, dw3, db3), loss
+
+
+def bp_step(params, m, v, t, lr, x, y_onehot):
+    """One fused backprop + Adam step (the paper's implicit BP baseline)."""
+    grads, loss = _bp_grads(params, x, y_onehot)
+    params, m, v = _adam_all(params, grads, m, v, t, lr)
+    return params, m, v, loss
+
+
+def dfa_digital_step(params, m, v, t, lr, x, y_onehot, b_re, b_im, theta):
+    """One fused *digital* DFA + Adam step (paper's GPU comparison rows).
+
+    The projection uses the same transmission-matrix quadratures as the
+    optical path (``P₁ = e' @ Re B``, ``P₂ = e' @ Im B``) but computed
+    exactly, with ``e' = ternarize(e, θ)`` when ``θ ≥ 0`` else the float
+    error.  This makes "optical vs digital" differ *only* by the physics.
+    """
+    h1, h2, e, e_t, loss = fwd_train(params, x, y_onehot, theta)
+    p1 = matmul(e_t, b_re)
+    p2 = matmul(e_t, b_im)
+    params, m, v = dfa_apply(params, m, v, t, lr, x, h1, h2, e, p1, p2)
+    return params, m, v, loss
+
+
+def eval_batch(params, x, y_onehot):
+    """Evaluation: number of correct top-1 predictions + mean CE loss."""
+    _, _, logits = _forward(params, x)
+    loss, _ = _loss_err(logits, y_onehot)
+    pred = jnp.argmax(logits, axis=-1)
+    truth = jnp.argmax(y_onehot, axis=-1)
+    correct = jnp.sum((pred == truth).astype(jnp.float32))
+    return correct, loss
+
+
+def alignment(params, x, y_onehot, b_re, b_im, theta):
+    """E5 diagnostic: cosine of the angle between the DFA update and the
+    true (BP) gradient, per layer — the "feedback alignment" quantity.
+    """
+    grads_bp, _ = _bp_grads(params, x, y_onehot)
+    h1, h2, e, e_t, _ = fwd_train(params, x, y_onehot, theta)
+    bsz = x.shape[0]
+    p1 = matmul(e_t, b_re)
+    p2 = matmul(e_t, b_im)
+    dw1, _ = dfa_grads(x, p1 / bsz, h1)
+    dw2, _ = dfa_grads(h1, p2 / bsz, h2)
+
+    def cos(a, b):
+        num = jnp.sum(a * b)
+        den = jnp.linalg.norm(a) * jnp.linalg.norm(b) + 1e-12
+        return num / den
+
+    return cos(dw1, grads_bp[0]), cos(dw2, grads_bp[2])

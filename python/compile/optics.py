@@ -1,0 +1,181 @@
+"""L2 — JAX twin of the OPU optics (the photonic co-processor physics).
+
+The physical pipeline being modeled (paper §II-B, "Off-axis holography"):
+
+1. **SLM encoding** — the ternary error vector ``e ∈ {-1,0,+1}^D`` is
+   displayed on a spatial light modulator and carried by a coherent beam.
+2. **Scattering** — the beam traverses a diffusive medium whose effect is
+   a *fixed* complex Gaussian transmission matrix ``B ∈ C^{D×M}``:
+   the field at the camera is ``y = e @ B`` (a random projection "at the
+   speed of light").
+3. **Off-axis holography** — the camera only measures intensity, so a
+   tilted plane-wave reference ``r(p) = A·e^{ikp}`` is superimposed; the
+   fringes encode the *linear* field, which is recovered by demodulation.
+4. **Camera** — shot noise, read noise, 8-bit ADC.
+
+Design choices (documented in DESIGN.md §2):
+
+* **Complex modes = two real projections.** For ``e`` real,
+  ``Re(y) = e @ Re(B)`` and ``Im(y) = e @ Im(B)`` are two independent
+  Gaussian random projections — the OPU feeds *both* hidden layers with a
+  single frame: ``P₁ = Re(y)``, ``P₂ = Im(y)``.
+* **Quadrature demodulation.** With the carrier at k = π/2 rad/pixel and
+  4 pixels per macropixel (mode), the intensity at the four pixel phases
+  0, π/2, π, 3π/2 of mode ``m`` satisfies ``I₀-I₂ = 4A·Re(y_m)`` and
+  ``I₁-I₃ = 4A·Im(y_m)`` — the DC terms ``|y|²+A²`` cancel *exactly*.
+  This is the spatial phase-stepping view of off-axis holography; the
+  textbook Fourier side-band filter is also implemented (`demod_fft`) and
+  the two are shown to agree in `python/tests/test_optics.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import camera_intensity, matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class OpuConfig:
+    """Physical constants of the simulated OPU.
+
+    These are written into ``artifacts/manifest.json`` and re-read by the
+    rust coordinator so both implementations describe the same device.
+    """
+
+    oversample: int = 4        # pixels per output mode (quadrature demod)
+    carrier: float = np.pi / 2  # reference-beam tilt, rad/pixel
+    amp: float = 16.0          # reference amplitude (field units)
+    n_ph: float = 100.0        # photon budget scale (shot noise ∝ 1/√n_ph)
+    read_sigma: float = 2.0    # camera read noise (intensity units)
+    frame_rate_hz: float = 1500.0  # paper: 1.5 kHz
+    power_watts: float = 30.0      # paper: ~30 W
+    max_modes: int = 100_000       # paper: output dim ~1e5 (off-axis)
+
+    def npix(self, modes: int) -> int:
+        return self.oversample * modes
+
+    def gain_for(self, d_in: int) -> float:
+        """ADC gain (intensity units per count) auto-ranged to the input.
+
+        A real OPU calibrates camera exposure so the interference pattern
+        fills the 8-bit range without saturating.  The field quadratures
+        have std ≤ √(d_in/2) for a ternary input of dimension ``d_in``;
+        head-room of 4.5σ on top of the reference amplitude keeps
+        saturation below ~10⁻⁵ per pixel while using ~250 of 255 counts.
+        """
+        peak = (self.amp + 4.5 * np.sqrt(d_in / 2.0)) ** 2
+        return float(peak / 250.0)
+
+
+DEFAULT_OPU = OpuConfig()
+
+
+def make_medium(key, d_in: int, modes: int):
+    """Sample the fixed transmission matrix of the diffusive medium.
+
+    Entries are CN(0, 1): re/im ~ N(0, 1/2), so ``E|B_dm|² = 1`` and each
+    quadrature of the projection is a standard Gaussian random projection
+    scaled by √(nnz(e)/2).
+    """
+    import jax
+
+    kre, kim = jax.random.split(key)
+    scale = np.sqrt(0.5).astype(np.float32)
+    b_re = jax.random.normal(kre, (d_in, modes), jnp.float32) * scale
+    b_im = jax.random.normal(kim, (d_in, modes), jnp.float32) * scale
+    return b_re, b_im
+
+
+def carrier_tables(cfg: OpuConfig, modes: int):
+    """cos/sin of the reference carrier at each pixel, ``[1, Npix]``."""
+    p = np.arange(cfg.npix(modes), dtype=np.float64)
+    phase = cfg.carrier * p
+    return (
+        jnp.asarray(np.cos(phase), jnp.float32)[None, :],
+        jnp.asarray(np.sin(phase), jnp.float32)[None, :],
+    )
+
+
+def project_exact(e, b_re, b_im):
+    """Noiseless digital projection (calibration oracle / GPU baseline).
+
+    Returns ``(P1, P2) = (e @ Re B, e @ Im B)``, each ``[B, M]``.
+    """
+    return matmul(e, b_re), matmul(e, b_im)
+
+
+def opu_project(e_t, b_re, b_im, n1, n2, n_ph, read_sigma,
+                cfg: OpuConfig = DEFAULT_OPU, cosk=None, sink=None):
+    """Full optical pipeline: SLM → scattering → holography → demod.
+
+    Args:
+      e_t:   ``[B, D]`` ternary frames (one per sample).
+      b_re, b_im: ``[D, M]`` transmission-matrix quadratures.
+      n1, n2: ``[B, Npix]`` standard-normal draws (camera noise).
+      n_ph, read_sigma: runtime noise levels (scalars).
+      cosk, sink: ``[1, Npix]`` carrier tables.  MUST be passed as
+        runtime inputs when AOT-lowering: the HLO *text* printer elides
+        constants larger than a few dozen elements (``constant({...})``)
+        and the rust-side parser reads them back as zeros.  Defaults to
+        computing them inline (fine for eager/jit use in-process).
+
+    Returns ``(P1, P2)`` — recovered ``Re(y)``/``Im(y)``, ``[B, M]``.
+    """
+    bsz, d_in = e_t.shape
+    modes = b_re.shape[1]
+    os_ = cfg.oversample
+    gain = cfg.gain_for(d_in)
+
+    # Scattering: complex field at the camera, one macropixel per mode.
+    yre = matmul(e_t, b_re)
+    yim = matmul(e_t, b_im)
+    yre_pix = jnp.repeat(yre, os_, axis=1)
+    yim_pix = jnp.repeat(yim, os_, axis=1)
+
+    if cosk is None or sink is None:
+        cosk, sink = carrier_tables(cfg, modes)
+    counts = camera_intensity(
+        yre_pix, yim_pix, cosk, sink, n1, n2, n_ph, read_sigma,
+        amp=cfg.amp, adc_gain=gain,
+    )
+    return demod_quadrature(counts, cfg, modes, gain)
+
+
+def demod_quadrature(counts, cfg: OpuConfig, modes: int, gain: float):
+    """Spatial phase-stepping demodulation (exact for k=π/2, os=4).
+
+    ``I = |y|² + A² + 2A(Re y·cos kp + Im y·sin kp)`` sampled at pixel
+    phases ``0, π/2, π, 3π/2`` gives ``Re y = (I₀-I₂)/4A``,
+    ``Im y = (I₁-I₃)/4A`` — DC terms cancel exactly.
+    """
+    assert cfg.oversample == 4, "quadrature demod requires 4 px/mode"
+    i4 = (counts * gain).reshape(counts.shape[0], modes, 4)
+    p1 = (i4[:, :, 0] - i4[:, :, 2]) / (4.0 * cfg.amp)
+    p2 = (i4[:, :, 1] - i4[:, :, 3]) / (4.0 * cfg.amp)
+    return p1, p2
+
+
+def demod_fft(counts, cfg: OpuConfig, modes: int, gain: float):
+    """Textbook off-axis holography: Fourier side-band extraction.
+
+    Multiply the intensity by ``e^{+ikp}`` (shifting the ``y·r̄`` term to
+    baseband), low-pass below half the carrier, divide by A, and average
+    each macropixel.  Used in tests/examples to validate the quadrature
+    shortcut; the hot path uses `demod_quadrature`.
+    """
+    npix = cfg.npix(modes)
+    p = jnp.arange(npix, dtype=jnp.float32)
+    mixer = jnp.exp(1j * cfg.carrier * p)[None, :]
+    spec = jnp.fft.fft((counts * gain).astype(jnp.complex64) * mixer,
+                       axis=1)
+    # Low-pass: keep |f| < carrier/2 (in FFT bin units).
+    cutoff = int(npix * cfg.carrier / (2 * 2 * np.pi))
+    freqs = jnp.fft.fftfreq(npix) * npix
+    mask = (jnp.abs(freqs) < cutoff)[None, :]
+    base = jnp.fft.ifft(spec * mask, axis=1) / cfg.amp
+    per_mode = base.reshape(counts.shape[0], modes, cfg.oversample).mean(-1)
+    return jnp.real(per_mode), jnp.imag(per_mode)

@@ -1,0 +1,192 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (including non-block-multiple, tiny and skewed
+ones) and value regimes; agreement is required to float32 accumulation
+tolerance.  These tests are the core correctness signal for everything
+the rust hot path executes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(deadline=None, max_examples=12,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+dims = st.integers(min_value=1, max_value=200)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestMatmul:
+    @hypothesis.given(m=dims, k=dims, n=dims, seed=seeds)
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, m, k, n, seed):
+        r = _rng(seed)
+        x = r.normal(size=(m, k)).astype(np.float32)
+        y = r.normal(size=(k, n)).astype(np.float32)
+        got = kernels.matmul(x, y)
+        want = ref.matmul(jnp.asarray(x), jnp.asarray(y))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_paper_shapes(self):
+        """The exact shapes on the paper's hot path."""
+        r = _rng(0)
+        for (m, k, n) in [(128, 784, 1024), (128, 1024, 1024),
+                          (128, 1024, 10), (128, 10, 1024)]:
+            x = r.normal(size=(m, k)).astype(np.float32)
+            y = r.normal(size=(k, n)).astype(np.float32)
+            np.testing.assert_allclose(
+                kernels.matmul(x, y), ref.matmul(jnp.asarray(x), jnp.asarray(y)),
+                rtol=5e-4, atol=5e-4)
+
+    def test_zero_padding_exact(self):
+        """Padding lanes must contribute exactly zero."""
+        r = _rng(1)
+        x = r.normal(size=(3, 5)).astype(np.float32)
+        y = r.normal(size=(5, 7)).astype(np.float32)
+        np.testing.assert_allclose(kernels.matmul(x, y), x @ y,
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestDfaGrads:
+    @hypothesis.given(b=st.integers(1, 64), fi=dims, u=dims, seed=seeds)
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, b, fi, u, seed):
+        r = _rng(seed)
+        hprev = r.normal(size=(b, fi)).astype(np.float32)
+        p = r.normal(size=(b, u)).astype(np.float32)
+        h = np.tanh(r.normal(size=(b, u))).astype(np.float32)
+        dw, db = kernels.dfa_grads(hprev, p, h)
+        dw2, db2 = ref.dfa_grads(jnp.asarray(hprev), jnp.asarray(p),
+                                 jnp.asarray(h))
+        np.testing.assert_allclose(dw, dw2, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(db, db2, rtol=2e-4, atol=2e-4)
+
+    def test_gate_is_tanh_derivative(self):
+        """With hprev = identity rows, δW recovers the gated error."""
+        b = 4
+        u = 3
+        hprev = np.eye(b, dtype=np.float32)  # [B, B]
+        p = _rng(2).normal(size=(b, u)).astype(np.float32)
+        h = np.tanh(_rng(3).normal(size=(b, u))).astype(np.float32)
+        dw, _ = kernels.dfa_grads(hprev, p, h)
+        np.testing.assert_allclose(dw, p * (1 - h * h), rtol=1e-5, atol=1e-6)
+
+
+class TestAdam:
+    @hypothesis.given(rows=dims, cols=dims, t=st.integers(1, 10_000),
+                      seed=seeds)
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, rows, cols, t, seed):
+        r = _rng(seed)
+        p = r.normal(size=(rows, cols)).astype(np.float32)
+        g = r.normal(size=(rows, cols)).astype(np.float32)
+        m = r.normal(size=(rows, cols)).astype(np.float32) * 0.1
+        v = np.abs(r.normal(size=(rows, cols))).astype(np.float32) * 0.01
+        got = kernels.adam_update(p, g, m, v, float(t), 0.01)
+        want = ref.adam_update(jnp.asarray(p), jnp.asarray(g),
+                               jnp.asarray(m), jnp.asarray(v), float(t), 0.01)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_vector_param(self):
+        """1-D parameters (biases) round-trip through the 2-D layout."""
+        r = _rng(7)
+        p = r.normal(size=(1024,)).astype(np.float32)
+        g = r.normal(size=(1024,)).astype(np.float32)
+        z = np.zeros_like(p)
+        got = kernels.adam_update(p, g, z, z, 1.0, 0.001)
+        want = ref.adam_update(*(jnp.asarray(a) for a in (p, g, z, z)),
+                               1.0, 0.001)
+        for a, b in zip(got, want):
+            assert a.shape == (1024,)
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_first_step_is_lr_signed_grad(self):
+        """At t=1 with zero moments, Adam steps ≈ -lr·sign(g)."""
+        g = np.array([[3.0, -2.0, 0.5]], dtype=np.float32)
+        p = np.zeros_like(g)
+        z = np.zeros_like(g)
+        p2, _, _ = kernels.adam_update(p, g, z, z, 1.0, 0.01)
+        np.testing.assert_allclose(p2, -0.01 * np.sign(g), rtol=1e-3)
+
+
+class TestTernary:
+    @hypothesis.given(b=st.integers(1, 64), d=dims,
+                      th=st.floats(0.0, 1.0), seed=seeds)
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, b, d, th, seed):
+        x = _rng(seed).normal(size=(b, d)).astype(np.float32)
+        got = kernels.ternarize(x, th)
+        want = ref.ternarize(jnp.asarray(x), th)
+        np.testing.assert_allclose(got, want)
+
+    @hypothesis.given(b=st.integers(1, 16), d=st.integers(1, 32), seed=seeds)
+    @hypothesis.settings(**SETTINGS)
+    def test_values_are_ternary(self, b, d, seed):
+        x = _rng(seed).normal(size=(b, d)).astype(np.float32)
+        out = np.asarray(kernels.ternarize(x, 0.1))
+        assert set(np.unique(out)).issubset({-1.0, 0.0, 1.0})
+
+    def test_paper_eq4(self):
+        x = np.array([[0.2, 0.05, -0.05, -0.2, 0.1, -0.1]], np.float32)
+        out = np.asarray(kernels.ternarize(x, 0.1))
+        # strict inequalities at ±θ: 0.1 and -0.1 map to 0
+        np.testing.assert_array_equal(out, [[1, 0, 0, -1, 0, 0]])
+
+    def test_idempotent(self):
+        x = _rng(0).normal(size=(8, 10)).astype(np.float32)
+        once = kernels.ternarize(x, 0.1)
+        twice = kernels.ternarize(np.asarray(once), 0.5)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+class TestIntensity:
+    @hypothesis.given(b=st.integers(1, 8), m=st.integers(1, 64), seed=seeds)
+    @hypothesis.settings(**SETTINGS)
+    def test_matches_ref(self, b, m, seed):
+        r = _rng(seed)
+        npix = 4 * m
+        yre = r.normal(size=(b, npix)).astype(np.float32)
+        yim = r.normal(size=(b, npix)).astype(np.float32)
+        px = np.arange(npix)
+        cosk = np.cos(np.pi / 2 * px).astype(np.float32)[None]
+        sink = np.sin(np.pi / 2 * px).astype(np.float32)[None]
+        n1 = r.normal(size=(b, npix)).astype(np.float32)
+        n2 = r.normal(size=(b, npix)).astype(np.float32)
+        kw = dict(amp=16.0, adc_gain=2.0)
+        got = kernels.camera_intensity(yre, yim, cosk, sink, n1, n2,
+                                       100.0, 2.0, **kw)
+        want = ref.camera_intensity(
+            jnp.asarray(yre), jnp.asarray(yim), jnp.asarray(cosk),
+            jnp.asarray(sink), jnp.asarray(n1), jnp.asarray(n2),
+            100.0, 2.0, **kw)
+        # round() at a half-integer boundary may differ by 1 count
+        assert np.max(np.abs(np.asarray(got) - np.asarray(want))) <= 1.0
+
+    def test_range_and_quantization(self):
+        r = _rng(3)
+        npix = 64
+        yre = (r.normal(size=(2, npix)) * 50).astype(np.float32)
+        yim = (r.normal(size=(2, npix)) * 50).astype(np.float32)
+        z = np.zeros((2, npix), np.float32)
+        px = np.arange(npix)
+        cosk = np.cos(np.pi / 2 * px).astype(np.float32)[None]
+        sink = np.sin(np.pi / 2 * px).astype(np.float32)[None]
+        out = np.asarray(kernels.camera_intensity(
+            yre, yim, cosk, sink, z, z, 1e9, 0.0, amp=16.0, adc_gain=2.0))
+        assert out.min() >= 0.0 and out.max() <= 255.0
+        np.testing.assert_array_equal(out, np.round(out))

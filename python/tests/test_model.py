@@ -1,0 +1,170 @@
+"""L2 model invariants + training smoke tests (build-time oracle).
+
+Validates the exact math the AOT artifacts will execute: BP gradients
+against jax autodiff of a pure-jnp twin, DFA/BP agreement on the output
+layer, and short-horizon learning on a synthetic separable task for all
+three trainers (BP, digital DFA, optical DFA with simulated physics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model, optics
+
+SIZES = (20, 32, 32, 10)  # miniature topology, same structure as paper's
+
+
+_PROTO = np.random.default_rng(1234).normal(size=(10, 20)).astype(np.float32)
+
+
+def _data(seed, b=64, d=20, classes=10):
+    """Linearly-separable-ish synthetic task: class = argmax of a *fixed*
+    random linear map (same task every step, fresh samples per seed)."""
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(b, d)).astype(np.float32)
+    y = np.argmax(x @ _PROTO[:classes, :d].T, axis=1)
+    yoh = np.eye(classes, dtype=np.float32)[y]
+    return jnp.asarray(x), jnp.asarray(yoh)
+
+
+def _init(seed=0):
+    params = model.init_params(jax.random.PRNGKey(seed), SIZES)
+    m, v = model.init_opt_state(SIZES)
+    return params, m, v
+
+
+def _pure_loss(params, x, yoh):
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jnp.tanh(x @ w1 + b1)
+    h2 = jnp.tanh(h1 @ w2 + b2)
+    logits = h2 @ w3 + b3
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(yoh * logp, axis=-1))
+
+
+class TestGradients:
+    def test_bp_matches_autodiff(self):
+        """Manual Pallas backprop == jax.grad of the pure-jnp twin."""
+        params, _, _ = _init()
+        x, yoh = _data(0)
+        grads, loss = model._bp_grads(params, x, yoh)
+        auto = jax.grad(_pure_loss)(params, x, yoh)
+        loss2 = _pure_loss(params, x, yoh)
+        np.testing.assert_allclose(loss, loss2, rtol=1e-5)
+        for g, a in zip(grads, auto):
+            np.testing.assert_allclose(g, a, rtol=5e-4, atol=1e-5)
+
+    def test_dfa_output_layer_equals_bp(self):
+        """DFA trains the last layer with the TRUE gradient."""
+        params, m, v = _init()
+        x, yoh = _data(1)
+        h1, h2, e, e_t, _ = model.fwd_train(params, x, yoh, -1.0)
+        bre, bim = optics.make_medium(jax.random.PRNGKey(9), 10, SIZES[1])
+        p1 = model.matmul(e_t, bre)
+        p2 = model.matmul(e_t, bim)
+        pd, md, vd = model.dfa_apply(params, m, v, 1.0, 0.01,
+                                     x, h1, h2, e, p1, p2)
+        pb, mb, vb, _ = model.bp_step(params, m, v, 1.0, 0.01, x, yoh)
+        # last-layer weight and bias identical between DFA and BP
+        np.testing.assert_allclose(pd[4], pb[4], rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(pd[5], pb[5], rtol=1e-4, atol=1e-6)
+
+    def test_fwd_train_error_is_probs_minus_onehot(self):
+        params, _, _ = _init()
+        x, yoh = _data(2)
+        _, _, e, _, _ = model.fwd_train(params, x, yoh, -1.0)
+        # rows of e sum to zero (softmax sums to 1, onehot sums to 1)
+        np.testing.assert_allclose(np.asarray(e).sum(1), 0.0, atol=1e-5)
+
+    def test_theta_negative_keeps_float_error(self):
+        params, _, _ = _init()
+        x, yoh = _data(3)
+        _, _, e, e_t, _ = model.fwd_train(params, x, yoh, -1.0)
+        np.testing.assert_allclose(e, e_t)
+
+    def test_theta_positive_ternarizes(self):
+        params, _, _ = _init()
+        x, yoh = _data(4)
+        _, _, _, e_t, _ = model.fwd_train(params, x, yoh, 0.1)
+        vals = set(np.unique(np.asarray(e_t)))
+        assert vals.issubset({-1.0, 0.0, 1.0})
+
+
+class TestLearning:
+    def _run(self, step_fn, steps=60):
+        params, m, v = _init(1)
+        losses = []
+        for t in range(1, steps + 1):
+            x, yoh = _data(100 + t)
+            params, m, v, loss = step_fn(params, m, v, float(t), x, yoh)
+            losses.append(float(loss))
+        return losses
+
+    def test_bp_learns(self):
+        losses = self._run(
+            lambda p, m, v, t, x, y: model.bp_step(p, m, v, t, 0.01, x, y))
+        assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:5])
+
+    def test_digital_dfa_float_learns(self):
+        bre, bim = optics.make_medium(jax.random.PRNGKey(5), 10, SIZES[1])
+
+        def step(p, m, v, t, x, y):
+            return model.dfa_digital_step(p, m, v, t, 0.01, x, y,
+                                          bre, bim, -1.0)
+
+        losses = self._run(step)
+        assert np.mean(losses[-10:]) < 0.7 * np.mean(losses[:5])
+
+    def test_digital_dfa_ternary_learns(self):
+        bre, bim = optics.make_medium(jax.random.PRNGKey(6), 10, SIZES[1])
+
+        def step(p, m, v, t, x, y):
+            return model.dfa_digital_step(p, m, v, t, 0.01, x, y,
+                                          bre, bim, 0.1)
+
+        losses = self._run(step)
+        assert np.mean(losses[-10:]) < 0.8 * np.mean(losses[:5])
+
+    def test_optical_dfa_learns(self):
+        """Full light-in-the-loop: simulated OPU physics in the loop."""
+        cfg = optics.DEFAULT_OPU
+        modes = SIZES[1]
+        bre, bim = optics.make_medium(jax.random.PRNGKey(7), 10, modes)
+        rng = np.random.default_rng(0)
+
+        def step(p, m, v, t, x, y):
+            h1, h2, e, e_t, loss = model.fwd_train(p, x, y, 0.1)
+            b = x.shape[0]
+            n1 = rng.normal(size=(b, cfg.npix(modes))).astype(np.float32)
+            n2 = rng.normal(size=(b, cfg.npix(modes))).astype(np.float32)
+            p1, p2 = optics.opu_project(e_t, bre, bim, n1, n2,
+                                        cfg.n_ph, cfg.read_sigma, cfg)
+            p2_, m2, v2 = model.dfa_apply(p, m, v, t, 0.01, x, h1, h2,
+                                          e, p1, p2)
+            return p2_, m2, v2, loss
+
+        losses = self._run(step)
+        assert np.mean(losses[-10:]) < 0.8 * np.mean(losses[:5])
+
+
+class TestEvalAndAlignment:
+    def test_eval_counts(self):
+        params, _, _ = _init()
+        x, yoh = _data(5, b=50)
+        correct, loss = model.eval_batch(params, x, yoh)
+        assert 0 <= float(correct) <= 50
+        assert float(loss) > 0
+
+    def test_alignment_positive_after_training(self):
+        """DFA's core phenomenon: updates align with the true gradient."""
+        bre, bim = optics.make_medium(jax.random.PRNGKey(8), 10, SIZES[1])
+        params, m, v = _init(2)
+        for t in range(1, 40):
+            x, yoh = _data(200 + t)
+            params, m, v, _ = model.dfa_digital_step(
+                params, m, v, float(t), 0.01, x, yoh, bre, bim, -1.0)
+        x, yoh = _data(999)
+        c1, c2 = model.alignment(params, x, yoh, bre, bim, -1.0)
+        assert float(c1) > 0.1  # alignment emerges
+        assert float(c2) > 0.1

@@ -1,0 +1,105 @@
+//! E1 — the paper's §III accuracy table (bench-budget version).
+//!
+//! Paper: MNIST 784-1024-1024-10 tanh + Adam, 10 epochs:
+//!   optical DFA (ternary, lr .01) 95.8 % | digital DFA ternary (lr .001)
+//!   97.6 % | digital DFA float 97.7 % | (BP reference ≈ 98 %).
+//!
+//! This bench regenerates the table's *shape* on a steps-bounded budget
+//! (the full-scale run is `examples/mnist_dfa_train`): same model, same
+//! four algorithms, synthetic MNIST-like digits, `small` artifacts by
+//! default so the whole bench stays in CI budget.
+//!
+//! env: LITL_BENCH_CONFIG=paper LITL_BENCH_STEPS=N
+
+use litl::config::{Algo, TrainConfig};
+use litl::coordinator::Trainer;
+use litl::data::{self, Split};
+use litl::util::rng::Pcg64;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+    let config = std::env::var("LITL_BENCH_CONFIG").unwrap_or("small".into());
+    let steps = env_usize("LITL_BENCH_STEPS", 900);
+    let train_size = env_usize("LITL_BENCH_TRAIN", 8_000);
+    let test_size = env_usize("LITL_BENCH_TEST", 1_000);
+
+    let ds = data::load_or_synth(42, train_size, test_size)?;
+    println!(
+        "E1 bench: config={config}, {steps} steps, {train_size}/{test_size} samples"
+    );
+
+    let rows: Vec<(Algo, f32, Option<f64>)> = vec![
+        (Algo::Bp, 0.001, None),
+        (Algo::DfaFloat, 0.001, Some(97.7)),
+        (Algo::DfaTernary, 0.001, Some(97.6)),
+        (Algo::Optical, 0.01, Some(95.8)),
+    ];
+
+    println!(
+        "\n{:<14} {:>6} {:>10} {:>11} {:>11} {:>12}",
+        "algo", "lr", "paper", "measured", "steps/s", "OPU sim s"
+    );
+    let mut measured = Vec::new();
+    for (algo, lr, paper) in &rows {
+        let cfg = TrainConfig {
+            artifact_config: config.clone(),
+            algo: *algo,
+            train_size,
+            test_size,
+            lr: *lr,
+            seed: 42,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(cfg)?;
+        tr.warmup()?;
+        let batch = tr.model().batch;
+        let mut rng = Pcg64::seeded(1);
+        let t0 = std::time::Instant::now();
+        let mut done = 0usize;
+        'outer: loop {
+            for (x, y) in ds.batches(Split::Train, batch, &mut rng) {
+                tr.train_step(&x, &y)?;
+                done += 1;
+                if done >= steps {
+                    break 'outer;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let ev = tr.evaluate(&ds, Split::Test)?;
+        measured.push(ev.accuracy);
+        println!(
+            "{:<14} {:>6} {:>10} {:>10.2}% {:>11.1} {:>12.2}",
+            algo.name(),
+            lr,
+            paper.map(|p| format!("{p:.1}%")).unwrap_or("—".into()),
+            ev.accuracy * 100.0,
+            done as f64 / wall,
+            tr.sim_device_seconds(),
+        );
+    }
+
+    // Shape assertions (reported, not fatal — this is a bench).
+    let (bp, float, tern, optical) = (measured[0], measured[1], measured[2], measured[3]);
+    let check = |label: &str, ok: bool| {
+        println!("shape: {label}: {}", if ok { "OK" } else { "DIVERGES" });
+    };
+    println!();
+    check(
+        &format!("optical {:.1}% <= ternary {:.1}% (+2pt)", optical * 100.0, tern * 100.0),
+        optical <= tern + 0.02,
+    );
+    check(
+        &format!("ternary {:.1}% <= float {:.1}% (+2pt)", tern * 100.0, float * 100.0),
+        tern <= float + 0.02,
+    );
+    check(
+        &format!("float {:.1}% <= bp {:.1}% (+2pt)", float * 100.0, bp * 100.0),
+        float <= bp + 0.02,
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! E2 — projection throughput: "1500 random projections of size 1e5 per
+//! second" and "competitive with GPUs at large scale".
+//!
+//! Measured series (this host) + modeled series (paper OPU, V100
+//! roofline) over output dimension; the payload is the crossover where
+//! the OPU's flat frame rate beats the GPU's shrinking mat-vec rate.
+
+use litl::bench::{fmt_rate, Bench};
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::{OpticalOpu, OpuParams};
+use litl::sim::power::{CpuModel, GpuModel, Holography, OpuModel};
+use litl::tensor::{matmul, Tensor};
+use litl::util::rng::Pcg64;
+
+fn ternary(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg64::seeded(seed);
+    let data = (0..rows * cols)
+        .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+        .collect();
+    Tensor::from_vec(&[rows, cols], data)
+}
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+    let mut bench = Bench::new();
+    let d_in = 10usize; // error dimension (MNIST classes)
+    let batch = 128usize;
+
+    // ---- measured: host matmul on executable shapes (CpuModel calib) --
+    println!("E2: measuring host CPU projection (calibrates CpuModel)...");
+    let mut cpu_macs = 0.0f64;
+    for modes in [256usize, 1024, 4096] {
+        let medium = TransmissionMatrix::sample(1, d_in, modes);
+        let e = ternary(batch, d_in, 2);
+        let m = bench.run(&format!("host matmul d_out={modes} batch={batch}"), || {
+            let _ = matmul(&e, &medium.b_re);
+        });
+        cpu_macs = cpu_macs.max((d_in * modes * batch) as f64 / m.mean_s);
+    }
+    let cpu = CpuModel::measured(cpu_macs);
+    println!("  calibrated: {:.2} GMAC/s sustained\n", cpu_macs / 1e9);
+
+    // ---- measured: the optics simulation itself ----
+    for modes in [256usize, 1024] {
+        let medium = TransmissionMatrix::sample(3, d_in, modes);
+        let mut opu = OpticalOpu::new(OpuParams::default(), medium, 5);
+        let e = ternary(batch, d_in, 6);
+        bench.run(&format!("OPU physics sim d_out={modes} batch={batch}"), || {
+            let _ = opu.project(&e).unwrap();
+        });
+    }
+    bench.table("measured on this host (1 core)");
+
+    // ---- modeled: the paper's regime ----
+    let opu = OpuModel::paper(Holography::OffAxis);
+    let gpu = GpuModel::v100();
+    println!("\n== modeled projections/second vs output dimension (input dim 1e6) ==");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>14}",
+        "d_out", "OPU (paper)", "GPU batch=1", "GPU batch=128", "CPU (meas.)"
+    );
+    let d_in_big = 1_000_000usize;
+    for d_out in [100usize, 1_000, 10_000, 100_000, 1_000_000] {
+        let opu_r = opu
+            .throughput(d_in_big, d_out)
+            .map(fmt_rate)
+            .unwrap_or("— (>max)".into());
+        let gpu1 = gpu
+            .throughput(d_in_big, d_out, 1)
+            .map(fmt_rate)
+            .unwrap_or("— (OOM)".into());
+        let gpu128 = gpu
+            .throughput(d_in_big, d_out, 128)
+            .map(fmt_rate)
+            .unwrap_or("— (OOM)".into());
+        let cpu_r = fmt_rate(cpu.throughput(d_in_big, d_out));
+        println!("{d_out:>10} {opu_r:>14} {gpu1:>14} {gpu128:>14} {cpu_r:>14}");
+    }
+
+    // Crossover: smallest d_out where OPU >= GPU batch-1.
+    let mut crossover = None;
+    for d_out in (1..=200).map(|k| k * 1000) {
+        match gpu.throughput(d_in_big, d_out, 1) {
+            None => {
+                crossover = crossover.or(Some(d_out));
+                break;
+            }
+            Some(g) => {
+                if opu.throughput(d_in_big, d_out).unwrap_or(0.0) >= g {
+                    crossover = Some(d_out);
+                    break;
+                }
+            }
+        }
+    }
+    println!(
+        "\ncrossover (OPU ≥ GPU batch-1, unbatched DFA feedback): d_out ≈ {}",
+        crossover.map(|d| d.to_string()).unwrap_or("none".into())
+    );
+    println!(
+        "paper headline: 1500 proj/s @ d_out=1e5 → model gives {}",
+        opu.throughput(d_in_big, 100_000).map(fmt_rate).unwrap()
+    );
+    println!(
+        "effective compute at that size: {:.1} TMAC/s ('hundred billion parameters' per frame)",
+        opu.effective_macs(d_in_big, 100_000).unwrap() / 1e12
+    );
+    Ok(())
+}

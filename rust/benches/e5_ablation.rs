@@ -1,0 +1,134 @@
+//! E5 — ablations of the method's design choices:
+//!
+//! 1. **Eq. 4 threshold θ** — the paper fixes θ = 0.1; sweep it and
+//!    report end-of-budget accuracy (the quantization-aggressiveness vs
+//!    signal trade-off).
+//! 2. **Camera noise (photon budget)** — the axis that separates the
+//!    paper's 97.6 % (digital ternary) from 95.8 % (optical): sweep n_ph
+//!    and report accuracy degradation.
+//! 3. **Feedback alignment** — cos∠(DFA update, BP gradient) before and
+//!    after training: the mechanism that makes DFA learn at all.
+//!
+//! env: LITL_BENCH_STEPS, LITL_BENCH_TRAIN (same as e1).
+
+use litl::config::{Algo, TrainConfig};
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::projector::DigitalProjector;
+use litl::coordinator::{align, Trainer};
+use litl::data::{self, Split};
+use litl::optics::medium::TransmissionMatrix;
+use litl::util::rng::Pcg64;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn run_budgeted(
+    mut cfg: TrainConfig,
+    ds: &litl::data::Dataset,
+    steps: usize,
+) -> anyhow::Result<f64> {
+    cfg.seed = 42;
+    let mut tr = Trainer::new(cfg)?;
+    tr.warmup()?;
+    let batch = tr.model().batch;
+    let mut rng = Pcg64::seeded(1);
+    let mut done = 0usize;
+    'outer: loop {
+        for (x, y) in ds.batches(Split::Train, batch, &mut rng) {
+            tr.train_step(&x, &y)?;
+            done += 1;
+            if done >= steps {
+                break 'outer;
+            }
+        }
+    }
+    Ok(tr.evaluate(ds, Split::Test)?.accuracy)
+}
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+    let steps = env_usize("LITL_BENCH_STEPS", 900);
+    let train_size = env_usize("LITL_BENCH_TRAIN", 6_000);
+    let test_size = 1_000usize;
+    let ds = data::load_or_synth(42, train_size, test_size)?;
+    let base = TrainConfig {
+        artifact_config: "small".into(),
+        train_size,
+        test_size,
+        lr: 0.001,
+        ..TrainConfig::default()
+    };
+
+    // ---- E5.1: threshold sweep (digital ternary DFA) ----
+    println!("== E5.1: Eq. 4 threshold sweep (digital ternary DFA, {steps} steps) ==");
+    println!("{:>8} {:>12}", "θ", "accuracy");
+    for theta in [0.02f32, 0.05, 0.1, 0.2, 0.4] {
+        let mut cfg = base.clone();
+        cfg.algo = Algo::DfaTernary;
+        cfg.theta = theta;
+        let acc = run_budgeted(cfg, &ds, steps)?;
+        let marker = if (theta - 0.1).abs() < 1e-6 { "  <- paper" } else { "" };
+        println!("{theta:>8} {:>11.2}%{marker}", acc * 100.0);
+    }
+
+    // ---- E5.2: photon-budget sweep (optical DFA) ----
+    println!("\n== E5.2: camera noise sweep (optical DFA, {steps} steps) ==");
+    println!("{:>10} {:>10} {:>12}", "n_ph", "read σ", "accuracy");
+    for (n_ph, read_sigma) in [
+        (1e9f32, 0.0f32),
+        (1_000.0, 1.0),
+        (100.0, 2.0),
+        (10.0, 4.0),
+        (2.0, 8.0),
+        (0.5, 16.0),
+        (0.1, 40.0),
+    ] {
+        let mut cfg = base.clone();
+        cfg.algo = Algo::Optical;
+        cfg.lr = 0.001;
+        cfg.n_ph = Some(n_ph);
+        cfg.read_sigma = Some(read_sigma);
+        let acc = run_budgeted(cfg, &ds, steps)?;
+        let marker = if (n_ph - 100.0).abs() < 1e-6 { "  <- default device" } else { "" };
+        println!("{n_ph:>10} {read_sigma:>10} {:>11.2}%{marker}", acc * 100.0);
+    }
+
+    // ---- E5.3: feedback alignment over training (host oracle) ----
+    println!("\n== E5.3: DFA/BP gradient alignment (cosine, host oracle) ==");
+    let layers = &[784usize, 128, 128, 10];
+    let medium = TransmissionMatrix::sample(99, 10, 128);
+    let mut tr = HostTrainer::new(
+        3,
+        layers,
+        0.001,
+        HostAlgo::DfaFloat,
+        Box::new(DigitalProjector::new(medium.clone())),
+    );
+    let mut probe = DigitalProjector::new(medium);
+    let probe_idx: Vec<usize> = (0..512).collect();
+    let (px, py) = ds.gather(Split::Train, &probe_idx);
+    println!("{:>8} {:>10} {:>10}", "step", "layer1", "layer2");
+    let mut rng = Pcg64::seeded(4);
+    let mut done = 0usize;
+    let checkpoints = [0usize, 25, 50, 100, 200, 400];
+    'outer: loop {
+        for (x, y) in ds.batches(Split::Train, 32, &mut rng) {
+            if checkpoints.contains(&done) {
+                let a = align::measure(&tr.mlp, &mut probe, &px, &py, -1.0)?;
+                println!("{done:>8} {:>10.3} {:>10.3}", a.layer1, a.layer2);
+            }
+            tr.step(&x, &y)?;
+            done += 1;
+            if done > *checkpoints.last().unwrap() {
+                break 'outer;
+            }
+        }
+    }
+    println!(
+        "\nexpected shape: alignment rises from ~0 toward clearly positive —\n\
+         Nøkland's feedback-alignment mechanism; noise/quantization lower it\n\
+         but do not destroy it (that is why 95.8% is still achievable)."
+    );
+    Ok(())
+}

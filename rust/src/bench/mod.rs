@@ -1,0 +1,171 @@
+//! Micro-benchmark harness (offline stand-in for criterion).
+//!
+//! `cargo bench` targets (`rust/benches/e*.rs`, `harness = false`) use
+//! [`Bench`] for robust timing: warmup, fixed-duration measurement,
+//! outlier-resistant statistics, and aligned table output that mirrors
+//! the paper's tables/figures (one bench per experiment id — DESIGN.md
+//! §4).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Welford};
+
+/// Result of one timed case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+}
+
+/// Benchmark runner with warmup and a time budget per case.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: u64,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI/tests (tiny budgets).
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(100),
+            min_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup: Duration, budget: Duration) -> Self {
+        self.warmup = warmup;
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f` repeatedly; returns and records the measurement.
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let mut w = Welford::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget || samples.len() < self.min_iters as usize {
+            let it = Instant::now();
+            f();
+            let dt = it.elapsed().as_secs_f64();
+            samples.push(dt);
+            w.push(dt);
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters: w.count(),
+            mean_s: w.mean(),
+            std_s: w.std(),
+            p50_s: percentile(&samples, 50.0),
+            min_s: w.min(),
+        };
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Print an aligned results table.
+    pub fn table(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "min"
+        );
+        for m in &self.results {
+            println!(
+                "{:<44} {:>10} {:>12} {:>12} {:>12}",
+                m.name,
+                m.iters,
+                fmt_s(m.mean_s),
+                fmt_s(m.p50_s),
+                fmt_s(m.min_s)
+            );
+        }
+    }
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Human-format a rate.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2} k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.2} /s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::quick();
+        let m = b.run("sleep50us", || {
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean_s >= 45e-6, "mean: {}", m.mean_s);
+        assert!(m.min_s <= m.mean_s + 1e-9);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_s(2.5), "2.500 s");
+        assert_eq!(fmt_s(0.0025), "2.500 ms");
+        assert!(fmt_s(2.5e-6).contains("µs"));
+        assert!(fmt_rate(1.5e3).contains("k/s"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Command-line interface (hand-rolled; clap is not in the offline
+//! vendor set).
+//!
+//! Grammar: `litl <command> [--flag value]... [--bool-flag] [positional]`.
+//! Commands are defined in `main.rs`; this module is the parser plus
+//! help rendering.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: command, flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  Flags may be `--key value` or `--key=value`;
+    /// a flag with no following value is boolean `"true"`.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if key.is_empty() {
+                    bail!("empty flag name in '{arg}'");
+                }
+                let value = match inline {
+                    Some(v) => v,
+                    None => match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            it.next().unwrap().clone()
+                        }
+                        _ => "true".to_string(),
+                    },
+                };
+                out.flags.entry(key).or_default().push(value);
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences of a repeatable flag (e.g. `--set k=v`).
+    pub fn flag_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn flag_bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} {s}: {e}")),
+        }
+    }
+
+    /// Keys that were provided (for unknown-flag detection).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.flags.keys().map(|s| s.as_str())
+    }
+
+    /// Error on any flag not in `allowed`.
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.keys() {
+            if !allowed.contains(&k) {
+                bail!("unknown flag --{k} (allowed: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(|s| s.to_string()).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn command_flags_positionals() {
+        // Value consumption is greedy: a bool flag followed by a
+        // positional must use `--flag=true` or come last.
+        let a = parse("train --epochs 3 --algo=optical out.csv --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("epochs"), Some("3"));
+        assert_eq!(a.flag("algo"), Some("optical"));
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+        let b = parse("train --verbose=true out.csv");
+        assert!(b.flag_bool("verbose"));
+        assert_eq!(b.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse("train --set a=1 --set b=2");
+        assert_eq!(a.flag_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.flag("set"), Some("b=2"));
+    }
+
+    #[test]
+    fn typed_parse() {
+        let a = parse("x --lr 0.01");
+        assert_eq!(a.flag_parse::<f32>("lr").unwrap(), Some(0.01));
+        assert_eq!(a.flag_parse::<u32>("missing").unwrap(), None);
+        let b = parse("x --lr abc");
+        assert!(b.flag_parse::<f32>("lr").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("train --epochs 1 --nope 2");
+        assert!(a.ensure_known(&["epochs"]).is_err());
+        assert!(a.ensure_known(&["epochs", "nope"]).is_ok());
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse("--help");
+        assert_eq!(a.command, "");
+        assert!(a.flag_bool("help"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Configuration system: TOML-subset files + CLI overrides.
+//!
+//! A run is described by a [`TrainConfig`] (experiment-level knobs) built
+//! from defaults, an optional `--config file.toml`, and `--set key=value`
+//! overrides, in that precedence order.  The TOML subset ([`toml`])
+//! covers tables, strings, numbers, booleans and arrays — what config
+//! files actually use.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use self::toml::TomlValue;
+
+/// Which feedback path trains the hidden layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Backpropagation baseline (Eq. 2).
+    Bp,
+    /// Digital DFA with float error (paper: 97.7%).
+    DfaFloat,
+    /// Digital DFA with ternary error (paper: 97.6%).
+    DfaTernary,
+    /// Hybrid optical DFA through the simulated OPU (paper: 95.8%).
+    Optical,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "bp" => Algo::Bp,
+            "dfa-float" | "dfa_float" => Algo::DfaFloat,
+            "dfa-ternary" | "dfa_ternary" => Algo::DfaTernary,
+            "optical" => Algo::Optical,
+            other => bail!("unknown algo '{other}' (bp|dfa-float|dfa-ternary|optical)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Bp => "bp",
+            Algo::DfaFloat => "dfa-float",
+            Algo::DfaTernary => "dfa-ternary",
+            Algo::Optical => "optical",
+        }
+    }
+
+    /// The paper's learning rate for this row (§III).
+    pub fn paper_lr(&self) -> f32 {
+        match self {
+            Algo::Optical => 0.01,
+            _ => 0.001,
+        }
+    }
+}
+
+/// Projector backend for DFA algos.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectorKind {
+    /// Simulated OPU physics (rust-native optics).
+    OpticalNative,
+    /// Simulated OPU physics via the `opu_project` HLO artifact.
+    OpticalHlo,
+    /// Exact digital projection (the paper's GPU rows).
+    Digital,
+}
+
+/// Experiment-level configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact config name ("paper" = 1024 hidden, "small" = 256).
+    pub artifact_config: String,
+    pub algo: Algo,
+    pub projector: ProjectorKind,
+    pub epochs: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub lr: f32,
+    /// Eq. 4 threshold; < 0 disables quantization.
+    pub theta: f32,
+    pub seed: u64,
+    /// Camera noise overrides (None = manifest defaults).
+    pub n_ph: Option<f32>,
+    pub read_sigma: Option<f32>,
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+    /// Where to write metrics CSV/JSONL (None = no files).
+    pub out_dir: Option<String>,
+    /// Evaluate every N steps (0 = once per epoch).
+    pub eval_every: usize,
+    /// Simulated-OPU frame accounting on/off (timing model).
+    pub account_frames: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact_config: "paper".to_string(),
+            algo: Algo::Optical,
+            projector: ProjectorKind::OpticalNative,
+            epochs: 10,
+            train_size: 60_000,
+            test_size: 10_000,
+            lr: 0.01,
+            theta: 0.1,
+            seed: 42,
+            n_ph: None,
+            read_sigma: None,
+            artifacts_dir: "artifacts".to_string(),
+            out_dir: None,
+            eval_every: 0,
+            account_frames: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply a `key = value` pair (TOML file entry or `--set` override).
+    pub fn set(&mut self, key: &str, value: &TomlValue) -> Result<()> {
+        match key {
+            "config" | "artifact_config" => {
+                self.artifact_config = value.want_str()?.to_string()
+            }
+            "algo" => self.algo = Algo::parse(value.want_str()?)?,
+            "projector" => {
+                self.projector = match value.want_str()? {
+                    "optical-native" | "native" => ProjectorKind::OpticalNative,
+                    "optical-hlo" | "hlo" => ProjectorKind::OpticalHlo,
+                    "digital" => ProjectorKind::Digital,
+                    o => bail!("unknown projector '{o}'"),
+                }
+            }
+            "epochs" => self.epochs = value.want_int()? as usize,
+            "train_size" => self.train_size = value.want_int()? as usize,
+            "test_size" => self.test_size = value.want_int()? as usize,
+            "lr" => self.lr = value.want_float()? as f32,
+            "theta" => self.theta = value.want_float()? as f32,
+            "seed" => self.seed = value.want_int()? as u64,
+            "n_ph" => self.n_ph = Some(value.want_float()? as f32),
+            "read_sigma" => self.read_sigma = Some(value.want_float()? as f32),
+            "artifacts_dir" => self.artifacts_dir = value.want_str()?.to_string(),
+            "out_dir" => self.out_dir = Some(value.want_str()?.to_string()),
+            "eval_every" => self.eval_every = value.want_int()? as usize,
+            "account_frames" => self.account_frames = value.want_bool()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file on top of `self`.
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let table = toml::parse(&text)?;
+        for (key, value) in table.iter() {
+            self.set(key, value)
+                .with_context(|| format!("config key '{key}'"))?;
+        }
+        Ok(())
+    }
+
+    /// Apply a `--set key=value` override (value parsed as TOML scalar).
+    pub fn set_kv(&mut self, kv: &str) -> Result<()> {
+        let (key, value) = kv
+            .split_once('=')
+            .with_context(|| format!("--set expects key=value, got '{kv}'"))?;
+        let v = toml::parse_scalar(value.trim())?;
+        self.set(key.trim(), &v)
+    }
+
+    /// Mirror the paper's per-algorithm learning-rate choice.
+    pub fn with_paper_lr(mut self) -> Self {
+        self.lr = self.algo.paper_lr();
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.epochs, 10);
+        assert_eq!(c.theta, 0.1);
+        assert_eq!(c.algo, Algo::Optical);
+        assert_eq!(c.lr, 0.01);
+    }
+
+    #[test]
+    fn paper_lr_per_algo() {
+        assert_eq!(Algo::Optical.paper_lr(), 0.01);
+        assert_eq!(Algo::DfaTernary.paper_lr(), 0.001);
+        assert_eq!(Algo::DfaFloat.paper_lr(), 0.001);
+    }
+
+    #[test]
+    fn set_kv_overrides() {
+        let mut c = TrainConfig::default();
+        c.set_kv("epochs=3").unwrap();
+        c.set_kv("algo=\"bp\"").unwrap();
+        c.set_kv("lr=0.001").unwrap();
+        c.set_kv("account_frames=false").unwrap();
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.algo, Algo::Bp);
+        assert_eq!(c.lr, 0.001);
+        assert!(!c.account_frames);
+    }
+
+    #[test]
+    fn set_kv_accepts_bare_strings() {
+        let mut c = TrainConfig::default();
+        c.set_kv("algo=dfa-ternary").unwrap();
+        assert_eq!(c.algo, Algo::DfaTernary);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = TrainConfig::default();
+        assert!(c.set_kv("nope=1").is_err());
+    }
+
+    #[test]
+    fn load_file_roundtrip() {
+        let path = std::env::temp_dir().join("litl_cfg_test.toml");
+        std::fs::write(
+            &path,
+            "# experiment\nepochs = 2\nalgo = \"dfa-float\"\ntheta = -1.0\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.epochs, 2);
+        assert_eq!(c.algo, Algo::DfaFloat);
+        assert_eq!(c.theta, -1.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! TOML-subset parser: flat `key = value` tables with comments, plus
+//! `[section]` headers flattened to `section.key`.  Values: strings,
+//! integers, floats, booleans, and flat arrays.  Enough for experiment
+//! configs; anything fancier is rejected loudly.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn want_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn want_int(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(x) => Ok(*x),
+            TomlValue::Float(x) if x.fract() == 0.0 => Ok(*x as i64),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn want_float(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(x) => Ok(*x),
+            TomlValue::Int(x) => Ok(*x as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+
+    pub fn want_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// Parse a single scalar (used by `--set key=value`).  Bare words that
+/// are not numbers/bools are treated as strings for CLI ergonomics.
+pub fn parse_scalar(text: &str) -> Result<TomlValue> {
+    let t = text.trim();
+    if t.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(stripped) = t.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string: {t}");
+        };
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"")));
+    }
+    if t == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if t == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if t.starts_with('[') {
+        let Some(inner) = t.strip_prefix('[').and_then(|s| s.strip_suffix(']')) else {
+            bail!("unterminated array: {t}");
+        };
+        let items = split_top_level(inner)?;
+        return Ok(TomlValue::Arr(
+            items
+                .into_iter()
+                .map(|s| parse_scalar(&s))
+                .collect::<Result<_>>()?,
+        ));
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    // CLI ergonomics: bare identifier = string.
+    if t.chars().all(|c| c.is_alphanumeric() || "-_./:".contains(c)) {
+        return Ok(TomlValue::Str(t.to_string()));
+    }
+    bail!("cannot parse value: {t}")
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        bail!("unterminated string in array");
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    Ok(out)
+}
+
+/// Strip a trailing comment (respecting strings).
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a TOML-subset document into flat (key, value) pairs, with
+/// `[section]` prefixes flattened as `section.key`.
+pub fn parse(text: &str) -> Result<Vec<(String, TomlValue)>> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let Some(name) = inner.strip_suffix(']') else {
+                bail!("line {}: bad section header: {raw}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected key = value: {raw}", lineno + 1);
+        };
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let parsed = parse_scalar(value.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        out.push((full_key, parsed));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse_scalar("42").unwrap(), TomlValue::Int(42));
+        assert_eq!(parse_scalar("-1.5").unwrap(), TomlValue::Float(-1.5));
+        assert_eq!(parse_scalar("true").unwrap(), TomlValue::Bool(true));
+        assert_eq!(
+            parse_scalar("\"hi\"").unwrap(),
+            TomlValue::Str("hi".to_string())
+        );
+        assert_eq!(
+            parse_scalar("bare-word").unwrap(),
+            TomlValue::Str("bare-word".to_string())
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        assert_eq!(
+            parse_scalar("[1, 2, 3]").unwrap(),
+            TomlValue::Arr(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+        assert_eq!(
+            parse_scalar("[\"a\", \"b\"]").unwrap(),
+            TomlValue::Arr(vec![
+                TomlValue::Str("a".to_string()),
+                TomlValue::Str("b".to_string())
+            ])
+        );
+    }
+
+    #[test]
+    fn document_with_sections_and_comments() {
+        let doc = r#"
+# top comment
+epochs = 10  # trailing
+algo = "optical"
+
+[opu]
+n_ph = 100.0
+"#;
+        let kvs = parse(doc).unwrap();
+        assert_eq!(kvs.len(), 3);
+        assert_eq!(kvs[0].0, "epochs");
+        assert_eq!(kvs[2].0, "opu.n_ph");
+        assert_eq!(kvs[2].1, TomlValue::Float(100.0));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = parse("x == 1\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let kvs = parse("name = \"a#b\"\n").unwrap();
+        assert_eq!(kvs[0].1, TomlValue::Str("a#b".to_string()));
+    }
+}

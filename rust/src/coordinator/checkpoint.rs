@@ -1,0 +1,180 @@
+//! Model-state checkpointing (own binary format; no serde offline).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic   "LITLCKPT"            8 bytes
+//! version u32                   = 1
+//! step    f32  (Adam t)
+//! count   u32  (tensor count)
+//! per tensor: ndim u32, dims u32×ndim, data f32×numel
+//! crc32   u32 over everything above (flate2's crc)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"LITLCKPT";
+const VERSION: u32 = 1;
+
+/// Serialize tensors + step counter to a writer.
+pub fn write_to(w: &mut impl Write, tensors: &[&Tensor], step: f32) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&step.to_le_bytes());
+    buf.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        buf.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+        for &d in t.shape() {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in t.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut hasher = flate2::Crc::new();
+    hasher.update(&buf);
+    buf.extend_from_slice(&hasher.sum().to_le_bytes());
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Deserialize tensors + step counter from a reader.
+pub fn read_from(r: &mut impl Read) -> Result<(Vec<Tensor>, f32)> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    if buf.len() < 8 + 4 + 4 + 4 + 4 {
+        bail!("checkpoint truncated ({} bytes)", buf.len());
+    }
+    let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+    let want_crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let mut hasher = flate2::Crc::new();
+    hasher.update(body);
+    if hasher.sum() != want_crc {
+        bail!("checkpoint CRC mismatch (corrupt file)");
+    }
+
+    let mut at = 0usize;
+    let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+        if *at + n > body.len() {
+            bail!("checkpoint truncated at byte {at}");
+        }
+        let s = &body[*at..*at + n];
+        *at += n;
+        Ok(s)
+    };
+    if take(&mut at, 8)? != MAGIC {
+        bail!("not a litl checkpoint (bad magic)");
+    }
+    let version = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = f32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap());
+    let count = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+    if count > 10_000 {
+        bail!("implausible tensor count {count}");
+    }
+    let mut tensors = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndim = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+        if ndim > 8 {
+            bail!("implausible rank {ndim}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let raw = take(&mut at, numel * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        tensors.push(Tensor::from_vec(&dims, data));
+    }
+    if at != body.len() {
+        bail!("trailing bytes in checkpoint");
+    }
+    Ok((tensors, step))
+}
+
+/// Save to a file (atomic via temp + rename).
+pub fn save(path: impl AsRef<Path>, tensors: &[&Tensor], step: f32) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        write_to(&mut f, tensors, step)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<(Vec<Tensor>, f32)> {
+    let mut f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening {}", path.as_ref().display()))?;
+    read_from(&mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let a = Tensor::randn(&[3, 4], &mut rng, 1.0);
+        let b = Tensor::randn(&[7], &mut rng, 2.0);
+        let c = Tensor::scalar(5.5);
+        let path = std::env::temp_dir().join("litl_ckpt_test.bin");
+        save(&path, &[&a, &b, &c], 42.0).unwrap();
+        let (tensors, step) = load(&path).unwrap();
+        assert_eq!(step, 42.0);
+        assert_eq!(tensors.len(), 3);
+        assert_eq!(tensors[0], a);
+        assert_eq!(tensors[1], b);
+        assert_eq!(tensors[2], c);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let path = std::env::temp_dir().join("litl_ckpt_corrupt.bin");
+        save(&path, &[&t], 1.0).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let path = std::env::temp_dir().join("litl_ckpt_trunc.bin");
+        save(&path, &[&t], 1.0).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 6]).unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("litl_ckpt_garbage.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

@@ -1,0 +1,512 @@
+//! Pure-rust reference trainers (no XLA in the loop).
+//!
+//! Three roles:
+//! 1. **Oracle** — the math of `python/compile/model.py` re-derived
+//!    independently; cross-checked against the artifacts in
+//!    `rust/tests/e2e_train.rs`.
+//! 2. **CPU baseline** — the "silicon" comparator for E2/E3 benches.
+//! 3. **Async-DFA demonstrator** — the paper's §I motivation is that DFA
+//!    breaks backprop's backward lock-step: once `B·e` is back from the
+//!    OPU, every layer's update is independent.  [`AsyncDfaTrainer`]
+//!    actually runs the per-layer updates on a worker pool.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::exec::pool::ThreadPool;
+use crate::tensor::{
+    add_row_inplace, col_sum, gate_tanh, matmul, matmul_nt, matmul_tn, softmax,
+    tanh_inplace, ternarize, Tensor,
+};
+use crate::util::rng::Pcg64;
+
+use super::optim::Adam;
+use super::projector::Projector;
+
+/// Forward-pass intermediates.
+pub struct Fwd {
+    pub h1: Tensor,
+    pub h2: Tensor,
+    pub probs: Tensor,
+}
+
+/// The paper's MLP on the host: 784 → H → H → 10, tanh.
+#[derive(Clone)]
+pub struct HostMlp {
+    pub layers: Vec<usize>,
+    /// w1, b1, w2, b2, w3, b3 (weights `[fan_in, fan_out]`).
+    pub params: Vec<Tensor>,
+}
+
+impl HostMlp {
+    /// He-style init; matches `Model::init` given the same seed.
+    pub fn init(seed: u64, layers: &[usize]) -> Self {
+        let mut rng = Pcg64::new(seed, 0x1417);
+        let mut params = Vec::new();
+        for w in layers.windows(2) {
+            let scale = 1.0 / (w[0] as f32).sqrt();
+            params.push(Tensor::randn(&[w[0], w[1]], &mut rng, scale));
+            params.push(Tensor::zeros(&[w[1]]));
+        }
+        HostMlp {
+            layers: layers.to_vec(),
+            params,
+        }
+    }
+
+    pub fn forward(&self, x: &Tensor) -> Fwd {
+        let mut a1 = matmul(x, &self.params[0]);
+        add_row_inplace(&mut a1, self.params[1].data());
+        tanh_inplace(&mut a1);
+        let h1 = a1;
+        let mut a2 = matmul(&h1, &self.params[2]);
+        add_row_inplace(&mut a2, self.params[3].data());
+        tanh_inplace(&mut a2);
+        let h2 = a2;
+        let mut logits = matmul(&h2, &self.params[4]);
+        add_row_inplace(&mut logits, self.params[5].data());
+        let probs = softmax(&logits);
+        Fwd { h1, h2, probs }
+    }
+
+    /// Mean CE loss and per-sample error `e = probs - y`.
+    pub fn loss_err(probs: &Tensor, yoh: &Tensor) -> (f32, Tensor) {
+        let b = probs.rows();
+        let mut e = probs.clone();
+        let mut loss = 0.0f64;
+        for (ev, &yv) in e.data_mut().iter_mut().zip(yoh.data()) {
+            if yv > 0.5 {
+                loss -= (ev.max(1e-12) as f64).ln();
+            }
+            *ev -= yv;
+        }
+        ((loss / b as f64) as f32, e)
+    }
+
+    /// Manual backprop gradients (Eq. 2) in param order.
+    pub fn bp_grads(&self, x: &Tensor, yoh: &Tensor) -> (Vec<Tensor>, f32) {
+        let fwd = self.forward(x);
+        let (loss, e) = Self::loss_err(&fwd.probs, yoh);
+        let b = x.rows() as f32;
+        let mut d3 = e;
+        scale(&mut d3, 1.0 / b);
+        let dw3 = matmul_tn_from(&fwd.h2, &d3);
+        let db3 = col_sum(&d3);
+        let d2 = gate_tanh(&matmul_nt(&d3, &self.params[4]), &fwd.h2);
+        let dw2 = matmul_tn_from(&fwd.h1, &d2);
+        let db2 = col_sum(&d2);
+        let d1 = gate_tanh(&matmul_nt(&d2, &self.params[2]), &fwd.h1);
+        let dw1 = matmul_tn_from(x, &d1);
+        let db1 = col_sum(&d1);
+        (
+            vec![
+                dw1,
+                Tensor::from_vec(&[self.layers[1]], db1),
+                dw2,
+                Tensor::from_vec(&[self.layers[2]], db2),
+                dw3,
+                Tensor::from_vec(&[self.layers[3]], db3),
+            ],
+            loss,
+        )
+    }
+
+    /// DFA gradients (Eq. 3) given projected errors `p1, p2` ([B, H]).
+    pub fn dfa_grads(
+        &self,
+        x: &Tensor,
+        fwd: &Fwd,
+        e: &Tensor,
+        p1: &Tensor,
+        p2: &Tensor,
+    ) -> Vec<Tensor> {
+        let b = x.rows() as f32;
+        let inv_b = 1.0 / b;
+        let mut g1 = gate_tanh(p1, &fwd.h1);
+        scale(&mut g1, inv_b);
+        let mut g2 = gate_tanh(p2, &fwd.h2);
+        scale(&mut g2, inv_b);
+        let mut d3 = e.clone();
+        scale(&mut d3, inv_b);
+        vec![
+            matmul_tn_from(x, &g1),
+            Tensor::from_vec(&[self.layers[1]], col_sum(&g1)),
+            matmul_tn_from(&fwd.h1, &g2),
+            Tensor::from_vec(&[self.layers[2]], col_sum(&g2)),
+            matmul_tn_from(&fwd.h2, &d3),
+            Tensor::from_vec(&[self.layers[3]], col_sum(&d3)),
+        ]
+    }
+
+    /// Top-1 accuracy on a batch.
+    pub fn accuracy(&self, x: &Tensor, yoh: &Tensor) -> f32 {
+        let fwd = self.forward(x);
+        let classes = yoh.cols();
+        let mut correct = 0usize;
+        for r in 0..x.rows() {
+            let row = fwd.probs.row(r);
+            let pred = argmax(row);
+            let truth = argmax(&yoh.data()[r * classes..(r + 1) * classes]);
+            if pred == truth {
+                correct += 1;
+            }
+        }
+        correct as f32 / x.rows() as f32
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn scale(t: &mut Tensor, s: f32) {
+    crate::tensor::scale_inplace(t, s);
+}
+
+/// `aᵀ @ b` without materializing the transpose.
+fn matmul_tn_from(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul_tn(a, b)
+}
+
+/// Which feedback the host trainer uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HostAlgo {
+    Bp,
+    DfaFloat,
+    DfaTernary { theta: f32 },
+}
+
+/// Synchronous host trainer over an arbitrary projector.
+pub struct HostTrainer {
+    pub mlp: HostMlp,
+    pub opt: Adam,
+    pub algo: HostAlgo,
+    projector: Box<dyn Projector>,
+}
+
+impl HostTrainer {
+    pub fn new(
+        seed: u64,
+        layers: &[usize],
+        lr: f32,
+        algo: HostAlgo,
+        projector: Box<dyn Projector>,
+    ) -> Self {
+        let mlp = HostMlp::init(seed, layers);
+        let opt = Adam::new(&mlp.params, lr);
+        HostTrainer {
+            mlp,
+            opt,
+            algo,
+            projector,
+        }
+    }
+
+    /// One training step; returns the batch loss.
+    pub fn step(&mut self, x: &Tensor, yoh: &Tensor) -> Result<f32> {
+        match self.algo {
+            HostAlgo::Bp => {
+                let (grads, loss) = self.mlp.bp_grads(x, yoh);
+                self.opt.step(&mut self.mlp.params, &grads);
+                Ok(loss)
+            }
+            HostAlgo::DfaFloat | HostAlgo::DfaTernary { .. } => {
+                let fwd = self.mlp.forward(x);
+                let (loss, e) = HostMlp::loss_err(&fwd.probs, yoh);
+                let feedback = match self.algo {
+                    HostAlgo::DfaTernary { theta } => ternarize(&e, theta),
+                    _ => e.clone(),
+                };
+                if self.projector.requires_ternary()
+                    && !matches!(self.algo, HostAlgo::DfaTernary { .. })
+                {
+                    anyhow::bail!(
+                        "projector '{}' needs ternary frames; use DfaTernary",
+                        self.projector.kind()
+                    );
+                }
+                let (p1, p2) = self.projector.project(&feedback)?;
+                let grads = self.mlp.dfa_grads(x, &fwd, &e, &p1, &p2);
+                self.opt.step(&mut self.mlp.params, &grads);
+                Ok(loss)
+            }
+        }
+    }
+
+    pub fn projector(&self) -> &dyn Projector {
+        self.projector.as_ref()
+    }
+}
+
+/// Per-layer state for the asynchronous DFA engine.
+struct Layer {
+    w: Tensor,
+    b: Tensor,
+    opt: Adam,
+}
+
+/// Asynchronous DFA: each layer's (gradient + Adam) update runs as an
+/// independent pool job — the structural freedom DFA buys over BP.
+///
+/// Numerically identical to the synchronous trainer (property-tested):
+/// updates within a step are data-independent, so running them in
+/// parallel changes nothing but wall-clock.
+pub struct AsyncDfaTrainer {
+    pub layers: Vec<usize>,
+    layer_state: Vec<Arc<Mutex<Layer>>>,
+    pool: ThreadPool,
+    theta: f32,
+    projector: Box<dyn Projector>,
+}
+
+impl AsyncDfaTrainer {
+    pub fn new(
+        seed: u64,
+        layers: &[usize],
+        lr: f32,
+        theta: f32,
+        projector: Box<dyn Projector>,
+        workers: usize,
+    ) -> Self {
+        let mlp = HostMlp::init(seed, layers);
+        let mut layer_state = Vec::new();
+        for i in 0..layers.len() - 1 {
+            let w = mlp.params[2 * i].clone();
+            let b = mlp.params[2 * i + 1].clone();
+            let opt = Adam::new(&[w.clone(), b.clone()], lr);
+            layer_state.push(Arc::new(Mutex::new(Layer { w, b, opt })));
+        }
+        AsyncDfaTrainer {
+            layers: layers.to_vec(),
+            layer_state,
+            pool: ThreadPool::new(workers.max(1), 16),
+            theta,
+            projector,
+        }
+    }
+
+    /// Snapshot the parameters into a `HostMlp` (for eval / comparison).
+    pub fn snapshot(&self) -> HostMlp {
+        let mut params = Vec::new();
+        for l in &self.layer_state {
+            let l = l.lock().unwrap();
+            params.push(l.w.clone());
+            params.push(l.b.clone());
+        }
+        HostMlp {
+            layers: self.layers.clone(),
+            params,
+        }
+    }
+
+    /// One step: forward (sequential), project (device), then all three
+    /// layer updates dispatched concurrently.
+    pub fn step(&mut self, x: &Tensor, yoh: &Tensor) -> Result<f32> {
+        let mlp = self.snapshot();
+        let fwd = mlp.forward(x);
+        let (loss, e) = HostMlp::loss_err(&fwd.probs, yoh);
+        let feedback = ternarize(&e, self.theta);
+        let (p1, p2) = self.projector.project(&feedback)?;
+        let inv_b = 1.0 / x.rows() as f32;
+
+        // Per-layer jobs: (hprev, signal, gate_h or None for the head).
+        let jobs: Vec<(Arc<Mutex<Layer>>, Tensor, Tensor, Option<Tensor>)> = vec![
+            (
+                self.layer_state[0].clone(),
+                x.clone(),
+                p1,
+                Some(fwd.h1.clone()),
+            ),
+            (
+                self.layer_state[1].clone(),
+                fwd.h1.clone(),
+                p2,
+                Some(fwd.h2.clone()),
+            ),
+            (self.layer_state[2].clone(), fwd.h2.clone(), e, None),
+        ];
+        for (state, hprev, signal, gate) in jobs {
+            self.pool.submit(move || {
+                let mut g = match gate {
+                    Some(h) => gate_tanh(&signal, &h),
+                    None => signal,
+                };
+                crate::tensor::scale_inplace(&mut g, inv_b);
+                let dw = matmul_tn(&hprev, &g);
+                let db = Tensor::from_vec(&[g.cols()], col_sum(&g));
+                let mut layer = state.lock().unwrap();
+                let mut wb = vec![layer.w.clone(), layer.b.clone()];
+                layer.opt.step(&mut wb, &[dw, db]);
+                layer.b = wb.pop().unwrap();
+                layer.w = wb.pop().unwrap();
+            });
+        }
+        self.pool.join();
+        Ok(loss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::projector::DigitalProjector;
+    use crate::optics::medium::TransmissionMatrix;
+
+    const LAYERS: &[usize] = &[20, 16, 16, 10];
+
+    fn task_batch(seed: u64, b: usize) -> (Tensor, Tensor) {
+        // Fixed random linear task (same construction as python tests).
+        let mut proto_rng = Pcg64::new(1234, 0);
+        let proto = Tensor::randn(&[10, 20], &mut proto_rng, 1.0);
+        let mut rng = Pcg64::seeded(seed);
+        let x = Tensor::randn(&[b, 20], &mut rng, 1.0);
+        let scores = matmul(&x, &transpose(&proto));
+        let mut yoh = Tensor::zeros(&[b, 10]);
+        for r in 0..b {
+            let c = argmax(scores.row(r));
+            *yoh.at_mut(r, c) = 1.0;
+        }
+        (x, yoh)
+    }
+
+    fn transpose(t: &Tensor) -> Tensor {
+        let (m, n) = (t.rows(), t.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                *out.at_mut(j, i) = t.at(i, j);
+            }
+        }
+        out
+    }
+
+    fn digital() -> Box<dyn Projector> {
+        Box::new(DigitalProjector::new(TransmissionMatrix::sample(
+            99, 10, 16,
+        )))
+    }
+
+    #[test]
+    fn bp_learns_the_task() {
+        let mut tr = HostTrainer::new(0, LAYERS, 0.01, HostAlgo::Bp, digital());
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for t in 0..80 {
+            let (x, y) = task_batch(100 + t, 64);
+            let loss = tr.step(&x, &y).unwrap();
+            if t == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < 0.5 * first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn dfa_float_learns() {
+        let mut tr = HostTrainer::new(0, LAYERS, 0.01, HostAlgo::DfaFloat, digital());
+        let mut losses = Vec::new();
+        for t in 0..80 {
+            let (x, y) = task_batch(200 + t, 64);
+            losses.push(tr.step(&x, &y).unwrap());
+        }
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[75..].iter().sum::<f32>() / 5.0;
+        assert!(tail < 0.7 * head, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn dfa_ternary_learns() {
+        // Ternary feedback is the slowest starter (most wrong-class
+        // errors quantize to zero early) — use a longer horizon.
+        let mut tr = HostTrainer::new(
+            0,
+            LAYERS,
+            0.01,
+            HostAlgo::DfaTernary { theta: 0.1 },
+            digital(),
+        );
+        let mut losses = Vec::new();
+        for t in 0..160 {
+            let (x, y) = task_batch(300 + t, 64);
+            losses.push(tr.step(&x, &y).unwrap());
+        }
+        let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+        let tail: f32 = losses[155..].iter().sum::<f32>() / 5.0;
+        assert!(tail < 0.8 * head, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn bp_grads_match_finite_differences() {
+        let mlp = HostMlp::init(3, &[6, 5, 5, 4]);
+        let mut rng = Pcg64::seeded(4);
+        let x = Tensor::randn(&[3, 6], &mut rng, 1.0);
+        let mut yoh = Tensor::zeros(&[3, 4]);
+        for r in 0..3 {
+            *yoh.at_mut(r, r % 4) = 1.0;
+        }
+        let (grads, _) = mlp.bp_grads(&x, &yoh);
+        // Check a few random weight entries per tensor by central diff.
+        let eps = 1e-3f32;
+        for (pi, gi) in [(0usize, 0usize), (2, 2), (4, 4)] {
+            let mut m = mlp.clone();
+            for check in 0..4 {
+                let idx = (check * 7 + 3) % m.params[pi].numel();
+                let orig = m.params[pi].data()[idx];
+                m.params[pi].data_mut()[idx] = orig + eps;
+                let (lp, _) = HostMlp::loss_err(&m.forward(&x).probs, &yoh);
+                m.params[pi].data_mut()[idx] = orig - eps;
+                let (lm, _) = HostMlp::loss_err(&m.forward(&x).probs, &yoh);
+                m.params[pi].data_mut()[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[gi].data()[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "param {pi} idx {idx}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn async_dfa_equals_sync_dfa() {
+        let mut sync_tr = HostTrainer::new(
+            5,
+            LAYERS,
+            0.01,
+            HostAlgo::DfaTernary { theta: 0.1 },
+            digital(),
+        );
+        let mut async_tr = AsyncDfaTrainer::new(5, LAYERS, 0.01, 0.1, digital(), 3);
+        for t in 0..10 {
+            let (x, y) = task_batch(400 + t, 32);
+            let l1 = sync_tr.step(&x, &y).unwrap();
+            let l2 = async_tr.step(&x, &y).unwrap();
+            assert!((l1 - l2).abs() < 1e-5, "step {t}: {l1} vs {l2}");
+        }
+        let snap = async_tr.snapshot();
+        for (a, b) in snap.params.iter().zip(&sync_tr.mlp.params) {
+            assert!(a.max_abs_diff(b) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn float_error_rejected_by_ternary_device() {
+        let medium = TransmissionMatrix::sample(99, 10, 16);
+        let optical = Box::new(super::super::projector::NativeOpticalProjector::new(
+            crate::optics::OpuParams::default(),
+            medium,
+            1,
+        ));
+        let mut tr = HostTrainer::new(0, LAYERS, 0.01, HostAlgo::DfaFloat, optical);
+        let (x, y) = task_batch(1, 8);
+        assert!(tr.step(&x, &y).is_err());
+    }
+}

@@ -1,0 +1,35 @@
+//! The hybrid analog-digital training coordinator — the paper's system.
+//!
+//! The paper's architecture (Fig. 1, right): the *forward* pass of the
+//! network runs on silicon, the *feedback* path of DFA — a fixed random
+//! projection of the output error — runs on the photonic co-processor,
+//! and once training finishes the OPU is no longer needed.  This module
+//! is the rust embodiment of that loop:
+//!
+//! * [`projector`] — the device abstraction: optical (native physics or
+//!   HLO twin) and digital (exact) projectors behind one trait.
+//! * [`service`] — the projection service: a shared device fed by a
+//!   dynamic frame batcher, so concurrent clients (ensemble members,
+//!   eval probes, ablation sweeps) share OPU frames.  One optical frame
+//!   carries the feedback for *every* hidden layer (re/im quadratures).
+//! * [`trainer`] — the training loop over the AOT artifacts: forward →
+//!   ternarize → optical projection → fused DFA+Adam apply; plus the
+//!   fully-fused digital DFA and BP baselines.
+//! * [`host`] — pure-rust reference trainers (test oracle + the CPU rows
+//!   of E2/E3), including the per-layer *asynchronous* update scheduler
+//!   that DFA enables ([`host::AsyncDfaTrainer`]).
+//! * [`optim`] — host Adam (matches the fused kernel bit-for-tolerance).
+//! * [`align`] — DFA↔BP gradient-alignment diagnostics (E5).
+//! * [`checkpoint`] — model state serialization (own binary format).
+
+pub mod align;
+pub mod checkpoint;
+pub mod host;
+pub mod optim;
+pub mod projector;
+pub mod service;
+pub mod trainer;
+
+pub use projector::{DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector};
+pub use service::{ProjectionClient, ProjectionService};
+pub use trainer::{EvalResult, TrainReport, Trainer};

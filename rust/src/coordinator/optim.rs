@@ -1,0 +1,115 @@
+//! Host-side Adam optimizer (Kingma & Ba 2015).
+//!
+//! Reference twin of the fused L1 `adam_update` Pallas kernel: used by
+//! the pure-rust trainers ([`super::host`]) and as the oracle in the
+//! cross-implementation tests (`rust/tests/`).  Hyper-parameters match
+//! the kernel's compile-time constants.
+
+use crate::tensor::Tensor;
+
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+/// Adam state for one set of parameter tensors.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub t: f32,
+    pub lr: f32,
+}
+
+impl Adam {
+    /// Zero-initialized moments shaped like `params`.
+    pub fn new(params: &[Tensor], lr: f32) -> Self {
+        Adam {
+            m: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+            v: params.iter().map(|p| Tensor::zeros(p.shape())).collect(),
+            t: 0.0,
+            lr,
+        }
+    }
+
+    /// One step: `params[i] -= lr·m̂/(√v̂+ε)` for every tensor.
+    /// `grads` must align with `params`.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1.0;
+        let bc1 = 1.0 - BETA1.powf(self.t);
+        let bc2 = 1.0 - BETA2.powf(self.t);
+        for ((p, g), (m, v)) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.shape(), g.shape());
+            let pd = p.data_mut();
+            let gd = g.data();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            for i in 0..pd.len() {
+                md[i] = BETA1 * md[i] + (1.0 - BETA1) * gd[i];
+                vd[i] = BETA2 * vd[i] + (1.0 - BETA2) * gd[i] * gd[i];
+                let mhat = md[i] / bc1;
+                let vhat = vd[i] / bc2;
+                pd[i] -= self.lr * mhat / (vhat.sqrt() + EPS);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        let mut params = vec![Tensor::zeros(&[1, 3])];
+        let grads = vec![Tensor::from_vec(&[1, 3], vec![3.0, -2.0, 0.5])];
+        let mut opt = Adam::new(&params, 0.01);
+        opt.step(&mut params, &grads);
+        // t=1: update ≈ -lr·sign(g) (up to ε)
+        for (p, g) in params[0].data().iter().zip(grads[0].data()) {
+            assert!((p + 0.01 * g.signum()).abs() < 1e-4, "{p} vs {g}");
+        }
+    }
+
+    #[test]
+    fn matches_closed_form_two_steps() {
+        let mut params = vec![Tensor::from_vec(&[1, 1], vec![1.0])];
+        let g1 = vec![Tensor::from_vec(&[1, 1], vec![0.5])];
+        let g2 = vec![Tensor::from_vec(&[1, 1], vec![-0.25])];
+        let mut opt = Adam::new(&params, 0.1);
+        opt.step(&mut params, &g1);
+        opt.step(&mut params, &g2);
+
+        // closed form
+        let (b1, b2, eps, lr) = (BETA1, BETA2, EPS, 0.1f32);
+        let mut m = 0.0f32;
+        let mut v = 0.0f32;
+        let mut p = 1.0f32;
+        for (t, g) in [(1.0f32, 0.5f32), (2.0, -0.25)] {
+            m = b1 * m + (1.0 - b1) * g;
+            v = b2 * v + (1.0 - b2) * g * g;
+            let mhat = m / (1.0 - b1.powf(t));
+            let vhat = v / (1.0 - b2.powf(t));
+            p -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        assert!((params[0].data()[0] - p).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (x - 3)²
+        let mut params = vec![Tensor::from_vec(&[1, 1], vec![0.0])];
+        let mut opt = Adam::new(&params, 0.1);
+        for _ in 0..300 {
+            let x = params[0].data()[0];
+            let grads = vec![Tensor::from_vec(&[1, 1], vec![2.0 * (x - 3.0)])];
+            opt.step(&mut params, &grads);
+        }
+        assert!((params[0].data()[0] - 3.0).abs() < 0.05);
+    }
+}

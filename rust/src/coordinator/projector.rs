@@ -1,0 +1,301 @@
+//! Projector devices: who computes `B·e`.
+//!
+//! The paper's comparison hinges on swapping this one component:
+//!
+//! * [`NativeOpticalProjector`] — the simulated OPU physics in rust
+//!   (default optical device; supports runtime noise sweeps).
+//! * [`HloOpticalProjector`] — the *same* physics through the AOT
+//!   `opu_project` artifact (JAX/Pallas twin): used to prove the twins
+//!   agree and to keep the whole numeric path in XLA when desired.
+//! * [`DigitalProjector`] — exact `e @ B` on silicon (the paper's GPU
+//!   rows; here host matmul over the same medium quadratures).
+//!
+//! All three expose the same trait so the trainer and the projection
+//! service are device-agnostic, and all three account simulated time.
+
+use anyhow::Result;
+
+use crate::optics::medium::TransmissionMatrix;
+use crate::optics::{OpticalOpu, OpuParams};
+use crate::runtime::Engine;
+use crate::sim::power::GpuModel;
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Pcg64;
+
+/// A device that projects ternary/float error frames through the fixed
+/// random matrix, returning the two quadrature projections.
+///
+/// Note: not `Send` by itself — [`HloOpticalProjector`] holds a PJRT
+/// client (`Rc` internally).  The projection *service* requires
+/// `dyn Projector + Send`; the native and digital devices satisfy it.
+pub trait Projector {
+    /// `[B, d_in]` frames → `(P1, P2)`, each `[B, modes]`.
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)>;
+
+    /// Output modes per quadrature.
+    fn modes(&self) -> usize;
+
+    /// Simulated device-seconds consumed so far.
+    fn sim_seconds(&self) -> f64;
+
+    /// Simulated energy in joules.
+    fn energy_joules(&self) -> f64;
+
+    /// Human tag for logs/metrics.
+    fn kind(&self) -> &'static str;
+
+    /// Whether frames must be ternary (optical SLM) or may be float.
+    fn requires_ternary(&self) -> bool {
+        true
+    }
+}
+
+/// Simulated OPU, rust-native physics.
+pub struct NativeOpticalProjector {
+    opu: OpticalOpu,
+}
+
+impl NativeOpticalProjector {
+    pub fn new(params: OpuParams, medium: TransmissionMatrix, noise_seed: u64) -> Self {
+        NativeOpticalProjector {
+            opu: OpticalOpu::new(params, medium, noise_seed),
+        }
+    }
+
+    pub fn opu_mut(&mut self) -> &mut OpticalOpu {
+        &mut self.opu
+    }
+
+    pub fn opu(&self) -> &OpticalOpu {
+        &self.opu
+    }
+}
+
+impl Projector for NativeOpticalProjector {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        self.opu.project(frames)
+    }
+
+    fn modes(&self) -> usize {
+        self.opu.modes()
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.opu.stats().sim_seconds
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.opu.stats().energy_joules
+    }
+
+    fn kind(&self) -> &'static str {
+        "optical-native"
+    }
+}
+
+/// Simulated OPU through the `opu_project` HLO artifact.
+///
+/// The rust side supplies the camera-noise draws (so the artifact stays
+/// a pure function and runs are reproducible) and charges the same frame
+/// clock as the native device.
+pub struct HloOpticalProjector {
+    engine: Engine,
+    config: String,
+    medium: TransmissionMatrix,
+    params: OpuParams,
+    noise_rng: Pcg64,
+    frames_done: u64,
+    batch: usize,
+    cosk: Tensor,
+    sink: Tensor,
+}
+
+impl HloOpticalProjector {
+    pub fn new(
+        mut engine: Engine,
+        config: &str,
+        medium: TransmissionMatrix,
+        noise_seed: u64,
+    ) -> Result<Self> {
+        let params = engine.manifest().opu;
+        let batch = engine.manifest().config(config)?.batch;
+        engine.prepare("opu_project", config)?;
+        // Carrier tables are runtime inputs to the artifact (large
+        // constants do not survive the HLO-text interchange).
+        let npix = params.oversample * medium.modes;
+        let mut cosk = Tensor::zeros(&[1, npix]);
+        let mut sink = Tensor::zeros(&[1, npix]);
+        for p in 0..npix {
+            let ph = params.carrier * p as f64;
+            cosk.data_mut()[p] = ph.cos() as f32;
+            sink.data_mut()[p] = ph.sin() as f32;
+        }
+        Ok(HloOpticalProjector {
+            engine,
+            config: config.to_string(),
+            medium,
+            params,
+            noise_rng: Pcg64::new(noise_seed, 0xb10),
+            frames_done: 0,
+            batch,
+            cosk,
+            sink,
+        })
+    }
+}
+
+impl Projector for HloOpticalProjector {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        let b = frames.rows();
+        anyhow::ensure!(
+            b == self.batch,
+            "opu_project artifact is compiled for batch {}, got {b}",
+            self.batch
+        );
+        let npix = self.params.oversample * self.medium.modes;
+        let mut n1 = Tensor::zeros(&[b, npix]);
+        let mut n2 = Tensor::zeros(&[b, npix]);
+        self.noise_rng.fill_normal(n1.data_mut());
+        self.noise_rng.fill_normal(n2.data_mut());
+        let n_ph = Tensor::scalar(self.params.n_ph);
+        let sig = Tensor::scalar(self.params.read_sigma);
+        let outs = self.engine.call(
+            "opu_project",
+            &self.config,
+            &[
+                frames,
+                &self.medium.b_re,
+                &self.medium.b_im,
+                &n1,
+                &n2,
+                &n_ph,
+                &sig,
+                &self.cosk,
+                &self.sink,
+            ],
+        )?;
+        self.frames_done += b as u64;
+        let mut it = outs.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap()))
+    }
+
+    fn modes(&self) -> usize {
+        self.medium.modes
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.frames_done as f64 / self.params.frame_rate_hz
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.sim_seconds() * self.params.power_watts
+    }
+
+    fn kind(&self) -> &'static str {
+        "optical-hlo"
+    }
+}
+
+/// Exact digital projection (the GPU baseline's math, host execution,
+/// GPU timing model for the simulated clock).
+pub struct DigitalProjector {
+    medium: TransmissionMatrix,
+    gpu: GpuModel,
+    projections: u64,
+    batches: u64,
+    batch_hint: usize,
+}
+
+impl DigitalProjector {
+    pub fn new(medium: TransmissionMatrix) -> Self {
+        DigitalProjector {
+            medium,
+            gpu: GpuModel::v100(),
+            projections: 0,
+            batches: 0,
+            batch_hint: 1,
+        }
+    }
+
+    pub fn medium(&self) -> &TransmissionMatrix {
+        &self.medium
+    }
+}
+
+impl Projector for DigitalProjector {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        let p1 = matmul(frames, &self.medium.b_re);
+        let p2 = matmul(frames, &self.medium.b_im);
+        self.projections += frames.rows() as u64;
+        self.batches += 1;
+        self.batch_hint = frames.rows();
+        Ok((p1, p2))
+    }
+
+    fn modes(&self) -> usize {
+        self.medium.modes
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        // GPU-model time for the projections done so far, batched as the
+        // caller batched them.
+        self.batches as f64
+            * self
+                .gpu
+                .seconds(self.medium.d_in, 2 * self.medium.modes, self.batch_hint)
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.sim_seconds() * self.gpu.power_watts
+    }
+
+    fn kind(&self) -> &'static str {
+        "digital"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tern(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn digital_is_exact() {
+        let medium = TransmissionMatrix::sample(3, 10, 32);
+        let mut proj = DigitalProjector::new(medium.clone());
+        let e = tern(4, 10, 1);
+        let (p1, p2) = proj.project(&e).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re));
+        assert_eq!(p2, matmul(&e, &medium.b_im));
+        assert!(proj.sim_seconds() > 0.0);
+    }
+
+    #[test]
+    fn native_optical_approximates_digital() {
+        let medium = TransmissionMatrix::sample(3, 10, 64);
+        let mut opt =
+            NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 5);
+        let mut dig = DigitalProjector::new(medium);
+        let e = tern(8, 10, 2);
+        let (o1, _) = opt.project(&e).unwrap();
+        let (d1, _) = dig.project(&e).unwrap();
+        let c = crate::util::stats::correlation(
+            &o1.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            &d1.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        assert!(c > 0.97, "correlation {c}");
+        // optical charges the frame clock
+        assert!((opt.sim_seconds() - 8.0 / 1500.0).abs() < 1e-9);
+    }
+}

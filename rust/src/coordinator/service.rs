@@ -1,0 +1,354 @@
+//! The projection service: one shared OPU, many clients.
+//!
+//! The OPU is a single physical device with a frame clock; everything in
+//! the process that needs a random projection — each ensemble member's
+//! trainer, alignment probes, calibration — goes through this service.
+//! A dispatcher thread drains the request queue and packs pending
+//! requests into *shared device batches* (dynamic batching, the same
+//! motif as vLLM's router at a different timescale: here the deadline is
+//! the next camera frame).
+//!
+//! Invariants (property-tested below and in `rust/tests/`):
+//! * every submitted frame is projected exactly once (no loss, no dup);
+//! * rows within a request keep their order;
+//! * replies are routed to the submitting client only;
+//! * a batch never exceeds the configured device capacity.
+
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::exec::oneshot;
+use crate::exec::queue::BoundedQueue;
+use crate::metrics::Registry;
+use crate::tensor::Tensor;
+
+use super::projector::Projector;
+
+/// One projection request: a few frames from one client.
+struct Request {
+    frames: Tensor,
+    reply: oneshot::Sender<Result<(Tensor, Tensor), String>>,
+}
+
+/// Service configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Max frames packed into one device call (SLM sequence depth).
+    pub max_batch: usize,
+    /// Request queue capacity (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 128,
+            queue_depth: 256,
+        }
+    }
+}
+
+/// Handle for submitting projection requests.
+#[derive(Clone)]
+pub struct ProjectionClient {
+    queue: BoundedQueue<Request>,
+    d_in: usize,
+}
+
+impl ProjectionClient {
+    /// Submit frames `[B, d_in]`; returns a future for `(P1, P2)`.
+    pub fn submit(
+        &self,
+        frames: Tensor,
+    ) -> Result<oneshot::Reply<Result<(Tensor, Tensor), String>>> {
+        anyhow::ensure!(
+            frames.shape().len() == 2 && frames.cols() == self.d_in,
+            "projection frames must be [b, {}], got {:?}",
+            self.d_in,
+            frames.shape()
+        );
+        anyhow::ensure!(frames.rows() > 0, "empty projection request");
+        let (tx, rx) = oneshot::channel();
+        self.queue
+            .push(Request { frames, reply: tx })
+            .map_err(|_| anyhow::anyhow!("projection service is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn project(&self, frames: Tensor) -> Result<(Tensor, Tensor)> {
+        let reply = self.submit(frames)?;
+        match reply.wait() {
+            Some(Ok(pair)) => Ok(pair),
+            Some(Err(e)) => anyhow::bail!("device error: {e}"),
+            None => anyhow::bail!("projection service dropped the request"),
+        }
+    }
+}
+
+/// The running service (owns the dispatcher thread and the device).
+pub struct ProjectionService {
+    queue: BoundedQueue<Request>,
+    dispatcher: Option<JoinHandle<()>>,
+    d_in: usize,
+}
+
+impl ProjectionService {
+    /// Start a service over a device.  `d_in` is the frame width.
+    pub fn start(
+        mut device: Box<dyn Projector + Send>,
+        d_in: usize,
+        cfg: ServiceConfig,
+        metrics: Registry,
+    ) -> ProjectionService {
+        let queue: BoundedQueue<Request> = BoundedQueue::new(cfg.queue_depth);
+        let q2 = queue.clone();
+        let frames_ctr = metrics.counter("service_frames");
+        let batches_ctr = metrics.counter("service_batches");
+        let occupancy = metrics.histogram("service_batch_occupancy");
+        let dispatcher = std::thread::Builder::new()
+            .name("litl-projection-service".into())
+            .spawn(move || {
+                // Drain loop: block for the first request, then
+                // opportunistically pack more pending ones (dynamic
+                // batching up to max_batch frames).
+                while let Some(first) = q2.pop() {
+                    let mut batch: Vec<Request> = vec![first];
+                    let mut total: usize = batch[0].frames.rows();
+                    while total < cfg.max_batch {
+                        match q2.try_pop() {
+                            Some(req) if total + req.frames.rows() <= cfg.max_batch => {
+                                total += req.frames.rows();
+                                batch.push(req);
+                            }
+                            Some(req) => {
+                                // Doesn't fit this frame sequence: flush,
+                                // then start the next batch with it
+                                // (re-queueing would reorder).
+                                frames_ctr.add(total as u64);
+                                batches_ctr.inc();
+                                Self::run_batch(&mut *device, batch, &occupancy);
+                                batch = vec![req];
+                                total = batch[0].frames.rows();
+                            }
+                            None => break,
+                        }
+                    }
+                    frames_ctr.add(total as u64);
+                    batches_ctr.inc();
+                    Self::run_batch(&mut *device, batch, &occupancy);
+                }
+            })
+            .expect("spawn dispatcher");
+        ProjectionService {
+            queue,
+            dispatcher: Some(dispatcher),
+            d_in,
+        }
+    }
+
+    fn run_batch(
+        device: &mut dyn Projector,
+        batch: Vec<Request>,
+        occupancy: &crate::metrics::Histogram,
+    ) {
+        let rows: usize = batch.iter().map(|r| r.frames.rows()).sum();
+        occupancy.observe(rows as f64);
+        let d_in = batch[0].frames.cols();
+        // Pack all requests into one device tensor.
+        let mut packed = Tensor::zeros(&[rows, d_in]);
+        let mut at = 0usize;
+        for req in &batch {
+            let n = req.frames.rows() * d_in;
+            packed.data_mut()[at * d_in..at * d_in + n]
+                .copy_from_slice(req.frames.data());
+            at += req.frames.rows();
+        }
+        match device.project(&packed) {
+            Ok((p1, p2)) => {
+                // Slice replies back out, preserving request row order.
+                let modes = device.modes();
+                let mut row = 0usize;
+                for req in batch {
+                    let b = req.frames.rows();
+                    let take = |src: &Tensor| {
+                        Tensor::from_vec(
+                            &[b, modes],
+                            src.data()[row * modes..(row + b) * modes].to_vec(),
+                        )
+                    };
+                    req.reply.send(Ok((take(&p1), take(&p2))));
+                    row += b;
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in batch {
+                    req.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    /// Create a client handle.
+    pub fn client(&self) -> ProjectionClient {
+        ProjectionClient {
+            queue: self.queue.clone(),
+            d_in: self.d_in,
+        }
+    }
+
+    /// Stop accepting requests and join the dispatcher.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ProjectionService {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::projector::DigitalProjector;
+    use crate::optics::medium::TransmissionMatrix;
+    use crate::tensor::matmul;
+    use crate::util::rng::Pcg64;
+
+    fn service(modes: usize, max_batch: usize) -> (ProjectionService, TransmissionMatrix) {
+        let medium = TransmissionMatrix::sample(11, 10, modes);
+        let dev = Box::new(DigitalProjector::new(medium.clone()));
+        let svc = ProjectionService::start(
+            dev,
+            10,
+            ServiceConfig {
+                max_batch,
+                queue_depth: 64,
+            },
+            Registry::new(),
+        );
+        (svc, medium)
+    }
+
+    fn tern(rows: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * 10)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, 10], data)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (svc, medium) = service(16, 32);
+        let client = svc.client();
+        let e = tern(4, 1);
+        let (p1, _) = client.project(e.clone()).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_answers() {
+        let (svc, medium) = service(8, 16);
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let client = svc.client();
+                let medium = medium.clone();
+                std::thread::spawn(move || {
+                    for j in 0..5 {
+                        let e = tern(3, 100 + i * 10 + j);
+                        let (p1, p2) = client.project(e.clone()).unwrap();
+                        assert_eq!(p1, matmul(&e, &medium.b_re), "client {i} req {j}");
+                        assert_eq!(p2, matmul(&e, &medium.b_im));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_politely() {
+        let (svc, _) = service(8, 16);
+        let client = svc.client();
+        let bad = Tensor::zeros(&[2, 7]); // wrong width
+        assert!(client.submit(bad).is_err());
+        let empty = Tensor::zeros(&[0, 10]);
+        assert!(client.submit(empty).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let (svc, _) = service(8, 16);
+        let client = svc.client();
+        svc.shutdown();
+        assert!(client.project(tern(1, 0)).is_err());
+    }
+
+    #[test]
+    fn device_error_propagates_to_all_in_batch() {
+        // Non-ternary frames through an optical device error out.
+        let medium = TransmissionMatrix::sample(11, 10, 8);
+        let dev = Box::new(super::super::projector::NativeOpticalProjector::new(
+            crate::optics::OpuParams::default(),
+            medium,
+            1,
+        ));
+        let svc = ProjectionService::start(
+            dev,
+            10,
+            ServiceConfig::default(),
+            Registry::new(),
+        );
+        let client = svc.client();
+        let mut bad = tern(2, 3);
+        bad.data_mut()[0] = 0.5;
+        let err = client.project(bad).unwrap_err().to_string();
+        assert!(err.contains("device error"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_observe_batching() {
+        let medium = TransmissionMatrix::sample(11, 10, 8);
+        let dev = Box::new(DigitalProjector::new(medium));
+        let reg = Registry::new();
+        let svc = ProjectionService::start(
+            dev,
+            10,
+            ServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+            },
+            reg.clone(),
+        );
+        let client = svc.client();
+        // Burst of requests: dispatcher should pack at least some.
+        let replies: Vec<_> = (0..10)
+            .map(|i| client.submit(tern(4, i)).unwrap())
+            .collect();
+        for r in replies {
+            r.wait().unwrap().unwrap();
+        }
+        svc.shutdown();
+        let snap = reg.snapshot();
+        assert_eq!(snap["service_frames"], 40.0);
+        assert!(snap["service_batches"] >= 1.0);
+        assert!(snap["service_batches"] <= 10.0);
+    }
+}

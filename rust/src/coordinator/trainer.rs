@@ -1,0 +1,398 @@
+//! The training loop over the AOT artifacts (the paper's experiment).
+//!
+//! One [`Trainer`] = one run of §III: a 784→H→H→10 tanh MLP trained with
+//! Adam for N epochs under one of four feedback algorithms:
+//!
+//! | algo          | feedback path                                 | artifacts used |
+//! |---------------|-----------------------------------------------|----------------|
+//! | `bp`          | true gradients (Eq. 2)                        | `bp_step`      |
+//! | `dfa-float`   | digital `B·e`, float error                    | `dfa_digital_step` (θ<0) |
+//! | `dfa-ternary` | digital `B·e`, Eq. 4 ternary error            | `dfa_digital_step` (θ=0.1) |
+//! | `optical`     | simulated OPU: light in the loop              | `fwd_train` + projector + `dfa_apply` |
+//!
+//! The optical path is the paper's contribution: the forward pass and
+//! the weight update run in XLA ("silicon"), while the error projection
+//! leaves the digital world through a [`Projector`] device.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Algo, ProjectorKind, TrainConfig};
+use crate::data::{Dataset, Split};
+use crate::metrics::{CsvWriter, Registry};
+use crate::optics::medium::TransmissionMatrix;
+use crate::runtime::{Engine, Model};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+use super::projector::{
+    DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector,
+};
+
+/// Result of one evaluation pass.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub loss: f64,
+    pub samples: usize,
+}
+
+/// Per-epoch record.
+#[derive(Clone, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub mean_loss: f64,
+    pub steps: u64,
+    pub wall_seconds: f64,
+    pub eval: Option<EvalResult>,
+}
+
+/// Full-run report (what EXPERIMENTS.md records).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub algo: Algo,
+    pub lr: f32,
+    pub epochs: Vec<EpochStats>,
+    pub final_eval: EvalResult,
+    pub wall_seconds: f64,
+    pub sim_device_seconds: f64,
+    pub device_energy_joules: f64,
+    pub frames: u64,
+    pub num_params: usize,
+}
+
+impl TrainReport {
+    pub fn final_accuracy_pct(&self) -> f64 {
+        self.final_eval.accuracy * 100.0
+    }
+}
+
+/// The hybrid training coordinator.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    engine: Engine,
+    model: Model,
+    medium: TransmissionMatrix,
+    projector: Option<Box<dyn Projector>>,
+    metrics: Registry,
+    rng: Pcg64,
+    step: u64,
+    // Reused scalar tensors (hot path: no per-step allocation for these).
+    lr_t: Tensor,
+    theta_t: Tensor,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Self> {
+        Self::with_metrics(cfg, Registry::new())
+    }
+
+    pub fn with_metrics(cfg: TrainConfig, metrics: Registry) -> Result<Self> {
+        let engine = Engine::new(&cfg.artifacts_dir)?;
+        let model = Model::init(&engine, &cfg.artifact_config, cfg.seed)?;
+        let bc = engine.manifest().config(&cfg.artifact_config)?.clone();
+        let err_dim = engine.manifest().err_dim;
+        // The fixed random feedback matrices ARE the optical medium: the
+        // digital baselines project through the same B quadratures, so
+        // "optical vs digital" differs only by the physics (DESIGN.md §2).
+        let medium = TransmissionMatrix::sample(cfg.seed ^ 0xB, err_dim, bc.modes);
+
+        let projector: Option<Box<dyn Projector>> = match cfg.algo {
+            Algo::Optical => Some(match cfg.projector {
+                ProjectorKind::OpticalNative => {
+                    let mut opu_params = engine.manifest().opu;
+                    if let Some(n_ph) = cfg.n_ph {
+                        opu_params.n_ph = n_ph;
+                    }
+                    if let Some(rs) = cfg.read_sigma {
+                        opu_params.read_sigma = rs;
+                    }
+                    Box::new(NativeOpticalProjector::new(
+                        opu_params,
+                        medium.clone(),
+                        cfg.seed ^ 0xF00,
+                    ))
+                }
+                ProjectorKind::OpticalHlo => {
+                    let twin_engine = Engine::new(&cfg.artifacts_dir)?;
+                    Box::new(HloOpticalProjector::new(
+                        twin_engine,
+                        &cfg.artifact_config,
+                        medium.clone(),
+                        cfg.seed ^ 0xF00,
+                    )?)
+                }
+                ProjectorKind::Digital => {
+                    Box::new(DigitalProjector::new(medium.clone()))
+                }
+            }),
+            _ => None,
+        };
+
+        let theta = match cfg.algo {
+            Algo::DfaFloat => -1.0,
+            _ => cfg.theta,
+        };
+        Ok(Trainer {
+            rng: Pcg64::new(cfg.seed ^ 0xDA7A, 1),
+            lr_t: Tensor::scalar(cfg.lr),
+            theta_t: Tensor::scalar(theta),
+            engine,
+            model,
+            medium,
+            projector,
+            metrics,
+            step: 0,
+            cfg,
+        })
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    pub fn medium(&self) -> &TransmissionMatrix {
+        &self.medium
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// Pre-compile every artifact this run will call (so the first step
+    /// isn't a compile stall).
+    pub fn warmup(&mut self) -> Result<()> {
+        let c = self.cfg.artifact_config.clone();
+        match self.cfg.algo {
+            Algo::Bp => self.engine.prepare("bp_step", &c)?,
+            Algo::DfaFloat | Algo::DfaTernary => {
+                self.engine.prepare("dfa_digital_step", &c)?
+            }
+            Algo::Optical => {
+                self.engine.prepare("fwd_train", &c)?;
+                self.engine.prepare("dfa_apply", &c)?;
+            }
+        }
+        self.engine.prepare("eval_batch", &c)?;
+        Ok(())
+    }
+
+    /// One training step on a batch; returns the loss.
+    pub fn train_step(&mut self, x: &Tensor, yoh: &Tensor) -> Result<f32> {
+        self.model.t += 1.0;
+        self.step += 1;
+        let t_t = Tensor::scalar(self.model.t);
+        let cfgname = self.cfg.artifact_config.clone();
+        let loss = match self.cfg.algo {
+            Algo::Bp => {
+                let mut args = self.model.state_refs();
+                args.extend([&t_t, &self.lr_t, x, yoh]);
+                let outs = self.engine.call("bp_step", &cfgname, &args)?;
+                let rest = self.model.update_state(outs)?;
+                rest[0].data()[0]
+            }
+            Algo::DfaFloat | Algo::DfaTernary => {
+                let mut args = self.model.state_refs();
+                args.extend([
+                    &t_t,
+                    &self.lr_t,
+                    x,
+                    yoh,
+                    &self.medium.b_re,
+                    &self.medium.b_im,
+                    &self.theta_t,
+                ]);
+                let outs = self.engine.call("dfa_digital_step", &cfgname, &args)?;
+                let rest = self.model.update_state(outs)?;
+                rest[0].data()[0]
+            }
+            Algo::Optical => {
+                // (1) digital forward → error (+ Eq. 4 ternarization)
+                let t0 = Instant::now();
+                let mut args: Vec<&Tensor> = self.model.params.iter().collect();
+                args.extend([x, yoh, &self.theta_t]);
+                let outs = self.engine.call("fwd_train", &cfgname, &args)?;
+                let [h1, h2, e, e_t, loss]: [Tensor; 5] = outs
+                    .try_into()
+                    .map_err(|_| anyhow::anyhow!("fwd_train output arity"))?;
+                self.metrics
+                    .histogram("phase_fwd_s")
+                    .observe(t0.elapsed().as_secs_f64());
+                // (2) light in the loop: the OPU projects the error
+                let t1 = Instant::now();
+                let projector =
+                    self.projector.as_mut().context("optical algo needs projector")?;
+                let (p1, p2) = projector.project(&e_t)?;
+                self.metrics
+                    .histogram("phase_project_s")
+                    .observe(t1.elapsed().as_secs_f64());
+                // (3) digital fused DFA + Adam update
+                let t2 = Instant::now();
+                let mut args = self.model.state_refs();
+                args.extend([&t_t, &self.lr_t, x, &h1, &h2, &e, &p1, &p2]);
+                let outs = self.engine.call("dfa_apply", &cfgname, &args)?;
+                self.model.update_state(outs)?;
+                self.metrics
+                    .histogram("phase_apply_s")
+                    .observe(t2.elapsed().as_secs_f64());
+                loss.data()[0]
+            }
+        };
+        self.metrics.gauge("train_loss").set(loss as f64);
+        self.metrics.counter("train_steps").inc();
+        Ok(loss)
+    }
+
+    /// Evaluate on a split using the `eval_batch` artifact.
+    pub fn evaluate(&mut self, ds: &Dataset, split: Split) -> Result<EvalResult> {
+        let cfgname = self.cfg.artifact_config.clone();
+        let be = self.model.eval_batch;
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        let mut batches = 0usize;
+        for idxs in ds.eval_batches(split, be) {
+            let (x, yoh) = ds.gather(split, &idxs);
+            let mut args: Vec<&Tensor> = self.model.params.iter().collect();
+            args.extend([&x, &yoh]);
+            let outs = self.engine.call("eval_batch", &cfgname, &args)?;
+            correct += outs[0].data()[0] as f64;
+            loss_sum += outs[1].data()[0] as f64;
+            batches += 1;
+        }
+        let samples = batches * be; // includes wrap padding on the tail
+        Ok(EvalResult {
+            accuracy: correct / samples as f64,
+            loss: loss_sum / batches as f64,
+            samples,
+        })
+    }
+
+    /// Full run: epochs × batches, periodic eval, optional CSV logging.
+    pub fn run(&mut self, ds: &Dataset) -> Result<TrainReport> {
+        self.warmup()?;
+        let batch = self.model.batch;
+        let mut csv = match &self.cfg.out_dir {
+            Some(dir) => Some(CsvWriter::create(
+                &format!("{dir}/loss_{}.csv", self.cfg.algo.name()),
+                &["step", "epoch", "loss", "wall_s", "sim_device_s"],
+            )?),
+            None => None,
+        };
+        let run_start = Instant::now();
+        let mut epochs = Vec::new();
+        let step_hist = self.metrics.histogram("step_seconds");
+
+        for epoch in 0..self.cfg.epochs {
+            let ep_start = Instant::now();
+            let mut loss_sum = 0.0f64;
+            let mut steps = 0u64;
+            let mut shuffle_rng = self.rng.split();
+            for (x, yoh) in ds.batches(Split::Train, batch, &mut shuffle_rng) {
+                let t0 = Instant::now();
+                let loss = self.train_step(&x, &yoh)?;
+                step_hist.observe(t0.elapsed().as_secs_f64());
+                loss_sum += loss as f64;
+                steps += 1;
+                if let Some(csv) = csv.as_mut() {
+                    csv.row(&[
+                        self.step as f64,
+                        epoch as f64,
+                        loss as f64,
+                        run_start.elapsed().as_secs_f64(),
+                        self.sim_device_seconds(),
+                    ])?;
+                }
+                if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every as u64 == 0
+                {
+                    let ev = self.evaluate(ds, Split::Test)?;
+                    log::info!(
+                        "step {}: loss={loss:.4} test_acc={:.2}%",
+                        self.step,
+                        ev.accuracy * 100.0
+                    );
+                }
+            }
+            let eval = Some(self.evaluate(ds, Split::Test)?);
+            let stats = EpochStats {
+                epoch,
+                mean_loss: loss_sum / steps.max(1) as f64,
+                steps,
+                wall_seconds: ep_start.elapsed().as_secs_f64(),
+                eval,
+            };
+            log::info!(
+                "epoch {epoch}: loss={:.4} acc={:.2}% ({} steps, {:.1}s)",
+                stats.mean_loss,
+                stats.eval.unwrap().accuracy * 100.0,
+                steps,
+                stats.wall_seconds
+            );
+            epochs.push(stats);
+        }
+        if let Some(csv) = csv.as_mut() {
+            csv.flush()?;
+        }
+
+        let final_eval = self.evaluate(ds, Split::Test)?;
+        Ok(TrainReport {
+            algo: self.cfg.algo,
+            lr: self.cfg.lr,
+            epochs,
+            final_eval,
+            wall_seconds: run_start.elapsed().as_secs_f64(),
+            sim_device_seconds: self.sim_device_seconds(),
+            device_energy_joules: self
+                .projector
+                .as_ref()
+                .map(|p| p.energy_joules())
+                .unwrap_or(0.0),
+            frames: self.step * batch as u64,
+            num_params: self.model.num_params(),
+        })
+    }
+
+    /// Simulated projector-device seconds (0 for fused digital paths).
+    pub fn sim_device_seconds(&self) -> f64 {
+        self.projector.as_ref().map(|p| p.sim_seconds()).unwrap_or(0.0)
+    }
+
+    /// Save model + optimizer state.
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        let tensors = self.model.state_refs();
+        super::checkpoint::save(path, &tensors, self.model.t)
+    }
+
+    /// Restore model + optimizer state.
+    pub fn load_checkpoint(&mut self, path: &str) -> Result<()> {
+        let (tensors, t) = super::checkpoint::load(path)?;
+        anyhow::ensure!(
+            tensors.len() == 18,
+            "checkpoint has {} tensors, expected 18",
+            tensors.len()
+        );
+        let mut it = tensors.into_iter();
+        for slot in self
+            .model
+            .params
+            .iter_mut()
+            .chain(self.model.m.iter_mut())
+            .chain(self.model.v.iter_mut())
+        {
+            let t = it.next().unwrap();
+            anyhow::ensure!(
+                t.shape() == slot.shape(),
+                "checkpoint shape {:?} vs model {:?}",
+                t.shape(),
+                slot.shape()
+            );
+            *slot = t;
+        }
+        self.model.t = t;
+        Ok(())
+    }
+}

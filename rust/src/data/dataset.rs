@@ -1,0 +1,210 @@
+//! Dataset container and batch iteration.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Which split of a dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// An in-memory image-classification dataset (f32 pixels in [0,1]).
+pub struct Dataset {
+    pub num_classes: usize,
+    pub dim: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<u8>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<u8>,
+}
+
+impl Dataset {
+    /// Standardize pixels in place: `x → (x - mean)/std` with scalar
+    /// moments computed on the TRAIN split (the usual MNIST recipe,
+    /// mean≈0.13/std≈0.31).  Centering matters for DFA: all-positive
+    /// inputs give the ternary feedback a rank-1 common mode that drives
+    /// the first tanh layer into saturation (see EXPERIMENTS.md §E5).
+    pub fn normalize(&mut self) -> (f32, f32) {
+        let n = self.train_x.len().max(1);
+        let mean = self.train_x.iter().sum::<f32>() / n as f32;
+        let var = self
+            .train_x
+            .iter()
+            .map(|&v| (v - mean) * (v - mean))
+            .sum::<f32>()
+            / n as f32;
+        let std = var.sqrt().max(1e-6);
+        for v in self.train_x.iter_mut().chain(self.test_x.iter_mut()) {
+            *v = (*v - mean) / std;
+        }
+        (mean, std)
+    }
+
+    pub fn len(&self, split: Split) -> usize {
+        match split {
+            Split::Train => self.train_y.len(),
+            Split::Test => self.test_y.len(),
+        }
+    }
+
+    pub fn is_empty(&self, split: Split) -> bool {
+        self.len(split) == 0
+    }
+
+    fn xy(&self, split: Split) -> (&[f32], &[u8]) {
+        match split {
+            Split::Train => (&self.train_x, &self.train_y),
+            Split::Test => (&self.test_x, &self.test_y),
+        }
+    }
+
+    /// Materialize one batch by (wrapped) indices: `(X [b, dim], one-hot
+    /// Y [b, classes])`.
+    pub fn gather(&self, split: Split, indices: &[usize]) -> (Tensor, Tensor) {
+        let (xs, ys) = self.xy(split);
+        let n = ys.len();
+        let b = indices.len();
+        let mut x = vec![0.0f32; b * self.dim];
+        let mut y = vec![0.0f32; b * self.num_classes];
+        for (row, &idx) in indices.iter().enumerate() {
+            let idx = idx % n;
+            x[row * self.dim..(row + 1) * self.dim]
+                .copy_from_slice(&xs[idx * self.dim..(idx + 1) * self.dim]);
+            y[row * self.num_classes + ys[idx] as usize] = 1.0;
+        }
+        (
+            Tensor::from_vec(&[b, self.dim], x),
+            Tensor::from_vec(&[b, self.num_classes], y),
+        )
+    }
+
+    /// Shuffled epoch iterator over fixed-size batches (drops the ragged
+    /// tail — artifact shapes are static).
+    pub fn batches(&self, split: Split, batch: usize, rng: &mut Pcg64) -> BatchIter<'_> {
+        let mut order: Vec<usize> = (0..self.len(split)).collect();
+        rng.shuffle(&mut order);
+        BatchIter {
+            ds: self,
+            split,
+            order,
+            batch,
+            pos: 0,
+        }
+    }
+
+    /// Sequential (unshuffled) batches, wrapping the tail to full size —
+    /// used for evaluation where every sample must appear at least once.
+    pub fn eval_batches(&self, split: Split, batch: usize) -> Vec<Vec<usize>> {
+        let n = self.len(split);
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let idxs: Vec<usize> = (start..start + batch).map(|i| i % n).collect();
+            out.push(idxs);
+            start += batch;
+        }
+        out
+    }
+}
+
+/// Iterator over shuffled fixed-size batches of one split.
+pub struct BatchIter<'a> {
+    ds: &'a Dataset,
+    split: Split,
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl Iterator for BatchIter<'_> {
+    type Item = (Tensor, Tensor);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let idxs = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        Some(self.ds.gather(self.split, idxs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        // 10 samples, dim 4, 3 classes; pixel = sample index / 10.
+        let n = 10;
+        let dim = 4;
+        Dataset {
+            num_classes: 3,
+            dim,
+            train_x: (0..n * dim).map(|i| (i / dim) as f32 / 10.0).collect(),
+            train_y: (0..n).map(|i| (i % 3) as u8).collect(),
+            test_x: vec![0.0; 2 * dim],
+            test_y: vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn gather_shapes_and_onehot() {
+        let ds = toy();
+        let (x, y) = ds.gather(Split::Train, &[0, 3, 7]);
+        assert_eq!(x.shape(), &[3, 4]);
+        assert_eq!(y.shape(), &[3, 3]);
+        // row 1 = sample 3 → class 0
+        assert_eq!(y.row(1), &[1.0, 0.0, 0.0]);
+        for r in 0..3 {
+            assert_eq!(y.row(r).iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn batches_cover_epoch_without_repeats() {
+        let ds = toy();
+        let mut rng = Pcg64::seeded(0);
+        let mut seen: Vec<usize> = Vec::new();
+        for (x, _) in ds.batches(Split::Train, 3, &mut rng) {
+            for r in 0..3 {
+                // recover sample index from pixel value
+                seen.push((x.row(r)[0] * 10.0).round() as usize);
+            }
+        }
+        // 10 samples / batch 3 → 3 batches (tail dropped), all distinct.
+        assert_eq!(seen.len(), 9);
+        let mut sorted = seen.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 9);
+    }
+
+    #[test]
+    fn batches_shuffle_differs_across_epochs() {
+        let ds = toy();
+        let mut rng = Pcg64::seeded(1);
+        let e1: Vec<f32> = ds
+            .batches(Split::Train, 3, &mut rng)
+            .flat_map(|(x, _)| x.into_data())
+            .collect();
+        let e2: Vec<f32> = ds
+            .batches(Split::Train, 3, &mut rng)
+            .flat_map(|(x, _)| x.into_data())
+            .collect();
+        assert_ne!(e1, e2);
+    }
+
+    #[test]
+    fn eval_batches_cover_all_with_wrap() {
+        let ds = toy();
+        let batches = ds.eval_batches(Split::Train, 4);
+        assert_eq!(batches.len(), 3); // ceil(10/4)
+        assert!(batches.iter().all(|b| b.len() == 4));
+        let mut seen: Vec<usize> = batches.concat();
+        seen.sort();
+        seen.dedup();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+}

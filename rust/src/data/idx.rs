@@ -1,0 +1,203 @@
+//! IDX file format loader (the MNIST distribution format).
+//!
+//! Handles both raw and gzip-compressed files (`train-images-idx3-ubyte`
+//! or `train-images-idx3-ubyte.gz`).  Format: big-endian magic
+//! `0x0000,dtype,ndim`, then one u32 per dimension, then row-major data.
+//! MNIST uses dtype 0x08 (u8), images ndim=3, labels ndim=1.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use flate2::read::GzDecoder;
+
+use super::dataset::Dataset;
+
+/// Read a (possibly gzipped) file fully into memory.
+fn read_maybe_gz(path: &Path) -> Result<Vec<u8>> {
+    // MNIST filenames contain dots that are not extensions
+    // ("train-images-idx3-ubyte"), so append ".gz" textually.
+    let mut gz_os = path.as_os_str().to_owned();
+    gz_os.push(".gz");
+    let gz_path = std::path::PathBuf::from(gz_os);
+    let (file, gz) = if path.exists() {
+        (File::open(path)?, false)
+    } else if gz_path.exists() {
+        (File::open(&gz_path)?, true)
+    } else {
+        bail!("neither {} nor {} exists", path.display(), gz_path.display());
+    };
+    let mut buf = Vec::new();
+    if gz {
+        GzDecoder::new(file).read_to_end(&mut buf)?;
+    } else {
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+    }
+    Ok(buf)
+}
+
+fn be_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_be_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+/// Parse an IDX buffer into (dims, payload).
+pub fn parse_idx(buf: &[u8]) -> Result<(Vec<usize>, &[u8])> {
+    if buf.len() < 4 {
+        bail!("IDX: truncated header");
+    }
+    if buf[0] != 0 || buf[1] != 0 {
+        bail!("IDX: bad magic {:02x}{:02x}", buf[0], buf[1]);
+    }
+    if buf[2] != 0x08 {
+        bail!("IDX: only u8 payloads supported (dtype 0x{:02x})", buf[2]);
+    }
+    let ndim = buf[3] as usize;
+    let header = 4 + 4 * ndim;
+    if buf.len() < header {
+        bail!("IDX: truncated dims");
+    }
+    let dims: Vec<usize> = (0..ndim)
+        .map(|i| be_u32(buf, 4 + 4 * i) as usize)
+        .collect();
+    let numel: usize = dims.iter().product();
+    if buf.len() < header + numel {
+        bail!(
+            "IDX: payload short: {} < {}",
+            buf.len() - header,
+            numel
+        );
+    }
+    Ok((dims, &buf[header..header + numel]))
+}
+
+fn load_images(path: &Path, limit: usize) -> Result<(usize, Vec<f32>)> {
+    let buf = read_maybe_gz(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let (dims, payload) = parse_idx(&buf)?;
+    if dims.len() != 3 {
+        bail!("images: expected ndim=3, got {dims:?}");
+    }
+    let (n, h, w) = (dims[0].min(limit), dims[1], dims[2]);
+    let dim = h * w;
+    let out = payload[..n * dim]
+        .iter()
+        .map(|&b| b as f32 / 255.0)
+        .collect();
+    Ok((dim, out))
+}
+
+fn load_labels(path: &Path, limit: usize) -> Result<Vec<u8>> {
+    let buf = read_maybe_gz(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let (dims, payload) = parse_idx(&buf)?;
+    if dims.len() != 1 {
+        bail!("labels: expected ndim=1, got {dims:?}");
+    }
+    Ok(payload[..dims[0].min(limit)].to_vec())
+}
+
+/// Load the four MNIST files from `dir`, truncated to the given sizes.
+pub fn load_mnist(dir: &str, train_size: usize, test_size: usize) -> Result<Dataset> {
+    let d = Path::new(dir);
+    let (dim, train_x) =
+        load_images(&d.join("train-images-idx3-ubyte"), train_size)?;
+    let train_y = load_labels(&d.join("train-labels-idx1-ubyte"), train_size)?;
+    let (dim2, test_x) = load_images(&d.join("t10k-images-idx3-ubyte"), test_size)?;
+    let test_y = load_labels(&d.join("t10k-labels-idx1-ubyte"), test_size)?;
+    if dim != dim2 {
+        bail!("train/test image dims differ: {dim} vs {dim2}");
+    }
+    if train_x.len() / dim != train_y.len() || test_x.len() / dim != test_y.len() {
+        bail!("image/label count mismatch");
+    }
+    Ok(Dataset {
+        num_classes: 10,
+        dim,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn idx3(n: usize, h: usize, w: usize, fill: u8) -> Vec<u8> {
+        let mut buf = vec![0, 0, 0x08, 3];
+        for d in [n, h, w] {
+            buf.extend_from_slice(&(d as u32).to_be_bytes());
+        }
+        buf.extend(std::iter::repeat(fill).take(n * h * w));
+        buf
+    }
+
+    fn idx1(labels: &[u8]) -> Vec<u8> {
+        let mut buf = vec![0, 0, 0x08, 1];
+        buf.extend_from_slice(&(labels.len() as u32).to_be_bytes());
+        buf.extend_from_slice(labels);
+        buf
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let buf = idx3(2, 3, 3, 7);
+        let (dims, payload) = parse_idx(&buf).unwrap();
+        assert_eq!(dims, vec![2, 3, 3]);
+        assert_eq!(payload.len(), 18);
+        assert!(payload.iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(parse_idx(&[1, 0, 8, 1]).is_err());
+        assert!(parse_idx(&[0, 0, 9, 1]).is_err());
+        let mut short = idx1(&[1, 2, 3]);
+        short.truncate(short.len() - 1);
+        assert!(parse_idx(&short).is_err());
+    }
+
+    #[test]
+    fn full_mnist_layout_roundtrip() {
+        let dir = std::env::temp_dir().join("litl_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let write = |name: &str, bytes: &[u8]| {
+            let mut f = std::fs::File::create(dir.join(name)).unwrap();
+            f.write_all(bytes).unwrap();
+        };
+        write("train-images-idx3-ubyte", &idx3(5, 28, 28, 128));
+        write("train-labels-idx1-ubyte", &idx1(&[0, 1, 2, 3, 4]));
+        write("t10k-images-idx3-ubyte", &idx3(2, 28, 28, 255));
+        write("t10k-labels-idx1-ubyte", &idx1(&[5, 6]));
+
+        let ds = load_mnist(dir.to_str().unwrap(), usize::MAX, usize::MAX).unwrap();
+        assert_eq!(ds.dim, 784);
+        assert_eq!(ds.train_y, vec![0, 1, 2, 3, 4]);
+        assert_eq!(ds.test_y, vec![5, 6]);
+        assert!((ds.train_x[0] - 128.0 / 255.0).abs() < 1e-6);
+        assert_eq!(ds.test_x[0], 1.0);
+
+        // truncation honored
+        let ds = load_mnist(dir.to_str().unwrap(), 3, 1).unwrap();
+        assert_eq!(ds.train_y.len(), 3);
+        assert_eq!(ds.test_y.len(), 1);
+    }
+
+    #[test]
+    fn gzip_fallback() {
+        let dir = std::env::temp_dir().join("litl_idx_gz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = idx1(&[9, 8, 7]);
+        let f = std::fs::File::create(dir.join("train-labels-idx1-ubyte.gz")).unwrap();
+        let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::fast());
+        enc.write_all(&raw).unwrap();
+        enc.finish().unwrap();
+        let labels =
+            load_labels(&dir.join("train-labels-idx1-ubyte"), usize::MAX).unwrap();
+        assert_eq!(labels, vec![9, 8, 7]);
+    }
+}

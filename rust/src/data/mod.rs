@@ -1,0 +1,44 @@
+//! Data substrate: MNIST loading and an offline synthetic fallback.
+//!
+//! The paper trains on MNIST.  This sandbox has no network access, so:
+//!
+//! * [`idx`] loads real MNIST IDX files (optionally gzipped) from
+//!   `$LITL_MNIST_DIR` when the user has them;
+//! * [`synth`] procedurally renders an MNIST-like 28×28 digit corpus
+//!   (stroke skeletons + affine jitter + blur + pixel noise) so every
+//!   experiment runs out of the box.  The substitution is documented in
+//!   DESIGN.md §2 — the experiment validates the *relative* accuracy
+//!   ordering of the four trainers, which is task-robust.
+//! * [`dataset`] is the common container: split handling, shuffled
+//!   mini-batches with one-hot labels, deterministic from a seed.
+
+pub mod dataset;
+pub mod idx;
+pub mod synth;
+
+pub use dataset::{BatchIter, Dataset, Split};
+
+/// Load MNIST from `$LITL_MNIST_DIR` if present, else synthesize.
+///
+/// `train_size`/`test_size` truncate (or bound) the split sizes so the
+/// single-core sandbox can run reduced-budget experiments; pass
+/// `usize::MAX` for "everything available".
+pub fn load_or_synth(
+    seed: u64,
+    train_size: usize,
+    test_size: usize,
+) -> crate::Result<Dataset> {
+    let mut ds = if let Ok(dir) = std::env::var("LITL_MNIST_DIR") {
+        log::info!("loading real MNIST from {dir}");
+        idx::load_mnist(&dir, train_size, test_size)?
+    } else {
+        log::info!(
+            "LITL_MNIST_DIR unset: synthesizing MNIST-like digits \
+             (train={train_size}, test={test_size})"
+        );
+        synth::generate(seed, train_size, test_size)
+    };
+    let (mean, std) = ds.normalize();
+    log::debug!("input standardization: mean={mean:.4} std={std:.4}");
+    Ok(ds)
+}

@@ -1,0 +1,305 @@
+//! Procedural MNIST-like digit corpus (offline substitute for MNIST).
+//!
+//! Each digit class is a stroke skeleton (polyline control points in a
+//! unit square).  A sample = random affine jitter (rotation, anisotropic
+//! scale, translation, shear) + per-vertex wobble, rasterized by stamping
+//! Gaussian ink blobs along the strokes onto a 28×28 canvas, then pixel
+//! noise.  The result is a 10-class task with MNIST's geometry (28×28,
+//! [0,1] grayscale, ~class-balanced) that a 784-1024-1024-10 MLP learns
+//! to the high-90s — the regime where the paper's optical-vs-digital
+//! comparison lives.  Substitution rationale: DESIGN.md §2.
+
+use super::dataset::Dataset;
+use crate::util::rng::Pcg64;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+/// A stroke: polyline through (x, y) control points in [0,1]².
+type Stroke = &'static [(f32, f32)];
+
+fn circle16(cx: f32, cy: f32, rx: f32, ry: f32) -> Vec<(f32, f32)> {
+    (0..=16)
+        .map(|i| {
+            let a = i as f32 / 16.0 * std::f32::consts::TAU;
+            (cx + rx * a.cos(), cy + ry * a.sin())
+        })
+        .collect()
+}
+
+/// Skeletons for digits 0-9.  Static segments are cheap to keep as
+/// consts; loops are generated.
+fn skeleton(digit: u8) -> Vec<Vec<(f32, f32)>> {
+    const ONE: Stroke = &[(0.35, 0.25), (0.5, 0.12), (0.5, 0.88)];
+    const ONE_BASE: Stroke = &[(0.32, 0.88), (0.68, 0.88)];
+    const TWO: Stroke = &[
+        (0.25, 0.3),
+        (0.3, 0.15),
+        (0.5, 0.1),
+        (0.7, 0.18),
+        (0.72, 0.35),
+        (0.55, 0.55),
+        (0.3, 0.75),
+        (0.25, 0.88),
+    ];
+    const TWO_BASE: Stroke = &[(0.25, 0.88), (0.75, 0.88)];
+    const FOUR_A: Stroke = &[(0.6, 0.1), (0.25, 0.6), (0.78, 0.6)];
+    const FOUR_B: Stroke = &[(0.6, 0.1), (0.6, 0.9)];
+    const FIVE_A: Stroke = &[(0.7, 0.12), (0.3, 0.12), (0.28, 0.45)];
+    const SEVEN_A: Stroke = &[(0.25, 0.13), (0.75, 0.13), (0.45, 0.88)];
+    const SEVEN_BAR: Stroke = &[(0.35, 0.5), (0.62, 0.5)];
+
+    match digit {
+        0 => vec![circle16(0.5, 0.5, 0.24, 0.36)],
+        1 => vec![ONE.to_vec(), ONE_BASE.to_vec()],
+        2 => vec![TWO.to_vec(), TWO_BASE.to_vec()],
+        3 => vec![
+            // two right-facing arcs
+            (0..=8)
+                .map(|i| {
+                    let a = -0.45 * std::f32::consts::PI
+                        + i as f32 / 8.0 * 0.95 * std::f32::consts::PI;
+                    (0.42 + 0.22 * a.cos(), 0.3 + 0.19 * a.sin())
+                })
+                .collect(),
+            (0..=8)
+                .map(|i| {
+                    let a = -0.5 * std::f32::consts::PI
+                        + i as f32 / 8.0 * std::f32::consts::PI;
+                    (0.42 + 0.24 * a.cos(), 0.68 + 0.21 * a.sin())
+                })
+                .collect(),
+        ],
+        4 => vec![FOUR_A.to_vec(), FOUR_B.to_vec()],
+        5 => vec![
+            FIVE_A.to_vec(),
+            (0..=10)
+                .map(|i| {
+                    let a = -0.6 * std::f32::consts::PI
+                        + i as f32 / 10.0 * 1.35 * std::f32::consts::PI;
+                    (0.42 + 0.26 * a.cos(), 0.65 + 0.24 * a.sin())
+                })
+                .collect(),
+        ],
+        6 => vec![
+            vec![(0.62, 0.1), (0.42, 0.3), (0.3, 0.55)],
+            circle16(0.47, 0.68, 0.19, 0.2),
+        ],
+        7 => vec![SEVEN_A.to_vec(), SEVEN_BAR.to_vec()],
+        8 => vec![
+            circle16(0.5, 0.3, 0.17, 0.17),
+            circle16(0.5, 0.68, 0.21, 0.2),
+        ],
+        9 => vec![
+            circle16(0.52, 0.32, 0.19, 0.19),
+            vec![(0.7, 0.35), (0.66, 0.65), (0.52, 0.9)],
+        ],
+        _ => unreachable!("digit out of range"),
+    }
+}
+
+/// Random affine + wobble applied to the skeleton of one sample.
+struct Jitter {
+    rot: f32,
+    sx: f32,
+    sy: f32,
+    shear: f32,
+    dx: f32,
+    dy: f32,
+}
+
+impl Jitter {
+    fn sample(rng: &mut Pcg64) -> Self {
+        Jitter {
+            rot: (rng.next_f32() - 0.5) * 0.9,       // ±26°
+            sx: 0.7 + 0.55 * rng.next_f32(),
+            sy: 0.7 + 0.55 * rng.next_f32(),
+            shear: (rng.next_f32() - 0.5) * 0.55,
+            dx: (rng.next_f32() - 0.5) * 0.3,
+            dy: (rng.next_f32() - 0.5) * 0.24,
+        }
+    }
+
+    fn apply(&self, (x, y): (f32, f32)) -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (sin, cos) = self.rot.sin_cos();
+        let rx = cos * cx - sin * cy;
+        let ry = sin * cx + cos * cy;
+        let sx = self.sx * rx + self.shear * ry;
+        let sy = self.sy * ry;
+        (sx + 0.5 + self.dx, sy + 0.5 + self.dy)
+    }
+}
+
+/// Stamp a Gaussian ink blob (3×3 support) at a subpixel position.
+#[inline]
+fn stamp(canvas: &mut [f32], x: f32, y: f32, ink: f32) {
+    let px = x * SIDE as f32;
+    let py = y * SIDE as f32;
+    let ix = px.floor() as isize;
+    let iy = py.floor() as isize;
+    for oy in -1..=1 {
+        for ox in -1..=1 {
+            let cx = ix + ox;
+            let cy = iy + oy;
+            if cx < 0 || cy < 0 || cx >= SIDE as isize || cy >= SIDE as isize {
+                continue;
+            }
+            let dx = px - (cx as f32 + 0.5);
+            let dy = py - (cy as f32 + 0.5);
+            let w = (-(dx * dx + dy * dy) / 0.55).exp();
+            let cell = &mut canvas[cy as usize * SIDE + cx as usize];
+            *cell = (*cell + ink * w).min(1.0);
+        }
+    }
+}
+
+/// Render one digit image into `out` (length DIM).
+pub fn render(digit: u8, rng: &mut Pcg64, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), DIM);
+    out.fill(0.0);
+    let jit = Jitter::sample(rng);
+    let wobble = 0.035;
+    let ink = 0.35 + 0.3 * rng.next_f32(); // contrast variation
+    for stroke in skeleton(digit) {
+        let pts: Vec<(f32, f32)> = stroke
+            .iter()
+            .map(|&p| {
+                let (x, y) = jit.apply(p);
+                (
+                    x + wobble * rng.next_normal_f32(),
+                    y + wobble * rng.next_normal_f32(),
+                )
+            })
+            .collect();
+        for seg in pts.windows(2) {
+            let (x0, y0) = seg[0];
+            let (x1, y1) = seg[1];
+            let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt();
+            let steps = ((len * SIDE as f32 / 0.4).ceil() as usize).max(1);
+            for s in 0..=steps {
+                let t = s as f32 / steps as f32;
+                stamp(out, x0 + t * (x1 - x0), y0 + t * (y1 - y0), ink);
+            }
+        }
+    }
+    // Distractor clutter: a few random ink blobs off the glyph.
+    for _ in 0..3 {
+        if rng.next_f32() < 0.5 {
+            stamp(
+                out,
+                rng.next_f32(),
+                rng.next_f32(),
+                0.3 + 0.3 * rng.next_f32(),
+            );
+        }
+    }
+    // Random occlusion: a dark horizontal bar through the glyph.
+    if rng.next_f32() < 0.25 {
+        let row = 6 + rng.next_below(16) as usize;
+        let col0 = rng.next_below(20) as usize;
+        for c in col0..(col0 + 8).min(SIDE) {
+            out[row * SIDE + c] = 0.0;
+            out[(row + 1) * SIDE + c] = 0.0;
+        }
+    }
+    // Sensor-like pixel noise (heavy: cheap camera).
+    for v in out.iter_mut() {
+        let n = 0.12 * rng.next_normal_f32();
+        *v = (*v + n).clamp(0.0, 1.0);
+    }
+}
+
+/// Generate a full dataset (round-robin class balance, seeded).
+pub fn generate(seed: u64, train_size: usize, test_size: usize) -> Dataset {
+    let train_size = train_size.min(200_000);
+    let test_size = test_size.min(50_000);
+    let mut rng = Pcg64::new(seed, 0x5f37);
+    let make = |n: usize, rng: &mut Pcg64| {
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = vec![0u8; n];
+        let mut order: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+        rng.shuffle(&mut order);
+        for i in 0..n {
+            ys[i] = order[i];
+            render(order[i], rng, &mut xs[i * DIM..(i + 1) * DIM]);
+        }
+        (xs, ys)
+    };
+    let (train_x, train_y) = make(train_size, &mut rng);
+    let (test_x, test_y) = make(test_size, &mut rng);
+    Dataset {
+        num_classes: 10,
+        dim: DIM,
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Split;
+
+    #[test]
+    fn render_produces_ink_in_range() {
+        let mut rng = Pcg64::seeded(0);
+        let mut img = vec![0.0f32; DIM];
+        for d in 0..10 {
+            render(d, &mut rng, &mut img);
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 5.0, "digit {d} almost blank (ink={ink})");
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn digits_are_distinguishable_by_template() {
+        // Mean images of distinct classes should differ substantially.
+        let mut rng = Pcg64::seeded(1);
+        let mean = |d: u8, rng: &mut Pcg64| {
+            let mut acc = vec![0.0f32; DIM];
+            let mut img = vec![0.0f32; DIM];
+            for _ in 0..20 {
+                render(d, rng, &mut img);
+                for (a, &v) in acc.iter_mut().zip(&img) {
+                    *a += v / 20.0;
+                }
+            }
+            acc
+        };
+        let m1 = mean(1, &mut rng);
+        let m8 = mean(8, &mut rng);
+        let dist: f32 = m1
+            .iter()
+            .zip(&m8)
+            .map(|(a, b)| (a - b).powi(2))
+            .sum::<f32>()
+            .sqrt();
+        assert!(dist > 1.0, "classes 1 and 8 too similar: {dist}");
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_balanced() {
+        let a = generate(7, 100, 20);
+        let b = generate(7, 100, 20);
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.train_y, b.train_y);
+        assert_eq!(a.len(Split::Train), 100);
+        assert_eq!(a.len(Split::Test), 20);
+        let mut counts = [0usize; 10];
+        for &y in &a.train_y {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(1, 10, 0);
+        let b = generate(2, 10, 0);
+        assert_ne!(a.train_x, b.train_x);
+    }
+}

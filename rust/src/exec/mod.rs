@@ -1,0 +1,52 @@
+//! Execution substrate: std-only async building blocks.
+//!
+//! tokio is not available in the offline vendor set, so the coordinator's
+//! concurrency is built on these primitives:
+//!
+//! * [`queue::BoundedQueue`] — MPMC blocking queue with backpressure and
+//!   close semantics (the projection service's request channel).
+//! * [`oneshot`] — single-value rendezvous (projection replies).
+//! * [`pool::ThreadPool`] — fixed worker pool with panic containment
+//!   (per-layer asynchronous DFA updates, parallel data generation).
+//! * [`CancelToken`] — cooperative cancellation shared across workers.
+
+pub mod oneshot;
+pub mod pool;
+pub mod queue;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Cooperative cancellation flag.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_propagates() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+}

@@ -1,0 +1,140 @@
+//! Single-value rendezvous channel (the reply side of a projection
+//! request: submit → OPU frame → `Reply::wait()`).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Slot<T> {
+    value: Mutex<Option<Option<T>>>, // None = pending; Some(None) = dropped
+    cv: Condvar,
+}
+
+/// Sending half: consumed by `send`; dropping it unblocks the receiver
+/// with `None`.
+pub struct Sender<T> {
+    slot: Arc<Slot<T>>,
+    sent: bool,
+}
+
+/// Receiving half.
+pub struct Reply<T> {
+    slot: Arc<Slot<T>>,
+}
+
+/// Create a connected (Sender, Reply) pair.
+pub fn channel<T>() -> (Sender<T>, Reply<T>) {
+    let slot = Arc::new(Slot {
+        value: Mutex::new(None),
+        cv: Condvar::new(),
+    });
+    (
+        Sender {
+            slot: slot.clone(),
+            sent: false,
+        },
+        Reply { slot },
+    )
+}
+
+impl<T> Sender<T> {
+    pub fn send(mut self, value: T) {
+        let mut guard = self.slot.value.lock().unwrap();
+        *guard = Some(Some(value));
+        self.sent = true;
+        self.slot.cv.notify_all();
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        if !self.sent {
+            let mut guard = self.slot.value.lock().unwrap();
+            if guard.is_none() {
+                *guard = Some(None);
+                self.slot.cv.notify_all();
+            }
+        }
+    }
+}
+
+impl<T> Reply<T> {
+    /// Block until the value arrives; `None` if the sender was dropped.
+    pub fn wait(self) -> Option<T> {
+        let mut guard = self.slot.value.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return v;
+            }
+            guard = self.slot.cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Wait with a timeout; `Err(self)` lets the caller retry.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Option<T>, Reply<T>> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = self.slot.value.lock().unwrap();
+        loop {
+            if let Some(v) = guard.take() {
+                return Ok(v);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                drop(guard);
+                return Err(self);
+            }
+            let (g, _) = self.slot.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(self) -> Result<Option<T>, Reply<T>> {
+        let mut guard = self.slot.value.lock().unwrap();
+        if let Some(v) = guard.take() {
+            Ok(v)
+        } else {
+            drop(guard);
+            Err(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_then_wait() {
+        let (tx, rx) = channel();
+        tx.send(42);
+        assert_eq!(rx.wait(), Some(42));
+    }
+
+    #[test]
+    fn wait_blocks_until_send() {
+        let (tx, rx) = channel();
+        let handle = thread::spawn(move || rx.wait());
+        thread::sleep(Duration::from_millis(20));
+        tx.send("done");
+        assert_eq!(handle.join().unwrap(), Some("done"));
+    }
+
+    #[test]
+    fn dropped_sender_yields_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert_eq!(rx.wait(), None);
+    }
+
+    #[test]
+    fn timeout_returns_reply_for_retry() {
+        let (tx, rx) = channel::<u32>();
+        let rx = match rx.wait_timeout(Duration::from_millis(10)) {
+            Err(rx) => rx,
+            Ok(_) => panic!("should have timed out"),
+        };
+        tx.send(7);
+        assert_eq!(rx.wait(), Some(7));
+    }
+}

@@ -1,0 +1,148 @@
+//! Fixed-size worker thread pool with panic containment.
+//!
+//! Jobs are `FnOnce() + Send` closures; a worker that catches a panicking
+//! job logs it and keeps serving (failure injection tests rely on this).
+//! `join()` blocks until all submitted jobs completed.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::queue::BoundedQueue;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    queue: BoundedQueue<Job>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, queue_depth: usize) -> Self {
+        let queue: BoundedQueue<Job> = BoundedQueue::new(queue_depth.max(1));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let q = queue.clone();
+                let pending = pending.clone();
+                let panics = panics.clone();
+                std::thread::Builder::new()
+                    .name(format!("litl-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = q.pop() {
+                            let result =
+                                std::panic::catch_unwind(AssertUnwindSafe(job));
+                            if result.is_err() {
+                                panics.fetch_add(1, Ordering::SeqCst);
+                                log::error!("worker {i}: job panicked (contained)");
+                            }
+                            pending.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            queue,
+            workers,
+            pending,
+            panics,
+        }
+    }
+
+    /// Submit a job (blocks if the queue is full — backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        if self.queue.push(Box::new(job)).is_err() {
+            self.pending.fetch_sub(1, Ordering::SeqCst);
+            panic!("submit on closed pool");
+        }
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs finished.
+    pub fn join(&self) {
+        while self.pending.load(Ordering::SeqCst) > 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Number of jobs that panicked since pool creation.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Close the queue and join all workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, 16);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn contains_panics_and_keeps_working() {
+        let pool = ThreadPool::new(2, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..20 {
+            let c = counter.clone();
+            pool.submit(move || {
+                if i % 5 == 0 {
+                    panic!("injected failure {i}");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert_eq!(pool.panic_count(), 4);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2, 4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = counter.clone();
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+}

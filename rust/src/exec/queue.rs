@@ -1,0 +1,259 @@
+//! Bounded MPMC blocking queue with close semantics.
+//!
+//! Mutex + two condvars; `push` blocks when full (backpressure — the OPU
+//! frame clock is the slow consumer by design), `pop` blocks when empty,
+//! and `close()` wakes everyone so shutdown is prompt.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Error returned when pushing to a closed queue.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Closed;
+
+pub struct BoundedQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+// Manual Clone: a queue handle is clonable regardless of T.
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue {
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State {
+                    items: VecDeque::new(),
+                    closed: false,
+                }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                capacity,
+            }),
+        }
+    }
+
+    /// Blocking push; returns `Err(Closed)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), Closed> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(Closed);
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` once closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Pop with timeout; `Ok(None)` on timeout, `Err(Closed)` when closed
+    /// and drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, Closed> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if st.closed {
+                return Err(Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (new_st, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = new_st;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return Err(Closed);
+                }
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain everything currently queued (non-blocking).
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        let out: Vec<T> = st.items.drain(..).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: future pushes fail, pops drain then return None.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.queue.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(10);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let handle = thread::spawn(move || {
+            q2.push(3).unwrap(); // blocks until a pop
+            3
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(q.len(), 2); // still blocked
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(handle.join().unwrap(), 3);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn close_wakes_consumers() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let q2 = q.clone();
+        let handle = thread::spawn(move || q2.pop());
+        thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(handle.join().unwrap(), None);
+        assert_eq!(q.push(1), Err(Closed));
+    }
+
+    #[test]
+    fn close_drains_before_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(30)), Ok(None));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let q = BoundedQueue::new(8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    for i in 0..100u32 {
+                        q.push(p * 100 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort();
+        let want: Vec<u32> = (0..4).flat_map(|p| (0..100).map(move |i| p * 100 + i)).collect();
+        assert_eq!(all, want);
+    }
+}

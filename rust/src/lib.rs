@@ -1,0 +1,50 @@
+//! # litl — Light-in-the-loop
+//!
+//! A production-grade reproduction of *"Light-in-the-loop: using a photonics
+//! co-processor for scalable training of neural networks"* (Launay et al.,
+//! LightOn, 2020).
+//!
+//! The paper demonstrates the first photonic co-processor used to accelerate
+//! the *training* (not inference) of digitally-implemented neural networks:
+//! the forward pass runs on silicon, while the error-feedback path of Direct
+//! Feedback Alignment (DFA) — a fixed random projection of the output error —
+//! is computed optically by LightOn's Optical Processing Unit (OPU) using
+//! multiple light scattering and off-axis holography.
+//!
+//! This crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the compute
+//!   hot-spots (tiled random projection, fused DFA+Adam update, ternary
+//!   quantization, holography demodulation), validated against pure-jnp
+//!   oracles.
+//! * **L2** — JAX model (`python/compile/model.py`): MLP forward/backward,
+//!   DFA and BP training steps, and the optical physics twin, AOT-lowered
+//!   once to HLO text artifacts by `python/compile/aot.py`.
+//! * **L3** — this crate: loads the HLO artifacts via PJRT (`runtime`),
+//!   owns the training loop and the OPU device (`coordinator`, `optics`),
+//!   and never touches python at run time.
+//!
+//! Because no physical OPU (nor its proprietary driver) is available, the
+//! optical hardware is replaced by a physics-faithful simulator
+//! ([`optics`]): complex Gaussian transmission matrix, SLM ternary encoding,
+//! speckle intensity formation, off-axis holography demodulation, camera
+//! shot/read noise and ADC quantization, and a frame-clock/power timing
+//! model calibrated to the paper's figures (1.5 kHz frames, ~1e5 maximum
+//! dimension, ~30 W).
+#![allow(clippy::needless_range_loop)]
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exec;
+pub mod metrics;
+pub mod optics;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

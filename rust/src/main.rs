@@ -1,0 +1,302 @@
+//! `litl` — light-in-the-loop CLI (the L3 leader process).
+//!
+//! ```text
+//! litl train   [--algo bp|dfa-float|dfa-ternary|optical] [--epochs N] ...
+//! litl eval    --checkpoint file.ckpt [--config paper]
+//! litl opu     [--modes N]            # device self-test + info
+//! litl trace   [--algo optical]       # one-step dataflow trace (Fig. 1)
+//! litl help
+//! ```
+
+use anyhow::{bail, Result};
+use litl::cli::Args;
+use litl::config::{Algo, TrainConfig};
+use litl::coordinator::Trainer;
+use litl::data::{self, Split};
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::{OpticalOpu, OpuParams};
+use litl::tensor::Tensor;
+use litl::util::logging;
+use litl::util::rng::Pcg64;
+
+const TRAIN_FLAGS: &[&str] = &[
+    "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
+    "config", "projector", "set", "artifacts", "out-dir", "eval-every",
+    "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics",
+];
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "opu" => cmd_opu(&args),
+        "trace" => cmd_trace(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `litl help`)"),
+    }
+}
+
+fn build_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.flag("config-file") {
+        cfg.load_file(path)?;
+    }
+    if let Some(a) = args.flag("algo") {
+        cfg.algo = Algo::parse(a)?;
+    }
+    if let Some(e) = args.flag_parse::<usize>("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(n) = args.flag_parse::<usize>("train-size")? {
+        cfg.train_size = n;
+    }
+    if let Some(n) = args.flag_parse::<usize>("test-size")? {
+        cfg.test_size = n;
+    }
+    if let Some(lr) = args.flag_parse::<f32>("lr")? {
+        cfg.lr = lr;
+    }
+    if let Some(th) = args.flag_parse::<f32>("theta")? {
+        cfg.theta = th;
+    }
+    if let Some(s) = args.flag_parse::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(c) = args.flag("config") {
+        cfg.artifact_config = c.to_string();
+    }
+    if let Some(p) = args.flag("projector") {
+        cfg.set_kv(&format!("projector={p}"))?;
+    }
+    if let Some(d) = args.flag("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(d) = args.flag("out-dir") {
+        cfg.out_dir = Some(d.to_string());
+    }
+    if let Some(n) = args.flag_parse::<usize>("eval-every")? {
+        cfg.eval_every = n;
+    }
+    if let Some(n) = args.flag_parse::<f32>("n-ph")? {
+        cfg.n_ph = Some(n);
+    }
+    if let Some(n) = args.flag_parse::<f32>("read-sigma")? {
+        cfg.read_sigma = Some(n);
+    }
+    for kv in args.flag_all("set") {
+        cfg.set_kv(kv)?;
+    }
+    if args.flag_bool("paper-lr") {
+        cfg = cfg.with_paper_lr();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.ensure_known(&[TRAIN_FLAGS, &["config-file"]].concat())?;
+    let cfg = build_config(args)?;
+    log::info!(
+        "train: algo={} lr={} epochs={} config={} projector={:?}",
+        cfg.algo.name(),
+        cfg.lr,
+        cfg.epochs,
+        cfg.artifact_config,
+        cfg.projector
+    );
+    let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
+    log::info!(
+        "dataset: {} train / {} test samples",
+        ds.len(Split::Train),
+        ds.len(Split::Test)
+    );
+    let mut trainer = Trainer::new(cfg.clone())?;
+    let report = trainer.run(&ds)?;
+    println!(
+        "\n{} (lr={}): final test accuracy {:.2}%  ({} params)",
+        report.algo.name(),
+        report.lr,
+        report.final_accuracy_pct(),
+        report.num_params
+    );
+    println!(
+        "wall {:.1}s | simulated device time {:.1}s | device energy {:.1} J | {} frames",
+        report.wall_seconds,
+        report.sim_device_seconds,
+        report.device_energy_joules,
+        report.frames
+    );
+    if let Some(path) = args.flag("checkpoint") {
+        trainer.save_checkpoint(path)?;
+        log::info!("checkpoint saved to {path}");
+    }
+    if args.flag_bool("metrics") {
+        println!("\n== metrics snapshot ==");
+        for (name, value) in trainer.metrics().snapshot() {
+            println!("  {name:<32} {value:.6}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    args.ensure_known(&["checkpoint", "config", "artifacts", "test-size", "seed"])?;
+    let ckpt = args
+        .flag("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint required"))?;
+    let mut cfg = TrainConfig::default();
+    if let Some(c) = args.flag("config") {
+        cfg.artifact_config = c.to_string();
+    }
+    if let Some(d) = args.flag("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(n) = args.flag_parse::<usize>("test-size")? {
+        cfg.test_size = n;
+    }
+    if let Some(s) = args.flag_parse::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    let ds = data::load_or_synth(cfg.seed, 1, cfg.test_size)?;
+    let mut trainer = Trainer::new(cfg)?;
+    trainer.load_checkpoint(ckpt)?;
+    let ev = trainer.evaluate(&ds, Split::Test)?;
+    println!(
+        "checkpoint {ckpt}: accuracy {:.2}% (loss {:.4}, {} samples)",
+        ev.accuracy * 100.0,
+        ev.loss,
+        ev.samples
+    );
+    Ok(())
+}
+
+/// Device info + self-test: projection SNR at the configured noise.
+fn cmd_opu(args: &Args) -> Result<()> {
+    args.ensure_known(&["modes", "n-ph", "read-sigma", "frames"])?;
+    let modes = args.flag_parse::<usize>("modes")?.unwrap_or(1024);
+    let frames = args.flag_parse::<usize>("frames")?.unwrap_or(64);
+    let mut params = OpuParams::default();
+    if let Some(n) = args.flag_parse::<f32>("n-ph")? {
+        params.n_ph = n;
+    }
+    if let Some(r) = args.flag_parse::<f32>("read-sigma")? {
+        params.read_sigma = r;
+    }
+    println!("OPU (simulated): LightOn-style, off-axis holography");
+    println!("  frame rate   : {} Hz", params.frame_rate_hz);
+    println!("  power        : {} W", params.power_watts);
+    println!("  max modes    : {}", params.max_modes);
+    println!("  camera       : {}x oversample, 8-bit ADC", params.oversample);
+    println!("  noise        : n_ph={} read_sigma={}", params.n_ph, params.read_sigma);
+
+    let medium = TransmissionMatrix::sample(1, 10, modes);
+    let mut opu = OpticalOpu::new(params, medium.clone(), 7);
+    let mut rng = Pcg64::seeded(1);
+    let mut e = Tensor::zeros(&[frames, 10]);
+    for v in e.data_mut() {
+        *v = (rng.next_below(3) as i64 - 1) as f32;
+    }
+    let (p1, _) = opu.project(&e)?;
+    let exact = litl::tensor::matmul(&e, &medium.b_re);
+    let err: f64 = p1
+        .data()
+        .iter()
+        .zip(exact.data())
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+        / (p1.numel() as f64).sqrt();
+    let sig: f64 = exact.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+        / (exact.numel() as f64).sqrt();
+    println!("\nself-test ({frames} frames x {modes} modes):");
+    println!("  recovery SNR : {:.1} dB", 20.0 * (sig / err).log10());
+    println!("  sim time     : {:.1} ms", opu.sim_seconds() * 1e3);
+    println!("  energy       : {:.1} mJ", opu.stats().energy_joules * 1e3);
+    Ok(())
+}
+
+/// One-step dataflow trace: the Fig. 1 schematic, live.
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.ensure_known(&["algo", "artifacts", "config", "seed"])?;
+    let mut cfg = TrainConfig::default();
+    cfg.artifact_config = args.flag("config").unwrap_or("small").to_string();
+    cfg.epochs = 1;
+    cfg.train_size = 256;
+    cfg.test_size = 64;
+    if let Some(a) = args.flag("algo") {
+        cfg.algo = Algo::parse(a)?;
+    }
+    if let Some(d) = args.flag("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
+    let mut trainer = Trainer::new(cfg.clone())?;
+    trainer.warmup()?;
+    let mut rng = Pcg64::seeded(0);
+    let batch = trainer.model().batch;
+    let (x, yoh) = ds.batches(Split::Train, batch, &mut rng).next().unwrap();
+
+    println!("one {} step, batch={batch}:", cfg.algo.name());
+    match cfg.algo {
+        Algo::Bp => {
+            println!("  [silicon] fwd+bwd+adam : bp_step (fused HLO)");
+        }
+        Algo::DfaFloat | Algo::DfaTernary => {
+            println!("  [silicon] fwd+proj+adam: dfa_digital_step (fused HLO)");
+        }
+        Algo::Optical => {
+            println!("  [silicon] forward      : fwd_train (HLO)");
+            println!("  [light  ] projection   : SLM -> medium -> camera -> demod");
+            println!("  [silicon] update       : dfa_apply (fused DFA+Adam HLO)");
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let loss = trainer.train_step(&x, &yoh)?;
+    println!("\nloss={loss:.4}  wall={:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    if trainer.sim_device_seconds() > 0.0 {
+        println!(
+            "simulated OPU time: {:.2} ms ({} frames @ 1.5 kHz)",
+            trainer.sim_device_seconds() * 1e3,
+            batch
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        r#"litl — Light-in-the-loop: photonic co-processor DFA training
+
+USAGE: litl <command> [flags]
+
+COMMANDS:
+  train   Train the paper's MLP (synthetic MNIST unless LITL_MNIST_DIR set)
+          --algo bp|dfa-float|dfa-ternary|optical   (default optical)
+          --epochs N --lr F --theta F --seed N
+          --config paper|small      artifact build config
+          --projector native|hlo|digital
+          --train-size N --test-size N --eval-every N
+          --paper-lr                use the paper's lr for the algo
+          --out-dir DIR             write loss curves (CSV)
+          --checkpoint FILE         save state at the end
+          --set key=value           raw config override (repeatable)
+  eval    Evaluate a checkpoint: --checkpoint FILE [--config paper]
+  opu     Simulated device info + self-test [--modes N --n-ph F]
+  trace   One-step dataflow trace (Fig. 1) [--algo optical]
+  help    This text
+
+ENV: LITL_MNIST_DIR (real MNIST IDX files), LITL_LOG (error|warn|info|debug)"#
+    );
+}

@@ -1,0 +1,282 @@
+//! Metrics registry: counters, gauges, histograms + CSV/JSONL emitters.
+//!
+//! The coordinator records every training step (loss, step time, frame
+//! count, energy) and the projection service records device-level stats
+//! (frames, queue depth, batch occupancy).  Everything is cheap,
+//! lock-per-metric, and exportable:
+//!
+//! * `snapshot()` → flat name→value map (logged / asserted in tests)
+//! * [`CsvWriter`] → one row per step for loss curves (EXPERIMENTS.md)
+//! * JSONL via `crate::util::json` for experiment records.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::Welford;
+
+/// Monotonic counter.
+#[derive(Clone, Default)]
+pub struct Counter {
+    value: Arc<AtomicU64>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (f64 bits in an atomic).
+#[derive(Clone, Default)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Streaming distribution (Welford + reservoir-less percentd via ring).
+#[derive(Clone, Default)]
+pub struct Histogram {
+    inner: Arc<Mutex<HistInner>>,
+}
+
+#[derive(Default)]
+struct HistInner {
+    welford: Welford,
+    // Keep the most recent window for percentiles.
+    ring: Vec<f64>,
+    pos: usize,
+}
+
+const RING: usize = 4096;
+
+impl Histogram {
+    pub fn observe(&self, x: f64) {
+        let mut h = self.inner.lock().unwrap();
+        h.welford.push(x);
+        if h.ring.len() < RING {
+            h.ring.push(x);
+        } else {
+            let p = h.pos;
+            h.ring[p] = x;
+            h.pos = (h.pos + 1) % RING;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.lock().unwrap().welford.count()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.inner.lock().unwrap().welford.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.inner.lock().unwrap().welford.std()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.inner.lock().unwrap().welford.min()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.inner.lock().unwrap().welford.max()
+    }
+
+    /// Percentile over the recent window.
+    pub fn percentile(&self, q: f64) -> f64 {
+        let h = self.inner.lock().unwrap();
+        if h.ring.is_empty() {
+            return f64::NAN;
+        }
+        crate::util::stats::percentile(&h.ring, q)
+    }
+}
+
+/// Named metrics registry shared across coordinator components.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<RegistryInner>>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.inner
+            .lock()
+            .unwrap()
+            .gauges
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Flat snapshot of every metric (histograms expand to _mean/_p50/...).
+    pub fn snapshot(&self) -> BTreeMap<String, f64> {
+        let inner = self.inner.lock().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, c) in &inner.counters {
+            out.insert(name.clone(), c.get() as f64);
+        }
+        for (name, g) in &inner.gauges {
+            out.insert(name.clone(), g.get());
+        }
+        for (name, h) in &inner.histograms {
+            if h.count() == 0 {
+                continue;
+            }
+            out.insert(format!("{name}_count"), h.count() as f64);
+            out.insert(format!("{name}_mean"), h.mean());
+            out.insert(format!("{name}_p50"), h.percentile(50.0));
+            out.insert(format!("{name}_p99"), h.percentile(99.0));
+            out.insert(format!("{name}_max"), h.max());
+        }
+        out
+    }
+}
+
+/// Line-buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn create(path: &str, columns: &[&str]) -> crate::Result<Self> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", columns.join(","))?;
+        Ok(CsvWriter {
+            file,
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> crate::Result<()> {
+        assert_eq!(values.len(), self.columns.len());
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> crate::Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let reg = Registry::new();
+        reg.counter("frames").add(3);
+        reg.counter("frames").inc();
+        reg.gauge("loss").set(0.5);
+        let snap = reg.snapshot();
+        assert_eq!(snap["frames"], 4.0);
+        assert_eq!(snap["loss"], 0.5);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let reg = Registry::new();
+        let h = reg.histogram("lat");
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.5).abs() < 1.0);
+        let snap = reg.snapshot();
+        assert_eq!(snap["lat_count"], 100.0);
+        assert_eq!(snap["lat_max"], 100.0);
+    }
+
+    #[test]
+    fn histogram_ring_wraps() {
+        let h = Histogram::default();
+        for i in 0..(RING + 100) {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count() as usize, RING + 100);
+        // p0 of the window should be >= 100 (oldest entries evicted)
+        assert!(h.percentile(0.0) >= 99.0);
+    }
+
+    #[test]
+    fn csv_writer_writes_rows() {
+        let path = std::env::temp_dir().join("litl_csv_test.csv");
+        let path = path.to_str().unwrap();
+        {
+            let mut w = CsvWriter::create(path, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 0.9]).unwrap();
+            w.row(&[2.0, 0.8]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, "step,loss\n1,0.9\n2,0.8\n");
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let reg = Registry::new();
+        let c1 = reg.counter("x");
+        let c2 = reg.counter("x");
+        c1.inc();
+        c2.inc();
+        assert_eq!(reg.counter("x").get(), 2);
+    }
+}

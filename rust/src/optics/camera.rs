@@ -1,0 +1,132 @@
+//! Camera model: interference intensity, photon noise, 8-bit ADC.
+//!
+//! Mirrors the L1 Pallas `camera_intensity` kernel bit-for-physics (the
+//! rust-native device and the HLO `opu_project` artifact must agree —
+//! cross-checked in `rust/tests/optics_parity.rs`):
+//!
+//! ```text
+//! I(p)  = (y_re(p) + A·cos kp)² + (y_im(p) + A·sin kp)²
+//! I'(p) = I + √(I/n_ph)·ξ₁ + σ_r·ξ₂
+//! count = clip(round(I'/gain), 0, 255)
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Static camera geometry/sensitivity for a frame size.
+#[derive(Clone, Debug)]
+pub struct Camera {
+    pub npix: usize,
+    pub amp: f64,
+    pub gain: f64,
+    /// Precomputed carrier phases cos(k·p), sin(k·p).
+    cosk: Vec<f32>,
+    sink: Vec<f32>,
+}
+
+impl Camera {
+    pub fn new(npix: usize, carrier: f64, amp: f64, gain: f64) -> Self {
+        let mut cosk = vec![0.0f32; npix];
+        let mut sink = vec![0.0f32; npix];
+        for p in 0..npix {
+            let ph = carrier * p as f64;
+            cosk[p] = ph.cos() as f32;
+            sink[p] = ph.sin() as f32;
+        }
+        Camera {
+            npix,
+            amp,
+            gain,
+            cosk,
+            sink,
+        }
+    }
+
+    /// Expose one frame: pixel-mapped signal field quadratures in,
+    /// quantized ADC counts out.  `n_ph <= 0` disables shot noise.
+    pub fn expose(
+        &self,
+        yre_pix: &[f32],
+        yim_pix: &[f32],
+        n_ph: f32,
+        read_sigma: f32,
+        rng: &mut Pcg64,
+        counts: &mut [f32],
+    ) {
+        debug_assert_eq!(yre_pix.len(), self.npix);
+        debug_assert_eq!(counts.len(), self.npix);
+        let amp = self.amp as f32;
+        let inv_gain = 1.0 / self.gain as f32;
+        for p in 0..self.npix {
+            let fre = yre_pix[p] + amp * self.cosk[p];
+            let fim = yim_pix[p] + amp * self.sink[p];
+            let mut intensity = fre * fre + fim * fim;
+            if n_ph > 0.0 {
+                intensity += (intensity.max(0.0) / n_ph).sqrt() * rng.next_normal_f32();
+            }
+            if read_sigma > 0.0 {
+                intensity += read_sigma * rng.next_normal_f32();
+            }
+            counts[p] = (intensity * inv_gain).round().clamp(0.0, 255.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_expose(cam: &Camera, yre: &[f32], yim: &[f32]) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(0);
+        let mut out = vec![0.0; cam.npix];
+        cam.expose(yre, yim, -1.0, 0.0, &mut rng, &mut out);
+        out
+    }
+
+    #[test]
+    fn dark_frame_is_reference_only() {
+        let cam = Camera::new(16, std::f64::consts::FRAC_PI_2, 4.0, 1.0);
+        let z = vec![0.0f32; 16];
+        let counts = quiet_expose(&cam, &z, &z);
+        // |A e^{ikp}|² = A² = 16 everywhere.
+        assert!(counts.iter().all(|&c| (c - 16.0).abs() < 0.51), "{counts:?}");
+    }
+
+    #[test]
+    fn quantization_and_clipping() {
+        let cam = Camera::new(8, std::f64::consts::FRAC_PI_2, 100.0, 1.0);
+        let z = vec![0.0f32; 8];
+        let counts = quiet_expose(&cam, &z, &z);
+        // A² = 10000 ≫ 255·gain → saturates.
+        assert!(counts.iter().all(|&c| c == 255.0));
+    }
+
+    #[test]
+    fn shot_noise_scales_inverse_sqrt_photons() {
+        let cam = Camera::new(4096, std::f64::consts::FRAC_PI_2, 16.0, 1.0);
+        let z = vec![0.0f32; 4096];
+        let noise_std = |n_ph: f32, seed: u64| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut out = vec![0.0; 4096];
+            cam.expose(&z, &z, n_ph, 0.0, &mut rng, &mut out);
+            // intensity is flat 256; spread = shot noise (+quantization)
+            let mean: f32 = out.iter().sum::<f32>() / 4096.0;
+            (out.iter().map(|&c| (c - mean).powi(2)).sum::<f32>() / 4096.0).sqrt()
+        };
+        let lo = noise_std(16.0, 1); // √(256/16) = 4 counts
+        let hi = noise_std(1024.0, 2); // √(256/1024) = 0.5 counts
+        assert!(lo > 2.0 * hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn interference_term_present() {
+        // A pure real signal on pixel phases 0 and π should move counts
+        // in opposite directions: I = (y ± A)² + 0.
+        let cam = Camera::new(4, std::f64::consts::FRAC_PI_2, 4.0, 1.0);
+        let yre = vec![1.0f32; 4];
+        let yim = vec![0.0f32; 4];
+        let counts = quiet_expose(&cam, &yre, &yim);
+        // p=0: (1+4)² = 25;  p=2: (1-4)² = 9.
+        assert_eq!(counts[0], 25.0);
+        assert_eq!(counts[2], 9.0);
+    }
+}

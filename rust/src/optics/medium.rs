@@ -1,0 +1,131 @@
+//! The diffusive medium: a fixed complex Gaussian transmission matrix.
+//!
+//! Multiple light scattering through a thick diffuser acts on the input
+//! field as a dense complex matrix with i.i.d. CN(0, 1) entries (Saade et
+//! al. 2016).  The matrix is *physical*: nobody stores it, it never
+//! changes, and its size is set by SLM/camera geometry, not memory.  Here
+//! it is sampled once per device from a seed (re/im ~ N(0, 1/2)) so runs
+//! are reproducible; the "never stored" property is modeled in the E4
+//! bench by streaming row generation ([`TransmissionMatrix::stream_row`]).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Transmission matrix quadratures, `[d_in, modes]` each.
+#[derive(Clone, Debug)]
+pub struct TransmissionMatrix {
+    pub d_in: usize,
+    pub modes: usize,
+    pub b_re: Tensor,
+    pub b_im: Tensor,
+    seed: u64,
+}
+
+const SCALE: f32 = std::f32::consts::FRAC_1_SQRT_2; // re/im ~ N(0, 1/2)
+
+impl TransmissionMatrix {
+    /// Sample a dense medium (the normal path; dims at MNIST scale).
+    pub fn sample(seed: u64, d_in: usize, modes: usize) -> Self {
+        let mut rng = Pcg64::new(seed, 0x0b7);
+        let b_re = Tensor::randn(&[d_in, modes], &mut rng, SCALE);
+        let b_im = Tensor::randn(&[d_in, modes], &mut rng, SCALE);
+        TransmissionMatrix {
+            d_in,
+            modes,
+            b_re,
+            b_im,
+            seed,
+        }
+    }
+
+    /// Generate row `r` (input dimension r's couplings) without storing
+    /// the matrix — models the "memory-less" property at huge dims.
+    /// Deterministic per (seed, row): independent stream per row.
+    pub fn stream_row(seed: u64, row: usize, modes: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed ^ 0x5eed, row as u64);
+        let mut re = vec![0.0f32; modes];
+        let mut im = vec![0.0f32; modes];
+        for j in 0..modes {
+            re[j] = rng.next_normal_f32() * SCALE;
+            im[j] = rng.next_normal_f32() * SCALE;
+        }
+        (re, im)
+    }
+
+    /// Memory-less projection of one ternary vector using streamed rows:
+    /// only touches rows where `e` is non-zero (the SLM's "dark pixels
+    /// contribute no light" physics).
+    pub fn project_streamed(seed: u64, e: &[f32], modes: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut yre = vec![0.0f32; modes];
+        let mut yim = vec![0.0f32; modes];
+        for (row, &v) in e.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let (re, im) = Self::stream_row(seed, row, modes);
+            for j in 0..modes {
+                yre[j] += v * re[j];
+                yim[j] += v * im[j];
+            }
+        }
+        (yre, yim)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_unit_power() {
+        let a = TransmissionMatrix::sample(1, 50, 80);
+        let b = TransmissionMatrix::sample(1, 50, 80);
+        assert_eq!(a.b_re, b.b_re);
+        let power: f32 = a
+            .b_re
+            .data()
+            .iter()
+            .zip(a.b_im.data())
+            .map(|(r, i)| r * r + i * i)
+            .sum::<f32>()
+            / (50.0 * 80.0);
+        assert!((power - 1.0).abs() < 0.05, "mean |B|² = {power}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = TransmissionMatrix::sample(1, 10, 10);
+        let b = TransmissionMatrix::sample(2, 10, 10);
+        assert!(a.b_re.max_abs_diff(&b.b_re) > 0.1);
+    }
+
+    #[test]
+    fn stream_row_is_deterministic_and_independent() {
+        let (r0a, i0a) = TransmissionMatrix::stream_row(9, 0, 32);
+        let (r0b, _) = TransmissionMatrix::stream_row(9, 0, 32);
+        let (r1, i1) = TransmissionMatrix::stream_row(9, 1, 32);
+        assert_eq!(r0a, r0b);
+        assert_ne!(r0a, r1);
+        assert_ne!(i0a, i1);
+    }
+
+    #[test]
+    fn streamed_projection_matches_dense_structure() {
+        // Not the same matrix as `sample` (different streams), but same
+        // statistics and exact linearity: P(e1 + e2) = P(e1) + P(e2).
+        let modes = 64;
+        let e1: Vec<f32> = (0..10).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+        let e2: Vec<f32> = (0..10).map(|i| if i % 4 == 1 { -1.0 } else { 0.0 }).collect();
+        let sum: Vec<f32> = e1.iter().zip(&e2).map(|(a, b)| a + b).collect();
+        let (p1, _) = TransmissionMatrix::project_streamed(3, &e1, modes);
+        let (p2, _) = TransmissionMatrix::project_streamed(3, &e2, modes);
+        let (ps, _) = TransmissionMatrix::project_streamed(3, &sum, modes);
+        for j in 0..modes {
+            assert!((ps[j] - p1[j] - p2[j]).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! The simulated Optical Processing Unit (OPU) — rust-native physics.
+//!
+//! This is the substitution for the paper's photonic hardware (DESIGN.md
+//! §2): a physics-level simulation of LightOn's OPU modified for off-axis
+//! holography, faithful to the stages that shape the learning signal:
+//!
+//! ```text
+//!  ternary e ──SLM──▶ coherent beam ──scattering (fixed complex B)──▶
+//!      field y = e·B ──+ tilted reference──▶ camera |y + A·e^{ikp}|²
+//!      ──shot/read noise, 8-bit ADC──▶ counts ──demodulation──▶ ŷ ≈ y
+//! ```
+//!
+//! `Re(ŷ)` and `Im(ŷ)` are two independent Gaussian random projections of
+//! `e` — one optical frame feeds both hidden layers of the paper's MLP.
+//!
+//! The same physics exists as a JAX twin (`python/compile/optics.py`,
+//! AOT-lowered to the `opu_project` artifact); `rust/tests/` cross-checks
+//! the two implementations numerically.  The rust-native path is the
+//! default device because it allows runtime noise sweeps (E5) and
+//! arbitrary sizes (E2/E4) without re-lowering.
+//!
+//! Module map: [`medium`] (transmission matrix), [`slm`] (input encoding
+//! + failure injection), [`camera`] (intensity, noise, ADC),
+//! [`holography`] (demodulation, quadrature + FFT), [`opu`] (the device:
+//! frame clock, energy accounting, end-to-end `project`).
+
+pub mod camera;
+pub mod holography;
+pub mod medium;
+pub mod opu;
+pub mod slm;
+
+pub use opu::{OpticalOpu, OpuParams};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    /// End-to-end: noiseless optical projection ≈ exact digital one.
+    #[test]
+    fn end_to_end_recovery() {
+        let params = OpuParams {
+            n_ph: 1e12,
+            read_sigma: 0.0,
+            ..OpuParams::default()
+        };
+        let medium = medium::TransmissionMatrix::sample(7, 10, 64);
+        let mut opu = OpticalOpu::new(params, medium.clone(), 123);
+        let mut rng = Pcg64::seeded(3);
+        let mut e = Tensor::zeros(&[4, 10]);
+        for v in e.data_mut() {
+            *v = ((rng.next_below(3) as i64) - 1) as f32;
+        }
+        let (p1, p2) = opu.project(&e).unwrap();
+        let exact1 = crate::tensor::matmul(&e, &medium.b_re);
+        let exact2 = crate::tensor::matmul(&e, &medium.b_im);
+        let lsb = (opu.params().gain_for(10) / (4.0 * opu.params().amp)) as f32;
+        assert!(p1.max_abs_diff(&exact1) <= 1.5 * lsb);
+        assert!(p2.max_abs_diff(&exact2) <= 1.5 * lsb);
+    }
+}

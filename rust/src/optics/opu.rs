@@ -1,0 +1,301 @@
+//! The OPU device: SLM → medium → camera → demodulation, with frame
+//! clock and energy accounting.
+//!
+//! [`OpticalOpu::project`] is the rust-native request-path implementation
+//! of the photonic co-processor: it takes a batch of ternary error
+//! frames and returns the two recovered projection quadratures, charging
+//! one camera frame of simulated time per sample (the paper's 1.5 kHz is
+//! the loop's pacing element — accounted on a [`SimClock`], not slept).
+
+use anyhow::Result;
+
+use super::camera::Camera;
+use super::holography;
+use super::medium::TransmissionMatrix;
+use super::slm::Slm;
+use crate::sim::clock::SimClock;
+use crate::tensor::{matmul, Tensor};
+use crate::util::rng::Pcg64;
+
+/// Physical constants of the simulated device.  Mirrors
+/// `python/compile/optics.py::OpuConfig`; loaded from the artifact
+/// manifest so both implementations describe the same hardware.
+#[derive(Clone, Copy, Debug)]
+pub struct OpuParams {
+    pub oversample: usize,
+    pub carrier: f64,
+    pub amp: f64,
+    pub n_ph: f32,
+    pub read_sigma: f32,
+    pub frame_rate_hz: f64,
+    pub power_watts: f64,
+    pub max_modes: usize,
+}
+
+impl Default for OpuParams {
+    fn default() -> Self {
+        OpuParams {
+            oversample: 4,
+            carrier: std::f64::consts::FRAC_PI_2,
+            amp: 16.0,
+            n_ph: 100.0,
+            read_sigma: 2.0,
+            frame_rate_hz: 1500.0,
+            power_watts: 30.0,
+            max_modes: 100_000,
+        }
+    }
+}
+
+impl OpuParams {
+    /// ADC gain auto-ranged to the input dimension (same formula as the
+    /// python twin: headroom of 4.5σ of the field over the reference).
+    pub fn gain_for(&self, d_in: usize) -> f64 {
+        let peak = (self.amp + 4.5 * (d_in as f64 / 2.0).sqrt()).powi(2);
+        peak / 250.0
+    }
+}
+
+/// Statistics the device keeps about itself.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpuStats {
+    pub frames: u64,
+    pub dropped_frames: u64,
+    pub sim_seconds: f64,
+    pub energy_joules: f64,
+}
+
+/// The simulated photonic co-processor.
+pub struct OpticalOpu {
+    params: OpuParams,
+    medium: TransmissionMatrix,
+    slm: Slm,
+    camera: Camera,
+    noise_rng: Pcg64,
+    clock: SimClock,
+    stats: OpuStats,
+    // Reusable scratch (hot path is allocation-free after warmup).
+    scratch_pix: Vec<f32>,
+    scratch_counts: Vec<f32>,
+}
+
+impl OpticalOpu {
+    pub fn new(params: OpuParams, medium: TransmissionMatrix, noise_seed: u64) -> Self {
+        assert!(
+            medium.modes <= params.max_modes,
+            "medium has {} modes; device supports {}",
+            medium.modes,
+            params.max_modes
+        );
+        let npix = params.oversample * medium.modes;
+        let gain = params.gain_for(medium.d_in);
+        let camera = Camera::new(npix, params.carrier, params.amp, gain);
+        let slm = Slm::new(medium.d_in);
+        OpticalOpu {
+            params,
+            slm,
+            camera,
+            noise_rng: Pcg64::new(noise_seed, 0xca3e4a),
+            clock: SimClock::new(),
+            stats: OpuStats::default(),
+            scratch_pix: vec![0.0; 2 * npix],
+            scratch_counts: vec![0.0; npix],
+            medium,
+        }
+    }
+
+    /// Replace the SLM (failure injection: dead pixels, frame drops).
+    pub fn set_slm(&mut self, slm: Slm) {
+        assert_eq!(slm.d_in, self.medium.d_in);
+        self.slm = slm;
+    }
+
+    /// Override camera noise levels (E5 noise sweeps).
+    pub fn set_noise(&mut self, n_ph: f32, read_sigma: f32) {
+        self.params.n_ph = n_ph;
+        self.params.read_sigma = read_sigma;
+    }
+
+    pub fn params(&self) -> &OpuParams {
+        &self.params
+    }
+
+    pub fn medium(&self) -> &TransmissionMatrix {
+        &self.medium
+    }
+
+    pub fn stats(&self) -> OpuStats {
+        self.stats
+    }
+
+    pub fn modes(&self) -> usize {
+        self.medium.modes
+    }
+
+    /// Share a simulated clock with the coordinator.
+    pub fn attach_clock(&mut self, clock: SimClock) {
+        self.clock = clock;
+    }
+
+    /// Project a batch of ternary frames `[B, d_in]` through the optical
+    /// pipeline.  Returns `(P1, P2) = (Re ŷ, Im ŷ)`, each `[B, modes]`.
+    ///
+    /// Every *sample* is one camera frame: B frames of simulated time and
+    /// energy are charged.  Dropped frames (SLM failure injection) are
+    /// re-exposed — the retry is also charged, like real hardware.
+    pub fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        let (shown, displayed) = self.slm.encode(frames, &mut self.noise_rng)?;
+        let batch = shown.rows();
+        let modes = self.medium.modes;
+        let os = self.params.oversample;
+        let npix = os * modes;
+
+        // Scattering: complex field at the camera plane for every sample.
+        // (The physical device does this in the light; numerically it is
+        // the projection itself, f32 matmul.)
+        let yre = matmul(&shown, &self.medium.b_re);
+        let yim = matmul(&shown, &self.medium.b_im);
+
+        let mut p1 = Tensor::zeros(&[batch, modes]);
+        let mut p2 = Tensor::zeros(&[batch, modes]);
+        let gain = self.camera.gain;
+        let amp = self.camera.amp;
+
+        for b in 0..batch {
+            // Dropped frame: the camera missed the exposure — retry once
+            // (charged), mirroring the driver's re-arm behaviour.
+            let retries = if displayed[b] { 1 } else { 2 };
+            self.stats.frames += retries as u64 - 1;
+            self.stats.dropped_frames += (retries - 1) as u64;
+
+            // Macropixel expansion into reusable scratch.
+            let (pix_re, pix_im) = self.scratch_pix.split_at_mut(npix);
+            for m in 0..modes {
+                let vre = yre.at(b, m);
+                let vim = yim.at(b, m);
+                for o in 0..os {
+                    pix_re[m * os + o] = vre;
+                    pix_im[m * os + o] = vim;
+                }
+            }
+            self.camera.expose(
+                pix_re,
+                pix_im,
+                self.params.n_ph,
+                self.params.read_sigma,
+                &mut self.noise_rng,
+                &mut self.scratch_counts,
+            );
+            let (re, im) =
+                holography::demod_quadrature(&self.scratch_counts, modes, amp, gain);
+            p1.data_mut()[b * modes..(b + 1) * modes].copy_from_slice(&re);
+            p2.data_mut()[b * modes..(b + 1) * modes].copy_from_slice(&im);
+
+            self.stats.frames += 1;
+        }
+
+        // Timing/energy: every exposure (incl. retries) takes one frame.
+        let exposures =
+            batch as f64 + displayed.iter().filter(|&&d| !d).count() as f64;
+        let secs = exposures / self.params.frame_rate_hz;
+        self.clock.advance_secs(secs);
+        self.stats.sim_seconds += secs;
+        self.stats.energy_joules += secs * self.params.power_watts;
+        Ok((p1, p2))
+    }
+
+    /// Simulated seconds consumed so far.
+    pub fn sim_seconds(&self) -> f64 {
+        self.stats.sim_seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device(modes: usize) -> OpticalOpu {
+        let medium = TransmissionMatrix::sample(1, 10, modes);
+        OpticalOpu::new(OpuParams::default(), medium, 2)
+    }
+
+    fn ternary_batch(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn shapes_and_accounting() {
+        let mut opu = device(32);
+        let e = ternary_batch(8, 10, 3);
+        let (p1, p2) = opu.project(&e).unwrap();
+        assert_eq!(p1.shape(), &[8, 32]);
+        assert_eq!(p2.shape(), &[8, 32]);
+        let st = opu.stats();
+        assert_eq!(st.frames, 8);
+        assert!((st.sim_seconds - 8.0 / 1500.0).abs() < 1e-12);
+        assert!((st.energy_joules - 30.0 * 8.0 / 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_projection_correlates_with_exact() {
+        let mut opu = device(64);
+        let e = ternary_batch(16, 10, 4);
+        let (p1, _) = opu.project(&e).unwrap();
+        let exact = matmul(&e, &opu.medium().b_re);
+        let c = crate::util::stats::correlation(
+            &p1.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            &exact.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        assert!(c > 0.97, "correlation {c}");
+    }
+
+    #[test]
+    fn noise_knob_changes_error() {
+        let e = ternary_batch(16, 10, 5);
+        let err_at = |n_ph: f32| {
+            let mut opu = device(64);
+            opu.set_noise(n_ph, 0.0);
+            let exact = matmul(&e, &opu.medium().b_re);
+            let (p1, _) = opu.project(&e).unwrap();
+            p1.max_abs_diff(&exact)
+        };
+        assert!(err_at(5.0) > err_at(1e6));
+    }
+
+    #[test]
+    fn rejects_non_ternary() {
+        let mut opu = device(16);
+        let mut e = ternary_batch(2, 10, 6);
+        e.data_mut()[0] = 0.5;
+        assert!(opu.project(&e).is_err());
+    }
+
+    #[test]
+    fn dropped_frames_are_retried_and_charged() {
+        let mut opu = device(16);
+        opu.set_slm(Slm::new(10).with_drop_prob(0.5));
+        let e = ternary_batch(64, 10, 7);
+        let (p1, _) = opu.project(&e).unwrap();
+        assert_eq!(p1.shape(), &[64, 16]);
+        let st = opu.stats();
+        assert!(st.dropped_frames > 10, "{st:?}");
+        assert_eq!(st.frames, 64 + st.dropped_frames);
+        // charged time includes retries
+        assert!(st.sim_seconds > 64.0 / 1500.0);
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let medium = TransmissionMatrix::sample(1, 10, 16);
+        let mut a = OpticalOpu::new(OpuParams::default(), medium.clone(), 9);
+        let mut b = OpticalOpu::new(OpuParams::default(), medium, 9);
+        let e = ternary_batch(4, 10, 8);
+        let (pa, _) = a.project(&e).unwrap();
+        let (pb, _) = b.project(&e).unwrap();
+        assert_eq!(pa, pb);
+    }
+}

@@ -1,0 +1,130 @@
+//! SLM input encoding: ternary frames + device imperfections.
+//!
+//! The paper quantizes the error vector to {-1, 0, +1} (Eq. 4) because
+//! the OPU's input device — a DMD-backed SLM — displays binary/ternary
+//! amplitude patterns.  This module validates/encodes frames and models
+//! two device imperfections used by the failure-injection tests:
+//! stuck ("dead") input pixels and whole-frame drops.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// SLM encoder for `[batch, d_in]` ternary frames.
+#[derive(Clone, Debug)]
+pub struct Slm {
+    pub d_in: usize,
+    /// Stuck-at-zero input pixels (indices into 0..d_in).
+    dead_pixels: Vec<usize>,
+    /// Probability a whole frame is dropped (camera sync slip).
+    drop_prob: f32,
+}
+
+impl Slm {
+    pub fn new(d_in: usize) -> Self {
+        Slm {
+            d_in,
+            dead_pixels: Vec::new(),
+            drop_prob: 0.0,
+        }
+    }
+
+    /// Failure injection: mark pixels stuck at zero.
+    pub fn with_dead_pixels(mut self, pixels: Vec<usize>) -> Self {
+        assert!(pixels.iter().all(|&p| p < self.d_in));
+        self.dead_pixels = pixels;
+        self
+    }
+
+    /// Failure injection: drop frames with probability `p`.
+    pub fn with_drop_prob(mut self, p: f32) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.drop_prob = p;
+        self
+    }
+
+    /// Validate + encode a batch of ternary frames.  Returns the frames
+    /// actually displayed (dead pixels zeroed) and a per-frame "displayed"
+    /// mask (false = dropped, caller must retry those frames).
+    pub fn encode(&self, frames: &Tensor, rng: &mut Pcg64) -> Result<(Tensor, Vec<bool>)> {
+        if frames.shape().len() != 2 || frames.cols() != self.d_in {
+            bail!(
+                "SLM: expected [batch, {}], got {:?}",
+                self.d_in,
+                frames.shape()
+            );
+        }
+        for &v in frames.data() {
+            if v != 0.0 && v != 1.0 && v != -1.0 {
+                bail!("SLM: non-ternary value {v} (quantize with Eq. 4 first)");
+            }
+        }
+        let mut shown = frames.clone();
+        if !self.dead_pixels.is_empty() {
+            let cols = shown.cols();
+            for r in 0..shown.rows() {
+                for &p in &self.dead_pixels {
+                    shown.data_mut()[r * cols + p] = 0.0;
+                }
+            }
+        }
+        let displayed: Vec<bool> = (0..frames.rows())
+            .map(|_| self.drop_prob == 0.0 || rng.next_f32() >= self.drop_prob)
+            .collect();
+        Ok((shown, displayed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tern(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn accepts_ternary_rejects_float() {
+        let slm = Slm::new(8);
+        let mut rng = Pcg64::seeded(0);
+        let ok = tern(3, 8, 1);
+        assert!(slm.encode(&ok, &mut rng).is_ok());
+
+        let mut bad = ok.clone();
+        bad.data_mut()[5] = 0.3;
+        assert!(slm.encode(&bad, &mut rng).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_width() {
+        let slm = Slm::new(8);
+        let mut rng = Pcg64::seeded(0);
+        assert!(slm.encode(&tern(2, 7, 0), &mut rng).is_err());
+    }
+
+    #[test]
+    fn dead_pixels_are_zeroed() {
+        let slm = Slm::new(4).with_dead_pixels(vec![1, 3]);
+        let mut rng = Pcg64::seeded(0);
+        let frames = Tensor::from_vec(&[2, 4], vec![1., 1., -1., -1., 1., -1., 1., 1.]);
+        let (shown, _) = slm.encode(&frames, &mut rng).unwrap();
+        assert_eq!(shown.row(0), &[1., 0., -1., 0.]);
+        assert_eq!(shown.row(1), &[1., 0., 1., 0.]);
+    }
+
+    #[test]
+    fn drop_prob_statistics() {
+        let slm = Slm::new(4).with_drop_prob(0.25);
+        let mut rng = Pcg64::seeded(7);
+        let frames = tern(2000, 4, 2);
+        let (_, displayed) = slm.encode(&frames, &mut rng).unwrap();
+        let dropped = displayed.iter().filter(|&&d| !d).count();
+        let rate = dropped as f32 / 2000.0;
+        assert!((rate - 0.25).abs() < 0.05, "drop rate {rate}");
+    }
+}

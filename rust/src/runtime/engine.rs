@@ -1,0 +1,271 @@
+//! PJRT execution engine: compile-once, shape-checked calls.
+//!
+//! The [`Engine`] owns the PJRT CPU client and a cache of compiled
+//! executables keyed by (entry, config).  A call takes host tensors,
+//! verifies every shape against the manifest signature, uploads literals,
+//! executes, and decomposes the result tuple back to host tensors.
+//!
+//! [`Model`] wraps the paper's state layout (6 params + 6+6 Adam moments)
+//! and exposes the typed step/eval entry points the coordinator uses.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactSig, Manifest};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// PJRT client + compiled-executable cache over a manifest.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, String), PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine over `artifacts_dir`.
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    pub fn prepare(&mut self, entry: &str, config: &str) -> Result<()> {
+        let key = (entry.to_string(), config.to_string());
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let sig = self.manifest.artifact(entry, config)?;
+        let path = self.manifest.artifact_path(sig);
+        let t0 = std::time::Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {entry}/{config}"))?;
+        log::info!(
+            "compiled {entry}/{config} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on host tensors, shape-checked against the
+    /// manifest; returns one host tensor per declared output.
+    pub fn call(&mut self, entry: &str, config: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.prepare(entry, config)?;
+        let sig = self.manifest.artifact(entry, config)?.clone();
+        check_args(&sig, args)?;
+
+        // NOTE: upstream xla 0.1.6's `execute` leaked one device copy of
+        // every input per call (xla_rs.cc created the input buffers and
+        // never freed them — MBs per training step at the paper config).
+        // Fixed in our vendored copy (vendor/xla/xla_rs/xla_rs.cc, grep
+        // "litl patch"); `rust/tests/e2e_train.rs::no_leak_across_steps`
+        // guards the fix.
+        let literals: Vec<Literal> = args
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let exe = self
+            .cache
+            .get(&(entry.to_string(), config.to_string()))
+            .expect("prepared above");
+        let result = exe
+            .execute::<Literal>(&literals)
+            .with_context(|| format!("executing {entry}/{config}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple
+            .to_tuple()
+            .context("decomposing result tuple")?;
+        if parts.len() != sig.outputs.len() {
+            bail!(
+                "{entry}/{config}: got {} outputs, manifest says {}",
+                parts.len(),
+                sig.outputs.len()
+            );
+        }
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+
+    /// Number of compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn check_args(sig: &ArtifactSig, args: &[&Tensor]) -> Result<()> {
+    if args.len() != sig.inputs.len() {
+        bail!(
+            "{}: got {} args, signature has {}",
+            sig.entry,
+            args.len(),
+            sig.inputs.len()
+        );
+    }
+    for (i, ((name, shape), t)) in sig.inputs.iter().zip(args).enumerate() {
+        if t.shape() != shape.as_slice() {
+            bail!(
+                "{} arg {i} ('{name}'): shape {:?}, signature wants {:?}",
+                sig.entry,
+                t.shape(),
+                shape
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Host tensor → PJRT literal (f32, row-major).
+pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let lit = Literal::vec1(t.data());
+    if t.shape().is_empty() {
+        // 0-d scalar: reshape to [].
+        Ok(lit.reshape(&[])?)
+    } else {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// PJRT literal → host tensor.
+pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+    let shape = l.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+/// The paper's model state: 6 parameter tensors + Adam moments, plus the
+/// fixed projection matrices (derived from the optical medium), bound to
+/// one build config of an [`Engine`].
+pub struct Model {
+    pub config: String,
+    pub layers: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub t: f32,
+}
+
+impl Model {
+    /// He-style init matching `python/compile/model.py::init_params`.
+    pub fn init(engine: &Engine, config: &str, seed: u64) -> Result<Model> {
+        let cfg = engine.manifest().config(config)?;
+        let mut rng = Pcg64::new(seed, 0x1417);
+        let mut params = Vec::new();
+        let mut m = Vec::new();
+        let mut v = Vec::new();
+        for w in cfg.layers.windows(2) {
+            let (d_in, d_out) = (w[0], w[1]);
+            let scale = 1.0 / (d_in as f32).sqrt();
+            params.push(Tensor::randn(&[d_in, d_out], &mut rng, scale));
+            params.push(Tensor::zeros(&[d_out]));
+            m.push(Tensor::zeros(&[d_in, d_out]));
+            m.push(Tensor::zeros(&[d_out]));
+            v.push(Tensor::zeros(&[d_in, d_out]));
+            v.push(Tensor::zeros(&[d_out]));
+        }
+        Ok(Model {
+            config: cfg.name.clone(),
+            layers: cfg.layers.clone(),
+            batch: cfg.batch,
+            eval_batch: cfg.eval_batch,
+            params,
+            m,
+            v,
+            t: 0.0,
+        })
+    }
+
+    /// Total parameter count (the paper's ~1.87M at hidden=1024).
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Full state vector in artifact order: params ++ m ++ v.
+    pub fn state_refs(&self) -> Vec<&Tensor> {
+        self.params.iter().chain(&self.m).chain(&self.v).collect()
+    }
+
+    /// Replace state from artifact outputs (params' ++ m' ++ v').
+    pub fn update_state(&mut self, mut outs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        if outs.len() < 18 {
+            bail!("state update needs >= 18 outputs, got {}", outs.len());
+        }
+        let rest = outs.split_off(18);
+        let mut it = outs.into_iter();
+        for slot in self
+            .params
+            .iter_mut()
+            .chain(self.m.iter_mut())
+            .chain(self.v.iter_mut())
+        {
+            *slot = it.next().unwrap();
+        }
+        Ok(rest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar(3.5);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back.shape(), &[] as &[usize]);
+        assert_eq!(back.data(), &[3.5]);
+    }
+
+    #[test]
+    fn check_args_catches_mismatches() {
+        let sig = ArtifactSig {
+            entry: "e".into(),
+            config: "c".into(),
+            file: "f".into(),
+            inputs: vec![("x".into(), vec![2, 3])],
+            outputs: vec!["y".into()],
+        };
+        let good = Tensor::zeros(&[2, 3]);
+        let bad = Tensor::zeros(&[3, 2]);
+        assert!(check_args(&sig, &[&good]).is_ok());
+        assert!(check_args(&sig, &[&bad]).is_err());
+        assert!(check_args(&sig, &[]).is_err());
+    }
+}

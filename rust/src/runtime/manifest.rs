@@ -1,0 +1,232 @@
+//! Typed view of `artifacts/manifest.json`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::optics::OpuParams;
+use crate::util::json::Json;
+
+/// One lowered entry point's signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub entry: String,
+    pub config: String,
+    pub file: String,
+    /// (name, shape) per input, in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// Output names, in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// One (batch, hidden) build configuration.
+#[derive(Clone, Debug)]
+pub struct BuildConfig {
+    pub name: String,
+    pub batch: usize,
+    pub hidden: usize,
+    pub eval_batch: usize,
+    pub modes: usize,
+    pub layers: Vec<usize>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub err_dim: usize,
+    pub opu: OpuParams,
+    pub configs: Vec<BuildConfig>,
+    pub artifacts: Vec<ArtifactSig>,
+}
+
+fn want<'j>(j: &'j Json, key: &str, ctx: &str) -> Result<&'j Json> {
+    j.get(key)
+        .with_context(|| format!("manifest: missing '{key}' in {ctx}"))
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let opu_j = want(&root, "opu", "root")?;
+        let f = |key: &str| -> Result<f64> {
+            want(opu_j, key, "opu")?
+                .as_f64()
+                .with_context(|| format!("opu.{key} not a number"))
+        };
+        let opu = OpuParams {
+            oversample: f("oversample")? as usize,
+            carrier: f("carrier")?,
+            amp: f("amp")?,
+            n_ph: f("n_ph")? as f32,
+            read_sigma: f("read_sigma")? as f32,
+            frame_rate_hz: f("frame_rate_hz")?,
+            power_watts: f("power_watts")?,
+            max_modes: f("max_modes")? as usize,
+        };
+
+        let configs = want(&root, "configs", "root")?
+            .as_arr()
+            .context("configs not an array")?
+            .iter()
+            .map(|c| -> Result<BuildConfig> {
+                Ok(BuildConfig {
+                    name: want(c, "name", "config")?.as_str().unwrap_or("").to_string(),
+                    batch: want(c, "batch", "config")?.as_usize().unwrap_or(0),
+                    hidden: want(c, "hidden", "config")?.as_usize().unwrap_or(0),
+                    eval_batch: want(c, "eval_batch", "config")?.as_usize().unwrap_or(0),
+                    modes: want(c, "modes", "config")?.as_usize().unwrap_or(0),
+                    layers: want(c, "layers", "config")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = want(&root, "artifacts", "root")?
+            .as_arr()
+            .context("artifacts not an array")?
+            .iter()
+            .map(|a| -> Result<ArtifactSig> {
+                let inputs = want(a, "inputs", "artifact")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|i| {
+                        let name = i
+                            .get("name")
+                            .and_then(|n| n.as_str())
+                            .unwrap_or("")
+                            .to_string();
+                        let shape = i
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                            .unwrap_or_default();
+                        (name, shape)
+                    })
+                    .collect();
+                let outputs = want(a, "outputs", "artifact")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|o| o.get("name").and_then(|n| n.as_str()))
+                    .map(|s| s.to_string())
+                    .collect();
+                Ok(ArtifactSig {
+                    entry: want(a, "entry", "artifact")?.as_str().unwrap_or("").to_string(),
+                    config: want(a, "config", "artifact")?.as_str().unwrap_or("").to_string(),
+                    file: want(a, "file", "artifact")?.as_str().unwrap_or("").to_string(),
+                    inputs,
+                    outputs,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest {
+            dir,
+            err_dim: want(&root, "err_dim", "root")?.as_usize().unwrap_or(10),
+            opu,
+            configs,
+            artifacts,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.configs.is_empty() {
+            bail!("manifest has no build configs");
+        }
+        for a in &self.artifacts {
+            if !self.dir.join(&a.file).exists() {
+                bail!("artifact file missing: {} (run `make artifacts`)", a.file);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn config(&self, name: &str) -> Result<&BuildConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.name == name)
+            .with_context(|| {
+                format!(
+                    "no build config '{name}' in manifest (have: {})",
+                    self.configs
+                        .iter()
+                        .map(|c| c.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn artifact(&self, entry: &str, config: &str) -> Result<&ArtifactSig> {
+        self.artifacts
+            .iter()
+            .find(|a| a.entry == entry && a.config == config)
+            .with_context(|| format!("no artifact '{entry}' for config '{config}'"))
+    }
+
+    pub fn artifact_path(&self, sig: &ArtifactSig) -> PathBuf {
+        self.dir.join(&sig.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let manifest = r#"{
+ "version": 1,
+ "err_dim": 10,
+ "opu": {"oversample": 4, "carrier": 1.5707963, "amp": 16.0, "n_ph": 100.0,
+         "read_sigma": 2.0, "adc_gain_err": 2.7, "frame_rate_hz": 1500.0,
+         "power_watts": 30.0, "max_modes": 100000},
+ "configs": [{"name": "tiny", "batch": 4, "hidden": 8, "eval_batch": 8,
+              "modes": 8, "layers": [784, 8, 8, 10]}],
+ "artifacts": [{"entry": "fwd_train", "config": "tiny", "file": "fwd.hlo.txt",
+                "inputs": [{"name": "w1", "shape": [784, 8]}],
+                "outputs": [{"name": "h1"}]}]
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let mut f = std::fs::File::create(dir.join("fwd.hlo.txt")).unwrap();
+        f.write_all(b"HloModule placeholder").unwrap();
+    }
+
+    #[test]
+    fn loads_and_queries() {
+        let dir = std::env::temp_dir().join("litl_manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.err_dim, 10);
+        assert_eq!(m.opu.frame_rate_hz, 1500.0);
+        assert_eq!(m.config("tiny").unwrap().hidden, 8);
+        let sig = m.artifact("fwd_train", "tiny").unwrap();
+        assert_eq!(sig.inputs[0].1, vec![784, 8]);
+        assert!(m.config("nope").is_err());
+        assert!(m.artifact("fwd_train", "nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_detected() {
+        let dir = std::env::temp_dir().join("litl_manifest_test2");
+        write_fixture(&dir);
+        std::fs::remove_file(dir.join("fwd.hlo.txt")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("artifact file missing"), "{err}");
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT artifacts, execute them from the hot path.
+//!
+//! `python/compile/aot.py` lowers the JAX/Pallas stack once to HLO text
+//! (+ `manifest.json`); this module is everything rust needs to run it:
+//!
+//! * [`manifest`] — typed view of the manifest (artifact signatures,
+//!   build configs, OPU physical constants).
+//! * [`engine`] — PJRT CPU client + compiled-executable cache + shape
+//!   checked `call` (and the [`engine::Model`] convenience wrapper for
+//!   the paper's parameter/optimizer-state layout).
+//!
+//! Python never runs here: the interchange is HLO *text* (xla_extension
+//! 0.5.1 rejects jax ≥ 0.5 serialized protos — see aot.py docstring).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Model};
+pub use manifest::{ArtifactSig, BuildConfig, Manifest};

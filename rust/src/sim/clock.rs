@@ -1,0 +1,61 @@
+//! Simulated time accounting.
+//!
+//! The OPU's frame clock (1.5 kHz) is the pacing element of the hybrid
+//! loop, but actually sleeping 667 µs per frame would make the 1-core
+//! sandbox experiments dominated by idle time.  Instead every device
+//! charges *simulated* time to a [`SimClock`]; experiments report both
+//! wall-clock (what this host did) and simulated device time (what the
+//! paper's hardware would take).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Monotonic simulated-time accumulator (nanoseconds).
+#[derive(Clone, Default)]
+pub struct SimClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `seconds` of simulated time.
+    pub fn advance_secs(&self, seconds: f64) {
+        debug_assert!(seconds >= 0.0);
+        let ns = (seconds * 1e9).round() as u64;
+        self.nanos.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn now_secs(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        self.nanos.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let c = SimClock::new();
+        c.advance_secs(0.5);
+        c.advance_secs(0.25);
+        assert!((c.now_secs() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clones_share() {
+        let c = SimClock::new();
+        let c2 = c.clone();
+        c2.advance_secs(1.0);
+        assert!((c.now_secs() - 1.0).abs() < 1e-9);
+        c.reset();
+        assert_eq!(c2.now_secs(), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Analytic device models: timing and energy.
+//!
+//! E2 (throughput) and E3 (power efficiency) compare the OPU against
+//! digital hardware *at scales this sandbox cannot execute* (the paper's
+//! 1e5-dimensional projections at 1.5 kHz, hundred-billion-parameter
+//! regimes).  Numerics are validated at executable scale by the optics
+//! and runtime modules; these models extrapolate the *timing/energy*
+//! dimension, with every constant documented and sourced either from the
+//! paper (OPU) or from public datasheets (V100 GPU, desktop CPU).
+
+pub mod clock;
+pub mod power;

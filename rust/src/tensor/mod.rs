@@ -1,0 +1,169 @@
+//! Host-side f32 tensors.
+//!
+//! The heavy math of the request path runs inside the AOT-compiled HLO
+//! artifacts; this module covers everything *around* it: parameter
+//! initialization, the pure-rust reference trainers (test oracles and the
+//! "silicon baseline" in benches), metrics, and the native OPU physics.
+//!
+//! Row-major, f32, shape-checked at runtime.  Matmul is cache-blocked
+//! with a k-inner micro-kernel — good enough that the host baseline is an
+//! honest comparator (see EXPERIMENTS.md §Perf), without pretending to be
+//! a BLAS.
+
+mod ops;
+
+pub use ops::*;
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major f32 tensor (rank 1 or 2 in practice).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let numel = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; numel],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![x],
+        }
+    }
+
+    /// Standard-normal entries scaled by `scale`.
+    pub fn randn(shape: &[usize], rng: &mut Pcg64, scale: f32) -> Self {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(&mut t.data);
+        if scale != 1.0 {
+            for x in t.data.iter_mut() {
+                *x *= scale;
+            }
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-matrix {:?}", self.shape);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-matrix {:?}", self.shape);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        &mut self.data[r * self.shape[1] + c]
+    }
+
+    /// Row slice of a matrix.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Pcg64::seeded(0);
+        let t = Tensor::randn(&[100, 100], &mut rng, 2.0);
+        let mean: f32 = t.data().iter().sum::<f32>() / t.numel() as f32;
+        let var: f32 = t.data().iter().map(|x| x * x).sum::<f32>()
+            / t.numel() as f32;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 4.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[3, 2]);
+    }
+}

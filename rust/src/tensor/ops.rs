@@ -1,0 +1,279 @@
+//! Tensor operations: blocked matmul, transposed variants, elementwise.
+//!
+//! The matmul family is the host baseline's hot path ("digital projection
+//! on silicon" in E2/E3), so it is cache-blocked (i-k-j loop order with a
+//! j-vectorizable inner loop) rather than naive.  Everything else is
+//! straightforward elementwise code.
+
+use super::Tensor;
+
+/// Cache block edges (tuned on the 1-core sandbox; see EXPERIMENTS §Perf).
+const MC: usize = 64;
+const KC: usize = 256;
+
+/// `out = a @ b` — `[m,k] x [k,n] -> [m,n]`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    // i-k-j with k blocked: inner loop is a contiguous axpy over b's row,
+    // which the compiler auto-vectorizes.
+    for ic in (0..m).step_by(MC) {
+        let i_end = (ic + MC).min(m);
+        for kc in (0..k).step_by(KC) {
+            let k_end = (kc + KC).min(k);
+            for i in ic..i_end {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut od[i * n..(i + 1) * n];
+                for kk in kc..k_end {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `out = aᵀ @ b` — `[k,m] x [k,n] -> [m,n]` (outer-product reductions:
+/// the DFA/BP weight-gradient shape).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aki = arow[i];
+            if aki == 0.0 {
+                continue;
+            }
+            let orow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aki * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// `out = a @ bᵀ` — `[m,k] x [n,k] -> [m,n]` (backprop's `δ @ Wᵀ` shape).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            orow[j] = acc;
+        }
+    }
+    out
+}
+
+/// `x + row` broadcast over rows (bias add), in place.
+pub fn add_row_inplace(x: &mut Tensor, row: &[f32]) {
+    let n = x.cols();
+    assert_eq!(row.len(), n);
+    for chunk in x.data_mut().chunks_mut(n) {
+        for (v, b) in chunk.iter_mut().zip(row) {
+            *v += b;
+        }
+    }
+}
+
+/// Elementwise tanh, in place.
+pub fn tanh_inplace(x: &mut Tensor) {
+    for v in x.data_mut().iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// Row-wise softmax.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let n = x.cols();
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_mut(n) {
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// Column sums of a matrix: `[m,n] -> [n]`.
+pub fn col_sum(x: &Tensor) -> Vec<f32> {
+    let n = x.cols();
+    let mut out = vec![0.0f32; n];
+    for row in x.data().chunks(n) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// `a ⊙ (1 - b²)` — the tanh-derivative gate used by both trainers.
+pub fn gate_tanh(a: &Tensor, h: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), h.shape());
+    let data = a
+        .data()
+        .iter()
+        .zip(h.data())
+        .map(|(&p, &hv)| p * (1.0 - hv * hv))
+        .collect();
+    Tensor::from_vec(a.shape(), data)
+}
+
+/// Scale in place.
+pub fn scale_inplace(x: &mut Tensor, s: f32) {
+    for v in x.data_mut().iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Eq. 4 ternarization into a fresh tensor.
+pub fn ternarize(x: &Tensor, threshold: f32) -> Tensor {
+    let data = x
+        .data()
+        .iter()
+        .map(|&v| {
+            if v > threshold {
+                1.0
+            } else if v < -threshold {
+                -1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    Tensor::from_vec(x.shape(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.at(i, kk) * b.at(kk, j);
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::seeded(1);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (65, 300, 33), (128, 784, 64)] {
+            let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+            let got = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match() {
+        let mut rng = Pcg64::seeded(2);
+        let (m, k, n) = (17, 23, 9);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let want = matmul(&a, &b);
+
+        // aᵀ stored: build at = transpose(a), check matmul_tn(at, b).
+        let mut at = Tensor::zeros(&[k, m]);
+        for i in 0..m {
+            for kk in 0..k {
+                *at.at_mut(kk, i) = a.at(i, kk);
+            }
+        }
+        assert!(matmul_tn(&at, &b).max_abs_diff(&want) < 1e-4);
+
+        // bᵀ stored: check matmul_nt(a, bt).
+        let mut bt = Tensor::zeros(&[n, k]);
+        for kk in 0..k {
+            for j in 0..n {
+                *bt.at_mut(j, kk) = b.at(kk, j);
+            }
+        }
+        assert!(matmul_nt(&a, &bt).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg64::seeded(3);
+        let x = Tensor::randn(&[5, 11], &mut rng, 3.0);
+        let s = softmax(&x);
+        for row in s.data().chunks(11) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let y = Tensor::from_vec(&[1, 3], vec![1001.0, 1002.0, 1003.0]);
+        assert!(softmax(&x).max_abs_diff(&softmax(&y)) < 1e-6);
+    }
+
+    #[test]
+    fn gate_and_ternarize() {
+        let p = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, -1.0]);
+        let h = Tensor::from_vec(&[1, 3], vec![0.0, 0.5, 1.0]);
+        let g = gate_tanh(&p, &h);
+        assert_eq!(g.data(), &[1.0, 2.0 * 0.75, 0.0]);
+
+        let x = Tensor::from_vec(&[1, 4], vec![0.2, 0.05, -0.2, -0.05]);
+        assert_eq!(ternarize(&x, 0.1).data(), &[1.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut x = Tensor::zeros(&[2, 3]);
+        add_row_inplace(&mut x, &[1.0, 2.0, 3.0]);
+        assert_eq!(col_sum(&x), vec![2.0, 4.0, 6.0]);
+    }
+}

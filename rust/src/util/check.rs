@@ -1,0 +1,180 @@
+//! Mini property-testing framework (no proptest offline).
+//!
+//! Provides seeded generators and a `forall` runner with simple halving
+//! shrinking for numeric/vector inputs.  Coordinator invariants (frame
+//! packing, batching, routing, checkpoint round-trips) are expressed as
+//! properties over these generators — see the `#[cfg(test)]` blocks
+//! across `coordinator/` and `rust/tests/`.
+
+use crate::util::rng::Pcg64;
+
+/// Number of random cases per property (override with LITL_CHECK_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("LITL_CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// A generator of values of type `T` from a PRNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+
+    /// Candidate smaller versions of a failing input (default: none).
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` on `cases` random inputs; on failure, greedily shrink and
+/// panic with the smallest failing input found.
+pub fn forall<T: std::fmt::Debug + Clone, G: Gen<T>>(
+    name: &str,
+    gen: &G,
+    prop: impl Fn(&T) -> bool,
+) {
+    let cases = default_cases();
+    let mut rng = Pcg64::new(0x11f1, name.len() as u64);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Shrink greedily.
+        let mut smallest = input.clone();
+        let mut budget = 200;
+        'outer: while budget > 0 {
+            for cand in gen.shrink(&smallest) {
+                budget -= 1;
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'outer;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed on case {case}\n  original: {input:?}\n  shrunk:   {smallest:?}"
+        );
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen<usize> for UsizeIn {
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.next_below((self.1 - self.0 + 1) as u64) as usize
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*value - self.0) / 2);
+            out.push(value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 vector of a length drawn from `len`, values normal * scale.
+pub struct VecF32 {
+    pub len: UsizeIn,
+    pub scale: f32,
+}
+
+impl Gen<Vec<f32>> for VecF32 {
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let n = self.len.generate(rng);
+        (0..n).map(|_| rng.next_normal_f32() * self.scale).collect()
+    }
+
+    fn shrink(&self, value: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if value.len() > self.len.0 {
+            out.push(value[..value.len() / 2.max(self.len.0)].to_vec());
+            out.push(value[..value.len() - 1].to_vec());
+        }
+        // Zeroing values often shrinks counterexamples.
+        if value.iter().any(|&x| x != 0.0) {
+            out.push(value.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairG<A, B>(pub A, pub B);
+
+impl<T1: Clone, T2: Clone, A: Gen<T1>, B: Gen<T2>> Gen<(T1, T2)> for PairG<A, B> {
+    fn generate(&self, rng: &mut Pcg64) -> (T1, T2) {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, value: &(T1, T2)) -> Vec<(T1, T2)> {
+        let mut out: Vec<(T1, T2)> = self
+            .0
+            .shrink(&value.0)
+            .into_iter()
+            .map(|a| (a, value.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink(&value.1)
+                .into_iter()
+                .map(|b| (value.0.clone(), b)),
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("usize in range", &UsizeIn(3, 17), |&n| (3..=17).contains(&n));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics() {
+        forall("always false", &UsizeIn(0, 100), |_| false);
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        // Property fails for n >= 10; shrinker should find something
+        // close to 10, certainly < 50.
+        let result = std::panic::catch_unwind(|| {
+            forall("ge ten", &UsizeIn(0, 1000), |&n| n < 10);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        let shrunk: usize = msg
+            .split("shrunk:")
+            .nth(1)
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!(shrunk < 50, "shrunk to {shrunk}; msg: {msg}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        forall(
+            "vec len",
+            &VecF32 {
+                len: UsizeIn(1, 9),
+                scale: 2.0,
+            },
+            |v| (1..=9).contains(&v.len()),
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! Iterative radix-2 complex FFT.
+//!
+//! Used by the rust-native off-axis holography demodulator
+//! ([`crate::optics::holography::demod_fft`]) — the textbook Fourier
+//! side-band pipeline that cross-validates the exact quadrature
+//! demodulator on the hot path.  Sizes are powers of two (the camera line
+//! is `4 × modes` pixels with `modes` a power of two in every config).
+
+use std::f64::consts::PI;
+
+/// A complex number as an (re, im) pair of f64.
+pub type C64 = (f64, f64);
+
+#[inline]
+fn c_mul(a: C64, b: C64) -> C64 {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place decimation-in-time radix-2 FFT.  `data.len()` must be a power
+/// of two.  `inverse` applies the conjugate transform *without* the 1/N
+/// normalization (callers normalize — see [`ifft`]).
+pub fn fft_in_place(data: &mut [C64], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft size {n} not a power of two");
+    if n <= 1 {
+        return;
+    }
+
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = c_mul(data[i + k + len / 2], w);
+                data[i + k] = (u.0 + v.0, u.1 + v.1);
+                data[i + k + len / 2] = (u.0 - v.0, u.1 - v.1);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward FFT of a complex vector.
+pub fn fft(input: &[C64]) -> Vec<C64> {
+    let mut data = input.to_vec();
+    fft_in_place(&mut data, false);
+    data
+}
+
+/// Inverse FFT (normalized by 1/N).
+pub fn ifft(input: &[C64]) -> Vec<C64> {
+    let mut data = input.to_vec();
+    fft_in_place(&mut data, true);
+    let inv_n = 1.0 / data.len() as f64;
+    for x in data.iter_mut() {
+        x.0 *= inv_n;
+        x.1 *= inv_n;
+    }
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn assert_close(a: &[C64], b: &[C64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x.0 - y.0).abs() < tol && (x.1 - y.1).abs() < tol,
+                "{x:?} vs {y:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn impulse_is_flat() {
+        let mut input = vec![(0.0, 0.0); 8];
+        input[0] = (1.0, 0.0);
+        let out = fft(&input);
+        assert_close(&out, &vec![(1.0, 0.0); 8], 1e-12);
+    }
+
+    #[test]
+    fn pure_tone_is_single_bin() {
+        let n = 64;
+        let k = 5;
+        let input: Vec<C64> = (0..n)
+            .map(|p| {
+                let ph = 2.0 * PI * k as f64 * p as f64 / n as f64;
+                (ph.cos(), ph.sin())
+            })
+            .collect();
+        let out = fft(&input);
+        for (bin, v) in out.iter().enumerate() {
+            let mag = (v.0 * v.0 + v.1 * v.1).sqrt();
+            if bin == k {
+                assert!((mag - n as f64).abs() < 1e-9);
+            } else {
+                assert!(mag < 1e-9, "leakage at bin {bin}: {mag}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let mut rng = Pcg64::seeded(11);
+        for log_n in [0, 1, 4, 10] {
+            let n = 1usize << log_n;
+            let input: Vec<C64> = (0..n)
+                .map(|_| (rng.next_normal(), rng.next_normal()))
+                .collect();
+            let back = ifft(&fft(&input));
+            assert_close(&back, &input, 1e-9);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Pcg64::seeded(12);
+        let n = 32;
+        let a: Vec<C64> = (0..n).map(|_| (rng.next_normal(), 0.0)).collect();
+        let b: Vec<C64> = (0..n).map(|_| (rng.next_normal(), 0.0)).collect();
+        let sum: Vec<C64> = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x.0 + y.0, x.1 + y.1))
+            .collect();
+        let fa = fft(&a);
+        let fb = fft(&b);
+        let fsum = fft(&sum);
+        let expect: Vec<C64> = fa
+            .iter()
+            .zip(&fb)
+            .map(|(x, y)| (x.0 + y.0, x.1 + y.1))
+            .collect();
+        assert_close(&fsum, &expect, 1e-9);
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Pcg64::seeded(13);
+        let n = 256;
+        let input: Vec<C64> = (0..n)
+            .map(|_| (rng.next_normal(), rng.next_normal()))
+            .collect();
+        let out = fft(&input);
+        let e_time: f64 = input.iter().map(|x| x.0 * x.0 + x.1 * x.1).sum();
+        let e_freq: f64 =
+            out.iter().map(|x| x.0 * x.0 + x.1 * x.1).sum::<f64>() / n as f64;
+        assert!((e_time - e_freq).abs() < 1e-6 * e_time);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let mut data = vec![(0.0, 0.0); 12];
+        fft_in_place(&mut data, false);
+    }
+}

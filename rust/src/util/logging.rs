@@ -1,0 +1,80 @@
+//! Tiny logger for the `log` facade (env-filtered, stderr).
+//!
+//! `LITL_LOG=debug litl train ...` — levels: error, warn, info, debug,
+//! trace.  Defaults to `info`.
+
+use std::io::Write;
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INIT: Once = Once::new();
+static mut START: Option<Instant> = None;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{t:9.3}s {lvl} {}] {}",
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the global logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let filter = match std::env::var("LITL_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        let logger = Box::new(StderrLogger {
+            start: Instant::now(),
+        });
+        let _ = log::set_boxed_logger(logger);
+        log::set_max_level(filter);
+        // Silence the unused-static warning path; START retained for
+        // potential future relative timestamps across re-inits.
+        unsafe {
+            START = Some(Instant::now());
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

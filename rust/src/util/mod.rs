@@ -1,0 +1,21 @@
+//! Small, dependency-free substrates used across the crate.
+//!
+//! The offline build environment vendors only `xla`, `anyhow`,
+//! `thiserror`, `flate2` and `log`, so the usual ecosystem crates
+//! (`rand`, `serde_json`, `rustfft`, criterion's stats, ...) are
+//! reimplemented here at the scale this project needs:
+//!
+//! * [`rng`] — PCG64 PRNG with normal/shuffle helpers (seeded,
+//!   reproducible across hosts; mirrors the python side where shared).
+//! * [`fft`] — iterative radix-2 complex FFT (off-axis holography demod).
+//! * [`json`] — minimal JSON parser/writer (artifact manifest, metrics).
+//! * [`stats`] — Welford accumulators, percentiles, linear regression.
+//! * [`logging`] — env-filtered logger for the `log` facade.
+//! * [`check`] — mini property-testing framework (generators + shrinking).
+
+pub mod check;
+pub mod fft;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

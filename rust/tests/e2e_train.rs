@@ -1,0 +1,192 @@
+//! Integration: the full three-layer stack on the `small` build config.
+//!
+//! Loads real AOT artifacts (requires `make artifacts`), runs every
+//! trainer a few steps on synthetic digits, and cross-checks the XLA
+//! path against the pure-rust host oracle.
+
+use litl::config::{Algo, ProjectorKind, TrainConfig};
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::projector::DigitalProjector;
+use litl::coordinator::Trainer;
+use litl::data::{self, Split};
+use litl::optics::medium::TransmissionMatrix;
+use litl::runtime::Engine;
+use litl::tensor::Tensor;
+use litl::util::rng::Pcg64;
+
+fn cfg(algo: Algo) -> TrainConfig {
+    TrainConfig {
+        artifact_config: "small".into(),
+        algo,
+        projector: ProjectorKind::OpticalNative,
+        epochs: 1,
+        train_size: 640,
+        test_size: 200,
+        lr: 0.01,
+        theta: 0.1,
+        seed: 7,
+        artifacts_dir: "artifacts".into(),
+        out_dir: None,
+        eval_every: 0,
+        n_ph: None,
+        read_sigma: None,
+        account_frames: true,
+    }
+}
+
+fn loss_drops(algo: Algo, lr: f32, steps: usize) -> (f32, f32) {
+    let mut c = cfg(algo);
+    c.lr = lr;
+    let ds = data::load_or_synth(c.seed, c.train_size, c.test_size).unwrap();
+    let mut tr = Trainer::new(c).unwrap();
+    tr.warmup().unwrap();
+    let mut rng = Pcg64::seeded(1);
+    let batch = tr.model().batch;
+    let mut first = 0.0f32;
+    let mut last = 0.0f32;
+    let mut done = 0;
+    'outer: loop {
+        for (x, y) in ds.batches(Split::Train, batch, &mut rng) {
+            let loss = tr.train_step(&x, &y).unwrap();
+            if done == 0 {
+                first = loss;
+            }
+            last = loss;
+            done += 1;
+            if done >= steps {
+                break 'outer;
+            }
+        }
+    }
+    (first, last)
+}
+
+#[test]
+fn bp_loss_decreases() {
+    let (first, last) = loss_drops(Algo::Bp, 0.01, 40);
+    assert!(last < 0.6 * first, "bp: first={first} last={last}");
+}
+
+#[test]
+fn dfa_float_loss_decreases() {
+    let (first, last) = loss_drops(Algo::DfaFloat, 0.01, 40);
+    assert!(last < 0.7 * first, "dfa-float: first={first} last={last}");
+}
+
+#[test]
+fn dfa_ternary_loss_decreases() {
+    // Ternary feedback is slow in the first steps (most wrong-class
+    // errors quantize to zero), so give it a longer horizon.
+    let (first, last) = loss_drops(Algo::DfaTernary, 0.001, 420);
+    assert!(last < 0.85 * first, "dfa-ternary: first={first} last={last}");
+}
+
+#[test]
+fn optical_loss_decreases() {
+    let (first, last) = loss_drops(Algo::Optical, 0.001, 420);
+    assert!(last < 0.85 * first, "optical: first={first} last={last}");
+}
+
+#[test]
+fn optical_accounts_device_time() {
+    let c = cfg(Algo::Optical);
+    let ds = data::load_or_synth(c.seed, 128, 200).unwrap();
+    let mut tr = Trainer::new(c).unwrap();
+    tr.warmup().unwrap();
+    let mut rng = Pcg64::seeded(2);
+    let batch = tr.model().batch;
+    let (x, y) = ds.batches(Split::Train, batch, &mut rng).next().unwrap();
+    tr.train_step(&x, &y).unwrap();
+    // one step = `batch` camera frames at 1.5 kHz
+    let expect = batch as f64 / 1500.0;
+    assert!((tr.sim_device_seconds() - expect).abs() < 1e-9);
+}
+
+#[test]
+fn bp_step_matches_host_oracle() {
+    // Same init (shared seed derivation), same batch → XLA bp_step and
+    // the pure-rust host trainer agree to f32 accumulation tolerance.
+    let c = cfg(Algo::Bp);
+    let ds = data::load_or_synth(c.seed, 64, 64).unwrap();
+    let mut tr = Trainer::new(c.clone()).unwrap();
+    tr.warmup().unwrap();
+
+    let layers = tr.model().layers.clone();
+    let medium = TransmissionMatrix::sample(0, 10, layers[1]);
+    let mut host = HostTrainer::new(
+        c.seed,
+        &layers,
+        c.lr,
+        HostAlgo::Bp,
+        Box::new(DigitalProjector::new(medium)),
+    );
+    // init parity
+    for (a, b) in tr.model().params.iter().zip(&host.mlp.params) {
+        assert_eq!(a.shape(), b.shape());
+        assert!(a.max_abs_diff(b) < 1e-6, "init diverges");
+    }
+
+    let mut rng = Pcg64::seeded(3);
+    let batch = tr.model().batch;
+    let (x, y) = ds.batches(Split::Train, batch, &mut rng).next().unwrap();
+    let l_xla = tr.train_step(&x, &y).unwrap();
+    let l_host = host.step(&x, &y).unwrap();
+    assert!((l_xla - l_host).abs() < 1e-4, "loss {l_xla} vs {l_host}");
+    for (i, (a, b)) in tr.model().params.iter().zip(&host.mlp.params).enumerate() {
+        let d = a.max_abs_diff(b);
+        assert!(d < 5e-3, "param {i} diverged by {d}");
+    }
+}
+
+#[test]
+fn eval_batch_matches_host_accuracy() {
+    let c = cfg(Algo::Bp);
+    let ds = data::load_or_synth(c.seed, 64, 200).unwrap();
+    let mut tr = Trainer::new(c.clone()).unwrap();
+    let ev = tr.evaluate(&ds, Split::Test).unwrap();
+
+    let layers = tr.model().layers.clone();
+    let host = litl::coordinator::host::HostMlp::init(c.seed, &layers);
+    let idxs: Vec<usize> = (0..200).collect();
+    let (x, y) = ds.gather(Split::Test, &idxs);
+    let host_acc = host.accuracy(&x, &y) as f64;
+    assert!(
+        (ev.accuracy - host_acc).abs() < 0.02,
+        "xla {} vs host {host_acc}",
+        ev.accuracy
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let c = cfg(Algo::DfaTernary);
+    let ds = data::load_or_synth(c.seed, 128, 64).unwrap();
+    let mut tr = Trainer::new(c.clone()).unwrap();
+    tr.warmup().unwrap();
+    let mut rng = Pcg64::seeded(4);
+    let batch = tr.model().batch;
+    for (x, y) in ds.batches(Split::Train, batch, &mut rng).take(3) {
+        tr.train_step(&x, &y).unwrap();
+    }
+    let path = std::env::temp_dir().join("litl_e2e_ckpt.bin");
+    let path = path.to_str().unwrap();
+    tr.save_checkpoint(path).unwrap();
+
+    let mut tr2 = Trainer::new(c).unwrap();
+    tr2.load_checkpoint(path).unwrap();
+    for (a, b) in tr.model().params.iter().zip(&tr2.model().params) {
+        assert_eq!(a, b);
+    }
+    assert_eq!(tr.model().t, tr2.model().t);
+}
+
+#[test]
+fn engine_rejects_wrong_shapes() {
+    let mut engine = Engine::new("artifacts").unwrap();
+    let bad = Tensor::zeros(&[1, 1]);
+    let err = engine
+        .call("project_exact", "small", &[&bad, &bad, &bad])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shape"), "{err}");
+}

@@ -1,0 +1,143 @@
+//! Cross-implementation parity: rust-native optics vs the JAX/Pallas
+//! twin (through the AOT artifacts).  This is the test that licenses
+//! using the fast native device for the headline experiments while the
+//! L1/L2 stack remains the ground truth.
+
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::{OpticalOpu, OpuParams};
+use litl::runtime::Engine;
+use litl::tensor::{matmul, Tensor};
+use litl::util::rng::Pcg64;
+
+fn ternary_batch(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg64::seeded(seed);
+    let data = (0..rows * cols)
+        .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+        .collect();
+    Tensor::from_vec(&[rows, cols], data)
+}
+
+fn carrier_tables(carrier: f64, npix: usize) -> (Tensor, Tensor) {
+    let mut cosk = Tensor::zeros(&[1, npix]);
+    let mut sink = Tensor::zeros(&[1, npix]);
+    for p in 0..npix {
+        let ph = carrier * p as f64;
+        cosk.data_mut()[p] = ph.cos() as f32;
+        sink.data_mut()[p] = ph.sin() as f32;
+    }
+    (cosk, sink)
+}
+
+/// `project_exact` artifact == host matmul, bit-for-f32-tolerance.
+#[test]
+fn project_exact_artifact_matches_host() {
+    let mut engine = Engine::new("artifacts").unwrap();
+    let cfg = engine.manifest().config("small").unwrap().clone();
+    let medium = TransmissionMatrix::sample(5, 10, cfg.modes);
+    let e = ternary_batch(cfg.batch, 10, 1);
+    let outs = engine
+        .call("project_exact", "small", &[&e, &medium.b_re, &medium.b_im])
+        .unwrap();
+    let host1 = matmul(&e, &medium.b_re);
+    let host2 = matmul(&e, &medium.b_im);
+    assert!(outs[0].max_abs_diff(&host1) < 1e-4);
+    assert!(outs[1].max_abs_diff(&host2) < 1e-4);
+}
+
+/// Native OPU and the `opu_project` artifact implement the SAME device:
+/// with noise disabled both recover the exact projection to ADC
+/// precision, and their outputs agree with each other to ~1 LSB.
+#[test]
+fn opu_project_artifact_matches_native_physics() {
+    let mut engine = Engine::new("artifacts").unwrap();
+    let cfg = engine.manifest().config("small").unwrap().clone();
+    let opu_params = engine.manifest().opu;
+    let medium = TransmissionMatrix::sample(6, 10, cfg.modes);
+    let e = ternary_batch(cfg.batch, 10, 2);
+    let npix = opu_params.oversample * cfg.modes;
+
+    // HLO twin, zero noise draws + huge photon budget.
+    let n1 = Tensor::zeros(&[cfg.batch, npix]);
+    let n2 = Tensor::zeros(&[cfg.batch, npix]);
+    let nph = Tensor::scalar(1e9);
+    let sigma = Tensor::scalar(0.0);
+    let (cosk, sink) = carrier_tables(opu_params.carrier, npix);
+    let outs = engine
+        .call(
+            "opu_project",
+            "small",
+            &[&e, &medium.b_re, &medium.b_im, &n1, &n2, &nph, &sigma,
+              &cosk, &sink],
+        )
+        .unwrap();
+
+    // Native device, same noise settings.
+    let mut params = opu_params;
+    params.n_ph = 1e9;
+    params.read_sigma = 0.0;
+    let mut native = OpticalOpu::new(params, medium.clone(), 3);
+    let (p1, p2) = native.project(&e).unwrap();
+
+    let lsb = (params.gain_for(10) / (4.0 * params.amp)) as f32;
+    let d1 = outs[0].max_abs_diff(&p1);
+    let d2 = outs[1].max_abs_diff(&p2);
+    assert!(d1 <= 1.5 * lsb, "re quadrature differs by {d1} (lsb {lsb})");
+    assert!(d2 <= 1.5 * lsb, "im quadrature differs by {d2}");
+
+    // And both match the exact projection to ADC precision.
+    let exact = matmul(&e, &medium.b_re);
+    assert!(outs[0].max_abs_diff(&exact) <= 1.5 * lsb);
+    assert!(p1.max_abs_diff(&exact) <= 1.5 * lsb);
+}
+
+/// With the manifest's production noise levels, the two implementations
+/// produce *statistically equivalent* devices: same recovery error
+/// distribution against the exact projection (they use different RNG
+/// streams, so values differ but the noise scale must match).
+#[test]
+fn noise_statistics_match_between_twins() {
+    let mut engine = Engine::new("artifacts").unwrap();
+    let cfg = engine.manifest().config("small").unwrap().clone();
+    let opu_params = engine.manifest().opu;
+    let medium = TransmissionMatrix::sample(8, 10, cfg.modes);
+    let e = ternary_batch(cfg.batch, 10, 4);
+    let npix = opu_params.oversample * cfg.modes;
+    let exact = matmul(&e, &medium.b_re);
+
+    // HLO twin with rust-supplied normal draws.
+    let mut rng = Pcg64::seeded(9);
+    let mut n1 = Tensor::zeros(&[cfg.batch, npix]);
+    let mut n2 = Tensor::zeros(&[cfg.batch, npix]);
+    rng.fill_normal(n1.data_mut());
+    rng.fill_normal(n2.data_mut());
+    let nph = Tensor::scalar(opu_params.n_ph);
+    let sigma = Tensor::scalar(opu_params.read_sigma);
+    let (cosk, sink) = carrier_tables(opu_params.carrier, npix);
+    let outs = engine
+        .call(
+            "opu_project",
+            "small",
+            &[&e, &medium.b_re, &medium.b_im, &n1, &n2, &nph, &sigma,
+              &cosk, &sink],
+        )
+        .unwrap();
+    let err_hlo = rms(&outs[0], &exact);
+
+    let mut native = OpticalOpu::new(opu_params, medium, 10);
+    let (p1, _) = native.project(&e).unwrap();
+    let err_native = rms(&p1, &exact);
+
+    let ratio = err_hlo / err_native;
+    assert!(
+        (0.66..1.5).contains(&ratio),
+        "noise scales differ: hlo={err_hlo} native={err_native}"
+    );
+}
+
+fn rms(a: &Tensor, b: &Tensor) -> f64 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.data().iter().zip(b.data()) {
+        acc += ((x - y) as f64).powi(2);
+    }
+    (acc / a.numel() as f64).sqrt()
+}

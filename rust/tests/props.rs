@@ -1,0 +1,198 @@
+//! Property tests over coordinator invariants (own mini-framework,
+//! `litl::util::check`): frame packing, routing, quantization, state
+//! round-trips — the "L3 proptest" requirement.
+
+use litl::coordinator::checkpoint;
+use litl::coordinator::projector::DigitalProjector;
+use litl::coordinator::service::{ProjectionService, ServiceConfig};
+use litl::metrics::Registry;
+use litl::optics::holography::demod_quadrature;
+use litl::optics::medium::TransmissionMatrix;
+use litl::tensor::{matmul, ternarize, Tensor};
+use litl::util::check::{forall, Gen, PairG, UsizeIn, VecF32};
+use litl::util::fft::{fft, ifft};
+use litl::util::rng::Pcg64;
+
+/// Any batching of any request sizes: every request gets exactly its own
+/// rows back (no loss, no duplication, no reordering, no cross-talk).
+#[test]
+fn prop_service_preserves_payloads() {
+    struct Sizes;
+    impl Gen<Vec<usize>> for Sizes {
+        fn generate(&self, rng: &mut Pcg64) -> Vec<usize> {
+            let n = 1 + rng.next_below(8) as usize;
+            (0..n).map(|_| 1 + rng.next_below(40) as usize).collect()
+        }
+        fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+            let mut out = Vec::new();
+            if v.len() > 1 {
+                out.push(v[..v.len() / 2].to_vec());
+            }
+            if v.iter().any(|&s| s > 1) {
+                out.push(v.iter().map(|_| 1).collect());
+            }
+            out
+        }
+    }
+
+    forall("service preserves payloads", &Sizes, |sizes| {
+        let medium = TransmissionMatrix::sample(3, 10, 8);
+        let svc = ProjectionService::start(
+            Box::new(DigitalProjector::new(medium.clone())),
+            10,
+            ServiceConfig {
+                max_batch: 32,
+                queue_depth: 64,
+            },
+            Registry::new(),
+        );
+        let client = svc.client();
+        let mut rng = Pcg64::seeded(sizes.iter().sum::<usize>() as u64);
+        // Submit all requests first (forces packing), then verify each.
+        let reqs: Vec<(Tensor, _)> = sizes
+            .iter()
+            .map(|&s| {
+                let mut e = Tensor::zeros(&[s, 10]);
+                for v in e.data_mut() {
+                    *v = (rng.next_below(3) as i64 - 1) as f32;
+                }
+                let reply = client.submit(e.clone()).unwrap();
+                (e, reply)
+            })
+            .collect();
+        let ok = reqs.into_iter().all(|(e, reply)| {
+            let (p1, p2) = reply.wait().unwrap().unwrap();
+            p1 == matmul(&e, &medium.b_re) && p2 == matmul(&e, &medium.b_im)
+        });
+        svc.shutdown();
+        ok
+    });
+}
+
+/// Eq. 4 invariants: range, sign preservation, idempotence, monotone
+/// sparsity in θ.
+#[test]
+fn prop_ternarize_invariants() {
+    let gen = PairG(
+        VecF32 {
+            len: UsizeIn(1, 200),
+            scale: 0.5,
+        },
+        UsizeIn(0, 100),
+    );
+    forall("ternarize invariants", &gen, |(vals, th_pct)| {
+        let theta = *th_pct as f32 / 100.0;
+        let x = Tensor::from_vec(&[1, vals.len()], vals.clone());
+        let t = ternarize(&x, theta);
+        let in_range = t.data().iter().all(|&v| v == 0.0 || v == 1.0 || v == -1.0);
+        let signs_ok = t
+            .data()
+            .iter()
+            .zip(vals)
+            .all(|(&q, &orig)| q == 0.0 || (q > 0.0) == (orig > 0.0));
+        // idempotent at any smaller-or-equal threshold once ternary
+        let twice = ternarize(&t, theta.min(0.9));
+        let sparser = ternarize(&x, theta + 0.2);
+        let nnz = |t: &Tensor| t.data().iter().filter(|&&v| v != 0.0).count();
+        in_range && signs_ok && twice == t && nnz(&sparser) <= nnz(&t)
+    });
+}
+
+/// Quadrature demod is exact (to float error) for ANY field when fed
+/// unquantized intensities: the algebraic identity behind the device.
+#[test]
+fn prop_quadrature_demod_identity() {
+    let gen = UsizeIn(1, 64);
+    forall("quadrature demod identity", &gen, |&modes| {
+        let mut rng = Pcg64::seeded(modes as u64);
+        let amp = 16.0f64;
+        let yre: Vec<f32> = (0..modes).map(|_| rng.next_normal_f32()).collect();
+        let yim: Vec<f32> = (0..modes).map(|_| rng.next_normal_f32()).collect();
+        // Build exact (ungained, unquantized) intensities.
+        let mut counts = vec![0.0f32; 4 * modes];
+        for m in 0..modes {
+            for o in 0..4 {
+                let ph = std::f64::consts::FRAC_PI_2 * (4 * m + o) as f64;
+                let fre = yre[m] as f64 + amp * ph.cos();
+                let fim = yim[m] as f64 + amp * ph.sin();
+                counts[4 * m + o] = (fre * fre + fim * fim) as f32;
+            }
+        }
+        let (re, im) = demod_quadrature(&counts, modes, amp, 1.0);
+        re.iter()
+            .zip(&yre)
+            .chain(im.iter().zip(&yim))
+            .all(|(a, b)| (a - b).abs() < 1e-3)
+    });
+}
+
+/// FFT ∘ IFFT = identity for any power-of-two complex vector.
+#[test]
+fn prop_fft_roundtrip() {
+    let gen = PairG(UsizeIn(0, 10), UsizeIn(0, u32::MAX as usize));
+    forall("fft roundtrip", &gen, |&(log_n, seed)| {
+        let n = 1usize << log_n;
+        let mut rng = Pcg64::seeded(seed as u64);
+        let x: Vec<(f64, f64)> = (0..n)
+            .map(|_| (rng.next_normal(), rng.next_normal()))
+            .collect();
+        let back = ifft(&fft(&x));
+        x.iter()
+            .zip(&back)
+            .all(|(a, b)| (a.0 - b.0).abs() < 1e-9 && (a.1 - b.1).abs() < 1e-9)
+    });
+}
+
+/// Checkpoints round-trip arbitrary tensor sets exactly.
+#[test]
+fn prop_checkpoint_roundtrip() {
+    struct Tensors;
+    impl Gen<Vec<Tensor>> for Tensors {
+        fn generate(&self, rng: &mut Pcg64) -> Vec<Tensor> {
+            let n = 1 + rng.next_below(6) as usize;
+            (0..n)
+                .map(|_| {
+                    let r = 1 + rng.next_below(8) as usize;
+                    let c = 1 + rng.next_below(8) as usize;
+                    Tensor::randn(&[r, c], rng, 1.0)
+                })
+                .collect()
+        }
+    }
+    let dir = std::env::temp_dir().join("litl_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let counter = std::sync::atomic::AtomicU64::new(0);
+    forall("checkpoint roundtrip", &Tensors, move |tensors| {
+        let n = counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        let path = dir.join(format!("ck_{n}.bin"));
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        checkpoint::save(&path, &refs, n as f32).unwrap();
+        let (back, step) = checkpoint::load(&path).unwrap();
+        step == n as f32 && back == *tensors
+    });
+}
+
+/// Medium sampling: unit mean power and linearity of projection for any
+/// dims (the physics the simulator must preserve at every size).
+#[test]
+fn prop_medium_linearity() {
+    let gen = PairG(UsizeIn(1, 30), UsizeIn(1, 60));
+    forall("medium linearity", &gen, |&(d_in, modes)| {
+        let medium = TransmissionMatrix::sample(7, d_in, modes);
+        let mut rng = Pcg64::seeded((d_in * 31 + modes) as u64);
+        let a = Tensor::randn(&[2, d_in], &mut rng, 1.0);
+        let b = Tensor::randn(&[2, d_in], &mut rng, 1.0);
+        let mut sum = a.clone();
+        for (s, &bv) in sum.data_mut().iter_mut().zip(b.data()) {
+            *s += bv;
+        }
+        let pa = matmul(&a, &medium.b_re);
+        let pb = matmul(&b, &medium.b_re);
+        let psum = matmul(&sum, &medium.b_re);
+        pa.data()
+            .iter()
+            .zip(pb.data())
+            .zip(psum.data())
+            .all(|((x, y), z)| (x + y - z).abs() < 1e-3)
+    });
+}

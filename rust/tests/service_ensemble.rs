@@ -1,0 +1,203 @@
+//! Integration: ensemble training through one shared projection service
+//! (the Perspectives scenario: "ensembles of networks" on a single OPU).
+//!
+//! N host DFA trainers share one simulated OPU via the projection
+//! service.  Checks: all members learn, the device is charged for every
+//! member's frames, and batching actually happens (fewer device batches
+//! than requests).
+
+use std::sync::{Arc, Mutex};
+
+use litl::coordinator::host::{HostMlp, HostTrainer};
+use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::service::{ProjectionService, ServiceConfig};
+use litl::coordinator::ProjectionClient;
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::OpuParams;
+use litl::tensor::{matmul, ternarize, Tensor};
+use litl::util::rng::Pcg64;
+
+const LAYERS: &[usize] = &[20, 16, 16, 10];
+
+/// Projector adapter that talks to the shared service.
+struct ServiceProjector {
+    client: ProjectionClient,
+    modes: usize,
+    frames: u64,
+}
+
+impl Projector for ServiceProjector {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        self.frames += frames.rows() as u64;
+        self.client.project(frames.clone())
+    }
+
+    fn modes(&self) -> usize {
+        self.modes
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.frames as f64 / 1500.0
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.sim_seconds() * 30.0
+    }
+
+    fn kind(&self) -> &'static str {
+        "service"
+    }
+}
+
+fn task_batch(seed: u64, b: usize) -> (Tensor, Tensor) {
+    let mut proto_rng = Pcg64::new(1234, 0);
+    let proto = Tensor::randn(&[10, 20], &mut proto_rng, 1.0);
+    let mut rng = Pcg64::seeded(seed);
+    let x = Tensor::randn(&[b, 20], &mut rng, 1.0);
+    let mut pt = Tensor::zeros(&[20, 10]);
+    for i in 0..10 {
+        for j in 0..20 {
+            *pt.at_mut(j, i) = proto.at(i, j);
+        }
+    }
+    let scores = matmul(&x, &pt);
+    let mut yoh = Tensor::zeros(&[b, 10]);
+    for r in 0..b {
+        let row = scores.row(r);
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        *yoh.at_mut(r, best) = 1.0;
+    }
+    (x, yoh)
+}
+
+#[test]
+fn ensemble_shares_one_opu() {
+    let modes = LAYERS[1];
+    let medium = TransmissionMatrix::sample(42, 10, modes);
+    let device = Box::new(NativeOpticalProjector::new(
+        OpuParams::default(),
+        medium,
+        7,
+    ));
+    let reg = Registry::new();
+    let svc = ProjectionService::start(
+        device,
+        10,
+        ServiceConfig {
+            max_batch: 96,
+            queue_depth: 64,
+        },
+        reg.clone(),
+    );
+
+    const MEMBERS: usize = 4;
+    const STEPS: u64 = 60;
+    const BATCH: usize = 16;
+    let results: Arc<Mutex<Vec<(usize, f32, f32, HostMlp)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let handles: Vec<_> = (0..MEMBERS)
+        .map(|i| {
+            let client = svc.client();
+            let results = results.clone();
+            std::thread::spawn(move || {
+                let projector = Box::new(ServiceProjector {
+                    client,
+                    modes,
+                    frames: 0,
+                });
+                let mut tr = HostTrainer::new(
+                    100 + i as u64, // independent inits: a real ensemble
+                    LAYERS,
+                    0.01,
+                    litl::coordinator::host::HostAlgo::DfaTernary { theta: 0.1 },
+                    projector,
+                );
+                let mut first = 0.0;
+                let mut last = 0.0;
+                for t in 0..STEPS {
+                    let (x, y) = task_batch(1000 + i as u64 * 500 + t, BATCH);
+                    let loss = tr.step(&x, &y).unwrap();
+                    if t == 0 {
+                        first = loss;
+                    }
+                    last = loss;
+                }
+                results.lock().unwrap().push((i, first, last, tr.mlp.clone()));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    svc.shutdown();
+
+    let results = results.lock().unwrap();
+    assert_eq!(results.len(), MEMBERS);
+    for (i, first, last, _) in results.iter() {
+        assert!(
+            last < &(0.95 * first),
+            "member {i}: first={first} last={last}"
+        );
+    }
+
+    // Ensemble members differ (independent seeds, shared physics).
+    let (_, _, _, m0) = &results[0];
+    let (_, _, _, m1) = &results[1];
+    assert!(m0.params[0].max_abs_diff(&m1.params[0]) > 1e-3);
+
+    // The device saw every frame, batched into fewer calls.
+    let snap = reg.snapshot();
+    let expected_frames = (MEMBERS as u64 * STEPS * BATCH as u64) as f64;
+    assert_eq!(snap["service_frames"], expected_frames);
+    assert!(
+        snap["service_batches"] < expected_frames / BATCH as f64,
+        "no batching happened: {} batches",
+        snap["service_batches"]
+    );
+
+    // Ensemble prediction beats (or matches) the worst member: sanity
+    // that the members are usable together.
+    let (px, py) = task_batch(9_999, 200);
+    let accs: Vec<f32> = results.iter().map(|(_, _, _, m)| m.accuracy(&px, &py)).collect();
+    let mut vote_correct = 0usize;
+    for r in 0..200 {
+        let mut scores = [0.0f32; 10];
+        for (_, _, _, m) in results.iter() {
+            let probs = m.forward(&row_of(&px, r)).probs;
+            for c in 0..10 {
+                scores[c] += probs.data()[c];
+            }
+        }
+        let pred = argmax(&scores);
+        let truth = argmax(&py.data()[r * 10..(r + 1) * 10]);
+        if pred == truth {
+            vote_correct += 1;
+        }
+    }
+    let vote_acc = vote_correct as f32 / 200.0;
+    let worst = accs.iter().cloned().fold(f32::INFINITY, f32::min);
+    assert!(
+        vote_acc >= worst - 0.02,
+        "ensemble {vote_acc} vs worst member {worst}"
+    );
+}
+
+fn row_of(x: &Tensor, r: usize) -> Tensor {
+    Tensor::from_vec(&[1, x.cols()], x.row(r).to_vec())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
