@@ -6,10 +6,11 @@
 //! the OPU's flat frame rate beats the GPU's shrinking mat-vec rate.
 
 use litl::bench::{fmt_rate, Bench};
+use litl::exec::ThreadPool;
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::{OpticalOpu, OpuParams};
 use litl::sim::power::{CpuModel, GpuModel, Holography, OpuModel};
-use litl::tensor::{matmul, Tensor};
+use litl::tensor::{matmul, matmul_pooled, Tensor};
 use litl::util::rng::Pcg64;
 
 fn ternary(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -39,6 +40,21 @@ fn main() -> anyhow::Result<()> {
     }
     let cpu = CpuModel::measured(cpu_macs);
     println!("  calibrated: {:.2} GMAC/s sustained\n", cpu_macs / 1e9);
+
+    // ---- measured: multi-core host baseline (honest silicon row) ----
+    // Row-block-parallel matmul, bitwise identical to the serial path.
+    let cores = litl::exec::host_cores();
+    let pool = ThreadPool::new(cores, 4 * cores);
+    for modes in [1024usize, 4096] {
+        let medium = TransmissionMatrix::sample(1, d_in, modes);
+        let e = ternary(batch, d_in, 2);
+        bench.run(
+            &format!("host matmul pooled x{cores} d_out={modes} batch={batch}"),
+            || {
+                let _ = matmul_pooled(&e, &medium.b_re, &pool);
+            },
+        );
+    }
 
     // ---- measured: the optics simulation itself ----
     for modes in [256usize, 1024] {

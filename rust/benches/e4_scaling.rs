@@ -11,9 +11,17 @@
 //!    transmission-matrix rows (the dense matrix would be 10^5×10^5×8 B =
 //!    80 GB — never materialized; RSS stays flat).
 
+use std::collections::BTreeMap;
+
 use litl::bench::{fmt_rate, fmt_s, Bench};
+use litl::coordinator::farm::ProjectorFarm;
+use litl::coordinator::projector::Projector;
 use litl::optics::medium::TransmissionMatrix;
+use litl::optics::OpuParams;
 use litl::sim::power::{Holography, OpuModel};
+use litl::tensor::Tensor;
+use litl::util::json::Json;
+use litl::util::rng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
     litl::util::logging::init();
@@ -82,6 +90,95 @@ fn main() -> anyhow::Result<()> {
          the frame clock (1/1500 s) is the only time axis.  The sim cost above\n\
          is what this sandbox pays to *emulate* the optics numerically."
     );
+
+    // ---- E4.3: projector-farm shard sweep ----
+    //
+    // The multi-device direction of the follow-up work: shard the output
+    // modes of one projection across N virtual OPUs and run the shards
+    // concurrently.  Measured wall-clock here is the *simulation* cost of
+    // the optics; the physical farm's wall clock stays one frame period
+    // while capacity scales (see `OpuModel::farm`, printed below).
+    println!("\n== E4.3: projector-farm shard sweep (measured, this host) ==");
+    let cores = litl::exec::host_cores();
+    let (farm_d_in, farm_modes, batch) = (10usize, 2048usize, 32usize);
+    println!(
+        "host cores: {cores} | d_in={farm_d_in} modes={farm_modes} batch={batch} \
+         (optical physics sim)"
+    );
+    println!(
+        "{:>8} {:>12} {:>14} {:>10} {:>16}",
+        "shards", "mean/batch", "frames/s", "speedup", "dev-s/batch"
+    );
+    let medium = TransmissionMatrix::sample(21, farm_d_in, farm_modes);
+    let mut rng = Pcg64::seeded(4);
+    let mut e = Tensor::zeros(&[batch, farm_d_in]);
+    for v in e.data_mut() {
+        *v = (rng.next_below(3) as i64 - 1) as f32;
+    }
+    let mut sweep = Bench::quick();
+    let mut baseline_mean = 0.0f64;
+    let mut rows: Vec<Json> = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 9, shards)?;
+        // Per-batch device-seconds from the first (warm-up) batch: the
+        // accumulator after the bench would include a budget-dependent
+        // iteration count and not be comparable across rows.
+        farm.project(&e)?;
+        let dev_s_batch = farm.sim_seconds();
+        let m = sweep.run(&format!("farm shards={shards}"), || {
+            let _ = farm.project(&e).unwrap();
+        });
+        if shards == 1 {
+            baseline_mean = m.mean_s;
+        }
+        let speedup = baseline_mean / m.mean_s;
+        let frames_per_s = batch as f64 / m.mean_s;
+        println!(
+            "{:>8} {:>12} {:>14} {:>10} {:>16}",
+            shards,
+            fmt_s(m.mean_s),
+            fmt_rate(frames_per_s),
+            format!("{speedup:.2}x"),
+            format!("{dev_s_batch:.4} s"),
+        );
+        let mut row = BTreeMap::new();
+        row.insert("shards".to_string(), Json::Num(shards as f64));
+        row.insert("mean_s".to_string(), Json::Num(m.mean_s));
+        row.insert("frames_per_s".to_string(), Json::Num(frames_per_s));
+        row.insert("speedup_vs_1".to_string(), Json::Num(speedup));
+        row.insert(
+            "sim_device_seconds_per_batch".to_string(),
+            Json::Num(dev_s_batch),
+        );
+        rows.push(Json::Obj(row));
+    }
+    // Machine-readable record in the bench JSON format (one object/line).
+    let mut record = BTreeMap::new();
+    record.insert("bench".to_string(), Json::Str("e4_shard_sweep".to_string()));
+    record.insert("modes".to_string(), Json::Num(farm_modes as f64));
+    record.insert("batch".to_string(), Json::Num(batch as f64));
+    record.insert("d_in".to_string(), Json::Num(farm_d_in as f64));
+    record.insert("host_cores".to_string(), Json::Num(cores as f64));
+    record.insert("results".to_string(), Json::Arr(rows));
+    println!("{}", Json::Obj(record).to_string_compact());
+
+    // Physical-farm envelope: same frame clock, N× capacity and power.
+    println!("\nmodeled physical farm (off-axis paper device × N):");
+    println!(
+        "{:>8} {:>12} {:>14} {:>14}",
+        "devices", "proj/s", "max out", "eff. MAC/s"
+    );
+    let base = OpuModel::paper(Holography::OffAxis);
+    for n in [1usize, 2, 4, 8] {
+        let farm = base.farm(n);
+        println!(
+            "{:>8} {:>12} {:>14} {:>14}",
+            n,
+            format!("{:.0}", farm.frame_rate_hz),
+            farm.max_output,
+            fmt_rate(farm.effective_macs(base.max_input, farm.max_output).unwrap()),
+        );
+    }
 
     // Sanity: projection statistics hold at scale (unit-variance modes).
     let e: Vec<f32> = (0..d_in)

@@ -90,6 +90,10 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Simulated-OPU frame accounting on/off (timing model).
     pub account_frames: bool,
+    /// Virtual projector devices: mode-shard the projection across N
+    /// concurrent devices (`ProjectorFarm`).  1 = the classic single
+    /// device, bit-identical to the pre-farm path.
+    pub shards: usize,
 }
 
 impl Default for TrainConfig {
@@ -110,6 +114,7 @@ impl Default for TrainConfig {
             out_dir: None,
             eval_every: 0,
             account_frames: true,
+            shards: 1,
         }
     }
 }
@@ -142,6 +147,13 @@ impl TrainConfig {
             "out_dir" => self.out_dir = Some(value.want_str()?.to_string()),
             "eval_every" => self.eval_every = value.want_int()? as usize,
             "account_frames" => self.account_frames = value.want_bool()?,
+            "shards" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("shards must be >= 1, got {n}");
+                }
+                self.shards = n as usize;
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -206,6 +218,15 @@ mod tests {
         assert_eq!(c.algo, Algo::Bp);
         assert_eq!(c.lr, 0.001);
         assert!(!c.account_frames);
+    }
+
+    #[test]
+    fn shards_knob_defaults_and_validates() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.shards, 1);
+        c.set_kv("shards=4").unwrap();
+        assert_eq!(c.shards, 4);
+        assert!(c.set_kv("shards=0").is_err());
     }
 
     #[test]

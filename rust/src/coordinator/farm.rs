@@ -1,0 +1,481 @@
+//! The projector farm: N virtual OPU devices behind one [`Projector`].
+//!
+//! The paper's scaling story ("Perspectives": inputs and outputs up to
+//! 1e6, trillion-parameter projections) outgrows a single camera region.
+//! A [`ProjectorFarm`] models the next step the follow-up work takes —
+//! multiple co-processors driven as one logical device — by sharding the
+//! **output-mode axis** across virtual devices:
+//!
+//! ```text
+//!            ┌── shard 0: medium[:, 0..m₀]    → OPU₀ ─┐
+//!  e [B,d]──▶│   shard 1: medium[:, m₀..m₁]   → OPU₁  ├──▶ concat → [B, modes]
+//!            └── shard k: medium[:, …]        → OPUₖ ─┘
+//! ```
+//!
+//! Every shard owns its own [`TransmissionMatrix`] slice, camera-noise
+//! RNG *stream* (same seed, decorrelated draws), simulated clock and
+//! energy account; shards execute concurrently on an
+//! [`exec::ThreadPool`] scope and the per-shard quadratures are
+//! concatenated in shard order — results are deterministic for a given
+//! seed regardless of scheduling.
+//!
+//! Invariants (tested here and in `rust/tests/farm_parity.rs`):
+//! * `shards == 1` is **bit-identical** to the plain single-device path;
+//! * at any shard count, the farm equals a single device over the
+//!   equivalent stacked medium (exactly for digital shards; to fp/ADC
+//!   tolerance for noiseless optical shards);
+//! * `sim_seconds()`/`energy_joules()` are *device-second* sums over
+//!   shards (capacity accounting); `sim_seconds_wall()` is their max
+//!   (what a wall clock would see, since shards run in parallel);
+//! * a panicking shard is contained: the batch fails with an error, the
+//!   panic is counted on the pool and surfaced through `metrics/`.
+//!
+//! [`exec::ThreadPool`]: crate::exec::ThreadPool
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::exec::ThreadPool;
+use crate::metrics::{Counter, Registry};
+use crate::optics::medium::TransmissionMatrix;
+use crate::optics::{OpuParams, NOISE_STREAM_BASE};
+use crate::tensor::Tensor;
+
+use super::projector::{DigitalProjector, NativeOpticalProjector, Projector};
+
+/// Metric name for shard batch failures (panic or device error).
+pub const SHARD_FAILURES: &str = "farm_shard_failures";
+/// Metric name for farm batches executed.
+pub const FARM_BATCHES: &str = "farm_batches";
+
+/// A sharded, batched projection layer over N virtual devices.
+pub struct ProjectorFarm {
+    shards: Vec<Box<dyn Projector + Send>>,
+    mode_counts: Vec<usize>,
+    modes_total: usize,
+    pool: Arc<ThreadPool>,
+    kind: &'static str,
+    shard_failures: Counter,
+    batches: Counter,
+}
+
+fn default_pool(shards: usize, registry: &Registry) -> Arc<ThreadPool> {
+    let cores = crate::exec::host_cores();
+    Arc::new(ThreadPool::with_registry(
+        shards.clamp(1, cores),
+        2 * shards.max(1),
+        registry,
+    ))
+}
+
+impl ProjectorFarm {
+    /// Optical farm: `shards` simulated OPUs over contiguous mode ranges
+    /// of `medium`.  Shard `i` draws camera noise from PCG stream
+    /// `NOISE_STREAM_BASE + i` of `noise_seed`, so `shards=1` reproduces
+    /// the standalone [`NativeOpticalProjector`] bit-for-bit.
+    pub fn optical(
+        params: OpuParams,
+        medium: &TransmissionMatrix,
+        noise_seed: u64,
+        shards: usize,
+    ) -> Result<Self> {
+        Self::optical_with(params, medium, noise_seed, shards, Registry::new())
+    }
+
+    /// [`ProjectorFarm::optical`] with an explicit metrics registry (the
+    /// trainer passes its own so shard failures land next to the
+    /// training counters).
+    pub fn optical_with(
+        params: OpuParams,
+        medium: &TransmissionMatrix,
+        noise_seed: u64,
+        shards: usize,
+        registry: Registry,
+    ) -> Result<Self> {
+        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
+        anyhow::ensure!(
+            shards <= medium.modes,
+            "cannot shard {} modes across {shards} devices",
+            medium.modes
+        );
+        let devices: Vec<Box<dyn Projector + Send>> = medium
+            .split_modes(shards)
+            .into_iter()
+            .enumerate()
+            .map(|(i, slice)| {
+                Box::new(NativeOpticalProjector::with_noise_stream(
+                    params,
+                    slice,
+                    noise_seed,
+                    NOISE_STREAM_BASE + i as u64,
+                )) as Box<dyn Projector + Send>
+            })
+            .collect();
+        Self::from_shards(devices, "farm-optical", registry)
+    }
+
+    /// Digital farm: the silicon comparator sharded the same way.
+    /// Exactly equal (not just within tolerance) to a single
+    /// [`DigitalProjector`] over the full medium, because each output
+    /// column's dot product is computed identically either way.
+    pub fn digital(medium: &TransmissionMatrix, shards: usize) -> Result<Self> {
+        Self::digital_with(medium, shards, Registry::new())
+    }
+
+    /// [`ProjectorFarm::digital`] with an explicit metrics registry.
+    pub fn digital_with(
+        medium: &TransmissionMatrix,
+        shards: usize,
+        registry: Registry,
+    ) -> Result<Self> {
+        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
+        anyhow::ensure!(
+            shards <= medium.modes,
+            "cannot shard {} modes across {shards} devices",
+            medium.modes
+        );
+        let devices: Vec<Box<dyn Projector + Send>> = medium
+            .split_modes(shards)
+            .into_iter()
+            .map(|slice| Box::new(DigitalProjector::new(slice)) as Box<dyn Projector + Send>)
+            .collect();
+        Self::from_shards(devices, "farm-digital", registry)
+    }
+
+    /// Assemble a farm from pre-built shard devices (mode ranges are
+    /// taken from each device's `modes()`; outputs concatenate in shard
+    /// order).  The execution pool is sized to the shard count.
+    pub fn from_shards(
+        shards: Vec<Box<dyn Projector + Send>>,
+        kind: &'static str,
+        registry: Registry,
+    ) -> Result<Self> {
+        let pool = default_pool(shards.len(), &registry);
+        Self::from_shards_pooled(shards, kind, registry, pool)
+    }
+
+    /// [`ProjectorFarm::from_shards`] over a caller-supplied pool, so
+    /// several farms/components in one process can share worker threads.
+    /// Note: shard panics are counted on the *supplied pool's* registry
+    /// (wherever it was built with [`ThreadPool::with_registry`]), while
+    /// [`SHARD_FAILURES`]/[`FARM_BATCHES`] land on `registry`.
+    pub fn from_shards_pooled(
+        shards: Vec<Box<dyn Projector + Send>>,
+        kind: &'static str,
+        registry: Registry,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Self> {
+        anyhow::ensure!(!shards.is_empty(), "farm needs at least one shard");
+        let mode_counts: Vec<usize> = shards.iter().map(|s| s.modes()).collect();
+        let modes_total = mode_counts.iter().sum();
+        Ok(ProjectorFarm {
+            shards,
+            mode_counts,
+            modes_total,
+            pool,
+            kind,
+            shard_failures: registry.counter(SHARD_FAILURES),
+            batches: registry.counter(FARM_BATCHES),
+        })
+    }
+
+    /// Number of virtual devices.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Mode count of each shard, in concatenation order.
+    pub fn mode_counts(&self) -> &[usize] {
+        &self.mode_counts
+    }
+
+    /// Per-shard simulated device-seconds.
+    pub fn shard_sim_seconds(&self) -> Vec<f64> {
+        self.shards.iter().map(|s| s.sim_seconds()).collect()
+    }
+
+    /// Wall-clock view of simulated time: shards expose concurrently, so
+    /// the farm's critical path is the slowest shard.
+    pub fn sim_seconds_wall(&self) -> f64 {
+        self.shards
+            .iter()
+            .map(|s| s.sim_seconds())
+            .fold(0.0, f64::max)
+    }
+
+    /// The shared execution pool (shard panics are counted here).
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+}
+
+impl Projector for ProjectorFarm {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        self.batches.inc();
+        // All shard counts (including 1) take the same scoped path, so
+        // panic containment and failure accounting are uniform.  Bit
+        // parity at `shards=1` holds because the gather is a pure copy
+        // of the single shard's output.
+        let b = frames.rows();
+        let n = self.shards.len();
+        // One result slot per shard; slots are disjoint `&mut`s handed
+        // to the scoped shard jobs, so no locking and a deterministic
+        // gather order.  `None` after the scope means the shard job
+        // panicked (the pool contains and counts the panic).
+        let mut slots: Vec<Option<Result<(Tensor, Tensor)>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        self.pool.scope(|scope| {
+            for (shard, slot) in self.shards.iter_mut().zip(slots.iter_mut()) {
+                scope.submit(move || {
+                    *slot = Some(shard.project(frames));
+                });
+            }
+        });
+
+        // Inspect every slot before failing, so concurrent shard
+        // failures are all counted (the pool's panic counter and
+        // SHARD_FAILURES must agree batch by batch).
+        let mut outputs: Vec<(Tensor, Tensor)> = Vec::with_capacity(n);
+        let mut failures: Vec<String> = Vec::new();
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(pair)) => outputs.push(pair),
+                Some(Err(e)) => failures.push(format!("shard {i}: {e:#}")),
+                None => failures.push(format!(
+                    "shard {i}: panicked (contained; see pool panic counter)"
+                )),
+            }
+        }
+        if !failures.is_empty() {
+            self.shard_failures.add(failures.len() as u64);
+            anyhow::bail!(
+                "farm batch failed on {}/{n} shards: {}",
+                failures.len(),
+                failures.join("; ")
+            );
+        }
+
+        let mut p1 = Tensor::zeros(&[b, self.modes_total]);
+        let mut p2 = Tensor::zeros(&[b, self.modes_total]);
+        let mut col = 0usize;
+        for ((s1, s2), &mc) in outputs.iter().zip(&self.mode_counts) {
+            debug_assert_eq!(s1.shape(), &[b, mc]);
+            for r in 0..b {
+                let dst = r * self.modes_total + col;
+                p1.data_mut()[dst..dst + mc]
+                    .copy_from_slice(&s1.data()[r * mc..(r + 1) * mc]);
+                p2.data_mut()[dst..dst + mc]
+                    .copy_from_slice(&s2.data()[r * mc..(r + 1) * mc]);
+            }
+            col += mc;
+        }
+        Ok((p1, p2))
+    }
+
+    fn modes(&self) -> usize {
+        self.modes_total
+    }
+
+    /// Device-seconds summed over shards (N devices each charge their
+    /// own frame clock; capacity accounting, not wall clock).
+    fn sim_seconds(&self) -> f64 {
+        self.shards.iter().map(|s| s.sim_seconds()).sum()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.shards.iter().map(|s| s.energy_joules()).sum()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.shards.iter().any(|s| s.requires_ternary())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul;
+    use crate::util::rng::Pcg64;
+
+    fn tern(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    fn noiseless() -> OpuParams {
+        OpuParams {
+            n_ph: -1.0,
+            read_sigma: 0.0,
+            ..OpuParams::default()
+        }
+    }
+
+    #[test]
+    fn one_shard_optical_is_bit_identical_to_single_device() {
+        let medium = TransmissionMatrix::sample(5, 10, 32);
+        let mut single =
+            NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 77);
+        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 77, 1).unwrap();
+        let e = tern(6, 10, 1);
+        let (s1, s2) = single.project(&e).unwrap();
+        let (f1, f2) = farm.project(&e).unwrap();
+        assert_eq!(s1, f1);
+        assert_eq!(s2, f2);
+        assert_eq!(single.sim_seconds(), farm.sim_seconds());
+        assert_eq!(single.energy_joules(), farm.energy_joules());
+    }
+
+    #[test]
+    fn digital_farm_equals_stacked_single_device_exactly() {
+        let medium = TransmissionMatrix::sample(6, 10, 40);
+        let e = tern(5, 10, 2);
+        let want1 = matmul(&e, &medium.b_re);
+        let want2 = matmul(&e, &medium.b_im);
+        for shards in [2usize, 4, 7] {
+            let mut farm = ProjectorFarm::digital(&medium, shards).unwrap();
+            let (p1, p2) = farm.project(&e).unwrap();
+            assert_eq!(p1, want1, "{shards} shards");
+            assert_eq!(p2, want2, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn noiseless_optical_farm_matches_stacked_device() {
+        let medium = TransmissionMatrix::sample(7, 10, 48);
+        let e = tern(4, 10, 3);
+        let mut single = NativeOpticalProjector::new(noiseless(), medium.clone(), 5);
+        let (want1, want2) = single.project(&e).unwrap();
+        for shards in [2usize, 4, 7] {
+            let mut farm = ProjectorFarm::optical(noiseless(), &medium, 5, shards).unwrap();
+            let (p1, p2) = farm.project(&e).unwrap();
+            // Noise off → the physics is deterministic and column-local,
+            // so sharding cannot change any output mode.
+            assert!(p1.max_abs_diff(&want1) < 1e-5, "{shards} shards");
+            assert!(p2.max_abs_diff(&want2) < 1e-5, "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn accounting_sums_across_shards() {
+        let medium = TransmissionMatrix::sample(8, 10, 30);
+        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 9, 3).unwrap();
+        let e = tern(12, 10, 4);
+        farm.project(&e).unwrap();
+        // Each of the 3 virtual devices exposes 12 frames at 1.5 kHz.
+        let per_shard = 12.0 / 1500.0;
+        let shard_secs = farm.shard_sim_seconds();
+        assert_eq!(shard_secs.len(), 3);
+        for s in &shard_secs {
+            assert!((s - per_shard).abs() < 1e-12);
+        }
+        assert!((farm.sim_seconds() - 3.0 * per_shard).abs() < 1e-12);
+        assert!((farm.sim_seconds_wall() - per_shard).abs() < 1e-12);
+        assert!((farm.energy_joules() - 3.0 * per_shard * 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noisy_farm_is_deterministic_per_seed_and_decorrelated_across_shards() {
+        let medium = TransmissionMatrix::sample(9, 10, 24);
+        let e = tern(4, 10, 5);
+        let run = |seed: u64| {
+            let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, seed, 4).unwrap();
+            farm.project(&e).unwrap().0
+        };
+        assert_eq!(run(11), run(11), "same seed, same result");
+        assert_ne!(run(11), run(12), "different noise seeds differ");
+    }
+
+    struct PanickingShard;
+
+    impl Projector for PanickingShard {
+        fn project(&mut self, _: &Tensor) -> Result<(Tensor, Tensor)> {
+            panic!("injected shard crash");
+        }
+        fn modes(&self) -> usize {
+            4
+        }
+        fn sim_seconds(&self) -> f64 {
+            0.0
+        }
+        fn energy_joules(&self) -> f64 {
+            0.0
+        }
+        fn kind(&self) -> &'static str {
+            "panicking"
+        }
+    }
+
+    #[test]
+    fn shard_failure_is_contained_and_observable() {
+        let medium = TransmissionMatrix::sample(10, 10, 8);
+        let registry = Registry::new();
+        let shards: Vec<Box<dyn Projector + Send>> = vec![
+            Box::new(DigitalProjector::new(medium.clone())),
+            Box::new(PanickingShard),
+        ];
+        let mut farm =
+            ProjectorFarm::from_shards(shards, "farm-test", registry.clone()).unwrap();
+        let err = farm.project(&tern(2, 10, 6)).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        let snap = registry.snapshot();
+        assert_eq!(snap[SHARD_FAILURES], 1.0);
+        assert_eq!(snap[crate::exec::pool::PANIC_COUNTER], 1.0);
+        assert_eq!(farm.pool().panic_count(), 1);
+        // The farm object stays usable for the next batch.
+        assert_eq!(farm.modes(), medium.modes + 4);
+    }
+
+    #[test]
+    fn concurrent_shard_failures_are_all_counted() {
+        let registry = Registry::new();
+        let shards: Vec<Box<dyn Projector + Send>> = vec![
+            Box::new(PanickingShard),
+            Box::new(DigitalProjector::new(TransmissionMatrix::sample(1, 10, 8))),
+            Box::new(PanickingShard),
+            Box::new(PanickingShard),
+        ];
+        let mut farm =
+            ProjectorFarm::from_shards(shards, "farm-test", registry.clone()).unwrap();
+        let err = farm.project(&tern(2, 10, 8)).unwrap_err().to_string();
+        assert!(err.contains("3/4 shards"), "{err}");
+        let snap = registry.snapshot();
+        assert_eq!(snap[SHARD_FAILURES], 3.0);
+        assert_eq!(snap[crate::exec::pool::PANIC_COUNTER], 3.0);
+    }
+
+    #[test]
+    fn one_shard_panic_is_contained_too() {
+        // No fast path may bypass containment: a 1-shard farm must turn
+        // a device panic into an error, same as any other shard count.
+        let registry = Registry::new();
+        let shards: Vec<Box<dyn Projector + Send>> = vec![Box::new(PanickingShard)];
+        let mut farm = ProjectorFarm::from_shards(shards, "farm-test", registry.clone()).unwrap();
+        let err = farm.project(&tern(2, 10, 7)).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        assert_eq!(registry.snapshot()[SHARD_FAILURES], 1.0);
+    }
+
+    #[test]
+    fn rejects_more_shards_than_modes() {
+        let medium = TransmissionMatrix::sample(1, 10, 4);
+        assert!(ProjectorFarm::optical(OpuParams::default(), &medium, 1, 5).is_err());
+        assert!(ProjectorFarm::digital(&medium, 0).is_err());
+    }
+
+    #[test]
+    fn requires_ternary_follows_the_shards() {
+        let medium = TransmissionMatrix::sample(2, 10, 16);
+        let optical = ProjectorFarm::optical(OpuParams::default(), &medium, 1, 2).unwrap();
+        assert!(optical.requires_ternary());
+        let digital = ProjectorFarm::digital(&medium, 2).unwrap();
+        assert!(!digital.requires_ternary());
+    }
+}

@@ -8,10 +8,16 @@
 //!
 //! * [`projector`] — the device abstraction: optical (native physics or
 //!   HLO twin) and digital (exact) projectors behind one trait.
+//! * [`farm`] — the sharded multi-device layer: N virtual OPUs over
+//!   contiguous mode ranges of one medium, executed concurrently on the
+//!   `exec` pool and concatenated deterministically.  `shards=1` is
+//!   bit-identical to the single-device path; `--shards N` on the CLI
+//!   routes the trainer through it.
 //! * [`service`] — the projection service: a shared device fed by a
 //!   dynamic frame batcher, so concurrent clients (ensemble members,
 //!   eval probes, ablation sweeps) share OPU frames.  One optical frame
 //!   carries the feedback for *every* hidden layer (re/im quadratures).
+//!   The device behind the service may itself be a [`farm::ProjectorFarm`].
 //! * [`trainer`] — the training loop over the AOT artifacts: forward →
 //!   ternarize → optical projection → fused DFA+Adam apply; plus the
 //!   fully-fused digital DFA and BP baselines.
@@ -24,12 +30,14 @@
 
 pub mod align;
 pub mod checkpoint;
+pub mod farm;
 pub mod host;
 pub mod optim;
 pub mod projector;
 pub mod service;
 pub mod trainer;
 
+pub use farm::ProjectorFarm;
 pub use projector::{DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector};
 pub use service::{ProjectionClient, ProjectionService};
 pub use trainer::{EvalResult, TrainReport, Trainer};

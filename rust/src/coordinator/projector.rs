@@ -13,13 +13,16 @@
 //! All three expose the same trait so the trainer and the projection
 //! service are device-agnostic, and all three account simulated time.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::exec::ThreadPool;
 use crate::optics::medium::TransmissionMatrix;
 use crate::optics::{OpticalOpu, OpuParams};
 use crate::runtime::Engine;
 use crate::sim::power::GpuModel;
-use crate::tensor::{matmul, Tensor};
+use crate::tensor::{matmul, matmul_pooled, Tensor};
 use crate::util::rng::Pcg64;
 
 /// A device that projects ternary/float error frames through the fixed
@@ -59,6 +62,19 @@ impl NativeOpticalProjector {
     pub fn new(params: OpuParams, medium: TransmissionMatrix, noise_seed: u64) -> Self {
         NativeOpticalProjector {
             opu: OpticalOpu::new(params, medium, noise_seed),
+        }
+    }
+
+    /// Shard constructor: same seed, independent noise stream (see
+    /// [`crate::optics::NOISE_STREAM_BASE`]).
+    pub fn with_noise_stream(
+        params: OpuParams,
+        medium: TransmissionMatrix,
+        noise_seed: u64,
+        noise_stream: u64,
+    ) -> Self {
+        NativeOpticalProjector {
+            opu: OpticalOpu::with_noise_stream(params, medium, noise_seed, noise_stream),
         }
     }
 
@@ -204,6 +220,10 @@ pub struct DigitalProjector {
     projections: u64,
     batches: u64,
     batch_hint: usize,
+    /// Optional host pool: row-block-parallel matmuls (bitwise identical
+    /// to the serial path) keep the silicon baseline an honest
+    /// comparator when the farm gets multiple cores.
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl DigitalProjector {
@@ -214,7 +234,14 @@ impl DigitalProjector {
             projections: 0,
             batches: 0,
             batch_hint: 1,
+            pool: None,
         }
+    }
+
+    /// Run the host matmuls row-block-parallel on `pool`.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
     }
 
     pub fn medium(&self) -> &TransmissionMatrix {
@@ -224,8 +251,16 @@ impl DigitalProjector {
 
 impl Projector for DigitalProjector {
     fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
-        let p1 = matmul(frames, &self.medium.b_re);
-        let p2 = matmul(frames, &self.medium.b_im);
+        let (p1, p2) = match &self.pool {
+            Some(pool) => (
+                matmul_pooled(frames, &self.medium.b_re, pool),
+                matmul_pooled(frames, &self.medium.b_im, pool),
+            ),
+            None => (
+                matmul(frames, &self.medium.b_re),
+                matmul(frames, &self.medium.b_im),
+            ),
+        };
         self.projections += frames.rows() as u64;
         self.batches += 1;
         self.batch_hint = frames.rows();
@@ -279,6 +314,19 @@ mod tests {
         assert_eq!(p1, matmul(&e, &medium.b_re));
         assert_eq!(p2, matmul(&e, &medium.b_im));
         assert!(proj.sim_seconds() > 0.0);
+    }
+
+    #[test]
+    fn pooled_digital_matches_serial_digital() {
+        let medium = TransmissionMatrix::sample(3, 10, 48);
+        let pool = Arc::new(ThreadPool::new(3, 16));
+        let mut serial = DigitalProjector::new(medium.clone());
+        let mut pooled = DigitalProjector::new(medium).with_pool(pool);
+        let e = tern(9, 10, 4);
+        let (s1, s2) = serial.project(&e).unwrap();
+        let (p1, p2) = pooled.project(&e).unwrap();
+        assert_eq!(s1, p1);
+        assert_eq!(s2, p2);
     }
 
     #[test]

@@ -1,8 +1,13 @@
-//! The projection service: one shared OPU, many clients.
+//! The projection service: one shared projection device, many clients.
 //!
-//! The OPU is a single physical device with a frame clock; everything in
-//! the process that needs a random projection — each ensemble member's
-//! trainer, alignment probes, calibration — goes through this service.
+//! The device behind the service is anything implementing
+//! [`Projector`] + `Send` — a single OPU with a frame clock, or a
+//! [`ProjectorFarm`](super::farm::ProjectorFarm) of N virtual devices
+//! (the service's dynamic batching and the farm's mode sharding
+//! compose: requests are packed into shared device batches, then each
+//! batch fans out across the farm's shards).  Everything in the process
+//! that needs a random projection — each ensemble member's trainer,
+//! alignment probes, calibration — goes through this service.
 //! A dispatcher thread drains the request queue and packs pending
 //! requests into *shared device batches* (dynamic batching, the same
 //! motif as vLLM's router at a different timescale: here the deadline is
@@ -320,6 +325,38 @@ mod tests {
         bad.data_mut()[0] = 0.5;
         let err = client.project(bad).unwrap_err().to_string();
         assert!(err.contains("device error"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_farm_behind_the_service_matches_single_device() {
+        // The farm is just another device to the service: dynamic
+        // batching in front, mode sharding behind, payloads intact.
+        let medium = TransmissionMatrix::sample(11, 10, 24);
+        let farm = Box::new(
+            crate::coordinator::farm::ProjectorFarm::digital(&medium, 4).unwrap(),
+        );
+        let svc = ProjectionService::start(
+            farm,
+            10,
+            ServiceConfig {
+                max_batch: 32,
+                queue_depth: 64,
+            },
+            Registry::new(),
+        );
+        let client = svc.client();
+        let replies: Vec<_> = (0..6)
+            .map(|i| {
+                let e = tern(3, 50 + i);
+                (e.clone(), client.submit(e).unwrap())
+            })
+            .collect();
+        for (e, reply) in replies {
+            let (p1, p2) = reply.wait().unwrap().unwrap();
+            assert_eq!(p1, matmul(&e, &medium.b_re));
+            assert_eq!(p2, matmul(&e, &medium.b_im));
+        }
         svc.shutdown();
     }
 

@@ -26,6 +26,7 @@ use crate::runtime::{Engine, Model};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
+use super::farm::ProjectorFarm;
 use super::projector::{
     DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector,
 };
@@ -98,6 +99,19 @@ impl Trainer {
         // "optical vs digital" differs only by the physics (DESIGN.md §2).
         let medium = TransmissionMatrix::sample(cfg.seed ^ 0xB, err_dim, bc.modes);
 
+        // `shards > 1` routes the projection through the sharded farm
+        // (N virtual devices over mode ranges of the same medium);
+        // `shards == 1` keeps the classic single-device objects, whose
+        // outputs the farm reproduces bit-for-bit anyway.  Sharding only
+        // exists on the projector path — reject it loudly elsewhere
+        // rather than silently running single-device.
+        anyhow::ensure!(
+            cfg.shards <= 1 || cfg.algo == Algo::Optical,
+            "--shards {} only applies to --algo optical (the projection \
+             device); algo '{}' has no projector to shard",
+            cfg.shards,
+            cfg.algo.name()
+        );
         let projector: Option<Box<dyn Projector>> = match cfg.algo {
             Algo::Optical => Some(match cfg.projector {
                 ProjectorKind::OpticalNative => {
@@ -108,13 +122,30 @@ impl Trainer {
                     if let Some(rs) = cfg.read_sigma {
                         opu_params.read_sigma = rs;
                     }
-                    Box::new(NativeOpticalProjector::new(
-                        opu_params,
-                        medium.clone(),
-                        cfg.seed ^ 0xF00,
-                    ))
+                    if cfg.shards > 1 {
+                        Box::new(ProjectorFarm::optical_with(
+                            opu_params,
+                            &medium,
+                            cfg.seed ^ 0xF00,
+                            cfg.shards,
+                            metrics.clone(),
+                        )?)
+                    } else {
+                        Box::new(NativeOpticalProjector::new(
+                            opu_params,
+                            medium.clone(),
+                            cfg.seed ^ 0xF00,
+                        ))
+                    }
                 }
                 ProjectorKind::OpticalHlo => {
+                    anyhow::ensure!(
+                        cfg.shards <= 1,
+                        "projector=hlo does not support --shards {} \
+                         (the AOT artifact is compiled for one device); \
+                         use projector=native or digital",
+                        cfg.shards
+                    );
                     let twin_engine = Engine::new(&cfg.artifacts_dir)?;
                     Box::new(HloOpticalProjector::new(
                         twin_engine,
@@ -124,7 +155,24 @@ impl Trainer {
                     )?)
                 }
                 ProjectorKind::Digital => {
-                    Box::new(DigitalProjector::new(medium.clone()))
+                    if cfg.shards > 1 {
+                        Box::new(ProjectorFarm::digital_with(
+                            &medium,
+                            cfg.shards,
+                            metrics.clone(),
+                        )?)
+                    } else {
+                        // Row-block-parallel host matmuls keep the
+                        // silicon baseline honest on multi-core hosts;
+                        // bitwise identical to the serial path, so the
+                        // numeric parity guarantee is unaffected.  The
+                        // process-wide pool is shared so N trainers
+                        // don't spawn N×cores workers.
+                        Box::new(
+                            DigitalProjector::new(medium.clone())
+                                .with_pool(crate::exec::shared_pool()),
+                        )
+                    }
                 }
             }),
             _ => None,

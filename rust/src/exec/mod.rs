@@ -7,15 +7,41 @@
 //!   close semantics (the projection service's request channel).
 //! * [`oneshot`] — single-value rendezvous (projection replies).
 //! * [`pool::ThreadPool`] — fixed worker pool with panic containment
-//!   (per-layer asynchronous DFA updates, parallel data generation).
+//!   (per-layer asynchronous DFA updates, parallel data generation) and
+//!   a scoped submit/join API ([`pool::ThreadPool::scope`]) whose jobs
+//!   may borrow the caller's stack — the projector farm's shard
+//!   closures and the row-block-parallel matmuls run through it.
 //! * [`CancelToken`] — cooperative cancellation shared across workers.
 
 pub mod oneshot;
 pub mod pool;
 pub mod queue;
 
+pub use pool::{Scope, ThreadPool};
+
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+/// Worker threads this host can usefully run (≥ 1).
+pub fn host_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Process-wide shared pool, sized to the host, built on first use.
+/// For components that want parallelism without each spawning their own
+/// workers (e.g. every digital trainer's pooled matmuls).  Lives for
+/// the process; per-component pools (with their own metrics registry)
+/// remain available via [`ThreadPool::with_registry`].
+pub fn shared_pool() -> Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let cores = host_cores();
+        Arc::new(ThreadPool::new(cores, 4 * cores))
+    })
+    .clone()
+}
 
 /// Cooperative cancellation flag.
 #[derive(Clone, Default)]

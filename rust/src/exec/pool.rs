@@ -1,83 +1,245 @@
-//! Fixed-size worker thread pool with panic containment.
+//! Fixed-size worker thread pool with panic containment and a scoped
+//! submit/join API.
 //!
-//! Jobs are `FnOnce() + Send` closures; a worker that catches a panicking
-//! job logs it and keeps serving (failure injection tests rely on this).
-//! `join()` blocks until all submitted jobs completed.
+//! Jobs are `FnOnce() + Send` closures; a worker that catches a
+//! panicking job counts it (optionally into a metrics [`Registry`]) and
+//! keeps serving — failure-injection tests and the [`ProjectorFarm`]'s
+//! shard observability rely on this.  The pending count is decremented
+//! by a drop guard, so `join()` drains even when jobs panic.
+//!
+//! [`ThreadPool::scope`] is the farm's execution primitive: closures
+//! submitted inside a scope may borrow from the caller's stack (the
+//! shard devices, the shared input batch, per-shard output slots);
+//! `scope` does not return until every scoped job has finished.  Both
+//! waiting threads and submitters facing a full queue *help*: they pull
+//! queued jobs and run them inline, which bounds memory like classic
+//! backpressure while keeping nested scopes (a scoped job opening its
+//! own scope on the same pool) deadlock-free on a bounded worker set.
+//!
+//! [`ProjectorFarm`]: crate::coordinator::farm::ProjectorFarm
 
+use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use super::queue::BoundedQueue;
+use crate::metrics::{Counter, Registry};
+
+use super::queue::{BoundedQueue, TryPushError};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-pub struct ThreadPool {
+/// Metric name for contained job panics (see `with_registry`).
+pub const PANIC_COUNTER: &str = "pool_job_panics";
+
+/// Completion-parkable counter: waiters sleep on the condvar instead of
+/// spinning (jobs are matmul-block/shard sized, so the per-job lock is
+/// noise next to the work it brackets).
+#[derive(Default)]
+struct Tally {
+    count: Mutex<usize>,
+    zero: Condvar,
+}
+
+impl Tally {
+    fn add_one(&self) {
+        *self.count.lock().unwrap() += 1;
+    }
+
+    fn sub_one(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c -= 1;
+        if *c == 0 {
+            self.zero.notify_all();
+        }
+    }
+
+    fn read(&self) -> usize {
+        *self.count.lock().unwrap()
+    }
+}
+
+#[derive(Clone)]
+struct Shared {
     queue: BoundedQueue<Job>,
-    workers: Vec<JoinHandle<()>>,
-    pending: Arc<AtomicUsize>,
+    pending: Arc<Tally>,
     panics: Arc<AtomicUsize>,
+    panic_metric: Option<Counter>,
+}
+
+impl Shared {
+    /// Run one job with drain-on-panic semantics: the pending count is
+    /// decremented by a drop guard so `join()` always terminates.
+    fn run_job(&self, job: Job) {
+        struct Pending<'a>(&'a Tally);
+        impl Drop for Pending<'_> {
+            fn drop(&mut self) {
+                self.0.sub_one();
+            }
+        }
+        let _guard = Pending(&self.pending);
+        if std::panic::catch_unwind(AssertUnwindSafe(job)).is_err() {
+            self.panics.fetch_add(1, Ordering::SeqCst);
+            if let Some(metric) = &self.panic_metric {
+                metric.inc();
+            }
+            log::error!("pool: job panicked (contained)");
+        }
+    }
+
+    /// Help-then-park: drain the queue from this thread, then sleep on
+    /// the tally until it reaches zero.  Any job submitted before this
+    /// call is either drained here, already running on a worker, or
+    /// finished — so parking cannot strand work (jobs submitted *by*
+    /// running jobs are the submitters' responsibility: `submit` helps
+    /// on a full queue and workers drain the rest).
+    fn help_then_park(&self, tally: &Tally) {
+        loop {
+            while let Some(job) = self.queue.try_pop() {
+                self.run_job(job);
+            }
+            let c = tally.count.lock().unwrap();
+            if *c == 0 {
+                return;
+            }
+            // Park briefly; the 1 ms timeout bounds how long we go
+            // without re-checking the queue, since a running job may
+            // push follow-up work after our drain.
+            let (guard, _) = tally
+                .zero
+                .wait_timeout(c, std::time::Duration::from_millis(1))
+                .unwrap();
+            if *guard == 0 {
+                return;
+            }
+        }
+    }
+}
+
+pub struct ThreadPool {
+    shared: Shared,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
 }
 
 impl ThreadPool {
     pub fn new(threads: usize, queue_depth: usize) -> Self {
-        let queue: BoundedQueue<Job> = BoundedQueue::new(queue_depth.max(1));
-        let pending = Arc::new(AtomicUsize::new(0));
-        let panics = Arc::new(AtomicUsize::new(0));
-        let workers = (0..threads.max(1))
+        Self::build(threads, queue_depth, None)
+    }
+
+    /// Like [`ThreadPool::new`], surfacing the panic count as the
+    /// [`PANIC_COUNTER`] counter of `registry` so shard failures are
+    /// observable alongside the service metrics.
+    pub fn with_registry(threads: usize, queue_depth: usize, registry: &Registry) -> Self {
+        Self::build(threads, queue_depth, Some(registry.counter(PANIC_COUNTER)))
+    }
+
+    fn build(threads: usize, queue_depth: usize, panic_metric: Option<Counter>) -> Self {
+        let shared = Shared {
+            queue: BoundedQueue::new(queue_depth.max(1)),
+            pending: Arc::new(Tally::default()),
+            panics: Arc::new(AtomicUsize::new(0)),
+            panic_metric,
+        };
+        let threads = threads.max(1);
+        let workers = (0..threads)
             .map(|i| {
-                let q = queue.clone();
-                let pending = pending.clone();
-                let panics = panics.clone();
+                let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("litl-worker-{i}"))
                     .spawn(move || {
-                        while let Some(job) = q.pop() {
-                            let result =
-                                std::panic::catch_unwind(AssertUnwindSafe(job));
-                            if result.is_err() {
-                                panics.fetch_add(1, Ordering::SeqCst);
-                                log::error!("worker {i}: job panicked (contained)");
-                            }
-                            pending.fetch_sub(1, Ordering::SeqCst);
+                        while let Some(job) = shared.queue.pop() {
+                            shared.run_job(job);
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
         ThreadPool {
-            queue,
+            shared,
             workers,
-            pending,
-            panics,
+            threads,
         }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Submit a job (blocks if the queue is full — backpressure).
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.pending.fetch_add(1, Ordering::SeqCst);
-        if self.queue.push(Box::new(job)).is_err() {
-            self.pending.fetch_sub(1, Ordering::SeqCst);
-            panic!("submit on closed pool");
+        self.submit_boxed(Box::new(job));
+    }
+
+    fn submit_boxed(&self, job: Job) {
+        self.shared.pending.add_one();
+        let mut job = job;
+        loop {
+            match self.shared.queue.try_push(job) {
+                Ok(()) => return,
+                Err(TryPushError::Closed(_)) => {
+                    self.shared.pending.sub_one();
+                    panic!("submit on closed pool");
+                }
+                Err(TryPushError::Full(rejected)) => {
+                    // Backpressure by helping: run one queued job on this
+                    // thread instead of blocking.  Keeps memory bounded
+                    // AND keeps nested scopes deadlock-free when every
+                    // worker is itself trying to submit (e.g. farm shard
+                    // jobs fanning out pooled matmuls on the same pool).
+                    job = rejected;
+                    match self.shared.queue.try_pop() {
+                        Some(other) => self.shared.run_job(other),
+                        None => std::thread::yield_now(),
+                    }
+                }
+            }
         }
     }
 
-    /// Busy-wait (with yield) until all submitted jobs finished.
+    /// Wait until all submitted jobs finished: helps run queued jobs
+    /// from the calling thread, then parks on a condvar for the in-flight
+    /// tail (no busy spin).  Jobs that panicked still drain (their
+    /// pending slot is released by a drop guard).
     pub fn join(&self) {
-        while self.pending.load(Ordering::SeqCst) > 0 {
-            std::thread::yield_now();
-        }
+        self.shared.help_then_park(&self.shared.pending);
     }
 
     /// Number of jobs that panicked since pool creation.
     pub fn panic_count(&self) -> usize {
-        self.panics.load(Ordering::SeqCst)
+        self.shared.panics.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` with a [`Scope`] that can submit borrowing jobs; returns
+    /// after every scoped job has completed.  Scoped jobs may borrow
+    /// anything that outlives the `scope` call (`'env`), which is what
+    /// lets the projector farm hand each shard a reference to the shared
+    /// input batch and a `&mut` slot for its output.
+    pub fn scope<'env, F, R>(&self, f: F) -> R
+    where
+        F: for<'pool> FnOnce(&Scope<'env, 'pool>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            tracked: Arc::new(Tally::default()),
+            _env: PhantomData,
+        };
+        // Run the scope body, then wait for all scoped jobs even if the
+        // body panicked — the borrows end when `scope` returns, so no
+        // job may still be running (or queued) past this point.
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        scope.wait();
+        match result {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
     }
 
     /// Close the queue and join all workers.
     pub fn shutdown(mut self) {
-        self.queue.close();
+        self.shared.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -86,10 +248,62 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.queue.close();
+        self.shared.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// Handle for submitting stack-borrowing jobs; see [`ThreadPool::scope`].
+pub struct Scope<'env, 'pool> {
+    pool: &'pool ThreadPool,
+    tracked: Arc<Tally>,
+    /// Invariant over `'env`: disallows shrinking the borrow lifetime.
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> Scope<'env, '_> {
+    /// Submit a job that may borrow from `'env`.  The job is tracked by
+    /// this scope; `ThreadPool::scope` joins it before returning.
+    pub fn submit<F>(&self, job: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        struct Tracked(Arc<Tally>);
+        impl Drop for Tracked {
+            fn drop(&mut self) {
+                self.0.sub_one();
+            }
+        }
+        self.tracked.add_one();
+        let tracker = Tracked(self.tracked.clone());
+        let wrapped = move || {
+            let _tracker = tracker;
+            job();
+        };
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(wrapped);
+        // SAFETY: `wait()` (called by `ThreadPool::scope` before it
+        // returns) blocks until this job has run or been dropped, so the
+        // closure never outlives the `'env` borrows it captures.  The
+        // tracker decrements on drop, covering the dropped-without-run
+        // case (closed queue) as well as panics.
+        let boxed: Job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + 'env>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(boxed)
+        };
+        self.pool.submit_boxed(boxed);
+    }
+
+    /// Jobs submitted through this scope and not yet finished.
+    pub fn outstanding(&self) -> usize {
+        self.tracked.read()
+    }
+
+    fn wait(&self) {
+        self.pool.shared.help_then_park(&self.tracked);
     }
 }
 
@@ -131,6 +345,31 @@ mod tests {
     }
 
     #[test]
+    fn join_drains_when_every_job_panics() {
+        // The satellite case: pending must reach zero even when all jobs
+        // panic, so join() terminates and the panic count is exact.
+        let pool = ThreadPool::new(2, 4);
+        for i in 0..12 {
+            pool.submit(move || panic!("boom {i}"));
+        }
+        pool.join();
+        assert_eq!(pool.panic_count(), 12);
+    }
+
+    #[test]
+    fn panics_surface_through_metrics_registry() {
+        let registry = Registry::new();
+        let pool = ThreadPool::with_registry(2, 4, &registry);
+        for _ in 0..3 {
+            pool.submit(|| panic!("observable failure"));
+        }
+        pool.submit(|| {});
+        pool.join();
+        assert_eq!(registry.snapshot()[PANIC_COUNTER], 3.0);
+        assert_eq!(pool.panic_count(), 3);
+    }
+
+    #[test]
     fn shutdown_joins_cleanly() {
         let pool = ThreadPool::new(2, 4);
         let counter = Arc::new(AtomicU64::new(0));
@@ -144,5 +383,101 @@ mod tests {
         pool.join();
         pool.shutdown();
         assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn scope_jobs_borrow_the_stack() {
+        let pool = ThreadPool::new(4, 16);
+        let input: Vec<u64> = (0..64).collect();
+        let mut partials = vec![0u64; 8];
+        pool.scope(|s| {
+            for (block, slot) in input.chunks(8).zip(partials.iter_mut()) {
+                s.submit(move || {
+                    *slot = block.iter().sum();
+                });
+            }
+        });
+        assert_eq!(partials.iter().sum::<u64>(), input.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn scope_waits_for_slow_jobs() {
+        let pool = ThreadPool::new(2, 8);
+        let mut flags = [false; 6];
+        pool.scope(|s| {
+            for flag in flags.iter_mut() {
+                s.submit(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    *flag = true;
+                });
+            }
+        });
+        assert!(flags.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn scope_drains_panicking_jobs() {
+        let pool = ThreadPool::new(2, 8);
+        let mut results = vec![0u32; 5];
+        pool.scope(|s| {
+            for (i, slot) in results.iter_mut().enumerate() {
+                s.submit(move || {
+                    if i == 2 {
+                        panic!("shard failure injection");
+                    }
+                    *slot = i as u32 + 1;
+                });
+            }
+        });
+        assert_eq!(results, vec![1, 2, 0, 4, 5]);
+        assert_eq!(pool.panic_count(), 1);
+    }
+
+    #[test]
+    fn sequential_scopes_reuse_the_pool() {
+        let pool = ThreadPool::new(1, 32);
+        let mut totals = vec![0u64; 3];
+        pool.scope(|outer| {
+            for (i, slot) in totals.iter_mut().enumerate() {
+                outer.submit(move || {
+                    *slot = (i as u64 + 1) * 10;
+                });
+            }
+        });
+        let mut doubled = vec![0u64; 3];
+        pool.scope(|s| {
+            for (src, dst) in totals.iter().zip(doubled.iter_mut()) {
+                s.submit(move || {
+                    *dst = src * 2;
+                });
+            }
+        });
+        assert_eq!(doubled, vec![20, 40, 60]);
+    }
+
+    #[test]
+    fn scope_inside_a_pool_job_does_not_deadlock() {
+        // The hard case: one worker, tiny queue, and the scoped job
+        // itself opens a scope on the same pool and over-fills the
+        // queue.  `submit` must help (run queued jobs) when the queue
+        // is full, or the lone worker blocks forever on push.
+        let pool = ThreadPool::new(1, 2);
+        let total = AtomicU64::new(0);
+        let pool_ref = &pool;
+        let total_ref = &total;
+        pool.scope(|outer| {
+            outer.submit(move || {
+                let mut inner_vals = [0u64; 8];
+                pool_ref.scope(|inner| {
+                    for (i, slot) in inner_vals.iter_mut().enumerate() {
+                        inner.submit(move || {
+                            *slot = i as u64 + 1;
+                        });
+                    }
+                });
+                total_ref.fetch_add(inner_vals.iter().sum::<u64>(), Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 36);
     }
 }

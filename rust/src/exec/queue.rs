@@ -24,6 +24,12 @@ struct State<T> {
 #[derive(Debug, PartialEq, Eq)]
 pub struct Closed;
 
+/// Non-blocking push failure, returning the rejected item.
+pub enum TryPushError<T> {
+    Full(T),
+    Closed(T),
+}
+
 pub struct BoundedQueue<T> {
     inner: Arc<Inner<T>>,
 }
@@ -116,6 +122,23 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking push; hands the item back on a full or closed
+    /// queue so the caller can act (e.g. the thread pool runs a queued
+    /// job itself instead of blocking — nested-scope deadlock freedom).
+    pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if st.items.len() < self.inner.capacity {
+            st.items.push_back(item);
+            self.inner.not_empty.notify_one();
+            Ok(())
+        } else {
+            Err(TryPushError::Full(item))
+        }
+    }
+
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         let mut st = self.inner.queue.lock().unwrap();
@@ -189,6 +212,22 @@ mod tests {
         assert_eq!(handle.join().unwrap(), 3);
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn try_push_hands_back_on_full_and_closed() {
+        let q = BoundedQueue::new(1);
+        assert!(q.try_push(1).is_ok());
+        match q.try_push(2) {
+            Err(TryPushError::Full(v)) => assert_eq!(v, 2),
+            _ => panic!("expected Full"),
+        }
+        q.close();
+        match q.try_push(3) {
+            Err(TryPushError::Closed(v)) => assert_eq!(v, 3),
+            _ => panic!("expected Closed"),
+        }
+        assert_eq!(q.pop(), Some(1));
     }
 
     #[test]

@@ -31,6 +31,33 @@
 //! shot/read noise and ADC quantization, and a frame-clock/power timing
 //! model calibrated to the paper's figures (1.5 kHz frames, ~1e5 maximum
 //! dimension, ~30 W).
+//!
+//! ## The projector farm (sharded multi-device execution)
+//!
+//! The paper's headline is *scalability* — projections at dimensions
+//! where digital hardware stalls — and the follow-up work drives the
+//! same DFA error-projection step across multiple devices.  This crate's
+//! execution model for that is the
+//! [`coordinator::farm::ProjectorFarm`]: one logical projector made of N
+//! virtual devices, each owning a contiguous **mode range** of the same
+//! transmission matrix ([`optics::medium::TransmissionMatrix::split_modes`]),
+//! its own camera-noise PCG *stream*, simulated clock and energy
+//! account.  A batch `[B, d_in]` fans out to every shard concurrently on
+//! the [`exec::ThreadPool`]'s scoped submit/join API and the per-shard
+//! quadratures are concatenated in shard order, so results are
+//! deterministic for a given seed regardless of scheduling.
+//!
+//! **Parity guarantee:** at `shards = 1` the farm is *bit-identical* to
+//! the pre-farm single-device path (same medium, same RNG stream; the
+//! gather is a pure copy), and at any shard count it equals a single device over the
+//! equivalent stacked medium — exactly for the digital comparator,
+//! to fp/ADC tolerance for noiseless optics (property-tested in
+//! `rust/tests/farm_parity.rs`).  The digital baseline stays honest at
+//! multi-core scale through row-block-parallel matmuls
+//! ([`tensor::matmul_pooled`] and friends) that are bitwise identical to
+//! their serial forms.  `--shards N` on the CLI (or `shards = N` in a
+//! config file) routes training through the farm; `benches/e4_scaling.rs`
+//! sweeps the shard count and reports throughput and speedup.
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

@@ -22,7 +22,7 @@ use litl::util::rng::Pcg64;
 const TRAIN_FLAGS: &[&str] = &[
     "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
-    "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics",
+    "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
 ];
 
 fn main() {
@@ -96,6 +96,10 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(n) = args.flag_parse::<f32>("read-sigma")? {
         cfg.read_sigma = Some(n);
     }
+    if let Some(n) = args.flag_parse::<usize>("shards")? {
+        anyhow::ensure!(n >= 1, "--shards must be >= 1");
+        cfg.shards = n;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -109,12 +113,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[TRAIN_FLAGS, &["config-file"]].concat())?;
     let cfg = build_config(args)?;
     log::info!(
-        "train: algo={} lr={} epochs={} config={} projector={:?}",
+        "train: algo={} lr={} epochs={} config={} projector={:?} shards={}",
         cfg.algo.name(),
         cfg.lr,
         cfg.epochs,
         cfg.artifact_config,
-        cfg.projector
+        cfg.projector,
+        cfg.shards
     );
     let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
     log::info!(
@@ -287,6 +292,8 @@ COMMANDS:
           --epochs N --lr F --theta F --seed N
           --config paper|small      artifact build config
           --projector native|hlo|digital
+          --shards N                mode-shard the projection across N
+                                    virtual devices (projector farm)
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

@@ -74,6 +74,91 @@ impl TransmissionMatrix {
     pub fn seed(&self) -> u64 {
         self.seed
     }
+
+    /// Column-slice the medium to the mode range `[start, end)`.
+    ///
+    /// A shard of a farm device sees exactly the couplings of its own
+    /// camera region: the same physical matrix, restricted to a
+    /// contiguous output-mode window.  Slicing and re-concatenating
+    /// ([`TransmissionMatrix::concat_modes`]) is the identity, which is
+    /// what makes the farm's `shards=1` path bit-identical to the
+    /// single-device path.
+    pub fn slice_modes(&self, start: usize, end: usize) -> TransmissionMatrix {
+        assert!(start < end && end <= self.modes, "mode slice {start}..{end}");
+        let width = end - start;
+        let mut b_re = Tensor::zeros(&[self.d_in, width]);
+        let mut b_im = Tensor::zeros(&[self.d_in, width]);
+        for r in 0..self.d_in {
+            let src = r * self.modes + start;
+            let dst = r * width;
+            b_re.data_mut()[dst..dst + width]
+                .copy_from_slice(&self.b_re.data()[src..src + width]);
+            b_im.data_mut()[dst..dst + width]
+                .copy_from_slice(&self.b_im.data()[src..src + width]);
+        }
+        TransmissionMatrix {
+            d_in: self.d_in,
+            modes: width,
+            b_re,
+            b_im,
+            seed: self.seed,
+        }
+    }
+
+    /// Partition the mode axis into `shards` contiguous, balanced
+    /// windows (sizes differ by at most one; earlier shards get the
+    /// remainder).  The concatenation of the shards is the original
+    /// medium, in order.
+    pub fn split_modes(&self, shards: usize) -> Vec<TransmissionMatrix> {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(
+            shards <= self.modes,
+            "cannot split {} modes across {shards} shards",
+            self.modes
+        );
+        let base = self.modes / shards;
+        let extra = self.modes % shards;
+        let mut out = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for i in 0..shards {
+            let width = base + usize::from(i < extra);
+            out.push(self.slice_modes(start, start + width));
+            start += width;
+        }
+        debug_assert_eq!(start, self.modes);
+        out
+    }
+
+    /// Stack shard media back along the mode axis (inverse of
+    /// [`TransmissionMatrix::split_modes`]); the test oracle for farm
+    /// parity ("the equivalent stacked medium").
+    pub fn concat_modes(parts: &[TransmissionMatrix]) -> TransmissionMatrix {
+        assert!(!parts.is_empty());
+        let d_in = parts[0].d_in;
+        assert!(parts.iter().all(|p| p.d_in == d_in), "d_in mismatch");
+        let modes: usize = parts.iter().map(|p| p.modes).sum();
+        let mut b_re = Tensor::zeros(&[d_in, modes]);
+        let mut b_im = Tensor::zeros(&[d_in, modes]);
+        let mut at = 0usize;
+        for part in parts {
+            for r in 0..d_in {
+                let dst = r * modes + at;
+                let src = r * part.modes;
+                b_re.data_mut()[dst..dst + part.modes]
+                    .copy_from_slice(&part.b_re.data()[src..src + part.modes]);
+                b_im.data_mut()[dst..dst + part.modes]
+                    .copy_from_slice(&part.b_im.data()[src..src + part.modes]);
+            }
+            at += part.modes;
+        }
+        TransmissionMatrix {
+            d_in,
+            modes,
+            b_re,
+            b_im,
+            seed: parts[0].seed,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -111,6 +196,34 @@ mod tests {
         assert_eq!(r0a, r0b);
         assert_ne!(r0a, r1);
         assert_ne!(i0a, i1);
+    }
+
+    #[test]
+    fn split_concat_roundtrips() {
+        let full = TransmissionMatrix::sample(4, 12, 37);
+        for shards in [1usize, 2, 3, 5, 7, 37] {
+            let parts = full.split_modes(shards);
+            assert_eq!(parts.len(), shards);
+            let widths: Vec<usize> = parts.iter().map(|p| p.modes).collect();
+            assert_eq!(widths.iter().sum::<usize>(), 37);
+            assert!(widths.iter().max().unwrap() - widths.iter().min().unwrap() <= 1);
+            let back = TransmissionMatrix::concat_modes(&parts);
+            assert_eq!(back.b_re, full.b_re);
+            assert_eq!(back.b_im, full.b_im);
+        }
+    }
+
+    #[test]
+    fn slice_is_a_column_window() {
+        let full = TransmissionMatrix::sample(9, 5, 10);
+        let mid = full.slice_modes(3, 7);
+        assert_eq!(mid.modes, 4);
+        for r in 0..5 {
+            for c in 0..4 {
+                assert_eq!(mid.b_re.at(r, c), full.b_re.at(r, 3 + c));
+                assert_eq!(mid.b_im.at(r, c), full.b_im.at(r, 3 + c));
+            }
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod medium;
 pub mod opu;
 pub mod slm;
 
-pub use opu::{OpticalOpu, OpuParams};
+pub use opu::{OpticalOpu, OpuParams, NOISE_STREAM_BASE};
 
 #[cfg(test)]
 mod tests {

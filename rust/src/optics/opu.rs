@@ -79,8 +79,25 @@ pub struct OpticalOpu {
     scratch_counts: Vec<f32>,
 }
 
+/// Base PCG stream id of a device's camera-noise generator.  Farm shard
+/// `i` draws from stream `NOISE_STREAM_BASE + i`, so shard 0 of a
+/// one-shard farm is bit-identical to a standalone device while every
+/// further shard gets an independent, reproducible noise stream.
+pub const NOISE_STREAM_BASE: u64 = 0xca3e4a;
+
 impl OpticalOpu {
     pub fn new(params: OpuParams, medium: TransmissionMatrix, noise_seed: u64) -> Self {
+        Self::with_noise_stream(params, medium, noise_seed, NOISE_STREAM_BASE)
+    }
+
+    /// Like [`OpticalOpu::new`] with an explicit PCG noise stream —
+    /// virtual farm devices share a seed but must not share draws.
+    pub fn with_noise_stream(
+        params: OpuParams,
+        medium: TransmissionMatrix,
+        noise_seed: u64,
+        noise_stream: u64,
+    ) -> Self {
         assert!(
             medium.modes <= params.max_modes,
             "medium has {} modes; device supports {}",
@@ -95,7 +112,7 @@ impl OpticalOpu {
             params,
             slm,
             camera,
-            noise_rng: Pcg64::new(noise_seed, 0xca3e4a),
+            noise_rng: Pcg64::new(noise_seed, noise_stream),
             clock: SimClock::new(),
             stats: OpuStats::default(),
             scratch_pix: vec![0.0; 2 * npix],
@@ -286,6 +303,38 @@ mod tests {
         assert_eq!(st.frames, 64 + st.dropped_frames);
         // charged time includes retries
         assert!(st.sim_seconds > 64.0 / 1500.0);
+    }
+
+    #[test]
+    fn base_stream_matches_default_constructor() {
+        let medium = TransmissionMatrix::sample(1, 10, 16);
+        let mut a = OpticalOpu::new(OpuParams::default(), medium.clone(), 9);
+        let mut b =
+            OpticalOpu::with_noise_stream(OpuParams::default(), medium, 9, NOISE_STREAM_BASE);
+        let e = ternary_batch(4, 10, 8);
+        assert_eq!(a.project(&e).unwrap().0, b.project(&e).unwrap().0);
+    }
+
+    #[test]
+    fn shard_streams_decorrelate() {
+        let medium = TransmissionMatrix::sample(1, 10, 16);
+        let mut a = OpticalOpu::with_noise_stream(
+            OpuParams::default(),
+            medium.clone(),
+            9,
+            NOISE_STREAM_BASE,
+        );
+        let mut b = OpticalOpu::with_noise_stream(
+            OpuParams::default(),
+            medium,
+            9,
+            NOISE_STREAM_BASE + 1,
+        );
+        let e = ternary_batch(4, 10, 8);
+        let (pa, _) = a.project(&e).unwrap();
+        let (pb, _) = b.project(&e).unwrap();
+        // Same physics, different noise draws: close but not identical.
+        assert_ne!(pa, pb);
     }
 
     #[test]

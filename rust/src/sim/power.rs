@@ -80,6 +80,21 @@ impl OpuModel {
         self.throughput(d_in, d_out)
             .map(|r| r * d_in as f64 * d_out as f64)
     }
+
+    /// A mode-sharded farm of `devices` such OPUs driven as one logical
+    /// projector (the `ProjectorFarm` execution model): every device
+    /// sees the same input frame and images its own slice of the output
+    /// modes, so the frame rate is unchanged while output capacity —
+    /// and therefore effective MAC/s — and power draw scale by N.
+    pub fn farm(&self, devices: usize) -> OpuModel {
+        assert!(devices >= 1);
+        OpuModel {
+            frame_rate_hz: self.frame_rate_hz,
+            power_watts: self.power_watts * devices as f64,
+            max_output: self.max_output * devices,
+            max_input: self.max_input,
+        }
+    }
 }
 
 /// Roofline model of a GPU running the same projection digitally.
@@ -184,6 +199,24 @@ mod tests {
         assert!(ps.throughput(1_000_000, 1_000_000).is_some());
         // phase-shifting trades frame rate for size
         assert!(ps.frame_rate_hz < 1500.0);
+    }
+
+    #[test]
+    fn farm_scales_capacity_and_power_not_rate() {
+        let one = OpuModel::paper(Holography::OffAxis);
+        let four = one.farm(4);
+        assert_eq!(four.frame_rate_hz, one.frame_rate_hz);
+        assert_eq!(four.power_watts, 4.0 * one.power_watts);
+        assert_eq!(four.max_output, 4 * one.max_output);
+        // 4e5 output modes: out of reach for one device, in reach for 4.
+        assert!(one.throughput(1_000_000, 400_000).is_none());
+        assert_eq!(four.throughput(1_000_000, 400_000), Some(1500.0));
+        // Effective MAC/s at full capacity scales by N.
+        let m1 = one.effective_macs(1_000_000, one.max_output).unwrap();
+        let m4 = four.effective_macs(1_000_000, four.max_output).unwrap();
+        assert!((m4 / m1 - 4.0).abs() < 1e-9);
+        // Energy per projection also scales by N (no free lunch).
+        assert!((four.energy(1) - 4.0 * one.energy(1)).abs() < 1e-12);
     }
 
     #[test]

@@ -2,64 +2,63 @@
 //!
 //! The matmul family is the host baseline's hot path ("digital projection
 //! on silicon" in E2/E3), so it is cache-blocked (i-k-j loop order with a
-//! j-vectorizable inner loop) rather than naive.  Everything else is
-//! straightforward elementwise code.
+//! j-vectorizable inner loop) rather than naive.  Each variant also has a
+//! row-block-parallel twin (`*_pooled`) that fans output-row blocks out
+//! over an [`exec::ThreadPool`] scope; serial and pooled paths share the
+//! same per-row kernels, so their results are **bitwise identical** —
+//! parallelism never changes the accumulation order of any output
+//! element.  Everything else is straightforward elementwise code.
+//!
+//! [`exec::ThreadPool`]: crate::exec::ThreadPool
 
 use super::Tensor;
+use crate::exec::ThreadPool;
 
 /// Cache block edges (tuned on the 1-core sandbox; see EXPERIMENTS §Perf).
 const MC: usize = 64;
 const KC: usize = 256;
 
-/// `out = a @ b` — `[m,k] x [k,n] -> [m,n]`.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.rows(), a.cols());
-    let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
-    let mut out = Tensor::zeros(&[m, n]);
-    let ad = a.data();
-    let bd = b.data();
-    let od = out.data_mut();
-    // i-k-j with k blocked: inner loop is a contiguous axpy over b's row,
-    // which the compiler auto-vectorizes.
-    for ic in (0..m).step_by(MC) {
-        let i_end = (ic + MC).min(m);
-        for kc in (0..k).step_by(KC) {
-            let k_end = (kc + KC).min(k);
-            for i in ic..i_end {
-                let arow = &ad[i * k..(i + 1) * k];
-                let orow = &mut od[i * n..(i + 1) * n];
-                for kk in kc..k_end {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bd[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        orow[j] += aik * brow[j];
-                    }
+/// Row-block kernel of `a @ b`: fills `od` (rows `r0 .. r0+rows` of the
+/// output, row-major) with the k-blocked i-k-j product.  Accumulation
+/// order per output element is ascending `kk` regardless of how rows are
+/// partitioned, which is what guarantees serial/pooled bit parity.
+fn matmul_rows(ad: &[f32], bd: &[f32], od: &mut [f32], r0: usize, rows: usize, k: usize, n: usize) {
+    for kc in (0..k).step_by(KC) {
+        let k_end = (kc + KC).min(k);
+        for i in 0..rows {
+            let arow = &ad[(r0 + i) * k..(r0 + i + 1) * k];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for kk in kc..k_end {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
                 }
             }
         }
     }
-    out
 }
 
-/// `out = aᵀ @ b` — `[k,m] x [k,n] -> [m,n]` (outer-product reductions:
-/// the DFA/BP weight-gradient shape).
-pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
-    let (k, m) = (a.rows(), a.cols());
-    let (k2, n) = (b.rows(), b.cols());
-    assert_eq!(k, k2);
-    let mut out = Tensor::zeros(&[m, n]);
-    let ad = a.data();
-    let bd = b.data();
-    let od = out.data_mut();
+/// Row-block kernel of `aᵀ @ b` for output rows `r0 .. r0+rows`
+/// (columns of `a`); `kk`-outer keeps the outer-product access pattern.
+fn matmul_tn_rows(
+    ad: &[f32],
+    bd: &[f32],
+    od: &mut [f32],
+    r0: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+) {
     for kk in 0..k {
         let arow = &ad[kk * m..(kk + 1) * m];
         let brow = &bd[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aki = arow[i];
+        for i in 0..rows {
+            let aki = arow[r0 + i];
             if aki == 0.0 {
                 continue;
             }
@@ -69,20 +68,20 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
             }
         }
     }
-    out
 }
 
-/// `out = a @ bᵀ` — `[m,k] x [n,k] -> [m,n]` (backprop's `δ @ Wᵀ` shape).
-pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.rows(), a.cols());
-    let (n, k2) = (b.rows(), b.cols());
-    assert_eq!(k, k2);
-    let mut out = Tensor::zeros(&[m, n]);
-    let ad = a.data();
-    let bd = b.data();
-    let od = out.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
+/// Row-block kernel of `a @ bᵀ` for output rows `r0 .. r0+rows`.
+fn matmul_nt_rows(
+    ad: &[f32],
+    bd: &[f32],
+    od: &mut [f32],
+    r0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..rows {
+        let arow = &ad[(r0 + i) * k..(r0 + i + 1) * k];
         let orow = &mut od[i * n..(i + 1) * n];
         for j in 0..n {
             let brow = &bd[j * k..(j + 1) * k];
@@ -93,6 +92,137 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
             orow[j] = acc;
         }
     }
+}
+
+/// Rows per parallel job: enough blocks to balance the pool without
+/// shredding cache locality.
+fn row_block(m: usize, pool: &ThreadPool) -> usize {
+    let jobs = pool.threads().max(1) * 2;
+    m.div_ceil(jobs).max(1)
+}
+
+/// Below this many multiply-accumulates, fan-out overhead beats the
+/// parallel win; run the kernel inline (same code, same bits).
+const PAR_MIN_MACS: usize = 1 << 15;
+
+/// Fan `rows`-partitioned work over the pool: `kernel(od_block, r0, rows)`.
+/// `work` is the total MAC estimate used for the serial-fallback gate.
+///
+/// Panics if a row-block job panicked (the pool contains job panics, so
+/// without this check a poisoned chunk would come back silently zeroed;
+/// propagating mirrors what the serial kernel would have done).
+fn parallel_rows<K>(od: &mut [f32], m: usize, n: usize, work: usize, pool: &ThreadPool, kernel: K)
+where
+    K: Fn(&mut [f32], usize, usize) + Send + Sync,
+{
+    if m == 0 || n == 0 {
+        return;
+    }
+    if work < PAR_MIN_MACS {
+        kernel(od, 0, m);
+        return;
+    }
+    let block = row_block(m, pool);
+    let kernel = &kernel;
+    let completed = std::sync::atomic::AtomicUsize::new(0);
+    let completed = &completed;
+    let mut jobs = 0usize;
+    pool.scope(|s| {
+        for (bi, chunk) in od.chunks_mut(block * n).enumerate() {
+            let r0 = bi * block;
+            let rows = chunk.len() / n;
+            jobs += 1;
+            s.submit(move || {
+                kernel(chunk, r0, rows);
+                completed.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            });
+        }
+    });
+    let done = completed.load(std::sync::atomic::Ordering::SeqCst);
+    assert_eq!(done, jobs, "parallel matmul: {} row-block job(s) panicked", jobs - done);
+}
+
+/// `out = a @ b` — `[m,k] x [k,n] -> [m,n]`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    // MC-sized row blocks keep b's rows hot in cache; the partitioning
+    // has no numeric effect (see `matmul_rows`).
+    for r0 in (0..m).step_by(MC) {
+        let rows = MC.min(m - r0);
+        matmul_rows(ad, bd, &mut od[r0 * n..(r0 + rows) * n], r0, rows, k, n);
+    }
+    out
+}
+
+/// Row-block-parallel `a @ b` over a pool; bitwise equal to [`matmul`].
+pub fn matmul_pooled(a: &Tensor, b: &Tensor, pool: &ThreadPool) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let work = m.saturating_mul(k).saturating_mul(n);
+    parallel_rows(out.data_mut(), m, n, work, pool, |chunk, r0, rows| {
+        matmul_rows(ad, bd, chunk, r0, rows, k, n)
+    });
+    out
+}
+
+/// `out = aᵀ @ b` — `[k,m] x [k,n] -> [m,n]` (outer-product reductions:
+/// the DFA/BP weight-gradient shape).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_tn_rows(a.data(), b.data(), out.data_mut(), 0, m, k, m, n);
+    out
+}
+
+/// Row-block-parallel `aᵀ @ b`; bitwise equal to [`matmul_tn`].
+pub fn matmul_tn_pooled(a: &Tensor, b: &Tensor, pool: &ThreadPool) -> Tensor {
+    let (k, m) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let work = m.saturating_mul(k).saturating_mul(n);
+    parallel_rows(out.data_mut(), m, n, work, pool, |chunk, r0, rows| {
+        matmul_tn_rows(ad, bd, chunk, r0, rows, k, m, n)
+    });
+    out
+}
+
+/// `out = a @ bᵀ` — `[m,k] x [n,k] -> [m,n]` (backprop's `δ @ Wᵀ` shape).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_nt_rows(a.data(), b.data(), out.data_mut(), 0, m, k, n);
+    out
+}
+
+/// Row-block-parallel `a @ bᵀ`; bitwise equal to [`matmul_nt`].
+pub fn matmul_nt_pooled(a: &Tensor, b: &Tensor, pool: &ThreadPool) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (n, k2) = (b.rows(), b.cols());
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let work = m.saturating_mul(k).saturating_mul(n);
+    parallel_rows(out.data_mut(), m, n, work, pool, |chunk, r0, rows| {
+        matmul_nt_rows(ad, bd, chunk, r0, rows, k, n)
+    });
     out
 }
 
@@ -238,6 +368,34 @@ mod tests {
             }
         }
         assert!(matmul_nt(&a, &bt).max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn pooled_matmuls_are_bitwise_identical_to_serial() {
+        let pool = ThreadPool::new(4, 64);
+        let mut rng = Pcg64::seeded(9);
+        for (m, k, n) in [(1, 1, 1), (7, 13, 5), (65, 300, 33), (128, 784, 64)] {
+            let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+            let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+            assert_eq!(matmul_pooled(&a, &b, &pool), matmul(&a, &b), "({m},{k},{n})");
+
+            let at = Tensor::randn(&[k, m], &mut rng, 1.0);
+            assert_eq!(matmul_tn_pooled(&at, &b, &pool), matmul_tn(&at, &b));
+
+            let bt = Tensor::randn(&[n, k], &mut rng, 1.0);
+            assert_eq!(matmul_nt_pooled(&a, &bt, &pool), matmul_nt(&a, &bt));
+        }
+    }
+
+    #[test]
+    fn pooled_matmul_handles_degenerate_shapes() {
+        let pool = ThreadPool::new(2, 16);
+        let a = Tensor::zeros(&[0, 5]);
+        let b = Tensor::zeros(&[5, 4]);
+        assert_eq!(matmul_pooled(&a, &b, &pool).shape(), &[0, 4]);
+        let a = Tensor::zeros(&[3, 5]);
+        let b = Tensor::zeros(&[5, 0]);
+        assert_eq!(matmul_pooled(&a, &b, &pool).shape(), &[3, 0]);
     }
 
     #[test]

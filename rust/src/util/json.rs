@@ -8,8 +8,6 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use thiserror::Error;
-
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
@@ -21,19 +19,30 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character '{1}' at byte {0}")]
     Unexpected(usize, char),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(at) => write!(f, "unexpected end of input at byte {at}"),
+            JsonError::Unexpected(at, c) => {
+                write!(f, "unexpected character '{c}' at byte {at}")
+            }
+            JsonError::BadNumber(at) => write!(f, "invalid number at byte {at}"),
+            JsonError::BadEscape(at) => write!(f, "invalid escape at byte {at}"),
+            JsonError::Trailing(at) => write!(f, "trailing garbage at byte {at}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {

@@ -10,7 +10,6 @@ use std::time::Instant;
 use log::{Level, LevelFilter, Metadata, Record};
 
 static INIT: Once = Once::new();
-static mut START: Option<Instant> = None;
 
 struct StderrLogger {
     start: Instant,
@@ -61,11 +60,6 @@ pub fn init() {
         });
         let _ = log::set_boxed_logger(logger);
         log::set_max_level(filter);
-        // Silence the unused-static warning path; START retained for
-        // potential future relative timestamps across re-inits.
-        unsafe {
-            START = Some(Instant::now());
-        }
     });
 }
 

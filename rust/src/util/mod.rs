@@ -1,9 +1,9 @@
 //! Small, dependency-free substrates used across the crate.
 //!
 //! The offline build environment vendors only `xla`, `anyhow`,
-//! `thiserror`, `flate2` and `log`, so the usual ecosystem crates
-//! (`rand`, `serde_json`, `rustfft`, criterion's stats, ...) are
-//! reimplemented here at the scale this project needs:
+//! `flate2` and `log` (as in-tree stubs under `rust/vendor/`), so the
+//! usual ecosystem crates (`rand`, `serde_json`, `rustfft`, criterion's
+//! stats, ...) are reimplemented here at the scale this project needs:
 //!
 //! * [`rng`] — PCG64 PRNG with normal/shuffle helpers (seeded,
 //!   reproducible across hosts; mirrors the python side where shared).

@@ -1,0 +1,39 @@
+//! Shared fixtures for the integration tests.  Each test binary
+//! compiles its own copy via `mod common;`, so items unused by one
+//! binary are expected — hence the allow.
+#![allow(dead_code)]
+
+use litl::optics::OpuParams;
+use litl::tensor::Tensor;
+use litl::util::rng::Pcg64;
+
+/// AOT artifacts come from the python toolchain (`make artifacts`).
+/// They are not present in the offline build image, so artifact-bound
+/// integration tests skip (rather than fail) without them.
+pub fn artifacts_available() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts/manifest.json not found (run `make artifacts`)");
+    }
+    ok
+}
+
+/// Deterministic `[rows, cols]` ternary frame batch (the SLM's alphabet).
+pub fn ternary_batch(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg64::seeded(seed);
+    let data = (0..rows * cols)
+        .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+        .collect();
+    Tensor::from_vec(&[rows, cols], data)
+}
+
+/// Noise-free OPU parameters: shot noise off (`n_ph <= 0` skips the
+/// draw entirely) and zero read noise — the deterministic-physics
+/// configuration used by exact-parity tests.
+pub fn noiseless_params() -> OpuParams {
+    OpuParams {
+        n_ph: -1.0,
+        read_sigma: 0.0,
+        ..OpuParams::default()
+    }
+}

@@ -1,0 +1,156 @@
+//! Farm ↔ single-device parity properties.
+//!
+//! The refactor's contract: a [`ProjectorFarm`] over any shard count is
+//! observably the same *projection* as one device over the equivalent
+//! stacked medium — exactly for digital shards, to fp/ADC tolerance for
+//! noiseless optical shards — and its time/energy accounting is the
+//! per-shard sum.  Shard counts 2, 4 and 7 (co-prime with typical mode
+//! counts, exercising the unbalanced-remainder path) are pinned, and a
+//! property sweep draws random (shards, modes, batch) triples.
+
+use litl::coordinator::farm::ProjectorFarm;
+use litl::coordinator::projector::{DigitalProjector, NativeOpticalProjector, Projector};
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::OpuParams;
+use litl::tensor::{matmul, Tensor};
+use litl::util::check::{forall, PairG, UsizeIn};
+
+mod common;
+use common::{noiseless_params, ternary_batch};
+
+#[test]
+fn digital_farm_matches_stacked_medium_at_pinned_shard_counts() {
+    let medium = TransmissionMatrix::sample(31, 10, 52);
+    let e = ternary_batch(8, 10, 1);
+    // The "equivalent stacked medium": concat of the farm's shard slices
+    // must BE the medium, and a single device over it is the oracle.
+    for shards in [2usize, 4, 7] {
+        let stacked = TransmissionMatrix::concat_modes(&medium.split_modes(shards));
+        assert_eq!(stacked.b_re, medium.b_re);
+        let mut oracle = DigitalProjector::new(stacked);
+        let (want1, want2) = oracle.project(&e).unwrap();
+        let mut farm = ProjectorFarm::digital(&medium, shards).unwrap();
+        let (p1, p2) = farm.project(&e).unwrap();
+        assert_eq!(p1, want1, "{shards} shards");
+        assert_eq!(p2, want2, "{shards} shards");
+    }
+}
+
+#[test]
+fn optical_farm_matches_stacked_medium_at_pinned_shard_counts() {
+    let medium = TransmissionMatrix::sample(32, 10, 52);
+    let e = ternary_batch(6, 10, 2);
+    let mut oracle = NativeOpticalProjector::new(noiseless_params(), medium.clone(), 3);
+    let (want1, want2) = oracle.project(&e).unwrap();
+    for shards in [2usize, 4, 7] {
+        let mut farm = ProjectorFarm::optical(noiseless_params(), &medium, 3, shards).unwrap();
+        let (p1, p2) = farm.project(&e).unwrap();
+        assert!(
+            p1.max_abs_diff(&want1) < 1e-5,
+            "{shards} shards: re diff {}",
+            p1.max_abs_diff(&want1)
+        );
+        assert!(
+            p2.max_abs_diff(&want2) < 1e-5,
+            "{shards} shards: im diff {}",
+            p2.max_abs_diff(&want2)
+        );
+    }
+}
+
+/// Random (shards, modes): the digital farm is exactly the stacked
+/// projection for any partition, including modes not divisible by the
+/// shard count.
+#[test]
+fn prop_digital_farm_parity() {
+    let gen = PairG(UsizeIn(1, 8), UsizeIn(8, 64));
+    forall("digital farm parity", &gen, |&(shards, modes)| {
+        if shards > modes {
+            return true; // rejected by construction; covered elsewhere
+        }
+        let medium = TransmissionMatrix::sample((shards * 131 + modes) as u64, 10, modes);
+        let e = ternary_batch(3, 10, (modes + shards) as u64);
+        let want1 = matmul(&e, &medium.b_re);
+        let want2 = matmul(&e, &medium.b_im);
+        let mut farm = match ProjectorFarm::digital(&medium, shards) {
+            Ok(f) => f,
+            Err(_) => return false,
+        };
+        match farm.project(&e) {
+            Ok((p1, p2)) => p1 == want1 && p2 == want2,
+            Err(_) => false,
+        }
+    });
+}
+
+/// Random shard counts: device-seconds and energy are per-shard sums,
+/// and every shard charges the full batch (each virtual camera exposes
+/// every sample of its mode range).
+#[test]
+fn prop_farm_accounting_sums() {
+    let gen = PairG(UsizeIn(1, 6), UsizeIn(1, 20));
+    forall("farm accounting sums", &gen, |&(shards, batches)| {
+        let medium = TransmissionMatrix::sample(7, 10, 30);
+        let mut farm =
+            ProjectorFarm::optical(OpuParams::default(), &medium, 5, shards).unwrap();
+        let b = 4usize;
+        for i in 0..batches {
+            farm.project(&ternary_batch(b, 10, i as u64)).unwrap();
+        }
+        let per_shard = (batches * b) as f64 / 1500.0;
+        let shard_secs = farm.shard_sim_seconds();
+        let sum: f64 = shard_secs.iter().sum();
+        let max = shard_secs.iter().cloned().fold(0.0, f64::max);
+        (farm.sim_seconds() - sum).abs() < 1e-12
+            && (sum - shards as f64 * per_shard).abs() < 1e-9
+            && (farm.sim_seconds_wall() - max).abs() < 1e-12
+            && (farm.energy_joules() - sum * 30.0).abs() < 1e-9
+    });
+}
+
+/// The noisy farm stays a faithful random projection: per-shard noise
+/// streams change draws, not statistics.  Correlation with the exact
+/// projection must match the single-device level.
+#[test]
+fn noisy_farm_keeps_projection_quality() {
+    let medium = TransmissionMatrix::sample(33, 10, 64);
+    let e = ternary_batch(16, 10, 9);
+    let exact = matmul(&e, &medium.b_re);
+    let corr_of = |p: &Tensor| {
+        litl::util::stats::correlation(
+            &p.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            &exact.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        )
+    };
+    let mut single = NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 4);
+    let (s1, _) = single.project(&e).unwrap();
+    let c_single = corr_of(&s1);
+    for shards in [2usize, 4, 7] {
+        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 4, shards).unwrap();
+        let (p1, _) = farm.project(&e).unwrap();
+        let c = corr_of(&p1);
+        assert!(c > 0.97, "{shards} shards: correlation {c}");
+        assert!(
+            (c - c_single).abs() < 0.03,
+            "{shards} shards: correlation {c} vs single {c_single}"
+        );
+    }
+}
+
+/// One-shard farm == plain device, bit for bit, including noise draws —
+/// the `shards=1` parity guarantee of the refactor.
+#[test]
+fn one_shard_farm_is_the_single_device() {
+    let medium = TransmissionMatrix::sample(34, 10, 40);
+    let mut single = NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 21);
+    let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 21, 1).unwrap();
+    for step in 0..5 {
+        let e = ternary_batch(4, 10, 100 + step);
+        let (s1, s2) = single.project(&e).unwrap();
+        let (f1, f2) = farm.project(&e).unwrap();
+        assert_eq!(s1, f1, "step {step}");
+        assert_eq!(s2, f2, "step {step}");
+    }
+    assert_eq!(single.sim_seconds(), farm.sim_seconds());
+    assert_eq!(single.energy_joules(), farm.energy_joules());
+}

@@ -15,7 +15,7 @@ use litl::coordinator::ProjectionClient;
 use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::OpuParams;
-use litl::tensor::{matmul, ternarize, Tensor};
+use litl::tensor::{matmul, Tensor};
 use litl::util::rng::Pcg64;
 
 const LAYERS: &[usize] = &[20, 16, 16, 10];

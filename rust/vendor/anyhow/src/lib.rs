@@ -1,0 +1,205 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset of the real API this workspace uses: the
+//! context-chaining [`Error`] type, the [`Result`] alias, the
+//! [`Context`] extension trait for `Result` and `Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.  Display shows the outermost
+//! message; alternate display (`{:#}`) shows the whole chain joined by
+//! `": "`, matching upstream behaviour.
+
+use std::fmt;
+
+/// A context-chaining error: a stack of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with a defaulted error type, like upstream anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Iterate the chain from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, msg) in rest.iter().enumerate() {
+                        write!(f, "\n    {i}: {msg}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// Like upstream: `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E>: Sized {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for std::result::Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "inner cause")
+    }
+
+    #[test]
+    fn display_is_outermost_alternate_is_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("outer context")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "outer context");
+        assert_eq!(format!("{e:#}"), "outer context: inner cause");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<()> {
+            ensure!(1 + 1 == 2, "math works");
+            bail!("deliberate {}", "failure");
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "deliberate failure");
+        let a: Error = anyhow!("x={}", 7);
+        assert_eq!(a.to_string(), "x=7");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.with_context(|| "was empty").unwrap_err();
+        assert_eq!(e.to_string(), "was empty");
+    }
+}

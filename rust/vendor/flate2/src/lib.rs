@@ -1,0 +1,622 @@
+//! Offline stand-in for the `flate2` crate (subset).
+//!
+//! * [`Crc`] — streaming CRC-32 (IEEE, the gzip polynomial).
+//! * [`read::GzDecoder`] — gzip decompression implementing [`std::io::Read`];
+//!   full RFC 1951 inflate (stored, fixed and dynamic Huffman blocks).
+//! * [`write::GzEncoder`] — gzip compression implementing
+//!   [`std::io::Write`]; emits stored (uncompressed) deflate blocks, which
+//!   every inflater (including ours) accepts.
+//!
+//! The encoder trades ratio for simplicity — correctness and round-trip
+//! compatibility are what the workspace needs offline.
+#![allow(clippy::needless_range_loop)]
+
+/// Compression level knob (accepted for API compatibility; the stored
+/// encoder ignores it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+}
+
+const CRC_POLY: u32 = 0xEDB8_8320;
+
+fn crc_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { CRC_POLY ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        table
+    })
+}
+
+/// Streaming CRC-32 (IEEE).
+#[derive(Clone, Debug, Default)]
+pub struct Crc {
+    state: u32,
+    amount: u32,
+}
+
+impl Crc {
+    pub fn new() -> Crc {
+        Crc { state: 0, amount: 0 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let table = crc_table();
+        let mut c = !self.state;
+        for &b in bytes {
+            c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+        self.state = !c;
+        self.amount = self.amount.wrapping_add(bytes.len() as u32);
+    }
+
+    /// CRC of everything fed so far.
+    pub fn sum(&self) -> u32 {
+        self.state
+    }
+
+    /// Total bytes fed (mod 2³²), the gzip ISIZE field.
+    pub fn amount(&self) -> u32 {
+        self.amount
+    }
+}
+
+// ---------------------------------------------------------------- inflate
+
+mod inflate {
+    use std::io;
+
+    fn err(msg: &str) -> io::Error {
+        io::Error::new(io::ErrorKind::InvalidData, format!("inflate: {msg}"))
+    }
+
+    struct BitReader<'a> {
+        data: &'a [u8],
+        pos: usize,
+        acc: u32,
+        nbits: u32,
+    }
+
+    impl<'a> BitReader<'a> {
+        fn new(data: &'a [u8]) -> BitReader<'a> {
+            BitReader {
+                data,
+                pos: 0,
+                acc: 0,
+                nbits: 0,
+            }
+        }
+
+        /// Take `n` bits (n <= 16), LSB-first as DEFLATE packs them.
+        fn take(&mut self, n: u32) -> io::Result<u32> {
+            debug_assert!(n <= 16);
+            while self.nbits < n {
+                let byte = *self
+                    .data
+                    .get(self.pos)
+                    .ok_or_else(|| err("unexpected end of stream"))?;
+                self.pos += 1;
+                self.acc |= (byte as u32) << self.nbits;
+                self.nbits += 8;
+            }
+            let out = self.acc & ((1u32 << n) - 1);
+            self.acc >>= n;
+            self.nbits -= n;
+            Ok(out)
+        }
+
+        fn align_byte(&mut self) {
+            let drop = self.nbits % 8;
+            self.acc >>= drop;
+            self.nbits -= drop;
+        }
+
+        fn take_bytes(&mut self, n: usize) -> io::Result<&'a [u8]> {
+            debug_assert_eq!(self.nbits % 8, 0);
+            // Return buffered whole bytes to the input cursor first.
+            let buffered = (self.nbits / 8) as usize;
+            self.pos -= buffered;
+            self.acc = 0;
+            self.nbits = 0;
+            if self.pos + n > self.data.len() {
+                return Err(err("stored block overruns input"));
+            }
+            let out = &self.data[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(out)
+        }
+
+        fn consumed(&self) -> usize {
+            self.pos - (self.nbits / 8) as usize
+        }
+    }
+
+    /// Canonical Huffman decoder built from code lengths.
+    struct Huffman {
+        /// counts[len] = number of codes with that bit length.
+        counts: [u16; 16],
+        /// Symbols ordered by (length, symbol) — canonical order.
+        symbols: Vec<u16>,
+    }
+
+    impl Huffman {
+        fn new(lengths: &[u8]) -> io::Result<Huffman> {
+            let mut counts = [0u16; 16];
+            for &l in lengths {
+                if l > 15 {
+                    return Err(err("code length > 15"));
+                }
+                counts[l as usize] += 1;
+            }
+            counts[0] = 0;
+            // Over-subscription check.
+            let mut left = 1i32;
+            for len in 1..16 {
+                left <<= 1;
+                left -= counts[len] as i32;
+                if left < 0 {
+                    return Err(err("over-subscribed code"));
+                }
+            }
+            let mut offsets = [0u16; 16];
+            for len in 1..15 {
+                offsets[len + 1] = offsets[len] + counts[len];
+            }
+            let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l != 0).count()];
+            for (sym, &l) in lengths.iter().enumerate() {
+                if l != 0 {
+                    symbols[offsets[l as usize] as usize] = sym as u16;
+                    offsets[l as usize] += 1;
+                }
+            }
+            Ok(Huffman { counts, symbols })
+        }
+
+        fn decode(&self, br: &mut BitReader) -> io::Result<u16> {
+            let mut code = 0i32;
+            let mut first = 0i32;
+            let mut index = 0i32;
+            for len in 1..16 {
+                code |= br.take(1)? as i32;
+                let count = self.counts[len] as i32;
+                if code - count < first {
+                    return Ok(self.symbols[(index + (code - first)) as usize]);
+                }
+                index += count;
+                first += count;
+                first <<= 1;
+                code <<= 1;
+            }
+            Err(err("invalid Huffman code"))
+        }
+    }
+
+    const LEN_BASE: [u16; 29] = [
+        3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+        131, 163, 195, 227, 258,
+    ];
+    const LEN_EXTRA: [u8; 29] = [
+        0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+    ];
+    const DIST_BASE: [u16; 30] = [
+        1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+        2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+    ];
+    const DIST_EXTRA: [u8; 30] = [
+        0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+        13, 13,
+    ];
+    const CLEN_ORDER: [usize; 19] = [
+        16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+    ];
+
+    fn fixed_tables() -> io::Result<(Huffman, Huffman)> {
+        let mut litlen = [0u8; 288];
+        for (i, l) in litlen.iter_mut().enumerate() {
+            *l = match i {
+                0..=143 => 8,
+                144..=255 => 9,
+                256..=279 => 7,
+                _ => 8,
+            };
+        }
+        let dist = [5u8; 30];
+        Ok((Huffman::new(&litlen)?, Huffman::new(&dist)?))
+    }
+
+    fn dynamic_tables(br: &mut BitReader) -> io::Result<(Huffman, Huffman)> {
+        let hlit = br.take(5)? as usize + 257;
+        let hdist = br.take(5)? as usize + 1;
+        let hclen = br.take(4)? as usize + 4;
+        if hlit > 286 || hdist > 30 {
+            return Err(err("bad code counts"));
+        }
+        let mut clen_lengths = [0u8; 19];
+        for &slot in CLEN_ORDER.iter().take(hclen) {
+            clen_lengths[slot] = br.take(3)? as u8;
+        }
+        let clen = Huffman::new(&clen_lengths)?;
+        let mut lengths = vec![0u8; hlit + hdist];
+        let mut at = 0usize;
+        while at < lengths.len() {
+            let sym = clen.decode(br)?;
+            match sym {
+                0..=15 => {
+                    lengths[at] = sym as u8;
+                    at += 1;
+                }
+                16 => {
+                    if at == 0 {
+                        return Err(err("repeat with no previous length"));
+                    }
+                    let prev = lengths[at - 1];
+                    let reps = 3 + br.take(2)? as usize;
+                    for _ in 0..reps {
+                        if at >= lengths.len() {
+                            return Err(err("length repeat overflow"));
+                        }
+                        lengths[at] = prev;
+                        at += 1;
+                    }
+                }
+                17 => {
+                    let reps = 3 + br.take(3)? as usize;
+                    at += reps;
+                }
+                18 => {
+                    let reps = 11 + br.take(7)? as usize;
+                    at += reps;
+                }
+                _ => return Err(err("bad code-length symbol")),
+            }
+            if at > lengths.len() {
+                return Err(err("length repeat overflow"));
+            }
+        }
+        let litlen = Huffman::new(&lengths[..hlit])?;
+        let dist = Huffman::new(&lengths[hlit..])?;
+        Ok((litlen, dist))
+    }
+
+    /// Inflate a raw DEFLATE stream; returns (output, bytes consumed).
+    pub fn inflate(data: &[u8]) -> io::Result<(Vec<u8>, usize)> {
+        let mut br = BitReader::new(data);
+        let mut out: Vec<u8> = Vec::new();
+        loop {
+            let bfinal = br.take(1)?;
+            let btype = br.take(2)?;
+            match btype {
+                0 => {
+                    br.align_byte();
+                    let header = br.take_bytes(4)?;
+                    let len = u16::from_le_bytes([header[0], header[1]]) as usize;
+                    let nlen = u16::from_le_bytes([header[2], header[3]]);
+                    if nlen != !(len as u16) {
+                        return Err(err("stored block LEN/NLEN mismatch"));
+                    }
+                    out.extend_from_slice(br.take_bytes(len)?);
+                }
+                1 | 2 => {
+                    let (litlen, dist) = if btype == 1 {
+                        fixed_tables()?
+                    } else {
+                        dynamic_tables(&mut br)?
+                    };
+                    loop {
+                        let sym = litlen.decode(&mut br)?;
+                        match sym {
+                            0..=255 => out.push(sym as u8),
+                            256 => break,
+                            257..=285 => {
+                                let idx = (sym - 257) as usize;
+                                let length = LEN_BASE[idx] as usize
+                                    + br.take(LEN_EXTRA[idx] as u32)? as usize;
+                                let dsym = dist.decode(&mut br)? as usize;
+                                if dsym >= 30 {
+                                    return Err(err("bad distance symbol"));
+                                }
+                                let distance = DIST_BASE[dsym] as usize
+                                    + br.take(DIST_EXTRA[dsym] as u32)? as usize;
+                                if distance > out.len() {
+                                    return Err(err("distance before start of output"));
+                                }
+                                let start = out.len() - distance;
+                                for i in 0..length {
+                                    let byte = out[start + i];
+                                    out.push(byte);
+                                }
+                            }
+                            _ => return Err(err("bad literal/length symbol")),
+                        }
+                    }
+                }
+                _ => return Err(err("reserved block type")),
+            }
+            if bfinal == 1 {
+                break;
+            }
+        }
+        Ok((out, br.consumed()))
+    }
+}
+
+pub mod read {
+    use std::io::{self, Read};
+
+    enum State {
+        Pending,
+        Ready(Vec<u8>),
+        /// Failure is latched (io::Error is not Clone, so keep parts):
+        /// retried reads must replay the original cause, not a
+        /// misleading "bad magic" from the drained inner reader.
+        Failed(io::ErrorKind, String),
+    }
+
+    /// Gzip decompressor over any reader (whole-stream, buffered).
+    pub struct GzDecoder<R> {
+        inner: R,
+        state: State,
+        at: usize,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        pub fn new(inner: R) -> GzDecoder<R> {
+            GzDecoder {
+                inner,
+                state: State::Pending,
+                at: 0,
+            }
+        }
+
+        fn decompress(&mut self) -> io::Result<Vec<u8>> {
+            let mut raw = Vec::new();
+            self.inner.read_to_end(&mut raw)?;
+            let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+            if raw.len() < 18 || raw[0] != 0x1f || raw[1] != 0x8b {
+                return Err(bad("not a gzip stream (bad magic)"));
+            }
+            if raw[2] != 8 {
+                return Err(bad("unsupported gzip compression method"));
+            }
+            let flags = raw[3];
+            let mut at = 10usize;
+            if flags & 0x04 != 0 {
+                // FEXTRA
+                if at + 2 > raw.len() {
+                    return Err(bad("truncated FEXTRA"));
+                }
+                let xlen = u16::from_le_bytes([raw[at], raw[at + 1]]) as usize;
+                at += 2 + xlen;
+            }
+            for mask in [0x08u8, 0x10] {
+                // FNAME, FCOMMENT: zero-terminated strings
+                if flags & mask != 0 {
+                    while at < raw.len() && raw[at] != 0 {
+                        at += 1;
+                    }
+                    at += 1;
+                }
+            }
+            if flags & 0x02 != 0 {
+                at += 2; // FHCRC
+            }
+            if at >= raw.len() {
+                return Err(bad("truncated gzip header"));
+            }
+            let (out, used) = super::inflate::inflate(&raw[at..])?;
+            // The 8-byte CRC32+ISIZE trailer is mandatory: a stream cut
+            // after its last deflate block must fail, not silently pass.
+            let trailer = at + used;
+            if trailer + 8 > raw.len() {
+                return Err(bad("truncated gzip stream (missing trailer)"));
+            }
+            let want_crc = u32::from_le_bytes(raw[trailer..trailer + 4].try_into().unwrap());
+            let want_len = u32::from_le_bytes(raw[trailer + 4..trailer + 8].try_into().unwrap());
+            let mut crc = super::Crc::new();
+            crc.update(&out);
+            if crc.sum() != want_crc {
+                return Err(bad("gzip CRC mismatch"));
+            }
+            if want_len != out.len() as u32 {
+                return Err(bad("gzip ISIZE mismatch"));
+            }
+            Ok(out)
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let State::Pending = self.state {
+                self.state = match self.decompress() {
+                    Ok(out) => State::Ready(out),
+                    Err(e) => State::Failed(e.kind(), e.to_string()),
+                };
+            }
+            match &self.state {
+                State::Ready(out) => {
+                    let n = buf.len().min(out.len() - self.at);
+                    buf[..n].copy_from_slice(&out[self.at..self.at + n]);
+                    self.at += n;
+                    Ok(n)
+                }
+                State::Failed(kind, msg) => Err(io::Error::new(*kind, msg.clone())),
+                State::Pending => unreachable!("decompression resolved above"),
+            }
+        }
+    }
+}
+
+pub mod write {
+    use std::io::{self, Write};
+
+    /// Gzip compressor over any writer.  Buffers input and emits stored
+    /// (uncompressed) deflate blocks on [`GzEncoder::finish`].
+    pub struct GzEncoder<W: Write> {
+        inner: Option<W>,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        pub fn new(inner: W, _level: super::Compression) -> GzEncoder<W> {
+            GzEncoder {
+                inner: Some(inner),
+                buf: Vec::new(),
+            }
+        }
+
+        /// Write header + stored blocks + trailer; returns the writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            let mut w = self.inner.take().expect("finish called twice");
+            // 10-byte header: magic, deflate, no flags, no mtime, OS=unknown.
+            w.write_all(&[0x1f, 0x8b, 0x08, 0x00, 0, 0, 0, 0, 0, 0xff])?;
+            let mut chunks = self.buf.chunks(0xffff).peekable();
+            if self.buf.is_empty() {
+                w.write_all(&[0x01, 0x00, 0x00, 0xff, 0xff])?;
+            }
+            while let Some(chunk) = chunks.next() {
+                let bfinal: u8 = if chunks.peek().is_none() { 1 } else { 0 };
+                let len = chunk.len() as u16;
+                w.write_all(&[bfinal])?;
+                w.write_all(&len.to_le_bytes())?;
+                w.write_all(&(!len).to_le_bytes())?;
+                w.write_all(chunk)?;
+            }
+            let mut crc = super::Crc::new();
+            crc.update(&self.buf);
+            w.write_all(&crc.sum().to_le_bytes())?;
+            w.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+            w.flush()?;
+            Ok(w)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926 (IEEE check value).
+        let mut crc = Crc::new();
+        crc.update(b"123456789");
+        assert_eq!(crc.sum(), 0xCBF4_3926);
+        assert_eq!(crc.amount(), 9);
+    }
+
+    #[test]
+    fn crc32_streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let mut a = Crc::new();
+        a.update(&data);
+        let mut b = Crc::new();
+        for chunk in data.chunks(7) {
+            b.update(chunk);
+        }
+        assert_eq!(a.sum(), b.sum());
+    }
+
+    fn roundtrip(payload: &[u8]) -> Vec<u8> {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(payload).unwrap();
+        let gz = enc.finish().unwrap();
+        let mut dec = read::GzDecoder::new(&gz[..]);
+        let mut out = Vec::new();
+        dec.read_to_end(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn gzip_roundtrip_small_and_empty() {
+        assert_eq!(roundtrip(b"hello gzip world"), b"hello gzip world");
+        assert_eq!(roundtrip(b""), b"");
+    }
+
+    #[test]
+    fn gzip_roundtrip_multi_block() {
+        let big: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        assert_eq!(roundtrip(&big), big);
+    }
+
+    #[test]
+    fn missing_trailer_is_detected() {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(b"payload").unwrap();
+        let gz = enc.finish().unwrap();
+        let cut = &gz[..gz.len() - 8]; // deflate stream intact, trailer gone
+        let mut dec = read::GzDecoder::new(cut);
+        let mut out = Vec::new();
+        assert!(dec.read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn corrupt_crc_is_detected() {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(b"payload").unwrap();
+        let mut gz = enc.finish().unwrap();
+        let n = gz.len();
+        gz[n - 6] ^= 0xff; // flip a CRC byte
+        let mut dec = read::GzDecoder::new(&gz[..]);
+        let mut out = Vec::new();
+        assert!(dec.read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn failure_is_latched_across_reads() {
+        let mut enc = write::GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(b"payload").unwrap();
+        let mut gz = enc.finish().unwrap();
+        let n = gz.len();
+        gz[n - 6] ^= 0xff; // corrupt the CRC
+        let mut dec = read::GzDecoder::new(&gz[..]);
+        let mut buf = [0u8; 8];
+        let first = dec.read(&mut buf).unwrap_err().to_string();
+        let second = dec.read(&mut buf).unwrap_err().to_string();
+        assert!(first.contains("CRC"), "{first}");
+        assert_eq!(first, second, "retries must replay the original cause");
+    }
+
+    #[test]
+    fn inflate_fixed_huffman_block() {
+        // "abc" compressed with fixed-Huffman (hand-assembled):
+        // bfinal=1, btype=01; literals 'a','b','c' (codes 0x30+0x61-0x30...),
+        // then end-of-block (7 zero bits).
+        // Instead of hand-assembling, decode a known-good stream produced
+        // by zlib for "aaa...": 0x4B 0x4C 0x84 0x01 0x00 is "aaaa..."?
+        // Keep it simple: fixed-block stream for "A" is 0x73 0x04 0x00.
+        let (out, _) = super::inflate::inflate(&[0x73, 0x04, 0x00]).unwrap();
+        assert_eq!(out, b"A");
+    }
+}

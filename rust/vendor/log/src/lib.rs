@@ -1,0 +1,203 @@
+//! Offline stand-in for the `log` facade crate.
+//!
+//! Provides the subset the workspace uses: the five level macros, the
+//! [`Log`] trait, [`set_boxed_logger`] / [`set_max_level`], and the
+//! [`Level`] / [`LevelFilter`] / [`Metadata`] / [`Record`] types.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a single log record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Global maximum-verbosity filter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    fn as_usize(self) -> usize {
+        self as usize
+    }
+}
+
+/// Metadata about a log record (level + target module).
+#[derive(Clone, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, as handed to [`Log::log`].
+#[derive(Clone, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<Box<dyn Log>> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first call wins).
+pub fn set_boxed_logger(logger: Box<dyn Log>) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing — not part of the public API surface.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level.as_usize() > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record {
+            metadata: Metadata { level, target },
+            args,
+        };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    struct CountingLogger(Arc<AtomicU64>);
+
+    impl Log for CountingLogger {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            assert!(!record.target().is_empty());
+            let _ = format!("{}", record.args());
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filtering_and_dispatch() {
+        let count = Arc::new(AtomicU64::new(0));
+        let _ = set_boxed_logger(Box::new(CountingLogger(count.clone())));
+        set_max_level(LevelFilter::Info);
+        info!("hello {}", 1);
+        debug!("filtered out");
+        assert_eq!(count.load(Ordering::SeqCst), 1);
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+}

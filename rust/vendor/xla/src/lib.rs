@@ -1,0 +1,240 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The real crate links libxla/PJRT, which is not present in this
+//! offline image.  This stub keeps the whole host-side surface working
+//! ([`Literal`] construction, reshape, readback — used by the engine's
+//! tensor<->literal conversions and their tests) while gating device
+//! execution: [`PjRtClient::compile`] returns a descriptive error, so
+//! any code path that would actually run an HLO artifact fails fast
+//! with a clear message instead of segfaulting on a missing runtime.
+//!
+//! The rust-native projector/trainer paths (`litl::optics`,
+//! `litl::coordinator::host`, the `ProjectorFarm`) never touch this.
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's stringly errors.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "XLA/PJRT device runtime is not available in this offline build; \
+         use the rust-native projector paths (projector=native|digital)"
+            .to_string(),
+    )
+}
+
+/// Parsed HLO module (text payload is retained, not interpreted).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(Error(format!("{path}: not an HLO text module")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _text_len: usize,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _text_len: proto.text.len(),
+        }
+    }
+}
+
+/// PJRT client handle (host metadata only in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle (unreachable through the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer handle (unreachable through the stub client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Sealed element-type support (f32 is all the workspace moves).
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+/// Host literal: row-major f32 array (or a tuple of literals).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: data.to_vec(),
+            tuple: None,
+        }
+    }
+
+    /// Reshape to new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+            tuple: None,
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("array_shape on a tuple literal".to_string()));
+        }
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error("to_tuple on a non-tuple literal".to_string()))
+    }
+
+    /// Build a tuple literal (test/support helper).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: Vec::new(),
+            data: Vec::new(),
+            tuple: Some(parts),
+        }
+    }
+}
+
+/// Array shape: dimension sizes.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+        // scalar
+        let s = Literal::vec1(&[3.5]).reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn device_paths_are_gated() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let proto = HloModuleProto {
+            text: "HloModule x".into(),
+        };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn tuple_decomposition() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1.0]).to_tuple().is_err());
+    }
+}
