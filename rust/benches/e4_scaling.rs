@@ -14,14 +14,52 @@
 use std::collections::BTreeMap;
 
 use litl::bench::{fmt_rate, fmt_s, Bench};
+use litl::config::Partition;
 use litl::coordinator::farm::ProjectorFarm;
-use litl::coordinator::projector::Projector;
+use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::service::{
+    ProjectionService, ServiceConfig, ShardServiceConfig, ShardedProjectionService,
+};
+use litl::coordinator::ProjectionClient;
+use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::OpuParams;
 use litl::sim::power::{Holography, OpuModel};
 use litl::tensor::Tensor;
 use litl::util::json::Json;
 use litl::util::rng::Pcg64;
+
+/// Drive `clients` threads, each submitting `submissions` requests of
+/// `rows` ternary frames through its own client handle, waiting for
+/// every reply; returns the wall-clock seconds for the whole workload.
+fn run_service_workload(
+    client: &ProjectionClient,
+    clients: usize,
+    submissions: usize,
+    rows: usize,
+    d_in: usize,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = client.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::seeded(9000 + c as u64);
+                for _ in 0..submissions {
+                    let mut e = Tensor::zeros(&[rows, d_in]);
+                    for v in e.data_mut() {
+                        *v = (rng.next_below(3) as i64 - 1) as f32;
+                    }
+                    client.project(e).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
 
 fn main() -> anyhow::Result<()> {
     litl::util::logging::init();
@@ -161,6 +199,146 @@ fn main() -> anyhow::Result<()> {
     record.insert("host_cores".to_string(), Json::Num(cores as f64));
     record.insert("results".to_string(), Json::Arr(rows));
     println!("{}", Json::Obj(record).to_string_compact());
+
+    // ---- E4.4: shard-aware service sweep ----
+    //
+    // The serving question behind the farm: when many clients contend
+    // for the optical device, does shard-aware scheduling (per-shard
+    // lanes + frame-slot assignment) beat the device-agnostic service
+    // (one dispatcher, one opaque device call per batch)?  Sweep
+    // clients × shards × partition; "agnostic" rows are the baseline.
+    println!("\n== E4.4: shard-aware service sweep (clients × shards × partition) ==");
+    let (sv_d_in, sv_modes, sv_rows, sv_reqs) = (10usize, 1024usize, 8usize, 6usize);
+    let sv_medium = TransmissionMatrix::sample(31, sv_d_in, sv_modes);
+    println!(
+        "d_in={sv_d_in} modes={sv_modes} rows/request={sv_rows} requests/client={sv_reqs}"
+    );
+    println!(
+        "{:>8} {:>8} {:>10} {:>12} {:>14} {:>12}",
+        "clients", "shards", "partition", "wall", "frames/s", "vs agnostic"
+    );
+    let mut service_rows: Vec<Json> = Vec::new();
+    let mut speedup_4shard_multiclient = 0.0f64;
+    for &clients in &[1usize, 4, 8] {
+        let total_frames = (clients * sv_reqs * sv_rows) as f64;
+        let base_svc = ProjectionService::start(
+            Box::new(NativeOpticalProjector::new(
+                OpuParams::default(),
+                sv_medium.clone(),
+                9,
+            )),
+            sv_d_in,
+            ServiceConfig {
+                max_batch: 64,
+                queue_depth: 128,
+            },
+            Registry::new(),
+        );
+        let wall_base = {
+            let c = base_svc.client();
+            run_service_workload(&c, clients, sv_reqs, sv_rows, sv_d_in)
+        };
+        base_svc.shutdown();
+        println!(
+            "{:>8} {:>8} {:>10} {:>12} {:>14} {:>12}",
+            clients,
+            1,
+            "agnostic",
+            fmt_s(wall_base),
+            fmt_rate(total_frames / wall_base),
+            "1.00x"
+        );
+        let mut row = BTreeMap::new();
+        row.insert("clients".to_string(), Json::Num(clients as f64));
+        row.insert("shards".to_string(), Json::Num(1.0));
+        row.insert("partition".to_string(), Json::Str("agnostic".to_string()));
+        row.insert("wall_s".to_string(), Json::Num(wall_base));
+        row.insert(
+            "frames_per_s".to_string(),
+            Json::Num(total_frames / wall_base),
+        );
+        row.insert("speedup_vs_agnostic".to_string(), Json::Num(1.0));
+        service_rows.push(Json::Obj(row));
+        for partition in [Partition::Modes, Partition::Batch] {
+            for &shards in &[1usize, 2, 4] {
+                let devices = ProjectorFarm::optical_shard_devices(
+                    OpuParams::default(),
+                    &sv_medium,
+                    9,
+                    shards,
+                    partition,
+                )?;
+                let svc = ShardedProjectionService::start(
+                    devices,
+                    sv_d_in,
+                    ShardServiceConfig {
+                        max_batch: 64,
+                        queue_depth: 128,
+                        lane_depth: 8,
+                        partition,
+                        ..Default::default()
+                    },
+                    Registry::new(),
+                )?;
+                let wall = {
+                    let c = svc.client();
+                    run_service_workload(&c, clients, sv_reqs, sv_rows, sv_d_in)
+                };
+                svc.shutdown();
+                let speedup = wall_base / wall;
+                if shards == 4 && clients > 1 {
+                    speedup_4shard_multiclient = speedup_4shard_multiclient.max(speedup);
+                }
+                println!(
+                    "{:>8} {:>8} {:>10} {:>12} {:>14} {:>12}",
+                    clients,
+                    shards,
+                    partition.name(),
+                    fmt_s(wall),
+                    fmt_rate(total_frames / wall),
+                    format!("{speedup:.2}x")
+                );
+                let mut row = BTreeMap::new();
+                row.insert("clients".to_string(), Json::Num(clients as f64));
+                row.insert("shards".to_string(), Json::Num(shards as f64));
+                row.insert(
+                    "partition".to_string(),
+                    Json::Str(partition.name().to_string()),
+                );
+                row.insert("wall_s".to_string(), Json::Num(wall));
+                row.insert(
+                    "frames_per_s".to_string(),
+                    Json::Num(total_frames / wall),
+                );
+                row.insert("speedup_vs_agnostic".to_string(), Json::Num(speedup));
+                service_rows.push(Json::Obj(row));
+            }
+        }
+    }
+    let mut service_record = BTreeMap::new();
+    service_record.insert(
+        "bench".to_string(),
+        Json::Str("e4_service_sweep".to_string()),
+    );
+    service_record.insert("modes".to_string(), Json::Num(sv_modes as f64));
+    service_record.insert("d_in".to_string(), Json::Num(sv_d_in as f64));
+    service_record.insert("rows_per_request".to_string(), Json::Num(sv_rows as f64));
+    service_record.insert(
+        "requests_per_client".to_string(),
+        Json::Num(sv_reqs as f64),
+    );
+    service_record.insert("host_cores".to_string(), Json::Num(cores as f64));
+    service_record.insert("results".to_string(), Json::Arr(service_rows));
+    println!("{}", Json::Obj(service_record).to_string_compact());
+    println!(
+        "4-shard service vs device-agnostic (multi-client best): \
+         {speedup_4shard_multiclient:.2}x {}",
+        if speedup_4shard_multiclient > 1.5 {
+            "(>1.5x target HOLDS)"
+        } else {
+            "(below 1.5x target on this host)"
+        }
+    );
 
     // Physical-farm envelope: same frame clock, N× capacity and power.
     println!("\nmodeled physical farm (off-axis paper device × N):");

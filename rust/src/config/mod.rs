@@ -54,6 +54,40 @@ impl Algo {
     }
 }
 
+/// How a multi-shard projector splits one projection across devices.
+///
+/// The axis choice is the ROADMAP's "batch-axis sharding" item realized
+/// as a policy: `Modes` favours large-output regimes (each device images
+/// its slice of the output modes), `Batch` favours small-mode /
+/// large-batch regimes (each device holds the full medium and exposes a
+/// contiguous row range of the frame sequence).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    /// Every shard sees every frame and computes a contiguous slice of
+    /// the output modes; shard outputs concatenate along columns.
+    Modes,
+    /// Shards hold full-medium replicas and each processes a contiguous
+    /// row range of the frame batch; outputs concatenate along rows.
+    Batch,
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Result<Partition> {
+        Ok(match s {
+            "modes" | "mode" => Partition::Modes,
+            "batch" => Partition::Batch,
+            other => bail!("unknown partition '{other}' (modes|batch)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partition::Modes => "modes",
+            Partition::Batch => "batch",
+        }
+    }
+}
+
 /// Projector backend for DFA algos.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProjectorKind {
@@ -90,10 +124,12 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Simulated-OPU frame accounting on/off (timing model).
     pub account_frames: bool,
-    /// Virtual projector devices: mode-shard the projection across N
+    /// Virtual projector devices: shard the projection across N
     /// concurrent devices (`ProjectorFarm`).  1 = the classic single
     /// device, bit-identical to the pre-farm path.
     pub shards: usize,
+    /// Partition axis for a multi-shard projector (`modes` or `batch`).
+    pub partition: Partition,
 }
 
 impl Default for TrainConfig {
@@ -115,6 +151,7 @@ impl Default for TrainConfig {
             eval_every: 0,
             account_frames: true,
             shards: 1,
+            partition: Partition::Modes,
         }
     }
 }
@@ -154,6 +191,7 @@ impl TrainConfig {
                 }
                 self.shards = n as usize;
             }
+            "partition" => self.partition = Partition::parse(value.want_str()?)?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -227,6 +265,19 @@ mod tests {
         c.set_kv("shards=4").unwrap();
         assert_eq!(c.shards, 4);
         assert!(c.set_kv("shards=0").is_err());
+    }
+
+    #[test]
+    fn partition_knob_parses_and_validates() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.partition, Partition::Modes);
+        c.set_kv("partition=batch").unwrap();
+        assert_eq!(c.partition, Partition::Batch);
+        c.set_kv("partition=\"modes\"").unwrap();
+        assert_eq!(c.partition, Partition::Modes);
+        assert!(c.set_kv("partition=rows").is_err());
+        assert_eq!(Partition::Batch.name(), "batch");
+        assert_eq!(Partition::Modes.name(), "modes");
     }
 
     #[test]

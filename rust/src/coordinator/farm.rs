@@ -19,11 +19,24 @@
 //! concatenated in shard order — results are deterministic for a given
 //! seed regardless of scheduling.
 //!
-//! Invariants (tested here and in `rust/tests/farm_parity.rs`):
-//! * `shards == 1` is **bit-identical** to the plain single-device path;
+//! Two [`Partition`] policies are supported (the `--partition` switch):
+//!
+//! * [`Partition::Modes`] — the diagram above: every shard sees every
+//!   frame and images a contiguous slice of the output modes.
+//! * [`Partition::Batch`] — each shard holds a full-medium replica and
+//!   exposes a contiguous **row range** of the batch (the ROADMAP's
+//!   batch-axis sharding, for small-mode / large-batch regimes); shard
+//!   outputs concatenate along rows.
+//!
+//! Invariants (tested here and in `rust/tests/farm_parity.rs` /
+//! `rust/tests/service_schedule.rs`):
+//! * `shards == 1` is **bit-identical** to the plain single-device path
+//!   under either partition;
 //! * at any shard count, the farm equals a single device over the
 //!   equivalent stacked medium (exactly for digital shards; to fp/ADC
-//!   tolerance for noiseless optical shards);
+//!   tolerance for noiseless optical shards) — for the batch partition
+//!   the digital farm is exact at any shard count because the host
+//!   matmul is row-local;
 //! * `sim_seconds()`/`energy_joules()` are *device-second* sums over
 //!   shards (capacity accounting); `sim_seconds_wall()` is their max
 //!   (what a wall clock would see, since shards run in parallel);
@@ -36,6 +49,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::config::Partition;
 use crate::exec::ThreadPool;
 use crate::metrics::{Counter, Registry};
 use crate::optics::medium::TransmissionMatrix;
@@ -56,8 +70,70 @@ pub struct ProjectorFarm {
     modes_total: usize,
     pool: Arc<ThreadPool>,
     kind: &'static str,
+    partition: Partition,
+    /// Completed frame slots per shard (one slot = one row exposed on
+    /// that virtual device's display/camera sequence).
+    slot_counts: Vec<u64>,
     shard_failures: Counter,
     batches: Counter,
+}
+
+/// Contiguous balanced row split: the first `rows % shards` shards take
+/// one extra row (mirrors `TransmissionMatrix::split_modes`).  Shared by
+/// the farm's batch partition and the service's frame-slot scheduler —
+/// the batch-parity contract requires both to carve identical ranges.
+pub(crate) fn split_rows(rows: usize, shards: usize) -> Vec<usize> {
+    let base = rows / shards;
+    let rem = rows % shards;
+    (0..shards).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Concatenate per-part quadrature pairs along the mode axis: part `i`
+/// is `[rows, dims[i]]`, the result `[rows, dims.sum()]`.  The single
+/// gather implementation behind both the farm's mode partition and the
+/// sharded service's frame assembly.
+pub(crate) fn concat_mode_parts(
+    parts: &[(Tensor, Tensor)],
+    dims: &[usize],
+    rows: usize,
+) -> (Tensor, Tensor) {
+    let total: usize = dims.iter().sum();
+    let mut p1 = Tensor::zeros(&[rows, total]);
+    let mut p2 = Tensor::zeros(&[rows, total]);
+    let mut col = 0usize;
+    for ((s1, s2), &mc) in parts.iter().zip(dims) {
+        debug_assert_eq!(s1.shape(), &[rows, mc]);
+        for r in 0..rows {
+            let dst = r * total + col;
+            p1.data_mut()[dst..dst + mc]
+                .copy_from_slice(&s1.data()[r * mc..(r + 1) * mc]);
+            p2.data_mut()[dst..dst + mc]
+                .copy_from_slice(&s2.data()[r * mc..(r + 1) * mc]);
+        }
+        col += mc;
+    }
+    (p1, p2)
+}
+
+/// Concatenate per-part quadrature pairs along the row axis: part `i`
+/// is `[dims[i], modes]`, the result `[dims.sum(), modes]`.  Zero-row
+/// parts are legal (a shard that sat the frame out).
+pub(crate) fn concat_row_parts(
+    parts: &[(Tensor, Tensor)],
+    dims: &[usize],
+    modes: usize,
+) -> (Tensor, Tensor) {
+    let rows: usize = dims.iter().sum();
+    let mut p1 = Tensor::zeros(&[rows, modes]);
+    let mut p2 = Tensor::zeros(&[rows, modes]);
+    let mut at = 0usize;
+    for ((s1, s2), &rc) in parts.iter().zip(dims) {
+        debug_assert_eq!(s1.shape(), &[rc, modes]);
+        p1.data_mut()[at * modes..(at + rc) * modes].copy_from_slice(s1.data());
+        p2.data_mut()[at * modes..(at + rc) * modes].copy_from_slice(s2.data());
+        at += rc;
+    }
+    (p1, p2)
 }
 
 fn default_pool(shards: usize, registry: &Registry) -> Arc<ThreadPool> {
@@ -93,26 +169,128 @@ impl ProjectorFarm {
         shards: usize,
         registry: Registry,
     ) -> Result<Self> {
-        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
-        anyhow::ensure!(
-            shards <= medium.modes,
-            "cannot shard {} modes across {shards} devices",
-            medium.modes
-        );
-        let devices: Vec<Box<dyn Projector + Send>> = medium
-            .split_modes(shards)
-            .into_iter()
-            .enumerate()
-            .map(|(i, slice)| {
-                Box::new(NativeOpticalProjector::with_noise_stream(
-                    params,
-                    slice,
-                    noise_seed,
-                    NOISE_STREAM_BASE + i as u64,
-                )) as Box<dyn Projector + Send>
-            })
-            .collect();
+        let devices = Self::optical_shard_devices(
+            params,
+            medium,
+            noise_seed,
+            shards,
+            Partition::Modes,
+        )?;
         Self::from_shards(devices, "farm-optical", registry)
+    }
+
+    /// Optical farm under either [`Partition`]: mode slices (the classic
+    /// farm) or full-medium replicas serving contiguous row ranges.  The
+    /// replicas draw camera noise from the same per-shard streams as the
+    /// mode farm, so `shards=1` stays bit-identical to the single device
+    /// under both policies.
+    pub fn optical_partitioned(
+        params: OpuParams,
+        medium: &TransmissionMatrix,
+        noise_seed: u64,
+        shards: usize,
+        partition: Partition,
+        registry: Registry,
+    ) -> Result<Self> {
+        let devices =
+            Self::optical_shard_devices(params, medium, noise_seed, shards, partition)?;
+        Self::from_shards_partitioned(devices, "farm-optical", partition, registry)
+    }
+
+    /// Build just the shard devices for a partitioned optical projector —
+    /// no pool, no farm state.  This is what
+    /// [`ShardedProjectionService::start`] wants: it gives every device
+    /// its own worker thread, so the farm's execution machinery would be
+    /// dead weight.
+    ///
+    /// [`ShardedProjectionService::start`]: super::service::ShardedProjectionService::start
+    pub fn optical_shard_devices(
+        params: OpuParams,
+        medium: &TransmissionMatrix,
+        noise_seed: u64,
+        shards: usize,
+        partition: Partition,
+    ) -> Result<Vec<Box<dyn Projector + Send>>> {
+        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
+        Ok(match partition {
+            Partition::Modes => {
+                anyhow::ensure!(
+                    shards <= medium.modes,
+                    "cannot shard {} modes across {shards} devices",
+                    medium.modes
+                );
+                medium
+                    .split_modes(shards)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, slice)| {
+                        Box::new(NativeOpticalProjector::with_noise_stream(
+                            params,
+                            slice,
+                            noise_seed,
+                            NOISE_STREAM_BASE + i as u64,
+                        )) as Box<dyn Projector + Send>
+                    })
+                    .collect()
+            }
+            Partition::Batch => (0..shards)
+                .map(|i| {
+                    Box::new(NativeOpticalProjector::with_noise_stream(
+                        params,
+                        medium.clone(),
+                        noise_seed,
+                        NOISE_STREAM_BASE + i as u64,
+                    )) as Box<dyn Projector + Send>
+                })
+                .collect(),
+        })
+    }
+
+    /// Digital farm under either [`Partition`].  Exactly equal to the
+    /// single device at any shard count for both policies: column dot
+    /// products are computed identically (modes), and the host matmul is
+    /// row-local (batch).
+    pub fn digital_partitioned(
+        medium: &TransmissionMatrix,
+        shards: usize,
+        partition: Partition,
+        registry: Registry,
+    ) -> Result<Self> {
+        let devices = Self::digital_shard_devices(medium, shards, partition)?;
+        Self::from_shards_partitioned(devices, "farm-digital", partition, registry)
+    }
+
+    /// [`ProjectorFarm::optical_shard_devices`] for the digital
+    /// comparator.
+    pub fn digital_shard_devices(
+        medium: &TransmissionMatrix,
+        shards: usize,
+        partition: Partition,
+    ) -> Result<Vec<Box<dyn Projector + Send>>> {
+        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
+        Ok(match partition {
+            Partition::Modes => {
+                anyhow::ensure!(
+                    shards <= medium.modes,
+                    "cannot shard {} modes across {shards} devices",
+                    medium.modes
+                );
+                medium
+                    .split_modes(shards)
+                    .into_iter()
+                    .map(|slice| {
+                        Box::new(DigitalProjector::new(slice))
+                            as Box<dyn Projector + Send>
+                    })
+                    .collect()
+            }
+            Partition::Batch => (0..shards)
+                .map(|_| {
+                    Box::new(DigitalProjector::new(medium.clone()))
+                        as Box<dyn Projector + Send>
+                })
+                .collect(),
+        })
     }
 
     /// Digital farm: the silicon comparator sharded the same way.
@@ -129,30 +307,34 @@ impl ProjectorFarm {
         shards: usize,
         registry: Registry,
     ) -> Result<Self> {
-        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
-        anyhow::ensure!(
-            shards <= medium.modes,
-            "cannot shard {} modes across {shards} devices",
-            medium.modes
-        );
-        let devices: Vec<Box<dyn Projector + Send>> = medium
-            .split_modes(shards)
-            .into_iter()
-            .map(|slice| Box::new(DigitalProjector::new(slice)) as Box<dyn Projector + Send>)
-            .collect();
+        let devices =
+            Self::digital_shard_devices(medium, shards, Partition::Modes)?;
         Self::from_shards(devices, "farm-digital", registry)
     }
 
-    /// Assemble a farm from pre-built shard devices (mode ranges are
-    /// taken from each device's `modes()`; outputs concatenate in shard
-    /// order).  The execution pool is sized to the shard count.
+    /// Assemble a mode-partitioned farm from pre-built shard devices
+    /// (mode ranges are taken from each device's `modes()`; outputs
+    /// concatenate in shard order).  The execution pool is sized to the
+    /// shard count.
     pub fn from_shards(
         shards: Vec<Box<dyn Projector + Send>>,
         kind: &'static str,
         registry: Registry,
     ) -> Result<Self> {
+        Self::from_shards_partitioned(shards, kind, Partition::Modes, registry)
+    }
+
+    /// [`ProjectorFarm::from_shards`] with an explicit [`Partition`].
+    /// Batch-partition shards must expose identical mode counts (they
+    /// are replicas of one medium, not slices).
+    pub fn from_shards_partitioned(
+        shards: Vec<Box<dyn Projector + Send>>,
+        kind: &'static str,
+        partition: Partition,
+        registry: Registry,
+    ) -> Result<Self> {
         let pool = default_pool(shards.len(), &registry);
-        Self::from_shards_pooled(shards, kind, registry, pool)
+        Self::assemble(shards, kind, partition, registry, pool)
     }
 
     /// [`ProjectorFarm::from_shards`] over a caller-supplied pool, so
@@ -166,15 +348,38 @@ impl ProjectorFarm {
         registry: Registry,
         pool: Arc<ThreadPool>,
     ) -> Result<Self> {
+        Self::assemble(shards, kind, Partition::Modes, registry, pool)
+    }
+
+    fn assemble(
+        shards: Vec<Box<dyn Projector + Send>>,
+        kind: &'static str,
+        partition: Partition,
+        registry: Registry,
+        pool: Arc<ThreadPool>,
+    ) -> Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "farm needs at least one shard");
         let mode_counts: Vec<usize> = shards.iter().map(|s| s.modes()).collect();
-        let modes_total = mode_counts.iter().sum();
+        let modes_total = match partition {
+            Partition::Modes => mode_counts.iter().sum(),
+            Partition::Batch => {
+                anyhow::ensure!(
+                    mode_counts.iter().all(|&m| m == mode_counts[0]),
+                    "batch-partition shards must expose identical mode \
+                     counts, got {mode_counts:?}"
+                );
+                mode_counts[0]
+            }
+        };
+        let n = shards.len();
         Ok(ProjectorFarm {
             shards,
             mode_counts,
             modes_total,
             pool,
             kind,
+            partition,
+            slot_counts: vec![0; n],
             shard_failures: registry.counter(SHARD_FAILURES),
             batches: registry.counter(FARM_BATCHES),
         })
@@ -188,6 +393,47 @@ impl ProjectorFarm {
     /// Mode count of each shard, in concatenation order.
     pub fn mode_counts(&self) -> &[usize] {
         &self.mode_counts
+    }
+
+    /// The partition policy this farm executes.
+    pub fn partition(&self) -> Partition {
+        self.partition
+    }
+
+    /// Completed frame slots per shard (a slot = one row exposed on that
+    /// virtual device).  Mode partition charges every shard the full
+    /// batch; batch partition charges each shard its row range.
+    pub fn shard_slots(&self) -> &[u64] {
+        &self.slot_counts
+    }
+
+    /// Per-shard submit entry point: run `frames` on shard `shard` alone
+    /// and return that shard's quadratures (`[B, mode_counts()[shard]]`
+    /// for the mode partition; `[B, modes()]` for batch replicas).  The
+    /// shard-aware projection service schedules through this shape of
+    /// call — one (shard, frame-slot range) at a time — and only the
+    /// target shard's slot account is charged.
+    pub fn project_on(
+        &mut self,
+        shard: usize,
+        frames: &Tensor,
+    ) -> Result<(Tensor, Tensor)> {
+        anyhow::ensure!(
+            shard < self.shards.len(),
+            "shard {shard} out of range ({} shards)",
+            self.shards.len()
+        );
+        let out = self.shards[shard].project(frames)?;
+        self.slot_counts[shard] += frames.rows() as u64;
+        Ok(out)
+    }
+
+    /// Decompose the farm into its shard devices (shard order preserved),
+    /// handing ownership to a caller that schedules them directly — the
+    /// shard-aware projection service gives each device its own worker
+    /// thread and bounded request lane.
+    pub fn into_shards(self) -> Vec<Box<dyn Projector + Send>> {
+        self.shards
     }
 
     /// Per-shard simulated device-seconds.
@@ -208,34 +454,17 @@ impl ProjectorFarm {
     pub fn pool(&self) -> &Arc<ThreadPool> {
         &self.pool
     }
-}
 
-impl Projector for ProjectorFarm {
-    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
-        self.batches.inc();
-        // All shard counts (including 1) take the same scoped path, so
-        // panic containment and failure accounting are uniform.  Bit
-        // parity at `shards=1` holds because the gather is a pure copy
-        // of the single shard's output.
-        let b = frames.rows();
-        let n = self.shards.len();
-        // One result slot per shard; slots are disjoint `&mut`s handed
-        // to the scoped shard jobs, so no locking and a deterministic
-        // gather order.  `None` after the scope means the shard job
-        // panicked (the pool contains and counts the panic).
-        let mut slots: Vec<Option<Result<(Tensor, Tensor)>>> = Vec::with_capacity(n);
-        slots.resize_with(n, || None);
-        self.pool.scope(|scope| {
-            for (shard, slot) in self.shards.iter_mut().zip(slots.iter_mut()) {
-                scope.submit(move || {
-                    *slot = Some(shard.project(frames));
-                });
-            }
-        });
-
-        // Inspect every slot before failing, so concurrent shard
-        // failures are all counted (the pool's panic counter and
-        // SHARD_FAILURES must agree batch by batch).
+    /// Turn per-shard result slots into outputs, counting every failure
+    /// (the pool's panic counter and SHARD_FAILURES must agree batch by
+    /// batch).  `None` means the shard job panicked (contained by the
+    /// pool).
+    #[allow(clippy::type_complexity)]
+    fn collect_outputs(
+        &self,
+        slots: Vec<Option<Result<(Tensor, Tensor)>>>,
+    ) -> Result<Vec<(Tensor, Tensor)>> {
+        let n = slots.len();
         let mut outputs: Vec<(Tensor, Tensor)> = Vec::with_capacity(n);
         let mut failures: Vec<String> = Vec::new();
         for (i, slot) in slots.into_iter().enumerate() {
@@ -255,22 +484,100 @@ impl Projector for ProjectorFarm {
                 failures.join("; ")
             );
         }
+        Ok(outputs)
+    }
 
-        let mut p1 = Tensor::zeros(&[b, self.modes_total]);
-        let mut p2 = Tensor::zeros(&[b, self.modes_total]);
-        let mut col = 0usize;
-        for ((s1, s2), &mc) in outputs.iter().zip(&self.mode_counts) {
-            debug_assert_eq!(s1.shape(), &[b, mc]);
-            for r in 0..b {
-                let dst = r * self.modes_total + col;
-                p1.data_mut()[dst..dst + mc]
-                    .copy_from_slice(&s1.data()[r * mc..(r + 1) * mc]);
-                p2.data_mut()[dst..dst + mc]
-                    .copy_from_slice(&s2.data()[r * mc..(r + 1) * mc]);
+    /// Mode partition: every shard sees the whole batch and computes its
+    /// mode slice; gather concatenates along columns.
+    fn project_modes(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        // All shard counts (including 1) take the same scoped path, so
+        // panic containment and failure accounting are uniform.  Bit
+        // parity at `shards=1` holds because the gather is a pure copy
+        // of the single shard's output.
+        let b = frames.rows();
+        let n = self.shards.len();
+        // One result slot per shard; slots are disjoint `&mut`s handed
+        // to the scoped shard jobs, so no locking and a deterministic
+        // gather order.  `None` after the scope means the shard job
+        // panicked (the pool contains and counts the panic).
+        let mut slots: Vec<Option<Result<(Tensor, Tensor)>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        self.pool.scope(|scope| {
+            for (shard, slot) in self.shards.iter_mut().zip(slots.iter_mut()) {
+                scope.submit(move || {
+                    *slot = Some(shard.project(frames));
+                });
             }
-            col += mc;
+        });
+        let outputs = self.collect_outputs(slots)?;
+        let (p1, p2) = concat_mode_parts(&outputs, &self.mode_counts, b);
+        // Every virtual camera exposed all b rows: b slots per shard.
+        for count in self.slot_counts.iter_mut() {
+            *count += b as u64;
         }
         Ok((p1, p2))
+    }
+
+    /// Batch partition: shard `i` (a full-medium replica) processes the
+    /// `i`-th contiguous row range; gather concatenates along rows.
+    /// Shards with an empty range are skipped entirely — their noise
+    /// streams, clocks and slot accounts stay untouched.
+    fn project_batch(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        let b = frames.rows();
+        let n = self.shards.len();
+        let d_in = frames.cols();
+        let modes = self.modes_total;
+        let counts = split_rows(b, n);
+        let mut slices: Vec<Option<Tensor>> = Vec::with_capacity(n);
+        let mut row0 = 0usize;
+        for &c in &counts {
+            if c == 0 {
+                slices.push(None);
+            } else {
+                slices.push(Some(Tensor::from_vec(
+                    &[c, d_in],
+                    frames.data()[row0 * d_in..(row0 + c) * d_in].to_vec(),
+                )));
+            }
+            row0 += c;
+        }
+        let mut slots: Vec<Option<Result<(Tensor, Tensor)>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        self.pool.scope(|scope| {
+            for ((shard, slice), slot) in self
+                .shards
+                .iter_mut()
+                .zip(slices.iter())
+                .zip(slots.iter_mut())
+            {
+                if let Some(rows) = slice {
+                    scope.submit(move || {
+                        *slot = Some(shard.project(rows));
+                    });
+                } else {
+                    *slot = Some(Ok((
+                        Tensor::zeros(&[0, modes]),
+                        Tensor::zeros(&[0, modes]),
+                    )));
+                }
+            }
+        });
+        let outputs = self.collect_outputs(slots)?;
+        let (p1, p2) = concat_row_parts(&outputs, &counts, modes);
+        for (count, &c) in self.slot_counts.iter_mut().zip(&counts) {
+            *count += c as u64;
+        }
+        Ok((p1, p2))
+    }
+}
+
+impl Projector for ProjectorFarm {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        self.batches.inc();
+        match self.partition {
+            Partition::Modes => self.project_modes(frames),
+            Partition::Batch => self.project_batch(frames),
+        }
     }
 
     fn modes(&self) -> usize {
@@ -477,5 +784,126 @@ mod tests {
         assert!(optical.requires_ternary());
         let digital = ProjectorFarm::digital(&medium, 2).unwrap();
         assert!(!digital.requires_ternary());
+    }
+
+    #[test]
+    fn batch_partition_digital_is_exact_at_any_shard_count() {
+        let medium = TransmissionMatrix::sample(12, 10, 24);
+        let want = |e: &Tensor| (matmul(e, &medium.b_re), matmul(e, &medium.b_im));
+        // Includes b < shards (empty ranges on the tail shards).
+        for (shards, b) in [(1usize, 5usize), (2, 5), (4, 9), (7, 3)] {
+            let mut farm = ProjectorFarm::digital_partitioned(
+                &medium,
+                shards,
+                Partition::Batch,
+                Registry::new(),
+            )
+            .unwrap();
+            assert_eq!(farm.partition(), Partition::Batch);
+            assert_eq!(farm.modes(), 24);
+            let e = tern(b, 10, 40 + shards as u64);
+            let (want1, want2) = want(&e);
+            let (p1, p2) = farm.project(&e).unwrap();
+            assert_eq!(p1, want1, "{shards} shards, batch {b}");
+            assert_eq!(p2, want2, "{shards} shards, batch {b}");
+        }
+    }
+
+    #[test]
+    fn batch_partition_one_shard_is_bit_identical_to_single_device() {
+        // Noisy optics: the one batch replica uses the same noise stream
+        // as the standalone device, so even the draws agree.
+        let medium = TransmissionMatrix::sample(13, 10, 20);
+        let mut single =
+            NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 55);
+        let mut farm = ProjectorFarm::optical_partitioned(
+            OpuParams::default(),
+            &medium,
+            55,
+            1,
+            Partition::Batch,
+            Registry::new(),
+        )
+        .unwrap();
+        for step in 0..3 {
+            let e = tern(4, 10, 200 + step);
+            let (s1, s2) = single.project(&e).unwrap();
+            let (f1, f2) = farm.project(&e).unwrap();
+            assert_eq!(s1, f1, "step {step}");
+            assert_eq!(s2, f2, "step {step}");
+        }
+    }
+
+    #[test]
+    fn batch_partition_slot_accounting_is_per_row_range() {
+        let medium = TransmissionMatrix::sample(14, 10, 16);
+        let mut farm = ProjectorFarm::optical_partitioned(
+            OpuParams::default(),
+            &medium,
+            3,
+            4,
+            Partition::Batch,
+            Registry::new(),
+        )
+        .unwrap();
+        farm.project(&tern(10, 10, 1)).unwrap();
+        // 10 rows over 4 shards: 3,3,2,2 — slots sum to the batch.
+        assert_eq!(farm.shard_slots(), &[3, 3, 2, 2]);
+        // Each shard charged its own frame clock for its rows only.
+        let secs = farm.shard_sim_seconds();
+        assert!((secs[0] - 3.0 / 1500.0).abs() < 1e-12);
+        assert!((secs[3] - 2.0 / 1500.0).abs() < 1e-12);
+        assert!((farm.sim_seconds() - 10.0 / 1500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modes_partition_slot_accounting_charges_every_shard() {
+        let medium = TransmissionMatrix::sample(15, 10, 30);
+        let mut farm = ProjectorFarm::digital(&medium, 3).unwrap();
+        farm.project(&tern(6, 10, 2)).unwrap();
+        farm.project(&tern(2, 10, 3)).unwrap();
+        assert_eq!(farm.shard_slots(), &[8, 8, 8]);
+    }
+
+    #[test]
+    fn project_on_runs_one_shard_and_charges_it_only() {
+        let medium = TransmissionMatrix::sample(16, 10, 30);
+        let mut farm = ProjectorFarm::digital(&medium, 3).unwrap();
+        let e = tern(5, 10, 4);
+        let slices = medium.split_modes(3);
+        let (p1, p2) = farm.project_on(1, &e).unwrap();
+        assert_eq!(p1, matmul(&e, &slices[1].b_re));
+        assert_eq!(p2, matmul(&e, &slices[1].b_im));
+        assert_eq!(farm.shard_slots(), &[0, 5, 0]);
+        assert!(farm.project_on(3, &e).is_err());
+    }
+
+    #[test]
+    fn into_shards_hands_out_devices_in_order() {
+        let medium = TransmissionMatrix::sample(17, 10, 30);
+        let farm = ProjectorFarm::digital(&medium, 3).unwrap();
+        let counts: Vec<usize> = farm.mode_counts().to_vec();
+        let devices = farm.into_shards();
+        assert_eq!(devices.len(), 3);
+        for (dev, mc) in devices.iter().zip(&counts) {
+            assert_eq!(dev.modes(), *mc);
+        }
+    }
+
+    #[test]
+    fn batch_partition_rejects_mismatched_replicas() {
+        let a = TransmissionMatrix::sample(18, 10, 8);
+        let b = TransmissionMatrix::sample(18, 10, 12);
+        let shards: Vec<Box<dyn Projector + Send>> = vec![
+            Box::new(DigitalProjector::new(a)),
+            Box::new(DigitalProjector::new(b)),
+        ];
+        assert!(ProjectorFarm::from_shards_partitioned(
+            shards,
+            "farm-test",
+            Partition::Batch,
+            Registry::new()
+        )
+        .is_err());
     }
 }

@@ -9,15 +9,22 @@
 //! * [`projector`] — the device abstraction: optical (native physics or
 //!   HLO twin) and digital (exact) projectors behind one trait.
 //! * [`farm`] — the sharded multi-device layer: N virtual OPUs over
-//!   contiguous mode ranges of one medium, executed concurrently on the
-//!   `exec` pool and concatenated deterministically.  `shards=1` is
-//!   bit-identical to the single-device path; `--shards N` on the CLI
-//!   routes the trainer through it.
-//! * [`service`] — the projection service: a shared device fed by a
-//!   dynamic frame batcher, so concurrent clients (ensemble members,
-//!   eval probes, ablation sweeps) share OPU frames.  One optical frame
+//!   contiguous mode ranges of one medium (`--partition modes`) or
+//!   full-medium replicas serving contiguous batch-row ranges
+//!   (`--partition batch`), executed concurrently on the `exec` pool and
+//!   concatenated deterministically.  `shards=1` is bit-identical to the
+//!   single-device path; `--shards N` on the CLI routes the trainer
+//!   through it.
+//! * [`service`] — the projection services: the device-agnostic
+//!   [`service::ProjectionService`] (one dispatcher, dynamic frame
+//!   batching, any `Projector` behind it) and the shard-aware
+//!   [`service::ShardedProjectionService`] (a frame-slot scheduler that
+//!   assigns client submissions to concrete (shard, frame-slot) pairs
+//!   over per-shard bounded lanes and worker threads, coalescing small
+//!   requests into shared frames and splitting large ones along the
+//!   partition axis).  Concurrent clients (ensemble members, eval
+//!   probes, ablation sweeps) share OPU frames; one optical frame
 //!   carries the feedback for *every* hidden layer (re/im quadratures).
-//!   The device behind the service may itself be a [`farm::ProjectorFarm`].
 //! * [`trainer`] — the training loop over the AOT artifacts: forward →
 //!   ternarize → optical projection → fused DFA+Adam apply; plus the
 //!   fully-fused digital DFA and BP baselines.
@@ -39,5 +46,8 @@ pub mod trainer;
 
 pub use farm::ProjectorFarm;
 pub use projector::{DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector};
-pub use service::{ProjectionClient, ProjectionService};
+pub use service::{
+    ProjectionClient, ProjectionService, ServiceConfig, ShardServiceConfig,
+    ShardedProjectionService,
+};
 pub use trainer::{EvalResult, TrainReport, Trainer};

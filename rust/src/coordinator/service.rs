@@ -1,34 +1,70 @@
-//! The projection service: one shared projection device, many clients.
+//! The projection service: shared projection devices, many clients.
 //!
-//! The device behind the service is anything implementing
-//! [`Projector`] + `Send` — a single OPU with a frame clock, or a
-//! [`ProjectorFarm`](super::farm::ProjectorFarm) of N virtual devices
-//! (the service's dynamic batching and the farm's mode sharding
-//! compose: requests are packed into shared device batches, then each
-//! batch fans out across the farm's shards).  Everything in the process
-//! that needs a random projection — each ensemble member's trainer,
-//! alignment probes, calibration — goes through this service.
-//! A dispatcher thread drains the request queue and packs pending
-//! requests into *shared device batches* (dynamic batching, the same
-//! motif as vLLM's router at a different timescale: here the deadline is
-//! the next camera frame).
+//! Two service shapes live here:
+//!
+//! * [`ProjectionService`] — the classic *device-agnostic* path: one
+//!   dispatcher thread drains the request queue and packs pending
+//!   requests into *shared device batches* (dynamic batching, the same
+//!   motif as vLLM's router at a different timescale: here the deadline
+//!   is the next camera frame).  The device may be a
+//!   [`ProjectorFarm`](super::farm::ProjectorFarm), but the service
+//!   neither knows nor exploits that: every batch is one opaque device
+//!   call.
+//! * [`ShardedProjectionService`] — the *shard-aware* path: a frame-slot
+//!   scheduler assigns client submissions to concrete
+//!   **(shard, frame-slot)** pairs.  Each farm shard gets its own
+//!   bounded request lane ([`Lanes`]) and a dedicated worker thread that
+//!   owns the shard device, so concurrent clients actually occupy the
+//!   farm's devices concurrently instead of serializing behind one
+//!   dispatcher.  Small requests coalesce into shared frame sequences;
+//!   large ones are carved along the [`Partition`] axis — every shard
+//!   images its mode slice of every frame (`modes`), or each shard takes
+//!   a contiguous row range of the batch (`batch`).
+//!
+//! **Determinism contract** (pinned in `rust/tests/service_schedule.rs`):
+//! the scheduler is a single thread, so for a fixed submission order the
+//! frame packing, the (shard, slot) assignment and each shard's job
+//! sequence — hence its noise-stream draws — are all deterministic, and
+//! at `shards = 1` the scheduled result is bitwise identical to the
+//! device-agnostic path (same greedy packing, same device, and the
+//! single-part gather is a pure copy).  For digital shards the scheduled
+//! result is bitwise equal to the single-device reference at *any* shard
+//! count under either partition; noiseless optics agree to fp/ADC
+//! tolerance.
 //!
 //! Invariants (property-tested below and in `rust/tests/`):
-//! * every submitted frame is projected exactly once (no loss, no dup);
+//! * every submitted frame is projected exactly once (no loss, no dup),
+//!   including frames still queued when `shutdown` is called — shutdown
+//!   drains the central queue into the lanes and the lanes into the
+//!   devices before joining the workers;
 //! * rows within a request keep their order;
 //! * replies are routed to the submitting client only;
-//! * a batch never exceeds the configured device capacity.
+//! * a *coalesced* frame sequence never exceeds the configured capacity
+//!   (`max_batch`); a single request larger than `max_batch` is never
+//!   split — it passes through as its own oversized sequence, identical
+//!   in both services;
+//! * per-shard slot accounts explain the client-observed totals (modes:
+//!   every shard is charged every frame; batch: charges sum to the
+//!   submitted rows).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::config::Partition;
 use crate::exec::oneshot;
-use crate::exec::queue::BoundedQueue;
-use crate::metrics::Registry;
+use crate::exec::queue::{BoundedQueue, Lanes};
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::sim::clock::SimClock;
 use crate::tensor::Tensor;
 
+use super::farm::{concat_mode_parts, concat_row_parts, split_rows, ProjectorFarm};
 use super::projector::Projector;
+
+/// Metric name for shard-worker device failures in the sharded service.
+pub const SHARD_ERRORS: &str = "service_shard_errors";
 
 /// One projection request: a few frames from one client.
 struct Request {
@@ -63,6 +99,10 @@ pub struct ProjectionClient {
 
 impl ProjectionClient {
     /// Submit frames `[B, d_in]`; returns a future for `(P1, P2)`.
+    /// Requests are coalesced up to the service's `max_batch`; a single
+    /// request *larger* than `max_batch` is never split — it is
+    /// scheduled as its own oversized frame sequence (pinned by
+    /// `prop_service_preserves_payloads` in `rust/tests/props.rs`).
     pub fn submit(
         &self,
         frames: Tensor,
@@ -115,35 +155,12 @@ impl ProjectionService {
         let dispatcher = std::thread::Builder::new()
             .name("litl-projection-service".into())
             .spawn(move || {
-                // Drain loop: block for the first request, then
-                // opportunistically pack more pending ones (dynamic
-                // batching up to max_batch frames).
-                while let Some(first) = q2.pop() {
-                    let mut batch: Vec<Request> = vec![first];
-                    let mut total: usize = batch[0].frames.rows();
-                    while total < cfg.max_batch {
-                        match q2.try_pop() {
-                            Some(req) if total + req.frames.rows() <= cfg.max_batch => {
-                                total += req.frames.rows();
-                                batch.push(req);
-                            }
-                            Some(req) => {
-                                // Doesn't fit this frame sequence: flush,
-                                // then start the next batch with it
-                                // (re-queueing would reorder).
-                                frames_ctr.add(total as u64);
-                                batches_ctr.inc();
-                                Self::run_batch(&mut *device, batch, &occupancy);
-                                batch = vec![req];
-                                total = batch[0].frames.rows();
-                            }
-                            None => break,
-                        }
-                    }
+                pack_loop(&q2, cfg.max_batch, |batch, total| {
                     frames_ctr.add(total as u64);
                     batches_ctr.inc();
                     Self::run_batch(&mut *device, batch, &occupancy);
-                }
+                    true
+                });
             })
             .expect("spawn dispatcher");
         ProjectionService {
@@ -161,31 +178,11 @@ impl ProjectionService {
         let rows: usize = batch.iter().map(|r| r.frames.rows()).sum();
         occupancy.observe(rows as f64);
         let d_in = batch[0].frames.cols();
-        // Pack all requests into one device tensor.
-        let mut packed = Tensor::zeros(&[rows, d_in]);
-        let mut at = 0usize;
-        for req in &batch {
-            let n = req.frames.rows() * d_in;
-            packed.data_mut()[at * d_in..at * d_in + n]
-                .copy_from_slice(req.frames.data());
-            at += req.frames.rows();
-        }
+        let packed = pack_requests(&batch, rows, d_in);
         match device.project(&packed) {
             Ok((p1, p2)) => {
-                // Slice replies back out, preserving request row order.
                 let modes = device.modes();
-                let mut row = 0usize;
-                for req in batch {
-                    let b = req.frames.rows();
-                    let take = |src: &Tensor| {
-                        Tensor::from_vec(
-                            &[b, modes],
-                            src.data()[row * modes..(row + b) * modes].to_vec(),
-                        )
-                    };
-                    req.reply.send(Ok((take(&p1), take(&p2))));
-                    row += b;
-                }
+                send_replies(batch, &p1, &p2, modes);
             }
             Err(e) => {
                 let msg = format!("{e:#}");
@@ -219,6 +216,494 @@ impl Drop for ProjectionService {
         if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// Greedy dynamic batching, shared verbatim by the device-agnostic
+/// dispatcher and the frame-slot scheduler — the `shards=1`
+/// bitwise-parity contract requires the two to pack identically.
+/// Blocks for one request, opportunistically coalesces pending ones up
+/// to `max_batch` rows (a request that does not fit flushes the current
+/// sequence and starts the next; re-queueing would reorder), and calls
+/// `flush` for every packed sequence.  Returns when the queue is closed
+/// AND drained; `flush` returning false aborts early (shutdown raced a
+/// schedule).
+fn pack_loop(
+    queue: &BoundedQueue<Request>,
+    max_batch: usize,
+    mut flush: impl FnMut(Vec<Request>, usize) -> bool,
+) {
+    while let Some(first) = queue.pop() {
+        let mut batch: Vec<Request> = vec![first];
+        let mut total: usize = batch[0].frames.rows();
+        while total < max_batch {
+            match queue.try_pop() {
+                Some(req) if total + req.frames.rows() <= max_batch => {
+                    total += req.frames.rows();
+                    batch.push(req);
+                }
+                Some(req) => {
+                    if !flush(batch, total) {
+                        return;
+                    }
+                    batch = vec![req];
+                    total = batch[0].frames.rows();
+                }
+                None => break,
+            }
+        }
+        if !flush(batch, total) {
+            return;
+        }
+    }
+}
+
+/// Copy a batch of requests into one contiguous `[total, d_in]` frame
+/// sequence, submission order preserved — shared by the dispatcher and
+/// the frame-slot scheduler for the same reason as [`pack_loop`].
+fn pack_requests(batch: &[Request], total: usize, d_in: usize) -> Tensor {
+    let mut packed = Tensor::zeros(&[total, d_in]);
+    let mut at = 0usize;
+    for req in batch {
+        let n = req.frames.rows() * d_in;
+        packed.data_mut()[at * d_in..at * d_in + n]
+            .copy_from_slice(req.frames.data());
+        at += req.frames.rows();
+    }
+    packed
+}
+
+/// Slice a packed frame sequence's projections back out to the
+/// submitting clients, preserving request row order.
+fn send_replies(batch: Vec<Request>, p1: &Tensor, p2: &Tensor, modes: usize) {
+    let mut row = 0usize;
+    for req in batch {
+        let b = req.frames.rows();
+        let take = |src: &Tensor| {
+            Tensor::from_vec(
+                &[b, modes],
+                src.data()[row * modes..(row + b) * modes].to_vec(),
+            )
+        };
+        req.reply.send(Ok((take(p1), take(p2))));
+        row += b;
+    }
+}
+
+/// Scheduling configuration for the shard-aware service.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardServiceConfig {
+    /// Max frames (rows) coalesced into one scheduled frame sequence.
+    pub max_batch: usize,
+    /// Central submit-queue capacity (client backpressure bound).
+    pub queue_depth: usize,
+    /// Per-shard lane capacity (scheduler → worker backpressure bound).
+    pub lane_depth: usize,
+    /// How scheduled frames map onto shards.
+    pub partition: Partition,
+    /// Frame rate used for scheduler-side per-slot time attribution.
+    pub frame_rate_hz: f64,
+}
+
+impl Default for ShardServiceConfig {
+    fn default() -> Self {
+        ShardServiceConfig {
+            max_batch: 128,
+            queue_depth: 256,
+            lane_depth: 8,
+            partition: Partition::Modes,
+            frame_rate_hz: 1500.0,
+        }
+    }
+}
+
+/// One shard's share of a scheduled frame sequence.  `frames` is shared
+/// (`Arc`) because the mode partition sends the *same* packed sequence
+/// to every shard — no per-shard deep copies on the scheduler thread.
+struct ShardJob {
+    frames: Arc<Tensor>,
+    /// Index into the frame's part list (== gather position).
+    part: usize,
+    assembly: Arc<FrameAssembly>,
+}
+
+/// Gather state for one scheduled frame sequence: the worker that
+/// completes the last pending part assembles the full quadratures and
+/// routes the replies.  Assembly order is by part index — fixed at
+/// scheduling time — so results do not depend on which shard finishes
+/// first.
+struct FrameAssembly {
+    requests: Mutex<Vec<Request>>,
+    #[allow(clippy::type_complexity)]
+    parts: Mutex<Vec<Option<Result<(Tensor, Tensor), String>>>>,
+    pending: AtomicUsize,
+    partition: Partition,
+    rows_total: usize,
+    modes_total: usize,
+    /// Per-part mode counts (modes partition) or row counts (batch).
+    part_dims: Vec<usize>,
+}
+
+fn complete_part(
+    assembly: &Arc<FrameAssembly>,
+    part: usize,
+    result: Result<(Tensor, Tensor), String>,
+) {
+    assembly.parts.lock().unwrap()[part] = Some(result);
+    if assembly.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        finish_frame(assembly);
+    }
+}
+
+fn finish_frame(assembly: &FrameAssembly) {
+    let parts_raw = std::mem::take(&mut *assembly.parts.lock().unwrap());
+    let requests = std::mem::take(&mut *assembly.requests.lock().unwrap());
+    let mut parts: Vec<(Tensor, Tensor)> = Vec::with_capacity(parts_raw.len());
+    let mut errors: Vec<String> = Vec::new();
+    for (i, p) in parts_raw.into_iter().enumerate() {
+        match p {
+            Some(Ok(pair)) => parts.push(pair),
+            Some(Err(e)) => errors.push(format!("shard part {i}: {e}")),
+            None => errors.push(format!("shard part {i}: no result")),
+        }
+    }
+    if !errors.is_empty() {
+        let msg = errors.join("; ");
+        for req in requests {
+            req.reply.send(Err(msg.clone()));
+        }
+        return;
+    }
+    let (p1, p2) = concat_parts(&parts, assembly);
+    send_replies(requests, &p1, &p2, assembly.modes_total);
+}
+
+/// Concatenate per-shard quadratures back into the full frame result:
+/// along columns for the mode partition, along rows for batch (the same
+/// gather the farm uses — one implementation, one contract).
+fn concat_parts(
+    parts: &[(Tensor, Tensor)],
+    assembly: &FrameAssembly,
+) -> (Tensor, Tensor) {
+    match assembly.partition {
+        Partition::Modes => {
+            concat_mode_parts(parts, &assembly.part_dims, assembly.rows_total)
+        }
+        Partition::Batch => {
+            concat_row_parts(parts, &assembly.part_dims, assembly.modes_total)
+        }
+    }
+}
+
+/// One shard's worker: owns the device, drains its lane in FIFO order.
+/// A panicking device fails the frame (all clients in it see the error)
+/// but the worker — and the lane — stay alive, mirroring the farm's
+/// panic containment.
+struct ShardWorker {
+    shard: usize,
+    device: Box<dyn Projector + Send>,
+    lanes: Lanes<ShardJob>,
+    max_batch: usize,
+    frames: Counter,
+    calls: Counter,
+    errors: Counter,
+    util: Gauge,
+    lane_depth: Gauge,
+}
+
+impl ShardWorker {
+    fn run(mut self) {
+        while let Some(job) = self.lanes.pop(self.shard) {
+            self.lane_depth.set(self.lanes.len(self.shard) as f64);
+            let rows = job.frames.rows();
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || self.device.project(&job.frames),
+            ))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("shard device panicked")))
+            .map_err(|e| format!("{e:#}"));
+            self.calls.inc();
+            match &result {
+                Ok(_) => self.frames.add(rows as u64),
+                Err(_) => self.errors.inc(),
+            }
+            // Occupancy utilization: rows actually projected per unit of
+            // offered frame-sequence capacity on this shard (clamped to
+            // 1.0 — an oversized pass-through request can exceed one
+            // sequence's nominal capacity).
+            let done = self.frames.get() as f64;
+            let offered = (self.calls.get() * self.max_batch as u64) as f64;
+            self.util.set(done / offered.max(done).max(1.0));
+            complete_part(&job.assembly, job.part, result);
+        }
+    }
+}
+
+/// The frame-slot scheduler: a single thread, so frame packing and
+/// (shard, slot) assignment are a pure function of submission order.
+struct FrameScheduler {
+    cfg: ShardServiceConfig,
+    d_in: usize,
+    modes_total: usize,
+    shard_modes: Vec<usize>,
+    lanes: Lanes<ShardJob>,
+    frames_ctr: Counter,
+    batches_ctr: Counter,
+    occupancy: Histogram,
+    queue_depth: Gauge,
+    shard_slots: Vec<Counter>,
+    slot_clocks: Vec<SimClock>,
+    slot_gauges: Vec<Gauge>,
+}
+
+impl FrameScheduler {
+    fn run(self, queue: BoundedQueue<Request>) {
+        // `pack_loop` is the same greedy coalescing the device-agnostic
+        // dispatcher runs — that shared implementation is what makes
+        // `shards=1` bitwise-reproduce the classic path.  `pop` drains
+        // the queue after close, so everything submitted before
+        // shutdown still gets scheduled.
+        pack_loop(&queue, self.cfg.max_batch, |batch, total| {
+            self.queue_depth.set(queue.len() as f64);
+            self.schedule_frame(batch, total).is_ok()
+        });
+    }
+
+    /// Pack `batch` into one frame sequence, carve it into per-shard
+    /// jobs along the partition axis, and enqueue each job on its
+    /// shard's lane, charging that shard's slot account at scheduling
+    /// time.  `Err` means the lanes closed under us (shutdown raced a
+    /// schedule) — the unsent parts' requests get dropped senders, which
+    /// clients observe as a dropped request.
+    fn schedule_frame(&self, batch: Vec<Request>, total: usize) -> Result<(), ()> {
+        self.frames_ctr.add(total as u64);
+        self.batches_ctr.inc();
+        self.occupancy.observe(total as f64);
+        let packed = pack_requests(&batch, total, self.d_in);
+        let shards = self.shard_modes.len();
+        // (frames, shard) in part order — the gather order.
+        let mut jobs: Vec<(Arc<Tensor>, usize)> = Vec::with_capacity(shards);
+        let mut part_dims: Vec<usize> = Vec::with_capacity(shards);
+        match self.cfg.partition {
+            Partition::Modes => {
+                // Every shard images every frame: same slot range on
+                // each device, coalesced requests share the slots (and
+                // the one packed tensor — Arc, not a copy per shard).
+                let shared = Arc::new(packed);
+                for (shard, &mc) in self.shard_modes.iter().enumerate() {
+                    jobs.push((shared.clone(), shard));
+                    part_dims.push(mc);
+                }
+            }
+            Partition::Batch => {
+                // Contiguous balanced row ranges (the farm's split);
+                // shards past the row count sit this frame out entirely.
+                let mut row0 = 0usize;
+                for (shard, &c) in split_rows(total, shards).iter().enumerate() {
+                    if c == 0 {
+                        continue;
+                    }
+                    jobs.push((
+                        Arc::new(Tensor::from_vec(
+                            &[c, self.d_in],
+                            packed.data()[row0 * self.d_in..(row0 + c) * self.d_in]
+                                .to_vec(),
+                        )),
+                        shard,
+                    ));
+                    part_dims.push(c);
+                    row0 += c;
+                }
+            }
+        }
+        let n_parts = jobs.len();
+        let mut part_slots: Vec<Option<Result<(Tensor, Tensor), String>>> =
+            Vec::with_capacity(n_parts);
+        part_slots.resize_with(n_parts, || None);
+        let assembly = Arc::new(FrameAssembly {
+            requests: Mutex::new(batch),
+            parts: Mutex::new(part_slots),
+            pending: AtomicUsize::new(n_parts),
+            partition: self.cfg.partition,
+            rows_total: total,
+            modes_total: self.modes_total,
+            part_dims,
+        });
+        for (part, (frames, shard)) in jobs.into_iter().enumerate() {
+            // The slot range is reserved on the shard's frame sequence
+            // at scheduling time, whether or not the device later errors
+            // (a failed exposure still occupied the camera).
+            let slots = frames.rows() as u64;
+            self.shard_slots[shard].add(slots);
+            self.slot_clocks[shard].advance_slots(slots, self.cfg.frame_rate_hz);
+            self.slot_gauges[shard].set(self.slot_clocks[shard].now_secs());
+            let job = ShardJob {
+                frames,
+                part,
+                assembly: assembly.clone(),
+            };
+            if self.lanes.push(shard, job).is_err() {
+                return Err(());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The running shard-aware service: scheduler + one worker per shard.
+pub struct ShardedProjectionService {
+    queue: BoundedQueue<Request>,
+    lanes: Lanes<ShardJob>,
+    scheduler: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    slot_clocks: Vec<SimClock>,
+    d_in: usize,
+}
+
+impl ShardedProjectionService {
+    /// Start a service over shard devices (shard `i` ↔ lane `i`; order
+    /// is the gather order).  `d_in` is the frame width.
+    pub fn start(
+        shards: Vec<Box<dyn Projector + Send>>,
+        d_in: usize,
+        cfg: ShardServiceConfig,
+        metrics: Registry,
+    ) -> Result<ShardedProjectionService> {
+        anyhow::ensure!(!shards.is_empty(), "service needs at least one shard");
+        anyhow::ensure!(
+            cfg.max_batch > 0 && cfg.queue_depth > 0 && cfg.lane_depth > 0,
+            "service capacities must be positive: {cfg:?}"
+        );
+        anyhow::ensure!(
+            cfg.frame_rate_hz > 0.0,
+            "frame_rate_hz must be positive: {cfg:?}"
+        );
+        let shard_modes: Vec<usize> = shards.iter().map(|s| s.modes()).collect();
+        let modes_total = match cfg.partition {
+            Partition::Modes => shard_modes.iter().sum(),
+            Partition::Batch => {
+                anyhow::ensure!(
+                    shard_modes.iter().all(|&m| m == shard_modes[0]),
+                    "batch-partition shards must expose identical mode \
+                     counts, got {shard_modes:?}"
+                );
+                shard_modes[0]
+            }
+        };
+        let n = shards.len();
+        let queue: BoundedQueue<Request> = BoundedQueue::new(cfg.queue_depth);
+        let lanes: Lanes<ShardJob> = Lanes::new(n, cfg.lane_depth);
+        let slot_clocks: Vec<SimClock> = (0..n).map(|_| SimClock::new()).collect();
+        let mut workers = Vec::with_capacity(n);
+        for (i, device) in shards.into_iter().enumerate() {
+            let worker = ShardWorker {
+                shard: i,
+                device,
+                lanes: lanes.clone(),
+                max_batch: cfg.max_batch,
+                frames: metrics.counter(&format!("service_shard{i}_frames")),
+                calls: metrics.counter(&format!("service_shard{i}_calls")),
+                errors: metrics.counter(SHARD_ERRORS),
+                util: metrics.gauge(&format!("service_shard{i}_util")),
+                lane_depth: metrics.gauge(&format!("service_shard{i}_lane_depth")),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("litl-shard-worker-{i}"))
+                    .spawn(move || worker.run())
+                    .expect("spawn shard worker"),
+            );
+        }
+        let scheduler = FrameScheduler {
+            cfg,
+            d_in,
+            modes_total,
+            shard_modes,
+            lanes: lanes.clone(),
+            frames_ctr: metrics.counter("service_frames"),
+            batches_ctr: metrics.counter("service_batches"),
+            occupancy: metrics.histogram("service_batch_occupancy"),
+            queue_depth: metrics.gauge("service_queue_depth"),
+            shard_slots: (0..n)
+                .map(|i| metrics.counter(&format!("service_shard{i}_slots")))
+                .collect(),
+            slot_clocks: slot_clocks.clone(),
+            slot_gauges: (0..n)
+                .map(|i| metrics.gauge(&format!("service_shard{i}_slot_s")))
+                .collect(),
+        };
+        let q2 = queue.clone();
+        let sched_handle = std::thread::Builder::new()
+            .name("litl-shard-scheduler".into())
+            .spawn(move || scheduler.run(q2))
+            .expect("spawn frame scheduler");
+        Ok(ShardedProjectionService {
+            queue,
+            lanes,
+            scheduler: Some(sched_handle),
+            workers,
+            slot_clocks,
+            d_in,
+        })
+    }
+
+    /// Start over a [`ProjectorFarm`], taking ownership of its shard
+    /// devices.  The farm's partition must match the scheduler's — a
+    /// mode-sliced farm cannot serve batch row ranges.
+    pub fn over_farm(
+        farm: ProjectorFarm,
+        d_in: usize,
+        cfg: ShardServiceConfig,
+        metrics: Registry,
+    ) -> Result<ShardedProjectionService> {
+        anyhow::ensure!(
+            farm.partition() == cfg.partition,
+            "farm partition {:?} != service partition {:?}",
+            farm.partition(),
+            cfg.partition
+        );
+        Self::start(farm.into_shards(), d_in, cfg, metrics)
+    }
+
+    /// Create a client handle (same submit/project API as the
+    /// device-agnostic service).
+    pub fn client(&self) -> ProjectionClient {
+        ProjectionClient {
+            queue: self.queue.clone(),
+            d_in: self.d_in,
+        }
+    }
+
+    /// Per-shard scheduled-slot seconds — the scheduler's timing
+    /// attribution (`slots / frame_rate`), independent of each device's
+    /// own clock.
+    pub fn shard_slot_seconds(&self) -> Vec<f64> {
+        self.slot_clocks.iter().map(|c| c.now_secs()).collect()
+    }
+
+    fn shutdown_inner(&mut self) {
+        // Ordered drain: stop intake, let the scheduler drain the
+        // central queue into the lanes, then close the lanes and let
+        // each worker drain its lane.  No in-flight work is abandoned.
+        self.queue.close();
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        self.lanes.close_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting requests, drain everything in flight, join all
+    /// threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl Drop for ShardedProjectionService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
     }
 }
 
@@ -298,6 +783,23 @@ mod tests {
     }
 
     #[test]
+    fn sharded_oversized_request_passes_through_like_the_classic_path() {
+        // A request larger than max_batch is never split: both services
+        // schedule it as its own oversized frame sequence (the classic
+        // path's behavior is pinned at tier 1 by
+        // prop_service_preserves_payloads in rust/tests/props.rs).
+        for partition in [Partition::Modes, Partition::Batch] {
+            let (svc, medium, _) = sharded(partition, 2, 8, 16);
+            let client = svc.client();
+            let e = tern(17, 11); // 17 rows > max_batch 16
+            let (p1, p2) = client.project(e.clone()).unwrap();
+            assert_eq!(p1, matmul(&e, &medium.b_re), "{partition:?}");
+            assert_eq!(p2, matmul(&e, &medium.b_im), "{partition:?}");
+            svc.shutdown();
+        }
+    }
+
+    #[test]
     fn shutdown_rejects_new_requests() {
         let (svc, _) = service(8, 16);
         let client = svc.client();
@@ -358,6 +860,153 @@ mod tests {
             assert_eq!(p2, matmul(&e, &medium.b_im));
         }
         svc.shutdown();
+    }
+
+    fn sharded(
+        partition: Partition,
+        shards: usize,
+        modes: usize,
+        max_batch: usize,
+    ) -> (ShardedProjectionService, TransmissionMatrix, Registry) {
+        let medium = TransmissionMatrix::sample(19, 10, modes);
+        let devices =
+            ProjectorFarm::digital_shard_devices(&medium, shards, partition).unwrap();
+        let reg = Registry::new();
+        let svc = ShardedProjectionService::start(
+            devices,
+            10,
+            ShardServiceConfig {
+                max_batch,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition,
+                frame_rate_hz: 1500.0,
+            },
+            reg.clone(),
+        )
+        .unwrap();
+        (svc, medium, reg)
+    }
+
+    #[test]
+    fn sharded_roundtrip_under_both_partitions() {
+        for partition in [Partition::Modes, Partition::Batch] {
+            let (svc, medium, _) = sharded(partition, 4, 24, 32);
+            let client = svc.client();
+            let replies: Vec<_> = (0..6)
+                .map(|i| {
+                    let e = tern(3, 60 + i);
+                    (e.clone(), client.submit(e).unwrap())
+                })
+                .collect();
+            for (e, r) in replies {
+                let (p1, p2) = r.wait().unwrap().unwrap();
+                assert_eq!(p1, matmul(&e, &medium.b_re), "{partition:?}");
+                assert_eq!(p2, matmul(&e, &medium.b_im), "{partition:?}");
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn batch_partition_slots_sum_to_client_rows() {
+        let (svc, _, reg) = sharded(Partition::Batch, 4, 16, 64);
+        let client = svc.client();
+        let replies: Vec<_> = (0..5)
+            .map(|i| client.submit(tern(4, 70 + i)).unwrap())
+            .collect();
+        for r in replies {
+            r.wait().unwrap().unwrap();
+        }
+        let slot_s = svc.shard_slot_seconds();
+        svc.shutdown();
+        let snap = reg.snapshot();
+        assert_eq!(snap["service_frames"], 20.0);
+        let slot_sum: f64 = (0..4)
+            .map(|i| snap[&format!("service_shard{i}_slots")])
+            .sum();
+        assert_eq!(slot_sum, 20.0);
+        let frame_sum: f64 = (0..4)
+            .map(|i| snap[&format!("service_shard{i}_frames")])
+            .sum();
+        assert_eq!(frame_sum, 20.0);
+        // Scheduler-side slot clocks: slots / 1500 Hz, summed over shards.
+        let total_slot_s: f64 = slot_s.iter().sum();
+        assert!((total_slot_s - 20.0 / 1500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn modes_partition_charges_every_shard_per_frame() {
+        let (svc, _, reg) = sharded(Partition::Modes, 3, 24, 64);
+        let client = svc.client();
+        let replies: Vec<_> = (0..4)
+            .map(|i| client.submit(tern(2, 80 + i)).unwrap())
+            .collect();
+        for r in replies {
+            r.wait().unwrap().unwrap();
+        }
+        svc.shutdown();
+        let snap = reg.snapshot();
+        assert_eq!(snap["service_frames"], 8.0);
+        for i in 0..3 {
+            assert_eq!(snap[&format!("service_shard{i}_slots")], 8.0);
+            assert_eq!(snap[&format!("service_shard{i}_frames")], 8.0);
+        }
+    }
+
+    #[test]
+    fn sharded_shutdown_rejects_new_requests() {
+        let (svc, _, _) = sharded(Partition::Modes, 2, 8, 16);
+        let client = svc.client();
+        svc.shutdown();
+        assert!(client.project(tern(1, 0)).is_err());
+    }
+
+    #[test]
+    fn sharded_device_error_propagates_to_the_frame() {
+        let medium = TransmissionMatrix::sample(20, 10, 8);
+        let shards: Vec<Box<dyn Projector + Send>> = (0..2)
+            .map(|i| {
+                Box::new(
+                    super::super::projector::NativeOpticalProjector::with_noise_stream(
+                        crate::optics::OpuParams::default(),
+                        medium.clone(),
+                        3,
+                        crate::optics::NOISE_STREAM_BASE + i as u64,
+                    ),
+                ) as Box<dyn Projector + Send>
+            })
+            .collect();
+        let svc = ShardedProjectionService::start(
+            shards,
+            10,
+            ShardServiceConfig {
+                partition: Partition::Batch,
+                ..Default::default()
+            },
+            Registry::new(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let mut bad = tern(2, 3);
+        bad.data_mut()[0] = 0.5; // not ternary: the SLM rejects it
+        let err = client.project(bad).unwrap_err().to_string();
+        assert!(err.contains("device error"), "{err}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn over_farm_rejects_partition_mismatch() {
+        let medium = TransmissionMatrix::sample(21, 10, 16);
+        let farm = ProjectorFarm::digital(&medium, 2).unwrap();
+        let cfg = ShardServiceConfig {
+            partition: Partition::Batch,
+            ..Default::default()
+        };
+        assert!(
+            ShardedProjectionService::over_farm(farm, 10, cfg, Registry::new())
+                .is_err()
+        );
     }
 
     #[test]

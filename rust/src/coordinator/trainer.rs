@@ -100,11 +100,13 @@ impl Trainer {
         let medium = TransmissionMatrix::sample(cfg.seed ^ 0xB, err_dim, bc.modes);
 
         // `shards > 1` routes the projection through the sharded farm
-        // (N virtual devices over mode ranges of the same medium);
-        // `shards == 1` keeps the classic single-device objects, whose
-        // outputs the farm reproduces bit-for-bit anyway.  Sharding only
-        // exists on the projector path — reject it loudly elsewhere
-        // rather than silently running single-device.
+        // (N virtual devices over mode ranges of the same medium, or
+        // full-medium replicas over batch-row ranges when
+        // `--partition batch`); `shards == 1` keeps the classic
+        // single-device objects, whose outputs the farm reproduces
+        // bit-for-bit anyway.  Sharding only exists on the projector
+        // path — reject it loudly elsewhere rather than silently
+        // running single-device.
         anyhow::ensure!(
             cfg.shards <= 1 || cfg.algo == Algo::Optical,
             "--shards {} only applies to --algo optical (the projection \
@@ -123,11 +125,12 @@ impl Trainer {
                         opu_params.read_sigma = rs;
                     }
                     if cfg.shards > 1 {
-                        Box::new(ProjectorFarm::optical_with(
+                        Box::new(ProjectorFarm::optical_partitioned(
                             opu_params,
                             &medium,
                             cfg.seed ^ 0xF00,
                             cfg.shards,
+                            cfg.partition,
                             metrics.clone(),
                         )?)
                     } else {
@@ -156,9 +159,10 @@ impl Trainer {
                 }
                 ProjectorKind::Digital => {
                     if cfg.shards > 1 {
-                        Box::new(ProjectorFarm::digital_with(
+                        Box::new(ProjectorFarm::digital_partitioned(
                             &medium,
                             cfg.shards,
+                            cfg.partition,
                             metrics.clone(),
                         )?)
                     } else {

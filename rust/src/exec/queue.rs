@@ -1,4 +1,6 @@
-//! Bounded MPMC blocking queue with close semantics.
+//! Bounded MPMC blocking queue with close semantics, plus the
+//! multi-lane variant ([`Lanes`]) used by the shard-aware projection
+//! service.
 //!
 //! Mutex + two condvars; `push` blocks when full (backpressure — the OPU
 //! frame clock is the slow consumer by design), `pop` blocks when empty,
@@ -180,6 +182,65 @@ impl<T> BoundedQueue<T> {
     }
 }
 
+/// A fixed set of bounded MPMC lanes — one per shard.  Each lane is an
+/// independent [`BoundedQueue`], so a slow shard exerts backpressure on
+/// its own lane without stalling its siblings, while `close_all` makes
+/// shutdown prompt across every lane.  Lane indices are stable: the
+/// shard-aware projection service maps lane `i` to shard device `i`.
+pub struct Lanes<T> {
+    lanes: Vec<BoundedQueue<T>>,
+}
+
+// Manual Clone: a lane-set handle is clonable regardless of T.
+impl<T> Clone for Lanes<T> {
+    fn clone(&self) -> Self {
+        Lanes {
+            lanes: self.lanes.clone(),
+        }
+    }
+}
+
+impl<T> Lanes<T> {
+    /// `count` lanes of `capacity` items each.
+    pub fn new(count: usize, capacity: usize) -> Self {
+        assert!(count > 0);
+        Lanes {
+            lanes: (0..count).map(|_| BoundedQueue::new(capacity)).collect(),
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Blocking push into one lane; `Err(Closed)` after `close_all`.
+    pub fn push(&self, lane: usize, item: T) -> Result<(), Closed> {
+        self.lanes[lane].push(item)
+    }
+
+    /// Blocking pop from one lane; `None` once closed AND drained.
+    pub fn pop(&self, lane: usize) -> Option<T> {
+        self.lanes[lane].pop()
+    }
+
+    /// Items currently queued in one lane.
+    pub fn len(&self, lane: usize) -> usize {
+        self.lanes[lane].len()
+    }
+
+    /// True when every lane is empty.
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+
+    /// Close every lane: pushes fail, pops drain then return `None`.
+    pub fn close_all(&self) {
+        for lane in &self.lanes {
+            lane.close();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +317,92 @@ mod tests {
         let t0 = std::time::Instant::now();
         assert_eq!(q.pop_timeout(Duration::from_millis(30)), Ok(None));
         assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_while_push_blocked_unblocks_with_closed() {
+        // Shutdown-while-blocked: a producer stuck in backpressure must
+        // be released by close(), not left waiting forever.
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let handle = thread::spawn(move || q2.push(2));
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "producer should still be blocked");
+        q.close();
+        assert_eq!(handle.join().unwrap(), Err(Closed));
+        // The item that was in flight before close still drains.
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn lanes_are_fifo_and_independent() {
+        let lanes: Lanes<u32> = Lanes::new(3, 4);
+        assert_eq!(lanes.count(), 3);
+        // Interleaved pushes across lanes keep per-lane FIFO order.
+        for i in 0..4u32 {
+            for lane in 0..3 {
+                lanes.push(lane, 10 * lane as u32 + i).unwrap();
+            }
+        }
+        for lane in 0..3 {
+            assert_eq!(lanes.len(lane), 4);
+            for i in 0..4u32 {
+                assert_eq!(lanes.pop(lane), Some(10 * lane as u32 + i));
+            }
+        }
+        assert!(lanes.is_empty());
+    }
+
+    #[test]
+    fn lane_backpressure_is_per_lane() {
+        let lanes: Lanes<u32> = Lanes::new(2, 2);
+        lanes.push(0, 1).unwrap();
+        lanes.push(0, 2).unwrap();
+        let l2 = lanes.clone();
+        let handle = thread::spawn(move || {
+            l2.push(0, 3).unwrap(); // lane 0 full: blocks
+            3
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert_eq!(lanes.len(0), 2, "lane 0 producer should be blocked");
+        // Lane 1 is unaffected by lane 0's backpressure.
+        lanes.push(1, 7).unwrap();
+        assert_eq!(lanes.pop(1), Some(7));
+        // Draining lane 0 releases the blocked producer.
+        assert_eq!(lanes.pop(0), Some(1));
+        assert_eq!(handle.join().unwrap(), 3);
+        assert_eq!(lanes.pop(0), Some(2));
+        assert_eq!(lanes.pop(0), Some(3));
+    }
+
+    #[test]
+    fn lanes_close_all_drains_then_ends() {
+        let lanes: Lanes<u32> = Lanes::new(2, 4);
+        lanes.push(0, 1).unwrap();
+        lanes.push(1, 2).unwrap();
+        let l2 = lanes.clone();
+        let blocked = thread::spawn(move || l2.pop(0));
+        thread::sleep(Duration::from_millis(20));
+        lanes.close_all();
+        // The blocked consumer gets the queued item; later pops get None.
+        assert_eq!(blocked.join().unwrap(), Some(1));
+        assert_eq!(lanes.pop(0), None);
+        assert_eq!(lanes.pop(1), Some(2));
+        assert_eq!(lanes.pop(1), None);
+        assert_eq!(lanes.push(0, 9), Err(Closed));
+    }
+
+    #[test]
+    fn lanes_close_while_push_blocked() {
+        let lanes: Lanes<u32> = Lanes::new(2, 1);
+        lanes.push(1, 1).unwrap();
+        let l2 = lanes.clone();
+        let handle = thread::spawn(move || l2.push(1, 2));
+        thread::sleep(Duration::from_millis(30));
+        lanes.close_all();
+        assert_eq!(handle.join().unwrap(), Err(Closed));
     }
 
     #[test]

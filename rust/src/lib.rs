@@ -58,6 +58,30 @@
 //! their serial forms.  `--shards N` on the CLI (or `shards = N` in a
 //! config file) routes training through the farm; `benches/e4_scaling.rs`
 //! sweeps the shard count and reports throughput and speedup.
+//!
+//! ## The shard-aware projection service (frame-slot scheduling)
+//!
+//! The farm parallelizes *inside* one device batch; the serving layer on
+//! top is [`coordinator::service::ShardedProjectionService`]: a
+//! frame-slot scheduler that assigns concurrent client submissions to
+//! concrete **(shard, frame-slot)** pairs.  Each shard device owns a
+//! bounded MPMC lane ([`exec::queue::Lanes`]) and a dedicated worker
+//! thread; the single-threaded scheduler coalesces small requests into
+//! shared frame sequences and carves them along a
+//! [`config::Partition`] axis — `modes` (every shard images its mode
+//! slice of every frame) or `batch` (full-medium replicas each take a
+//! contiguous row range; the small-mode/large-batch regime).  Scheduled
+//! slots are attributed per shard to simulated clocks and the
+//! [`sim::power::OpuModel`] slot-energy model.
+//!
+//! **Determinism contract:** for a fixed submission order the schedule —
+//! packing, (shard, slot) assignment, each shard's job sequence and
+//! hence its noise draws — is deterministic; `shards = 1` is bitwise the
+//! device-agnostic [`coordinator::service::ProjectionService`] path, and
+//! digital shards are bitwise the single-device reference at any shard
+//! count under either partition (`rust/tests/service_schedule.rs`).
+//! `--partition modes|batch` selects the axis on the CLI;
+//! `benches/e4_scaling.rs` (E4.4) sweeps clients × shards × partition.
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 use litl::cli::Args;
-use litl::config::{Algo, TrainConfig};
+use litl::config::{Algo, Partition, TrainConfig};
 use litl::coordinator::Trainer;
 use litl::data::{self, Split};
 use litl::optics::medium::TransmissionMatrix;
@@ -23,6 +23,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
+    "partition",
 ];
 
 fn main() {
@@ -100,6 +101,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         anyhow::ensure!(n >= 1, "--shards must be >= 1");
         cfg.shards = n;
     }
+    if let Some(p) = args.flag("partition") {
+        cfg.partition = Partition::parse(p)?;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -113,13 +117,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[TRAIN_FLAGS, &["config-file"]].concat())?;
     let cfg = build_config(args)?;
     log::info!(
-        "train: algo={} lr={} epochs={} config={} projector={:?} shards={}",
+        "train: algo={} lr={} epochs={} config={} projector={:?} shards={} partition={}",
         cfg.algo.name(),
         cfg.lr,
         cfg.epochs,
         cfg.artifact_config,
         cfg.projector,
-        cfg.shards
+        cfg.shards,
+        cfg.partition.name()
     );
     let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
     log::info!(
@@ -292,8 +297,10 @@ COMMANDS:
           --epochs N --lr F --theta F --seed N
           --config paper|small      artifact build config
           --projector native|hlo|digital
-          --shards N                mode-shard the projection across N
-                                    virtual devices (projector farm)
+          --shards N                shard the projection across N virtual
+                                    devices (projector farm)
+          --partition modes|batch   farm partition axis: output-mode
+                                    slices (default) or batch-row ranges
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

@@ -159,6 +159,20 @@ impl Registry {
             .clone()
     }
 
+    /// Sum of all counters whose name starts with `prefix` and ends with
+    /// `suffix` — rolls per-shard counters (`service_shard3_frames`,
+    /// `service_shard3_slots`, …) up to a fleet total without the caller
+    /// knowing the shard count.
+    pub fn sum_counters(&self, prefix: &str, suffix: &str) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .counters
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix) && name.ends_with(suffix))
+            .map(|(_, c)| c.get() as f64)
+            .sum()
+    }
+
     /// Flat snapshot of every metric (histograms expand to _mean/_p50/...).
     pub fn snapshot(&self) -> BTreeMap<String, f64> {
         let inner = self.inner.lock().unwrap();
@@ -228,6 +242,18 @@ mod tests {
         let snap = reg.snapshot();
         assert_eq!(snap["frames"], 4.0);
         assert_eq!(snap["loss"], 0.5);
+    }
+
+    #[test]
+    fn sum_counters_rolls_up_per_shard_names() {
+        let reg = Registry::new();
+        reg.counter("service_shard0_frames").add(3);
+        reg.counter("service_shard1_frames").add(5);
+        reg.counter("service_shard1_slots").add(9);
+        reg.counter("other").add(100);
+        assert_eq!(reg.sum_counters("service_shard", "_frames"), 8.0);
+        assert_eq!(reg.sum_counters("service_shard", "_slots"), 9.0);
+        assert_eq!(reg.sum_counters("service_shard", "_none"), 0.0);
     }
 
     #[test]

@@ -28,6 +28,15 @@ impl SimClock {
         self.nanos.fetch_add(ns, Ordering::Relaxed);
     }
 
+    /// Charge `slots` display/camera frame slots at `frame_rate_hz` —
+    /// per-slot timing attribution for the shard-aware projection
+    /// service (each scheduled slot occupies one frame period on its
+    /// shard's clock, whether or not the frame was full).
+    pub fn advance_slots(&self, slots: u64, frame_rate_hz: f64) {
+        debug_assert!(frame_rate_hz > 0.0);
+        self.advance_secs(slots as f64 / frame_rate_hz);
+    }
+
     pub fn now_secs(&self) -> f64 {
         self.nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
@@ -47,6 +56,15 @@ mod tests {
         c.advance_secs(0.5);
         c.advance_secs(0.25);
         assert!((c.now_secs() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slots_charge_frame_periods() {
+        let c = SimClock::new();
+        c.advance_slots(3, 1500.0);
+        assert!((c.now_secs() - 3.0 / 1500.0).abs() < 1e-12);
+        c.advance_slots(0, 1500.0);
+        assert!((c.now_secs() - 3.0 / 1500.0).abs() < 1e-12);
     }
 
     #[test]

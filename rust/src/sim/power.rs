@@ -74,6 +74,24 @@ impl OpuModel {
         self.seconds(n_projections) * self.power_watts
     }
 
+    /// Seconds one display/camera frame slot occupies — the scheduling
+    /// quantum of the shard-aware projection service.
+    pub fn slot_seconds(&self) -> f64 {
+        1.0 / self.frame_rate_hz
+    }
+
+    /// Energy one occupied frame slot costs on one device.
+    pub fn slot_energy(&self) -> f64 {
+        self.slot_seconds() * self.power_watts
+    }
+
+    /// Energy attribution for a service schedule: per-shard occupied
+    /// slot counts → joules (each shard is its own device; an idle
+    /// shard's slots are free, so only *scheduled* slots are billed).
+    pub fn service_energy(&self, slots_per_shard: &[u64]) -> f64 {
+        slots_per_shard.iter().map(|&s| s as f64).sum::<f64>() * self.slot_energy()
+    }
+
     /// Effective multiply-accumulates per second at a given size
     /// (the "parameters × rate" headline: 1e5 × 1e6 × 1.5e3 ≈ 1.5e14).
     pub fn effective_macs(&self, d_in: usize, d_out: usize) -> Option<f64> {
@@ -217,6 +235,18 @@ mod tests {
         assert!((m4 / m1 - 4.0).abs() < 1e-9);
         // Energy per projection also scales by N (no free lunch).
         assert!((four.energy(1) - 4.0 * one.energy(1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slot_attribution_matches_projection_energy() {
+        let opu = OpuModel::paper(Holography::OffAxis);
+        // One slot = one frame = one projection on one device.
+        assert!((opu.slot_seconds() - 1.0 / 1500.0).abs() < 1e-15);
+        assert!((opu.slot_energy() - opu.energy(1)).abs() < 1e-12);
+        // A 3-shard schedule: slots sum over shards, joules follow.
+        let slots = [10u64, 7, 3];
+        assert!((opu.service_energy(&slots) - opu.energy(20)).abs() < 1e-12);
+        assert_eq!(opu.service_energy(&[]), 0.0);
     }
 
     #[test]

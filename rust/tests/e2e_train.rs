@@ -35,6 +35,7 @@ fn cfg(algo: Algo) -> TrainConfig {
         read_sigma: None,
         account_frames: true,
         shards: 1,
+        partition: litl::config::Partition::Modes,
     }
 }
 

@@ -8,15 +8,22 @@
 
 use std::sync::{Arc, Mutex};
 
+use litl::config::Partition;
+use litl::coordinator::farm::ProjectorFarm;
 use litl::coordinator::host::{HostMlp, HostTrainer};
 use litl::coordinator::projector::{NativeOpticalProjector, Projector};
-use litl::coordinator::service::{ProjectionService, ServiceConfig};
+use litl::coordinator::service::{
+    ProjectionService, ServiceConfig, ShardServiceConfig, ShardedProjectionService,
+};
 use litl::coordinator::ProjectionClient;
 use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::OpuParams;
 use litl::tensor::{matmul, Tensor};
 use litl::util::rng::Pcg64;
+
+mod common;
+use common::ternary_batch;
 
 const LAYERS: &[usize] = &[20, 16, 16, 10];
 
@@ -186,6 +193,94 @@ fn ensemble_shares_one_opu() {
         vote_acc >= worst - 0.02,
         "ensemble {vote_acc} vs worst member {worst}"
     );
+}
+
+/// Concurrency soak: N threaded clients × M mixed-size submissions
+/// against a 4-shard shard-aware service, both partition policies.
+/// Asserts: no deadlock (the test finishes), no dropped or duplicated
+/// responses (every reply arrives once and is bitwise the digital
+/// oracle for exactly that client's frames — a cross-routed, re-ordered
+/// or double-consumed frame would break bit equality), and the
+/// per-shard metrics explain the client-observed totals.
+///
+/// Slow by design (thousands of scheduled frames through tiny lanes);
+/// runs in the dedicated `cargo test -- --ignored` CI step.
+#[test]
+#[ignore = "soak: run with --ignored (dedicated CI step)"]
+fn soak_concurrent_clients_on_four_shard_service() {
+    const CLIENTS: usize = 8;
+    const SUBMISSIONS: usize = 40;
+    let d_in = 10usize;
+    let medium = TransmissionMatrix::sample(77, d_in, 32);
+    for partition in [Partition::Modes, Partition::Batch] {
+        let reg = Registry::new();
+        let farm = ProjectorFarm::digital_partitioned(
+            &medium,
+            4,
+            partition,
+            Registry::new(),
+        )
+        .unwrap();
+        let svc = ShardedProjectionService::over_farm(
+            farm,
+            d_in,
+            ShardServiceConfig {
+                max_batch: 32,
+                queue_depth: 16, // small: exercises client backpressure
+                lane_depth: 2,   // small: exercises scheduler backpressure
+                partition,
+                ..Default::default()
+            },
+            reg.clone(),
+        )
+        .unwrap();
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let client = svc.client();
+                let medium = medium.clone();
+                std::thread::spawn(move || {
+                    let mut rows = 0usize;
+                    for j in 0..SUBMISSIONS {
+                        // Mixed sizes 1..=12, client-dependent phase.
+                        let b = 1 + (c * 7 + j * 3) % 12;
+                        let e = ternary_batch(b, d_in, (c * 1000 + j) as u64);
+                        let (p1, p2) = client.project(e.clone()).unwrap();
+                        assert_eq!(
+                            p1,
+                            matmul(&e, &medium.b_re),
+                            "client {c} submission {j}"
+                        );
+                        assert_eq!(p2, matmul(&e, &medium.b_im));
+                        rows += b;
+                    }
+                    rows
+                })
+            })
+            .collect();
+        let total_rows: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        svc.shutdown();
+
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap["service_frames"], total_rows as f64,
+            "{partition:?}: scheduler saw a different row total than clients"
+        );
+        let shard_frames = reg.sum_counters("service_shard", "_frames");
+        let shard_slots = reg.sum_counters("service_shard", "_slots");
+        match partition {
+            // Every shard images every frame.
+            Partition::Modes => {
+                assert_eq!(shard_frames, (total_rows * 4) as f64);
+                assert_eq!(shard_slots, (total_rows * 4) as f64);
+            }
+            // Row ranges partition the frames exactly.
+            Partition::Batch => {
+                assert_eq!(shard_frames, total_rows as f64);
+                assert_eq!(shard_slots, total_rows as f64);
+            }
+        }
+        assert_eq!(snap[litl::coordinator::service::SHARD_ERRORS], 0.0);
+    }
 }
 
 fn row_of(x: &Tensor, r: usize) -> Tensor {

@@ -1,0 +1,379 @@
+//! Shard-aware projection service: scheduler determinism, partition
+//! parity, and shutdown-drain guarantees.
+//!
+//! The service's contract (see `coordinator::service` docs): for a fixed
+//! submission order the frame-slot schedule is deterministic, scheduled
+//! results are bitwise identical to the device-agnostic path at
+//! `shards = 1`, and at any shard count both partition policies
+//! reproduce the single-device reference — bitwise for digital shards,
+//! to fp/ADC tolerance for noiseless optics.  Shutdown drains all
+//! in-flight work: nothing submitted before `shutdown()` is lost.
+
+use litl::config::Partition;
+use litl::coordinator::farm::ProjectorFarm;
+use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::service::{
+    ProjectionService, ServiceConfig, ShardServiceConfig, ShardedProjectionService,
+};
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::OpuParams;
+use litl::tensor::{matmul, Tensor};
+use litl::util::check::{forall, PairG, UsizeIn};
+
+mod common;
+use common::{noiseless_params, ternary_batch};
+
+const D_IN: usize = 10;
+
+/// Mixed request sizes for one fixed submission sequence (all ≤ the
+/// max_batch used below, several summing past it to force flushes).
+const SIZES: &[usize] = &[1, 3, 2, 5, 8, 1, 4, 7, 2, 6];
+
+fn sharded_service(
+    medium: &TransmissionMatrix,
+    shards: usize,
+    partition: Partition,
+    registry: Registry,
+) -> ShardedProjectionService {
+    let devices =
+        ProjectorFarm::digital_shard_devices(medium, shards, partition).unwrap();
+    ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 64,
+            lane_depth: 4,
+            partition,
+            ..Default::default()
+        },
+        registry,
+    )
+    .unwrap()
+}
+
+/// Scheduler determinism / digital parity property: for a fixed
+/// submission order and shard counts 1/2/4/7, both partition policies
+/// return results bitwise equal to the single-device reference (the
+/// digital projection is exact, so this pins the scheduler's packing,
+/// splitting and gather — any mis-slice or reorder breaks bit equality).
+#[test]
+fn scheduler_is_deterministic_and_exact_for_digital_shards() {
+    let medium = TransmissionMatrix::sample(61, D_IN, 28);
+    for partition in [Partition::Modes, Partition::Batch] {
+        for shards in [1usize, 2, 4, 7] {
+            let svc = sharded_service(&medium, shards, partition, Registry::new());
+            let client = svc.client();
+            let replies: Vec<_> = SIZES
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| {
+                    let e = ternary_batch(b, D_IN, 300 + i as u64);
+                    (e.clone(), client.submit(e).unwrap())
+                })
+                .collect();
+            for (i, (e, reply)) in replies.into_iter().enumerate() {
+                let (p1, p2) = reply.wait().unwrap().unwrap();
+                assert_eq!(
+                    p1,
+                    matmul(&e, &medium.b_re),
+                    "{partition:?} shards={shards} req {i}"
+                );
+                assert_eq!(
+                    p2,
+                    matmul(&e, &medium.b_im),
+                    "{partition:?} shards={shards} req {i}"
+                );
+            }
+            svc.shutdown();
+        }
+    }
+}
+
+/// Same schedule through noiseless optical shards: physics is
+/// deterministic and row/column-local, so both partitions agree with the
+/// single noiseless device to fp/ADC tolerance at every shard count.
+#[test]
+fn noiseless_optical_schedule_matches_single_device_within_tolerance() {
+    let medium = TransmissionMatrix::sample(62, D_IN, 28);
+    for partition in [Partition::Modes, Partition::Batch] {
+        for shards in [1usize, 2, 4, 7] {
+            let devices = ProjectorFarm::optical_shard_devices(
+                noiseless_params(),
+                &medium,
+                5,
+                shards,
+                partition,
+            )
+            .unwrap();
+            let svc = ShardedProjectionService::start(
+                devices,
+                D_IN,
+                ShardServiceConfig {
+                    max_batch: 16,
+                    partition,
+                    ..Default::default()
+                },
+                Registry::new(),
+            )
+            .unwrap();
+            let client = svc.client();
+            let mut oracle =
+                NativeOpticalProjector::new(noiseless_params(), medium.clone(), 5);
+            // Submit-and-wait: each request is scheduled alone, so the
+            // oracle sees the exact same per-request frame sequences.
+            for (i, &b) in SIZES.iter().enumerate() {
+                let e = ternary_batch(b, D_IN, 400 + i as u64);
+                let (p1, p2) = client.project(e.clone()).unwrap();
+                let (w1, w2) = oracle.project(&e).unwrap();
+                assert!(
+                    p1.max_abs_diff(&w1) < 1e-5,
+                    "{partition:?} shards={shards} req {i}: re diff {}",
+                    p1.max_abs_diff(&w1)
+                );
+                assert!(
+                    p2.max_abs_diff(&w2) < 1e-5,
+                    "{partition:?} shards={shards} req {i}: im diff {}",
+                    p2.max_abs_diff(&w2)
+                );
+            }
+            svc.shutdown();
+        }
+    }
+}
+
+/// The `shards = 1` bitwise guarantee, *with noise on*: the scheduled
+/// path, the device-agnostic path and the raw device produce identical
+/// bits — same packing (one request per frame via submit-and-wait), same
+/// medium, same noise stream, same draws.
+#[test]
+fn one_shard_schedule_is_bitwise_the_device_agnostic_path() {
+    let medium = TransmissionMatrix::sample(63, D_IN, 20);
+    let seed = 909u64;
+    let requests: Vec<Tensor> = SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| ternary_batch(b, D_IN, 500 + i as u64))
+        .collect();
+
+    // (a) raw device.
+    let mut raw =
+        NativeOpticalProjector::new(OpuParams::default(), medium.clone(), seed);
+    let want: Vec<(Tensor, Tensor)> =
+        requests.iter().map(|e| raw.project(e).unwrap()).collect();
+
+    // (b) device-agnostic service.
+    let svc = ProjectionService::start(
+        Box::new(NativeOpticalProjector::new(
+            OpuParams::default(),
+            medium.clone(),
+            seed,
+        )),
+        D_IN,
+        ServiceConfig::default(),
+        Registry::new(),
+    );
+    let client = svc.client();
+    for (e, (w1, w2)) in requests.iter().zip(&want) {
+        let (p1, p2) = client.project(e.clone()).unwrap();
+        assert_eq!(&p1, w1, "device-agnostic path diverged");
+        assert_eq!(&p2, w2);
+    }
+    svc.shutdown();
+
+    // (c)+(d) shard-aware service at shards=1, both partitions.
+    for partition in [Partition::Modes, Partition::Batch] {
+        let devices = ProjectorFarm::optical_shard_devices(
+            OpuParams::default(),
+            &medium,
+            seed,
+            1,
+            partition,
+        )
+        .unwrap();
+        let svc = ShardedProjectionService::start(
+            devices,
+            D_IN,
+            ShardServiceConfig {
+                partition,
+                ..Default::default()
+            },
+            Registry::new(),
+        )
+        .unwrap();
+        let client = svc.client();
+        for (e, (w1, w2)) in requests.iter().zip(&want) {
+            let (p1, p2) = client.project(e.clone()).unwrap();
+            assert_eq!(&p1, w1, "{partition:?} scheduled path diverged");
+            assert_eq!(&p2, w2);
+        }
+        svc.shutdown();
+    }
+}
+
+/// Random (shards, modes) pairs: the scheduled digital projection stays
+/// exact for any partition geometry, including modes not divisible by
+/// the shard count and frames smaller than the shard count.
+#[test]
+fn prop_scheduled_digital_parity() {
+    let gen = PairG(UsizeIn(1, 8), UsizeIn(8, 40));
+    forall("scheduled digital parity", &gen, |&(shards, modes)| {
+        if shards > modes {
+            return true; // mode partition rejects by construction
+        }
+        let medium =
+            TransmissionMatrix::sample((shards * 97 + modes) as u64, D_IN, modes);
+        for partition in [Partition::Modes, Partition::Batch] {
+            let svc = sharded_service(&medium, shards, partition, Registry::new());
+            let client = svc.client();
+            let e = ternary_batch(1 + (modes + shards) % 9, D_IN, modes as u64);
+            let ok = match client.project(e.clone()) {
+                Ok((p1, p2)) => {
+                    p1 == matmul(&e, &medium.b_re) && p2 == matmul(&e, &medium.b_im)
+                }
+                Err(_) => false,
+            };
+            svc.shutdown();
+            if !ok {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Shutdown drains in-flight work: every request submitted before
+/// `shutdown()` is answered (not dropped), for the device-agnostic AND
+/// the shard-aware service.  The submission total exceeds several
+/// max_batch frames, so the drain crosses multiple scheduled frames.
+#[test]
+fn shutdown_drains_pending_requests_before_join() {
+    let medium = TransmissionMatrix::sample(64, D_IN, 24);
+
+    // Device-agnostic path.
+    let svc = ProjectionService::start(
+        Box::new(litl::coordinator::projector::DigitalProjector::new(
+            medium.clone(),
+        )),
+        D_IN,
+        ServiceConfig {
+            max_batch: 8,
+            queue_depth: 64,
+        },
+        Registry::new(),
+    );
+    let client = svc.client();
+    let pending: Vec<_> = (0..20)
+        .map(|i| {
+            let e = ternary_batch(3, D_IN, 600 + i as u64);
+            (e.clone(), client.submit(e).unwrap())
+        })
+        .collect();
+    svc.shutdown();
+    for (i, (e, reply)) in pending.into_iter().enumerate() {
+        let got = reply.wait();
+        let (p1, _) = got
+            .unwrap_or_else(|| panic!("request {i} dropped at shutdown"))
+            .unwrap_or_else(|e| panic!("request {i} errored at shutdown: {e}"));
+        assert_eq!(p1, matmul(&e, &medium.b_re), "request {i}");
+    }
+
+    // Shard-aware path, both partitions.
+    for partition in [Partition::Modes, Partition::Batch] {
+        let reg = Registry::new();
+        let farm = ProjectorFarm::digital_partitioned(
+            &medium,
+            4,
+            partition,
+            Registry::new(),
+        )
+        .unwrap();
+        let svc = ShardedProjectionService::over_farm(
+            farm,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 8,
+                queue_depth: 64,
+                lane_depth: 2,
+                partition,
+                ..Default::default()
+            },
+            reg.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let pending: Vec<_> = (0..20)
+            .map(|i| {
+                let e = ternary_batch(3, D_IN, 700 + i as u64);
+                (e.clone(), client.submit(e).unwrap())
+            })
+            .collect();
+        svc.shutdown();
+        for (i, (e, reply)) in pending.into_iter().enumerate() {
+            let got = reply.wait();
+            let (p1, _) = got
+                .unwrap_or_else(|| {
+                    panic!("{partition:?}: request {i} dropped at shutdown")
+                })
+                .unwrap_or_else(|e| {
+                    panic!("{partition:?}: request {i} errored at shutdown: {e}")
+                });
+            assert_eq!(p1, matmul(&e, &medium.b_re), "{partition:?} request {i}");
+        }
+        // Everything drained is also accounted: 60 rows total.
+        assert_eq!(reg.snapshot()["service_frames"], 60.0);
+        let per_shard = reg.sum_counters("service_shard", "_frames");
+        match partition {
+            Partition::Modes => assert_eq!(per_shard, 60.0 * 4.0),
+            Partition::Batch => assert_eq!(per_shard, 60.0),
+        }
+    }
+}
+
+/// Quick (tier-1) concurrency check on a 4-shard service: concurrent
+/// clients each get their own exact answers, and the per-shard metrics
+/// explain the client-observed totals.  The heavyweight soak lives in
+/// `service_ensemble.rs` behind `--ignored`.
+#[test]
+fn concurrent_clients_on_four_shards_route_correctly() {
+    let medium = TransmissionMatrix::sample(65, D_IN, 32);
+    for partition in [Partition::Modes, Partition::Batch] {
+        let reg = Registry::new();
+        let svc = sharded_service(&medium, 4, partition, reg.clone());
+        let handles: Vec<_> = (0..6)
+            .map(|c| {
+                let client = svc.client();
+                let medium = medium.clone();
+                std::thread::spawn(move || {
+                    let mut rows = 0usize;
+                    for j in 0..5u64 {
+                        let b = 1 + ((c as u64 + j) % 4) as usize;
+                        let e = ternary_batch(b, D_IN, 800 + c as u64 * 50 + j);
+                        let (p1, p2) = client.project(e.clone()).unwrap();
+                        assert_eq!(p1, matmul(&e, &medium.b_re), "client {c} req {j}");
+                        assert_eq!(p2, matmul(&e, &medium.b_im), "client {c} req {j}");
+                        rows += b;
+                    }
+                    rows
+                })
+            })
+            .collect();
+        let total_rows: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        svc.shutdown();
+        let snap = reg.snapshot();
+        assert_eq!(snap["service_frames"], total_rows as f64, "{partition:?}");
+        let per_shard_frames = reg.sum_counters("service_shard", "_frames");
+        let per_shard_slots = reg.sum_counters("service_shard", "_slots");
+        match partition {
+            Partition::Modes => {
+                assert_eq!(per_shard_frames, (total_rows * 4) as f64);
+                assert_eq!(per_shard_slots, (total_rows * 4) as f64);
+            }
+            Partition::Batch => {
+                assert_eq!(per_shard_frames, total_rows as f64);
+                assert_eq!(per_shard_slots, total_rows as f64);
+            }
+        }
+    }
+}
