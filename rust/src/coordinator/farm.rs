@@ -53,6 +53,7 @@ use crate::config::Partition;
 use crate::exec::ThreadPool;
 use crate::metrics::{Counter, Registry};
 use crate::optics::medium::TransmissionMatrix;
+use crate::optics::stream::Medium;
 use crate::optics::{OpuParams, NOISE_STREAM_BASE};
 use crate::tensor::Tensor;
 
@@ -78,14 +79,13 @@ pub struct ProjectorFarm {
     batches: Counter,
 }
 
-/// Contiguous balanced row split: the first `rows % shards` shards take
-/// one extra row (mirrors `TransmissionMatrix::split_modes`).  Shared by
-/// the farm's batch partition and the service's frame-slot scheduler —
-/// the batch-parity contract requires both to carve identical ranges.
+/// Contiguous balanced row split — [`crate::util::balanced_widths`],
+/// the same arithmetic as `TransmissionMatrix::split_modes` and the
+/// streamed-window split.  Shared by the farm's batch partition and the
+/// service's frame-slot scheduler — the batch-parity contract requires
+/// both to carve identical ranges.
 pub(crate) fn split_rows(rows: usize, shards: usize) -> Vec<usize> {
-    let base = rows / shards;
-    let rem = rows % shards;
-    (0..shards).map(|i| base + usize::from(i < rem)).collect()
+    crate::util::balanced_widths(rows, shards)
 }
 
 /// Concatenate per-part quadrature pairs along the mode axis: part `i`
@@ -134,6 +134,25 @@ pub(crate) fn concat_row_parts(
         at += rc;
     }
     (p1, p2)
+}
+
+/// Streamed replicas under the batch partition each regenerate the full
+/// mode width — total generation work scales with the shard count.  Say
+/// so once at farm construction rather than letting a 1e5+-mode run
+/// discover it from the wall clock.
+fn warn_streamed_batch_cost(medium: &Medium, shards: usize, partition: Partition) {
+    if shards > 1
+        && partition == Partition::Batch
+        && matches!(medium, Medium::Streamed(_))
+    {
+        log::warn!(
+            "streamed medium × batch partition: each of the {shards} replicas \
+             regenerates all {} modes per projection (~{shards}× the modes \
+             partition's generation work); prefer --partition modes at large \
+             mode counts",
+            medium.modes()
+        );
+    }
 }
 
 fn default_pool(shards: usize, registry: &Registry) -> Arc<ThreadPool> {
@@ -197,6 +216,35 @@ impl ProjectorFarm {
         Self::from_shards_partitioned(devices, "farm-optical", partition, registry)
     }
 
+    /// [`ProjectorFarm::optical_partitioned`] over either [`Medium`]
+    /// backing — `--medium streamed` composes with both `--partition`
+    /// axes through here.
+    pub fn optical_partitioned_backed(
+        params: OpuParams,
+        medium: &Medium,
+        noise_seed: u64,
+        shards: usize,
+        partition: Partition,
+        registry: Registry,
+    ) -> Result<Self> {
+        let devices = Self::optical_shard_devices_backed(
+            params, medium, noise_seed, shards, partition,
+        )?;
+        Self::from_shards_partitioned(devices, "farm-optical", partition, registry)
+    }
+
+    /// [`ProjectorFarm::digital_partitioned`] over either [`Medium`]
+    /// backing.
+    pub fn digital_partitioned_backed(
+        medium: &Medium,
+        shards: usize,
+        partition: Partition,
+        registry: Registry,
+    ) -> Result<Self> {
+        let devices = Self::digital_shard_devices_backed(medium, shards, partition)?;
+        Self::from_shards_partitioned(devices, "farm-digital", partition, registry)
+    }
+
     /// Build just the shard devices for a partitioned optical projector —
     /// no pool, no farm state.  This is what
     /// [`ShardedProjectionService::start`] wants: it gives every device
@@ -211,20 +259,48 @@ impl ProjectorFarm {
         shards: usize,
         partition: Partition,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
+        Self::optical_shard_devices_backed(
+            params,
+            &Medium::Dense(medium.clone()),
+            noise_seed,
+            shards,
+            partition,
+        )
+    }
+
+    /// [`ProjectorFarm::optical_shard_devices`] over either [`Medium`]
+    /// backing.  Streamed shards window the same seed's mode axis
+    /// (modes) or replicate the full streamed window (batch) — identical
+    /// shard ranges and noise streams as the dense farm, so the whole
+    /// composition agrees bit for bit.
+    ///
+    /// Cost note: under the **batch** partition every streamed replica
+    /// regenerates tiles for the *full* mode width of its row range, so
+    /// total generation work is ~`shards ×` the modes partition's (which
+    /// windows the axis and keeps generation constant).  Correct either
+    /// way; a warning is logged so 1e5+-mode runs don't pay it blindly.
+    pub fn optical_shard_devices_backed(
+        params: OpuParams,
+        medium: &Medium,
+        noise_seed: u64,
+        shards: usize,
+        partition: Partition,
+    ) -> Result<Vec<Box<dyn Projector + Send>>> {
         anyhow::ensure!(shards >= 1, "farm needs at least one shard");
+        warn_streamed_batch_cost(medium, shards, partition);
         Ok(match partition {
             Partition::Modes => {
                 anyhow::ensure!(
-                    shards <= medium.modes,
+                    shards <= medium.modes(),
                     "cannot shard {} modes across {shards} devices",
-                    medium.modes
+                    medium.modes()
                 );
                 medium
                     .split_modes(shards)
                     .into_iter()
                     .enumerate()
                     .map(|(i, slice)| {
-                        Box::new(NativeOpticalProjector::with_noise_stream(
+                        Box::new(NativeOpticalProjector::with_medium_stream(
                             params,
                             slice,
                             noise_seed,
@@ -235,7 +311,7 @@ impl ProjectorFarm {
             }
             Partition::Batch => (0..shards)
                 .map(|i| {
-                    Box::new(NativeOpticalProjector::with_noise_stream(
+                    Box::new(NativeOpticalProjector::with_medium_stream(
                         params,
                         medium.clone(),
                         noise_seed,
@@ -267,26 +343,38 @@ impl ProjectorFarm {
         shards: usize,
         partition: Partition,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
+        Self::digital_shard_devices_backed(&Medium::Dense(medium.clone()), shards, partition)
+    }
+
+    /// [`ProjectorFarm::digital_shard_devices`] over either [`Medium`]
+    /// backing.  Same batch-partition generation-cost note as
+    /// [`ProjectorFarm::optical_shard_devices_backed`].
+    pub fn digital_shard_devices_backed(
+        medium: &Medium,
+        shards: usize,
+        partition: Partition,
+    ) -> Result<Vec<Box<dyn Projector + Send>>> {
         anyhow::ensure!(shards >= 1, "farm needs at least one shard");
+        warn_streamed_batch_cost(medium, shards, partition);
         Ok(match partition {
             Partition::Modes => {
                 anyhow::ensure!(
-                    shards <= medium.modes,
+                    shards <= medium.modes(),
                     "cannot shard {} modes across {shards} devices",
-                    medium.modes
+                    medium.modes()
                 );
                 medium
                     .split_modes(shards)
                     .into_iter()
                     .map(|slice| {
-                        Box::new(DigitalProjector::new(slice))
+                        Box::new(DigitalProjector::with_medium(slice))
                             as Box<dyn Projector + Send>
                     })
                     .collect()
             }
             Partition::Batch => (0..shards)
                 .map(|_| {
-                    Box::new(DigitalProjector::new(medium.clone()))
+                    Box::new(DigitalProjector::with_medium(medium.clone()))
                         as Box<dyn Projector + Send>
                 })
                 .collect(),

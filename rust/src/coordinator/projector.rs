@@ -19,10 +19,11 @@ use anyhow::Result;
 
 use crate::exec::ThreadPool;
 use crate::optics::medium::TransmissionMatrix;
-use crate::optics::{OpticalOpu, OpuParams};
+use crate::optics::stream::Medium;
+use crate::optics::{OpticalOpu, OpuParams, NOISE_STREAM_BASE};
 use crate::runtime::Engine;
 use crate::sim::power::GpuModel;
-use crate::tensor::{matmul, matmul_pooled, Tensor};
+use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
 /// A device that projects ternary/float error frames through the fixed
@@ -73,8 +74,26 @@ impl NativeOpticalProjector {
         noise_seed: u64,
         noise_stream: u64,
     ) -> Self {
+        Self::with_medium_stream(params, Medium::Dense(medium), noise_seed, noise_stream)
+    }
+
+    /// Backing-polymorphic constructor on the base noise stream —
+    /// `Medium::Streamed` gives the memory-less device, bit-identical to
+    /// the dense one of the same seed.
+    pub fn with_medium(params: OpuParams, medium: Medium, noise_seed: u64) -> Self {
+        Self::with_medium_stream(params, medium, noise_seed, NOISE_STREAM_BASE)
+    }
+
+    /// [`NativeOpticalProjector::with_medium`] with an explicit noise
+    /// stream (farm shards).
+    pub fn with_medium_stream(
+        params: OpuParams,
+        medium: Medium,
+        noise_seed: u64,
+        noise_stream: u64,
+    ) -> Self {
         NativeOpticalProjector {
-            opu: OpticalOpu::with_noise_stream(params, medium, noise_seed, noise_stream),
+            opu: OpticalOpu::with_medium(params, medium, noise_seed, noise_stream),
         }
     }
 
@@ -213,9 +232,12 @@ impl Projector for HloOpticalProjector {
 }
 
 /// Exact digital projection (the GPU baseline's math, host execution,
-/// GPU timing model for the simulated clock).
+/// GPU timing model for the simulated clock).  Backing-polymorphic: the
+/// streamed medium makes this the "GPU that regenerates its matrix" —
+/// the honest digital comparator at sizes where the dense matrix would
+/// not fit, still bitwise the dense result.
 pub struct DigitalProjector {
-    medium: TransmissionMatrix,
+    medium: Medium,
     gpu: GpuModel,
     projections: u64,
     batches: u64,
@@ -228,6 +250,11 @@ pub struct DigitalProjector {
 
 impl DigitalProjector {
     pub fn new(medium: TransmissionMatrix) -> Self {
+        Self::with_medium(Medium::Dense(medium))
+    }
+
+    /// Backing-polymorphic constructor.
+    pub fn with_medium(medium: Medium) -> Self {
         DigitalProjector {
             medium,
             gpu: GpuModel::v100(),
@@ -238,29 +265,21 @@ impl DigitalProjector {
         }
     }
 
-    /// Run the host matmuls row-block-parallel on `pool`.
+    /// Run the host matmuls row-block-parallel on `pool` (dense backing;
+    /// a streamed backing parallelizes over its own pool).
     pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
         self.pool = Some(pool);
         self
     }
 
-    pub fn medium(&self) -> &TransmissionMatrix {
+    pub fn medium(&self) -> &Medium {
         &self.medium
     }
 }
 
 impl Projector for DigitalProjector {
     fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
-        let (p1, p2) = match &self.pool {
-            Some(pool) => (
-                matmul_pooled(frames, &self.medium.b_re, pool),
-                matmul_pooled(frames, &self.medium.b_im, pool),
-            ),
-            None => (
-                matmul(frames, &self.medium.b_re),
-                matmul(frames, &self.medium.b_im),
-            ),
-        };
+        let (p1, p2) = self.medium.project(frames, self.pool.as_deref());
         self.projections += frames.rows() as u64;
         self.batches += 1;
         self.batch_hint = frames.rows();
@@ -268,7 +287,7 @@ impl Projector for DigitalProjector {
     }
 
     fn modes(&self) -> usize {
-        self.medium.modes
+        self.medium.modes()
     }
 
     fn sim_seconds(&self) -> f64 {
@@ -277,7 +296,7 @@ impl Projector for DigitalProjector {
         self.batches as f64
             * self
                 .gpu
-                .seconds(self.medium.d_in, 2 * self.medium.modes, self.batch_hint)
+                .seconds(self.medium.d_in(), 2 * self.medium.modes(), self.batch_hint)
     }
 
     fn energy_joules(&self) -> f64 {
@@ -296,6 +315,8 @@ impl Projector for DigitalProjector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optics::stream::StreamedMedium;
+    use crate::tensor::matmul;
 
     fn tern(rows: usize, cols: usize, seed: u64) -> Tensor {
         let mut rng = Pcg64::seeded(seed);
@@ -327,6 +348,22 @@ mod tests {
         let (p1, p2) = pooled.project(&e).unwrap();
         assert_eq!(s1, p1);
         assert_eq!(s2, p2);
+    }
+
+    #[test]
+    fn streamed_digital_is_bitwise_dense_digital() {
+        let medium = TransmissionMatrix::sample(3, 10, 40);
+        let mut dense = DigitalProjector::new(medium.clone());
+        let mut streamed =
+            DigitalProjector::with_medium(Medium::Streamed(StreamedMedium::new(3, 10, 40)));
+        let e = tern(6, 10, 5);
+        let (d1, d2) = dense.project(&e).unwrap();
+        let (s1, s2) = streamed.project(&e).unwrap();
+        assert_eq!(d1, s1);
+        assert_eq!(d2, s2);
+        // Same GPU timing model under both backings.
+        assert_eq!(dense.sim_seconds(), streamed.sim_seconds());
+        assert!(!streamed.requires_ternary());
     }
 
     #[test]

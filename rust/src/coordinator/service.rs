@@ -955,6 +955,36 @@ mod tests {
     }
 
     #[test]
+    fn per_shard_metrics_roll_up_without_knowing_the_shard_count() {
+        // Direct coverage for Registry::sum_counters/sum_gauges over the
+        // service's per-shard names (previously only the soak exercised
+        // this composition).
+        let (svc, _, reg) = sharded(Partition::Batch, 4, 16, 64);
+        let client = svc.client();
+        let replies: Vec<_> = (0..5)
+            .map(|i| client.submit(tern(4, 90 + i)).unwrap())
+            .collect();
+        for r in replies {
+            r.wait().unwrap().unwrap();
+        }
+        let slot_s = svc.shard_slot_seconds();
+        svc.shutdown();
+        assert_eq!(reg.sum_counters("service_shard", "_slots"), 20.0);
+        assert_eq!(reg.sum_counters("service_shard", "_frames"), 20.0);
+        // The gauge roll-up reproduces the scheduler's own clock view.
+        let gauge_total = reg.sum_gauges("service_shard", "_slot_s");
+        let clock_total: f64 = slot_s.iter().sum();
+        assert!(
+            (gauge_total - clock_total).abs() < 1e-12,
+            "gauges {gauge_total} vs clocks {clock_total}"
+        );
+        assert!((clock_total - 20.0 / 1500.0).abs() < 1e-9);
+        // Suffix discipline: _slots must not absorb _slot_s or frames.
+        assert!(reg.sum_counters("service_shard", "_calls") > 0.0);
+        assert_eq!(reg.sum_counters("service_shard", "_nope"), 0.0);
+    }
+
+    #[test]
     fn sharded_shutdown_rejects_new_requests() {
         let (svc, _, _) = sharded(Partition::Modes, 2, 8, 16);
         let client = svc.client();

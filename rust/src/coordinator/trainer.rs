@@ -18,10 +18,11 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::{Algo, ProjectorKind, TrainConfig};
+use crate::config::{Algo, MediumBacking, ProjectorKind, TrainConfig};
 use crate::data::{Dataset, Split};
 use crate::metrics::{CsvWriter, Registry};
 use crate::optics::medium::TransmissionMatrix;
+use crate::optics::stream::{Medium, StreamedMedium};
 use crate::runtime::{Engine, Model};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
@@ -74,7 +75,11 @@ pub struct Trainer {
     pub cfg: TrainConfig,
     engine: Engine,
     model: Model,
-    medium: TransmissionMatrix,
+    /// Dense medium tensors — `None` under `--medium streamed`, where
+    /// the matrix exists only as its seed (the projector regenerates
+    /// tiles; the digital-DFA artifacts, which need the dense tensors,
+    /// reject the streamed backing at construction).
+    medium: Option<TransmissionMatrix>,
     projector: Option<Box<dyn Projector>>,
     metrics: Registry,
     rng: Pcg64,
@@ -94,10 +99,6 @@ impl Trainer {
         let model = Model::init(&engine, &cfg.artifact_config, cfg.seed)?;
         let bc = engine.manifest().config(&cfg.artifact_config)?.clone();
         let err_dim = engine.manifest().err_dim;
-        // The fixed random feedback matrices ARE the optical medium: the
-        // digital baselines project through the same B quadratures, so
-        // "optical vs digital" differs only by the physics (DESIGN.md §2).
-        let medium = TransmissionMatrix::sample(cfg.seed ^ 0xB, err_dim, bc.modes);
 
         // `shards > 1` routes the projection through the sharded farm
         // (N virtual devices over mode ranges of the same medium, or
@@ -114,6 +115,48 @@ impl Trainer {
             cfg.shards,
             cfg.algo.name()
         );
+        // The streamed backing only exists where a projector device owns
+        // the medium; the digital-DFA artifacts take dense B tensors as
+        // inputs and the HLO projector feeds them to XLA.
+        anyhow::ensure!(
+            cfg.medium == MediumBacking::Materialized || cfg.algo == Algo::Optical,
+            "--medium streamed only applies to --algo optical (algo '{}' \
+             passes the dense medium tensors into the AOT artifacts)",
+            cfg.algo.name()
+        );
+        anyhow::ensure!(
+            cfg.medium == MediumBacking::Materialized
+                || cfg.projector != ProjectorKind::OpticalHlo,
+            "projector=hlo does not support --medium streamed (the \
+             opu_project artifact takes the dense medium as an input); \
+             use projector=native or digital"
+        );
+
+        // The fixed random feedback matrices ARE the optical medium: the
+        // digital baselines project through the same B quadratures, so
+        // "optical vs digital" differs only by the physics (DESIGN.md
+        // §2).  Under the streamed backing the dense tensors are never
+        // built — the seed alone defines the matrix.
+        let medium_seed = cfg.seed ^ 0xB;
+        let medium = match cfg.medium {
+            MediumBacking::Materialized => {
+                Some(TransmissionMatrix::sample(medium_seed, err_dim, bc.modes))
+            }
+            MediumBacking::Streamed => None,
+        };
+        // Device-side medium, built lazily: only the native/digital
+        // optical arms consume it, and for the materialized backing it
+        // clones the dense tensors — no point paying that for bp/dfa
+        // algos or the HLO projector (which take `medium` directly).
+        let modes_total = bc.modes;
+        let make_device_medium = || match &medium {
+            Some(tm) => Medium::Dense(tm.clone()),
+            None => Medium::Streamed(
+                StreamedMedium::new(medium_seed, err_dim, modes_total)
+                    .with_pool(crate::exec::shared_pool())
+                    .with_metrics(&metrics),
+            ),
+        };
         let projector: Option<Box<dyn Projector>> = match cfg.algo {
             Algo::Optical => Some(match cfg.projector {
                 ProjectorKind::OpticalNative => {
@@ -125,18 +168,18 @@ impl Trainer {
                         opu_params.read_sigma = rs;
                     }
                     if cfg.shards > 1 {
-                        Box::new(ProjectorFarm::optical_partitioned(
+                        Box::new(ProjectorFarm::optical_partitioned_backed(
                             opu_params,
-                            &medium,
+                            &make_device_medium(),
                             cfg.seed ^ 0xF00,
                             cfg.shards,
                             cfg.partition,
                             metrics.clone(),
                         )?)
                     } else {
-                        Box::new(NativeOpticalProjector::new(
+                        Box::new(NativeOpticalProjector::with_medium(
                             opu_params,
-                            medium.clone(),
+                            make_device_medium(),
                             cfg.seed ^ 0xF00,
                         ))
                     }
@@ -153,14 +196,14 @@ impl Trainer {
                     Box::new(HloOpticalProjector::new(
                         twin_engine,
                         &cfg.artifact_config,
-                        medium.clone(),
+                        medium.clone().expect("hlo projector is materialized-only"),
                         cfg.seed ^ 0xF00,
                     )?)
                 }
                 ProjectorKind::Digital => {
                     if cfg.shards > 1 {
-                        Box::new(ProjectorFarm::digital_partitioned(
-                            &medium,
+                        Box::new(ProjectorFarm::digital_partitioned_backed(
+                            &make_device_medium(),
                             cfg.shards,
                             cfg.partition,
                             metrics.clone(),
@@ -173,7 +216,7 @@ impl Trainer {
                         // process-wide pool is shared so N trainers
                         // don't spawn N×cores workers.
                         Box::new(
-                            DigitalProjector::new(medium.clone())
+                            DigitalProjector::with_medium(make_device_medium())
                                 .with_pool(crate::exec::shared_pool()),
                         )
                     }
@@ -208,8 +251,10 @@ impl Trainer {
         &mut self.engine
     }
 
-    pub fn medium(&self) -> &TransmissionMatrix {
-        &self.medium
+    /// The dense medium tensors, when materialized (`None` under
+    /// `--medium streamed`).
+    pub fn medium(&self) -> Option<&TransmissionMatrix> {
+        self.medium.as_ref()
     }
 
     pub fn metrics(&self) -> &Registry {
@@ -249,14 +294,18 @@ impl Trainer {
                 rest[0].data()[0]
             }
             Algo::DfaFloat | Algo::DfaTernary => {
+                let tm = self
+                    .medium
+                    .as_ref()
+                    .context("digital DFA requires a materialized medium")?;
                 let mut args = self.model.state_refs();
                 args.extend([
                     &t_t,
                     &self.lr_t,
                     x,
                     yoh,
-                    &self.medium.b_re,
-                    &self.medium.b_im,
+                    &tm.b_re,
+                    &tm.b_im,
                     &self.theta_t,
                 ]);
                 let outs = self.engine.call("dfa_digital_step", &cfgname, &args)?;

@@ -82,6 +82,33 @@
 //! count under either partition (`rust/tests/service_schedule.rs`).
 //! `--partition modes|batch` selects the axis on the CLI;
 //! `benches/e4_scaling.rs` (E4.4) sweeps clients × shards × partition.
+//!
+//! ## The streamed projection engine (memory-less media at 1e5+ modes)
+//!
+//! The medium is *defined by its seed*, not by a stored buffer: row `r`,
+//! column `c` of the transmission matrix is Box–Muller pair `c` of the
+//! dedicated PCG stream for row `r`, reachable in O(log c) via
+//! [`util::rng::Pcg64::advance`] (counter-addressable generation — see
+//! [`optics::medium`]).  Two backings realize the same definition,
+//! selected by `--medium materialized|streamed`
+//! ([`config::MediumBacking`]): dense tensors, or
+//! [`optics::stream::StreamedMedium`] — a tiled projection engine that
+//! regenerates row-tiles into reusable scratch, fuses the quadrature
+//! accumulation into the tile walk (batch-aware, parallel over the
+//! thread pool's scoped submit/join), and never holds a `[d_in, modes]`
+//! slice: resident TM bytes are `O(tile)` instead of `O(d_in × modes)`.
+//!
+//! **Parity guarantee:** the streamed path is **bitwise equal** to the
+//! materialized path for any seed/shape — digital, noiseless *and*
+//! noisy optics (identical field at the camera → identical noise draws)
+//! — and streamed shards compose with the farm and the shard-aware
+//! service under both partitions with the same bit parity
+//! (`rust/tests/stream_parity.rs`).  `benches/e6_streaming.rs` sweeps
+//! modes 1e4 → 1e6 and reports throughput plus the peak-RSS proxy
+//! (bytes resident vs bytes the dense slice would need); the CI
+//! `stream-smoke` job replays it at 1e5 modes under a hard `ulimit -v`
+//! where the dense allocation provably fails — the memory-less
+//! guarantee is enforced, not just documented.
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

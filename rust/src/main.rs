@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 use litl::cli::Args;
-use litl::config::{Algo, Partition, TrainConfig};
+use litl::config::{Algo, MediumBacking, Partition, TrainConfig};
 use litl::coordinator::Trainer;
 use litl::data::{self, Split};
 use litl::optics::medium::TransmissionMatrix;
@@ -23,7 +23,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
-    "partition",
+    "partition", "medium",
 ];
 
 fn main() {
@@ -104,6 +104,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(p) = args.flag("partition") {
         cfg.partition = Partition::parse(p)?;
     }
+    if let Some(m) = args.flag("medium") {
+        cfg.medium = MediumBacking::parse(m)?;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -117,14 +120,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[TRAIN_FLAGS, &["config-file"]].concat())?;
     let cfg = build_config(args)?;
     log::info!(
-        "train: algo={} lr={} epochs={} config={} projector={:?} shards={} partition={}",
+        "train: algo={} lr={} epochs={} config={} projector={:?} shards={} \
+         partition={} medium={}",
         cfg.algo.name(),
         cfg.lr,
         cfg.epochs,
         cfg.artifact_config,
         cfg.projector,
         cfg.shards,
-        cfg.partition.name()
+        cfg.partition.name(),
+        cfg.medium.name()
     );
     let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
     log::info!(
@@ -301,6 +306,11 @@ COMMANDS:
                                     devices (projector farm)
           --partition modes|batch   farm partition axis: output-mode
                                     slices (default) or batch-row ranges
+          --medium materialized|streamed
+                                    medium backing: dense tensors or
+                                    memory-less tile regeneration (1e5+
+                                    modes; optical algo, native/digital
+                                    projector)
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

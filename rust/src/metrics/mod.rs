@@ -162,14 +162,32 @@ impl Registry {
     /// Sum of all counters whose name starts with `prefix` and ends with
     /// `suffix` — rolls per-shard counters (`service_shard3_frames`,
     /// `service_shard3_slots`, …) up to a fleet total without the caller
-    /// knowing the shard count.
+    /// knowing the shard count.  Prefix and suffix must cover disjoint
+    /// spans of the name (a name shorter than their combined length
+    /// never matches), so `("service_shard", "_shard")` cannot
+    /// double-count an overlap.
     pub fn sum_counters(&self, prefix: &str, suffix: &str) -> f64 {
         let inner = self.inner.lock().unwrap();
         inner
             .counters
             .iter()
-            .filter(|(name, _)| name.starts_with(prefix) && name.ends_with(suffix))
+            .filter(|(name, _)| name_matches(name, prefix, suffix))
             .map(|(_, c)| c.get() as f64)
+            .sum()
+    }
+
+    /// [`Registry::sum_counters`] for gauges: the fleet view of the
+    /// per-shard gauges (`service_shard3_slot_s`, `…_util`, …).  Summing
+    /// is the right roll-up for additive gauges like slot-seconds and
+    /// lane depth; divide by the shard count for intensive ones like
+    /// utilization.
+    pub fn sum_gauges(&self, prefix: &str, suffix: &str) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .gauges
+            .iter()
+            .filter(|(name, _)| name_matches(name, prefix, suffix))
+            .map(|(_, g)| g.get())
             .sum()
     }
 
@@ -195,6 +213,14 @@ impl Registry {
         }
         out
     }
+}
+
+/// Prefix/suffix roll-up predicate shared by the counter and gauge
+/// roll-ups: both ends must match over disjoint spans of the name.
+fn name_matches(name: &str, prefix: &str, suffix: &str) -> bool {
+    name.len() >= prefix.len() + suffix.len()
+        && name.starts_with(prefix)
+        && name.ends_with(suffix)
 }
 
 /// Line-buffered CSV writer with a fixed header.
@@ -254,6 +280,39 @@ mod tests {
         assert_eq!(reg.sum_counters("service_shard", "_frames"), 8.0);
         assert_eq!(reg.sum_counters("service_shard", "_slots"), 9.0);
         assert_eq!(reg.sum_counters("service_shard", "_none"), 0.0);
+    }
+
+    #[test]
+    fn sum_counters_edges() {
+        let reg = Registry::new();
+        reg.counter("shard0_x").add(2);
+        reg.counter("shard1_x").add(3);
+        // Empty prefix/suffix are wildcards on that end.
+        assert_eq!(reg.sum_counters("", "_x"), 5.0);
+        assert_eq!(reg.sum_counters("shard", ""), 5.0);
+        assert_eq!(reg.sum_counters("", ""), 5.0);
+        // Exact-name match: prefix == name, suffix empty (and vice versa).
+        assert_eq!(reg.sum_counters("shard0_x", ""), 2.0);
+        // Prefix and suffix may not overlap inside one name: "_x" as both
+        // would need the name to contain it twice.
+        reg.counter("_x").add(100);
+        assert_eq!(reg.sum_counters("_x", "_x"), 0.0);
+        // A zero-valued counter contributes zero, not a missing entry.
+        reg.counter("shard2_x");
+        assert_eq!(reg.sum_counters("shard", "_x"), 5.0);
+    }
+
+    #[test]
+    fn sum_gauges_rolls_up_per_shard_names() {
+        let reg = Registry::new();
+        reg.gauge("service_shard0_slot_s").set(0.25);
+        reg.gauge("service_shard1_slot_s").set(0.5);
+        reg.gauge("service_shard1_util").set(0.9);
+        reg.gauge("service_queue_depth").set(7.0);
+        reg.counter("service_shard0_slot_s_ctr").add(99); // counters don't leak in
+        assert_eq!(reg.sum_gauges("service_shard", "_slot_s"), 0.75);
+        assert_eq!(reg.sum_gauges("service_shard", "_util"), 0.9);
+        assert_eq!(reg.sum_gauges("service_shard", "_missing"), 0.0);
     }
 
     #[test]

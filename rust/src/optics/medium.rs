@@ -3,12 +3,37 @@
 //! Multiple light scattering through a thick diffuser acts on the input
 //! field as a dense complex matrix with i.i.d. CN(0, 1) entries (Saade et
 //! al. 2016).  The matrix is *physical*: nobody stores it, it never
-//! changes, and its size is set by SLM/camera geometry, not memory.  Here
-//! it is sampled once per device from a seed (re/im ~ N(0, 1/2)) so runs
-//! are reproducible; the "never stored" property is modeled in the E4
-//! bench by streaming row generation ([`TransmissionMatrix::stream_row`]).
+//! changes, and its size is set by SLM/camera geometry, not memory.
+//!
+//! ## Counter-addressable generation (materialized ⇔ streamed determinism)
+//!
+//! The matrix is **defined** by its seed, not by a stored buffer: row `r`
+//! is the Box–Muller output of the dedicated PCG stream
+//! `Pcg64::new(seed ^ 0x5eed, r)`, interleaved `(re[j], im[j])` per
+//! column, so column `c` of a row is Box–Muller *pair* `c` of that
+//! stream — reachable in O(log c) via [`Pcg64::advance`] without
+//! generating the prefix.  Both medium backings realize the same
+//! definition:
+//!
+//! * **Materialized** ([`TransmissionMatrix::sample`]) caches every row
+//!   into dense `[d_in, modes]` quadrature tensors — the right call at
+//!   MNIST scale, where the slice fits and is reused every step.
+//! * **Streamed** ([`super::stream::StreamedMedium`]) regenerates tiles
+//!   of rows on the fly into reusable scratch and never holds a
+//!   `[modes, d_in]` slice — the paper's "nobody stores it" property at
+//!   1e5+ modes.
+//!
+//! Because both backings read the identical entry values and accumulate
+//! in the identical order (ascending input row, zero rows skipped), the
+//! streamed projection is **bitwise equal** to the materialized one for
+//! the digital path and for the optics up to the camera (hence bitwise
+//! through noiseless *and* noisy optics, since the camera-noise stream
+//! does not depend on the backing).  The one caveat: Box–Muller rejects
+//! a uniform draw of exactly 0.0 (probability 2⁻⁵³ per pair), which
+//! would shift the pair↔column alignment for the rest of that row; no
+//! realizable seed/shape in the tests hits it.
 
-use crate::tensor::Tensor;
+use crate::tensor::{axpy, Tensor};
 use crate::util::rng::Pcg64;
 
 /// Transmission matrix quadratures, `[d_in, modes]` each.
@@ -24,11 +49,21 @@ pub struct TransmissionMatrix {
 const SCALE: f32 = std::f32::consts::FRAC_1_SQRT_2; // re/im ~ N(0, 1/2)
 
 impl TransmissionMatrix {
-    /// Sample a dense medium (the normal path; dims at MNIST scale).
+    /// Materialize the dense medium from the counter-addressable row
+    /// streams (the normal path; dims at MNIST scale).  Bitwise equal,
+    /// row for row, to what [`TransmissionMatrix::stream_row`] and the
+    /// streamed backing ([`super::stream::StreamedMedium`]) generate.
     pub fn sample(seed: u64, d_in: usize, modes: usize) -> Self {
-        let mut rng = Pcg64::new(seed, 0x0b7);
-        let b_re = Tensor::randn(&[d_in, modes], &mut rng, SCALE);
-        let b_im = Tensor::randn(&[d_in, modes], &mut rng, SCALE);
+        let mut b_re = Tensor::zeros(&[d_in, modes]);
+        let mut b_im = Tensor::zeros(&[d_in, modes]);
+        for r in 0..d_in {
+            Self::stream_row_into(
+                seed,
+                r,
+                &mut b_re.data_mut()[r * modes..(r + 1) * modes],
+                &mut b_im.data_mut()[r * modes..(r + 1) * modes],
+            );
+        }
         TransmissionMatrix {
             d_in,
             modes,
@@ -39,34 +74,65 @@ impl TransmissionMatrix {
     }
 
     /// Generate row `r` (input dimension r's couplings) without storing
-    /// the matrix — models the "memory-less" property at huge dims.
+    /// the matrix — the "memory-less" property at huge dims.
     /// Deterministic per (seed, row): independent stream per row.
     pub fn stream_row(seed: u64, row: usize, modes: usize) -> (Vec<f32>, Vec<f32>) {
-        let mut rng = Pcg64::new(seed ^ 0x5eed, row as u64);
         let mut re = vec![0.0f32; modes];
         let mut im = vec![0.0f32; modes];
-        for j in 0..modes {
-            re[j] = rng.next_normal_f32() * SCALE;
-            im[j] = rng.next_normal_f32() * SCALE;
-        }
+        Self::stream_row_into(seed, row, &mut re, &mut im);
         (re, im)
+    }
+
+    /// Allocation-free [`TransmissionMatrix::stream_row`]: fills the
+    /// caller's scratch with columns `0..re.len()` of row `row`.  The
+    /// hot-loop form — the streamed engine and `project_streamed` call
+    /// this once per (row, tile) into reusable buffers.
+    pub fn stream_row_into(seed: u64, row: usize, re: &mut [f32], im: &mut [f32]) {
+        Self::stream_row_window_into(seed, row, 0, re, im);
+    }
+
+    /// Fill scratch with columns `col0 .. col0 + re.len()` of row `row`
+    /// — the tile primitive.  Column `c` is Box–Muller pair `c` of the
+    /// row stream, so the window seeks there with one O(log col0)
+    /// [`Pcg64::advance`] and then generates sequentially.
+    pub fn stream_row_window_into(
+        seed: u64,
+        row: usize,
+        col0: usize,
+        re: &mut [f32],
+        im: &mut [f32],
+    ) {
+        debug_assert_eq!(re.len(), im.len());
+        let mut rng = Pcg64::new(seed ^ 0x5eed, row as u64);
+        if col0 > 0 {
+            // One pair = (re, im) = exactly 2 raw draws.
+            rng.advance(2 * col0 as u128);
+        }
+        for (r, i) in re.iter_mut().zip(im.iter_mut()) {
+            *r = rng.next_normal_f32() * SCALE;
+            *i = rng.next_normal_f32() * SCALE;
+        }
     }
 
     /// Memory-less projection of one ternary vector using streamed rows:
     /// only touches rows where `e` is non-zero (the SLM's "dark pixels
-    /// contribute no light" physics).
+    /// contribute no light" physics).  Row scratch is reused across the
+    /// whole projection — two `modes`-sized buffers, independent of
+    /// `d_in`.  Bitwise equal to `e @ b_re` / `e @ b_im` on the
+    /// materialized medium of the same seed (same entries, same
+    /// ascending-row accumulation, same zero skip).
     pub fn project_streamed(seed: u64, e: &[f32], modes: usize) -> (Vec<f32>, Vec<f32>) {
         let mut yre = vec![0.0f32; modes];
         let mut yim = vec![0.0f32; modes];
+        let mut re = vec![0.0f32; modes];
+        let mut im = vec![0.0f32; modes];
         for (row, &v) in e.iter().enumerate() {
             if v == 0.0 {
                 continue;
             }
-            let (re, im) = Self::stream_row(seed, row, modes);
-            for j in 0..modes {
-                yre[j] += v * re[j];
-                yim[j] += v * im[j];
-            }
+            Self::stream_row_into(seed, row, &mut re, &mut im);
+            axpy(&mut yre, v, &re);
+            axpy(&mut yim, v, &im);
         }
         (yre, yim)
     }
@@ -106,9 +172,9 @@ impl TransmissionMatrix {
     }
 
     /// Partition the mode axis into `shards` contiguous, balanced
-    /// windows (sizes differ by at most one; earlier shards get the
-    /// remainder).  The concatenation of the shards is the original
-    /// medium, in order.
+    /// windows ([`crate::util::balanced_widths`] — the same arithmetic
+    /// every shard split in the crate uses).  The concatenation of the
+    /// shards is the original medium, in order.
     pub fn split_modes(&self, shards: usize) -> Vec<TransmissionMatrix> {
         assert!(shards >= 1, "need at least one shard");
         assert!(
@@ -116,12 +182,9 @@ impl TransmissionMatrix {
             "cannot split {} modes across {shards} shards",
             self.modes
         );
-        let base = self.modes / shards;
-        let extra = self.modes % shards;
         let mut out = Vec::with_capacity(shards);
         let mut start = 0usize;
-        for i in 0..shards {
-            let width = base + usize::from(i < extra);
+        for width in crate::util::balanced_widths(self.modes, shards) {
             out.push(self.slice_modes(start, start + width));
             start += width;
         }
@@ -199,6 +262,33 @@ mod tests {
     }
 
     #[test]
+    fn sample_rows_are_the_row_streams() {
+        // The materialized medium IS the stacked row streams — the
+        // determinism contract between the two backings.
+        let full = TransmissionMatrix::sample(6, 7, 33);
+        for r in 0..7 {
+            let (re, im) = TransmissionMatrix::stream_row(6, r, 33);
+            assert_eq!(&full.b_re.data()[r * 33..(r + 1) * 33], &re[..]);
+            assert_eq!(&full.b_im.data()[r * 33..(r + 1) * 33], &im[..]);
+        }
+    }
+
+    #[test]
+    fn row_window_is_counter_addressable() {
+        // A window generated after an advance() seek must be bitwise the
+        // corresponding slice of the full row, at any offset.
+        let modes = 97;
+        let (re_full, im_full) = TransmissionMatrix::stream_row(13, 4, modes);
+        for (col0, w) in [(0usize, 97usize), (1, 10), (50, 47), (96, 1)] {
+            let mut re = vec![0.0f32; w];
+            let mut im = vec![0.0f32; w];
+            TransmissionMatrix::stream_row_window_into(13, 4, col0, &mut re, &mut im);
+            assert_eq!(&re[..], &re_full[col0..col0 + w], "col0 {col0}");
+            assert_eq!(&im[..], &im_full[col0..col0 + w], "col0 {col0}");
+        }
+    }
+
+    #[test]
     fn split_concat_roundtrips() {
         let full = TransmissionMatrix::sample(4, 12, 37);
         for shards in [1usize, 2, 3, 5, 7, 37] {
@@ -227,9 +317,28 @@ mod tests {
     }
 
     #[test]
-    fn streamed_projection_matches_dense_structure() {
-        // Not the same matrix as `sample` (different streams), but same
-        // statistics and exact linearity: P(e1 + e2) = P(e1) + P(e2).
+    fn streamed_projection_is_bitwise_the_dense_projection() {
+        // Same matrix as `sample` now (one generation scheme): the
+        // memory-less path must reproduce the dense matvec exactly.
+        let (d_in, modes) = (10usize, 64usize);
+        let dense = TransmissionMatrix::sample(3, d_in, modes);
+        let e: Vec<f32> = (0..d_in)
+            .map(|i| match i % 3 {
+                0 => 1.0,
+                1 => -1.0,
+                _ => 0.0,
+            })
+            .collect();
+        let et = Tensor::from_vec(&[1, d_in], e.clone());
+        let want_re = crate::tensor::matmul(&et, &dense.b_re);
+        let want_im = crate::tensor::matmul(&et, &dense.b_im);
+        let (p_re, p_im) = TransmissionMatrix::project_streamed(3, &e, modes);
+        assert_eq!(p_re, want_re.data());
+        assert_eq!(p_im, want_im.data());
+    }
+
+    #[test]
+    fn streamed_projection_is_linear() {
         let modes = 64;
         let e1: Vec<f32> = (0..10).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
         let e2: Vec<f32> = (0..10).map(|i| if i % 4 == 1 { -1.0 } else { 0.0 }).collect();

@@ -19,8 +19,10 @@
 //! default device because it allows runtime noise sweeps (E5) and
 //! arbitrary sizes (E2/E4) without re-lowering.
 //!
-//! Module map: [`medium`] (transmission matrix), [`slm`] (input encoding
-//! + failure injection), [`camera`] (intensity, noise, ADC),
+//! Module map: [`medium`] (transmission matrix, counter-addressable row
+//! streams), [`stream`] (the streamed/memory-less projection engine and
+//! the [`stream::Medium`] backing policy), [`slm`] (input encoding +
+//! failure injection), [`camera`] (intensity, noise, ADC),
 //! [`holography`] (demodulation, quadrature + FFT), [`opu`] (the device:
 //! frame clock, energy accounting, end-to-end `project`).
 
@@ -29,8 +31,10 @@ pub mod holography;
 pub mod medium;
 pub mod opu;
 pub mod slm;
+pub mod stream;
 
 pub use opu::{OpticalOpu, OpuParams, NOISE_STREAM_BASE};
+pub use stream::{Medium, StreamedMedium};
 
 #[cfg(test)]
 mod tests {

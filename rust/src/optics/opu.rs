@@ -13,8 +13,9 @@ use super::camera::Camera;
 use super::holography;
 use super::medium::TransmissionMatrix;
 use super::slm::Slm;
+use super::stream::Medium;
 use crate::sim::clock::SimClock;
-use crate::tensor::{matmul, Tensor};
+use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
 /// Physical constants of the simulated device.  Mirrors
@@ -68,7 +69,7 @@ pub struct OpuStats {
 /// The simulated photonic co-processor.
 pub struct OpticalOpu {
     params: OpuParams,
-    medium: TransmissionMatrix,
+    medium: Medium,
     slm: Slm,
     camera: Camera,
     noise_rng: Pcg64,
@@ -98,16 +99,30 @@ impl OpticalOpu {
         noise_seed: u64,
         noise_stream: u64,
     ) -> Self {
+        Self::with_medium(params, Medium::Dense(medium), noise_seed, noise_stream)
+    }
+
+    /// The backing-polymorphic constructor: the device is identical
+    /// physics over either [`Medium`] backing — a streamed medium gives
+    /// the same field at the camera plane bit for bit, so the noise
+    /// draws, the ADC counts and the demodulated quadratures all agree
+    /// with the dense device of the same seed.
+    pub fn with_medium(
+        params: OpuParams,
+        medium: Medium,
+        noise_seed: u64,
+        noise_stream: u64,
+    ) -> Self {
         assert!(
-            medium.modes <= params.max_modes,
+            medium.modes() <= params.max_modes,
             "medium has {} modes; device supports {}",
-            medium.modes,
+            medium.modes(),
             params.max_modes
         );
-        let npix = params.oversample * medium.modes;
-        let gain = params.gain_for(medium.d_in);
+        let npix = params.oversample * medium.modes();
+        let gain = params.gain_for(medium.d_in());
         let camera = Camera::new(npix, params.carrier, params.amp, gain);
-        let slm = Slm::new(medium.d_in);
+        let slm = Slm::new(medium.d_in());
         OpticalOpu {
             params,
             slm,
@@ -123,7 +138,7 @@ impl OpticalOpu {
 
     /// Replace the SLM (failure injection: dead pixels, frame drops).
     pub fn set_slm(&mut self, slm: Slm) {
-        assert_eq!(slm.d_in, self.medium.d_in);
+        assert_eq!(slm.d_in, self.medium.d_in());
         self.slm = slm;
     }
 
@@ -137,7 +152,7 @@ impl OpticalOpu {
         &self.params
     }
 
-    pub fn medium(&self) -> &TransmissionMatrix {
+    pub fn medium(&self) -> &Medium {
         &self.medium
     }
 
@@ -146,7 +161,7 @@ impl OpticalOpu {
     }
 
     pub fn modes(&self) -> usize {
-        self.medium.modes
+        self.medium.modes()
     }
 
     /// Share a simulated clock with the coordinator.
@@ -163,15 +178,15 @@ impl OpticalOpu {
     pub fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
         let (shown, displayed) = self.slm.encode(frames, &mut self.noise_rng)?;
         let batch = shown.rows();
-        let modes = self.medium.modes;
+        let modes = self.medium.modes();
         let os = self.params.oversample;
         let npix = os * modes;
 
         // Scattering: complex field at the camera plane for every sample.
         // (The physical device does this in the light; numerically it is
-        // the projection itself, f32 matmul.)
-        let yre = matmul(&shown, &self.medium.b_re);
-        let yim = matmul(&shown, &self.medium.b_im);
+        // the projection itself — dense f32 matmul or the streamed tile
+        // engine, bitwise the same field either way.)
+        let (yre, yim) = self.medium.project(&shown, None);
 
         let mut p1 = Tensor::zeros(&[batch, modes]);
         let mut p2 = Tensor::zeros(&[batch, modes]);
@@ -230,6 +245,7 @@ impl OpticalOpu {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matmul;
 
     fn device(modes: usize) -> OpticalOpu {
         let medium = TransmissionMatrix::sample(1, 10, modes);
@@ -262,7 +278,7 @@ mod tests {
         let mut opu = device(64);
         let e = ternary_batch(16, 10, 4);
         let (p1, _) = opu.project(&e).unwrap();
-        let exact = matmul(&e, &opu.medium().b_re);
+        let exact = matmul(&e, &TransmissionMatrix::sample(1, 10, 64).b_re);
         let c = crate::util::stats::correlation(
             &p1.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
             &exact.data().iter().map(|&x| x as f64).collect::<Vec<_>>(),
@@ -276,7 +292,7 @@ mod tests {
         let err_at = |n_ph: f32| {
             let mut opu = device(64);
             opu.set_noise(n_ph, 0.0);
-            let exact = matmul(&e, &opu.medium().b_re);
+            let exact = matmul(&e, &TransmissionMatrix::sample(1, 10, 64).b_re);
             let (p1, _) = opu.project(&e).unwrap();
             p1.max_abs_diff(&exact)
         };
@@ -335,6 +351,28 @@ mod tests {
         let (pb, _) = b.project(&e).unwrap();
         // Same physics, different noise draws: close but not identical.
         assert_ne!(pa, pb);
+    }
+
+    #[test]
+    fn streamed_device_is_bitwise_the_dense_device_even_with_noise() {
+        // The backing decides how the field is computed, not what it is:
+        // identical field → identical noise draws → identical counts.
+        let dense = TransmissionMatrix::sample(1, 10, 32);
+        let mut a = OpticalOpu::new(OpuParams::default(), dense, 9);
+        let mut b = OpticalOpu::with_medium(
+            OpuParams::default(),
+            Medium::Streamed(crate::optics::stream::StreamedMedium::new(1, 10, 32)),
+            9,
+            NOISE_STREAM_BASE,
+        );
+        for step in 0..3 {
+            let e = ternary_batch(4, 10, 50 + step);
+            let (a1, a2) = a.project(&e).unwrap();
+            let (b1, b2) = b.project(&e).unwrap();
+            assert_eq!(a1, b1, "step {step}");
+            assert_eq!(a2, b2, "step {step}");
+        }
+        assert_eq!(a.stats().frames, b.stats().frames);
     }
 
     #[test]

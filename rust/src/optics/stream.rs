@@ -1,0 +1,667 @@
+//! Streamed (memory-less) transmission medium: projections at 1e5+ modes
+//! with **no `[d_in, modes]` slice ever held in memory**.
+//!
+//! The paper's core scalability claim is that the OPU projects at
+//! dimensions "inaccessible to GPUs" because the scattering medium is
+//! physical — the transmission matrix is never stored.  The follow-up
+//! work (*Hardware Beyond Backpropagation*, arXiv:2012.06373) pushes the
+//! same DFA projection to trillion-parameter regimes where materializing
+//! the TM is flatly impossible.  [`StreamedMedium`] is the simulator's
+//! realization of that property: a projection engine that regenerates TM
+//! tiles on the fly from the counter-addressable PCG row streams (see
+//! `optics::medium` — row `r`, column `c` is Box–Muller pair `c` of
+//! stream `Pcg64::new(seed ^ 0x5eed, r)`, reachable in O(log c) via
+//! [`Pcg64::advance`]) and fuses the quadrature accumulation into the
+//! tile walk:
+//!
+//! ```text
+//!   for each column tile [c0, c0+w):         (parallel over the pool)
+//!       for each active input row r:          (ascending — bit parity)
+//!           regenerate (re, im) row-tile into reusable scratch
+//!           for each batch sample: p1 += e[b,r]·re ; p2 += e[b,r]·im
+//! ```
+//!
+//! Resident TM bytes are one row-tile of scratch per in-flight tile job
+//! — `O(tile_cols)` — instead of `O(d_in × modes)` for the dense slice.
+//!
+//! **Determinism contract** (pinned in `rust/tests/stream_parity.rs`):
+//! for any seed/shape the streamed projection is **bitwise equal** to
+//! the materialized one — same entry values (one generation scheme for
+//! both backings), same per-output-element accumulation order (ascending
+//! input row, zeros skipped — the exact contract `tensor::axpy` keeps
+//! with `matmul`), regardless of tile size or pool parallelism (tiles
+//! own disjoint output columns; the gather is a pure copy in tile
+//! order).  Composed with the farm/service, streamed shards therefore
+//! reproduce the dense farm bit for bit under both partitions.
+//!
+//! **Attribution**: tile generation is *simulation* cost — the physical
+//! device pays zero (light does the matmul; the frame clock is the only
+//! device time axis).  Each projection charges measured generation
+//! seconds to a dedicated [`SimClock`] (sum over tile jobs — capacity
+//! accounting, like the farm's device-seconds) and counts tiles/bytes
+//! generated, so benches can report the emulation cost separately from
+//! the optics frame clock.
+//!
+//! [`Pcg64::advance`]: crate::util::rng::Pcg64::advance
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::exec::ThreadPool;
+use crate::metrics::{Counter, Registry};
+use crate::sim::clock::SimClock;
+use crate::tensor::{axpy, matmul, matmul_pooled, Tensor};
+
+use super::medium::TransmissionMatrix;
+
+/// Default column-tile width: 4096 modes × 2 quadratures × 4 B = 32 KiB
+/// of scratch per in-flight tile job — cache-friendly and three orders
+/// of magnitude under the dense slice at paper scale.
+pub const DEFAULT_TILE_COLS: usize = 4096;
+
+/// Metric names for the streamed engine (bound via
+/// [`StreamedMedium::with_metrics`]).
+pub const STREAM_TILES: &str = "stream_tiles";
+pub const STREAM_BYTES: &str = "stream_bytes_generated";
+
+#[derive(Default)]
+struct StatsInner {
+    projections: AtomicU64,
+    tiles: AtomicU64,
+    bytes_generated: AtomicU64,
+}
+
+/// Snapshot of a streamed medium's lifetime accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Batched projections served.
+    pub projections: u64,
+    /// Row-tiles regenerated (one per active row per column tile).
+    pub tiles: u64,
+    /// Cumulative TM bytes generated (the throughput side of the
+    /// "memory-less" trade: regenerated, never resident).
+    pub bytes_generated: u64,
+    /// Host seconds spent generating tiles, summed over tile jobs.
+    pub gen_seconds: f64,
+}
+
+/// A transmission-matrix window `[d_in, col0 .. col0+modes)` that is
+/// never materialized: tiles are regenerated per projection from the
+/// counter-addressable row streams.
+///
+/// Clones (and [`StreamedMedium::split_modes`] shards) share the stats
+/// and the generation clock — the fleet view rolls up for free.
+#[derive(Clone)]
+pub struct StreamedMedium {
+    seed: u64,
+    d_in: usize,
+    /// Start column of this window in the full medium's mode axis.
+    col0: usize,
+    /// Output modes of this window.
+    modes: usize,
+    tile_cols: usize,
+    /// Optional pool: tile jobs fan out over scoped submit/join.  Results
+    /// are bitwise independent of the pool (disjoint column ownership).
+    pool: Option<Arc<ThreadPool>>,
+    stats: Arc<StatsInner>,
+    gen_clock: SimClock,
+    tiles_ctr: Option<Counter>,
+    bytes_ctr: Option<Counter>,
+}
+
+/// One tile job's output: its column range of both quadratures plus its
+/// generation tallies — row-tiles, bytes, and measured nanoseconds
+/// (summed by the single-threaded epilogue, so the accounting is
+/// deterministic too).
+type TileOut = (Vec<f32>, Vec<f32>, u64, u64, u64);
+
+impl StreamedMedium {
+    /// Full-width streamed medium over `modes` output modes.
+    pub fn new(seed: u64, d_in: usize, modes: usize) -> Self {
+        Self::window(seed, d_in, 0, modes)
+    }
+
+    /// A mode window `[col0, col0 + modes)` of the full medium — what a
+    /// farm shard sees.  Windows of the same seed are consistent with
+    /// each other and with any materialized [`TransmissionMatrix`] of
+    /// the same seed (row streams make column prefixes agree).
+    pub fn window(seed: u64, d_in: usize, col0: usize, modes: usize) -> Self {
+        assert!(d_in > 0 && modes > 0, "streamed medium needs [{d_in}, {modes}] > 0");
+        StreamedMedium {
+            seed,
+            d_in,
+            col0,
+            modes,
+            tile_cols: DEFAULT_TILE_COLS,
+            pool: None,
+            stats: Arc::new(StatsInner::default()),
+            gen_clock: SimClock::new(),
+            tiles_ctr: None,
+            bytes_ctr: None,
+        }
+    }
+
+    /// Fan tile jobs out over `pool`'s scoped submit/join.
+    pub fn with_pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Override the column-tile width (results are bitwise unchanged;
+    /// this only trades scratch size against scheduling granularity).
+    pub fn with_tile_cols(mut self, tile_cols: usize) -> Self {
+        assert!(tile_cols > 0, "tile_cols must be positive");
+        self.tile_cols = tile_cols;
+        self
+    }
+
+    /// Surface tile/byte generation as [`STREAM_TILES`]/[`STREAM_BYTES`]
+    /// counters of `registry`.
+    pub fn with_metrics(mut self, registry: &Registry) -> Self {
+        self.tiles_ctr = Some(registry.counter(STREAM_TILES));
+        self.bytes_ctr = Some(registry.counter(STREAM_BYTES));
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn modes(&self) -> usize {
+        self.modes
+    }
+
+    /// Start column of this window in the full medium.
+    pub fn col_offset(&self) -> usize {
+        self.col0
+    }
+
+    /// Bytes the dense backing would hold resident for this window.
+    pub fn dense_bytes(&self) -> usize {
+        self.d_in * self.modes * 2 * 4
+    }
+
+    /// Resident TM bytes per in-flight tile job (one re/im scratch
+    /// pair).
+    pub fn scratch_bytes_per_job(&self) -> usize {
+        self.tile_cols.min(self.modes) * 2 * 4
+    }
+
+    /// Peak resident TM bytes for a projection — the memory-less
+    /// guarantee as a number benches can assert on.  Accounts for pool
+    /// concurrency: with a pool, up to `threads + 1` tile jobs hold
+    /// scratch at once (workers plus the helping caller), capped by the
+    /// job count.
+    pub fn resident_tm_bytes(&self) -> usize {
+        let tile = self.tile_cols.min(self.modes);
+        let n_jobs = self.modes.div_ceil(tile);
+        let concurrent = self
+            .pool
+            .as_ref()
+            .map(|p| p.threads() + 1)
+            .unwrap_or(1)
+            .min(n_jobs);
+        self.scratch_bytes_per_job() * concurrent
+    }
+
+    /// Lifetime accounting snapshot.
+    pub fn stats(&self) -> StreamStats {
+        StreamStats {
+            projections: self.stats.projections.load(Ordering::Relaxed),
+            tiles: self.stats.tiles.load(Ordering::Relaxed),
+            bytes_generated: self.stats.bytes_generated.load(Ordering::Relaxed),
+            gen_seconds: self.gen_clock.now_secs(),
+        }
+    }
+
+    /// The generation clock (simulation cost; see module docs).
+    pub fn gen_clock(&self) -> &SimClock {
+        &self.gen_clock
+    }
+
+    /// Partition the window into `shards` contiguous balanced
+    /// sub-windows ([`crate::util::balanced_widths`] — one arithmetic
+    /// shared with [`TransmissionMatrix::split_modes`] and the service's
+    /// row split, so streamed and dense farms carve identical shard
+    /// ranges by construction).
+    pub fn split_modes(&self, shards: usize) -> Vec<StreamedMedium> {
+        assert!(shards >= 1, "need at least one shard");
+        assert!(
+            shards <= self.modes,
+            "cannot split {} modes across {shards} shards",
+            self.modes
+        );
+        let mut out = Vec::with_capacity(shards);
+        let mut start = self.col0;
+        for width in crate::util::balanced_widths(self.modes, shards) {
+            let mut shard = self.clone();
+            shard.col0 = start;
+            shard.modes = width;
+            out.push(shard);
+            start += width;
+        }
+        debug_assert_eq!(start, self.col0 + self.modes);
+        out
+    }
+
+    /// Materialize the window as a dense [`TransmissionMatrix`] — the
+    /// test oracle (equals `sample(seed, d_in, col0 + modes)` sliced to
+    /// the window).  Defeats the whole point at scale; oracle use only.
+    pub fn materialize(&self) -> TransmissionMatrix {
+        let full = TransmissionMatrix::sample(self.seed, self.d_in, self.col0 + self.modes);
+        if self.col0 == 0 {
+            full
+        } else {
+            full.slice_modes(self.col0, self.col0 + self.modes)
+        }
+    }
+
+    /// Project `[B, d_in]` frames through the window without ever
+    /// holding its TM slice: returns `(Re y, Im y)`, each `[B, modes]`,
+    /// bitwise equal to `frames @ b_re` / `frames @ b_im` over the
+    /// materialized window.
+    pub fn project(&self, frames: &Tensor) -> (Tensor, Tensor) {
+        assert_eq!(
+            frames.cols(),
+            self.d_in,
+            "streamed projection: frames [{}, {}] vs d_in {}",
+            frames.rows(),
+            frames.cols(),
+            self.d_in
+        );
+        let b = frames.rows();
+        let mut p1 = Tensor::zeros(&[b, self.modes]);
+        let mut p2 = Tensor::zeros(&[b, self.modes]);
+        if b == 0 {
+            return (p1, p2);
+        }
+        // Dark input rows (zero across the whole batch) contribute no
+        // light — their tiles are never generated, mirroring the SLM
+        // physics and `matmul`'s per-element zero skip.
+        let active: Vec<bool> = (0..self.d_in)
+            .map(|r| (0..b).any(|bi| frames.at(bi, r) != 0.0))
+            .collect();
+
+        let tile = self.tile_cols.min(self.modes);
+        let n_jobs = self.modes.div_ceil(tile);
+        let mut slots: Vec<Option<TileOut>> = Vec::with_capacity(n_jobs);
+        slots.resize_with(n_jobs, || None);
+        match &self.pool {
+            Some(pool) => {
+                let frames_ref = &*frames;
+                let active_ref = &active[..];
+                pool.scope(|scope| {
+                    for (job, slot) in slots.iter_mut().enumerate() {
+                        let this = &*self;
+                        scope.submit(move || {
+                            let c0 = job * tile;
+                            let w = tile.min(this.modes - c0);
+                            *slot = Some(this.project_tile(frames_ref, active_ref, c0, w));
+                        });
+                    }
+                });
+            }
+            None => {
+                for (job, slot) in slots.iter_mut().enumerate() {
+                    let c0 = job * tile;
+                    let w = tile.min(self.modes - c0);
+                    *slot = Some(self.project_tile(frames, &active, c0, w));
+                }
+            }
+        }
+
+        // Deterministic gather (tile order == column order) + accounting
+        // epilogue on the caller's thread.
+        let mut tiles = 0u64;
+        let mut bytes = 0u64;
+        let mut nanos = 0u64;
+        let mut panicked = 0usize;
+        for (job, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some((t1, t2, tl, by, ns)) => {
+                    let c0 = job * tile;
+                    let w = tile.min(self.modes - c0);
+                    for bi in 0..b {
+                        let dst = bi * self.modes + c0;
+                        p1.data_mut()[dst..dst + w]
+                            .copy_from_slice(&t1[bi * w..(bi + 1) * w]);
+                        p2.data_mut()[dst..dst + w]
+                            .copy_from_slice(&t2[bi * w..(bi + 1) * w]);
+                    }
+                    tiles += tl;
+                    bytes += by;
+                    nanos += ns;
+                }
+                None => panicked += 1,
+            }
+        }
+        assert_eq!(panicked, 0, "streamed projection: {panicked} tile job(s) panicked");
+        self.stats.projections.fetch_add(1, Ordering::Relaxed);
+        self.stats.tiles.fetch_add(tiles, Ordering::Relaxed);
+        self.stats.bytes_generated.fetch_add(bytes, Ordering::Relaxed);
+        // Per-tile clock attribution: measured job seconds, summed —
+        // capacity accounting like the farm's device-seconds (wall view
+        // under a pool is smaller; this is the work done).
+        self.gen_clock.advance_secs(nanos as f64 / 1e9);
+        if let Some(c) = &self.tiles_ctr {
+            c.add(tiles);
+        }
+        if let Some(c) = &self.bytes_ctr {
+            c.add(bytes);
+        }
+        (p1, p2)
+    }
+
+    /// One column tile `[c0, c0 + w)` of the window: regenerate each
+    /// active row's tile into reusable scratch and accumulate both
+    /// quadratures for the whole batch before moving to the next row
+    /// (batch-aware: one generation pass amortizes over all samples).
+    fn project_tile(&self, frames: &Tensor, active: &[bool], c0: usize, w: usize) -> TileOut {
+        let t0 = Instant::now();
+        let b = frames.rows();
+        let mut p1 = vec![0.0f32; b * w];
+        let mut p2 = vec![0.0f32; b * w];
+        let mut re = vec![0.0f32; w];
+        let mut im = vec![0.0f32; w];
+        let mut tiles = 0u64;
+        for r in 0..self.d_in {
+            if !active[r] {
+                continue;
+            }
+            TransmissionMatrix::stream_row_window_into(
+                self.seed,
+                r,
+                self.col0 + c0,
+                &mut re,
+                &mut im,
+            );
+            tiles += 1;
+            for bi in 0..b {
+                let s = frames.at(bi, r);
+                if s == 0.0 {
+                    continue;
+                }
+                axpy(&mut p1[bi * w..(bi + 1) * w], s, &re);
+                axpy(&mut p2[bi * w..(bi + 1) * w], s, &im);
+            }
+        }
+        (p1, p2, tiles, tiles * (w as u64) * 8, t0.elapsed().as_nanos() as u64)
+    }
+}
+
+/// The medium-backing policy, device side: who answers "what does the
+/// light do to this frame?"  `Dense` is the classic materialized
+/// quadrature tensors; `Streamed` regenerates tiles and never stores
+/// the slice.  Both are the *same* matrix for the same seed (one
+/// generation scheme — see `optics::medium`), so swapping the backing
+/// never changes a single output bit.
+#[derive(Clone)]
+pub enum Medium {
+    Dense(TransmissionMatrix),
+    Streamed(StreamedMedium),
+}
+
+impl Medium {
+    pub fn d_in(&self) -> usize {
+        match self {
+            Medium::Dense(tm) => tm.d_in,
+            Medium::Streamed(sm) => sm.d_in(),
+        }
+    }
+
+    pub fn modes(&self) -> usize {
+        match self {
+            Medium::Dense(tm) => tm.modes,
+            Medium::Streamed(sm) => sm.modes(),
+        }
+    }
+
+    // NOTE: deliberately no `seed()` accessor.  A dense shard produced
+    // by `slice_modes` keeps its parent's seed but not the column
+    // offset, so a bare seed cannot regenerate the shard — exposing it
+    // here would invite exactly that bug.  The streamed variant carries
+    // its offset ([`StreamedMedium::col_offset`]) and keeps its own
+    // accessors.
+
+    /// Human tag for logs/config plumbing.
+    pub fn backing_name(&self) -> &'static str {
+        match self {
+            Medium::Dense(_) => "materialized",
+            Medium::Streamed(_) => "streamed",
+        }
+    }
+
+    /// The dense matrix, when this backing holds one (the HLO projector
+    /// and the digital-DFA artifacts need real tensors to pass).
+    pub fn dense(&self) -> Option<&TransmissionMatrix> {
+        match self {
+            Medium::Dense(tm) => Some(tm),
+            Medium::Streamed(_) => None,
+        }
+    }
+
+    /// Peak TM bytes this backing holds resident (streamed: scratch ×
+    /// concurrent tile jobs — see [`StreamedMedium::resident_tm_bytes`]).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Medium::Dense(tm) => tm.d_in * tm.modes * 2 * 4,
+            Medium::Streamed(sm) => sm.resident_tm_bytes(),
+        }
+    }
+
+    /// Dense oracle of this medium (clones the tensors for `Dense`;
+    /// generates them for `Streamed` — test/oracle use only).
+    pub fn materialize(&self) -> TransmissionMatrix {
+        match self {
+            Medium::Dense(tm) => tm.clone(),
+            Medium::Streamed(sm) => sm.materialize(),
+        }
+    }
+
+    /// Contiguous balanced mode windows, preserving the backing — what
+    /// the farm's mode partition carves shards from.  Streamed and dense
+    /// splits cover identical ranges, so shard outputs agree bit for
+    /// bit.
+    pub fn split_modes(&self, shards: usize) -> Vec<Medium> {
+        match self {
+            Medium::Dense(tm) => {
+                tm.split_modes(shards).into_iter().map(Medium::Dense).collect()
+            }
+            Medium::Streamed(sm) => {
+                sm.split_modes(shards).into_iter().map(Medium::Streamed).collect()
+            }
+        }
+    }
+
+    /// `(frames @ b_re, frames @ b_im)` under this backing.  `pool`
+    /// row-block-parallelizes the dense matmul (bitwise identical to
+    /// serial); the streamed backing parallelizes over its own pool if
+    /// it was built with one.  All four combinations produce identical
+    /// bits.
+    pub fn project(&self, frames: &Tensor, pool: Option<&ThreadPool>) -> (Tensor, Tensor) {
+        match self {
+            Medium::Dense(tm) => match pool {
+                Some(p) => (
+                    matmul_pooled(frames, &tm.b_re, p),
+                    matmul_pooled(frames, &tm.b_im, p),
+                ),
+                None => (matmul(frames, &tm.b_re), matmul(frames, &tm.b_im)),
+            },
+            Medium::Streamed(sm) => sm.project(frames),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tern(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn streamed_is_bitwise_the_dense_projection() {
+        for (d_in, modes, b, seed) in
+            [(10usize, 64usize, 4usize, 3u64), (17, 130, 1, 9), (33, 4097, 3, 5)]
+        {
+            let dense = TransmissionMatrix::sample(seed, d_in, modes);
+            let sm = StreamedMedium::new(seed, d_in, modes);
+            let e = tern(b, d_in, 100 + seed);
+            let (s1, s2) = sm.project(&e);
+            assert_eq!(s1, matmul(&e, &dense.b_re), "({d_in},{modes},{b})");
+            assert_eq!(s2, matmul(&e, &dense.b_im), "({d_in},{modes},{b})");
+        }
+    }
+
+    #[test]
+    fn tile_size_does_not_change_a_bit() {
+        let sm = StreamedMedium::new(7, 12, 100);
+        let e = tern(5, 12, 1);
+        let want = sm.project(&e);
+        for tile in [1usize, 3, 7, 64, 100, 4096] {
+            let smt = StreamedMedium::new(7, 12, 100).with_tile_cols(tile);
+            assert_eq!(smt.project(&e), want, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn pooled_streamed_is_bitwise_serial_streamed() {
+        let pool = Arc::new(ThreadPool::new(4, 16));
+        let serial = StreamedMedium::new(11, 20, 300).with_tile_cols(32);
+        let pooled = StreamedMedium::new(11, 20, 300)
+            .with_tile_cols(32)
+            .with_pool(pool);
+        let e = tern(6, 20, 2);
+        assert_eq!(serial.project(&e), pooled.project(&e));
+    }
+
+    #[test]
+    fn window_matches_the_dense_column_slice() {
+        let dense = TransmissionMatrix::sample(4, 9, 120);
+        let e = tern(3, 9, 7);
+        for (c0, w) in [(0usize, 120usize), (13, 50), (100, 20)] {
+            let sm = StreamedMedium::window(4, 9, c0, w).with_tile_cols(17);
+            let slice = dense.slice_modes(c0, c0 + w);
+            let (s1, s2) = sm.project(&e);
+            assert_eq!(s1, matmul(&e, &slice.b_re), "window {c0}+{w}");
+            assert_eq!(s2, matmul(&e, &slice.b_im), "window {c0}+{w}");
+        }
+    }
+
+    #[test]
+    fn split_modes_carves_the_same_shards_as_the_dense_split() {
+        let sm = StreamedMedium::new(8, 6, 37);
+        let dense = TransmissionMatrix::sample(8, 6, 37);
+        for shards in [1usize, 2, 3, 5] {
+            let windows = sm.split_modes(shards);
+            let slices = dense.split_modes(shards);
+            assert_eq!(windows.len(), shards);
+            let e = tern(2, 6, 3);
+            for (wdw, slc) in windows.iter().zip(&slices) {
+                assert_eq!(wdw.modes(), slc.modes);
+                let (p1, _) = wdw.project(&e);
+                assert_eq!(p1, matmul(&e, &slc.b_re));
+            }
+        }
+    }
+
+    #[test]
+    fn materialize_is_the_sampled_medium() {
+        let sm = StreamedMedium::window(5, 8, 10, 30);
+        let oracle = TransmissionMatrix::sample(5, 8, 40).slice_modes(10, 40);
+        let got = sm.materialize();
+        assert_eq!(got.b_re, oracle.b_re);
+        assert_eq!(got.b_im, oracle.b_im);
+    }
+
+    #[test]
+    fn stats_count_tiles_bytes_and_gen_time() {
+        let registry = Registry::new();
+        let sm = StreamedMedium::new(2, 10, 100)
+            .with_tile_cols(40)
+            .with_metrics(&registry);
+        // All-ones frames: every row active, 3 column tiles (40/40/20).
+        let e = Tensor::from_vec(&[1, 10], vec![1.0; 10]);
+        sm.project(&e);
+        let st = sm.stats();
+        assert_eq!(st.projections, 1);
+        assert_eq!(st.tiles, 30, "10 rows × 3 column tiles");
+        assert_eq!(st.bytes_generated, (10 * 100 * 2 * 4) as u64);
+        assert!(st.gen_seconds > 0.0);
+        let snap = registry.snapshot();
+        assert_eq!(snap[STREAM_TILES], 30.0);
+        assert_eq!(snap[STREAM_BYTES], st.bytes_generated as f64);
+        // The memory-less bound: scratch ≪ dense.
+        assert!(sm.scratch_bytes_per_job() < sm.dense_bytes());
+    }
+
+    #[test]
+    fn resident_bytes_account_for_pool_concurrency() {
+        // Serial: one job's scratch.  Pooled: workers + helping caller,
+        // capped by the job count.
+        let serial = StreamedMedium::new(1, 4, 100).with_tile_cols(10);
+        assert_eq!(serial.resident_tm_bytes(), serial.scratch_bytes_per_job());
+        let pool = Arc::new(ThreadPool::new(3, 16));
+        let pooled = StreamedMedium::new(1, 4, 100)
+            .with_tile_cols(10)
+            .with_pool(pool.clone());
+        assert_eq!(
+            pooled.resident_tm_bytes(),
+            4 * pooled.scratch_bytes_per_job(),
+            "3 workers + helping caller"
+        );
+        // Fewer jobs than threads: capped by jobs.
+        let few = StreamedMedium::new(1, 4, 100)
+            .with_tile_cols(50)
+            .with_pool(pool);
+        assert_eq!(few.resident_tm_bytes(), 2 * few.scratch_bytes_per_job());
+    }
+
+    #[test]
+    fn dark_rows_generate_no_tiles() {
+        let sm = StreamedMedium::new(2, 10, 64);
+        let mut e = Tensor::zeros(&[2, 10]);
+        e.data_mut()[3] = 1.0; // row 3 active in sample 0 only
+        sm.project(&e);
+        assert_eq!(sm.stats().tiles, 1, "only the one active row");
+        // And the result still matches the dense projection exactly.
+        let dense = TransmissionMatrix::sample(2, 10, 64);
+        let (p1, _) = sm.project(&e);
+        assert_eq!(p1, matmul(&e, &dense.b_re));
+    }
+
+    #[test]
+    fn medium_enum_projects_identically_under_both_backings() {
+        let tm = TransmissionMatrix::sample(6, 12, 48);
+        let dense = Medium::Dense(tm.clone());
+        let streamed = Medium::Streamed(StreamedMedium::new(6, 12, 48));
+        let e = tern(4, 12, 8);
+        assert_eq!(dense.project(&e, None), streamed.project(&e, None));
+        assert_eq!(dense.backing_name(), "materialized");
+        assert_eq!(streamed.backing_name(), "streamed");
+        assert_eq!(dense.modes(), streamed.modes());
+        assert!(streamed.resident_bytes() < dense.resident_bytes());
+        assert!(streamed.dense().is_none());
+        assert_eq!(streamed.materialize().b_re, tm.b_re);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let sm = StreamedMedium::new(1, 5, 8);
+        let (p1, p2) = sm.project(&Tensor::zeros(&[0, 5]));
+        assert_eq!(p1.shape(), &[0, 8]);
+        assert_eq!(p2.shape(), &[0, 8]);
+        assert_eq!(sm.stats().tiles, 0);
+    }
+}

@@ -192,6 +192,15 @@ impl CpuModel {
     pub fn throughput(&self, d_in: usize, d_out: usize) -> f64 {
         self.macs_per_sec / (d_in as f64 * d_out as f64)
     }
+
+    /// Joules for `secs` of host compute at this model's package power.
+    /// This is the energy attribution for streamed-medium tile
+    /// generation (the per-tile clock a `StreamedMedium` charges is
+    /// host *simulation* cost — the physical medium scatters for free;
+    /// only the frame clock is device time).
+    pub fn energy_for_secs(&self, secs: f64) -> f64 {
+        secs * self.power_watts
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +256,17 @@ mod tests {
         let slots = [10u64, 7, 3];
         assert!((opu.service_energy(&slots) - opu.energy(20)).abs() < 1e-12);
         assert_eq!(opu.service_energy(&[]), 0.0);
+    }
+
+    #[test]
+    fn cpu_gen_energy_attribution() {
+        let cpu = CpuModel::measured(1e9);
+        assert!((cpu.energy_for_secs(2.0) - 2.0 * cpu.power_watts).abs() < 1e-12);
+        assert_eq!(cpu.energy_for_secs(0.0), 0.0);
+        // Attribution is consistent with the seconds model: generating a
+        // tile's worth of MACs costs its seconds × watts.
+        let secs = cpu.seconds(100, 4096, 1);
+        assert!((cpu.energy_for_secs(secs) - secs * 15.0).abs() < 1e-12);
     }
 
     #[test]

@@ -286,6 +286,19 @@ pub fn gate_tanh(a: &Tensor, h: &Tensor) -> Tensor {
     Tensor::from_vec(a.shape(), data)
 }
 
+/// `acc[j] += s * x[j]` — the accumulate step of the streamed (tile-at-
+/// a-time) projection.  Kept as the exact expression of `matmul_rows`'s
+/// inner loop so a streamed projection that walks input rows ascending
+/// and skips zero coefficients is **bitwise identical** to the blocked
+/// matmul over the materialized matrix.
+#[inline]
+pub fn axpy(acc: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (o, v) in acc.iter_mut().zip(x) {
+        *o += s * v;
+    }
+}
+
 /// Scale in place.
 pub fn scale_inplace(x: &mut Tensor, s: f32) {
     for v in x.data_mut().iter_mut() {
@@ -426,6 +439,28 @@ mod tests {
 
         let x = Tensor::from_vec(&[1, 4], vec![0.2, 0.05, -0.2, -0.05]);
         assert_eq!(ternarize(&x, 0.1).data(), &[1.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn axpy_accumulation_is_bitwise_the_matmul_inner_loop() {
+        // Row-by-row axpy over a's columns must equal matmul exactly.
+        let mut rng = Pcg64::seeded(8);
+        let (m, k, n) = (5usize, 13usize, 37usize);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let want = matmul(&a, &b);
+        let mut got = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let orow = &mut got.data_mut()[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let s = a.at(i, kk);
+                if s == 0.0 {
+                    continue;
+                }
+                axpy(orow, s, &b.data()[kk * n..(kk + 1) * n]);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

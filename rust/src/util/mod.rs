@@ -19,3 +19,35 @@ pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
+
+/// Contiguous balanced partition: split `total` items into `parts`
+/// widths that differ by at most one, earlier parts taking the
+/// remainder.  THE shard-range arithmetic — the dense medium split, the
+/// streamed-window split and the service/farm batch-row split all call
+/// this one function, which is what makes dense↔streamed farms carve
+/// identical shard ranges (a bitwise-parity requirement, pinned in
+/// `rust/tests/stream_parity.rs`) and the scheduler agree with the farm.
+pub fn balanced_widths(total: usize, parts: usize) -> Vec<usize> {
+    debug_assert!(parts >= 1, "need at least one part");
+    let base = total / parts;
+    let extra = total % parts;
+    (0..parts).map(|i| base + usize::from(i < extra)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::balanced_widths;
+
+    #[test]
+    fn balanced_widths_cover_and_balance() {
+        for (total, parts) in [(37usize, 5usize), (10, 4), (3, 7), (0, 3), (8, 1)] {
+            let w = balanced_widths(total, parts);
+            assert_eq!(w.len(), parts);
+            assert_eq!(w.iter().sum::<usize>(), total);
+            let (min, max) = (w.iter().min().unwrap(), w.iter().max().unwrap());
+            assert!(max - min <= 1, "{total}/{parts}: {w:?}");
+            // Earlier parts take the remainder.
+            assert!(w.windows(2).all(|p| p[0] >= p[1]));
+        }
+    }
+}

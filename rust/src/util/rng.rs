@@ -37,6 +37,32 @@ impl Pcg64 {
         Self::new(seed, 0xda3e39cb94b95bdb)
     }
 
+    /// Jump the generator forward by `delta` [`Pcg64::next_u64`] steps in
+    /// O(log delta) (Brown's LCG jump-ahead: compose `state ← M·state + inc`
+    /// with itself by repeated squaring).  This is what makes the
+    /// transmission medium *counter-addressable*: a streamed tile can seek
+    /// to any column of a row stream without generating the prefix.
+    ///
+    /// Any cached Box–Muller spare is discarded — after a jump the pairing
+    /// restarts on the draw the jump landed on.
+    pub fn advance(&mut self, mut delta: u128) {
+        let mut acc_mult: u128 = 1;
+        let mut acc_plus: u128 = 0;
+        let mut cur_mult = PCG_MULT;
+        let mut cur_plus = self.inc;
+        while delta > 0 {
+            if delta & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            delta >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+        self.normal_spare = None;
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -209,6 +235,43 @@ mod tests {
         sorted.sort();
         assert_eq!(sorted, (0..100).collect::<Vec<_>>());
         assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn advance_matches_sequential_draws() {
+        for delta in [0usize, 1, 2, 3, 17, 1000, 4096] {
+            let mut seq = Pcg64::new(11, 7);
+            for _ in 0..delta {
+                seq.next_u64();
+            }
+            let mut jump = Pcg64::new(11, 7);
+            jump.advance(delta as u128);
+            for _ in 0..16 {
+                assert_eq!(seq.next_u64(), jump.next_u64(), "delta {delta}");
+            }
+        }
+    }
+
+    #[test]
+    fn advance_discards_normal_spare() {
+        // A cached spare belongs to the pre-jump position; advance(0)
+        // must still re-pair from the current raw draw.
+        let mut a = Pcg64::new(3, 9);
+        let _ = a.next_normal(); // caches the sin spare
+        a.advance(0);
+        let mut b = Pcg64::new(3, 9);
+        b.advance(2); // one Box–Muller pair consumed 2 draws
+        assert_eq!(a.next_normal().to_bits(), b.next_normal().to_bits());
+    }
+
+    #[test]
+    fn advance_composes() {
+        let mut a = Pcg64::new(5, 1);
+        a.advance(1000);
+        a.advance(24);
+        let mut b = Pcg64::new(5, 1);
+        b.advance(1024);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn cfg(algo: Algo) -> TrainConfig {
         account_frames: true,
         shards: 1,
         partition: litl::config::Partition::Modes,
+        medium: litl::config::MediumBacking::Materialized,
     }
 }
 
