@@ -1,0 +1,90 @@
+//! Mixed optical/digital weighted fleet from one `Topology` descriptor.
+//!
+//! Declares 2 simulated OPUs at service weight 2 plus 1 exact digital
+//! comparator at weight 1, builds the farm and the shard-aware service
+//! from the same value, and drives a host DFA trainer through it.
+//! (Doc-style snippet, mirrored by `rust/tests/topology.rs`.)
+
+use litl::config::Partition;
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::projector::Projector;
+use litl::coordinator::service::{ClientProjector, ShardServiceConfig};
+use litl::coordinator::topology::Topology;
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
+use litl::optics::OpuParams;
+use litl::tensor::Tensor;
+use litl::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let (err_dim, modes) = (10usize, 32usize);
+
+    // One declarative descriptor: "hetero:opt:2@2+dig:1" also parses.
+    let topo = Topology::parse("opt:2@2+dig:1")?
+        .with_partition(Partition::Modes);
+    println!(
+        "topology {} (hash {:016x}): {} shards, weights {:?}",
+        topo.shorthand(),
+        topo.stable_hash(),
+        topo.shard_count(),
+        topo.weights()
+    );
+
+    // The same medium every projector arm shares (seed-defined).
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, err_dim, modes));
+
+    // (a) A farm — one logical projector over the mixed fleet.
+    let mut farm = topo.build_farm(OpuParams::default(), &medium, 7, Registry::new())?;
+    let mut rng = Pcg64::seeded(1);
+    let mut e = Tensor::zeros(&[8, err_dim]);
+    for v in e.data_mut() {
+        *v = (rng.next_below(3) as i64 - 1) as f32;
+    }
+    let (p1, _p2) = farm.project(&e)?;
+    println!("farm '{}' projected [8, {}]", farm.kind(), p1.cols());
+
+    // (b) A running service — per-shard lanes and workers — feeding a
+    // host DFA trainer via the ClientProjector adapter.
+    let reg = Registry::new();
+    let svc = topo.build_service(
+        OpuParams::default(),
+        &medium,
+        7,
+        err_dim,
+        ShardServiceConfig {
+            partition: Partition::Modes,
+            ..Default::default()
+        },
+        reg.clone(),
+    )?;
+    let projector = Box::new(ClientProjector::new(svc.client(), modes));
+    let mut trainer = HostTrainer::new(
+        11,
+        &[20, modes, modes, 10],
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    for step in 0..20u64 {
+        let mut x = Tensor::zeros(&[16, 20]);
+        let mut rng = Pcg64::seeded(100 + step);
+        for v in x.data_mut() {
+            *v = rng.next_f32() * 2.0 - 1.0;
+        }
+        let mut y = Tensor::zeros(&[16, 10]);
+        for r in 0..16 {
+            *y.at_mut(r, r % 10) = 1.0;
+        }
+        let loss = trainer.step(&x, &y)?;
+        if step % 5 == 0 {
+            println!("step {step}: loss {loss:.4}");
+        }
+    }
+    svc.shutdown();
+    println!(
+        "fleet slots: {}",
+        reg.sum_counters("service_shard", "_slots")
+    );
+    Ok(())
+}

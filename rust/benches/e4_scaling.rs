@@ -16,18 +16,58 @@ use std::collections::BTreeMap;
 use litl::bench::{fmt_rate, fmt_s, Bench};
 use litl::config::Partition;
 use litl::coordinator::farm::ProjectorFarm;
-use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::projector::{DigitalProjector, NativeOpticalProjector, Projector};
 use litl::coordinator::service::{
     ProjectionService, ServiceConfig, ShardServiceConfig, ShardedProjectionService,
 };
+use litl::coordinator::topology::{DeviceKind, Topology};
 use litl::coordinator::ProjectionClient;
 use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
 use litl::optics::OpuParams;
 use litl::sim::power::{Holography, OpuModel};
 use litl::tensor::Tensor;
 use litl::util::json::Json;
 use litl::util::rng::Pcg64;
+
+/// A shard device with a simulated *service-rate handicap*: sleeps
+/// `us_per_row` microseconds per row before projecting.  Stands in for
+/// the heterogeneous-fleet reality (older cameras, degraded links)
+/// that weighted scheduling is for.
+struct Throttled {
+    inner: Box<dyn Projector + Send>,
+    us_per_row: u64,
+}
+
+impl Projector for Throttled {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        std::thread::sleep(std::time::Duration::from_micros(
+            self.us_per_row * frames.rows() as u64,
+        ));
+        self.inner.project(frames)
+    }
+
+    fn modes(&self) -> usize {
+        self.inner.modes()
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.inner.sim_seconds()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.inner.energy_joules()
+    }
+
+    fn kind(&self) -> &'static str {
+        "throttled"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.inner.requires_ternary()
+    }
+}
 
 /// Drive `clients` threads, each submitting `submissions` requests of
 /// `rows` ternary frames through its own client handle, waiting for
@@ -157,7 +197,12 @@ fn main() -> anyhow::Result<()> {
     let mut baseline_mean = 0.0f64;
     let mut rows: Vec<Json> = Vec::new();
     for shards in [1usize, 2, 4, 8] {
-        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 9, shards)?;
+        let mut farm = Topology::homogeneous(DeviceKind::Optical, shards).build_farm(
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            9,
+            Registry::new(),
+        )?;
         // Per-batch device-seconds from the first (warm-up) batch: the
         // accumulator after the bench would include a budget-dependent
         // iteration count and not be comparable across rows.
@@ -261,13 +306,13 @@ fn main() -> anyhow::Result<()> {
         service_rows.push(Json::Obj(row));
         for partition in [Partition::Modes, Partition::Batch] {
             for &shards in &[1usize, 2, 4] {
-                let devices = ProjectorFarm::optical_shard_devices(
-                    OpuParams::default(),
-                    &sv_medium,
-                    9,
-                    shards,
-                    partition,
-                )?;
+                let devices = Topology::homogeneous(DeviceKind::Optical, shards)
+                    .with_partition(partition)
+                    .build_devices(
+                        OpuParams::default(),
+                        &Medium::Dense(sv_medium.clone()),
+                        9,
+                    )?;
                 let svc = ShardedProjectionService::start(
                     devices,
                     sv_d_in,
@@ -339,6 +384,96 @@ fn main() -> anyhow::Result<()> {
             "(below 1.5x target on this host)"
         }
     );
+
+    // ---- E4.5: weighted vs even row split on skewed device speeds ----
+    //
+    // The weighted frame-slot schedule's payoff, measured: a two-replica
+    // batch-partition farm where one device services rows `skew`× slower
+    // (a throttled digital replica).  The even split parks half the
+    // batch on the slow device; weighting the fast device `skew:1`
+    // shifts rows to match the service rates, so the critical path
+    // (slowest shard) shrinks.
+    println!("\n== E4.5: hetero sweep — weighted vs even row split ==");
+    let (ht_d_in, ht_modes, ht_batch) = (10usize, 512usize, 64usize);
+    let ht_medium = TransmissionMatrix::sample(71, ht_d_in, ht_modes);
+    let mut ht_e = Tensor::zeros(&[ht_batch, ht_d_in]);
+    let mut ht_rng = Pcg64::seeded(6);
+    for v in ht_e.data_mut() {
+        *v = (ht_rng.next_below(3) as i64 - 1) as f32;
+    }
+    println!(
+        "{:>6} {:>10} {:>12} {:>14} {:>12}",
+        "skew", "weights", "mean/batch", "frames/s", "vs even"
+    );
+    let mut hetero_rows: Vec<Json> = Vec::new();
+    for &skew in &[2u64, 4] {
+        let build = |weights: Vec<u32>| -> anyhow::Result<ProjectorFarm> {
+            // Shard 0: full speed.  Shard 1: `skew`× slower per row.
+            let slow_us = 40 * skew;
+            let devices: Vec<Box<dyn Projector + Send>> = vec![
+                Box::new(Throttled {
+                    inner: Box::new(DigitalProjector::new(ht_medium.clone())),
+                    us_per_row: 40,
+                }),
+                Box::new(Throttled {
+                    inner: Box::new(DigitalProjector::new(ht_medium.clone())),
+                    us_per_row: slow_us,
+                }),
+            ];
+            ProjectorFarm::from_shards_weighted(
+                devices,
+                weights,
+                "farm-hetero-bench",
+                Partition::Batch,
+                Registry::new(),
+                None,
+            )
+        };
+        let mut even_mean = 0.0f64;
+        for (label, weights) in [
+            ("even", vec![1u32, 1]),
+            ("matched", vec![skew as u32, 1]),
+        ] {
+            let mut farm = build(weights.clone())?;
+            farm.project(&ht_e)?; // warm-up
+            let mut bench = Bench::quick();
+            let m = bench.run(&format!("hetero skew={skew} {label}"), || {
+                let _ = farm.project(&ht_e).unwrap();
+            });
+            if label == "even" {
+                even_mean = m.mean_s;
+            }
+            let speedup = even_mean / m.mean_s;
+            println!(
+                "{:>6} {:>10} {:>12} {:>14} {:>12}",
+                skew,
+                format!("{}:{}", weights[0], weights[1]),
+                fmt_s(m.mean_s),
+                fmt_rate(ht_batch as f64 / m.mean_s),
+                format!("{speedup:.2}x"),
+            );
+            let mut row = BTreeMap::new();
+            row.insert("skew".to_string(), Json::Num(skew as f64));
+            row.insert(
+                "weights".to_string(),
+                Json::Str(format!("{}:{}", weights[0], weights[1])),
+            );
+            row.insert("mean_s".to_string(), Json::Num(m.mean_s));
+            row.insert(
+                "frames_per_s".to_string(),
+                Json::Num(ht_batch as f64 / m.mean_s),
+            );
+            row.insert("speedup_vs_even".to_string(), Json::Num(speedup));
+            hetero_rows.push(Json::Obj(row));
+        }
+    }
+    let mut hetero_record = BTreeMap::new();
+    hetero_record.insert("bench".to_string(), Json::Str("e4_hetero_sweep".to_string()));
+    hetero_record.insert("modes".to_string(), Json::Num(ht_modes as f64));
+    hetero_record.insert("d_in".to_string(), Json::Num(ht_d_in as f64));
+    hetero_record.insert("batch".to_string(), Json::Num(ht_batch as f64));
+    hetero_record.insert("results".to_string(), Json::Arr(hetero_rows));
+    println!("{}", Json::Obj(hetero_record).to_string_compact());
 
     // Physical-farm envelope: same frame clock, N× capacity and power.
     println!("\nmodeled physical farm (off-axis paper device × N):");

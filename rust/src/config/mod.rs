@@ -11,6 +11,7 @@ pub mod toml;
 use anyhow::{bail, Context, Result};
 
 use self::toml::TomlValue;
+use crate::coordinator::topology::{DeviceKind, PoolPolicy, Topology};
 
 /// Which feedback path trains the hidden layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,7 +62,7 @@ impl Algo {
 /// its slice of the output modes), `Batch` favours small-mode /
 /// large-batch regimes (each device holds the full medium and exposes a
 /// contiguous row range of the frame sequence).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Partition {
     /// Every shard sees every frame and computes a contiguous slice of
     /// the output modes; shard outputs concatenate along columns.
@@ -96,7 +97,7 @@ impl Partition {
 /// streams (`optics::stream`), the paper's "the medium is physical,
 /// nobody stores it" property at 1e5+ modes.  The two backings are the
 /// same matrix for the same seed, so outputs are bitwise identical.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum MediumBacking {
     /// Dense quadrature tensors held in memory.
     Materialized,
@@ -167,6 +168,16 @@ pub struct TrainConfig {
     /// (dense tensors) or `streamed` (memory-less tile regeneration;
     /// optical algo with the native or digital projector only).
     pub medium: MediumBacking,
+    /// Explicit device topology (`--topology opt:4+dig:2@3`-style
+    /// shorthand, or a `[topology]` TOML section).  `None` = the
+    /// homogeneous topology implied by `projector`/`shards`.  The
+    /// topology's partition/backing/pool are stamped from the config
+    /// knobs at resolve time ([`TrainConfig::projection_topology`]), so
+    /// key order in a config file never matters.
+    pub topology: Option<Topology>,
+    /// Pool policy stamped onto the resolved topology (`[topology]
+    /// pool = "shared"` / `--set topology.pool=shared`).
+    pub topology_pool: PoolPolicy,
 }
 
 impl Default for TrainConfig {
@@ -190,6 +201,8 @@ impl Default for TrainConfig {
             shards: 1,
             partition: Partition::Modes,
             medium: MediumBacking::Materialized,
+            topology: None,
+            topology_pool: PoolPolicy::Owned,
         }
     }
 }
@@ -229,13 +242,108 @@ impl TrainConfig {
                 }
                 self.shards = n as usize;
             }
-            "partition" => self.partition = Partition::parse(value.want_str()?)?,
-            "medium" | "medium_backing" => {
+            "partition" | "topology.partition" => {
+                self.partition = Partition::parse(value.want_str()?)?
+            }
+            "medium" | "medium_backing" | "topology.medium" | "topology.backing" => {
                 self.medium = MediumBacking::parse(value.want_str()?)?
+            }
+            "topology" | "topology.spec" => {
+                self.topology = Some(Topology::parse(value.want_str()?)?)
+            }
+            "topology.pool" => {
+                self.topology_pool = PoolPolicy::parse(value.want_str()?)?
             }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
+    }
+
+    /// Projection-path sanity, shared by the trainer and the CLI: every
+    /// constraint here is a pure function of the config, so `litl
+    /// train` fails fast — before artifacts load — and tests can cover
+    /// the rules without an artifacts directory.
+    pub fn validate_projection(&self) -> Result<()> {
+        // Sharding only exists on the projector path — reject it loudly
+        // elsewhere rather than silently running single-device.
+        anyhow::ensure!(
+            self.shards <= 1 || self.algo == Algo::Optical,
+            "--shards {} only applies to --algo optical (the projection \
+             device); algo '{}' has no projector to shard",
+            self.shards,
+            self.algo.name()
+        );
+        // The streamed backing only exists where a projector device owns
+        // the medium; the digital-DFA artifacts take dense B tensors as
+        // inputs and the HLO projector feeds them to XLA.
+        anyhow::ensure!(
+            self.medium == MediumBacking::Materialized || self.algo == Algo::Optical,
+            "--medium streamed only applies to --algo optical (algo '{}' \
+             passes the dense medium tensors into the AOT artifacts)",
+            self.algo.name()
+        );
+        anyhow::ensure!(
+            self.medium == MediumBacking::Materialized
+                || self.projector != ProjectorKind::OpticalHlo,
+            "projector=hlo does not support --medium streamed (the \
+             opu_project artifact takes the dense medium as an input); \
+             use projector=native or digital"
+        );
+        anyhow::ensure!(
+            self.shards <= 1 || self.projector != ProjectorKind::OpticalHlo,
+            "projector=hlo does not support --shards {} (the AOT artifact \
+             is compiled for one device); use projector=native or digital",
+            self.shards
+        );
+        if self.topology.is_some() {
+            anyhow::ensure!(
+                self.algo == Algo::Optical,
+                "--topology only applies to --algo optical (the projection \
+                 device); algo '{}' has no projector to shard",
+                self.algo.name()
+            );
+            anyhow::ensure!(
+                self.projector != ProjectorKind::OpticalHlo,
+                "projector=hlo cannot drive a device topology (the AOT \
+                 artifact is compiled for one device); use projector=native \
+                 or digital"
+            );
+            anyhow::ensure!(
+                self.shards <= 1,
+                "--topology and --shards {} conflict: the shard count comes \
+                 from the topology",
+                self.shards
+            );
+            // Structural validation of the *resolved* topology (the
+            // stamped partition decides whether explicit mode ranges
+            // are legal).
+            self.projection_topology().validate()?;
+        }
+        Ok(())
+    }
+
+    /// The device topology this config trains through: the explicit
+    /// `[topology]` when given, else the homogeneous equivalent of the
+    /// legacy `projector`/`shards` knobs.  Partition, backing and pool
+    /// policy are stamped from the config in both cases, so the
+    /// resolved topology is a pure function of the whole config.
+    pub fn projection_topology(&self) -> Topology {
+        let base = match &self.topology {
+            Some(t) => t.clone(),
+            None => {
+                let kind = match self.projector {
+                    ProjectorKind::Digital => DeviceKind::Digital,
+                    // The HLO projector never reaches a topology build
+                    // (validate_projection rejects the combination);
+                    // native is the only other optical kind.
+                    _ => DeviceKind::Optical,
+                };
+                Topology::homogeneous(kind, self.shards)
+            }
+        };
+        base.with_partition(self.partition)
+            .with_backing(self.medium)
+            .with_pool(self.topology_pool)
     }
 
     /// Load from a TOML file on top of `self`.
@@ -395,6 +503,109 @@ mod tests {
             let msg = format!("{err:#}");
             assert!(msg.contains(want), "'{body}' → {msg}");
         }
+    }
+
+    #[test]
+    fn topology_kv_and_toml_section_round_trip() {
+        let mut c = TrainConfig::default();
+        assert!(c.topology.is_none());
+        // The full shorthand works bare through --set (':', '@' and '+'
+        // are bare-string chars in the TOML-scalar subset) and quoted.
+        c.set_kv("topology=opt:4").unwrap();
+        assert_eq!(c.topology.as_ref().unwrap().shorthand(), "opt:4");
+        c.set_kv("topology=opt:2@3+dig:1").unwrap();
+        assert_eq!(c.topology.as_ref().unwrap().shorthand(), "opt:2@3+dig:1");
+        c.set_kv("topology=\"hetero:opt:2@3+dig:1\"").unwrap();
+        assert_eq!(c.topology.as_ref().unwrap().shorthand(), "opt:2@3+dig:1");
+        assert!(c.set_kv("topology=laser:4").is_err());
+        assert!(c.set_kv("topology=\"opt:1@0\"").is_err(), "zero weight");
+
+        // `[topology]` section: the parser flattens it to topology.* keys.
+        let path = std::env::temp_dir().join("litl_cfg_topology_test.toml");
+        std::fs::write(
+            &path,
+            "[topology]\nspec = \"opt:2+dig:1\"\npartition = \"batch\"\n\
+             medium = \"materialized\"\npool = \"shared\"\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.topology.as_ref().unwrap().shorthand(), "opt:2+dig:1");
+        assert_eq!(c.partition, Partition::Batch);
+        assert_eq!(c.topology_pool, PoolPolicy::Shared);
+        let resolved = c.projection_topology();
+        assert_eq!(resolved.partition, Partition::Batch);
+        assert_eq!(resolved.pool, PoolPolicy::Shared);
+        assert_eq!(resolved.shard_count(), 3);
+        assert_eq!(resolved.weights(), vec![1, 1, 1]);
+        // Resolution is stable: shorthand → parse → same resolved value.
+        let reparsed = Topology::parse(&resolved.shorthand())
+            .unwrap()
+            .with_partition(c.partition)
+            .with_backing(c.medium)
+            .with_pool(c.topology_pool);
+        assert_eq!(reparsed, resolved);
+        assert_eq!(reparsed.stable_hash(), resolved.stable_hash());
+    }
+
+    #[test]
+    fn projection_topology_defaults_to_the_legacy_knobs() {
+        let mut c = TrainConfig::default();
+        c.set_kv("shards=4").unwrap();
+        c.set_kv("partition=batch").unwrap();
+        let t = c.projection_topology();
+        assert_eq!(t.shard_count(), 4);
+        assert_eq!(t.partition, Partition::Batch);
+        assert_eq!(t.weights(), vec![1; 4]);
+        assert!(t.is_homogeneous());
+        c.set_kv("projector=digital").unwrap();
+        assert_eq!(
+            c.projection_topology().kind_tag(),
+            "farm-digital",
+            "projector knob picks the device kind"
+        );
+    }
+
+    #[test]
+    fn validate_projection_rejects_bad_combinations() {
+        // --shards off the optical path.
+        let mut c = TrainConfig::default();
+        c.set_kv("algo=bp").unwrap();
+        c.set_kv("shards=2").unwrap();
+        assert!(c.validate_projection().is_err());
+
+        // streamed + hlo: the opu_project artifact needs dense tensors.
+        let mut c = TrainConfig::default();
+        c.set_kv("projector=hlo").unwrap();
+        c.set_kv("medium=streamed").unwrap();
+        let err = c.validate_projection().unwrap_err().to_string();
+        assert!(err.contains("streamed"), "{err}");
+
+        // topology + hlo: the artifact is compiled for one device.
+        let mut c = TrainConfig::default();
+        c.set_kv("projector=hlo").unwrap();
+        c.set_kv("topology=opt:2").unwrap();
+        let err = c.validate_projection().unwrap_err().to_string();
+        assert!(err.contains("topology"), "{err}");
+
+        // topology + --shards conflict.
+        let mut c = TrainConfig::default();
+        c.set_kv("topology=opt:2").unwrap();
+        c.set_kv("shards=2").unwrap();
+        assert!(c.validate_projection().is_err());
+
+        // topology off the optical path.
+        let mut c = TrainConfig::default();
+        c.set_kv("algo=dfa-float").unwrap();
+        c.set_kv("topology=dig:2").unwrap();
+        assert!(c.validate_projection().is_err());
+
+        // A valid heterogeneous weighted topology passes.
+        let mut c = TrainConfig::default();
+        c.set_kv("topology=\"opt:2@2+dig:1\"").unwrap();
+        c.set_kv("partition=batch").unwrap();
+        c.validate_projection().unwrap();
+        assert_eq!(c.projection_topology().weights(), vec![2, 2, 1]);
     }
 
     #[test]

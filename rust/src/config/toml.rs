@@ -83,8 +83,10 @@ pub fn parse_scalar(text: &str) -> Result<TomlValue> {
     if let Ok(f) = t.parse::<f64>() {
         return Ok(TomlValue::Float(f));
     }
-    // CLI ergonomics: bare identifier = string.
-    if t.chars().all(|c| c.is_alphanumeric() || "-_./:".contains(c)) {
+    // CLI ergonomics: bare identifier = string.  '@' and '+' admit the
+    // topology shorthand (`opt:2@3+dig:1`) unquoted; anything numeric
+    // (incl. `1e+5`) was already consumed by the parses above.
+    if t.chars().all(|c| c.is_alphanumeric() || "-_./:@+".contains(c)) {
         return Ok(TomlValue::Str(t.to_string()));
     }
     bail!("cannot parse value: {t}")

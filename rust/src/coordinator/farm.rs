@@ -28,6 +28,19 @@
 //!   batch-axis sharding, for small-mode / large-batch regimes); shard
 //!   outputs concatenate along rows.
 //!
+//! Construction now goes through the declarative
+//! [`Topology`](super::topology::Topology) descriptor — the legacy
+//! constructor matrix below (`optical`, `digital_partitioned_backed`,
+//! …) survives as thin `#[deprecated]` shims over it.  Note the
+//! `&TransmissionMatrix` shims clone the dense matrix into an owned
+//! [`Medium::Dense`] before windowing (a transient full-matrix copy the
+//! old constructors avoided) — new code should hold a [`Medium`] and
+//! call `Topology::build_*` directly.  A farm carries
+//! per-shard **service weights** ([`ProjectorFarm::weights`]): under the
+//! batch partition rows split proportionally to them
+//! ([`crate::util::weighted_widths`]), and equal weights reproduce the
+//! historical even split bit for bit.
+//!
 //! Invariants (tested here and in `rust/tests/farm_parity.rs` /
 //! `rust/tests/service_schedule.rs`):
 //! * `shards == 1` is **bit-identical** to the plain single-device path
@@ -54,10 +67,12 @@ use crate::exec::ThreadPool;
 use crate::metrics::{Counter, Registry};
 use crate::optics::medium::TransmissionMatrix;
 use crate::optics::stream::Medium;
-use crate::optics::{OpuParams, NOISE_STREAM_BASE};
+use crate::optics::OpuParams;
 use crate::tensor::Tensor;
+use crate::util::weighted_widths;
 
-use super::projector::{DigitalProjector, NativeOpticalProjector, Projector};
+use super::projector::Projector;
+use super::topology::{DeviceKind, Topology};
 
 /// Metric name for shard batch failures (panic or device error).
 pub const SHARD_FAILURES: &str = "farm_shard_failures";
@@ -69,6 +84,11 @@ pub struct ProjectorFarm {
     shards: Vec<Box<dyn Projector + Send>>,
     mode_counts: Vec<usize>,
     modes_total: usize,
+    /// Relative service weights, shard order.  The batch partition
+    /// splits rows proportionally to these
+    /// ([`crate::util::weighted_widths`]); all-equal weights reproduce
+    /// the historical even split bit for bit.
+    weights: Vec<u32>,
     pool: Arc<ThreadPool>,
     kind: &'static str,
     partition: Partition,
@@ -77,15 +97,6 @@ pub struct ProjectorFarm {
     slot_counts: Vec<u64>,
     shard_failures: Counter,
     batches: Counter,
-}
-
-/// Contiguous balanced row split — [`crate::util::balanced_widths`],
-/// the same arithmetic as `TransmissionMatrix::split_modes` and the
-/// streamed-window split.  Shared by the farm's batch partition and the
-/// service's frame-slot scheduler — the batch-parity contract requires
-/// both to carve identical ranges.
-pub(crate) fn split_rows(rows: usize, shards: usize) -> Vec<usize> {
-    crate::util::balanced_widths(rows, shards)
 }
 
 /// Concatenate per-part quadrature pairs along the mode axis: part `i`
@@ -136,25 +147,6 @@ pub(crate) fn concat_row_parts(
     (p1, p2)
 }
 
-/// Streamed replicas under the batch partition each regenerate the full
-/// mode width — total generation work scales with the shard count.  Say
-/// so once at farm construction rather than letting a 1e5+-mode run
-/// discover it from the wall clock.
-fn warn_streamed_batch_cost(medium: &Medium, shards: usize, partition: Partition) {
-    if shards > 1
-        && partition == Partition::Batch
-        && matches!(medium, Medium::Streamed(_))
-    {
-        log::warn!(
-            "streamed medium × batch partition: each of the {shards} replicas \
-             regenerates all {} modes per projection (~{shards}× the modes \
-             partition's generation work); prefer --partition modes at large \
-             mode counts",
-            medium.modes()
-        );
-    }
-}
-
 fn default_pool(shards: usize, registry: &Registry) -> Arc<ThreadPool> {
     let cores = crate::exec::host_cores();
     Arc::new(ThreadPool::with_registry(
@@ -168,19 +160,26 @@ impl ProjectorFarm {
     /// Optical farm: `shards` simulated OPUs over contiguous mode ranges
     /// of `medium`.  Shard `i` draws camera noise from PCG stream
     /// `NOISE_STREAM_BASE + i` of `noise_seed`, so `shards=1` reproduces
-    /// the standalone [`NativeOpticalProjector`] bit-for-bit.
+    /// the standalone `NativeOpticalProjector` bit-for-bit.
+    #[deprecated(note = "use Topology::homogeneous(..).build_farm(..)")]
     pub fn optical(
         params: OpuParams,
         medium: &TransmissionMatrix,
         noise_seed: u64,
         shards: usize,
     ) -> Result<Self> {
-        Self::optical_with(params, medium, noise_seed, shards, Registry::new())
+        Topology::homogeneous(DeviceKind::Optical, shards).build_farm(
+            params,
+            &Medium::Dense(medium.clone()),
+            noise_seed,
+            Registry::new(),
+        )
     }
 
     /// [`ProjectorFarm::optical`] with an explicit metrics registry (the
     /// trainer passes its own so shard failures land next to the
     /// training counters).
+    #[deprecated(note = "use Topology::homogeneous(..).build_farm(..)")]
     pub fn optical_with(
         params: OpuParams,
         medium: &TransmissionMatrix,
@@ -188,21 +187,17 @@ impl ProjectorFarm {
         shards: usize,
         registry: Registry,
     ) -> Result<Self> {
-        let devices = Self::optical_shard_devices(
+        Topology::homogeneous(DeviceKind::Optical, shards).build_farm(
             params,
-            medium,
+            &Medium::Dense(medium.clone()),
             noise_seed,
-            shards,
-            Partition::Modes,
-        )?;
-        Self::from_shards(devices, "farm-optical", registry)
+            registry,
+        )
     }
 
     /// Optical farm under either [`Partition`]: mode slices (the classic
-    /// farm) or full-medium replicas serving contiguous row ranges.  The
-    /// replicas draw camera noise from the same per-shard streams as the
-    /// mode farm, so `shards=1` stays bit-identical to the single device
-    /// under both policies.
+    /// farm) or full-medium replicas serving contiguous row ranges.
+    #[deprecated(note = "use Topology::with_partition(..).build_farm(..)")]
     pub fn optical_partitioned(
         params: OpuParams,
         medium: &TransmissionMatrix,
@@ -211,14 +206,14 @@ impl ProjectorFarm {
         partition: Partition,
         registry: Registry,
     ) -> Result<Self> {
-        let devices =
-            Self::optical_shard_devices(params, medium, noise_seed, shards, partition)?;
-        Self::from_shards_partitioned(devices, "farm-optical", partition, registry)
+        Topology::homogeneous(DeviceKind::Optical, shards)
+            .with_partition(partition)
+            .build_farm(params, &Medium::Dense(medium.clone()), noise_seed, registry)
     }
 
     /// [`ProjectorFarm::optical_partitioned`] over either [`Medium`]
-    /// backing — `--medium streamed` composes with both `--partition`
-    /// axes through here.
+    /// backing.
+    #[deprecated(note = "use Topology::with_backing_of(..).build_farm(..)")]
     pub fn optical_partitioned_backed(
         params: OpuParams,
         medium: &Medium,
@@ -227,31 +222,30 @@ impl ProjectorFarm {
         partition: Partition,
         registry: Registry,
     ) -> Result<Self> {
-        let devices = Self::optical_shard_devices_backed(
-            params, medium, noise_seed, shards, partition,
-        )?;
-        Self::from_shards_partitioned(devices, "farm-optical", partition, registry)
+        Topology::homogeneous(DeviceKind::Optical, shards)
+            .with_partition(partition)
+            .with_backing_of(medium)
+            .build_farm(params, medium, noise_seed, registry)
     }
 
     /// [`ProjectorFarm::digital_partitioned`] over either [`Medium`]
     /// backing.
+    #[deprecated(note = "use Topology::with_backing_of(..).build_farm(..)")]
     pub fn digital_partitioned_backed(
         medium: &Medium,
         shards: usize,
         partition: Partition,
         registry: Registry,
     ) -> Result<Self> {
-        let devices = Self::digital_shard_devices_backed(medium, shards, partition)?;
-        Self::from_shards_partitioned(devices, "farm-digital", partition, registry)
+        Topology::homogeneous(DeviceKind::Digital, shards)
+            .with_partition(partition)
+            .with_backing_of(medium)
+            .build_farm(OpuParams::default(), medium, 0, registry)
     }
 
     /// Build just the shard devices for a partitioned optical projector —
-    /// no pool, no farm state.  This is what
-    /// [`ShardedProjectionService::start`] wants: it gives every device
-    /// its own worker thread, so the farm's execution machinery would be
-    /// dead weight.
-    ///
-    /// [`ShardedProjectionService::start`]: super::service::ShardedProjectionService::start
+    /// no pool, no farm state.
+    #[deprecated(note = "use Topology::build_devices(..)")]
     pub fn optical_shard_devices(
         params: OpuParams,
         medium: &TransmissionMatrix,
@@ -259,26 +253,14 @@ impl ProjectorFarm {
         shards: usize,
         partition: Partition,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
-        Self::optical_shard_devices_backed(
-            params,
-            &Medium::Dense(medium.clone()),
-            noise_seed,
-            shards,
-            partition,
-        )
+        Topology::homogeneous(DeviceKind::Optical, shards)
+            .with_partition(partition)
+            .build_devices(params, &Medium::Dense(medium.clone()), noise_seed)
     }
 
     /// [`ProjectorFarm::optical_shard_devices`] over either [`Medium`]
-    /// backing.  Streamed shards window the same seed's mode axis
-    /// (modes) or replicate the full streamed window (batch) — identical
-    /// shard ranges and noise streams as the dense farm, so the whole
-    /// composition agrees bit for bit.
-    ///
-    /// Cost note: under the **batch** partition every streamed replica
-    /// regenerates tiles for the *full* mode width of its row range, so
-    /// total generation work is ~`shards ×` the modes partition's (which
-    /// windows the axis and keeps generation constant).  Correct either
-    /// way; a warning is logged so 1e5+-mode runs don't pay it blindly.
+    /// backing.
+    #[deprecated(note = "use Topology::with_backing_of(..).build_devices(..)")]
     pub fn optical_shard_devices_backed(
         params: OpuParams,
         medium: &Medium,
@@ -286,124 +268,92 @@ impl ProjectorFarm {
         shards: usize,
         partition: Partition,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
-        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
-        warn_streamed_batch_cost(medium, shards, partition);
-        Ok(match partition {
-            Partition::Modes => {
-                anyhow::ensure!(
-                    shards <= medium.modes(),
-                    "cannot shard {} modes across {shards} devices",
-                    medium.modes()
-                );
-                medium
-                    .split_modes(shards)
-                    .into_iter()
-                    .enumerate()
-                    .map(|(i, slice)| {
-                        Box::new(NativeOpticalProjector::with_medium_stream(
-                            params,
-                            slice,
-                            noise_seed,
-                            NOISE_STREAM_BASE + i as u64,
-                        )) as Box<dyn Projector + Send>
-                    })
-                    .collect()
-            }
-            Partition::Batch => (0..shards)
-                .map(|i| {
-                    Box::new(NativeOpticalProjector::with_medium_stream(
-                        params,
-                        medium.clone(),
-                        noise_seed,
-                        NOISE_STREAM_BASE + i as u64,
-                    )) as Box<dyn Projector + Send>
-                })
-                .collect(),
-        })
+        Topology::homogeneous(DeviceKind::Optical, shards)
+            .with_partition(partition)
+            .with_backing_of(medium)
+            .build_devices(params, medium, noise_seed)
     }
 
     /// Digital farm under either [`Partition`].  Exactly equal to the
     /// single device at any shard count for both policies: column dot
     /// products are computed identically (modes), and the host matmul is
     /// row-local (batch).
+    #[deprecated(note = "use Topology::with_partition(..).build_farm(..)")]
     pub fn digital_partitioned(
         medium: &TransmissionMatrix,
         shards: usize,
         partition: Partition,
         registry: Registry,
     ) -> Result<Self> {
-        let devices = Self::digital_shard_devices(medium, shards, partition)?;
-        Self::from_shards_partitioned(devices, "farm-digital", partition, registry)
+        Topology::homogeneous(DeviceKind::Digital, shards)
+            .with_partition(partition)
+            .build_farm(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                0,
+                registry,
+            )
     }
 
     /// [`ProjectorFarm::optical_shard_devices`] for the digital
     /// comparator.
+    #[deprecated(note = "use Topology::build_devices(..)")]
     pub fn digital_shard_devices(
         medium: &TransmissionMatrix,
         shards: usize,
         partition: Partition,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
-        Self::digital_shard_devices_backed(&Medium::Dense(medium.clone()), shards, partition)
+        Topology::homogeneous(DeviceKind::Digital, shards)
+            .with_partition(partition)
+            .build_devices(OpuParams::default(), &Medium::Dense(medium.clone()), 0)
     }
 
     /// [`ProjectorFarm::digital_shard_devices`] over either [`Medium`]
-    /// backing.  Same batch-partition generation-cost note as
-    /// [`ProjectorFarm::optical_shard_devices_backed`].
+    /// backing.
+    #[deprecated(note = "use Topology::with_backing_of(..).build_devices(..)")]
     pub fn digital_shard_devices_backed(
         medium: &Medium,
         shards: usize,
         partition: Partition,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
-        anyhow::ensure!(shards >= 1, "farm needs at least one shard");
-        warn_streamed_batch_cost(medium, shards, partition);
-        Ok(match partition {
-            Partition::Modes => {
-                anyhow::ensure!(
-                    shards <= medium.modes(),
-                    "cannot shard {} modes across {shards} devices",
-                    medium.modes()
-                );
-                medium
-                    .split_modes(shards)
-                    .into_iter()
-                    .map(|slice| {
-                        Box::new(DigitalProjector::with_medium(slice))
-                            as Box<dyn Projector + Send>
-                    })
-                    .collect()
-            }
-            Partition::Batch => (0..shards)
-                .map(|_| {
-                    Box::new(DigitalProjector::with_medium(medium.clone()))
-                        as Box<dyn Projector + Send>
-                })
-                .collect(),
-        })
+        Topology::homogeneous(DeviceKind::Digital, shards)
+            .with_partition(partition)
+            .with_backing_of(medium)
+            .build_devices(OpuParams::default(), medium, 0)
     }
 
     /// Digital farm: the silicon comparator sharded the same way.
-    /// Exactly equal (not just within tolerance) to a single
-    /// [`DigitalProjector`] over the full medium, because each output
-    /// column's dot product is computed identically either way.
+    #[deprecated(note = "use Topology::homogeneous(..).build_farm(..)")]
     pub fn digital(medium: &TransmissionMatrix, shards: usize) -> Result<Self> {
-        Self::digital_with(medium, shards, Registry::new())
+        Topology::homogeneous(DeviceKind::Digital, shards).build_farm(
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            0,
+            Registry::new(),
+        )
     }
 
     /// [`ProjectorFarm::digital`] with an explicit metrics registry.
+    #[deprecated(note = "use Topology::homogeneous(..).build_farm(..)")]
     pub fn digital_with(
         medium: &TransmissionMatrix,
         shards: usize,
         registry: Registry,
     ) -> Result<Self> {
-        let devices =
-            Self::digital_shard_devices(medium, shards, Partition::Modes)?;
-        Self::from_shards(devices, "farm-digital", registry)
+        Topology::homogeneous(DeviceKind::Digital, shards).build_farm(
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            0,
+            registry,
+        )
     }
 
     /// Assemble a mode-partitioned farm from pre-built shard devices
     /// (mode ranges are taken from each device's `modes()`; outputs
     /// concatenate in shard order).  The execution pool is sized to the
-    /// shard count.
+    /// shard count.  This is the *custom-device* assembly —
+    /// declaratively describable farms should go through
+    /// [`Topology`](super::topology::Topology) instead.
     pub fn from_shards(
         shards: Vec<Box<dyn Projector + Send>>,
         kind: &'static str,
@@ -421,32 +371,67 @@ impl ProjectorFarm {
         partition: Partition,
         registry: Registry,
     ) -> Result<Self> {
-        let pool = default_pool(shards.len(), &registry);
-        Self::assemble(shards, kind, partition, registry, pool)
+        let weights = vec![1u32; shards.len()];
+        Self::from_shards_weighted(shards, weights, kind, partition, registry, None)
     }
 
-    /// [`ProjectorFarm::from_shards`] over a caller-supplied pool, so
-    /// several farms/components in one process can share worker threads.
-    /// Note: shard panics are counted on the *supplied pool's* registry
-    /// (wherever it was built with [`ThreadPool::with_registry`]), while
+    /// The one full-fidelity assembly everything else reduces to:
+    /// pre-built shard devices + per-shard service weights + partition +
+    /// an optional caller-supplied pool (`None` = the farm owns a pool
+    /// sized to its shard count).  Note: with a supplied pool, shard
+    /// panics are counted on *that pool's* registry (wherever it was
+    /// built with [`ThreadPool::with_registry`]), while
     /// [`SHARD_FAILURES`]/[`FARM_BATCHES`] land on `registry`.
+    pub fn from_shards_weighted(
+        shards: Vec<Box<dyn Projector + Send>>,
+        weights: Vec<u32>,
+        kind: &'static str,
+        partition: Partition,
+        registry: Registry,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        let pool = pool.unwrap_or_else(|| default_pool(shards.len(), &registry));
+        Self::assemble(shards, weights, kind, partition, registry, pool)
+    }
+
+    /// [`ProjectorFarm::from_shards`] over a caller-supplied pool.
+    #[deprecated(note = "use from_shards_weighted(.., Some(pool))")]
     pub fn from_shards_pooled(
         shards: Vec<Box<dyn Projector + Send>>,
         kind: &'static str,
         registry: Registry,
         pool: Arc<ThreadPool>,
     ) -> Result<Self> {
-        Self::assemble(shards, kind, Partition::Modes, registry, pool)
+        let weights = vec![1u32; shards.len()];
+        Self::from_shards_weighted(
+            shards,
+            weights,
+            kind,
+            Partition::Modes,
+            registry,
+            Some(pool),
+        )
     }
 
     fn assemble(
         shards: Vec<Box<dyn Projector + Send>>,
+        weights: Vec<u32>,
         kind: &'static str,
         partition: Partition,
         registry: Registry,
         pool: Arc<ThreadPool>,
     ) -> Result<Self> {
         anyhow::ensure!(!shards.is_empty(), "farm needs at least one shard");
+        anyhow::ensure!(
+            weights.len() == shards.len(),
+            "{} weights for {} shards",
+            weights.len(),
+            shards.len()
+        );
+        anyhow::ensure!(
+            weights.iter().all(|&w| w >= 1),
+            "zero-weight shard in {weights:?} (weights must be >= 1)"
+        );
         let mode_counts: Vec<usize> = shards.iter().map(|s| s.modes()).collect();
         let modes_total = match partition {
             Partition::Modes => mode_counts.iter().sum(),
@@ -464,6 +449,7 @@ impl ProjectorFarm {
             shards,
             mode_counts,
             modes_total,
+            weights,
             pool,
             kind,
             partition,
@@ -481,6 +467,16 @@ impl ProjectorFarm {
     /// Mode count of each shard, in concatenation order.
     pub fn mode_counts(&self) -> &[usize] {
         &self.mode_counts
+    }
+
+    /// Relative service weight of each shard, in shard order.  The
+    /// batch partition splits rows proportionally to these; the
+    /// shard-aware service inherits them through
+    /// [`ShardedProjectionService::over_farm`].
+    ///
+    /// [`ShardedProjectionService::over_farm`]: super::service::ShardedProjectionService::over_farm
+    pub fn weights(&self) -> &[u32] {
+        &self.weights
     }
 
     /// The partition policy this farm executes.
@@ -607,15 +603,17 @@ impl ProjectorFarm {
     }
 
     /// Batch partition: shard `i` (a full-medium replica) processes the
-    /// `i`-th contiguous row range; gather concatenates along rows.
-    /// Shards with an empty range are skipped entirely — their noise
-    /// streams, clocks and slot accounts stay untouched.
+    /// `i`-th contiguous row range — sized proportionally to the shard
+    /// weights ([`crate::util::weighted_widths`]; equal weights are the
+    /// historical even split, bit for bit); gather concatenates along
+    /// rows.  Shards with an empty range are skipped entirely — their
+    /// noise streams, clocks and slot accounts stay untouched.
     fn project_batch(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
         let b = frames.rows();
         let n = self.shards.len();
         let d_in = frames.cols();
         let modes = self.modes_total;
-        let counts = split_rows(b, n);
+        let counts = weighted_widths(b, &self.weights);
         let mut slices: Vec<Option<Tensor>> = Vec::with_capacity(n);
         let mut row0 = 0usize;
         for &c in &counts {
@@ -693,6 +691,7 @@ impl Projector for ProjectorFarm {
 
 #[cfg(test)]
 mod tests {
+    use super::super::projector::{DigitalProjector, NativeOpticalProjector};
     use super::*;
     use crate::tensor::matmul;
     use crate::util::rng::Pcg64;
@@ -713,12 +712,35 @@ mod tests {
         }
     }
 
+    fn optical_farm(
+        params: OpuParams,
+        medium: &TransmissionMatrix,
+        noise_seed: u64,
+        shards: usize,
+    ) -> Result<ProjectorFarm> {
+        Topology::homogeneous(DeviceKind::Optical, shards).build_farm(
+            params,
+            &Medium::Dense(medium.clone()),
+            noise_seed,
+            Registry::new(),
+        )
+    }
+
+    fn digital_farm(medium: &TransmissionMatrix, shards: usize) -> Result<ProjectorFarm> {
+        Topology::homogeneous(DeviceKind::Digital, shards).build_farm(
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            0,
+            Registry::new(),
+        )
+    }
+
     #[test]
     fn one_shard_optical_is_bit_identical_to_single_device() {
         let medium = TransmissionMatrix::sample(5, 10, 32);
         let mut single =
             NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 77);
-        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 77, 1).unwrap();
+        let mut farm = optical_farm(OpuParams::default(), &medium, 77, 1).unwrap();
         let e = tern(6, 10, 1);
         let (s1, s2) = single.project(&e).unwrap();
         let (f1, f2) = farm.project(&e).unwrap();
@@ -735,11 +757,56 @@ mod tests {
         let want1 = matmul(&e, &medium.b_re);
         let want2 = matmul(&e, &medium.b_im);
         for shards in [2usize, 4, 7] {
-            let mut farm = ProjectorFarm::digital(&medium, shards).unwrap();
+            let mut farm = digital_farm(&medium, shards).unwrap();
             let (p1, p2) = farm.project(&e).unwrap();
             assert_eq!(p1, want1, "{shards} shards");
             assert_eq!(p2, want2, "{shards} shards");
         }
+    }
+
+    /// Every legacy constructor is a shim over `Topology::build_farm` —
+    /// pin that the shims still build the *same* farm, bit for bit
+    /// (noisy optics included: same windows, same noise streams).
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_shims_match_their_topologies_bitwise() {
+        let medium = TransmissionMatrix::sample(51, 10, 36);
+        let e = tern(7, 10, 6);
+        let mut legacy =
+            ProjectorFarm::optical(OpuParams::default(), &medium, 13, 3).unwrap();
+        let mut topo = optical_farm(OpuParams::default(), &medium, 13, 3).unwrap();
+        assert_eq!(legacy.project(&e).unwrap(), topo.project(&e).unwrap());
+
+        for partition in [Partition::Modes, Partition::Batch] {
+            let mut legacy = ProjectorFarm::optical_partitioned(
+                OpuParams::default(),
+                &medium,
+                13,
+                4,
+                partition,
+                Registry::new(),
+            )
+            .unwrap();
+            let mut topo = Topology::homogeneous(DeviceKind::Optical, 4)
+                .with_partition(partition)
+                .build_farm(
+                    OpuParams::default(),
+                    &Medium::Dense(medium.clone()),
+                    13,
+                    Registry::new(),
+                )
+                .unwrap();
+            assert_eq!(
+                legacy.project(&e).unwrap(),
+                topo.project(&e).unwrap(),
+                "{partition:?}"
+            );
+            assert_eq!(legacy.weights(), topo.weights());
+        }
+
+        let mut legacy = ProjectorFarm::digital(&medium, 5).unwrap();
+        let mut topo = digital_farm(&medium, 5).unwrap();
+        assert_eq!(legacy.project(&e).unwrap(), topo.project(&e).unwrap());
     }
 
     #[test]
@@ -749,7 +816,7 @@ mod tests {
         let mut single = NativeOpticalProjector::new(noiseless(), medium.clone(), 5);
         let (want1, want2) = single.project(&e).unwrap();
         for shards in [2usize, 4, 7] {
-            let mut farm = ProjectorFarm::optical(noiseless(), &medium, 5, shards).unwrap();
+            let mut farm = optical_farm(noiseless(), &medium, 5, shards).unwrap();
             let (p1, p2) = farm.project(&e).unwrap();
             // Noise off → the physics is deterministic and column-local,
             // so sharding cannot change any output mode.
@@ -761,7 +828,7 @@ mod tests {
     #[test]
     fn accounting_sums_across_shards() {
         let medium = TransmissionMatrix::sample(8, 10, 30);
-        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 9, 3).unwrap();
+        let mut farm = optical_farm(OpuParams::default(), &medium, 9, 3).unwrap();
         let e = tern(12, 10, 4);
         farm.project(&e).unwrap();
         // Each of the 3 virtual devices exposes 12 frames at 1.5 kHz.
@@ -781,7 +848,7 @@ mod tests {
         let medium = TransmissionMatrix::sample(9, 10, 24);
         let e = tern(4, 10, 5);
         let run = |seed: u64| {
-            let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, seed, 4).unwrap();
+            let mut farm = optical_farm(OpuParams::default(), &medium, seed, 4).unwrap();
             farm.project(&e).unwrap().0
         };
         assert_eq!(run(11), run(11), "same seed, same result");
@@ -861,16 +928,16 @@ mod tests {
     #[test]
     fn rejects_more_shards_than_modes() {
         let medium = TransmissionMatrix::sample(1, 10, 4);
-        assert!(ProjectorFarm::optical(OpuParams::default(), &medium, 1, 5).is_err());
-        assert!(ProjectorFarm::digital(&medium, 0).is_err());
+        assert!(optical_farm(OpuParams::default(), &medium, 1, 5).is_err());
+        assert!(digital_farm(&medium, 0).is_err());
     }
 
     #[test]
     fn requires_ternary_follows_the_shards() {
         let medium = TransmissionMatrix::sample(2, 10, 16);
-        let optical = ProjectorFarm::optical(OpuParams::default(), &medium, 1, 2).unwrap();
+        let optical = optical_farm(OpuParams::default(), &medium, 1, 2).unwrap();
         assert!(optical.requires_ternary());
-        let digital = ProjectorFarm::digital(&medium, 2).unwrap();
+        let digital = digital_farm(&medium, 2).unwrap();
         assert!(!digital.requires_ternary());
     }
 
@@ -880,13 +947,15 @@ mod tests {
         let want = |e: &Tensor| (matmul(e, &medium.b_re), matmul(e, &medium.b_im));
         // Includes b < shards (empty ranges on the tail shards).
         for (shards, b) in [(1usize, 5usize), (2, 5), (4, 9), (7, 3)] {
-            let mut farm = ProjectorFarm::digital_partitioned(
-                &medium,
-                shards,
-                Partition::Batch,
-                Registry::new(),
-            )
-            .unwrap();
+            let mut farm = Topology::homogeneous(DeviceKind::Digital, shards)
+                .with_partition(Partition::Batch)
+                .build_farm(
+                    OpuParams::default(),
+                    &Medium::Dense(medium.clone()),
+                    0,
+                    Registry::new(),
+                )
+                .unwrap();
             assert_eq!(farm.partition(), Partition::Batch);
             assert_eq!(farm.modes(), 24);
             let e = tern(b, 10, 40 + shards as u64);
@@ -904,15 +973,15 @@ mod tests {
         let medium = TransmissionMatrix::sample(13, 10, 20);
         let mut single =
             NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 55);
-        let mut farm = ProjectorFarm::optical_partitioned(
-            OpuParams::default(),
-            &medium,
-            55,
-            1,
-            Partition::Batch,
-            Registry::new(),
-        )
-        .unwrap();
+        let mut farm = Topology::homogeneous(DeviceKind::Optical, 1)
+            .with_partition(Partition::Batch)
+            .build_farm(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                55,
+                Registry::new(),
+            )
+            .unwrap();
         for step in 0..3 {
             let e = tern(4, 10, 200 + step);
             let (s1, s2) = single.project(&e).unwrap();
@@ -925,15 +994,15 @@ mod tests {
     #[test]
     fn batch_partition_slot_accounting_is_per_row_range() {
         let medium = TransmissionMatrix::sample(14, 10, 16);
-        let mut farm = ProjectorFarm::optical_partitioned(
-            OpuParams::default(),
-            &medium,
-            3,
-            4,
-            Partition::Batch,
-            Registry::new(),
-        )
-        .unwrap();
+        let mut farm = Topology::homogeneous(DeviceKind::Optical, 4)
+            .with_partition(Partition::Batch)
+            .build_farm(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                3,
+                Registry::new(),
+            )
+            .unwrap();
         farm.project(&tern(10, 10, 1)).unwrap();
         // 10 rows over 4 shards: 3,3,2,2 — slots sum to the batch.
         assert_eq!(farm.shard_slots(), &[3, 3, 2, 2]);
@@ -945,9 +1014,34 @@ mod tests {
     }
 
     #[test]
+    fn weighted_batch_partition_splits_rows_proportionally() {
+        // A 3:1 weighted digital pair: 8 rows split 6/2, and the result
+        // is still exactly the single-device projection (the host matmul
+        // is row-local, so the split cannot change a bit).
+        let medium = TransmissionMatrix::sample(52, 10, 16);
+        let mut topo = Topology::homogeneous(DeviceKind::Digital, 2)
+            .with_partition(Partition::Batch);
+        topo.shards[0].weight = 3;
+        let mut farm = topo
+            .build_farm(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                0,
+                Registry::new(),
+            )
+            .unwrap();
+        assert_eq!(farm.weights(), &[3, 1]);
+        let e = tern(8, 10, 7);
+        let (p1, p2) = farm.project(&e).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re));
+        assert_eq!(p2, matmul(&e, &medium.b_im));
+        assert_eq!(farm.shard_slots(), &[6, 2]);
+    }
+
+    #[test]
     fn modes_partition_slot_accounting_charges_every_shard() {
         let medium = TransmissionMatrix::sample(15, 10, 30);
-        let mut farm = ProjectorFarm::digital(&medium, 3).unwrap();
+        let mut farm = digital_farm(&medium, 3).unwrap();
         farm.project(&tern(6, 10, 2)).unwrap();
         farm.project(&tern(2, 10, 3)).unwrap();
         assert_eq!(farm.shard_slots(), &[8, 8, 8]);
@@ -956,7 +1050,7 @@ mod tests {
     #[test]
     fn project_on_runs_one_shard_and_charges_it_only() {
         let medium = TransmissionMatrix::sample(16, 10, 30);
-        let mut farm = ProjectorFarm::digital(&medium, 3).unwrap();
+        let mut farm = digital_farm(&medium, 3).unwrap();
         let e = tern(5, 10, 4);
         let slices = medium.split_modes(3);
         let (p1, p2) = farm.project_on(1, &e).unwrap();
@@ -969,7 +1063,7 @@ mod tests {
     #[test]
     fn into_shards_hands_out_devices_in_order() {
         let medium = TransmissionMatrix::sample(17, 10, 30);
-        let farm = ProjectorFarm::digital(&medium, 3).unwrap();
+        let farm = digital_farm(&medium, 3).unwrap();
         let counts: Vec<usize> = farm.mode_counts().to_vec();
         let devices = farm.into_shards();
         assert_eq!(devices.len(), 3);

@@ -8,6 +8,14 @@
 //!
 //! * [`projector`] — the device abstraction: optical (native physics or
 //!   HLO twin) and digital (exact) projectors behind one trait.
+//! * [`topology`] — the declarative device graph: one validated
+//!   [`topology::Topology`] descriptor (shard specs with device kind,
+//!   service weight, optional mode range and noise stream; partition
+//!   axis; medium backing; pool policy) replaces the farm's legacy
+//!   constructor matrix.  `build_devices`/`build_farm`/
+//!   `build_projector`/`build_service` are the one construction path;
+//!   heterogeneous (mixed optical/digital) and weighted fleets fall out
+//!   of the spec list.
 //! * [`farm`] — the sharded multi-device layer: N virtual OPUs over
 //!   contiguous mode ranges of one medium (`--partition modes`) or
 //!   full-medium replicas serving contiguous batch-row ranges
@@ -42,12 +50,14 @@ pub mod host;
 pub mod optim;
 pub mod projector;
 pub mod service;
+pub mod topology;
 pub mod trainer;
 
 pub use farm::ProjectorFarm;
 pub use projector::{DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector};
 pub use service::{
-    ProjectionClient, ProjectionService, ServiceConfig, ShardServiceConfig,
-    ShardedProjectionService,
+    ClientProjector, ProjectionClient, ProjectionService, ServiceConfig,
+    ShardServiceConfig, ShardedProjectionService,
 };
+pub use topology::{DeviceKind, PoolPolicy, ShardSpec, Topology};
 pub use trainer::{EvalResult, TrainReport, Trainer};

@@ -60,7 +60,9 @@ use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::sim::clock::SimClock;
 use crate::tensor::Tensor;
 
-use super::farm::{concat_mode_parts, concat_row_parts, split_rows, ProjectorFarm};
+use crate::util::weighted_widths;
+
+use super::farm::{concat_mode_parts, concat_row_parts, ProjectorFarm};
 use super::projector::Projector;
 
 /// Metric name for shard-worker device failures in the sharded service.
@@ -129,6 +131,79 @@ impl ProjectionClient {
             Some(Err(e)) => anyhow::bail!("device error: {e}"),
             None => anyhow::bail!("projection service dropped the request"),
         }
+    }
+}
+
+/// [`Projector`] adapter over a [`ProjectionClient`]: lets a trainer
+/// (host or XLA) drive its error projections through a *running
+/// projection service* — N trainers sharing one device fleet, the
+/// Perspectives ensemble scenario.  Frame accounting mirrors the
+/// optical frame clock (`rows / frame_rate`); the service's own
+/// per-shard counters carry the authoritative slot/energy attribution.
+pub struct ClientProjector {
+    client: ProjectionClient,
+    modes: usize,
+    frame_rate_hz: f64,
+    power_watts: f64,
+    frames: u64,
+    requires_ternary: bool,
+}
+
+impl ClientProjector {
+    /// Adapter over `client` for a fleet exposing `modes` output modes.
+    /// Defaults: the paper's 1.5 kHz / 30 W device rates, ternary
+    /// frames required (the safe assumption when any shard is optical).
+    pub fn new(client: ProjectionClient, modes: usize) -> ClientProjector {
+        ClientProjector {
+            client,
+            modes,
+            frame_rate_hz: 1500.0,
+            power_watts: 30.0,
+            frames: 0,
+            requires_ternary: true,
+        }
+    }
+
+    /// Override the frame clock / power used for this handle's local
+    /// `sim_seconds`/`energy_joules` view.
+    pub fn with_rates(mut self, frame_rate_hz: f64, power_watts: f64) -> ClientProjector {
+        self.frame_rate_hz = frame_rate_hz;
+        self.power_watts = power_watts;
+        self
+    }
+
+    /// Accept float frames (an all-digital fleet has no SLM to please).
+    pub fn allow_float(mut self) -> ClientProjector {
+        self.requires_ternary = false;
+        self
+    }
+}
+
+impl Projector for ClientProjector {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        let out = self.client.project(frames.clone())?;
+        self.frames += frames.rows() as u64;
+        Ok(out)
+    }
+
+    fn modes(&self) -> usize {
+        self.modes
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.frames as f64 / self.frame_rate_hz
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.sim_seconds() * self.power_watts
+    }
+
+    fn kind(&self) -> &'static str {
+        "service-client"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.requires_ternary
     }
 }
 
@@ -445,6 +520,11 @@ struct FrameScheduler {
     d_in: usize,
     modes_total: usize,
     shard_modes: Vec<usize>,
+    /// Relative service weights, shard order: the batch partition
+    /// splits a frame's rows proportionally to these
+    /// ([`weighted_widths`]); all-equal weights reproduce the
+    /// historical even split bit for bit.
+    weights: Vec<u32>,
     lanes: Lanes<ShardJob>,
     frames_ctr: Counter,
     batches_ctr: Counter,
@@ -495,10 +575,12 @@ impl FrameScheduler {
                 }
             }
             Partition::Batch => {
-                // Contiguous balanced row ranges (the farm's split);
-                // shards past the row count sit this frame out entirely.
+                // Contiguous weighted row ranges (the farm's split —
+                // equal weights are the historical balanced ranges);
+                // shards whose range is empty sit this frame out.
                 let mut row0 = 0usize;
-                for (shard, &c) in split_rows(total, shards).iter().enumerate() {
+                for (shard, &c) in weighted_widths(total, &self.weights).iter().enumerate()
+                {
                     if c == 0 {
                         continue;
                     }
@@ -560,15 +642,47 @@ pub struct ShardedProjectionService {
 }
 
 impl ShardedProjectionService {
-    /// Start a service over shard devices (shard `i` ↔ lane `i`; order
-    /// is the gather order).  `d_in` is the frame width.
+    /// Start a service over equal-weight shard devices (shard `i` ↔
+    /// lane `i`; order is the gather order).  `d_in` is the frame
+    /// width.
     pub fn start(
         shards: Vec<Box<dyn Projector + Send>>,
         d_in: usize,
         cfg: ShardServiceConfig,
         metrics: Registry,
     ) -> Result<ShardedProjectionService> {
+        let weights = vec![1u32; shards.len()];
+        Self::start_weighted(shards, weights, d_in, cfg, metrics)
+    }
+
+    /// [`ShardedProjectionService::start`] with per-shard service
+    /// weights: under the batch partition the frame-slot scheduler
+    /// splits each frame's rows proportionally to `weights` — the
+    /// heterogeneous-fleet schedule where a `@3` device takes 3× the
+    /// rows of a `@1` one.  Equal weights reproduce [`start`]'s
+    /// schedule bit for bit.  Topologies route through here
+    /// ([`Topology::build_service`]).
+    ///
+    /// [`start`]: ShardedProjectionService::start
+    /// [`Topology::build_service`]: super::topology::Topology::build_service
+    pub fn start_weighted(
+        shards: Vec<Box<dyn Projector + Send>>,
+        weights: Vec<u32>,
+        d_in: usize,
+        cfg: ShardServiceConfig,
+        metrics: Registry,
+    ) -> Result<ShardedProjectionService> {
         anyhow::ensure!(!shards.is_empty(), "service needs at least one shard");
+        anyhow::ensure!(
+            weights.len() == shards.len(),
+            "{} weights for {} shards",
+            weights.len(),
+            shards.len()
+        );
+        anyhow::ensure!(
+            weights.iter().all(|&w| w >= 1),
+            "zero-weight shard in {weights:?} (weights must be >= 1)"
+        );
         anyhow::ensure!(
             cfg.max_batch > 0 && cfg.queue_depth > 0 && cfg.lane_depth > 0,
             "service capacities must be positive: {cfg:?}"
@@ -618,6 +732,7 @@ impl ShardedProjectionService {
             d_in,
             modes_total,
             shard_modes,
+            weights,
             lanes: lanes.clone(),
             frames_ctr: metrics.counter("service_frames"),
             batches_ctr: metrics.counter("service_batches"),
@@ -647,8 +762,10 @@ impl ShardedProjectionService {
     }
 
     /// Start over a [`ProjectorFarm`], taking ownership of its shard
-    /// devices.  The farm's partition must match the scheduler's — a
-    /// mode-sliced farm cannot serve batch row ranges.
+    /// devices *and its service weights* (so a weighted topology's farm
+    /// keeps its row split behind the service).  The farm's partition
+    /// must match the scheduler's — a mode-sliced farm cannot serve
+    /// batch row ranges.
     pub fn over_farm(
         farm: ProjectorFarm,
         d_in: usize,
@@ -661,7 +778,8 @@ impl ShardedProjectionService {
             farm.partition(),
             cfg.partition
         );
-        Self::start(farm.into_shards(), d_in, cfg, metrics)
+        let weights = farm.weights().to_vec();
+        Self::start_weighted(farm.into_shards(), weights, d_in, cfg, metrics)
     }
 
     /// Create a client handle (same submit/project API as the
@@ -711,9 +829,23 @@ impl Drop for ShardedProjectionService {
 mod tests {
     use super::*;
     use crate::coordinator::projector::DigitalProjector;
+    use crate::coordinator::topology::{DeviceKind, Topology};
     use crate::optics::medium::TransmissionMatrix;
+    use crate::optics::stream::Medium;
+    use crate::optics::OpuParams;
     use crate::tensor::matmul;
     use crate::util::rng::Pcg64;
+
+    fn digital_devices(
+        medium: &TransmissionMatrix,
+        shards: usize,
+        partition: Partition,
+    ) -> Vec<Box<dyn Projector + Send>> {
+        Topology::homogeneous(DeviceKind::Digital, shards)
+            .with_partition(partition)
+            .build_devices(OpuParams::default(), &Medium::Dense(medium.clone()), 0)
+            .unwrap()
+    }
 
     fn service(modes: usize, max_batch: usize) -> (ProjectionService, TransmissionMatrix) {
         let medium = TransmissionMatrix::sample(11, 10, modes);
@@ -836,7 +968,14 @@ mod tests {
         // batching in front, mode sharding behind, payloads intact.
         let medium = TransmissionMatrix::sample(11, 10, 24);
         let farm = Box::new(
-            crate::coordinator::farm::ProjectorFarm::digital(&medium, 4).unwrap(),
+            Topology::homogeneous(DeviceKind::Digital, 4)
+                .build_farm(
+                    OpuParams::default(),
+                    &Medium::Dense(medium.clone()),
+                    0,
+                    Registry::new(),
+                )
+                .unwrap(),
         );
         let svc = ProjectionService::start(
             farm,
@@ -869,8 +1008,7 @@ mod tests {
         max_batch: usize,
     ) -> (ShardedProjectionService, TransmissionMatrix, Registry) {
         let medium = TransmissionMatrix::sample(19, 10, modes);
-        let devices =
-            ProjectorFarm::digital_shard_devices(&medium, shards, partition).unwrap();
+        let devices = digital_devices(&medium, shards, partition);
         let reg = Registry::new();
         let svc = ShardedProjectionService::start(
             devices,
@@ -1028,7 +1166,14 @@ mod tests {
     #[test]
     fn over_farm_rejects_partition_mismatch() {
         let medium = TransmissionMatrix::sample(21, 10, 16);
-        let farm = ProjectorFarm::digital(&medium, 2).unwrap();
+        let farm = Topology::homogeneous(DeviceKind::Digital, 2)
+            .build_farm(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                0,
+                Registry::new(),
+            )
+            .unwrap();
         let cfg = ShardServiceConfig {
             partition: Partition::Batch,
             ..Default::default()
@@ -1037,6 +1182,49 @@ mod tests {
             ShardedProjectionService::over_farm(farm, 10, cfg, Registry::new())
                 .is_err()
         );
+    }
+
+    #[test]
+    fn weighted_batch_scheduling_splits_rows_by_weight() {
+        // 3:1 weights over two digital replicas: a 16-row frame sequence
+        // schedules 12 rows on shard 0 and 4 on shard 1, and the reply
+        // is still exactly the single-device projection.
+        let medium = TransmissionMatrix::sample(23, 10, 16);
+        let devices = digital_devices(&medium, 2, Partition::Batch);
+        let reg = Registry::new();
+        let svc = ShardedProjectionService::start_weighted(
+            devices,
+            vec![3, 1],
+            10,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 32,
+                lane_depth: 4,
+                partition: Partition::Batch,
+                frame_rate_hz: 1500.0,
+            },
+            reg.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let e = tern(16, 5);
+        let (p1, p2) = client.project(e.clone()).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re));
+        assert_eq!(p2, matmul(&e, &medium.b_im));
+        svc.shutdown();
+        let snap = reg.snapshot();
+        assert_eq!(snap["service_shard0_slots"], 12.0);
+        assert_eq!(snap["service_shard1_slots"], 4.0);
+        // Zero weights are rejected up front, not silently starved.
+        let devices = digital_devices(&medium, 2, Partition::Batch);
+        assert!(ShardedProjectionService::start_weighted(
+            devices,
+            vec![1, 0],
+            10,
+            ShardServiceConfig::default(),
+            Registry::new(),
+        )
+        .is_err());
     }
 
     #[test]

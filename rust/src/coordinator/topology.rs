@@ -1,0 +1,833 @@
+//! The unified `Topology` builder: one declarative device-graph
+//! descriptor for every projection deployment shape.
+//!
+//! "Hardware Beyond Backpropagation" (Launay et al., 2020) scales DFA's
+//! optical error projection to *fleets* of devices with differing speeds
+//! and failure modes.  Before this module, every (device kind ×
+//! partition × medium backing × pool) combination was a bespoke
+//! [`ProjectorFarm`] constructor — ~15 of them — and heterogeneous or
+//! weighted deployments were unreachable by combinatorics alone.
+//!
+//! A [`Topology`] is a validated **value type**: a list of
+//! [`ShardSpec`]s — each with a device kind (optical/digital), a
+//! relative **service weight**, an optional explicit mode range and an
+//! optional camera-noise stream — plus the partition axis, the medium
+//! backing and the pool policy.  One build path turns it into shard
+//! devices ([`Topology::build_devices`]), a farm
+//! ([`Topology::build_farm`]), a trainer-facing projector
+//! ([`Topology::build_projector`]) or a running shard-aware service
+//! ([`Topology::build_service`]).
+//!
+//! **Determinism contract** (pinned in `rust/tests/topology.rs`):
+//!
+//! * a topology is hashable ([`Topology::stable_hash`]) and serializable
+//!   ([`Topology::shorthand`] round-trips through [`Topology::parse`]);
+//! * `build_*` are pure functions of the topology and their physical
+//!   inputs (medium, seeds) — same topology, same bits;
+//! * an **equal-weight homogeneous** topology is *bitwise identical* to
+//!   the legacy constructor matrix it replaces: mode windows come from
+//!   the same [`balanced_widths`] arithmetic
+//!   ([`weighted_widths`] reduces to it exactly for equal weights),
+//!   noise streams are the same `NOISE_STREAM_BASE + i` assignment, and
+//!   the farm/scheduler row splits are unchanged.
+//!
+//! **What the weights buy**: under the batch partition the farm and the
+//! frame-slot scheduler split a frame's rows proportionally to the shard
+//! weights instead of evenly — the ROADMAP's weighted frame-slot
+//! scheduling — so a device that services frames 3× faster can be
+//! declared `@3` and receive 3× the rows.  Mixed `opt`/`dig` specs give
+//! heterogeneous farms: graceful degradation and honest comparators in
+//! one fleet.
+//!
+//! Shorthand grammar (CLI `--topology`, TOML `topology = "..."`):
+//!
+//! ```text
+//! [hetero:]KIND:COUNT[@WEIGHT](+KIND:COUNT[@WEIGHT])*
+//! KIND  := opt | optical | dig | digital
+//! ```
+//!
+//! e.g. `opt:4` (4 equal optical shards), `hetero:opt:4+dig:2` (4
+//! optical + 2 digital), `opt:2@3+dig:1` (2 optical shards at weight 3
+//! each, 1 digital at weight 1).
+//!
+//! [`balanced_widths`]: crate::util::balanced_widths
+//! [`weighted_widths`]: crate::util::weighted_widths
+//! [`NOISE_STREAM_BASE`]: crate::optics::NOISE_STREAM_BASE
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{MediumBacking, Partition};
+use crate::exec::ThreadPool;
+use crate::metrics::Registry;
+use crate::optics::stream::Medium;
+use crate::optics::{OpuParams, NOISE_STREAM_BASE};
+use crate::util::weighted_widths;
+
+use super::farm::ProjectorFarm;
+use super::projector::{DigitalProjector, NativeOpticalProjector, Projector};
+use super::service::{ShardServiceConfig, ShardedProjectionService};
+
+/// What physics a shard device runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Simulated OPU (rust-native physics, camera noise, frame clock).
+    Optical,
+    /// Exact digital projection (the silicon comparator).
+    Digital,
+}
+
+impl DeviceKind {
+    pub fn parse(s: &str) -> Result<DeviceKind> {
+        Ok(match s {
+            "opt" | "optical" => DeviceKind::Optical,
+            "dig" | "digital" => DeviceKind::Digital,
+            other => bail!("unknown device kind '{other}' (opt|dig)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeviceKind::Optical => "opt",
+            DeviceKind::Digital => "dig",
+        }
+    }
+}
+
+/// Where a farm built from a topology gets its worker threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolPolicy {
+    /// The farm owns a pool sized to its shard count (the legacy
+    /// default).
+    Owned,
+    /// Use the process-wide [`crate::exec::shared_pool`], so several
+    /// farms/components in one process share worker threads.
+    Shared,
+}
+
+impl PoolPolicy {
+    pub fn parse(s: &str) -> Result<PoolPolicy> {
+        Ok(match s {
+            "owned" => PoolPolicy::Owned,
+            "shared" => PoolPolicy::Shared,
+            other => bail!("unknown pool policy '{other}' (owned|shared)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolPolicy::Owned => "owned",
+            PoolPolicy::Shared => "shared",
+        }
+    }
+}
+
+/// One virtual device in the topology.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ShardSpec {
+    /// Device physics.
+    pub device: DeviceKind,
+    /// Relative service weight (rows per frame under the batch
+    /// partition, mode-window width under the modes partition).  Must
+    /// be ≥ 1 — a zero-weight shard would silently starve.
+    pub weight: u32,
+    /// Explicit mode window `[start, end)` under the modes partition.
+    /// `None` (the common case) derives contiguous windows from the
+    /// weights.  All-or-none: mixing explicit and derived ranges in one
+    /// topology is rejected.
+    pub mode_range: Option<(usize, usize)>,
+    /// Camera-noise PCG stream for an optical shard.  `None` assigns
+    /// the legacy `NOISE_STREAM_BASE + shard_index`, which is what keeps
+    /// equal-weight topologies bitwise on the legacy noise draws.
+    pub noise_stream: Option<u64>,
+}
+
+impl ShardSpec {
+    /// An implicit-range, default-stream shard of `device` at `weight`.
+    pub fn new(device: DeviceKind, weight: u32) -> ShardSpec {
+        ShardSpec {
+            device,
+            weight,
+            mode_range: None,
+            noise_stream: None,
+        }
+    }
+}
+
+/// The declarative device graph: shard specs + partition axis + medium
+/// backing + pool policy.  See the module docs for the contract.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Topology {
+    pub shards: Vec<ShardSpec>,
+    pub partition: Partition,
+    pub backing: MediumBacking,
+    pub pool: PoolPolicy,
+}
+
+impl Topology {
+    /// `n` equal-weight shards of one device kind — the topology that
+    /// reproduces every legacy homogeneous constructor bit for bit.
+    pub fn homogeneous(device: DeviceKind, n: usize) -> Topology {
+        Topology {
+            shards: (0..n).map(|_| ShardSpec::new(device, 1)).collect(),
+            partition: Partition::Modes,
+            backing: MediumBacking::Materialized,
+            pool: PoolPolicy::Owned,
+        }
+    }
+
+    /// Builder: set the partition axis.
+    pub fn with_partition(mut self, partition: Partition) -> Topology {
+        self.partition = partition;
+        self
+    }
+
+    /// Builder: set the medium backing.
+    pub fn with_backing(mut self, backing: MediumBacking) -> Topology {
+        self.backing = backing;
+        self
+    }
+
+    /// Builder: set the backing to match an already-built [`Medium`]
+    /// (what the legacy `*_backed` shims do).
+    pub fn with_backing_of(self, medium: &Medium) -> Topology {
+        self.with_backing(backing_of(medium))
+    }
+
+    /// Builder: set the pool policy.
+    pub fn with_pool(mut self, pool: PoolPolicy) -> Topology {
+        self.pool = pool;
+        self
+    }
+
+    /// Builder: append a shard spec.
+    pub fn push(mut self, spec: ShardSpec) -> Topology {
+        self.shards.push(spec);
+        self
+    }
+
+    /// Parse the `--topology` shorthand (see module docs for the
+    /// grammar).  An optional leading `hetero:` tag is accepted and
+    /// ignored — it is CLI self-documentation, not information.
+    pub fn parse(s: &str) -> Result<Topology> {
+        let body = s.strip_prefix("hetero:").unwrap_or(s).trim();
+        if body.is_empty() {
+            bail!("empty topology (want e.g. 'opt:4' or 'opt:4+dig:2')");
+        }
+        let mut shards = Vec::new();
+        for group in body.split('+') {
+            let (kind_count, weight) = match group.split_once('@') {
+                Some((kc, w)) => {
+                    let w: u32 = w
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("topology weight '{w}': {e}"))?;
+                    (kc, w)
+                }
+                None => (group, 1),
+            };
+            let Some((kind, count)) = kind_count.split_once(':') else {
+                bail!(
+                    "topology group '{group}' is not KIND:COUNT[@WEIGHT] \
+                     (e.g. 'opt:4' or 'dig:2@3')"
+                );
+            };
+            let device = DeviceKind::parse(kind)?;
+            let count: usize = count
+                .parse()
+                .map_err(|e| anyhow::anyhow!("topology count '{count}': {e}"))?;
+            if count == 0 {
+                bail!("topology group '{group}': count must be >= 1");
+            }
+            if weight == 0 {
+                bail!("topology group '{group}': zero-weight shard (weights must be >= 1)");
+            }
+            for _ in 0..count {
+                shards.push(ShardSpec::new(device, weight));
+            }
+        }
+        let topo = Topology {
+            shards,
+            partition: Partition::Modes,
+            backing: MediumBacking::Materialized,
+            pool: PoolPolicy::Owned,
+        };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Canonical shorthand: adjacent same-(kind, weight) shards coalesce
+    /// into one `KIND:COUNT[@WEIGHT]` group; `@1` is omitted.  For any
+    /// topology without explicit mode ranges or noise streams,
+    /// `Topology::parse(t.shorthand())` reproduces `t`'s shard list.
+    pub fn shorthand(&self) -> String {
+        let mut groups: Vec<(DeviceKind, u32, usize)> = Vec::new();
+        for spec in &self.shards {
+            match groups.last_mut() {
+                Some((kind, weight, count))
+                    if *kind == spec.device && *weight == spec.weight =>
+                {
+                    *count += 1
+                }
+                _ => groups.push((spec.device, spec.weight, 1)),
+            }
+        }
+        groups
+            .iter()
+            .map(|(kind, weight, count)| {
+                if *weight == 1 {
+                    format!("{}:{count}", kind.name())
+                } else {
+                    format!("{}:{count}@{weight}", kind.name())
+                }
+            })
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Full canonical encoding (shorthand + partition + backing + pool +
+    /// any explicit ranges/streams) — the serialization
+    /// [`Topology::stable_hash`] digests.
+    pub fn canonical(&self) -> String {
+        let mut s = format!(
+            "{}|partition={}|medium={}|pool={}",
+            self.shorthand(),
+            self.partition.name(),
+            self.backing.name(),
+            self.pool.name()
+        );
+        for (i, spec) in self.shards.iter().enumerate() {
+            if let Some((a, b)) = spec.mode_range {
+                s.push_str(&format!("|range{i}={a}..{b}"));
+            }
+            if let Some(ns) = spec.noise_stream {
+                s.push_str(&format!("|stream{i}={ns}"));
+            }
+        }
+        s
+    }
+
+    /// FNV-1a over [`Topology::canonical`] — a stable, host-independent
+    /// identity for caches, logs and experiment records.
+    pub fn stable_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for byte in self.canonical().bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Number of virtual devices.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard service weights, in shard order.
+    pub fn weights(&self) -> Vec<u32> {
+        self.shards.iter().map(|s| s.weight).collect()
+    }
+
+    /// Whether every shard runs the same device kind.
+    pub fn is_homogeneous(&self) -> bool {
+        self.shards
+            .windows(2)
+            .all(|w| w[0].device == w[1].device)
+    }
+
+    /// The farm `kind` tag for logs/metrics.
+    pub fn kind_tag(&self) -> &'static str {
+        if !self.is_homogeneous() {
+            "farm-hetero"
+        } else if self.shards.first().map(|s| s.device) == Some(DeviceKind::Digital) {
+            "farm-digital"
+        } else {
+            "farm-optical"
+        }
+    }
+
+    /// Structural validation (shape-independent; the `build_*` methods
+    /// additionally check the topology against the concrete medium).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.shards.is_empty(), "topology needs at least one shard");
+        for (i, spec) in self.shards.iter().enumerate() {
+            anyhow::ensure!(
+                spec.weight >= 1,
+                "shard {i}: zero-weight shard (weights must be >= 1)"
+            );
+            if let Some((a, b)) = spec.mode_range {
+                anyhow::ensure!(
+                    a < b,
+                    "shard {i}: empty mode range {a}..{b} (start must be < end)"
+                );
+                anyhow::ensure!(
+                    self.partition == Partition::Modes,
+                    "shard {i}: explicit mode ranges only apply to the modes \
+                     partition (batch shards are full-medium replicas)"
+                );
+            }
+        }
+        let explicit = self.shards.iter().filter(|s| s.mode_range.is_some()).count();
+        anyhow::ensure!(
+            explicit == 0 || explicit == self.shards.len(),
+            "mode ranges must be given for all shards or none \
+             ({explicit}/{} have one)",
+            self.shards.len()
+        );
+        if explicit > 0 {
+            // Overlap check over the explicit windows (order-independent).
+            let mut ranges: Vec<(usize, usize)> =
+                self.shards.iter().filter_map(|s| s.mode_range).collect();
+            ranges.sort_unstable();
+            for pair in ranges.windows(2) {
+                anyhow::ensure!(
+                    pair[0].1 <= pair[1].0,
+                    "overlapping mode ranges {}..{} and {}..{}",
+                    pair[0].0,
+                    pair[0].1,
+                    pair[1].0,
+                    pair[1].1
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Contiguous mode-window widths for the modes partition over
+    /// `modes_total` output modes: the explicit ranges when given (they
+    /// must tile `[0, modes_total)` exactly), else a weighted split —
+    /// which for equal weights is *exactly* the legacy
+    /// `split_modes` arithmetic.
+    pub fn mode_widths(&self, modes_total: usize) -> Result<Vec<usize>> {
+        self.validate()?;
+        if self.shards.iter().all(|s| s.mode_range.is_some()) && !self.shards.is_empty()
+        {
+            // Explicit windows: must be the shards' declared order and
+            // tile the axis (the gather concatenates in shard order).
+            let mut at = 0usize;
+            let mut widths = Vec::with_capacity(self.shards.len());
+            for (i, spec) in self.shards.iter().enumerate() {
+                let (a, b) = spec.mode_range.unwrap();
+                anyhow::ensure!(
+                    a == at,
+                    "shard {i}: mode range {a}..{b} leaves a gap (expected start {at})"
+                );
+                widths.push(b - a);
+                at = b;
+            }
+            anyhow::ensure!(
+                at == modes_total,
+                "explicit mode ranges cover 0..{at}, medium has {modes_total} modes"
+            );
+            return Ok(widths);
+        }
+        let n = self.shards.len();
+        anyhow::ensure!(
+            n <= modes_total,
+            "cannot shard {modes_total} modes across {n} devices"
+        );
+        let widths = weighted_widths(modes_total, &self.weights());
+        anyhow::ensure!(
+            widths.iter().all(|&w| w >= 1),
+            "weighted mode split {widths:?} starves a shard of modes \
+             ({modes_total} modes over weights {:?}); lower the skew or \
+             give explicit mode ranges",
+            self.weights()
+        );
+        Ok(widths)
+    }
+
+    /// Build the shard devices in shard order: mode windows of `medium`
+    /// under the modes partition, full-medium replicas under batch.
+    /// Optical shard `i` draws camera noise from PCG stream
+    /// `NOISE_STREAM_BASE + i` of `noise_seed` unless its spec pins one.
+    pub fn build_devices(
+        &self,
+        params: OpuParams,
+        medium: &Medium,
+        noise_seed: u64,
+    ) -> Result<Vec<Box<dyn Projector + Send>>> {
+        self.validate()?;
+        self.ensure_backing_matches(medium)?;
+        let media: Vec<Medium> = match self.partition {
+            Partition::Modes => {
+                let widths = self.mode_widths(medium.modes())?;
+                let mut out = Vec::with_capacity(widths.len());
+                let mut c0 = 0usize;
+                for w in widths {
+                    out.push(medium.window(c0, w));
+                    c0 += w;
+                }
+                out
+            }
+            Partition::Batch => {
+                warn_streamed_batch_cost(medium, self.shards.len());
+                (0..self.shards.len()).map(|_| medium.clone()).collect()
+            }
+        };
+        Ok(self
+            .shards
+            .iter()
+            .zip(media)
+            .enumerate()
+            .map(|(i, (spec, shard_medium))| {
+                let stream = spec
+                    .noise_stream
+                    .unwrap_or(NOISE_STREAM_BASE + i as u64);
+                match spec.device {
+                    DeviceKind::Optical => Box::new(
+                        NativeOpticalProjector::with_medium_stream(
+                            params,
+                            shard_medium,
+                            noise_seed,
+                            stream,
+                        ),
+                    ) as Box<dyn Projector + Send>,
+                    DeviceKind::Digital => {
+                        Box::new(DigitalProjector::with_medium(shard_medium))
+                            as Box<dyn Projector + Send>
+                    }
+                }
+            })
+            .collect())
+    }
+
+    /// Build a [`ProjectorFarm`]: the devices above, the topology's
+    /// weights driving the batch-partition row split, and a pool per the
+    /// pool policy.
+    pub fn build_farm(
+        &self,
+        params: OpuParams,
+        medium: &Medium,
+        noise_seed: u64,
+        registry: Registry,
+    ) -> Result<ProjectorFarm> {
+        let devices = self.build_devices(params, medium, noise_seed)?;
+        let pool: Option<Arc<ThreadPool>> = match self.pool {
+            PoolPolicy::Owned => None,
+            PoolPolicy::Shared => Some(crate::exec::shared_pool()),
+        };
+        ProjectorFarm::from_shards_weighted(
+            devices,
+            self.weights(),
+            self.kind_tag(),
+            self.partition,
+            registry,
+            pool,
+        )
+    }
+
+    /// Build the trainer-facing projector: the bare legacy single
+    /// device for a 1-shard homogeneous topology (bit-identical anyway,
+    /// but without the farm machinery around it), the weighted farm
+    /// otherwise.
+    pub fn build_projector(
+        &self,
+        params: OpuParams,
+        medium: &Medium,
+        noise_seed: u64,
+        registry: Registry,
+    ) -> Result<Box<dyn Projector>> {
+        self.validate()?;
+        self.ensure_backing_matches(medium)?;
+        if self.shards.len() == 1 && self.shards[0].mode_range.is_none() {
+            let spec = &self.shards[0];
+            let stream = spec.noise_stream.unwrap_or(NOISE_STREAM_BASE);
+            return Ok(match spec.device {
+                DeviceKind::Optical => Box::new(
+                    NativeOpticalProjector::with_medium_stream(
+                        params,
+                        medium.clone(),
+                        noise_seed,
+                        stream,
+                    ),
+                ) as Box<dyn Projector>,
+                // Row-block-parallel host matmuls on the process-wide
+                // pool keep the silicon baseline honest on multi-core
+                // hosts (bitwise identical to the serial path).
+                DeviceKind::Digital => Box::new(
+                    DigitalProjector::with_medium(medium.clone())
+                        .with_pool(crate::exec::shared_pool()),
+                ) as Box<dyn Projector>,
+            });
+        }
+        Ok(Box::new(self.build_farm(params, medium, noise_seed, registry)?))
+    }
+
+    /// Build a running [`ShardedProjectionService`] over this topology:
+    /// one worker per shard device, the frame-slot scheduler splitting
+    /// batch rows proportionally to the shard weights.  `cfg.partition`
+    /// must match the topology's.
+    pub fn build_service(
+        &self,
+        params: OpuParams,
+        medium: &Medium,
+        noise_seed: u64,
+        d_in: usize,
+        cfg: ShardServiceConfig,
+        metrics: Registry,
+    ) -> Result<ShardedProjectionService> {
+        anyhow::ensure!(
+            cfg.partition == self.partition,
+            "topology partition {:?} != service partition {:?}",
+            self.partition,
+            cfg.partition
+        );
+        let devices = self.build_devices(params, medium, noise_seed)?;
+        ShardedProjectionService::start_weighted(devices, self.weights(), d_in, cfg, metrics)
+    }
+
+    fn ensure_backing_matches(&self, medium: &Medium) -> Result<()> {
+        let medium_backing = backing_of(medium);
+        anyhow::ensure!(
+            medium_backing == self.backing,
+            "topology backing '{}' but the supplied medium is '{}'",
+            self.backing.name(),
+            medium_backing.name()
+        );
+        Ok(())
+    }
+}
+
+/// The one [`Medium`] → [`MediumBacking`] mapping, shared by
+/// [`Topology::with_backing_of`] and the build-time backing check so
+/// the two can never disagree.
+fn backing_of(medium: &Medium) -> MediumBacking {
+    match medium {
+        Medium::Dense(_) => MediumBacking::Materialized,
+        Medium::Streamed(_) => MediumBacking::Streamed,
+    }
+}
+
+/// Streamed replicas under the batch partition each regenerate the full
+/// mode width — total generation work scales with the shard count.  Say
+/// so once at build rather than letting a 1e5+-mode run discover it
+/// from the wall clock.
+fn warn_streamed_batch_cost(medium: &Medium, shards: usize) {
+    if shards > 1 && matches!(medium, Medium::Streamed(_)) {
+        log::warn!(
+            "streamed medium × batch partition: each of the {shards} replicas \
+             regenerates all {} modes per projection (~{shards}× the modes \
+             partition's generation work); prefer --partition modes at large \
+             mode counts",
+            medium.modes()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optics::medium::TransmissionMatrix;
+    use crate::tensor::{matmul, Tensor};
+    use crate::util::rng::Pcg64;
+
+    fn tern(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seeded(seed);
+        let data = (0..rows * cols)
+            .map(|_| (rng.next_below(3) as i64 - 1) as f32)
+            .collect();
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn shorthand_round_trips() {
+        for s in ["opt:4", "dig:2", "opt:4+dig:2", "opt:2@3+dig:1", "opt:1@2+opt:1"] {
+            let t = Topology::parse(s).unwrap();
+            assert_eq!(t.shorthand(), s, "canonical form of '{s}'");
+            assert_eq!(Topology::parse(&t.shorthand()).unwrap(), t);
+        }
+        // Aliases and the hetero: tag normalize to the canonical form.
+        let t = Topology::parse("hetero:optical:4+digital:2").unwrap();
+        assert_eq!(t.shorthand(), "opt:4+dig:2");
+        assert_eq!(t.shard_count(), 6);
+        assert!(!t.is_homogeneous());
+        assert_eq!(t.weights(), vec![1; 6]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_shorthand() {
+        for bad in [
+            "", "opt", "opt:", "opt:x", "opt:0", "opt:2@0", "laser:2", "opt:2@x",
+            "opt:2++dig:1",
+        ] {
+            assert!(Topology::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_zero_weight_and_overlapping_ranges() {
+        let mut t = Topology::homogeneous(DeviceKind::Digital, 2);
+        t.shards[1].weight = 0;
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("zero-weight"), "{err}");
+
+        let mut t = Topology::homogeneous(DeviceKind::Digital, 2);
+        t.shards[0].mode_range = Some((0, 10));
+        t.shards[1].mode_range = Some((8, 20));
+        let err = t.validate().unwrap_err().to_string();
+        assert!(err.contains("overlapping"), "{err}");
+
+        // Mixing explicit and implicit ranges is rejected too.
+        let mut t = Topology::homogeneous(DeviceKind::Digital, 2);
+        t.shards[0].mode_range = Some((0, 10));
+        assert!(t.validate().is_err());
+
+        // Explicit ranges under the batch partition make no sense.
+        let mut t = Topology::homogeneous(DeviceKind::Digital, 1)
+            .with_partition(Partition::Batch);
+        t.shards[0].mode_range = Some((0, 10));
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn equal_weight_mode_widths_are_the_legacy_split() {
+        for (modes, n) in [(52usize, 4usize), (37, 5), (10, 3), (8, 1)] {
+            let t = Topology::homogeneous(DeviceKind::Digital, n);
+            assert_eq!(
+                t.mode_widths(modes).unwrap(),
+                crate::util::balanced_widths(modes, n),
+                "{modes} modes / {n} shards"
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_mode_widths_follow_the_weights() {
+        let t = Topology {
+            shards: vec![
+                ShardSpec::new(DeviceKind::Optical, 3),
+                ShardSpec::new(DeviceKind::Optical, 1),
+            ],
+            partition: Partition::Modes,
+            backing: MediumBacking::Materialized,
+            pool: PoolPolicy::Owned,
+        };
+        assert_eq!(t.mode_widths(40).unwrap(), vec![30, 10]);
+        // Starvation is an error, not a silent zero-width shard.
+        let skew = Topology {
+            shards: vec![
+                ShardSpec::new(DeviceKind::Optical, 1000),
+                ShardSpec::new(DeviceKind::Optical, 1),
+            ],
+            partition: Partition::Modes,
+            backing: MediumBacking::Materialized,
+            pool: PoolPolicy::Owned,
+        };
+        assert!(skew.mode_widths(4).is_err());
+    }
+
+    #[test]
+    fn explicit_ranges_must_tile_the_axis() {
+        let mut t = Topology::homogeneous(DeviceKind::Digital, 2);
+        t.shards[0].mode_range = Some((0, 12));
+        t.shards[1].mode_range = Some((12, 30));
+        assert_eq!(t.mode_widths(30).unwrap(), vec![12, 18]);
+        assert!(t.mode_widths(31).is_err(), "short of the axis");
+        let mut gap = Topology::homogeneous(DeviceKind::Digital, 2);
+        gap.shards[0].mode_range = Some((0, 10));
+        gap.shards[1].mode_range = Some((12, 30));
+        assert!(gap.mode_widths(30).is_err(), "gap in the tiling");
+    }
+
+    #[test]
+    fn stable_hash_distinguishes_topologies_and_is_stable() {
+        let a = Topology::parse("opt:4").unwrap();
+        let b = Topology::parse("opt:4+dig:2").unwrap();
+        let c = Topology::parse("opt:4").unwrap().with_partition(Partition::Batch);
+        assert_eq!(a.stable_hash(), Topology::parse("opt:4").unwrap().stable_hash());
+        assert_ne!(a.stable_hash(), b.stable_hash());
+        assert_ne!(a.stable_hash(), c.stable_hash());
+        assert!(a.canonical().contains("partition=modes"));
+    }
+
+    #[test]
+    fn hetero_farm_projects_its_mode_slices() {
+        // 1 optical (noiseless) + 1 digital shard over one medium: the
+        // digital half is exactly the dense slice, the optical half is
+        // within ADC tolerance — both concatenated in shard order.
+        let medium = TransmissionMatrix::sample(41, 10, 24);
+        let noiseless = OpuParams {
+            n_ph: -1.0,
+            read_sigma: 0.0,
+            ..OpuParams::default()
+        };
+        let topo = Topology::parse("opt:1+dig:1").unwrap();
+        let mut farm = topo
+            .build_farm(
+                noiseless,
+                &Medium::Dense(medium.clone()),
+                7,
+                Registry::new(),
+            )
+            .unwrap();
+        assert_eq!(farm.kind(), "farm-hetero");
+        assert!(farm.requires_ternary(), "any optical shard demands ternary");
+        let e = tern(5, 10, 3);
+        let (p1, _) = farm.project(&e).unwrap();
+        let want = matmul(&e, &medium.b_re);
+        // Digital half (columns 12..24) is bit-exact.
+        for r in 0..5 {
+            for c in 12..24 {
+                assert_eq!(p1.at(r, c), want.at(r, c), "digital half ({r},{c})");
+            }
+        }
+        // Optical half agrees to fp/ADC tolerance.
+        let mut max_diff = 0.0f32;
+        for r in 0..5 {
+            for c in 0..12 {
+                max_diff = max_diff.max((p1.at(r, c) - want.at(r, c)).abs());
+            }
+        }
+        assert!(max_diff < 1e-5, "optical half diff {max_diff}");
+    }
+
+    #[test]
+    fn build_rejects_backing_mismatch() {
+        let medium = Medium::Dense(TransmissionMatrix::sample(1, 10, 8));
+        let topo = Topology::parse("dig:2")
+            .unwrap()
+            .with_backing(MediumBacking::Streamed);
+        let err = topo
+            .build_devices(OpuParams::default(), &medium, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("backing"), "{err}");
+    }
+
+    #[test]
+    fn single_shard_projector_is_the_bare_device() {
+        let medium = TransmissionMatrix::sample(2, 10, 16);
+        let topo = Topology::homogeneous(DeviceKind::Optical, 1);
+        let mut built = topo
+            .build_projector(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                5,
+                Registry::new(),
+            )
+            .unwrap();
+        assert_eq!(built.kind(), "optical-native");
+        let mut classic = NativeOpticalProjector::new(OpuParams::default(), medium, 5);
+        let e = tern(4, 10, 9);
+        assert_eq!(built.project(&e).unwrap(), classic.project(&e).unwrap());
+
+        let topo = Topology::homogeneous(DeviceKind::Digital, 1);
+        let built = topo
+            .build_projector(
+                OpuParams::default(),
+                &Medium::Dense(TransmissionMatrix::sample(2, 10, 16)),
+                5,
+                Registry::new(),
+            )
+            .unwrap();
+        assert_eq!(built.kind(), "digital");
+    }
+
+    #[test]
+    fn rejects_more_shards_than_modes() {
+        let medium = Medium::Dense(TransmissionMatrix::sample(1, 10, 4));
+        let topo = Topology::homogeneous(DeviceKind::Digital, 5);
+        assert!(topo.build_devices(OpuParams::default(), &medium, 1).is_err());
+    }
+}

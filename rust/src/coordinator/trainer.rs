@@ -27,10 +27,7 @@ use crate::runtime::{Engine, Model};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
-use super::farm::ProjectorFarm;
-use super::projector::{
-    DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector,
-};
+use super::projector::{HloOpticalProjector, Projector};
 
 /// Result of one evaluation pass.
 #[derive(Clone, Copy, Debug)]
@@ -75,11 +72,12 @@ pub struct Trainer {
     pub cfg: TrainConfig,
     engine: Engine,
     model: Model,
-    /// Dense medium tensors — `None` under `--medium streamed`, where
-    /// the matrix exists only as its seed (the projector regenerates
-    /// tiles; the digital-DFA artifacts, which need the dense tensors,
-    /// reject the streamed backing at construction).
-    medium: Option<TransmissionMatrix>,
+    /// The medium *policy object* — `Medium::Dense` holds the tensors,
+    /// `Medium::Streamed` holds the seed-defined window (the matrix
+    /// exists only as its seed; the digital-DFA artifacts, which need
+    /// the dense tensors, reject the streamed backing at construction).
+    /// Streamed runs are first-class here, not an invisible `None`.
+    medium: Medium,
     projector: Option<Box<dyn Projector>>,
     metrics: Registry,
     rng: Pcg64,
@@ -100,66 +98,52 @@ impl Trainer {
         let bc = engine.manifest().config(&cfg.artifact_config)?.clone();
         let err_dim = engine.manifest().err_dim;
 
-        // `shards > 1` routes the projection through the sharded farm
-        // (N virtual devices over mode ranges of the same medium, or
-        // full-medium replicas over batch-row ranges when
-        // `--partition batch`); `shards == 1` keeps the classic
-        // single-device objects, whose outputs the farm reproduces
-        // bit-for-bit anyway.  Sharding only exists on the projector
-        // path — reject it loudly elsewhere rather than silently
-        // running single-device.
-        anyhow::ensure!(
-            cfg.shards <= 1 || cfg.algo == Algo::Optical,
-            "--shards {} only applies to --algo optical (the projection \
-             device); algo '{}' has no projector to shard",
-            cfg.shards,
-            cfg.algo.name()
-        );
-        // The streamed backing only exists where a projector device owns
-        // the medium; the digital-DFA artifacts take dense B tensors as
-        // inputs and the HLO projector feeds them to XLA.
-        anyhow::ensure!(
-            cfg.medium == MediumBacking::Materialized || cfg.algo == Algo::Optical,
-            "--medium streamed only applies to --algo optical (algo '{}' \
-             passes the dense medium tensors into the AOT artifacts)",
-            cfg.algo.name()
-        );
-        anyhow::ensure!(
-            cfg.medium == MediumBacking::Materialized
-                || cfg.projector != ProjectorKind::OpticalHlo,
-            "projector=hlo does not support --medium streamed (the \
-             opu_project artifact takes the dense medium as an input); \
-             use projector=native or digital"
-        );
+        // Projection-path configuration sanity — a pure function of the
+        // config, shared with the CLI so `litl train` can fail fast
+        // before touching artifacts.
+        cfg.validate_projection()?;
+        // The declarative device graph: the explicit `[topology]` when
+        // given, else the homogeneous equivalent of the legacy
+        // shards/partition/medium knobs (bit-identical construction —
+        // one build path for everything).
+        let topology = cfg.projection_topology();
 
         // The fixed random feedback matrices ARE the optical medium: the
         // digital baselines project through the same B quadratures, so
         // "optical vs digital" differs only by the physics (DESIGN.md
         // §2).  Under the streamed backing the dense tensors are never
-        // built — the seed alone defines the matrix.
+        // built — the seed alone defines the matrix, and `medium` is the
+        // policy object that says so.
         let medium_seed = cfg.seed ^ 0xB;
         let medium = match cfg.medium {
-            MediumBacking::Materialized => {
-                Some(TransmissionMatrix::sample(medium_seed, err_dim, bc.modes))
-            }
-            MediumBacking::Streamed => None,
-        };
-        // Device-side medium, built lazily: only the native/digital
-        // optical arms consume it, and for the materialized backing it
-        // clones the dense tensors — no point paying that for bp/dfa
-        // algos or the HLO projector (which take `medium` directly).
-        let modes_total = bc.modes;
-        let make_device_medium = || match &medium {
-            Some(tm) => Medium::Dense(tm.clone()),
-            None => Medium::Streamed(
-                StreamedMedium::new(medium_seed, err_dim, modes_total)
+            MediumBacking::Materialized => Medium::Dense(TransmissionMatrix::sample(
+                medium_seed,
+                err_dim,
+                bc.modes,
+            )),
+            MediumBacking::Streamed => Medium::Streamed(
+                StreamedMedium::new(medium_seed, err_dim, bc.modes)
                     .with_pool(crate::exec::shared_pool())
                     .with_metrics(&metrics),
             ),
         };
         let projector: Option<Box<dyn Projector>> = match cfg.algo {
             Algo::Optical => Some(match cfg.projector {
-                ProjectorKind::OpticalNative => {
+                ProjectorKind::OpticalHlo => {
+                    let twin_engine = Engine::new(&cfg.artifacts_dir)?;
+                    Box::new(HloOpticalProjector::new(
+                        twin_engine,
+                        &cfg.artifact_config,
+                        medium
+                            .dense()
+                            .expect("hlo projector is materialized-only")
+                            .clone(),
+                        cfg.seed ^ 0xF00,
+                    )?) as Box<dyn Projector>
+                }
+                // Native and digital projectors — single device, farm,
+                // heterogeneous, weighted — are all one topology build.
+                ProjectorKind::OpticalNative | ProjectorKind::Digital => {
                     let mut opu_params = engine.manifest().opu;
                     if let Some(n_ph) = cfg.n_ph {
                         opu_params.n_ph = n_ph;
@@ -167,59 +151,12 @@ impl Trainer {
                     if let Some(rs) = cfg.read_sigma {
                         opu_params.read_sigma = rs;
                     }
-                    if cfg.shards > 1 {
-                        Box::new(ProjectorFarm::optical_partitioned_backed(
-                            opu_params,
-                            &make_device_medium(),
-                            cfg.seed ^ 0xF00,
-                            cfg.shards,
-                            cfg.partition,
-                            metrics.clone(),
-                        )?)
-                    } else {
-                        Box::new(NativeOpticalProjector::with_medium(
-                            opu_params,
-                            make_device_medium(),
-                            cfg.seed ^ 0xF00,
-                        ))
-                    }
-                }
-                ProjectorKind::OpticalHlo => {
-                    anyhow::ensure!(
-                        cfg.shards <= 1,
-                        "projector=hlo does not support --shards {} \
-                         (the AOT artifact is compiled for one device); \
-                         use projector=native or digital",
-                        cfg.shards
-                    );
-                    let twin_engine = Engine::new(&cfg.artifacts_dir)?;
-                    Box::new(HloOpticalProjector::new(
-                        twin_engine,
-                        &cfg.artifact_config,
-                        medium.clone().expect("hlo projector is materialized-only"),
+                    topology.build_projector(
+                        opu_params,
+                        &medium,
                         cfg.seed ^ 0xF00,
-                    )?)
-                }
-                ProjectorKind::Digital => {
-                    if cfg.shards > 1 {
-                        Box::new(ProjectorFarm::digital_partitioned_backed(
-                            &make_device_medium(),
-                            cfg.shards,
-                            cfg.partition,
-                            metrics.clone(),
-                        )?)
-                    } else {
-                        // Row-block-parallel host matmuls keep the
-                        // silicon baseline honest on multi-core hosts;
-                        // bitwise identical to the serial path, so the
-                        // numeric parity guarantee is unaffected.  The
-                        // process-wide pool is shared so N trainers
-                        // don't spawn N×cores workers.
-                        Box::new(
-                            DigitalProjector::with_medium(make_device_medium())
-                                .with_pool(crate::exec::shared_pool()),
-                        )
-                    }
+                        metrics.clone(),
+                    )?
                 }
             }),
             _ => None,
@@ -251,10 +188,12 @@ impl Trainer {
         &mut self.engine
     }
 
-    /// The dense medium tensors, when materialized (`None` under
-    /// `--medium streamed`).
-    pub fn medium(&self) -> Option<&TransmissionMatrix> {
-        self.medium.as_ref()
+    /// The medium *policy object* behind this run's projection —
+    /// [`Medium::Dense`] or [`Medium::Streamed`].  Callers that need the
+    /// raw tensors use [`Medium::dense`]; streamed runs are visible here
+    /// instead of hiding behind a `None`.
+    pub fn medium(&self) -> &Medium {
+        &self.medium
     }
 
     pub fn metrics(&self) -> &Registry {
@@ -296,7 +235,7 @@ impl Trainer {
             Algo::DfaFloat | Algo::DfaTernary => {
                 let tm = self
                     .medium
-                    .as_ref()
+                    .dense()
                     .context("digital DFA requires a materialized medium")?;
                 let mut args = self.model.state_refs();
                 args.extend([

@@ -83,6 +83,33 @@
 //! `--partition modes|batch` selects the axis on the CLI;
 //! `benches/e4_scaling.rs` (E4.4) sweeps clients × shards × partition.
 //!
+//! ## The unified `Topology` builder (declarative device graphs)
+//!
+//! Every projection deployment shape — single device, homogeneous farm,
+//! heterogeneous fleet, weighted schedule, either partition, either
+//! medium backing, owned or shared pool — is one declarative
+//! [`coordinator::topology::Topology`] value: a validated list of shard
+//! specs (device kind, service **weight**, optional explicit mode range
+//! and noise stream) plus the partition/backing/pool policies.  One
+//! build path (`build_devices` / `build_farm` / `build_projector` /
+//! `build_service`) replaces the farm's legacy constructor matrix,
+//! which survives only as `#[deprecated]` shims.  `--topology
+//! hetero:opt:4+dig:2`-style shorthand (and a `[topology]` TOML
+//! section) selects it from the CLI; the descriptor is hashable
+//! ([`coordinator::topology::Topology::stable_hash`]) and serializable
+//! (`shorthand()` round-trips through `parse()`).
+//!
+//! **Parity guarantee:** equal-weight homogeneous topologies are
+//! *bitwise identical* to the legacy constructions (same
+//! [`util::balanced_widths`] windows — [`util::weighted_widths`]
+//! reduces to it exactly for equal weights — same noise-stream
+//! assignment, same schedules), pinned in `rust/tests/topology.rs`.
+//! Unequal weights make the farm and the frame-slot scheduler split
+//! batch rows **proportionally to shard service rates** — the ROADMAP's
+//! weighted frame-slot scheduling — and mixed optical/digital specs
+//! give heterogeneous fleets; `benches/e4_scaling.rs` (E4.5) measures
+//! weighted-vs-even wall time on skewed device speeds.
+//!
 //! ## The streamed projection engine (memory-less media at 1e5+ modes)
 //!
 //! The medium is *defined by its seed*, not by a stored buffer: row `r`,

@@ -11,6 +11,7 @@
 use anyhow::{bail, Result};
 use litl::cli::Args;
 use litl::config::{Algo, MediumBacking, Partition, TrainConfig};
+use litl::coordinator::topology::Topology;
 use litl::coordinator::Trainer;
 use litl::data::{self, Split};
 use litl::optics::medium::TransmissionMatrix;
@@ -23,7 +24,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
-    "partition", "medium",
+    "partition", "medium", "topology",
 ];
 
 fn main() {
@@ -107,6 +108,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(m) = args.flag("medium") {
         cfg.medium = MediumBacking::parse(m)?;
     }
+    if let Some(t) = args.flag("topology") {
+        cfg.topology = Some(Topology::parse(t)?);
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -119,6 +123,8 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[TRAIN_FLAGS, &["config-file"]].concat())?;
     let cfg = build_config(args)?;
+    // Fail fast on inconsistent projection knobs, before data/artifacts.
+    cfg.validate_projection()?;
     log::info!(
         "train: algo={} lr={} epochs={} config={} projector={:?} shards={} \
          partition={} medium={}",
@@ -131,6 +137,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.partition.name(),
         cfg.medium.name()
     );
+    if cfg.algo == Algo::Optical && cfg.projector != litl::config::ProjectorKind::OpticalHlo
+    {
+        let topo = cfg.projection_topology();
+        log::info!(
+            "topology: {} (partition={}, pool={}, hash={:016x})",
+            topo.shorthand(),
+            topo.partition.name(),
+            topo.pool.name(),
+            topo.stable_hash()
+        );
+    }
     let ds = data::load_or_synth(cfg.seed, cfg.train_size, cfg.test_size)?;
     log::info!(
         "dataset: {} train / {} test samples",
@@ -304,6 +321,11 @@ COMMANDS:
           --projector native|hlo|digital
           --shards N                shard the projection across N virtual
                                     devices (projector farm)
+          --topology SPEC           declarative device graph, e.g.
+                                    hetero:opt:4+dig:2 or opt:2@3+dig:1
+                                    (KIND:COUNT[@WEIGHT] groups joined
+                                    by '+'; weights drive the batch-row
+                                    split; replaces --shards)
           --partition modes|batch   farm partition axis: output-mode
                                     slices (default) or batch-row ranges
           --medium materialized|streamed

@@ -249,6 +249,24 @@ impl StreamedMedium {
         out
     }
 
+    /// A contiguous sub-window `[c0, c0 + w)` of this window (columns
+    /// relative to it), preserving the pool, tile size and shared stats
+    /// — the arbitrary-boundary generalization of
+    /// [`StreamedMedium::split_modes`] that weighted/explicit-range
+    /// topologies carve shards with.
+    pub fn subwindow(&self, c0: usize, w: usize) -> StreamedMedium {
+        assert!(
+            w > 0 && c0 + w <= self.modes,
+            "subwindow [{c0}, {}) out of a {}-mode window",
+            c0 + w,
+            self.modes
+        );
+        let mut out = self.clone();
+        out.col0 = self.col0 + c0;
+        out.modes = w;
+        out
+    }
+
     /// Materialize the window as a dense [`TransmissionMatrix`] — the
     /// test oracle (equals `sample(seed, d_in, col0 + modes)` sliced to
     /// the window).  Defeats the whole point at scale; oracle use only.
@@ -463,6 +481,17 @@ impl Medium {
         }
     }
 
+    /// Contiguous mode window `[c0, c0 + w)`, preserving the backing —
+    /// what [`crate::coordinator::topology::Topology`] carves weighted
+    /// or explicit-range shard windows from.  Balanced windows taken
+    /// through here are bitwise the [`Medium::split_modes`] slices.
+    pub fn window(&self, c0: usize, w: usize) -> Medium {
+        match self {
+            Medium::Dense(tm) => Medium::Dense(tm.slice_modes(c0, c0 + w)),
+            Medium::Streamed(sm) => Medium::Streamed(sm.subwindow(c0, w)),
+        }
+    }
+
     /// Contiguous balanced mode windows, preserving the backing — what
     /// the farm's mode partition carves shards from.  Streamed and dense
     /// splits cover identical ranges, so shard outputs agree bit for
@@ -572,6 +601,27 @@ mod tests {
                 assert_eq!(wdw.modes(), slc.modes);
                 let (p1, _) = wdw.project(&e);
                 assert_eq!(p1, matmul(&e, &slc.b_re));
+            }
+        }
+    }
+
+    #[test]
+    fn subwindow_and_medium_window_match_the_dense_slice() {
+        let dense = TransmissionMatrix::sample(12, 7, 60);
+        let e = tern(3, 7, 4);
+        let sm = StreamedMedium::new(12, 7, 60).with_tile_cols(9);
+        for (c0, w) in [(0usize, 60usize), (5, 20), (40, 20)] {
+            let sub = sm.subwindow(c0, w);
+            let slice = dense.slice_modes(c0, c0 + w);
+            let (p1, _) = sub.project(&e);
+            assert_eq!(p1, matmul(&e, &slice.b_re), "subwindow {c0}+{w}");
+            // The backing-polymorphic window agrees under both backings.
+            for medium in [
+                Medium::Dense(dense.clone()),
+                Medium::Streamed(sm.clone()),
+            ] {
+                let (w1, _) = medium.window(c0, w).project(&e, None);
+                assert_eq!(w1, matmul(&e, &slice.b_re), "window {c0}+{w}");
             }
         }
     }

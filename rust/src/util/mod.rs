@@ -34,9 +34,87 @@ pub fn balanced_widths(total: usize, parts: usize) -> Vec<usize> {
     (0..parts).map(|i| base + usize::from(i < extra)).collect()
 }
 
+/// Contiguous *weighted* partition: split `total` items proportionally to
+/// `weights` (largest-remainder rounding, ties to earlier parts).  This
+/// is the heterogeneous-farm generalization of [`balanced_widths`], and
+/// equal weights reduce to it **exactly** — same widths, bit for bit —
+/// which is what keeps equal-weight topologies on the legacy schedule
+/// (pinned in `rust/tests/topology.rs`).
+///
+/// Weights must be positive: a zero-weight shard would silently starve,
+/// so `Topology::validate` rejects it before the arithmetic ever runs.
+pub fn weighted_widths(total: usize, weights: &[u32]) -> Vec<usize> {
+    debug_assert!(!weights.is_empty(), "need at least one part");
+    debug_assert!(weights.iter().all(|&w| w > 0), "weights must be positive");
+    let sum_w: u64 = weights.iter().map(|&w| w as u64).sum();
+    // Floor quotas first; hand the leftover items to the largest
+    // fractional remainders (earlier index wins ties).  For equal
+    // weights every remainder ties, so the leftover lands on the first
+    // `total % parts` parts — exactly `balanced_widths`.
+    let mut widths: Vec<usize> = Vec::with_capacity(weights.len());
+    let mut rems: Vec<(u64, usize)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = total as u64 * w as u64;
+        widths.push((num / sum_w) as usize);
+        rems.push((num % sum_w, i));
+        assigned += *widths.last().unwrap();
+    }
+    let mut leftover = total - assigned;
+    // Sort by descending remainder, ascending index for ties.
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in rems.iter() {
+        if leftover == 0 {
+            break;
+        }
+        widths[i] += 1;
+        leftover -= 1;
+    }
+    debug_assert_eq!(widths.iter().sum::<usize>(), total);
+    widths
+}
+
 #[cfg(test)]
 mod tests {
-    use super::balanced_widths;
+    use super::{balanced_widths, weighted_widths};
+
+    #[test]
+    fn weighted_widths_equal_weights_are_exactly_the_balanced_split() {
+        // The bitwise-parity cornerstone: equal weights must reproduce
+        // balanced_widths for every (total, parts, weight) — not just
+        // sum to the same total.
+        for total in 0..120usize {
+            for parts in 1..8usize {
+                for w in [1u32, 2, 7] {
+                    assert_eq!(
+                        weighted_widths(total, &vec![w; parts]),
+                        balanced_widths(total, parts),
+                        "{total}/{parts} @ {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_widths_are_proportional_and_exact() {
+        assert_eq!(weighted_widths(16, &[3, 1]), vec![12, 4]);
+        assert_eq!(weighted_widths(40, &[3, 1]), vec![30, 10]);
+        assert_eq!(weighted_widths(16, &[2, 2, 1]), vec![7, 6, 3]);
+        assert_eq!(weighted_widths(8, &[3, 1]), vec![6, 2]);
+        // Leftovers go to the largest remainders, earlier index first;
+        // the sum is always exact.
+        for (total, ws) in [
+            (10usize, vec![1u32, 2, 3]),
+            (7, vec![5, 1, 1]),
+            (0, vec![4, 2]),
+            (3, vec![9, 9, 9, 9]),
+        ] {
+            let out = weighted_widths(total, &ws);
+            assert_eq!(out.len(), ws.len());
+            assert_eq!(out.iter().sum::<usize>(), total, "{total} over {ws:?}");
+        }
+    }
 
     #[test]
     fn balanced_widths_cover_and_balance() {

@@ -37,3 +37,77 @@ pub fn noiseless_params() -> OpuParams {
         ..OpuParams::default()
     }
 }
+
+use litl::config::Partition;
+use litl::coordinator::farm::ProjectorFarm;
+use litl::coordinator::projector::Projector;
+use litl::coordinator::topology::{DeviceKind, Topology};
+use litl::metrics::Registry;
+use litl::optics::stream::Medium;
+
+/// Equal-weight homogeneous farm via the `Topology` build path — the
+/// post-PR-4 spelling of the legacy `optical_partitioned_backed` /
+/// `digital_partitioned_backed` constructors (bit-identical to them).
+pub fn topology_farm(
+    kind: DeviceKind,
+    params: OpuParams,
+    medium: &Medium,
+    noise_seed: u64,
+    shards: usize,
+    partition: Partition,
+    registry: Registry,
+) -> anyhow::Result<ProjectorFarm> {
+    Topology::homogeneous(kind, shards)
+        .with_partition(partition)
+        .with_backing_of(medium)
+        .build_farm(params, medium, noise_seed, registry)
+}
+
+/// Equal-weight homogeneous shard devices via the `Topology` build path
+/// (the post-PR-4 `optical_shard_devices_backed`).
+pub fn topology_devices(
+    kind: DeviceKind,
+    params: OpuParams,
+    medium: &Medium,
+    noise_seed: u64,
+    shards: usize,
+    partition: Partition,
+) -> anyhow::Result<Vec<Box<dyn Projector + Send>>> {
+    Topology::homogeneous(kind, shards)
+        .with_partition(partition)
+        .with_backing_of(medium)
+        .build_devices(params, medium, noise_seed)
+}
+
+use litl::tensor::matmul;
+
+/// Fixed random linear task (stable prototype seed), sized to
+/// `layers[0]` inputs and `layers.last()` classes — the shared trainer
+/// fixture for the ensemble/topology integration tests.
+pub fn task_batch(seed: u64, b: usize, layers: &[usize]) -> (Tensor, Tensor) {
+    let d = layers[0];
+    let classes = *layers.last().unwrap();
+    let mut proto_rng = Pcg64::new(1234, 0);
+    let proto = Tensor::randn(&[classes, d], &mut proto_rng, 1.0);
+    let mut rng = Pcg64::seeded(seed);
+    let x = Tensor::randn(&[b, d], &mut rng, 1.0);
+    let mut pt = Tensor::zeros(&[d, classes]);
+    for i in 0..classes {
+        for j in 0..d {
+            *pt.at_mut(j, i) = proto.at(i, j);
+        }
+    }
+    let scores = matmul(&x, &pt);
+    let mut yoh = Tensor::zeros(&[b, classes]);
+    for r in 0..b {
+        let row = scores.row(r);
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        *yoh.at_mut(r, best) = 1.0;
+    }
+    (x, yoh)
+}

@@ -37,6 +37,7 @@ fn cfg(algo: Algo) -> TrainConfig {
         shards: 1,
         partition: litl::config::Partition::Modes,
         medium: litl::config::MediumBacking::Materialized,
+        ..TrainConfig::default()
     }
 }
 

@@ -8,15 +8,50 @@
 //! counts, exercising the unbalanced-remainder path) are pinned, and a
 //! property sweep draws random (shards, modes, batch) triples.
 
+use litl::config::Partition;
 use litl::coordinator::farm::ProjectorFarm;
 use litl::coordinator::projector::{DigitalProjector, NativeOpticalProjector, Projector};
+use litl::coordinator::topology::DeviceKind;
+use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
 use litl::optics::OpuParams;
 use litl::tensor::{matmul, Tensor};
 use litl::util::check::{forall, PairG, UsizeIn};
 
 mod common;
-use common::{noiseless_params, ternary_batch};
+use common::{noiseless_params, ternary_batch, topology_farm};
+
+/// Equal-weight optical farm through the unified `Topology` build path.
+fn optical_farm(
+    params: OpuParams,
+    medium: &TransmissionMatrix,
+    noise_seed: u64,
+    shards: usize,
+) -> anyhow::Result<ProjectorFarm> {
+    topology_farm(
+        DeviceKind::Optical,
+        params,
+        &Medium::Dense(medium.clone()),
+        noise_seed,
+        shards,
+        Partition::Modes,
+        Registry::new(),
+    )
+}
+
+/// Equal-weight digital farm through the unified `Topology` build path.
+fn digital_farm(medium: &TransmissionMatrix, shards: usize) -> anyhow::Result<ProjectorFarm> {
+    topology_farm(
+        DeviceKind::Digital,
+        OpuParams::default(),
+        &Medium::Dense(medium.clone()),
+        0,
+        shards,
+        Partition::Modes,
+        Registry::new(),
+    )
+}
 
 #[test]
 fn digital_farm_matches_stacked_medium_at_pinned_shard_counts() {
@@ -29,7 +64,7 @@ fn digital_farm_matches_stacked_medium_at_pinned_shard_counts() {
         assert_eq!(stacked.b_re, medium.b_re);
         let mut oracle = DigitalProjector::new(stacked);
         let (want1, want2) = oracle.project(&e).unwrap();
-        let mut farm = ProjectorFarm::digital(&medium, shards).unwrap();
+        let mut farm = digital_farm(&medium, shards).unwrap();
         let (p1, p2) = farm.project(&e).unwrap();
         assert_eq!(p1, want1, "{shards} shards");
         assert_eq!(p2, want2, "{shards} shards");
@@ -43,7 +78,7 @@ fn optical_farm_matches_stacked_medium_at_pinned_shard_counts() {
     let mut oracle = NativeOpticalProjector::new(noiseless_params(), medium.clone(), 3);
     let (want1, want2) = oracle.project(&e).unwrap();
     for shards in [2usize, 4, 7] {
-        let mut farm = ProjectorFarm::optical(noiseless_params(), &medium, 3, shards).unwrap();
+        let mut farm = optical_farm(noiseless_params(), &medium, 3, shards).unwrap();
         let (p1, p2) = farm.project(&e).unwrap();
         assert!(
             p1.max_abs_diff(&want1) < 1e-5,
@@ -72,7 +107,7 @@ fn prop_digital_farm_parity() {
         let e = ternary_batch(3, 10, (modes + shards) as u64);
         let want1 = matmul(&e, &medium.b_re);
         let want2 = matmul(&e, &medium.b_im);
-        let mut farm = match ProjectorFarm::digital(&medium, shards) {
+        let mut farm = match digital_farm(&medium, shards) {
             Ok(f) => f,
             Err(_) => return false,
         };
@@ -92,7 +127,7 @@ fn prop_farm_accounting_sums() {
     forall("farm accounting sums", &gen, |&(shards, batches)| {
         let medium = TransmissionMatrix::sample(7, 10, 30);
         let mut farm =
-            ProjectorFarm::optical(OpuParams::default(), &medium, 5, shards).unwrap();
+            optical_farm(OpuParams::default(), &medium, 5, shards).unwrap();
         let b = 4usize;
         for i in 0..batches {
             farm.project(&ternary_batch(b, 10, i as u64)).unwrap();
@@ -126,7 +161,7 @@ fn noisy_farm_keeps_projection_quality() {
     let (s1, _) = single.project(&e).unwrap();
     let c_single = corr_of(&s1);
     for shards in [2usize, 4, 7] {
-        let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 4, shards).unwrap();
+        let mut farm = optical_farm(OpuParams::default(), &medium, 4, shards).unwrap();
         let (p1, _) = farm.project(&e).unwrap();
         let c = corr_of(&p1);
         assert!(c > 0.97, "{shards} shards: correlation {c}");
@@ -143,7 +178,7 @@ fn noisy_farm_keeps_projection_quality() {
 fn one_shard_farm_is_the_single_device() {
     let medium = TransmissionMatrix::sample(34, 10, 40);
     let mut single = NativeOpticalProjector::new(OpuParams::default(), medium.clone(), 21);
-    let mut farm = ProjectorFarm::optical(OpuParams::default(), &medium, 21, 1).unwrap();
+    let mut farm = optical_farm(OpuParams::default(), &medium, 21, 1).unwrap();
     for step in 0..5 {
         let e = ternary_batch(4, 10, 100 + step);
         let (s1, s2) = single.project(&e).unwrap();

@@ -9,79 +9,23 @@
 use std::sync::{Arc, Mutex};
 
 use litl::config::Partition;
-use litl::coordinator::farm::ProjectorFarm;
 use litl::coordinator::host::{HostMlp, HostTrainer};
-use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::projector::NativeOpticalProjector;
 use litl::coordinator::service::{
-    ProjectionService, ServiceConfig, ShardServiceConfig, ShardedProjectionService,
+    ClientProjector, ProjectionService, ServiceConfig, ShardServiceConfig,
+    ShardedProjectionService,
 };
-use litl::coordinator::ProjectionClient;
+use litl::coordinator::topology::DeviceKind;
 use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
 use litl::optics::OpuParams;
 use litl::tensor::{matmul, Tensor};
-use litl::util::rng::Pcg64;
 
 mod common;
-use common::ternary_batch;
+use common::{task_batch, ternary_batch, topology_farm};
 
 const LAYERS: &[usize] = &[20, 16, 16, 10];
-
-/// Projector adapter that talks to the shared service.
-struct ServiceProjector {
-    client: ProjectionClient,
-    modes: usize,
-    frames: u64,
-}
-
-impl Projector for ServiceProjector {
-    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
-        self.frames += frames.rows() as u64;
-        self.client.project(frames.clone())
-    }
-
-    fn modes(&self) -> usize {
-        self.modes
-    }
-
-    fn sim_seconds(&self) -> f64 {
-        self.frames as f64 / 1500.0
-    }
-
-    fn energy_joules(&self) -> f64 {
-        self.sim_seconds() * 30.0
-    }
-
-    fn kind(&self) -> &'static str {
-        "service"
-    }
-}
-
-fn task_batch(seed: u64, b: usize) -> (Tensor, Tensor) {
-    let mut proto_rng = Pcg64::new(1234, 0);
-    let proto = Tensor::randn(&[10, 20], &mut proto_rng, 1.0);
-    let mut rng = Pcg64::seeded(seed);
-    let x = Tensor::randn(&[b, 20], &mut rng, 1.0);
-    let mut pt = Tensor::zeros(&[20, 10]);
-    for i in 0..10 {
-        for j in 0..20 {
-            *pt.at_mut(j, i) = proto.at(i, j);
-        }
-    }
-    let scores = matmul(&x, &pt);
-    let mut yoh = Tensor::zeros(&[b, 10]);
-    for r in 0..b {
-        let row = scores.row(r);
-        let mut best = 0;
-        for (i, &v) in row.iter().enumerate() {
-            if v > row[best] {
-                best = i;
-            }
-        }
-        *yoh.at_mut(r, best) = 1.0;
-    }
-    (x, yoh)
-}
 
 #[test]
 fn ensemble_shares_one_opu() {
@@ -113,11 +57,7 @@ fn ensemble_shares_one_opu() {
             let client = svc.client();
             let results = results.clone();
             std::thread::spawn(move || {
-                let projector = Box::new(ServiceProjector {
-                    client,
-                    modes,
-                    frames: 0,
-                });
+                let projector = Box::new(ClientProjector::new(client, modes));
                 let mut tr = HostTrainer::new(
                     100 + i as u64, // independent inits: a real ensemble
                     LAYERS,
@@ -128,7 +68,7 @@ fn ensemble_shares_one_opu() {
                 let mut first = 0.0;
                 let mut last = 0.0;
                 for t in 0..STEPS {
-                    let (x, y) = task_batch(1000 + i as u64 * 500 + t, BATCH);
+                    let (x, y) = task_batch(1000 + i as u64 * 500 + t, BATCH, LAYERS);
                     let loss = tr.step(&x, &y).unwrap();
                     if t == 0 {
                         first = loss;
@@ -170,7 +110,7 @@ fn ensemble_shares_one_opu() {
 
     // Ensemble prediction beats (or matches) the worst member: sanity
     // that the members are usable together.
-    let (px, py) = task_batch(9_999, 200);
+    let (px, py) = task_batch(9_999, 200, LAYERS);
     let accs: Vec<f32> = results.iter().map(|(_, _, _, m)| m.accuracy(&px, &py)).collect();
     let mut vote_correct = 0usize;
     for r in 0..200 {
@@ -214,8 +154,11 @@ fn soak_concurrent_clients_on_four_shard_service() {
     let medium = TransmissionMatrix::sample(77, d_in, 32);
     for partition in [Partition::Modes, Partition::Batch] {
         let reg = Registry::new();
-        let farm = ProjectorFarm::digital_partitioned(
-            &medium,
+        let farm = topology_farm(
+            DeviceKind::Digital,
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            0,
             4,
             partition,
             Registry::new(),

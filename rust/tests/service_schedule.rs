@@ -10,8 +10,8 @@
 //! in-flight work: nothing submitted before `shutdown()` is lost.
 
 use litl::config::Partition;
-use litl::coordinator::farm::ProjectorFarm;
 use litl::coordinator::projector::{NativeOpticalProjector, Projector};
+use litl::coordinator::topology::DeviceKind;
 use litl::coordinator::service::{
     ProjectionService, ServiceConfig, ShardServiceConfig, ShardedProjectionService,
 };
@@ -22,7 +22,8 @@ use litl::tensor::{matmul, Tensor};
 use litl::util::check::{forall, PairG, UsizeIn};
 
 mod common;
-use common::{noiseless_params, ternary_batch};
+use common::{noiseless_params, ternary_batch, topology_devices, topology_farm};
+use litl::optics::stream::Medium;
 
 const D_IN: usize = 10;
 
@@ -36,8 +37,15 @@ fn sharded_service(
     partition: Partition,
     registry: Registry,
 ) -> ShardedProjectionService {
-    let devices =
-        ProjectorFarm::digital_shard_devices(medium, shards, partition).unwrap();
+    let devices = topology_devices(
+        DeviceKind::Digital,
+        OpuParams::default(),
+        &Medium::Dense(medium.clone()),
+        0,
+        shards,
+        partition,
+    )
+    .unwrap();
     ShardedProjectionService::start(
         devices,
         D_IN,
@@ -99,9 +107,10 @@ fn noiseless_optical_schedule_matches_single_device_within_tolerance() {
     let medium = TransmissionMatrix::sample(62, D_IN, 28);
     for partition in [Partition::Modes, Partition::Batch] {
         for shards in [1usize, 2, 4, 7] {
-            let devices = ProjectorFarm::optical_shard_devices(
+            let devices = topology_devices(
+                DeviceKind::Optical,
                 noiseless_params(),
-                &medium,
+                &Medium::Dense(medium.clone()),
                 5,
                 shards,
                 partition,
@@ -184,9 +193,10 @@ fn one_shard_schedule_is_bitwise_the_device_agnostic_path() {
 
     // (c)+(d) shard-aware service at shards=1, both partitions.
     for partition in [Partition::Modes, Partition::Batch] {
-        let devices = ProjectorFarm::optical_shard_devices(
+        let devices = topology_devices(
+            DeviceKind::Optical,
             OpuParams::default(),
-            &medium,
+            &Medium::Dense(medium.clone()),
             seed,
             1,
             partition,
@@ -282,8 +292,11 @@ fn shutdown_drains_pending_requests_before_join() {
     // Shard-aware path, both partitions.
     for partition in [Partition::Modes, Partition::Batch] {
         let reg = Registry::new();
-        let farm = ProjectorFarm::digital_partitioned(
-            &medium,
+        let farm = topology_farm(
+            DeviceKind::Digital,
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            0,
             4,
             partition,
             Registry::new(),

@@ -15,9 +15,9 @@
 //!   allocation provably fails).
 
 use litl::config::Partition;
-use litl::coordinator::farm::ProjectorFarm;
 use litl::coordinator::projector::{DigitalProjector, NativeOpticalProjector, Projector};
 use litl::coordinator::service::{ShardServiceConfig, ShardedProjectionService};
+use litl::coordinator::topology::DeviceKind;
 use litl::metrics::Registry;
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::stream::{Medium, StreamedMedium};
@@ -25,7 +25,7 @@ use litl::optics::OpuParams;
 use litl::tensor::{matmul, Tensor};
 
 mod common;
-use common::{noiseless_params, ternary_batch};
+use common::{noiseless_params, ternary_batch, topology_devices, topology_farm};
 
 const D_IN: usize = 10;
 const MODES: usize = 48;
@@ -46,15 +46,21 @@ fn streamed_digital_farm_is_bitwise_dense_at_shards_1_2_4() {
     let reference = TransmissionMatrix::sample(SEED, D_IN, MODES);
     for partition in [Partition::Modes, Partition::Batch] {
         for shards in [1usize, 2, 4] {
-            let mut df = ProjectorFarm::digital_partitioned_backed(
+            let mut df = topology_farm(
+                DeviceKind::Digital,
+                OpuParams::default(),
                 &dense(),
+                0,
                 shards,
                 partition,
                 Registry::new(),
             )
             .unwrap();
-            let mut sf = ProjectorFarm::digital_partitioned_backed(
+            let mut sf = topology_farm(
+                DeviceKind::Digital,
+                OpuParams::default(),
                 &streamed(),
+                0,
                 shards,
                 partition,
                 Registry::new(),
@@ -76,7 +82,8 @@ fn streamed_digital_farm_is_bitwise_dense_at_shards_1_2_4() {
 fn streamed_noiseless_optical_farm_is_bitwise_dense_at_shards_1_2_4() {
     for partition in [Partition::Modes, Partition::Batch] {
         for shards in [1usize, 2, 4] {
-            let mut df = ProjectorFarm::optical_partitioned_backed(
+            let mut df = topology_farm(
+                DeviceKind::Optical,
                 noiseless_params(),
                 &dense(),
                 NOISE_SEED,
@@ -85,7 +92,8 @@ fn streamed_noiseless_optical_farm_is_bitwise_dense_at_shards_1_2_4() {
                 Registry::new(),
             )
             .unwrap();
-            let mut sf = ProjectorFarm::optical_partitioned_backed(
+            let mut sf = topology_farm(
+                DeviceKind::Optical,
                 noiseless_params(),
                 &streamed(),
                 NOISE_SEED,
@@ -113,7 +121,8 @@ fn streamed_noisy_optical_farm_is_bitwise_dense_too() {
     // is computed, not what it is, so even the noisy draws line up.
     for partition in [Partition::Modes, Partition::Batch] {
         for shards in [1usize, 2, 4] {
-            let mut df = ProjectorFarm::optical_partitioned_backed(
+            let mut df = topology_farm(
+                DeviceKind::Optical,
                 OpuParams::default(),
                 &dense(),
                 NOISE_SEED,
@@ -122,7 +131,8 @@ fn streamed_noisy_optical_farm_is_bitwise_dense_too() {
                 Registry::new(),
             )
             .unwrap();
-            let mut sf = ProjectorFarm::optical_partitioned_backed(
+            let mut sf = topology_farm(
+                DeviceKind::Optical,
                 OpuParams::default(),
                 &streamed(),
                 NOISE_SEED,
@@ -154,14 +164,15 @@ fn one_streamed_shard_is_bitwise_the_classic_single_device_path() {
     );
     let mut bare =
         NativeOpticalProjector::with_medium(OpuParams::default(), streamed(), NOISE_SEED);
-    let mut farm1 = ProjectorFarm::optical_partitioned_backed(
-        OpuParams::default(),
-        &streamed(),
-        NOISE_SEED,
-        1,
-        Partition::Modes,
-        Registry::new(),
-    )
+    let mut farm1 = topology_farm(
+                DeviceKind::Optical,
+                OpuParams::default(),
+                &streamed(),
+                NOISE_SEED,
+                1,
+                Partition::Modes,
+                Registry::new(),
+            )
     .unwrap();
     for step in 0..3 {
         let e = ternary_batch(4, D_IN, 400 + step);
@@ -189,7 +200,8 @@ fn streamed_shards_compose_with_the_sharded_service() {
     // (single scheduler thread), so replies must match bit for bit.
     for partition in [Partition::Modes, Partition::Batch] {
         let run = |medium: Medium| -> Vec<(Tensor, Tensor)> {
-            let devices = ProjectorFarm::optical_shard_devices_backed(
+            let devices = topology_devices(
+                DeviceKind::Optical,
                 noiseless_params(),
                 &medium,
                 NOISE_SEED,
@@ -225,8 +237,11 @@ fn streamed_shards_compose_with_the_sharded_service() {
 
 #[test]
 fn streamed_farm_project_on_charges_one_shard_and_matches_the_slice() {
-    let mut farm = ProjectorFarm::digital_partitioned_backed(
+    let mut farm = topology_farm(
+        DeviceKind::Digital,
+        OpuParams::default(),
         &streamed(),
+        0,
         3,
         Partition::Modes,
         Registry::new(),

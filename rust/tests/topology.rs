@@ -1,0 +1,370 @@
+//! Unified `Topology` builder contract (ISSUE 4 acceptance):
+//!
+//! * **Legacy parity** — every deprecated `ProjectorFarm` constructor is
+//!   a shim over `Topology::build_*`, and an equal-weight homogeneous
+//!   topology is *bitwise identical* to the pre-refactor construction at
+//!   shards 1/2/4 under both partitions (digital exact; optics bitwise —
+//!   same mode windows, same noise streams — noisy included).
+//! * **Weighted scheduling** — under the batch partition the farm and
+//!   the frame-slot scheduler split rows proportionally to shard
+//!   weights; equal weights reproduce the historical even split.
+//! * **Heterogeneous fleets** — a mixed optical+digital weighted
+//!   topology serves and *trains* through the sharded service, with
+//!   per-shard slot/energy attribution summing correctly in `Registry`.
+//! * **Value-type guarantees** — shorthand round-trips, the stable hash
+//!   distinguishes topologies, `build()` is a pure function of the
+//!   descriptor (two builds, same bits).
+
+use litl::config::{MediumBacking, Partition, TrainConfig};
+use litl::coordinator::farm::ProjectorFarm;
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::projector::Projector;
+use litl::coordinator::service::{ClientProjector, ShardServiceConfig};
+use litl::coordinator::topology::{DeviceKind, PoolPolicy, ShardSpec, Topology};
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
+use litl::optics::OpuParams;
+use litl::sim::power::{Holography, OpuModel};
+use litl::tensor::matmul;
+use litl::util::rng::Pcg64;
+
+mod common;
+use common::{task_batch, ternary_batch};
+
+const D_IN: usize = 10;
+
+fn dense(modes: usize) -> Medium {
+    Medium::Dense(TransmissionMatrix::sample(77, D_IN, modes))
+}
+
+/// Equal-weight homogeneous topologies reproduce the legacy constructor
+/// matrix bit for bit — shards 1/2/4 × both partitions, noisy optics
+/// included (same windows, same `NOISE_STREAM_BASE + i` streams).
+#[test]
+#[allow(deprecated)]
+fn equal_weight_topology_is_bitwise_the_legacy_construction() {
+    let tm = TransmissionMatrix::sample(77, D_IN, 28);
+    for partition in [Partition::Modes, Partition::Batch] {
+        for shards in [1usize, 2, 4] {
+            let e = ternary_batch(6, D_IN, 900 + shards as u64);
+            // Optical, noise ON: bit equality pins windows AND streams.
+            let mut legacy = ProjectorFarm::optical_partitioned_backed(
+                OpuParams::default(),
+                &dense(28),
+                13,
+                shards,
+                partition,
+                Registry::new(),
+            )
+            .unwrap();
+            let mut topo = Topology::homogeneous(DeviceKind::Optical, shards)
+                .with_partition(partition)
+                .build_farm(OpuParams::default(), &dense(28), 13, Registry::new())
+                .unwrap();
+            assert_eq!(
+                legacy.project(&e).unwrap(),
+                topo.project(&e).unwrap(),
+                "optical {partition:?} shards={shards}"
+            );
+            // Digital: bitwise the exact stacked projection.
+            let mut legacy = ProjectorFarm::digital_partitioned_backed(
+                &dense(28),
+                shards,
+                partition,
+                Registry::new(),
+            )
+            .unwrap();
+            let mut topo = Topology::homogeneous(DeviceKind::Digital, shards)
+                .with_partition(partition)
+                .build_farm(OpuParams::default(), &dense(28), 0, Registry::new())
+                .unwrap();
+            let (l1, l2) = legacy.project(&e).unwrap();
+            let (t1, t2) = topo.project(&e).unwrap();
+            assert_eq!(l1, t1, "digital {partition:?} shards={shards}");
+            assert_eq!(l2, t2);
+            assert_eq!(l1, matmul(&e, &tm.b_re), "digital vs oracle");
+            assert_eq!(l2, matmul(&e, &tm.b_im));
+        }
+    }
+}
+
+/// `build()` is a pure function of the topology: two farms from the
+/// same descriptor produce identical bits, and the descriptor itself
+/// round-trips through its serialization with a stable hash.
+#[test]
+fn build_is_a_pure_function_of_the_descriptor() {
+    let topo = Topology::parse("opt:2@2+dig:1").unwrap();
+    let reparsed = Topology::parse(&topo.shorthand()).unwrap();
+    assert_eq!(topo, reparsed);
+    assert_eq!(topo.stable_hash(), reparsed.stable_hash());
+    let e = ternary_batch(5, D_IN, 42);
+    let run = |t: &Topology| {
+        let mut farm = t
+            .build_farm(OpuParams::default(), &dense(24), 9, Registry::new())
+            .unwrap();
+        farm.project(&e).unwrap()
+    };
+    assert_eq!(run(&topo), run(&reparsed));
+}
+
+/// Weighted batch scheduling through the sharded service: rows go to
+/// shards proportionally to weights, per scheduled frame sequence.
+#[test]
+fn weighted_service_splits_scheduled_rows_by_weight() {
+    let mut topo =
+        Topology::homogeneous(DeviceKind::Digital, 2).with_partition(Partition::Batch);
+    topo.shards[0].weight = 3;
+    let reg = Registry::new();
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            &dense(16),
+            0,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 32,
+                lane_depth: 4,
+                partition: Partition::Batch,
+                frame_rate_hz: 1500.0,
+            },
+            reg.clone(),
+        )
+        .unwrap();
+    let client = svc.client();
+    let tm = TransmissionMatrix::sample(77, D_IN, 16);
+    for i in 0..3 {
+        let e = ternary_batch(16, D_IN, 50 + i);
+        let (p1, p2) = client.project(e.clone()).unwrap();
+        assert_eq!(p1, matmul(&e, &tm.b_re), "request {i}");
+        assert_eq!(p2, matmul(&e, &tm.b_im), "request {i}");
+    }
+    svc.shutdown();
+    let snap = reg.snapshot();
+    // Each 16-row frame sequence splits 12/4 at weights 3:1.
+    assert_eq!(snap["service_shard0_slots"], 36.0);
+    assert_eq!(snap["service_shard1_slots"], 12.0);
+    assert_eq!(reg.sum_counters("service_shard", "_slots"), 48.0);
+}
+
+/// The acceptance scenario: a mixed optical+digital *weighted* topology
+/// trains end-to-end through the sharded projection service, and the
+/// per-shard slot/energy attribution in `Registry` explains the totals.
+#[test]
+fn hetero_weighted_topology_trains_through_the_sharded_service() {
+    run_hetero_training(60, 16);
+}
+
+/// The CI `hetero-smoke` job's release-mode run: same scenario, longer
+/// horizon and the full synthetic-MNIST input width.
+#[test]
+#[ignore = "hetero smoke: run with --ignored (dedicated CI step)"]
+fn hetero_smoke_full_mnist_through_weighted_service() {
+    run_hetero_mnist_smoke();
+}
+
+/// Shared body: 2 optical (weight 2) + 1 digital (weight 1) shards on
+/// the modes partition serve a host DFA trainer's error projections.
+fn run_hetero_training(steps: u64, modes: usize) {
+    let layers = [20usize, modes, modes, 10];
+    let topo = Topology::parse("hetero:opt:2@2+dig:1").unwrap();
+    assert!(!topo.is_homogeneous());
+    assert_eq!(topo.kind_tag(), "farm-hetero");
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, modes));
+    let reg = Registry::new();
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            &medium,
+            7,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition: Partition::Modes,
+                frame_rate_hz: 1500.0,
+            },
+            reg.clone(),
+        )
+        .unwrap();
+    let projector = Box::new(ClientProjector::new(svc.client(), modes));
+    let mut tr = HostTrainer::new(
+        11,
+        &layers,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    let batch = 16usize;
+    let (mut first, mut last) = (0.0f32, 0.0f32);
+    for t in 0..steps {
+        let (x, y) = task_batch(3_000 + t, batch, &layers);
+        let loss = tr.step(&x, &y).unwrap();
+        if t == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    let slot_s = svc.shard_slot_seconds();
+    svc.shutdown();
+    assert!(last < 0.95 * first, "no learning: first={first} last={last}");
+
+    // Attribution: modes partition charges every shard every frame.
+    let total_rows = (steps * batch as u64) as f64;
+    let snap = reg.snapshot();
+    assert_eq!(snap["service_frames"], total_rows);
+    for shard in 0..3 {
+        assert_eq!(
+            snap[&format!("service_shard{shard}_slots")],
+            total_rows,
+            "shard {shard} slots"
+        );
+    }
+    assert_eq!(
+        reg.sum_counters("service_shard", "_slots"),
+        3.0 * total_rows,
+        "fleet slot roll-up"
+    );
+    // Scheduler slot clocks agree with the counters, and the energy
+    // model prices exactly the summed slots.
+    let clock_total: f64 = slot_s.iter().sum();
+    assert!((clock_total - 3.0 * total_rows / 1500.0).abs() < 1e-9);
+    let opu = OpuModel::paper(Holography::OffAxis);
+    let slots: Vec<u64> = (0..3)
+        .map(|i| snap[&format!("service_shard{i}_slots")] as u64)
+        .collect();
+    let fleet_energy = opu.service_energy(&slots);
+    let per_shard_energy: f64 =
+        slots.iter().map(|&s| s as f64 * opu.slot_energy()).sum();
+    assert!(
+        (fleet_energy - per_shard_energy).abs() < 1e-9,
+        "fleet energy {fleet_energy} != per-shard sum {per_shard_energy}"
+    );
+}
+
+/// Release-mode smoke at synthetic-MNIST scale (784-dim inputs).
+fn run_hetero_mnist_smoke() {
+    use litl::data::{self, Split};
+    let modes = 32usize;
+    let layers = [784usize, modes, modes, 10];
+    let ds = data::load_or_synth(7, 2_000, 500).unwrap();
+    let topo = Topology::parse("opt:2@2+dig:1").unwrap();
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, modes));
+    let reg = Registry::new();
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            &medium,
+            7,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 128,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition: Partition::Modes,
+                frame_rate_hz: 1500.0,
+            },
+            reg.clone(),
+        )
+        .unwrap();
+    let projector = Box::new(ClientProjector::new(svc.client(), modes));
+    let mut tr = HostTrainer::new(
+        11,
+        &layers,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    let batch = 32usize;
+    let mut rng = Pcg64::seeded(5);
+    let mut steps = 0u64;
+    let (mut first, mut last) = (0.0f32, 0.0f32);
+    'outer: for _epoch in 0..4 {
+        let mut shuffle = rng.split();
+        for (x, y) in ds.batches(Split::Train, batch, &mut shuffle) {
+            let loss = tr.step(&x, &y).unwrap();
+            if steps == 0 {
+                first = loss;
+            }
+            last = loss;
+            steps += 1;
+            if steps >= 200 {
+                break 'outer;
+            }
+        }
+    }
+    svc.shutdown();
+    assert!(last < 0.8 * first, "no learning: first={first} last={last}");
+    // Accuracy well above chance on held-out digits.
+    let idxs: Vec<usize> = (0..500).collect();
+    let (tx, ty) = ds.gather(Split::Test, &idxs);
+    let acc = tr.mlp.accuracy(&tx, &ty);
+    assert!(acc > 0.3, "test accuracy {acc} barely above chance");
+    // Every scheduled frame is attributed on every shard (modes axis).
+    let total_rows = (steps * batch as u64) as f64;
+    assert_eq!(
+        reg.sum_counters("service_shard", "_slots"),
+        3.0 * total_rows
+    );
+    assert_eq!(reg.snapshot()[litl::coordinator::service::SHARD_ERRORS], 0.0);
+}
+
+/// Explicit mode ranges and per-shard noise streams build too — the
+/// fully-specified descriptor, not just the weight-derived one.
+#[test]
+fn explicit_ranges_and_streams_build_and_match_windows() {
+    let tm = TransmissionMatrix::sample(77, D_IN, 24);
+    let topo = Topology {
+        shards: vec![
+            ShardSpec {
+                device: DeviceKind::Digital,
+                weight: 1,
+                mode_range: Some((0, 10)),
+                noise_stream: None,
+            },
+            ShardSpec {
+                device: DeviceKind::Digital,
+                weight: 1,
+                mode_range: Some((10, 24)),
+                noise_stream: None,
+            },
+        ],
+        partition: Partition::Modes,
+        backing: MediumBacking::Materialized,
+        pool: PoolPolicy::Owned,
+    };
+    let mut farm = topo
+        .build_farm(OpuParams::default(), &dense(24), 0, Registry::new())
+        .unwrap();
+    assert_eq!(farm.mode_counts(), &[10, 14]);
+    let e = ternary_batch(4, D_IN, 8);
+    let (p1, _) = farm.project(&e).unwrap();
+    assert_eq!(p1, matmul(&e, &tm.b_re));
+}
+
+/// TrainConfig wiring: the resolved projection topology follows the
+/// `[topology]` section / `--topology` shorthand, and validation
+/// rejects the impossible combinations before any artifact loads.
+#[test]
+fn train_config_resolves_and_validates_topologies() {
+    let mut cfg = TrainConfig::default();
+    cfg.set_kv("topology=\"opt:2@2+dig:1\"").unwrap();
+    cfg.validate_projection().unwrap();
+    let topo = cfg.projection_topology();
+    assert_eq!(topo.shorthand(), "opt:2@2+dig:1");
+    assert_eq!(topo.weights(), vec![2, 2, 1]);
+
+    // streamed + hlo is rejected (the artifact needs dense tensors).
+    let mut cfg = TrainConfig::default();
+    cfg.set_kv("projector=hlo").unwrap();
+    cfg.set_kv("medium=streamed").unwrap();
+    assert!(cfg.validate_projection().is_err());
+
+    // hlo cannot drive a topology at all.
+    let mut cfg = TrainConfig::default();
+    cfg.set_kv("projector=hlo").unwrap();
+    cfg.set_kv("topology=opt:2").unwrap();
+    assert!(cfg.validate_projection().is_err());
+}
