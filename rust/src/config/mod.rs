@@ -168,6 +168,12 @@ pub struct TrainConfig {
     /// (dense tensors) or `streamed` (memory-less tile regeneration;
     /// optical algo with the native or digital projector only).
     pub medium: MediumBacking,
+    /// Bounded cross-step tile cache for the streamed backing, in MiB
+    /// (`--tile-cache-mb`, `[topology] tile_cache_mb = N`).  `0` (the
+    /// default) disables it: every projection regenerates its tiles.
+    /// The budget folds into the streamed medium's resident-bytes
+    /// ceiling; cached and uncached projections are bitwise equal.
+    pub tile_cache_mb: usize,
     /// Explicit device topology (`--topology opt:4+dig:2@3`-style
     /// shorthand, or a `[topology]` TOML section).  `None` = the
     /// homogeneous topology implied by `projector`/`shards`.  The
@@ -201,6 +207,7 @@ impl Default for TrainConfig {
             shards: 1,
             partition: Partition::Modes,
             medium: MediumBacking::Materialized,
+            tile_cache_mb: 0,
             topology: None,
             topology_pool: PoolPolicy::Owned,
         }
@@ -248,6 +255,13 @@ impl TrainConfig {
             "medium" | "medium_backing" | "topology.medium" | "topology.backing" => {
                 self.medium = MediumBacking::parse(value.want_str()?)?
             }
+            "tile_cache_mb" | "topology.tile_cache_mb" => {
+                let n = value.want_int()?;
+                if n < 0 {
+                    bail!("tile_cache_mb must be >= 0 (0 disables the cache), got {n}");
+                }
+                self.tile_cache_mb = n as usize;
+            }
             "topology" | "topology.spec" => {
                 self.topology = Some(Topology::parse(value.want_str()?)?)
             }
@@ -288,6 +302,15 @@ impl TrainConfig {
             "projector=hlo does not support --medium streamed (the \
              opu_project artifact takes the dense medium as an input); \
              use projector=native or digital"
+        );
+        // The tile cache caches *regenerated* tiles; the materialized
+        // backing already holds every tile resident, so a budget there
+        // is a configuration error, not a silent no-op.
+        anyhow::ensure!(
+            self.tile_cache_mb == 0 || self.medium == MediumBacking::Streamed,
+            "--tile-cache-mb {} only applies to --medium streamed (the \
+             materialized backing holds the dense tensors already)",
+            self.tile_cache_mb
         );
         anyhow::ensure!(
             self.shards <= 1 || self.projector != ProjectorKind::OpticalHlo,
@@ -444,6 +467,32 @@ mod tests {
             format!("{err:#}").contains("materialized|streamed"),
             "error names the allowed values: {err:#}"
         );
+    }
+
+    #[test]
+    fn tile_cache_knob_parses_validates_and_round_trips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.tile_cache_mb, 0, "cache is off by default");
+        c.set_kv("tile_cache_mb=64").unwrap();
+        assert_eq!(c.tile_cache_mb, 64);
+        assert!(c.set_kv("tile_cache_mb=-1").is_err());
+        // Cache without the streamed backing is a loud config error.
+        let err = c.validate_projection().unwrap_err().to_string();
+        assert!(err.contains("streamed"), "{err}");
+        c.set_kv("medium=streamed").unwrap();
+        c.validate_projection().unwrap();
+        // The `[topology]` section spelling maps to the same knob.
+        let path = std::env::temp_dir().join("litl_cfg_tile_cache_test.toml");
+        std::fs::write(
+            &path,
+            "[topology]\ntile_cache_mb = 128\nmedium = \"streamed\"\n",
+        )
+        .unwrap();
+        let mut c2 = TrainConfig::default();
+        c2.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c2.tile_cache_mb, 128);
+        assert_eq!(c2.medium, MediumBacking::Streamed);
+        c2.validate_projection().unwrap();
     }
 
     #[test]

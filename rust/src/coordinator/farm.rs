@@ -766,7 +766,10 @@ mod tests {
 
     /// Every legacy constructor is a shim over `Topology::build_farm` —
     /// pin that the shims still build the *same* farm, bit for bit
-    /// (noisy optics included: same windows, same noise streams).
+    /// (noisy optics included: same windows, same noise streams).  The
+    /// shims are the thing under test, so the `allow(deprecated)` is
+    /// intentional (the only other one lives in tests/topology.rs's
+    /// legacy-parity pin).
     #[test]
     #[allow(deprecated)]
     fn legacy_shims_match_their_topologies_bitwise() {

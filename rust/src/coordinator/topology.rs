@@ -39,6 +39,14 @@
 //! heterogeneous farms: graceful degradation and honest comparators in
 //! one fleet.
 //!
+//! **What a topology does not carry**: per-*instance* properties of the
+//! physical medium — notably the streamed backing's cross-step tile
+//! cache (`--tile-cache-mb` / `[topology] tile_cache_mb`, a
+//! [`TrainConfig`](crate::config::TrainConfig) knob).  The trainer
+//! attaches the cache to the [`Medium`] *before* the build carves shard
+//! windows, so every shard of any topology shares one budget; builds
+//! stay pure functions of (topology, medium) either way.
+//!
 //! Shorthand grammar (CLI `--topology`, TOML `topology = "..."`):
 //!
 //! ```text
@@ -602,15 +610,26 @@ fn backing_of(medium: &Medium) -> MediumBacking {
 /// Streamed replicas under the batch partition each regenerate the full
 /// mode width — total generation work scales with the shard count.  Say
 /// so once at build rather than letting a 1e5+-mode run discover it
-/// from the wall clock.
+/// from the wall clock.  (A shared tile cache — the medium-instance
+/// `--tile-cache-mb` knob, attached before the build carves replicas —
+/// softens this: the replicas hit each other's tiles.)
 fn warn_streamed_batch_cost(medium: &Medium, shards: usize) {
     if shards > 1 && matches!(medium, Medium::Streamed(_)) {
+        let cached = matches!(
+            medium,
+            Medium::Streamed(sm) if sm.tile_cache().is_some()
+        );
         log::warn!(
             "streamed medium × batch partition: each of the {shards} replicas \
              regenerates all {} modes per projection (~{shards}× the modes \
-             partition's generation work); prefer --partition modes at large \
-             mode counts",
-            medium.modes()
+             partition's generation work{}); prefer --partition modes at \
+             large mode counts",
+            medium.modes(),
+            if cached {
+                ", softened by the shared tile cache"
+            } else {
+                "; --tile-cache-mb lets replicas share generated tiles"
+            }
         );
     }
 }

@@ -124,7 +124,12 @@ impl Trainer {
             MediumBacking::Streamed => Medium::Streamed(
                 StreamedMedium::new(medium_seed, err_dim, bc.modes)
                     .with_pool(crate::exec::shared_pool())
-                    .with_metrics(&metrics),
+                    .with_metrics(&metrics)
+                    // Cross-step tile cache (--tile-cache-mb; 0 = off).
+                    // Attached before the topology carves windows, so
+                    // every shard shares one budget and repeated
+                    // training steps hit instead of regenerating.
+                    .with_tile_cache_mb(cfg.tile_cache_mb),
             ),
         };
         let projector: Option<Box<dyn Projector>> = match cfg.algo {

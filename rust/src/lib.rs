@@ -136,6 +136,25 @@
 //! `stream-smoke` job replays it at 1e5 modes under a hard `ulimit -v`
 //! where the dense allocation provably fails — the memory-less
 //! guarantee is enforced, not just documented.
+//!
+//! ## The fast generation path (batched kernel + cross-step tile cache)
+//!
+//! Generation itself is engineered on two axes.  (1) The Box–Muller
+//! walk runs through a **batched lane kernel**
+//! ([`util::rng::Pcg64::fill_normal`] /
+//! [`util::rng::Pcg64::fill_normal_quadrature`]): uniforms land in
+//! [`util::rng::NORMAL_LANE`]-pair stack arrays and each
+//! transcendental runs as its own tight loop, **bitwise identical** to
+//! the scalar walk (kept as `fill_normal_scalar`, the pinned oracle) —
+//! including spare carry, odd lengths and `advance`-seeked offsets —
+//! with the CI `gen-kernel-bench` job failing any speed regression.
+//! (2) Repeated training steps stop regenerating identical tiles: the
+//! streamed backing takes a **bounded LRU tile cache**
+//! ([`optics::stream::TileCache`], `--tile-cache-mb`, default off)
+//! shared across pool jobs and shard windows; cached and uncached
+//! projections are bitwise equal, hits charge zero generation
+//! sim-seconds, and the byte budget folds into
+//! `resident_tm_bytes` so the `stream-smoke` ceiling proof covers it.
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

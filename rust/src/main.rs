@@ -24,7 +24,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
-    "partition", "medium", "topology",
+    "partition", "medium", "topology", "tile-cache-mb",
 ];
 
 fn main() {
@@ -111,6 +111,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(t) = args.flag("topology") {
         cfg.topology = Some(Topology::parse(t)?);
     }
+    if let Some(n) = args.flag_parse::<usize>("tile-cache-mb")? {
+        cfg.tile_cache_mb = n;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -127,7 +130,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.validate_projection()?;
     log::info!(
         "train: algo={} lr={} epochs={} config={} projector={:?} shards={} \
-         partition={} medium={}",
+         partition={} medium={} tile_cache_mb={}",
         cfg.algo.name(),
         cfg.lr,
         cfg.epochs,
@@ -135,7 +138,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.projector,
         cfg.shards,
         cfg.partition.name(),
-        cfg.medium.name()
+        cfg.medium.name(),
+        cfg.tile_cache_mb
     );
     if cfg.algo == Algo::Optical && cfg.projector != litl::config::ProjectorKind::OpticalHlo
     {
@@ -333,6 +337,12 @@ COMMANDS:
                                     memory-less tile regeneration (1e5+
                                     modes; optical algo, native/digital
                                     projector)
+          --tile-cache-mb N         bounded LRU cache of generated TM
+                                    tiles for --medium streamed (MiB;
+                                    default 0 = off): repeated training
+                                    steps hit cache instead of
+                                    regenerating; bitwise identical
+                                    either way
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

@@ -94,7 +94,10 @@ impl TransmissionMatrix {
     /// Fill scratch with columns `col0 .. col0 + re.len()` of row `row`
     /// — the tile primitive.  Column `c` is Box–Muller pair `c` of the
     /// row stream, so the window seeks there with one O(log col0)
-    /// [`Pcg64::advance`] and then generates sequentially.
+    /// [`Pcg64::advance`] and then generates sequentially through the
+    /// batched lane kernel ([`Pcg64::fill_normal_quadrature`]), which is
+    /// bitwise identical to the scalar per-pair walk it replaced (pinned
+    /// in `util::rng` tests, including `advance`-seeked odd offsets).
     pub fn stream_row_window_into(
         seed: u64,
         row: usize,
@@ -108,10 +111,7 @@ impl TransmissionMatrix {
             // One pair = (re, im) = exactly 2 raw draws.
             rng.advance(2 * col0 as u128);
         }
-        for (r, i) in re.iter_mut().zip(im.iter_mut()) {
-            *r = rng.next_normal_f32() * SCALE;
-            *i = rng.next_normal_f32() * SCALE;
-        }
+        rng.fill_normal_quadrature(SCALE, re, im);
     }
 
     /// Memory-less projection of one ternary vector using streamed rows:
@@ -285,6 +285,38 @@ mod tests {
             TransmissionMatrix::stream_row_window_into(13, 4, col0, &mut re, &mut im);
             assert_eq!(&re[..], &re_full[col0..col0 + w], "col0 {col0}");
             assert_eq!(&im[..], &im_full[col0..col0 + w], "col0 {col0}");
+        }
+    }
+
+    #[test]
+    fn row_window_is_bitwise_the_scalar_pair_walk() {
+        // The generation contract, spelled out: entry (r, c) of the
+        // matrix is Box–Muller pair c of the row stream, cos quadrature
+        // to re, sin to im, scaled in f32.  The batched lane kernel
+        // behind `stream_row_window_into` must reproduce this scalar
+        // walk bit for bit at any window offset.
+        for (col0, w) in [(0usize, 100usize), (1, 37), (7, 64), (4096, 33)] {
+            let mut rng = Pcg64::new(21 ^ 0x5eed, 6);
+            rng.advance(2 * col0 as u128);
+            let mut want_re = vec![0.0f32; w];
+            let mut want_im = vec![0.0f32; w];
+            for k in 0..w {
+                want_re[k] = rng.next_normal_f32() * SCALE;
+                want_im[k] = rng.next_normal_f32() * SCALE;
+            }
+            let mut re = vec![0.0f32; w];
+            let mut im = vec![0.0f32; w];
+            TransmissionMatrix::stream_row_window_into(21, 6, col0, &mut re, &mut im);
+            assert_eq!(
+                re.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want_re.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "re col0 {col0}"
+            );
+            assert_eq!(
+                im.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                want_im.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "im col0 {col0}"
+            );
         }
     }
 

@@ -42,14 +42,50 @@
 //! generated, so benches can report the emulation cost separately from
 //! the optics frame clock.
 //!
+//! ## Phase 2: the bounded cross-step tile cache
+//!
+//! Training regenerates the *same* tiles every step (the matrix never
+//! changes — that is the point of the medium).  [`TileCache`] amortizes
+//! that: a bounded LRU of generated row-tiles keyed by
+//! `(seed, row, col0, width)` — absolute medium coordinates plus the
+//! generating seed — sized to a byte budget
+//! (`--tile-cache-mb`, default off), shared across the scoped pool's
+//! tile jobs behind one mutex and — like the stats — across every
+//! clone/window/shard of the medium, so a farm gets one fleet-wide
+//! budget.
+//!
+//! Cache rules (pinned in `rust/tests/stream_parity.rs`):
+//!
+//! * **Determinism** — a cached tile is stored exactly as generated, so
+//!   cached and uncached projections are **bitwise equal** at any shard
+//!   count under either partition, noisy optics included.  Hit/miss
+//!   *counts* are accounting, not part of the contract: concurrent
+//!   full-medium replicas (batch partition) may race to generate the
+//!   same tile, and whichever identical copy lands first wins.
+//! * **Attribution** — cache hits charge **zero** generation
+//!   sim-seconds and zero tiles/bytes-generated; misses charge exactly
+//!   as before (with a cache attached, the gen clock times the
+//!   generation calls themselves; without one, the PR-3 whole-job
+//!   timing is unchanged).
+//! * **Residency** — the budget counts tile **payload** bytes
+//!   (`width × 2 quadratures × 4 B`); an over-budget insert evicts LRU
+//!   tiles first and is skipped entirely if the tile alone exceeds the
+//!   budget.  Per-tile bookkeeping (two `Vec` headers, the `Arc`
+//!   control block, hash/BTree nodes — roughly 200 B/tile) is *not*
+//!   charged: ~0.6% of a default 4096-column tile, so size the budget
+//!   accordingly if you shrink `tile_cols` far below the default.
+//!   [`StreamedMedium::resident_tm_bytes`] includes the full budget,
+//!   so the memory-ceiling story (CI `stream-smoke`) covers the cache.
+//!
 //! [`Pcg64::advance`]: crate::util::rng::Pcg64::advance
 
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::exec::ThreadPool;
-use crate::metrics::{Counter, Registry};
+use crate::metrics::{Counter, Gauge, Registry};
 use crate::sim::clock::SimClock;
 use crate::tensor::{axpy, matmul, matmul_pooled, Tensor};
 
@@ -64,12 +100,159 @@ pub const DEFAULT_TILE_COLS: usize = 4096;
 /// [`StreamedMedium::with_metrics`]).
 pub const STREAM_TILES: &str = "stream_tiles";
 pub const STREAM_BYTES: &str = "stream_bytes_generated";
+/// Tile-cache hit/miss counters and the resident-bytes gauge (all zero
+/// until a [`TileCache`] is attached).
+pub const STREAM_CACHE_HITS: &str = "stream_cache_hits";
+pub const STREAM_CACHE_MISSES: &str = "stream_cache_misses";
+pub const STREAM_CACHE_RESIDENT: &str = "stream_cache_resident_bytes";
 
 #[derive(Default)]
 struct StatsInner {
     projections: AtomicU64,
     tiles: AtomicU64,
     bytes_generated: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+}
+
+/// Payload bytes of one cached row-tile (both quadratures, f32).
+#[inline]
+fn tile_bytes(w: usize) -> usize {
+    w * 2 * 4
+}
+
+/// Key of one cached row-tile in **absolute** medium coordinates
+/// (window offsets already applied), so every window/shard sharing a
+/// cache agrees on what a tile is.  The generating seed is part of the
+/// key: a cache shared across media of *different* seeds (legal through
+/// [`StreamedMedium::with_tile_cache`]) can never serve one medium's
+/// tiles to another.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+struct TileKey {
+    seed: u64,
+    row: usize,
+    col0: usize,
+    w: usize,
+}
+
+/// One cached row-tile: both quadratures of `w` columns of one input
+/// row, stored exactly as generated — a hit is a bitwise replay.
+pub struct CachedTile {
+    re: Vec<f32>,
+    im: Vec<f32>,
+}
+
+struct TileCacheInner {
+    /// key → (recency stamp, tile).
+    map: HashMap<TileKey, (u64, Arc<CachedTile>)>,
+    /// recency stamp → key; the smallest stamp is the LRU victim.
+    lru: BTreeMap<u64, TileKey>,
+    next_stamp: u64,
+    bytes: usize,
+}
+
+/// Bounded LRU cache of generated row-tiles — streamed-medium phase 2
+/// (see the module docs for the determinism/attribution/residency
+/// rules).  All operations take one short mutex section (hash lookup +
+/// O(log n) recency bump); generation itself happens outside the lock,
+/// so concurrent tile jobs only serialize on bookkeeping.
+pub struct TileCache {
+    budget: usize,
+    inner: Mutex<TileCacheInner>,
+}
+
+impl TileCache {
+    /// A cache bounded to `budget` payload bytes.
+    pub fn with_budget_bytes(budget: usize) -> TileCache {
+        TileCache {
+            budget,
+            inner: Mutex::new(TileCacheInner {
+                map: HashMap::new(),
+                lru: BTreeMap::new(),
+                next_stamp: 0,
+                bytes: 0,
+            }),
+        }
+    }
+
+    /// A cache bounded to `mb` MiB of tile payload.
+    pub fn with_budget_mb(mb: usize) -> TileCache {
+        Self::with_budget_bytes(mb * 1024 * 1024)
+    }
+
+    /// The payload-byte budget this cache may hold resident (the number
+    /// [`StreamedMedium::resident_tm_bytes`] folds in; per-tile
+    /// bookkeeping overhead is excluded — see the module docs).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Payload bytes currently resident (same accounting as the
+    /// budget: tile data only, not per-tile bookkeeping).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Tiles currently resident.
+    pub fn tiles_resident(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    fn lookup(&self, seed: u64, row: usize, col0: usize, w: usize) -> Option<Arc<CachedTile>> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let key = TileKey { seed, row, col0, w };
+        let stamp = inner.next_stamp;
+        let (s, tile) = inner.map.get_mut(&key)?;
+        inner.next_stamp += 1;
+        let prev = *s;
+        *s = stamp;
+        let tile = tile.clone();
+        inner.lru.remove(&prev);
+        inner.lru.insert(stamp, key);
+        Some(tile)
+    }
+
+    fn insert(&self, seed: u64, row: usize, col0: usize, re: &[f32], im: &[f32]) {
+        debug_assert_eq!(re.len(), im.len());
+        let entry_bytes = tile_bytes(re.len());
+        if entry_bytes > self.budget {
+            // A tile wider than the whole budget can never fit; caching
+            // nothing beats evicting everything for nothing.
+            return;
+        }
+        // Copy the payload and build the Arc BEFORE taking the lock: the
+        // critical section stays hash + BTreeMap bookkeeping, so a cold
+        // first step's parallel misses don't serialize two memcpys each
+        // behind the mutex.  (A concurrent duplicate wastes one
+        // allocation — rare, and cheaper than lock-held copies always.)
+        let tile = Arc::new(CachedTile {
+            re: re.to_vec(),
+            im: im.to_vec(),
+        });
+        let key = TileKey { seed, row, col0, w: re.len() };
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if inner.map.contains_key(&key) {
+            // A concurrent replica generated it first — identical bits,
+            // keep the incumbent.
+            return;
+        }
+        while inner.bytes + entry_bytes > self.budget {
+            let Some((&oldest, &victim)) = inner.lru.iter().next() else {
+                break;
+            };
+            inner.lru.remove(&oldest);
+            if let Some((_, gone)) = inner.map.remove(&victim) {
+                inner.bytes -= tile_bytes(gone.re.len());
+            }
+        }
+        let stamp = inner.next_stamp;
+        inner.next_stamp += 1;
+        inner.map.insert(key, (stamp, tile));
+        inner.lru.insert(stamp, key);
+        inner.bytes += entry_bytes;
+    }
 }
 
 /// Snapshot of a streamed medium's lifetime accounting.
@@ -77,13 +260,22 @@ struct StatsInner {
 pub struct StreamStats {
     /// Batched projections served.
     pub projections: u64,
-    /// Row-tiles regenerated (one per active row per column tile).
+    /// Row-tiles regenerated (one per active row per column tile;
+    /// cache hits regenerate nothing and are not counted here).
     pub tiles: u64,
     /// Cumulative TM bytes generated (the throughput side of the
     /// "memory-less" trade: regenerated, never resident).
     pub bytes_generated: u64,
     /// Host seconds spent generating tiles, summed over tile jobs.
     pub gen_seconds: f64,
+    /// Row-tiles served from the [`TileCache`] (zero without one).
+    pub cache_hits: u64,
+    /// Row-tiles generated because the attached cache missed.
+    pub cache_misses: u64,
+    /// Tile payload bytes currently resident in the cache.
+    pub cache_resident_bytes: u64,
+    /// The cache's byte budget (zero without a cache).
+    pub cache_budget_bytes: u64,
 }
 
 /// A transmission-matrix window `[d_in, col0 .. col0+modes)` that is
@@ -104,17 +296,23 @@ pub struct StreamedMedium {
     /// Optional pool: tile jobs fan out over scoped submit/join.  Results
     /// are bitwise independent of the pool (disjoint column ownership).
     pool: Option<Arc<ThreadPool>>,
+    /// Phase-2 cross-step tile cache, shared (like the stats) across
+    /// clones/windows/shards.  `None` = regenerate every projection.
+    cache: Option<Arc<TileCache>>,
     stats: Arc<StatsInner>,
     gen_clock: SimClock,
     tiles_ctr: Option<Counter>,
     bytes_ctr: Option<Counter>,
+    cache_hits_ctr: Option<Counter>,
+    cache_misses_ctr: Option<Counter>,
+    cache_gauge: Option<Gauge>,
 }
 
 /// One tile job's output: its column range of both quadratures plus its
-/// generation tallies — row-tiles, bytes, and measured nanoseconds
-/// (summed by the single-threaded epilogue, so the accounting is
-/// deterministic too).
-type TileOut = (Vec<f32>, Vec<f32>, u64, u64, u64);
+/// generation tallies — row-tiles, bytes, measured generation
+/// nanoseconds, and cache hits/misses (summed by the single-threaded
+/// epilogue, so the accounting is deterministic too).
+type TileOut = (Vec<f32>, Vec<f32>, u64, u64, u64, u64, u64);
 
 impl StreamedMedium {
     /// Full-width streamed medium over `modes` output modes.
@@ -135,10 +333,14 @@ impl StreamedMedium {
             modes,
             tile_cols: DEFAULT_TILE_COLS,
             pool: None,
+            cache: None,
             stats: Arc::new(StatsInner::default()),
             gen_clock: SimClock::new(),
             tiles_ctr: None,
             bytes_ctr: None,
+            cache_hits_ctr: None,
+            cache_misses_ctr: None,
+            cache_gauge: None,
         }
     }
 
@@ -156,11 +358,38 @@ impl StreamedMedium {
         self
     }
 
+    /// Attach a bounded cross-step [`TileCache`] of `mb` MiB (`0` is
+    /// the default-off knob: no cache, identical to today).  Clones and
+    /// windows taken *after* this call share the cache — one budget for
+    /// a whole farm.
+    pub fn with_tile_cache_mb(self, mb: usize) -> Self {
+        if mb == 0 {
+            return self;
+        }
+        self.with_tile_cache(Arc::new(TileCache::with_budget_mb(mb)))
+    }
+
+    /// Attach a caller-built (possibly shared) [`TileCache`].
+    pub fn with_tile_cache(mut self, cache: Arc<TileCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The attached tile cache, if any.
+    pub fn tile_cache(&self) -> Option<&Arc<TileCache>> {
+        self.cache.as_ref()
+    }
+
     /// Surface tile/byte generation as [`STREAM_TILES`]/[`STREAM_BYTES`]
-    /// counters of `registry`.
+    /// counters of `registry`, plus the tile-cache hit/miss counters and
+    /// resident-bytes gauge (which stay zero until a cache is attached —
+    /// the two builders compose in either order).
     pub fn with_metrics(mut self, registry: &Registry) -> Self {
         self.tiles_ctr = Some(registry.counter(STREAM_TILES));
         self.bytes_ctr = Some(registry.counter(STREAM_BYTES));
+        self.cache_hits_ctr = Some(registry.counter(STREAM_CACHE_HITS));
+        self.cache_misses_ctr = Some(registry.counter(STREAM_CACHE_MISSES));
+        self.cache_gauge = Some(registry.gauge(STREAM_CACHE_RESIDENT));
         self
     }
 
@@ -196,7 +425,9 @@ impl StreamedMedium {
     /// guarantee as a number benches can assert on.  Accounts for pool
     /// concurrency: with a pool, up to `threads + 1` tile jobs hold
     /// scratch at once (workers plus the helping caller), capped by the
-    /// job count.
+    /// job count.  An attached [`TileCache`] folds its full byte budget
+    /// in — the ceiling the cache may grow to is residency this medium
+    /// can now hold, and the CI memory-ceiling proof must cover it.
     pub fn resident_tm_bytes(&self) -> usize {
         let tile = self.tile_cols.min(self.modes);
         let n_jobs = self.modes.div_ceil(tile);
@@ -206,7 +437,8 @@ impl StreamedMedium {
             .map(|p| p.threads() + 1)
             .unwrap_or(1)
             .min(n_jobs);
-        self.scratch_bytes_per_job() * concurrent
+        let cache_budget = self.cache.as_ref().map(|c| c.budget_bytes()).unwrap_or(0);
+        self.scratch_bytes_per_job() * concurrent + cache_budget
     }
 
     /// Lifetime accounting snapshot.
@@ -216,6 +448,18 @@ impl StreamedMedium {
             tiles: self.stats.tiles.load(Ordering::Relaxed),
             bytes_generated: self.stats.bytes_generated.load(Ordering::Relaxed),
             gen_seconds: self.gen_clock.now_secs(),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.stats.cache_misses.load(Ordering::Relaxed),
+            cache_resident_bytes: self
+                .cache
+                .as_ref()
+                .map(|c| c.resident_bytes() as u64)
+                .unwrap_or(0),
+            cache_budget_bytes: self
+                .cache
+                .as_ref()
+                .map(|c| c.budget_bytes() as u64)
+                .unwrap_or(0),
         }
     }
 
@@ -338,10 +582,12 @@ impl StreamedMedium {
         let mut tiles = 0u64;
         let mut bytes = 0u64;
         let mut nanos = 0u64;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
         let mut panicked = 0usize;
         for (job, slot) in slots.into_iter().enumerate() {
             match slot {
-                Some((t1, t2, tl, by, ns)) => {
+                Some((t1, t2, tl, by, ns, hi, mi)) => {
                     let c0 = job * tile;
                     let w = tile.min(self.modes - c0);
                     for bi in 0..b {
@@ -354,6 +600,8 @@ impl StreamedMedium {
                     tiles += tl;
                     bytes += by;
                     nanos += ns;
+                    hits += hi;
+                    misses += mi;
                 }
                 None => panicked += 1,
             }
@@ -362,9 +610,12 @@ impl StreamedMedium {
         self.stats.projections.fetch_add(1, Ordering::Relaxed);
         self.stats.tiles.fetch_add(tiles, Ordering::Relaxed);
         self.stats.bytes_generated.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        self.stats.cache_misses.fetch_add(misses, Ordering::Relaxed);
         // Per-tile clock attribution: measured job seconds, summed —
         // capacity accounting like the farm's device-seconds (wall view
-        // under a pool is smaller; this is the work done).
+        // under a pool is smaller; this is the work done).  Cache hits
+        // contributed zero to `nanos` (see `project_tile`).
         self.gen_clock.advance_secs(nanos as f64 / 1e9);
         if let Some(c) = &self.tiles_ctr {
             c.add(tiles);
@@ -372,43 +623,90 @@ impl StreamedMedium {
         if let Some(c) = &self.bytes_ctr {
             c.add(bytes);
         }
+        if let Some(c) = &self.cache_hits_ctr {
+            c.add(hits);
+        }
+        if let Some(c) = &self.cache_misses_ctr {
+            c.add(misses);
+        }
+        if let (Some(g), Some(cache)) = (&self.cache_gauge, &self.cache) {
+            g.set(cache.resident_bytes() as f64);
+        }
         (p1, p2)
     }
 
-    /// One column tile `[c0, c0 + w)` of the window: regenerate each
-    /// active row's tile into reusable scratch and accumulate both
+    /// One column tile `[c0, c0 + w)` of the window: fetch or
+    /// regenerate each active row's tile and accumulate both
     /// quadratures for the whole batch before moving to the next row
     /// (batch-aware: one generation pass amortizes over all samples).
+    /// With a [`TileCache`] attached, hits read the stored tile (bitwise
+    /// the generated one) and charge nothing; misses generate into
+    /// scratch, store a copy, and charge generation time/tiles/bytes.
     fn project_tile(&self, frames: &Tensor, active: &[bool], c0: usize, w: usize) -> TileOut {
-        let t0 = Instant::now();
+        let job_t0 = Instant::now();
         let b = frames.rows();
         let mut p1 = vec![0.0f32; b * w];
         let mut p2 = vec![0.0f32; b * w];
-        let mut re = vec![0.0f32; w];
-        let mut im = vec![0.0f32; w];
+        // Generation scratch, allocated lazily on the first cache miss:
+        // a fully-warm pass (the cache's steady state) never touches it.
+        let mut re: Vec<f32> = Vec::new();
+        let mut im: Vec<f32> = Vec::new();
         let mut tiles = 0u64;
+        let mut gen_nanos = 0u64;
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let col0 = self.col0 + c0;
         for r in 0..self.d_in {
             if !active[r] {
                 continue;
             }
-            TransmissionMatrix::stream_row_window_into(
-                self.seed,
-                r,
-                self.col0 + c0,
-                &mut re,
-                &mut im,
-            );
-            tiles += 1;
+            let cached: Option<Arc<CachedTile>> =
+                self.cache.as_ref().and_then(|c| c.lookup(self.seed, r, col0, w));
+            let (tile_re, tile_im): (&[f32], &[f32]) = match &cached {
+                Some(t) => {
+                    hits += 1;
+                    (&t.re, &t.im)
+                }
+                None => {
+                    if re.is_empty() {
+                        re.resize(w, 0.0);
+                        im.resize(w, 0.0);
+                    }
+                    let gen_t0 = Instant::now();
+                    TransmissionMatrix::stream_row_window_into(
+                        self.seed,
+                        r,
+                        col0,
+                        &mut re,
+                        &mut im,
+                    );
+                    gen_nanos += gen_t0.elapsed().as_nanos() as u64;
+                    tiles += 1;
+                    if let Some(cache) = &self.cache {
+                        misses += 1;
+                        cache.insert(self.seed, r, col0, &re, &im);
+                    }
+                    (&re, &im)
+                }
+            };
             for bi in 0..b {
                 let s = frames.at(bi, r);
                 if s == 0.0 {
                     continue;
                 }
-                axpy(&mut p1[bi * w..(bi + 1) * w], s, &re);
-                axpy(&mut p2[bi * w..(bi + 1) * w], s, &im);
+                axpy(&mut p1[bi * w..(bi + 1) * w], s, tile_re);
+                axpy(&mut p2[bi * w..(bi + 1) * w], s, tile_im);
             }
         }
-        (p1, p2, tiles, tiles * (w as u64) * 8, t0.elapsed().as_nanos() as u64)
+        // Gen-clock attribution: without a cache this is the PR-3
+        // whole-job measurement, unchanged; with one, hits must charge
+        // zero gen seconds, so only the measured generation calls count.
+        let nanos = if self.cache.is_some() {
+            gen_nanos
+        } else {
+            job_t0.elapsed().as_nanos() as u64
+        };
+        (p1, p2, tiles, tiles * (w as u64) * 8, nanos, hits, misses)
     }
 }
 
@@ -478,6 +776,24 @@ impl Medium {
         match self {
             Medium::Dense(tm) => tm.clone(),
             Medium::Streamed(sm) => sm.materialize(),
+        }
+    }
+
+    /// Attach a bounded cross-step tile cache to a streamed backing
+    /// that does not already carry one (`mb = 0`, a dense backing, or a
+    /// caller-attached cache all leave `self` untouched — an existing
+    /// cache wins, so the attach is idempotent).  The trainer is the
+    /// in-tree attach site (via [`StreamedMedium::with_tile_cache_mb`],
+    /// before the topology build carves shard windows); this enum-level
+    /// spelling serves callers assembling deployments from a bare
+    /// [`Medium`].  Call *before* carving windows/shards: clones share
+    /// the cache.
+    pub fn with_tile_cache_mb(self, mb: usize) -> Medium {
+        match self {
+            Medium::Streamed(sm) if mb > 0 && sm.tile_cache().is_none() => {
+                Medium::Streamed(sm.with_tile_cache_mb(mb))
+            }
+            other => other,
         }
     }
 
@@ -713,5 +1029,152 @@ mod tests {
         assert_eq!(p1.shape(), &[0, 8]);
         assert_eq!(p2.shape(), &[0, 8]);
         assert_eq!(sm.stats().tiles, 0);
+    }
+
+    #[test]
+    fn cached_projection_is_bitwise_the_uncached_one() {
+        for tile in [7usize, 40, 4096] {
+            let plain = StreamedMedium::new(5, 9, 130).with_tile_cols(tile);
+            let cached = StreamedMedium::new(5, 9, 130)
+                .with_tile_cols(tile)
+                .with_tile_cache_mb(4);
+            for step in 0..3 {
+                let e = tern(4, 9, 50 + step);
+                assert_eq!(plain.project(&e), cached.project(&e), "tile {tile} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_from_the_second_step_and_charge_nothing() {
+        let sm = StreamedMedium::new(3, 6, 100)
+            .with_tile_cols(40)
+            .with_tile_cache_mb(1);
+        // All-bright frames: 6 rows × 3 column tiles = 18 row-tiles.
+        let e = Tensor::from_vec(&[1, 6], vec![1.0; 6]);
+        sm.project(&e);
+        let st1 = sm.stats();
+        assert_eq!(st1.cache_hits, 0);
+        assert_eq!(st1.cache_misses, 18);
+        assert_eq!(st1.tiles, 18);
+        assert_eq!(st1.cache_resident_bytes, (6 * 100 * 2 * 4) as u64);
+        let gen1 = st1.gen_seconds;
+        sm.project(&e);
+        let st2 = sm.stats();
+        assert_eq!(st2.cache_hits, 18, "step 2 serves entirely from cache");
+        assert_eq!(st2.cache_misses, 18, "no new misses");
+        assert_eq!(st2.tiles, 18, "nothing regenerated");
+        assert_eq!(
+            st2.bytes_generated, st1.bytes_generated,
+            "hits generate zero bytes"
+        );
+        assert_eq!(st2.gen_seconds, gen1, "hits charge zero gen seconds");
+    }
+
+    #[test]
+    fn cache_budget_evicts_lru_and_skips_oversized_tiles() {
+        // 10-column tiles are 80 B each; a 200 B budget holds 2.
+        let cache = TileCache::with_budget_bytes(200);
+        let re = vec![1.0f32; 10];
+        let im = vec![2.0f32; 10];
+        cache.insert(7, 0, 0, &re, &im);
+        cache.insert(7, 1, 0, &re, &im);
+        assert_eq!(cache.tiles_resident(), 2);
+        assert_eq!(cache.resident_bytes(), 160);
+        // Touch row 0 so row 1 is the LRU victim.
+        assert!(cache.lookup(7, 0, 0, 10).is_some());
+        cache.insert(7, 2, 0, &re, &im);
+        assert_eq!(cache.tiles_resident(), 2);
+        assert!(cache.lookup(7, 0, 0, 10).is_some(), "recently used survives");
+        assert!(cache.lookup(7, 1, 0, 10).is_none(), "LRU evicted");
+        assert!(cache.lookup(7, 2, 0, 10).is_some());
+        // The seed is part of the key: another medium's identical
+        // coordinates never hit this one's tiles.
+        assert!(cache.lookup(8, 0, 0, 10).is_none(), "cross-seed isolation");
+        // A tile wider than the whole budget is never inserted.
+        let wide = vec![0.0f32; 100]; // 800 B > 200 B
+        cache.insert(7, 9, 0, &wide, &wide);
+        assert!(cache.lookup(7, 9, 0, 100).is_none());
+        assert_eq!(cache.tiles_resident(), 2);
+        // Re-inserting an existing key keeps the incumbent (no growth).
+        cache.insert(7, 2, 0, &re, &im);
+        assert_eq!(cache.resident_bytes(), 160);
+    }
+
+    #[test]
+    fn cache_thrash_under_a_too_small_budget_still_matches_bitwise() {
+        // Budget for ~1 of 3 tiles per row-walk: cyclic access thrashes
+        // the LRU, which must cost only time, never bits.
+        let plain = StreamedMedium::new(11, 8, 96).with_tile_cols(32);
+        let thrash = StreamedMedium::new(11, 8, 96)
+            .with_tile_cols(32)
+            .with_tile_cache(Arc::new(TileCache::with_budget_bytes(300)));
+        let e = tern(3, 8, 77);
+        for step in 0..3 {
+            assert_eq!(plain.project(&e), thrash.project(&e), "step {step}");
+        }
+        let st = thrash.stats();
+        assert!(st.cache_resident_bytes <= 300, "budget respected");
+    }
+
+    #[test]
+    fn windows_and_shards_share_the_cache_and_the_budget_counts_as_resident() {
+        let registry = Registry::new();
+        let sm = StreamedMedium::new(7, 4, 120)
+            .with_tile_cols(30)
+            .with_tile_cache_mb(2)
+            .with_metrics(&registry);
+        assert_eq!(
+            sm.resident_tm_bytes(),
+            sm.scratch_bytes_per_job() + 2 * 1024 * 1024,
+            "cache budget folds into the residency number"
+        );
+        let shards = sm.split_modes(2);
+        let e = tern(2, 4, 9);
+        for shard in &shards {
+            assert!(
+                Arc::ptr_eq(shard.tile_cache().unwrap(), sm.tile_cache().unwrap()),
+                "shards share the parent's cache"
+            );
+            shard.project(&e);
+        }
+        // Second pass over the shards hits what the first pass cached.
+        let before = sm.stats().cache_hits;
+        for shard in &shards {
+            shard.project(&e);
+        }
+        let st = sm.stats();
+        assert!(st.cache_hits > before, "cross-shard second pass hits");
+        let snap = registry.snapshot();
+        assert_eq!(snap[STREAM_CACHE_HITS], st.cache_hits as f64);
+        assert_eq!(snap[STREAM_CACHE_MISSES], st.cache_misses as f64);
+        assert_eq!(snap[STREAM_CACHE_RESIDENT], st.cache_resident_bytes as f64);
+        // The subwindow path (weighted/explicit topologies) shares too.
+        let sub = sm.subwindow(10, 50);
+        assert!(Arc::ptr_eq(sub.tile_cache().unwrap(), sm.tile_cache().unwrap()));
+    }
+
+    #[test]
+    fn medium_with_tile_cache_mb_is_idempotent_and_dense_safe() {
+        let dense = Medium::Dense(TransmissionMatrix::sample(2, 4, 8));
+        assert!(matches!(dense.with_tile_cache_mb(8), Medium::Dense(_)));
+        let streamed = Medium::Streamed(StreamedMedium::new(2, 4, 8)).with_tile_cache_mb(8);
+        let Medium::Streamed(sm) = &streamed else {
+            panic!("backing changed")
+        };
+        let first = Arc::clone(sm.tile_cache().unwrap());
+        // A second attach keeps the existing cache (caller's cache wins).
+        let again = streamed.with_tile_cache_mb(16);
+        let Medium::Streamed(sm2) = &again else {
+            panic!("backing changed")
+        };
+        assert!(Arc::ptr_eq(sm2.tile_cache().unwrap(), &first));
+        assert_eq!(sm2.tile_cache().unwrap().budget_bytes(), 8 * 1024 * 1024);
+        // mb = 0 is the off switch.
+        let off = Medium::Streamed(StreamedMedium::new(2, 4, 8)).with_tile_cache_mb(0);
+        let Medium::Streamed(sm3) = &off else {
+            panic!("backing changed")
+        };
+        assert!(sm3.tile_cache().is_none());
     }
 }

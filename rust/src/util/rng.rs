@@ -17,6 +17,15 @@ pub struct Pcg64 {
 
 const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
 
+/// Box–Muller pairs per batch of the lane kernel (see
+/// [`Pcg64::fill_normal`]): uniforms land in fixed-width stack arrays
+/// and each transcendental (`ln`, `sqrt`, `sin_cos`) runs as its own
+/// tight loop over a lane, so the compiler can vectorize the arithmetic
+/// around the libm calls and the per-call spare bookkeeping disappears
+/// from the hot path.  16 pairs = 32 normals = a few hundred bytes of
+/// stack scratch.
+pub const NORMAL_LANE: usize = 16;
+
 impl Pcg64 {
     /// Seed with an arbitrary 64-bit value; `stream` decorrelates
     /// generators sharing a seed (e.g. per-worker noise streams).
@@ -126,10 +135,138 @@ impl Pcg64 {
         self.next_normal() as f32
     }
 
-    /// Fill a slice with standard-normal f32s.
+    /// One batch of the lane kernel: `2 * NORMAL_LANE` standard normals
+    /// in draw order (cos, sin, cos, sin, …), **bitwise identical** to
+    /// `2 * NORMAL_LANE` successive [`Pcg64::next_normal`] calls from
+    /// the same state.  Caller guarantees no spare is cached.
+    ///
+    /// The uniforms are drawn interleaved (u, v, u, v, …) exactly as the
+    /// scalar walk draws them; each transcendental then runs over the
+    /// whole lane in its own loop.  Per-pair f64 intermediate rounding
+    /// is preserved because every output element's op sequence
+    /// (`ln`, `* -2.0`, `sqrt`, `sin_cos`, `*`) is element-independent —
+    /// batching changes the loop shape, never a rounding step.  The
+    /// scalar path's zero-uniform rejection (p = 2⁻⁵³ per pair) is
+    /// preserved by falling back: if any `u` in the lane is rejectable,
+    /// the LCG state rewinds and the lane replays through the scalar
+    /// walk, rejection loop and all.
+    fn normal_lane(&mut self, z: &mut [f64; 2 * NORMAL_LANE]) {
+        debug_assert!(self.normal_spare.is_none());
+        let saved_state = self.state;
+        let mut u = [0.0f64; NORMAL_LANE];
+        let mut v = [0.0f64; NORMAL_LANE];
+        let mut ok = true;
+        for k in 0..NORMAL_LANE {
+            u[k] = self.next_f64();
+            v[k] = self.next_f64();
+            ok &= u[k] > 1e-300;
+        }
+        if !ok {
+            // A rejectable uniform shifts the pair alignment for
+            // everything after it: replay the whole lane scalar.
+            self.state = saved_state;
+            for k in 0..NORMAL_LANE {
+                z[2 * k] = self.next_normal();
+                z[2 * k + 1] = self.normal_spare.take().expect("pair spare");
+            }
+            return;
+        }
+        let mut r = [0.0f64; NORMAL_LANE];
+        for (rk, uk) in r.iter_mut().zip(u.iter()) {
+            *rk = -2.0 * uk.ln();
+        }
+        for rk in r.iter_mut() {
+            *rk = rk.sqrt();
+        }
+        let mut s = [0.0f64; NORMAL_LANE];
+        let mut c = [0.0f64; NORMAL_LANE];
+        for ((sk, ck), vk) in s.iter_mut().zip(c.iter_mut()).zip(v.iter()) {
+            let (si, co) = (2.0 * std::f64::consts::PI * *vk).sin_cos();
+            *sk = si;
+            *ck = co;
+        }
+        for (k, pair) in z.chunks_exact_mut(2).enumerate() {
+            pair[0] = r[k] * c[k];
+            pair[1] = r[k] * s[k];
+        }
+    }
+
+    /// Fill a slice with standard-normal f32s via the batched lane
+    /// kernel — bitwise identical to [`Pcg64::fill_normal_scalar`] (the
+    /// old per-call walk) for every state, including a cached spare on
+    /// entry and the spare carried out of an odd-length fill.
     pub fn fill_normal(&mut self, out: &mut [f32]) {
+        let mut i = 0usize;
+        if i < out.len() {
+            if let Some(z) = self.normal_spare.take() {
+                out[i] = z as f32;
+                i += 1;
+            }
+        }
+        let mut z = [0.0f64; 2 * NORMAL_LANE];
+        while out.len() - i >= 2 * NORMAL_LANE {
+            self.normal_lane(&mut z);
+            for (dst, &zz) in out[i..i + 2 * NORMAL_LANE].iter_mut().zip(z.iter()) {
+                *dst = zz as f32;
+            }
+            i += 2 * NORMAL_LANE;
+        }
+        while i < out.len() {
+            out[i] = self.next_normal_f32();
+            i += 1;
+        }
+    }
+
+    /// The pre-batching reference walk: one [`Pcg64::next_normal_f32`]
+    /// per element.  Kept as the bitwise oracle for the lane kernel
+    /// (pinned in tests) and the baseline the `e6_genkernel` bench
+    /// record compares against.
+    pub fn fill_normal_scalar(&mut self, out: &mut [f32]) {
         for x in out.iter_mut() {
             *x = self.next_normal_f32();
+        }
+    }
+
+    /// Fill two equal-length slices with scaled normals in interleaved
+    /// draw order — `re[0], im[0], re[1], im[1], …` — via the lane
+    /// kernel: the quadrature-pair primitive behind
+    /// `TransmissionMatrix::stream_row_window_into` and
+    /// `TransmissionMatrix::sample`.  Bitwise identical to the scalar
+    /// walk `re[k] = next_normal_f32() * scale; im[k] = …` for every
+    /// entry state (a cached spare shifts the phase by one; the scatter
+    /// tracks the logical draw index, so alignment is preserved).
+    pub fn fill_normal_quadrature(&mut self, scale: f32, re: &mut [f32], im: &mut [f32]) {
+        debug_assert_eq!(re.len(), im.len());
+        let total = 2 * re.len();
+        let mut w = 0usize;
+        if w < total {
+            if let Some(z) = self.normal_spare.take() {
+                re[0] = (z as f32) * scale;
+                w = 1;
+            }
+        }
+        let mut z = [0.0f64; 2 * NORMAL_LANE];
+        while total - w >= 2 * NORMAL_LANE {
+            self.normal_lane(&mut z);
+            for (j, &zz) in z.iter().enumerate() {
+                let idx = w + j;
+                let val = (zz as f32) * scale;
+                if idx % 2 == 0 {
+                    re[idx / 2] = val;
+                } else {
+                    im[idx / 2] = val;
+                }
+            }
+            w += 2 * NORMAL_LANE;
+        }
+        while w < total {
+            let val = self.next_normal_f32() * scale;
+            if w % 2 == 0 {
+                re[w / 2] = val;
+            } else {
+                im[w / 2] = val;
+            }
+            w += 1;
         }
     }
 
@@ -272,6 +409,166 @@ mod tests {
         let mut b = Pcg64::new(5, 1);
         b.advance(1024);
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn batched_fill_is_bitwise_the_scalar_walk() {
+        // Lengths straddling every lane boundary, including 0 and odd
+        // tails; consecutive calls so the spare carries across fills.
+        for seed in [0u64, 1, 42, 0xDEAD_BEEF, u64::MAX] {
+            let mut scalar = Pcg64::new(seed, 9);
+            let mut batched = Pcg64::new(seed, 9);
+            for len in [
+                0usize,
+                1,
+                2,
+                3,
+                2 * NORMAL_LANE - 1,
+                2 * NORMAL_LANE,
+                2 * NORMAL_LANE + 1,
+                5 * NORMAL_LANE + 3,
+                257,
+            ] {
+                let mut a = vec![0.0f32; len];
+                let mut b = vec![0.0f32; len];
+                scalar.fill_normal_scalar(&mut a);
+                batched.fill_normal(&mut b);
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "seed {seed} len {len} elem {i}"
+                    );
+                }
+            }
+            // Both generators end in the same state (spare included).
+            assert_eq!(
+                scalar.next_normal().to_bits(),
+                batched.next_normal().to_bits(),
+                "post-fill state, seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn odd_length_fills_carry_the_spare_across_calls() {
+        // An odd fill leaves the sin quadrature cached; the next fill
+        // must start from it — in both kernels, identically.
+        let mut scalar = Pcg64::new(77, 3);
+        let mut batched = Pcg64::new(77, 3);
+        for len in [33usize, 1, 2 * NORMAL_LANE + 1, 7] {
+            let mut a = vec![0.0f32; len];
+            let mut b = vec![0.0f32; len];
+            scalar.fill_normal_scalar(&mut a);
+            batched.fill_normal(&mut b);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_fill_starts_from_a_cached_spare() {
+        let mut scalar = Pcg64::new(5, 11);
+        let mut batched = Pcg64::new(5, 11);
+        assert_eq!(
+            scalar.next_normal().to_bits(),
+            batched.next_normal().to_bits()
+        );
+        // Both now hold the sin spare; fills must begin with it.
+        let mut a = vec![0.0f32; 2 * NORMAL_LANE + 2];
+        let mut b = vec![0.0f32; 2 * NORMAL_LANE + 2];
+        scalar.fill_normal_scalar(&mut a);
+        batched.fill_normal(&mut b);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn quadrature_fill_is_bitwise_the_interleaved_walk() {
+        let scale = 0.25f32;
+        for seed in [3u64, 19, 0x5eed] {
+            for pairs in [1usize, 2, NORMAL_LANE - 1, NORMAL_LANE, 40, 97] {
+                let mut scalar = Pcg64::new(seed, 4);
+                let mut batched = Pcg64::new(seed, 4);
+                let (mut ra, mut ia) = (vec![0.0f32; pairs], vec![0.0f32; pairs]);
+                for k in 0..pairs {
+                    ra[k] = scalar.next_normal_f32() * scale;
+                    ia[k] = scalar.next_normal_f32() * scale;
+                }
+                let (mut rb, mut ib) = (vec![0.0f32; pairs], vec![0.0f32; pairs]);
+                batched.fill_normal_quadrature(scale, &mut rb, &mut ib);
+                for k in 0..pairs {
+                    assert_eq!(ra[k].to_bits(), rb[k].to_bits(), "re {seed}/{pairs}/{k}");
+                    assert_eq!(ia[k].to_bits(), ib[k].to_bits(), "im {seed}/{pairs}/{k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quadrature_fill_after_advance_seek_at_odd_offsets() {
+        // The streamed tile path: seek to pair `col0` via advance (2 raw
+        // draws per pair), then fill — the batched kernel must reproduce
+        // the scalar walk at every offset parity.
+        let scale = std::f32::consts::FRAC_1_SQRT_2;
+        for col0 in [0u128, 1, 3, 17, 4095, 4096, 4097] {
+            let mut scalar = Pcg64::new(13 ^ 0x5eed, 8);
+            scalar.advance(2 * col0);
+            let mut batched = Pcg64::new(13 ^ 0x5eed, 8);
+            batched.advance(2 * col0);
+            let pairs = 2 * NORMAL_LANE + 5;
+            let (mut ra, mut ia) = (vec![0.0f32; pairs], vec![0.0f32; pairs]);
+            for k in 0..pairs {
+                ra[k] = scalar.next_normal_f32() * scale;
+                ia[k] = scalar.next_normal_f32() * scale;
+            }
+            let (mut rb, mut ib) = (vec![0.0f32; pairs], vec![0.0f32; pairs]);
+            batched.fill_normal_quadrature(scale, &mut rb, &mut ib);
+            assert_eq!(
+                ra.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                rb.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "re col0 {col0}"
+            );
+            assert_eq!(
+                ia.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                ib.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "im col0 {col0}"
+            );
+        }
+    }
+
+    #[test]
+    fn quadrature_fill_with_spare_shifts_phase_like_the_scalar_walk() {
+        // A cached spare makes re[0] the spare and shifts every later
+        // output by one draw — the scatter must track the phase.
+        let scale = 0.5f32;
+        let mut scalar = Pcg64::new(31, 2);
+        let mut batched = Pcg64::new(31, 2);
+        assert_eq!(
+            scalar.next_normal().to_bits(),
+            batched.next_normal().to_bits()
+        );
+        let pairs = 3 * NORMAL_LANE;
+        let (mut ra, mut ia) = (vec![0.0f32; pairs], vec![0.0f32; pairs]);
+        for k in 0..pairs {
+            ra[k] = scalar.next_normal_f32() * scale;
+            ia[k] = scalar.next_normal_f32() * scale;
+        }
+        let (mut rb, mut ib) = (vec![0.0f32; pairs], vec![0.0f32; pairs]);
+        batched.fill_normal_quadrature(scale, &mut rb, &mut ib);
+        assert_eq!(
+            ra.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            rb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            ia.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ib.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -235,6 +235,120 @@ fn streamed_shards_compose_with_the_sharded_service() {
     }
 }
 
+/// A streamed medium with the phase-2 cross-step tile cache attached
+/// (budget in MiB), same deliberately small tile as [`streamed`].
+fn streamed_cached(mb: usize) -> (litl::optics::stream::StreamedMedium, Medium) {
+    let sm = StreamedMedium::new(SEED, D_IN, MODES)
+        .with_tile_cols(13)
+        .with_tile_cache_mb(mb);
+    let medium = Medium::Streamed(sm.clone());
+    (sm, medium)
+}
+
+#[test]
+fn cached_streamed_farm_is_bitwise_the_uncached_one_at_shards_1_2_4() {
+    // The cache contract: hits replay stored tiles bit for bit, so a
+    // cached farm equals the uncached (and hence the dense) one at any
+    // shard count under either partition — digital exact, *noisy*
+    // optics included — and from step 2 the modes-partition farm serves
+    // from cache instead of regenerating.
+    let cases = [
+        ("digital", DeviceKind::Digital, OpuParams::default()),
+        ("noiseless", DeviceKind::Optical, noiseless_params()),
+        ("noisy", DeviceKind::Optical, OpuParams::default()),
+    ];
+    for (label, kind, params) in cases {
+        for partition in [Partition::Modes, Partition::Batch] {
+            for shards in [1usize, 2, 4] {
+                let mut plain = topology_farm(
+                    kind,
+                    params,
+                    &streamed(),
+                    NOISE_SEED,
+                    shards,
+                    partition,
+                    Registry::new(),
+                )
+                .unwrap();
+                let (handle, medium) = streamed_cached(4);
+                let mut cached = topology_farm(
+                    kind,
+                    params,
+                    &medium,
+                    NOISE_SEED,
+                    shards,
+                    partition,
+                    Registry::new(),
+                )
+                .unwrap();
+                for step in 0..3 {
+                    let e = ternary_batch(5, D_IN, 800 + 10 * shards as u64 + step);
+                    assert_eq!(
+                        plain.project(&e).unwrap(),
+                        cached.project(&e).unwrap(),
+                        "{label} {partition:?} shards={shards} step={step}"
+                    );
+                }
+                let st = handle.stats();
+                assert!(
+                    st.cache_hits > 0,
+                    "steps 2+ must hit ({label} {partition:?} shards={shards}): {st:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_streamed_shards_compose_with_the_sharded_service() {
+    // Same submission order into an uncached and a cached streamed-shard
+    // service: bitwise-identical replies (the schedule is a pure
+    // function of arrival order; the cache only changes where tile
+    // bytes come from).
+    for partition in [Partition::Modes, Partition::Batch] {
+        let run = |medium: Medium| -> Vec<(Tensor, Tensor)> {
+            let devices = topology_devices(
+                DeviceKind::Optical,
+                noiseless_params(),
+                &medium,
+                NOISE_SEED,
+                3,
+                partition,
+            )
+            .unwrap();
+            let svc = ShardedProjectionService::start(
+                devices,
+                D_IN,
+                ShardServiceConfig {
+                    max_batch: 16,
+                    queue_depth: 32,
+                    lane_depth: 4,
+                    partition,
+                    frame_rate_hz: 1500.0,
+                },
+                Registry::new(),
+            )
+            .unwrap();
+            let client = svc.client();
+            let out: Vec<(Tensor, Tensor)> = (0..5)
+                .map(|i| client.project(ternary_batch(3, D_IN, 900 + i)).unwrap())
+                .collect();
+            svc.shutdown();
+            out
+        };
+        let plain_replies = run(streamed());
+        let (handle, medium) = streamed_cached(4);
+        let cached_replies = run(medium);
+        assert_eq!(plain_replies, cached_replies, "{partition:?}");
+        let st = handle.stats();
+        assert!(st.cache_hits > 0, "{partition:?}: repeat frames must hit: {st:?}");
+        assert!(
+            st.cache_resident_bytes <= st.cache_budget_bytes,
+            "budget respected: {st:?}"
+        );
+    }
+}
+
 #[test]
 fn streamed_farm_project_on_charges_one_shard_and_matches_the_slice() {
     let mut farm = topology_farm(

@@ -42,6 +42,9 @@ fn dense(modes: usize) -> Medium {
 /// matrix bit for bit — shards 1/2/4 × both partitions, noisy optics
 /// included (same windows, same `NOISE_STREAM_BASE + i` streams).
 #[test]
+// The deprecated shims ARE the thing under test here (legacy-parity
+// pin) — the one sanctioned `allow(deprecated)` outside farm.rs's own
+// shim test; everything else in tests/benches goes through Topology.
 #[allow(deprecated)]
 fn equal_weight_topology_is_bitwise_the_legacy_construction() {
     let tm = TransmissionMatrix::sample(77, D_IN, 28);

@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Produce the committed bench records: run the e6 streaming and e4
+# scaling benches in release mode and collect every JSON record line
+# they print (compact objects whose first key is "bench":
+# e6_genkernel / e6_streaming / e6_tile_cache, e4_shard_sweep /
+# e4_service_sweep / e4_hetero_sweep) into BENCH_e6.json /
+# BENCH_e4.json at the repo root as JSON arrays.
+#
+# Usage: tools/bench_records.sh            (from anywhere in the repo)
+#
+# The CI `bench-records` job runs this and uploads the two files as
+# artifacts; committing refreshed copies alongside a perf-relevant PR is
+# what keeps the perf trajectory a recorded fact instead of a claim.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+collect() {
+    local bench="$1" out="$2"
+    local log
+    log=$(mktemp)
+    echo "== running $bench (release) =="
+    cargo bench --bench "$bench" | tee "$log"
+    # Record lines are single compact JSON objects containing a "bench"
+    # key (Json::Obj is a BTreeMap, so keys serialize alphabetically —
+    # the line does NOT necessarily start with {"bench").
+    {
+        echo '['
+        grep '^{.*"bench":' "$log" | sed '$!s/$/,/'
+        echo ']'
+    } >"$out"
+    rm -f "$log"
+    echo "wrote $out"
+}
+
+collect e6_streaming BENCH_e6.json
+collect e4_scaling BENCH_e4.json
