@@ -1,0 +1,299 @@
+"""Pre-validation port of the crate-owned Box-Muller transcendental
+kernels (``rust/src/util/mathk.rs``), pure stdlib IEEE-754 doubles.
+
+The authoring container has no Rust toolchain, so the polynomial
+designs for ``ln`` and ``sin_cos`` are proven here first and then
+transcribed line-for-line into Rust.  Python floats ARE IEEE-754
+binary64 with the same round-to-nearest-even semantics, and every
+operation below is a single +, -, *, /, sqrt or bit-cast — no fused
+multiply-add, no library call inside the kernels — so a passing trial
+here is a statement about the *algorithm*, not about any libm.
+
+What is validated (``python/tests/test_boxmuller.py``):
+
+* ``ln_kern`` / ``sin_cos_kern`` stay within 2 ulp of ``math.log`` /
+  ``math.sin``/``math.cos`` over the Box-Muller input domain
+  (u = k*2^-53, k >= 1: normal doubles only, subnormals excluded by
+  construction; x = 2*pi*v in [0, 2*pi)).
+* The lane evaluation (each transcendental as its own pass over a
+  16-pair batch) is **bitwise identical** to the scalar per-pair walk —
+  the property the Rust suite pins against ``fill_normal_scalar``.
+* Quadrant boundaries (v near j/4), spare-carry offsets and
+  ``advance``-seeked starts reproduce the scalar walk exactly.
+
+Constants are given as IEEE bit patterns (``_f(0x...)``) rather than
+decimal literals so the Python and Rust sources can be diffed for
+bit-identity by eye.  They are the classic fdlibm/musl coefficients
+(Sun Microsystems, freely redistributable) for ``log``, ``__sin`` and
+``__cos`` — but the *contract* here is only "deterministic and ~1 ulp":
+the crate pins scalar==lane bitwise, never kernel==libm bitwise
+(platform libms differ by build; owning the kernels is what makes the
+transmission-matrix bits platform-independent).
+"""
+
+from __future__ import annotations
+
+import math
+import struct
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+
+NORMAL_LANE = 16  # Box-Muller pairs per lane batch (rust: NORMAL_LANE)
+
+
+def _f(bits: int) -> float:
+    """f64 from its IEEE-754 bit pattern (rust: ``f64::from_bits``)."""
+    return struct.unpack("<d", struct.pack("<Q", bits))[0]
+
+
+def f64_bits(x: float) -> int:
+    """IEEE-754 bit pattern of an f64 (rust: ``f64::to_bits``)."""
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def _from_bits(bits: int) -> float:
+    return struct.unpack("<d", struct.pack("<Q", bits))[0]
+
+
+# --- ln: fdlibm e_log reduction + polynomial, branch-free -------------
+#
+# x = 2^k * (1+f) with 1+f in [sqrt(2)/2, sqrt(2)); s = f/(2+f);
+# log(1+f) = 2s + 2/3 s^3 + ... evaluated as the split even/odd
+# polynomial; result assembled through the single general formula
+#   dk*ln2_hi - ((hfsq - (s*(hfsq+R) + dk*ln2_lo)) - f)
+# fdlibm special-cases k == 0 as f - (hfsq - s*(hfsq+R)), but that is
+# bit-equal to the general formula at dk = 0 (IEEE negation symmetry:
+# round(0 - (A - f)) == -round(A - f) == round(f - A)), so one
+# branch-free expression serves the whole lane.
+
+LN2_HI = _f(0x3FE62E42FEE00000)
+LN2_LO = _f(0x3DEA39EF35793C76)
+LG1 = _f(0x3FE5555555555593)
+LG2 = _f(0x3FD999999997FA04)
+LG3 = _f(0x3FD2492494229359)
+LG4 = _f(0x3FCC71C51D8E78AF)
+LG5 = _f(0x3FC7466496CB03DE)
+LG6 = _f(0x3FC39A09D078C69F)
+LG7 = _f(0x3FC2F112DF3E5244)
+
+
+def ln_kern(x: float) -> float:
+    """Natural log of a positive *normal* f64 (the Box-Muller uniform
+    domain: no zeros, subnormals, infinities or NaNs)."""
+    bits = f64_bits(x)
+    hx = (bits >> 32) & 0xFFFFFFFF
+    lx = bits & 0xFFFFFFFF
+    hx = (hx + (0x3FF00000 - 0x3FE6A09E)) & 0xFFFFFFFF
+    k = (hx >> 20) - 0x3FF
+    hx = (hx & 0x000FFFFF) + 0x3FE6A09E
+    m = _from_bits((hx << 32) | lx)  # 1+f in [sqrt(2)/2, sqrt(2))
+    f = m - 1.0
+    s = f / (2.0 + f)
+    dk = float(k)
+    z = s * s
+    w = z * z
+    t1 = w * (LG2 + w * (LG4 + w * LG6))
+    t2 = z * (LG1 + w * (LG3 + w * (LG5 + w * LG7)))
+    r = t2 + t1
+    hfsq = 0.5 * f * f
+    return dk * LN2_HI - ((hfsq - (s * (hfsq + r) + dk * LN2_LO)) - f)
+
+
+# --- sin_cos on [0, 2*pi]: Cody-Waite quadrant reduction + kernels ----
+#
+# n = nearest multiple of pi/2 (n in 0..4 on this domain); the residual
+# y = x - n*pi/2 is carried as a head/tail pair (y0, y1) through the
+# Cody-Waite subtraction (n*PIO2_k is exact: the constants' mantissas
+# are truncated so a 3-bit integer multiple stays representable), with
+# fdlibm's cancellation-depth check adding the 2nd/3rd term pairs when
+# x lands close to a quadrant boundary — cos near its zero crossing
+# keeps ~1 ulp accuracy instead of losing the tail to the reduction.
+# Then musl's branch-free __sin/__cos cores evaluate on |y| <= pi/4 +
+# ulp and the quadrant swaps/signs map back.
+
+INVPIO2 = _f(0x3FE45F306DC9C883)
+PIO2_1 = _f(0x3FF921FB54400000)
+PIO2_1T = _f(0x3DD0B4611A626331)
+PIO2_2 = _f(0x3DD0B4611A600000)
+PIO2_2T = _f(0x3BA3198A2E037073)
+PIO2_3 = _f(0x3BA3198A2E000000)
+PIO2_3T = _f(0x397B839A252049C1)
+
+S1 = _f(0xBFC5555555555549)
+S2 = _f(0x3F8111111110F8A6)
+S3 = _f(0xBF2A01A019C161D5)
+S4 = _f(0x3EC71DE357B1FE7D)
+S5 = _f(0xBE5AE5E68A2B9CEB)
+S6 = _f(0x3DE5D93A5ACFD57C)
+
+C1 = _f(0x3FA555555555554C)
+C2 = _f(0xBF56C16C16C15177)
+C3 = _f(0x3EFA01A019CB1590)
+C4 = _f(0xBE927E4F809C52AD)
+C5 = _f(0x3E21EE9EBDB4B1C4)
+C6 = _f(0xBDA8FAE9BE8838D4)
+
+
+def _sin_core(x: float, y: float) -> float:
+    """musl __sin, tail path (iy=1) unconditionally: |x| <= pi/4+ulp,
+    y the low part of the reduced argument."""
+    z = x * x
+    w = z * z
+    r = S2 + z * (S3 + z * S4) + z * w * (S5 + z * S6)
+    v = z * x
+    return x - ((z * (0.5 * y - v * r) - y) - v * S1)
+
+
+def _cos_core(x: float, y: float) -> float:
+    """musl __cos (already branch-free): |x| <= pi/4+ulp."""
+    z = x * x
+    w = z * z
+    r = z * (C1 + z * (C2 + z * C3)) + w * w * (C4 + z * (C5 + z * C6))
+    hz = 0.5 * z
+    w = 1.0 - hz
+    return w + (((1.0 - w) - hz) + (z * r - x * y))
+
+
+def sin_cos_kern(x: float) -> tuple[float, float]:
+    """(sin x, cos x) for x in [0, 2*pi] — the Box-Muller phase domain
+    (x = 2*pi*v, v in [0, 1))."""
+    # Nearest quadrant: truncation of x*(2/pi) + 0.5 (x >= 0), n in 0..4.
+    n = int(x * INVPIO2 + 0.5)
+    fn = float(n)
+    r = x - fn * PIO2_1  # fn*PIO2_1 exact: 33-bit * 3-bit
+    w = fn * PIO2_1T  # 1st round good to 85 bits
+    y0 = r - w
+    # Cancellation check (fdlibm __rem_pio2): when x sits within
+    # ~2^-16 of a quadrant boundary the 85-bit reduction has eaten the
+    # result's leading bits; refine with the next pi/2 term pair.
+    ex = (f64_bits(x) >> 52) & 0x7FF
+    if ex - ((f64_bits(y0) >> 52) & 0x7FF) > 16:
+        t = r
+        w = fn * PIO2_2
+        r = t - w
+        w = fn * PIO2_2T - ((t - r) - w)
+        y0 = r - w  # 2nd round good to 118 bits
+        if ex - ((f64_bits(y0) >> 52) & 0x7FF) > 49:
+            t = r
+            w = fn * PIO2_3
+            r = t - w
+            w = fn * PIO2_3T - ((t - r) - w)
+            y0 = r - w  # 3rd round: 151 bits, covers every double
+    y1 = (r - y0) - w
+    s = _sin_core(y0, y1)
+    c = _cos_core(y0, y1)
+    j = n & 3
+    if j == 0:
+        return s, c
+    if j == 1:
+        return c, -s
+    if j == 2:
+        return -s, -c
+    return -c, s
+
+
+# --- PCG-XSL-RR 128/64 + Box-Muller (rust: util/rng.rs) ---------------
+
+TWO_NEG53 = 1.0 / (1 << 53)
+TWO_PI = 2.0 * _f(0x400921FB54442D18)  # 2.0 * std::f64::consts::PI
+
+
+class Pcg64:
+    """Line-for-line port of ``litl::util::rng::Pcg64`` (state arith in
+    Python ints masked to 128 bits == Rust wrapping u128)."""
+
+    def __init__(self, seed: int, stream: int):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK128
+        self.spare: float | None = None
+        self.next_u64()
+        self.state = (self.state + seed) & MASK128
+        self.next_u64()
+
+    def advance(self, delta: int) -> None:
+        acc_mult, acc_plus = 1, 0
+        cur_mult, cur_plus = PCG_MULT, self.inc
+        while delta > 0:
+            if delta & 1:
+                acc_mult = (acc_mult * cur_mult) & MASK128
+                acc_plus = (acc_plus * cur_mult + cur_plus) & MASK128
+            cur_plus = ((cur_mult + 1) * cur_plus) & MASK128
+            cur_mult = (cur_mult * cur_mult) & MASK128
+            delta >>= 1
+        self.state = (acc_mult * self.state + acc_plus) & MASK128
+        self.spare = None
+
+    def next_u64(self) -> int:
+        self.state = (self.state * PCG_MULT + self.inc) & MASK128
+        xored = ((self.state >> 64) ^ self.state) & MASK64
+        rot = self.state >> 122
+        return ((xored >> rot) | (xored << ((64 - rot) & 63))) & MASK64
+
+    def next_f64(self) -> float:
+        # (u >> 11) has <= 53 bits: the int->float conversion is exact.
+        return float(self.next_u64() >> 11) * TWO_NEG53
+
+    def next_normal(self) -> float:
+        """Scalar Box-Muller walk through the owned kernels — the
+        oracle the lane kernel is pinned against."""
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        while True:
+            u = self.next_f64()
+            if u > 1e-300:
+                break
+        v = self.next_f64()
+        r = math.sqrt(-2.0 * ln_kern(u))
+        sin, cos = sin_cos_kern(TWO_PI * v)
+        self.spare = r * sin
+        return r * cos
+
+    def normal_lane(self) -> list[float]:
+        """One 16-pair lane: uniforms drawn interleaved, then each
+        transcendental as its own pass — must be bitwise the scalar
+        walk (rust: ``Pcg64::normal_lane``)."""
+        assert self.spare is None
+        saved = self.state
+        u = [0.0] * NORMAL_LANE
+        v = [0.0] * NORMAL_LANE
+        ok = True
+        for k in range(NORMAL_LANE):
+            u[k] = self.next_f64()
+            v[k] = self.next_f64()
+            ok = ok and u[k] > 1e-300
+        if not ok:
+            self.state = saved
+            out = []
+            for _ in range(NORMAL_LANE):
+                out.append(self.next_normal())
+                assert self.spare is not None
+                out.append(self.spare)
+                self.spare = None
+            return out
+        r = [-2.0 * ln_kern(uk) for uk in u]
+        r = [math.sqrt(rk) for rk in r]
+        sc = [sin_cos_kern(TWO_PI * vk) for vk in v]
+        out = [0.0] * (2 * NORMAL_LANE)
+        for k in range(NORMAL_LANE):
+            out[2 * k] = r[k] * sc[k][1]
+            out[2 * k + 1] = r[k] * sc[k][0]
+        return out
+
+    def fill_normal_scalar(self, n: int) -> list[float]:
+        return [self.next_normal() for _ in range(n)]
+
+    def fill_normal(self, n: int) -> list[float]:
+        """Lane-batched fill (spare consumed first, scalar tail) —
+        rust: ``Pcg64::fill_normal``."""
+        out: list[float] = []
+        if n and self.spare is not None:
+            out.append(self.spare)
+            self.spare = None
+        while n - len(out) >= 2 * NORMAL_LANE:
+            out.extend(self.normal_lane())
+        while len(out) < n:
+            out.append(self.next_normal())
+        return out

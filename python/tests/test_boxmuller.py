@@ -1,0 +1,144 @@
+"""Validation harness for the Box-Muller transcendental kernel design
+(``compile/kernels/boxmuller.py``) — the Python side of PR-6's
+"pre-validate, then transcribe to Rust" workflow.
+
+Stdlib-only (no jax/numpy): runnable in the authoring container.  Run
+directly (``python3 python/tests/test_boxmuller.py``) or under pytest.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile.kernels.boxmuller import (  # noqa: E402
+    NORMAL_LANE,
+    TWO_PI,
+    Pcg64,
+    f64_bits,
+    ln_kern,
+    sin_cos_kern,
+)
+
+TRIALS = 400  # >= 300 randomized trials per the PR-6 acceptance bar
+
+
+def ulp_diff(a: float, b: float) -> int:
+    """Distance in representable doubles (same-sign finite operands)."""
+    ia, ib = f64_bits(a), f64_bits(b)
+    # Map negatives onto a monotone integer line.
+    if ia >> 63:
+        ia = (1 << 63) - (ia & ~(1 << 63))
+    if ib >> 63:
+        ib = (1 << 63) - (ib & ~(1 << 63))
+    return abs(ia - ib)
+
+
+def test_ln_kern_accuracy_over_the_uniform_domain():
+    rng = random.Random(0xE6)
+    worst = 0
+    cases = []
+    # Randomized: u = k * 2^-53, k in [1, 2^53) — exactly next_f64's range.
+    for _ in range(TRIALS):
+        k = rng.randrange(1, 1 << 53)
+        cases.append(k * 2.0**-53)
+    # Edges: smallest/largest uniforms, values pinning the reduction
+    # (near 1.0 from below, near sqrt(2)/2 where f changes sign, exact
+    # powers of two where f == 0).
+    cases += [2.0**-53, 1.0 - 2.0**-53, 0.5, 0.25, 2.0**-52, 2.0**-30]
+    sqrt_half = math.sqrt(0.5)
+    for bump in range(-4, 5):
+        cases.append(max(2.0**-53, math.nextafter(sqrt_half, bump * 1.0)))
+    for u in cases:
+        d = ulp_diff(ln_kern(u), math.log(u))
+        worst = max(worst, d)
+        assert d <= 2, f"ln({u!r}): {d} ulp from libm"
+    assert worst <= 2
+
+
+def test_sin_cos_kern_accuracy_and_quadrant_boundaries():
+    rng = random.Random(0x51)
+    cases = [rng.random() for _ in range(TRIALS)]
+    # Quadrant boundaries: v near j/4 (x = 2*pi*v near j*pi/2), from
+    # both sides, including v = 0 and v -> 1 (x -> 2*pi).
+    for j in range(5):
+        base = j / 4.0
+        for bump in (-3, -2, -1, 0, 1, 2, 3):
+            v = base
+            for _ in range(abs(bump)):
+                v = math.nextafter(v, base + (1 if bump > 0 else -1))
+            if 0.0 <= v < 1.0:
+                cases.append(v)
+    cases += [0.0, 2.0**-53, 1.0 - 2.0**-53]
+    worst = 0
+    for v in cases:
+        x = TWO_PI * v
+        s, c = sin_cos_kern(x)
+        ds = ulp_diff(s, math.sin(x))
+        dc = ulp_diff(c, math.cos(x))
+        worst = max(worst, ds, dc)
+        assert ds <= 2 and dc <= 2, f"sin_cos({v!r}): {ds}/{dc} ulp"
+        # The pair is a unit phasor to float accuracy.
+        assert abs(s * s + c * c - 1.0) < 1e-15
+    assert worst <= 2
+
+
+def test_lane_kernel_is_bitwise_the_scalar_walk():
+    rng = random.Random(0xBEEF)
+    for trial in range(TRIALS):
+        seed = rng.randrange(1 << 64)
+        stream = rng.randrange(1 << 64)
+        pair_offset = rng.randrange(6000)
+        scalar = Pcg64(seed, stream)
+        lane = Pcg64(seed, stream)
+        scalar.advance(2 * pair_offset)
+        lane.advance(2 * pair_offset)
+        for n in (rng.randrange(0, 4 * NORMAL_LANE + 3) for _ in range(3)):
+            a = scalar.fill_normal_scalar(n)
+            b = lane.fill_normal(n)
+            bits_a = [f64_bits(x) for x in a]
+            bits_b = [f64_bits(x) for x in b]
+            assert bits_a == bits_b, f"trial {trial} n {n}"
+        # Terminal state agrees, spare included.
+        assert f64_bits(scalar.next_normal()) == f64_bits(lane.next_normal())
+
+
+def test_spare_carry_and_odd_lengths():
+    scalar = Pcg64(77, 3)
+    lane = Pcg64(77, 3)
+    for n in (33, 1, 2 * NORMAL_LANE + 1, 7, 2 * NORMAL_LANE, 0, 5):
+        a = scalar.fill_normal_scalar(n)
+        b = lane.fill_normal(n)
+        assert [f64_bits(x) for x in a] == [f64_bits(x) for x in b], f"n {n}"
+
+
+def test_extreme_uniform_is_finite_and_accurate():
+    # The smallest admissible uniform drives the largest radius the
+    # kernel ever sees: r = sqrt(-2 ln 2^-53) ~ 8.57.  No overflow, no
+    # subnormals, still 2-ulp accurate.
+    u = 2.0**-53
+    r_kern = math.sqrt(-2.0 * ln_kern(u))
+    r_libm = math.sqrt(-2.0 * math.log(u))
+    assert math.isfinite(r_kern)
+    assert ulp_diff(r_kern, r_libm) <= 2
+
+
+def _main() -> int:
+    tests = [(k, v) for k, v in sorted(globals().items()) if k.startswith("test_")]
+    failed = 0
+    for name, fn in tests:
+        try:
+            fn()
+            print(f"PASS {name}")
+        except AssertionError as e:
+            failed += 1
+            print(f"FAIL {name}: {e}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -174,6 +174,14 @@ pub struct TrainConfig {
     /// The budget folds into the streamed medium's resident-bytes
     /// ceiling; cached and uncached projections are bitwise equal.
     pub tile_cache_mb: usize,
+    /// Lock stripes for the streamed tile cache (`--tile-cache-stripes`,
+    /// `[topology] tile_cache_stripes = N`).  `0` (the default) picks
+    /// automatically: the next power of two at or above the projection
+    /// pool's thread count.  Explicit values round up to a power of
+    /// two.  Stripes change contention and residency layout only —
+    /// striped and single-stripe caches produce bitwise-identical
+    /// projections.
+    pub tile_cache_stripes: usize,
     /// Explicit device topology (`--topology opt:4+dig:2@3`-style
     /// shorthand, or a `[topology]` TOML section).  `None` = the
     /// homogeneous topology implied by `projector`/`shards`.  The
@@ -208,6 +216,7 @@ impl Default for TrainConfig {
             partition: Partition::Modes,
             medium: MediumBacking::Materialized,
             tile_cache_mb: 0,
+            tile_cache_stripes: 0,
             topology: None,
             topology_pool: PoolPolicy::Owned,
         }
@@ -262,6 +271,13 @@ impl TrainConfig {
                 }
                 self.tile_cache_mb = n as usize;
             }
+            "tile_cache_stripes" | "topology.tile_cache_stripes" => {
+                let n = value.want_int()?;
+                if n < 0 {
+                    bail!("tile_cache_stripes must be >= 0 (0 picks automatically), got {n}");
+                }
+                self.tile_cache_stripes = n as usize;
+            }
             "topology" | "topology.spec" => {
                 self.topology = Some(Topology::parse(value.want_str()?)?)
             }
@@ -311,6 +327,14 @@ impl TrainConfig {
             "--tile-cache-mb {} only applies to --medium streamed (the \
              materialized backing holds the dense tensors already)",
             self.tile_cache_mb
+        );
+        // Same rule for the stripe knob: stripes partition the tile
+        // cache, which only exists on the streamed backing.
+        anyhow::ensure!(
+            self.tile_cache_stripes == 0 || self.medium == MediumBacking::Streamed,
+            "--tile-cache-stripes {} only applies to --medium streamed \
+             (there is no tile cache to stripe on the materialized backing)",
+            self.tile_cache_stripes
         );
         anyhow::ensure!(
             self.shards <= 1 || self.projector != ProjectorKind::OpticalHlo,
@@ -492,6 +516,33 @@ mod tests {
         c2.load_file(path.to_str().unwrap()).unwrap();
         assert_eq!(c2.tile_cache_mb, 128);
         assert_eq!(c2.medium, MediumBacking::Streamed);
+        c2.validate_projection().unwrap();
+    }
+
+    #[test]
+    fn tile_cache_stripes_knob_parses_validates_and_round_trips() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.tile_cache_stripes, 0, "auto stripe count by default");
+        c.set_kv("tile_cache_stripes=8").unwrap();
+        assert_eq!(c.tile_cache_stripes, 8);
+        assert!(c.set_kv("tile_cache_stripes=-2").is_err());
+        // Stripes without the streamed backing is a loud config error,
+        // exactly like the budget knob.
+        let err = c.validate_projection().unwrap_err().to_string();
+        assert!(err.contains("streamed"), "{err}");
+        c.set_kv("medium=streamed").unwrap();
+        c.validate_projection().unwrap();
+        // The `[topology]` section spelling maps to the same knob.
+        let path = std::env::temp_dir().join("litl_cfg_tile_stripes_test.toml");
+        std::fs::write(
+            &path,
+            "[topology]\ntile_cache_mb = 32\ntile_cache_stripes = 4\nmedium = \"streamed\"\n",
+        )
+        .unwrap();
+        let mut c2 = TrainConfig::default();
+        c2.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c2.tile_cache_stripes, 4);
+        assert_eq!(c2.tile_cache_mb, 32);
         c2.validate_projection().unwrap();
     }
 

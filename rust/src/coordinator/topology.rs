@@ -41,11 +41,14 @@
 //!
 //! **What a topology does not carry**: per-*instance* properties of the
 //! physical medium — notably the streamed backing's cross-step tile
-//! cache (`--tile-cache-mb` / `[topology] tile_cache_mb`, a
-//! [`TrainConfig`](crate::config::TrainConfig) knob).  The trainer
-//! attaches the cache to the [`Medium`] *before* the build carves shard
-//! windows, so every shard of any topology shares one budget; builds
-//! stay pure functions of (topology, medium) either way.
+//! cache (`--tile-cache-mb` / `[topology] tile_cache_mb`, with its lock
+//! layout under `--tile-cache-stripes` / `[topology]
+//! tile_cache_stripes`, both [`TrainConfig`](crate::config::TrainConfig)
+//! knobs).  The trainer attaches the cache to the [`Medium`] *before*
+//! the build carves shard windows, so every shard of any topology
+//! shares one budget (and one stripe map — stripes change lock
+//! contention, never bits); builds stay pure functions of (topology,
+//! medium) either way.
 //!
 //! Shorthand grammar (CLI `--topology`, TOML `topology = "..."`):
 //!

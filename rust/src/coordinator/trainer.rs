@@ -121,16 +121,29 @@ impl Trainer {
                 err_dim,
                 bc.modes,
             )),
-            MediumBacking::Streamed => Medium::Streamed(
-                StreamedMedium::new(medium_seed, err_dim, bc.modes)
-                    .with_pool(crate::exec::shared_pool())
-                    .with_metrics(&metrics)
-                    // Cross-step tile cache (--tile-cache-mb; 0 = off).
-                    // Attached before the topology carves windows, so
-                    // every shard shares one budget and repeated
-                    // training steps hit instead of regenerating.
-                    .with_tile_cache_mb(cfg.tile_cache_mb),
-            ),
+            MediumBacking::Streamed => {
+                // Stripe count for the shared cache: explicit knob, or
+                // (default 0) the next power of two at or above the
+                // shared pool's thread count, so a fully loaded pool
+                // rarely contends on one stripe lock.
+                let pool = crate::exec::shared_pool();
+                let stripes = if cfg.tile_cache_stripes == 0 {
+                    pool.threads().max(1).next_power_of_two()
+                } else {
+                    cfg.tile_cache_stripes
+                };
+                Medium::Streamed(
+                    StreamedMedium::new(medium_seed, err_dim, bc.modes)
+                        .with_pool(pool)
+                        .with_metrics(&metrics)
+                        // Cross-step tile cache (--tile-cache-mb; 0 =
+                        // off).  Attached before the topology carves
+                        // windows, so every shard shares one budget and
+                        // repeated training steps hit instead of
+                        // regenerating.
+                        .with_tile_cache_mb_striped(cfg.tile_cache_mb, stripes),
+                )
+            }
         };
         let projector: Option<Box<dyn Projector>> = match cfg.algo {
             Algo::Optical => Some(match cfg.projector {

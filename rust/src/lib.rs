@@ -148,13 +148,29 @@
 //! the scalar walk (kept as `fill_normal_scalar`, the pinned oracle) —
 //! including spare carry, odd lengths and `advance`-seeked offsets —
 //! with the CI `gen-kernel-bench` job failing any speed regression.
+//! The transcendentals themselves are **crate-owned polynomial
+//! kernels** ([`util::mathk`]): branch-free `ln`/`sin_cos` with no
+//! per-element libm calls left in the hot loop, shared by the scalar
+//! oracle and the lane kernel (so scalar==lane parity holds by
+//! construction) and built from `+ − × ÷ sqrt` only, which makes the
+//! TM bits *platform-independent* — the same seed generates the same
+//! medium on any IEEE-754 host, regardless of its libm (design
+//! pre-validated in `python/compile/kernels/boxmuller.py`).
 //! (2) Repeated training steps stop regenerating identical tiles: the
-//! streamed backing takes a **bounded LRU tile cache**
+//! streamed backing takes a **bounded tile cache**
 //! ([`optics::stream::TileCache`], `--tile-cache-mb`, default off)
 //! shared across pool jobs and shard windows; cached and uncached
 //! projections are bitwise equal, hits charge zero generation
 //! sim-seconds, and the byte budget folds into
 //! `resident_tm_bytes` so the `stream-smoke` ceiling proof covers it.
+//! The cache is **lock-striped** (`--tile-cache-stripes`, default auto
+//! = next power of two ≥ the pool's threads) with per-stripe CLOCK
+//! recency, so a pool's worth of concurrent hits takes one short
+//! stripe lock each instead of serializing on a global mutex; stripes
+//! change contention and residency layout only, never bits (striped ==
+//! single-stripe, pinned in `stream_parity.rs`), and the CI
+//! `gen-kernel-bench` job gates per-thread hit throughput via the E6.4
+//! contention sweep.
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

@@ -24,7 +24,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "algo", "epochs", "train-size", "test-size", "lr", "theta", "seed",
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
-    "partition", "medium", "topology", "tile-cache-mb",
+    "partition", "medium", "topology", "tile-cache-mb", "tile-cache-stripes",
 ];
 
 fn main() {
@@ -114,6 +114,9 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(n) = args.flag_parse::<usize>("tile-cache-mb")? {
         cfg.tile_cache_mb = n;
     }
+    if let Some(n) = args.flag_parse::<usize>("tile-cache-stripes")? {
+        cfg.tile_cache_stripes = n;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -130,7 +133,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.validate_projection()?;
     log::info!(
         "train: algo={} lr={} epochs={} config={} projector={:?} shards={} \
-         partition={} medium={} tile_cache_mb={}",
+         partition={} medium={} tile_cache_mb={} tile_cache_stripes={}",
         cfg.algo.name(),
         cfg.lr,
         cfg.epochs,
@@ -139,7 +142,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.shards,
         cfg.partition.name(),
         cfg.medium.name(),
-        cfg.tile_cache_mb
+        cfg.tile_cache_mb,
+        cfg.tile_cache_stripes
     );
     if cfg.algo == Algo::Optical && cfg.projector != litl::config::ProjectorKind::OpticalHlo
     {
@@ -343,6 +347,11 @@ COMMANDS:
                                     steps hit cache instead of
                                     regenerating; bitwise identical
                                     either way
+          --tile-cache-stripes N    lock stripes for the tile cache
+                                    (rounded up to a power of two;
+                                    default 0 = auto: next pow2 >= the
+                                    projection pool's threads); stripes
+                                    change contention only, never bits
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

@@ -316,6 +316,31 @@ mod tests {
     }
 
     #[test]
+    fn stripe_gauge_roll_up_excludes_the_total_gauge() {
+        // The streamed tile cache publishes one gauge per stripe
+        // (`stream_cache_stripe<i>_resident_bytes`) alongside the
+        // pre-existing total (`stream_cache_resident_bytes`).  The
+        // roll-up is only overlap-safe because the total's name does
+        // not start with the stripe prefix — pin that here so a rename
+        // can't silently double-count residency.
+        let reg = Registry::new();
+        reg.gauge("stream_cache_stripe0_resident_bytes").set(100.0);
+        reg.gauge("stream_cache_stripe1_resident_bytes").set(40.0);
+        reg.gauge("stream_cache_stripe2_resident_bytes").set(0.0);
+        reg.gauge("stream_cache_resident_bytes").set(140.0);
+        assert_eq!(
+            reg.sum_gauges("stream_cache_stripe", "_resident_bytes"),
+            140.0,
+            "stripes sum; the total gauge must not be counted again"
+        );
+        assert!(!name_matches(
+            "stream_cache_resident_bytes",
+            "stream_cache_stripe",
+            "_resident_bytes"
+        ));
+    }
+
+    #[test]
     fn histogram_stats() {
         let reg = Registry::new();
         let h = reg.histogram("lat");

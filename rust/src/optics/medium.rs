@@ -32,6 +32,12 @@
 //! a uniform draw of exactly 0.0 (probability 2⁻⁵³ per pair), which
 //! would shift the pair↔column alignment for the rest of that row; no
 //! realizable seed/shape in the tests hits it.
+//!
+//! Since the generation walk evaluates its transcendentals through the
+//! crate-owned polynomial kernels ([`crate::util::mathk`], `+ − × ÷
+//! sqrt` only — no libm in the loop), the entry *values* are also
+//! **platform-independent**: the seed defines the same matrix bits on
+//! every IEEE-754 host, not just within one libc build.
 
 use crate::tensor::{axpy, Tensor};
 use crate::util::rng::Pcg64;

@@ -46,40 +46,67 @@
 //!
 //! Training regenerates the *same* tiles every step (the matrix never
 //! changes — that is the point of the medium).  [`TileCache`] amortizes
-//! that: a bounded LRU of generated row-tiles keyed by
+//! that: a bounded cache of generated row-tiles keyed by
 //! `(seed, row, col0, width)` — absolute medium coordinates plus the
 //! generating seed — sized to a byte budget
-//! (`--tile-cache-mb`, default off), shared across the scoped pool's
-//! tile jobs behind one mutex and — like the stats — across every
-//! clone/window/shard of the medium, so a farm gets one fleet-wide
-//! budget.
+//! (`--tile-cache-mb`, default off) and — like the stats — shared
+//! across every clone/window/shard of the medium, so a farm gets one
+//! fleet-wide budget.
+//!
+//! ### Phase 3 (PR 6): lock stripes + CLOCK recency
+//!
+//! PR 5's cache was one global `Mutex` around a `HashMap` + `BTreeMap`
+//! LRU: every *hit* paid the fleet-wide lock plus an O(log n) recency
+//! bump, which profiled as the second serial fraction once generation
+//! itself got cheap.  The cache is now **striped**: a power-of-two
+//! number of independent lock stripes (`--tile-cache-stripes`, default
+//! auto = next pow2 ≥ pool threads), each [`TileKey`] mapped to its
+//! stripe by a stable 64-bit mix of the key words, the byte budget
+//! apportioned per stripe via [`balanced_widths`].  Within a stripe,
+//! recency is **CLOCK (second-chance)**: a hit takes that stripe's
+//! lock and sets one `referenced` flag — O(1), no tree — and eviction
+//! sweeps a hand that spares referenced slots once before evicting.
+//! Concurrent tile jobs on different stripes never contend at all.
 //!
 //! Cache rules (pinned in `rust/tests/stream_parity.rs`):
 //!
 //! * **Determinism** — a cached tile is stored exactly as generated, so
 //!   cached and uncached projections are **bitwise equal** at any shard
-//!   count under either partition, noisy optics included.  Hit/miss
-//!   *counts* are accounting, not part of the contract: concurrent
-//!   full-medium replicas (batch partition) may race to generate the
-//!   same tile, and whichever identical copy lands first wins.
+//!   count under either partition, noisy optics included — and the
+//!   stripe count is likewise invisible: striped == single-stripe
+//!   bitwise (replacement policy and stripe layout decide only *what
+//!   is resident*, never what a tile contains).  Hit/miss *counts* are
+//!   accounting, not part of the contract: concurrent full-medium
+//!   replicas (batch partition) may race to generate the same tile,
+//!   and whichever identical copy lands first wins (insert-if-absent
+//!   keeps the incumbent).
 //! * **Attribution** — cache hits charge **zero** generation
 //!   sim-seconds and zero tiles/bytes-generated; misses charge exactly
 //!   as before (with a cache attached, the gen clock times the
 //!   generation calls themselves; without one, the PR-3 whole-job
 //!   timing is unchanged).
 //! * **Residency** — the budget counts tile **payload** bytes
-//!   (`width × 2 quadratures × 4 B`); an over-budget insert evicts LRU
-//!   tiles first and is skipped entirely if the tile alone exceeds the
-//!   budget.  Per-tile bookkeeping (two `Vec` headers, the `Arc`
-//!   control block, hash/BTree nodes — roughly 200 B/tile) is *not*
-//!   charged: ~0.6% of a default 4096-column tile, so size the budget
-//!   accordingly if you shrink `tile_cols` far below the default.
+//!   (`width × 2 quadratures × 4 B`); each stripe evicts via its CLOCK
+//!   hand to stay under its own slice of the budget, and skips any
+//!   tile wider than that slice outright (a stripe budget below one
+//!   tile therefore caches nothing — costing misses, never bits).
+//!   Per-tile bookkeeping (two `Vec` headers, the `Arc` control block,
+//!   hash/slot nodes — roughly 200 B/tile) is *not* charged: ~0.6% of
+//!   a default 4096-column tile, so size the budget accordingly if you
+//!   shrink `tile_cols` far below the default.
 //!   [`StreamedMedium::resident_tm_bytes`] includes the full budget,
 //!   so the memory-ceiling story (CI `stream-smoke`) covers the cache.
+//! * **Metrics** — residency is published per stripe
+//!   (`stream_cache_stripe<i>_resident_bytes`) plus the pre-striping
+//!   total gauge (`stream_cache_resident_bytes`); the per-stripe names
+//!   share no span with the total, so
+//!   `Registry::sum_gauges("stream_cache_stripe", "_resident_bytes")`
+//!   rolls them up without double-counting the total.
 //!
 //! [`Pcg64::advance`]: crate::util::rng::Pcg64::advance
+//! [`balanced_widths`]: crate::util::balanced_widths
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -100,11 +127,25 @@ pub const DEFAULT_TILE_COLS: usize = 4096;
 /// [`StreamedMedium::with_metrics`]).
 pub const STREAM_TILES: &str = "stream_tiles";
 pub const STREAM_BYTES: &str = "stream_bytes_generated";
-/// Tile-cache hit/miss counters and the resident-bytes gauge (all zero
+/// Tile-cache hit/miss counters and the resident-bytes gauges (all zero
 /// until a [`TileCache`] is attached).
 pub const STREAM_CACHE_HITS: &str = "stream_cache_hits";
 pub const STREAM_CACHE_MISSES: &str = "stream_cache_misses";
+/// Total resident payload bytes across all stripes (the pre-striping
+/// gauge name, kept for dashboards that read one number).
 pub const STREAM_CACHE_RESIDENT: &str = "stream_cache_resident_bytes";
+/// Per-stripe resident gauges are `stream_cache_stripe<i>_resident_bytes`
+/// — prefix/suffix chosen so
+/// `Registry::sum_gauges(STREAM_CACHE_STRIPE_PREFIX, STREAM_CACHE_STRIPE_SUFFIX)`
+/// rolls up exactly the stripes: [`STREAM_CACHE_RESIDENT`] does not
+/// start with the stripe prefix, so the total is never double-counted.
+pub const STREAM_CACHE_STRIPE_PREFIX: &str = "stream_cache_stripe";
+pub const STREAM_CACHE_STRIPE_SUFFIX: &str = "_resident_bytes";
+
+/// Gauge name for one stripe's resident payload bytes.
+pub fn stream_cache_stripe_gauge_name(stripe: usize) -> String {
+    format!("{STREAM_CACHE_STRIPE_PREFIX}{stripe}{STREAM_CACHE_STRIPE_SUFFIX}")
+}
 
 #[derive(Default)]
 struct StatsInner {
@@ -142,115 +183,196 @@ pub struct CachedTile {
     im: Vec<f32>,
 }
 
-struct TileCacheInner {
-    /// key → (recency stamp, tile).
-    map: HashMap<TileKey, (u64, Arc<CachedTile>)>,
-    /// recency stamp → key; the smallest stamp is the LRU victim.
-    lru: BTreeMap<u64, TileKey>,
-    next_stamp: u64,
+/// One slot of a stripe's CLOCK ring.
+struct SlotEntry {
+    key: TileKey,
+    tile: Arc<CachedTile>,
+    /// Second-chance flag: set by a hit, cleared (once) by the sweep.
+    referenced: bool,
+}
+
+struct StripeInner {
+    /// key → index into `slots`.
+    map: HashMap<TileKey, usize>,
+    slots: Vec<SlotEntry>,
+    /// CLOCK hand: the next slot the eviction sweep examines.
+    hand: usize,
     bytes: usize,
 }
 
-/// Bounded LRU cache of generated row-tiles — streamed-medium phase 2
-/// (see the module docs for the determinism/attribution/residency
-/// rules).  All operations take one short mutex section (hash lookup +
-/// O(log n) recency bump); generation itself happens outside the lock,
-/// so concurrent tile jobs only serialize on bookkeeping.
+/// Bounded striped cache of generated row-tiles — streamed-medium
+/// phases 2+3 (see the module docs for the determinism / attribution /
+/// residency rules).  `stripes` independent mutexes (power of two),
+/// keys assigned by a stable hash; within a stripe a hit is one lock +
+/// one flag store (CLOCK second-chance recency — no ordered structure
+/// to rebalance), and generation always happens outside any lock.
 pub struct TileCache {
     budget: usize,
-    inner: Mutex<TileCacheInner>,
+    /// Per-stripe payload budgets: `balanced_widths(budget, stripes)`.
+    stripe_budgets: Vec<usize>,
+    stripes: Vec<Mutex<StripeInner>>,
+    /// `stripes.len() - 1` (stripe count is a power of two).
+    mask: u64,
 }
 
 impl TileCache {
-    /// A cache bounded to `budget` payload bytes.
+    /// A single-stripe cache bounded to `budget` payload bytes (the
+    /// pre-striping spelling; behaviorally the PR-5 cache with CLOCK
+    /// recency in place of the LRU stamp).
     pub fn with_budget_bytes(budget: usize) -> TileCache {
-        TileCache {
-            budget,
-            inner: Mutex::new(TileCacheInner {
-                map: HashMap::new(),
-                lru: BTreeMap::new(),
-                next_stamp: 0,
-                bytes: 0,
-            }),
-        }
+        Self::with_budget_bytes_striped(budget, 1)
     }
 
-    /// A cache bounded to `mb` MiB of tile payload.
+    /// A single-stripe cache bounded to `mb` MiB of tile payload.
     pub fn with_budget_mb(mb: usize) -> TileCache {
         Self::with_budget_bytes(mb * 1024 * 1024)
     }
 
-    /// The payload-byte budget this cache may hold resident (the number
-    /// [`StreamedMedium::resident_tm_bytes`] folds in; per-tile
-    /// bookkeeping overhead is excluded — see the module docs).
+    /// A cache of `stripes` lock stripes (rounded up to the next power
+    /// of two, min 1) sharing `budget` payload bytes, apportioned per
+    /// stripe via [`crate::util::balanced_widths`].
+    pub fn with_budget_bytes_striped(budget: usize, stripes: usize) -> TileCache {
+        let stripes = stripes.max(1).next_power_of_two();
+        let stripe_budgets = crate::util::balanced_widths(budget, stripes);
+        TileCache {
+            budget,
+            stripe_budgets,
+            stripes: (0..stripes)
+                .map(|_| {
+                    Mutex::new(StripeInner {
+                        map: HashMap::new(),
+                        slots: Vec::new(),
+                        hand: 0,
+                        bytes: 0,
+                    })
+                })
+                .collect(),
+            mask: (stripes - 1) as u64,
+        }
+    }
+
+    /// [`TileCache::with_budget_bytes_striped`] in MiB.
+    pub fn with_budget_mb_striped(mb: usize, stripes: usize) -> TileCache {
+        Self::with_budget_bytes_striped(mb * 1024 * 1024, stripes)
+    }
+
+    /// The payload-byte budget this cache may hold resident across all
+    /// stripes (the number [`StreamedMedium::resident_tm_bytes`] folds
+    /// in; per-tile bookkeeping overhead is excluded — see the module
+    /// docs).
     pub fn budget_bytes(&self) -> usize {
         self.budget
     }
 
-    /// Payload bytes currently resident (same accounting as the
-    /// budget: tile data only, not per-tile bookkeeping).
-    pub fn resident_bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+    /// Number of lock stripes (a power of two).
+    pub fn stripe_count(&self) -> usize {
+        self.stripes.len()
     }
 
-    /// Tiles currently resident.
+    /// Payload bytes currently resident across all stripes (same
+    /// accounting as the budget: tile data only).
+    pub fn resident_bytes(&self) -> usize {
+        (0..self.stripes.len()).map(|i| self.stripe_resident_bytes(i)).sum()
+    }
+
+    /// Payload bytes resident in one stripe (the per-stripe gauge).
+    pub fn stripe_resident_bytes(&self, stripe: usize) -> usize {
+        self.stripes[stripe].lock().unwrap().bytes
+    }
+
+    /// Tiles currently resident across all stripes.
     pub fn tiles_resident(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.stripes.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// Stable stripe assignment: a 64-bit avalanche mix of the key
+    /// words, masked to the stripe count.  Deterministic across runs
+    /// and hosts (never `RandomState`), so residency behavior is
+    /// reproducible from the seed like everything else.
+    fn stripe_of(&self, key: &TileKey) -> usize {
+        let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+        for wd in [key.seed, key.row as u64, key.col0 as u64, key.w as u64] {
+            h ^= wd;
+            h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+            h ^= h >> 33;
+        }
+        (h & self.mask) as usize
     }
 
     fn lookup(&self, seed: u64, row: usize, col0: usize, w: usize) -> Option<Arc<CachedTile>> {
-        let mut guard = self.inner.lock().unwrap();
-        let inner = &mut *guard;
         let key = TileKey { seed, row, col0, w };
-        let stamp = inner.next_stamp;
-        let (s, tile) = inner.map.get_mut(&key)?;
-        inner.next_stamp += 1;
-        let prev = *s;
-        *s = stamp;
-        let tile = tile.clone();
-        inner.lru.remove(&prev);
-        inner.lru.insert(stamp, key);
-        Some(tile)
+        let mut guard = self.stripes[self.stripe_of(&key)].lock().unwrap();
+        let inner = &mut *guard;
+        let &idx = inner.map.get(&key)?;
+        let slot = &mut inner.slots[idx];
+        slot.referenced = true;
+        Some(slot.tile.clone())
     }
 
     fn insert(&self, seed: u64, row: usize, col0: usize, re: &[f32], im: &[f32]) {
         debug_assert_eq!(re.len(), im.len());
         let entry_bytes = tile_bytes(re.len());
-        if entry_bytes > self.budget {
-            // A tile wider than the whole budget can never fit; caching
-            // nothing beats evicting everything for nothing.
+        let key = TileKey { seed, row, col0, w: re.len() };
+        let si = self.stripe_of(&key);
+        let budget = self.stripe_budgets[si];
+        if entry_bytes > budget {
+            // A tile wider than this stripe's whole slice can never
+            // fit; caching nothing beats evicting everything for
+            // nothing.  (With a budget below stripes × tile bytes some
+            // or all stripes degenerate to pass-through — misses, not
+            // wrong bits.)
             return;
         }
-        // Copy the payload and build the Arc BEFORE taking the lock: the
-        // critical section stays hash + BTreeMap bookkeeping, so a cold
-        // first step's parallel misses don't serialize two memcpys each
-        // behind the mutex.  (A concurrent duplicate wastes one
-        // allocation — rare, and cheaper than lock-held copies always.)
+        // Copy the payload and build the Arc BEFORE taking the stripe
+        // lock: the critical section stays hash + slot bookkeeping, so
+        // a cold first step's parallel misses don't serialize two
+        // memcpys each behind a mutex.  (A concurrent duplicate wastes
+        // one allocation — rare, and cheaper than lock-held copies
+        // always.)
         let tile = Arc::new(CachedTile {
             re: re.to_vec(),
             im: im.to_vec(),
         });
-        let key = TileKey { seed, row, col0, w: re.len() };
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = self.stripes[si].lock().unwrap();
         let inner = &mut *guard;
         if inner.map.contains_key(&key) {
             // A concurrent replica generated it first — identical bits,
             // keep the incumbent.
             return;
         }
-        while inner.bytes + entry_bytes > self.budget {
-            let Some((&oldest, &victim)) = inner.lru.iter().next() else {
+        // CLOCK sweep: spare a referenced slot once (clear + advance),
+        // evict an unreferenced one in place.  Terminates: every pass
+        // over the ring clears flags, and an eviction strictly shrinks
+        // `bytes`.
+        while inner.bytes + entry_bytes > budget {
+            debug_assert!(!inner.slots.is_empty(), "empty stripe over budget");
+            if inner.slots.is_empty() {
                 break;
-            };
-            inner.lru.remove(&oldest);
-            if let Some((_, gone)) = inner.map.remove(&victim) {
-                inner.bytes -= tile_bytes(gone.re.len());
+            }
+            let hand = inner.hand;
+            if inner.slots[hand].referenced {
+                inner.slots[hand].referenced = false;
+                inner.hand = (hand + 1) % inner.slots.len();
+            } else {
+                let victim = inner.slots.swap_remove(hand);
+                inner.map.remove(&victim.key);
+                inner.bytes -= tile_bytes(victim.tile.re.len());
+                if hand < inner.slots.len() {
+                    // The former last slot moved into `hand`; fix its
+                    // index and examine it next (no hand advance).
+                    *inner.map.get_mut(&inner.slots[hand].key).unwrap() = hand;
+                } else {
+                    inner.hand = 0;
+                }
             }
         }
-        let stamp = inner.next_stamp;
-        inner.next_stamp += 1;
-        inner.map.insert(key, (stamp, tile));
-        inner.lru.insert(stamp, key);
+        let idx = inner.slots.len();
+        inner.slots.push(SlotEntry {
+            key,
+            tile,
+            referenced: false,
+        });
+        inner.map.insert(key, idx);
         inner.bytes += entry_bytes;
     }
 }
@@ -306,6 +428,14 @@ pub struct StreamedMedium {
     cache_hits_ctr: Option<Counter>,
     cache_misses_ctr: Option<Counter>,
     cache_gauge: Option<Gauge>,
+    /// One gauge per cache stripe (`stream_cache_stripe<i>_resident_bytes`);
+    /// empty until both a registry and a cache are attached (the two
+    /// builders compose in either order — each rebinds).
+    stripe_gauges: Vec<Gauge>,
+    /// Registry handle kept so a cache attached *after*
+    /// [`StreamedMedium::with_metrics`] can still bind its stripe
+    /// gauges.
+    registry: Option<Registry>,
 }
 
 /// One tile job's output: its column range of both quadratures plus its
@@ -341,6 +471,8 @@ impl StreamedMedium {
             cache_hits_ctr: None,
             cache_misses_ctr: None,
             cache_gauge: None,
+            stripe_gauges: Vec::new(),
+            registry: None,
         }
     }
 
@@ -359,20 +491,42 @@ impl StreamedMedium {
     }
 
     /// Attach a bounded cross-step [`TileCache`] of `mb` MiB (`0` is
-    /// the default-off knob: no cache, identical to today).  Clones and
-    /// windows taken *after* this call share the cache — one budget for
-    /// a whole farm.
+    /// the default-off knob: no cache, identical to today), single
+    /// lock stripe.  Clones and windows taken *after* this call share
+    /// the cache — one budget for a whole farm.
     pub fn with_tile_cache_mb(self, mb: usize) -> Self {
+        self.with_tile_cache_mb_striped(mb, 1)
+    }
+
+    /// [`StreamedMedium::with_tile_cache_mb`] with `stripes` lock
+    /// stripes (rounded up to a power of two — the
+    /// `--tile-cache-stripes` knob lands here).  Striped and
+    /// single-stripe caches project identical bits; stripes only cut
+    /// lock contention.
+    pub fn with_tile_cache_mb_striped(self, mb: usize, stripes: usize) -> Self {
         if mb == 0 {
             return self;
         }
-        self.with_tile_cache(Arc::new(TileCache::with_budget_mb(mb)))
+        self.with_tile_cache(Arc::new(TileCache::with_budget_mb_striped(mb, stripes)))
     }
 
     /// Attach a caller-built (possibly shared) [`TileCache`].
     pub fn with_tile_cache(mut self, cache: Arc<TileCache>) -> Self {
         self.cache = Some(cache);
+        self.bind_stripe_gauges();
         self
+    }
+
+    /// (Re)create the per-stripe resident gauges once both a registry
+    /// and a cache are known; called from whichever of
+    /// [`StreamedMedium::with_metrics`] / [`StreamedMedium::with_tile_cache`]
+    /// lands second.
+    fn bind_stripe_gauges(&mut self) {
+        if let (Some(reg), Some(cache)) = (&self.registry, &self.cache) {
+            self.stripe_gauges = (0..cache.stripe_count())
+                .map(|i| reg.gauge(&stream_cache_stripe_gauge_name(i)))
+                .collect();
+        }
     }
 
     /// The attached tile cache, if any.
@@ -381,15 +535,18 @@ impl StreamedMedium {
     }
 
     /// Surface tile/byte generation as [`STREAM_TILES`]/[`STREAM_BYTES`]
-    /// counters of `registry`, plus the tile-cache hit/miss counters and
-    /// resident-bytes gauge (which stay zero until a cache is attached —
-    /// the two builders compose in either order).
+    /// counters of `registry`, plus the tile-cache hit/miss counters,
+    /// the total resident-bytes gauge and the per-stripe resident
+    /// gauges (which stay zero/absent until a cache is attached — the
+    /// two builders compose in either order).
     pub fn with_metrics(mut self, registry: &Registry) -> Self {
         self.tiles_ctr = Some(registry.counter(STREAM_TILES));
         self.bytes_ctr = Some(registry.counter(STREAM_BYTES));
         self.cache_hits_ctr = Some(registry.counter(STREAM_CACHE_HITS));
         self.cache_misses_ctr = Some(registry.counter(STREAM_CACHE_MISSES));
         self.cache_gauge = Some(registry.gauge(STREAM_CACHE_RESIDENT));
+        self.registry = Some(registry.clone());
+        self.bind_stripe_gauges();
         self
     }
 
@@ -630,7 +787,21 @@ impl StreamedMedium {
             c.add(misses);
         }
         if let (Some(g), Some(cache)) = (&self.cache_gauge, &self.cache) {
-            g.set(cache.resident_bytes() as f64);
+            // One pass over the stripes: publish each stripe's gauge
+            // and the overlap-safe total (the gauges sum to it by
+            // construction — `sum_gauges(STREAM_CACHE_STRIPE_PREFIX,
+            // STREAM_CACHE_STRIPE_SUFFIX)` gives the same number
+            // without reading the total gauge).
+            let mut total = 0usize;
+            for (i, sg) in self.stripe_gauges.iter().enumerate() {
+                let b = cache.stripe_resident_bytes(i);
+                sg.set(b as f64);
+                total += b;
+            }
+            if self.stripe_gauges.is_empty() {
+                total = cache.resident_bytes();
+            }
+            g.set(total as f64);
         }
         (p1, p2)
     }
@@ -789,9 +960,16 @@ impl Medium {
     /// [`Medium`].  Call *before* carving windows/shards: clones share
     /// the cache.
     pub fn with_tile_cache_mb(self, mb: usize) -> Medium {
+        self.with_tile_cache_mb_striped(mb, 1)
+    }
+
+    /// [`Medium::with_tile_cache_mb`] with `stripes` lock stripes
+    /// (rounded up to a power of two) — same idempotence/dense-safety
+    /// rules; the stripe count changes contention, never bits.
+    pub fn with_tile_cache_mb_striped(self, mb: usize, stripes: usize) -> Medium {
         match self {
             Medium::Streamed(sm) if mb > 0 && sm.tile_cache().is_none() => {
-                Medium::Streamed(sm.with_tile_cache_mb(mb))
+                Medium::Streamed(sm.with_tile_cache_mb_striped(mb, stripes))
             }
             other => other,
         }
@@ -1152,6 +1330,171 @@ mod tests {
         // The subwindow path (weighted/explicit topologies) shares too.
         let sub = sm.subwindow(10, 50);
         assert!(Arc::ptr_eq(sub.tile_cache().unwrap(), sm.tile_cache().unwrap()));
+    }
+
+    #[test]
+    fn striped_cache_is_bitwise_single_stripe_at_every_stripe_count() {
+        // The PR-6 core contract: stripes decide contention and
+        // residency layout, never a single output bit — cached results
+        // are stored exactly as generated under any policy.
+        let plain = StreamedMedium::new(9, 7, 200).with_tile_cols(32);
+        let e = tern(3, 7, 21);
+        let want: Vec<_> = (0..3).map(|_| plain.project(&e)).collect();
+        for stripes in [1usize, 2, 4, 8] {
+            let striped = StreamedMedium::new(9, 7, 200)
+                .with_tile_cols(32)
+                .with_tile_cache(Arc::new(TileCache::with_budget_mb_striped(2, stripes)));
+            assert_eq!(striped.tile_cache().unwrap().stripe_count(), stripes);
+            for (step, w) in want.iter().enumerate() {
+                assert_eq!(&striped.project(&e), w, "stripes {stripes} step {step}");
+            }
+            let st = striped.stats();
+            assert!(
+                st.cache_resident_bytes <= st.cache_budget_bytes,
+                "stripes {stripes}: resident within budget"
+            );
+        }
+    }
+
+    #[test]
+    fn stripe_count_rounds_up_to_a_power_of_two() {
+        for (ask, got) in [(0usize, 1usize), (1, 1), (2, 2), (3, 4), (5, 8), (8, 8), (9, 16)] {
+            let c = TileCache::with_budget_bytes_striped(1024, ask);
+            assert_eq!(c.stripe_count(), got, "ask {ask}");
+        }
+    }
+
+    #[test]
+    fn stripe_budget_below_one_tile_caches_nothing_but_stays_bitwise() {
+        // 400 B total over 8 stripes = 50 B per stripe; a 32-column
+        // tile is 256 B — wider than every stripe's slice, so nothing
+        // is ever resident.  Costs misses, never bits.
+        let cache = Arc::new(TileCache::with_budget_bytes_striped(400, 8));
+        let plain = StreamedMedium::new(13, 6, 96).with_tile_cols(32);
+        let starved = StreamedMedium::new(13, 6, 96)
+            .with_tile_cols(32)
+            .with_tile_cache(cache.clone());
+        let e = tern(2, 6, 5);
+        for step in 0..2 {
+            assert_eq!(plain.project(&e), starved.project(&e), "step {step}");
+        }
+        assert_eq!(cache.tiles_resident(), 0, "no stripe can fit a tile");
+        assert_eq!(cache.resident_bytes(), 0);
+        let st = starved.stats();
+        assert_eq!(st.cache_hits, 0);
+        assert!(st.cache_misses > 0, "every lookup missed");
+    }
+
+    #[test]
+    fn oversized_tile_skip_is_per_stripe() {
+        // 1 KiB over 4 stripes = 256 B per stripe: a 4-column tile
+        // (32 B) fits even if hashing piles all eight onto one stripe,
+        // while a 40-column tile (320 B) fits no stripe — even though
+        // 320 B < the 1 KiB total.
+        let cache = TileCache::with_budget_bytes_striped(1024, 4);
+        let (re_s, im_s) = (vec![1.0f32; 4], vec![2.0f32; 4]);
+        let (re_l, im_l) = (vec![3.0f32; 40], vec![4.0f32; 40]);
+        for row in 0..8 {
+            cache.insert(5, row, 0, &re_s, &im_s);
+            cache.insert(5, row, 64, &re_l, &im_l);
+        }
+        assert_eq!(cache.tiles_resident(), 8, "all small tiles, no large ones");
+        for row in 0..8 {
+            assert!(cache.lookup(5, row, 0, 4).is_some());
+            assert!(cache.lookup(5, row, 64, 40).is_none(), "row {row} skipped");
+        }
+    }
+
+    #[test]
+    fn insert_if_absent_keeps_the_incumbent_across_stripes() {
+        // The concurrent-replica race rule holds per stripe: whoever
+        // lands first wins, a second identical-key insert is a no-op.
+        let cache = TileCache::with_budget_bytes_striped(64 * 1024, 4);
+        let first = vec![1.0f32; 16];
+        let second = vec![9.0f32; 16];
+        for row in 0..32 {
+            cache.insert(3, row, 0, &first, &first);
+        }
+        let bytes = cache.resident_bytes();
+        for row in 0..32 {
+            cache.insert(3, row, 0, &second, &second);
+        }
+        assert_eq!(cache.resident_bytes(), bytes, "re-insert never grows");
+        for row in 0..32 {
+            let t = cache.lookup(3, row, 0, 16).unwrap();
+            assert_eq!(t.re[0].to_bits(), 1.0f32.to_bits(), "row {row} incumbent");
+        }
+    }
+
+    #[test]
+    fn concurrent_replicas_thrashing_a_striped_cache_stay_bitwise() {
+        // Batch-partition shape: N full-medium replicas share one
+        // under-sized striped cache and race insert/evict across steps.
+        // Every replica must still produce the uncached bits.
+        let oracle = StreamedMedium::new(17, 8, 128).with_tile_cols(16);
+        let e = tern(3, 8, 33);
+        let want = oracle.project(&e);
+        let cache = Arc::new(TileCache::with_budget_bytes_striped(600, 4));
+        let replicas: Vec<StreamedMedium> = (0..4)
+            .map(|_| {
+                StreamedMedium::new(17, 8, 128)
+                    .with_tile_cols(16)
+                    .with_tile_cache(cache.clone())
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for sm in &replicas {
+                let want = &want;
+                let e = &e;
+                s.spawn(move || {
+                    for _ in 0..5 {
+                        assert_eq!(&sm.project(e), want);
+                    }
+                });
+            }
+        });
+        assert!(cache.resident_bytes() <= 600, "budget respected under race");
+    }
+
+    #[test]
+    fn per_stripe_gauges_roll_up_to_the_total_without_double_count() {
+        let registry = Registry::new();
+        let sm = StreamedMedium::new(4, 5, 120)
+            .with_tile_cols(20)
+            .with_metrics(&registry)
+            .with_tile_cache(Arc::new(TileCache::with_budget_mb_striped(1, 4)));
+        let e = Tensor::from_vec(&[1, 5], vec![1.0; 5]);
+        sm.project(&e);
+        let cache = sm.tile_cache().unwrap();
+        let resident = cache.resident_bytes();
+        assert!(resident > 0, "something cached");
+        let snap = registry.snapshot();
+        // Every stripe publishes; the stripes sum to the total gauge
+        // AND to the overlap-safe sum_gauges roll-up (which must not
+        // also pick up the total gauge — that is the double-count the
+        // stripe prefix exists to prevent).
+        let stripe_sum: f64 = (0..cache.stripe_count())
+            .map(|i| snap[&stream_cache_stripe_gauge_name(i)])
+            .sum();
+        assert_eq!(stripe_sum, resident as f64);
+        assert_eq!(snap[STREAM_CACHE_RESIDENT], resident as f64);
+        assert_eq!(
+            registry.sum_gauges(STREAM_CACHE_STRIPE_PREFIX, STREAM_CACHE_STRIPE_SUFFIX),
+            resident as f64,
+            "roll-up sees exactly the stripes, not the total gauge too"
+        );
+        // Builder order composes: cache first, metrics second.
+        let registry2 = Registry::new();
+        let sm2 = StreamedMedium::new(4, 5, 120)
+            .with_tile_cols(20)
+            .with_tile_cache(Arc::new(TileCache::with_budget_mb_striped(1, 2)))
+            .with_metrics(&registry2);
+        sm2.project(&e);
+        assert_eq!(
+            registry2.sum_gauges(STREAM_CACHE_STRIPE_PREFIX, STREAM_CACHE_STRIPE_SUFFIX),
+            registry2.snapshot()[STREAM_CACHE_RESIDENT],
+            "either builder order binds the stripe gauges"
+        );
     }
 
     #[test]

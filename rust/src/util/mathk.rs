@@ -1,0 +1,288 @@
+//! Crate-owned transcendental kernels for the Box–Muller hot path:
+//! `ln` on the uniform domain and `sin_cos` on `[0, 2π]`.
+//!
+//! PR 5's lane kernel batched the Box–Muller arithmetic but still
+//! called the host libm once per element for `ln` and `sin_cos` —
+//! opaque calls the compiler can neither inline nor vectorize, and the
+//! profile's largest remaining serial fraction.  These kernels replace
+//! them with the classic fdlibm/musl reduction + polynomial designs
+//! (freely redistributable, Sun Microsystems), written so that every
+//! step is a single IEEE-754 `+ − × ÷`/`sqrt`/bit-cast — **no
+//! `mul_add`** (without the `fma` target feature it lowers to a libm
+//! call) and no tables — which the compiler can unroll and vectorize
+//! across [`rng::NORMAL_LANE`]-wide loops.
+//!
+//! **Contract.** Deterministic and platform-independent: the same
+//! input bits give the same output bits on every host, because no step
+//! depends on the build's libm.  This *strengthens* PR 5's determinism
+//! story — transmission-matrix bits used to be pinned per-libm-build;
+//! now they are pinned per-algorithm.  The crate therefore never
+//! asserts kernel == libm *bitwise* (platform libms differ between
+//! builds; that contract would be unverifiable), but accuracy is held
+//! to ≤ 2 ulp of the host libm in tests, and the scalar/lane walks are
+//! pinned bitwise against each other — both route through these same
+//! functions, so oracle parity holds by construction.
+//!
+//! **Domain.** Both kernels assume the Box–Muller input domain and are
+//! not general replacements: `ln` takes positive *normal* doubles
+//! (uniforms are `k·2⁻⁵³`, `k ≥ 1` — subnormals excluded by
+//! construction), `sin_cos` takes `x = 2π·v ∈ [0, 2π]`.
+//!
+//! **Pre-validation.** The authoring environment has no Rust
+//! toolchain, so the design was proven first in a bit-exact Python
+//! port (`python/compile/kernels/boxmuller.py`, constants given as
+//! IEEE bit patterns in both sources so they can be diffed by eye):
+//! ≤ 1 ulp worst case over 400k+ random samples plus dense
+//! quadrant-boundary scans, and lane == scalar bitwise throughout
+//! (`python/tests/test_boxmuller.py`).
+//!
+//! [`rng::NORMAL_LANE`]: crate::util::rng::NORMAL_LANE
+
+// fdlibm e_log.c coefficients.
+const LN2_HI: f64 = f64::from_bits(0x3FE62E42FEE00000);
+const LN2_LO: f64 = f64::from_bits(0x3DEA39EF35793C76);
+const LG1: f64 = f64::from_bits(0x3FE5555555555593);
+const LG2: f64 = f64::from_bits(0x3FD999999997FA04);
+const LG3: f64 = f64::from_bits(0x3FD2492494229359);
+const LG4: f64 = f64::from_bits(0x3FCC71C51D8E78AF);
+const LG5: f64 = f64::from_bits(0x3FC7466496CB03DE);
+const LG6: f64 = f64::from_bits(0x3FC39A09D078C69F);
+const LG7: f64 = f64::from_bits(0x3FC2F112DF3E5244);
+
+/// Natural log of a positive *normal* f64 (the Box–Muller uniform
+/// domain: no zeros, subnormals, infinities or NaNs — callers uphold
+/// this; the uniform `k·2⁻⁵³, k ≥ 1` does by construction).
+///
+/// fdlibm `e_log` reduction `x = 2ᵏ·(1+f)` with `1+f ∈ [√2/2, √2)`,
+/// `s = f/(2+f)`, split even/odd polynomial in `s²` — assembled
+/// through the single general formula
+/// `dk·ln2_hi − ((hfsq − (s·(hfsq+R) + dk·ln2_lo)) − f)`.  fdlibm
+/// special-cases `k == 0` as `f − (hfsq − s·(hfsq+R))`, but that is
+/// bit-equal to the general formula at `dk = 0` (IEEE negation
+/// symmetry: `round(0 − (A − f)) = −round(A − f) = round(f − A)`), so
+/// one branch-free expression serves the whole lane.
+#[inline]
+pub fn ln_kern(x: f64) -> f64 {
+    let bits = x.to_bits();
+    let mut hx = (bits >> 32) as u32;
+    let lx = bits as u32;
+    hx = hx.wrapping_add(0x3FF00000 - 0x3FE6A09E);
+    let k = ((hx >> 20) as i32) - 0x3FF;
+    hx = (hx & 0x000FFFFF) + 0x3FE6A09E;
+    let m = f64::from_bits(((hx as u64) << 32) | lx as u64); // 1+f ∈ [√2/2, √2)
+    let f = m - 1.0;
+    let s = f / (2.0 + f);
+    let dk = k as f64;
+    let z = s * s;
+    let w = z * z;
+    let t1 = w * (LG2 + w * (LG4 + w * LG6));
+    let t2 = z * (LG1 + w * (LG3 + w * (LG5 + w * LG7)));
+    let r = t2 + t1;
+    let hfsq = 0.5 * f * f;
+    dk * LN2_HI - ((hfsq - (s * (hfsq + r) + dk * LN2_LO)) - f)
+}
+
+// fdlibm __rem_pio2 medium-path constants: π/2 split into 33-bit
+// chunks so an integer multiple n ≤ 4 times any chunk stays exact.
+const INVPIO2: f64 = f64::from_bits(0x3FE45F306DC9C883);
+const PIO2_1: f64 = f64::from_bits(0x3FF921FB54400000);
+const PIO2_1T: f64 = f64::from_bits(0x3DD0B4611A626331);
+const PIO2_2: f64 = f64::from_bits(0x3DD0B4611A600000);
+const PIO2_2T: f64 = f64::from_bits(0x3BA3198A2E037073);
+const PIO2_3: f64 = f64::from_bits(0x3BA3198A2E000000);
+const PIO2_3T: f64 = f64::from_bits(0x397B839A252049C1);
+
+// musl __sin.c / __cos.c core polynomial coefficients.
+const S1: f64 = f64::from_bits(0xBFC5555555555549);
+const S2: f64 = f64::from_bits(0x3F8111111110F8A6);
+const S3: f64 = f64::from_bits(0xBF2A01A019C161D5);
+const S4: f64 = f64::from_bits(0x3EC71DE357B1FE7D);
+const S5: f64 = f64::from_bits(0xBE5AE5E68A2B9CEB);
+const S6: f64 = f64::from_bits(0x3DE5D93A5ACFD57C);
+
+const C1: f64 = f64::from_bits(0x3FA555555555554C);
+const C2: f64 = f64::from_bits(0xBF56C16C16C15177);
+const C3: f64 = f64::from_bits(0x3EFA01A019CB1590);
+const C4: f64 = f64::from_bits(0xBE927E4F809C52AD);
+const C5: f64 = f64::from_bits(0x3E21EE9EBDB4B1C4);
+const C6: f64 = f64::from_bits(0xBDA8FAE9BE8838D4);
+
+/// musl `__sin`, tail path (`iy = 1`) unconditionally: `|x| ≤ π/4 +
+/// ulp`, `y` the low word of the reduced argument.
+#[inline]
+fn sin_core(x: f64, y: f64) -> f64 {
+    let z = x * x;
+    let w = z * z;
+    let r = S2 + z * (S3 + z * S4) + z * w * (S5 + z * S6);
+    let v = z * x;
+    x - ((z * (0.5 * y - v * r) - y) - v * S1)
+}
+
+/// musl `__cos` (already branch-free): `|x| ≤ π/4 + ulp`.
+#[inline]
+fn cos_core(x: f64, y: f64) -> f64 {
+    let z = x * x;
+    let w = z * z;
+    let r = z * (C1 + z * (C2 + z * C3)) + w * w * (C4 + z * (C5 + z * C6));
+    let hz = 0.5 * z;
+    let w = 1.0 - hz;
+    w + (((1.0 - w) - hz) + (z * r - x * y))
+}
+
+/// `(sin x, cos x)` for `x ∈ [0, 2π]` — the Box–Muller phase domain
+/// (`x = 2π·v`, `v ∈ [0, 1)`).
+///
+/// Quadrant reduction: `n = round(x·2/π) ∈ {0..4}` via truncation of
+/// `x·(2/π) + 0.5` (x is non-negative); the residual `y = x − n·π/2`
+/// is carried as a head/tail pair through Cody–Waite subtraction, with
+/// fdlibm's cancellation-depth check adding the 2nd/3rd `π/2` term
+/// pairs when `x` lands close to a quadrant boundary — so `cos` near
+/// its zero crossing keeps ~1 ulp accuracy instead of losing the tail
+/// to an 85-bit reduction.  The refinement branches are data-dependent
+/// but deterministic (pure functions of the input bits) and rare
+/// (~2⁻¹⁶ of the domain); the polynomial cores stay branch-free.
+#[inline]
+pub fn sin_cos_kern(x: f64) -> (f64, f64) {
+    let n = (x * INVPIO2 + 0.5) as i32;
+    let fn_ = n as f64;
+    let mut r = x - fn_ * PIO2_1; // fn·PIO2_1 exact: 33-bit × 3-bit
+    let mut w = fn_ * PIO2_1T; // 1st round good to 85 bits
+    let mut y0 = r - w;
+    let ex = ((x.to_bits() >> 52) & 0x7FF) as i32;
+    let ey = ((y0.to_bits() >> 52) & 0x7FF) as i32;
+    if ex - ey > 16 {
+        let t = r;
+        w = fn_ * PIO2_2;
+        r = t - w;
+        w = fn_ * PIO2_2T - ((t - r) - w);
+        y0 = r - w; // 2nd round good to 118 bits
+        let ey = ((y0.to_bits() >> 52) & 0x7FF) as i32;
+        if ex - ey > 49 {
+            let t = r;
+            w = fn_ * PIO2_3;
+            r = t - w;
+            w = fn_ * PIO2_3T - ((t - r) - w);
+            y0 = r - w; // 3rd round: 151 bits, covers every double
+        }
+    }
+    let y1 = (r - y0) - w;
+    let s = sin_core(y0, y1);
+    let c = cos_core(y0, y1);
+    match n & 3 {
+        0 => (s, c),
+        1 => (c, -s),
+        2 => (-s, -c),
+        _ => (-c, s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Distance in representable doubles (same-sign finite operands).
+    fn ulp_diff(a: f64, b: f64) -> u64 {
+        let map = |x: f64| {
+            let bits = x.to_bits();
+            if bits >> 63 == 1 {
+                (1u64 << 63).wrapping_sub(bits & !(1 << 63))
+            } else {
+                bits.wrapping_add(1 << 63)
+            }
+        };
+        map(a).abs_diff(map(b))
+    }
+
+    #[test]
+    fn ln_kern_is_within_2_ulp_of_libm_on_the_uniform_domain() {
+        let mut rng = crate::util::rng::Pcg64::seeded(0xE6);
+        let mut cases: Vec<f64> = (0..2000)
+            .map(|_| {
+                let k = (rng.next_u64() >> 11).max(1);
+                k as f64 * (1.0 / (1u64 << 53) as f64)
+            })
+            .collect();
+        // Edges: extreme uniforms, powers of two (f == 0), the √2/2
+        // reduction boundary from both sides.
+        cases.extend([
+            f64::from_bits(0x3CA0000000000000), // 2⁻⁵³, smallest uniform
+            1.0 - f64::EPSILON / 2.0,           // largest uniform
+            0.5,
+            0.25,
+        ]);
+        let sqrt_half = std::f64::consts::FRAC_1_SQRT_2;
+        for bump in -4i64..=4 {
+            cases.push(f64::from_bits((sqrt_half.to_bits() as i64 + bump) as u64));
+        }
+        for u in cases {
+            let d = ulp_diff(ln_kern(u), u.ln());
+            assert!(d <= 2, "ln({u:e}): {d} ulp from libm");
+        }
+    }
+
+    #[test]
+    fn sin_cos_kern_is_within_2_ulp_of_libm_including_quadrant_boundaries() {
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let mut rng = crate::util::rng::Pcg64::seeded(0x51);
+        let mut cases: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        // v near j/4 puts x = 2πv near the quadrant boundaries jπ/2,
+        // where the reduction must refine or cos loses its zero
+        // crossing — the exhaustive-edge-case family.
+        for j in 0..=4u32 {
+            let base = j as f64 / 4.0;
+            let mut lo = base;
+            let mut hi = base;
+            for _ in 0..64 {
+                lo = next_toward(lo, -1.0);
+                hi = next_toward(hi, 2.0);
+                if lo >= 0.0 {
+                    cases.push(lo);
+                }
+                if hi < 1.0 {
+                    cases.push(hi);
+                }
+            }
+        }
+        cases.extend([0.0, f64::from_bits(0x3CA0000000000000), 1.0 - f64::EPSILON / 2.0]);
+        for v in cases {
+            let x = two_pi * v;
+            let (s, c) = sin_cos_kern(x);
+            let ds = ulp_diff(s, x.sin());
+            let dc = ulp_diff(c, x.cos());
+            assert!(ds <= 2 && dc <= 2, "sin_cos(2π·{v:e}): {ds}/{dc} ulp");
+            assert!((s * s + c * c - 1.0).abs() < 1e-15, "unit phasor at {v:e}");
+        }
+    }
+
+    /// `f64::next_after` is unstable; one-ulp step toward `dir`.
+    fn next_toward(x: f64, dir: f64) -> f64 {
+        if x == dir {
+            return x;
+        }
+        let bits = x.to_bits() as i64;
+        let up = (x < dir) == (x >= 0.0);
+        let stepped = if x == 0.0 {
+            if x < dir {
+                1u64
+            } else {
+                1u64 | (1 << 63)
+            }
+        } else if up {
+            (bits + 1) as u64
+        } else {
+            (bits - 1) as u64
+        };
+        f64::from_bits(stepped)
+    }
+
+    #[test]
+    fn extreme_uniform_radius_is_finite_and_accurate() {
+        // The smallest admissible uniform drives the largest Box–Muller
+        // radius the kernel ever sees: r = √(−2 ln 2⁻⁵³) ≈ 8.57.
+        let u = f64::from_bits(0x3CA0000000000000);
+        let r_kern = (-2.0 * ln_kern(u)).sqrt();
+        let r_libm = (-2.0 * u.ln()).sqrt();
+        assert!(r_kern.is_finite());
+        assert!(ulp_diff(r_kern, r_libm) <= 2);
+    }
+}

@@ -7,6 +7,9 @@
 //!
 //! * [`rng`] — PCG64 PRNG with normal/shuffle helpers (seeded,
 //!   reproducible across hosts; mirrors the python side where shared).
+//! * [`mathk`] — crate-owned `ln`/`sin_cos` kernels for the Box–Muller
+//!   hot path (platform-independent bits, vectorizable lane loops;
+//!   design pre-validated in `python/compile/kernels/boxmuller.py`).
 //! * [`fft`] — iterative radix-2 complex FFT (off-axis holography demod).
 //! * [`json`] — minimal JSON parser/writer (artifact manifest, metrics).
 //! * [`stats`] — Welford accumulators, percentiles, linear regression.
@@ -17,6 +20,7 @@ pub mod check;
 pub mod fft;
 pub mod json;
 pub mod logging;
+pub mod mathk;
 pub mod rng;
 pub mod stats;
 

@@ -235,12 +235,13 @@ fn streamed_shards_compose_with_the_sharded_service() {
     }
 }
 
-/// A streamed medium with the phase-2 cross-step tile cache attached
-/// (budget in MiB), same deliberately small tile as [`streamed`].
-fn streamed_cached(mb: usize) -> (litl::optics::stream::StreamedMedium, Medium) {
+/// A streamed medium with the cross-step tile cache attached (budget in
+/// MiB, `stripes` lock stripes — phase 3 rounds the count up to a power
+/// of two), same deliberately small tile as [`streamed`].
+fn streamed_cached(mb: usize, stripes: usize) -> (litl::optics::stream::StreamedMedium, Medium) {
     let sm = StreamedMedium::new(SEED, D_IN, MODES)
         .with_tile_cols(13)
-        .with_tile_cache_mb(mb);
+        .with_tile_cache_mb_striped(mb, stripes);
     let medium = Medium::Streamed(sm.clone());
     (sm, medium)
 }
@@ -270,7 +271,7 @@ fn cached_streamed_farm_is_bitwise_the_uncached_one_at_shards_1_2_4() {
                     Registry::new(),
                 )
                 .unwrap();
-                let (handle, medium) = streamed_cached(4);
+                let (handle, medium) = streamed_cached(4, 1);
                 let mut cached = topology_farm(
                     kind,
                     params,
@@ -337,7 +338,7 @@ fn cached_streamed_shards_compose_with_the_sharded_service() {
             out
         };
         let plain_replies = run(streamed());
-        let (handle, medium) = streamed_cached(4);
+        let (handle, medium) = streamed_cached(4, 1);
         let cached_replies = run(medium);
         assert_eq!(plain_replies, cached_replies, "{partition:?}");
         let st = handle.stats();
@@ -346,6 +347,122 @@ fn cached_streamed_shards_compose_with_the_sharded_service() {
             st.cache_resident_bytes <= st.cache_budget_bytes,
             "budget respected: {st:?}"
         );
+    }
+}
+
+#[test]
+fn striped_cache_is_bitwise_single_stripe_through_the_farm() {
+    // The phase-3 contract end to end: stripes partition locks and
+    // residency, never bits.  A 4-stripe cached farm equals the
+    // 1-stripe one at shards 1/2/4 under both partitions for digital,
+    // noiseless and noisy optics alike, and both stay within budget.
+    let cases = [
+        ("digital", DeviceKind::Digital, OpuParams::default()),
+        ("noiseless", DeviceKind::Optical, noiseless_params()),
+        ("noisy", DeviceKind::Optical, OpuParams::default()),
+    ];
+    for (label, kind, params) in cases {
+        for partition in [Partition::Modes, Partition::Batch] {
+            for shards in [1usize, 2, 4] {
+                let (h1, m1) = streamed_cached(4, 1);
+                let (h4, m4) = streamed_cached(4, 4);
+                assert_eq!(h1.tile_cache().unwrap().stripe_count(), 1);
+                assert_eq!(h4.tile_cache().unwrap().stripe_count(), 4);
+                let mut f1 = topology_farm(
+                    kind,
+                    params,
+                    &m1,
+                    NOISE_SEED,
+                    shards,
+                    partition,
+                    Registry::new(),
+                )
+                .unwrap();
+                let mut f4 = topology_farm(
+                    kind,
+                    params,
+                    &m4,
+                    NOISE_SEED,
+                    shards,
+                    partition,
+                    Registry::new(),
+                )
+                .unwrap();
+                for step in 0..3 {
+                    let e = ternary_batch(5, D_IN, 1000 + 10 * shards as u64 + step);
+                    assert_eq!(
+                        f1.project(&e).unwrap(),
+                        f4.project(&e).unwrap(),
+                        "{label} {partition:?} shards={shards} step={step}"
+                    );
+                }
+                for (tag, h) in [("1-stripe", &h1), ("4-stripe", &h4)] {
+                    let st = h.stats();
+                    assert!(
+                        st.cache_hits > 0,
+                        "{tag} steps 2+ must hit ({label} {partition:?} shards={shards}): {st:?}"
+                    );
+                    assert!(
+                        st.cache_resident_bytes <= st.cache_budget_bytes,
+                        "{tag} budget respected: {st:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn striped_cache_composes_with_the_sharded_service() {
+    // Frame-slot scheduling path: identical submission order into a
+    // 1-stripe and an 8-stripe cached service gives bitwise-identical
+    // replies — the stripe map only decides which lock a tile lives
+    // behind.
+    for partition in [Partition::Modes, Partition::Batch] {
+        let run = |medium: Medium| -> Vec<(Tensor, Tensor)> {
+            let devices = topology_devices(
+                DeviceKind::Optical,
+                noiseless_params(),
+                &medium,
+                NOISE_SEED,
+                3,
+                partition,
+            )
+            .unwrap();
+            let svc = ShardedProjectionService::start(
+                devices,
+                D_IN,
+                ShardServiceConfig {
+                    max_batch: 16,
+                    queue_depth: 32,
+                    lane_depth: 4,
+                    partition,
+                    frame_rate_hz: 1500.0,
+                },
+                Registry::new(),
+            )
+            .unwrap();
+            let client = svc.client();
+            let out: Vec<(Tensor, Tensor)> = (0..5)
+                .map(|i| client.project(ternary_batch(3, D_IN, 1100 + i)).unwrap())
+                .collect();
+            svc.shutdown();
+            out
+        };
+        let (h1, m1) = streamed_cached(4, 1);
+        let (h8, m8) = streamed_cached(4, 8);
+        assert_eq!(h8.tile_cache().unwrap().stripe_count(), 8);
+        let one = run(m1);
+        let eight = run(m8);
+        assert_eq!(one, eight, "{partition:?}");
+        for h in [&h1, &h8] {
+            let st = h.stats();
+            assert!(st.cache_hits > 0, "{partition:?}: repeat frames must hit: {st:?}");
+            assert!(
+                st.cache_resident_bytes <= st.cache_budget_bytes,
+                "budget respected: {st:?}"
+            );
+        }
     }
 }
 

@@ -2,9 +2,9 @@
 # Produce the committed bench records: run the e6 streaming and e4
 # scaling benches in release mode and collect every JSON record line
 # they print (compact objects whose first key is "bench":
-# e6_genkernel / e6_streaming / e6_tile_cache, e4_shard_sweep /
-# e4_service_sweep / e4_hetero_sweep) into BENCH_e6.json /
-# BENCH_e4.json at the repo root as JSON arrays.
+# e6_genkernel / e6_streaming / e6_tile_cache / e6_cache_contention,
+# e4_shard_sweep / e4_service_sweep / e4_hetero_sweep) into
+# BENCH_e6.json / BENCH_e4.json at the repo root as JSON arrays.
 #
 # Usage: tools/bench_records.sh            (from anywhere in the repo)
 #
