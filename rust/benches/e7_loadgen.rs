@@ -1,0 +1,307 @@
+//! E7 — serving control plane under load: many concurrent clients, a
+//! mid-run shard kill, and the failover path's no-hang guarantee.
+//!
+//! Two passes over the same workload through a sharded projection
+//! service of per-row-throttled digital replicas (batch partition,
+//! failover + adaptive weights on):
+//!
+//! 1. **healthy** — every shard serves; measures the fleet's baseline
+//!    rows/s.
+//! 2. **degraded** — a kill switch turns one shard into a hard-error
+//!    device ~30% into the run; the error streak trips it, its lane
+//!    drains onto the survivors, and the run keeps going.
+//!
+//! The record reports the degraded/healthy throughput fraction next to
+//! the ideal `(shards-1)/shards`, the number of failed frames (the
+//! kill window — errors are allowed, hangs are not) and the hang count,
+//! which must be zero.
+//!
+//! Env knobs:
+//! * `E7_CLIENTS`, `E7_SUBMITS`, `E7_ROWS`, `E7_SHARDS` — workload
+//!   shape (defaults 200 / 6 / 8 / 3).
+//! * `E7_DEGRADED_MIN_FRAC=0.35` — hard floor on the degraded
+//!   throughput fraction (the CI loadgen-smoke gate).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use litl::config::Partition;
+use litl::coordinator::projector::{DigitalProjector, Projector};
+use litl::coordinator::service::{
+    AdaptConfig, FailoverConfig, ProjectionClient, ShardServiceConfig, ShardedProjectionService,
+};
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::tensor::Tensor;
+use litl::util::json::Json;
+use litl::util::rng::Pcg64;
+
+const D_IN: usize = 32;
+const MODES: usize = 64;
+/// Simulated device cost: makes throughput device-bound, so losing one
+/// of `shards` replicas costs ~1/shards of it.
+const US_PER_ROW: u64 = 100;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Throttled digital replica with a kill switch: once armed, every
+/// call errors instantly — the induced fault the failover plane must
+/// absorb.
+struct LoadDevice {
+    inner: DigitalProjector,
+    killed: Arc<AtomicBool>,
+}
+
+impl Projector for LoadDevice {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        if self.killed.load(Ordering::Relaxed) {
+            anyhow::bail!("shard killed by loadgen");
+        }
+        std::thread::sleep(Duration::from_micros(US_PER_ROW * frames.rows() as u64));
+        self.inner.project(frames)
+    }
+
+    fn modes(&self) -> usize {
+        self.inner.modes()
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.inner.sim_seconds()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.inner.energy_joules()
+    }
+
+    fn kind(&self) -> &'static str {
+        "loadgen"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        true
+    }
+}
+
+fn start_fleet(
+    medium: &TransmissionMatrix,
+    shards: usize,
+    metrics: Registry,
+) -> (ShardedProjectionService, Vec<Arc<AtomicBool>>) {
+    let switches: Vec<Arc<AtomicBool>> =
+        (0..shards).map(|_| Arc::new(AtomicBool::new(false))).collect();
+    let devices: Vec<Box<dyn Projector + Send>> = switches
+        .iter()
+        .map(|k| {
+            Box::new(LoadDevice {
+                inner: DigitalProjector::new(medium.clone()),
+                killed: k.clone(),
+            }) as Box<dyn Projector + Send>
+        })
+        .collect();
+    let svc = ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 32,
+            queue_depth: 256,
+            lane_depth: 8,
+            partition: Partition::Batch,
+            adapt: AdaptConfig {
+                enabled: true,
+                ..AdaptConfig::default()
+            },
+            failover: FailoverConfig {
+                enabled: true,
+                trip_errors: 2,
+                stall_ms: 5_000,
+                probation_ms: 600_000,
+            },
+            ..Default::default()
+        },
+        metrics,
+    )
+    .unwrap();
+    (svc, switches)
+}
+
+struct LoadStats {
+    ok_rows: u64,
+    failed_frames: u64,
+    hung_clients: u64,
+    secs: f64,
+}
+
+/// Drive `clients` threads, each submitting `submissions` requests of
+/// `rows` ternary frames and waiting (bounded) for every reply.
+/// Optionally arms a kill switch after a delay.  Errors are tallied;
+/// a reply that takes > 120 s counts as a hang.
+fn drive(
+    client: &ProjectionClient,
+    clients: usize,
+    submissions: usize,
+    rows: usize,
+    kill: Option<(Arc<AtomicBool>, Duration)>,
+) -> LoadStats {
+    let ok_rows = Arc::new(AtomicU64::new(0));
+    let failed = Arc::new(AtomicU64::new(0));
+    let hung = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let killer = kill.map(|(switch, delay)| {
+        std::thread::spawn(move || {
+            std::thread::sleep(delay);
+            switch.store(true, Ordering::Relaxed);
+        })
+    });
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let client = client.clone();
+            let ok_rows = ok_rows.clone();
+            let failed = failed.clone();
+            let hung = hung.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::seeded(7100 + c as u64);
+                for _ in 0..submissions {
+                    let mut e = Tensor::zeros(&[rows, D_IN]);
+                    for v in e.data_mut() {
+                        *v = (rng.next_below(3) as i64 - 1) as f32;
+                    }
+                    let reply = match client.submit(e) {
+                        Ok(r) => r,
+                        Err(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                    };
+                    match reply.wait_timeout(Duration::from_secs(120)) {
+                        Ok(Some(Ok(_))) => {
+                            ok_rows.fetch_add(rows as u64, Ordering::Relaxed);
+                        }
+                        Ok(_) => {
+                            failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            hung.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    if let Some(k) = killer {
+        let _ = k.join();
+    }
+    LoadStats {
+        ok_rows: ok_rows.load(Ordering::Relaxed),
+        failed_frames: failed.load(Ordering::Relaxed),
+        hung_clients: hung.load(Ordering::Relaxed),
+        secs,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    litl::util::logging::init();
+    let clients = env_usize("E7_CLIENTS", 200);
+    let submissions = env_usize("E7_SUBMITS", 6);
+    let rows = env_usize("E7_ROWS", 8);
+    let shards = env_usize("E7_SHARDS", 3);
+    anyhow::ensure!(shards >= 2, "E7_SHARDS must be >= 2 (one gets killed)");
+    let medium = TransmissionMatrix::sample(77, D_IN, MODES);
+
+    println!(
+        "== E7: serving control plane loadgen ({clients} clients x {submissions} x \
+         {rows} rows, {shards} shards) =="
+    );
+
+    // Pass 1: healthy fleet baseline.
+    let (svc, _switches) = start_fleet(&medium, shards, Registry::new());
+    let healthy = drive(&svc.client(), clients, submissions, rows, None);
+    svc.shutdown();
+    let healthy_rate = healthy.ok_rows as f64 / healthy.secs.max(1e-9);
+    println!(
+        "healthy : {:.0} rows/s ({} rows in {:.2}s, {} failed, {} hung)",
+        healthy_rate, healthy.ok_rows, healthy.secs, healthy.failed_frames, healthy.hung_clients
+    );
+    anyhow::ensure!(
+        healthy.failed_frames == 0 && healthy.hung_clients == 0,
+        "healthy pass must be clean: {} failed, {} hung",
+        healthy.failed_frames,
+        healthy.hung_clients
+    );
+
+    // Pass 2: same workload, one shard killed ~30% in.
+    let reg = Registry::new();
+    let (svc, switches) = start_fleet(&medium, shards, reg.clone());
+    let kill_after = Duration::from_secs_f64((healthy.secs * 0.3).max(0.01));
+    let kill = Some((switches[shards - 1].clone(), kill_after));
+    let degraded = drive(&svc.client(), clients, submissions, rows, kill);
+    svc.shutdown();
+    let snap = reg.snapshot();
+    let degraded_rate = degraded.ok_rows as f64 / degraded.secs.max(1e-9);
+    let frac = degraded_rate / healthy_rate.max(1e-9);
+    let ideal = (shards - 1) as f64 / shards as f64;
+    println!(
+        "degraded: {:.0} rows/s ({} rows in {:.2}s, {} failed, {} hung) — \
+         {:.2} of healthy (ideal {:.2}), {} failovers",
+        degraded_rate,
+        degraded.ok_rows,
+        degraded.secs,
+        degraded.failed_frames,
+        degraded.hung_clients,
+        frac,
+        ideal,
+        snap.get("service_failovers").copied().unwrap_or(0.0)
+    );
+
+    let mut rec = BTreeMap::new();
+    rec.insert("bench".to_string(), Json::Str("e7_loadgen".to_string()));
+    rec.insert("clients".to_string(), Json::Num(clients as f64));
+    rec.insert("submissions".to_string(), Json::Num(submissions as f64));
+    rec.insert("rows".to_string(), Json::Num(rows as f64));
+    rec.insert("shards".to_string(), Json::Num(shards as f64));
+    rec.insert("healthy_rows_per_s".to_string(), Json::Num(healthy_rate));
+    rec.insert("degraded_rows_per_s".to_string(), Json::Num(degraded_rate));
+    rec.insert("degraded_frac".to_string(), Json::Num(frac));
+    rec.insert("ideal_frac".to_string(), Json::Num(ideal));
+    rec.insert(
+        "failed_frames".to_string(),
+        Json::Num(degraded.failed_frames as f64),
+    );
+    rec.insert(
+        "hung_clients".to_string(),
+        Json::Num(degraded.hung_clients as f64),
+    );
+    rec.insert(
+        "failovers".to_string(),
+        Json::Num(snap.get("service_failovers").copied().unwrap_or(0.0)),
+    );
+    println!("{}", Json::Obj(rec).to_string_compact());
+
+    // The no-hang guarantee is unconditional; the throughput floor is
+    // the CI gate (opt-in so local noise never blocks development).
+    anyhow::ensure!(
+        degraded.hung_clients == 0,
+        "{} clients hung waiting for replies",
+        degraded.hung_clients
+    );
+    if let Ok(raw) = std::env::var("E7_DEGRADED_MIN_FRAC") {
+        let min: f64 = raw
+            .parse()
+            .map_err(|e| anyhow::anyhow!("E7_DEGRADED_MIN_FRAC '{raw}': {e}"))?;
+        anyhow::ensure!(
+            frac >= min,
+            "degraded throughput {frac:.2} of healthy, below the {min:.2} floor"
+        );
+    }
+    Ok(())
+}

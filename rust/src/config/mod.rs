@@ -11,6 +11,7 @@ pub mod toml;
 use anyhow::{bail, Context, Result};
 
 use self::toml::TomlValue;
+use crate::coordinator::service::{AdaptConfig, AdmissionConfig, FailoverConfig};
 use crate::coordinator::topology::{DeviceKind, PoolPolicy, Topology};
 
 /// Which feedback path trains the hidden layers.
@@ -192,6 +193,43 @@ pub struct TrainConfig {
     /// Pool policy stamped onto the resolved topology (`[topology]
     /// pool = "shared"` / `--set topology.pool=shared`).
     pub topology_pool: PoolPolicy,
+    /// Adaptive shard weights (`--adapt-weights on`, `[service]
+    /// adapt_weights = true`): the frame-slot scheduler re-plans the
+    /// declared topology weights from windowed per-shard service-rate
+    /// EWMAs.  Off (the default) keeps the slot schedule a pure
+    /// function of the config — bitwise deterministic across runs.
+    pub adapt_weights: bool,
+    /// Re-plan cadence for adaptive weights, in scheduled frame
+    /// sequences (>= 1).
+    pub adapt_replan_every: u64,
+    /// EWMA smoothing factor in (0, 1] for the service-rate and
+    /// occupancy windows (applies even with adaptation off: the
+    /// `_util` gauges are windowed, never lifetime-cumulative).
+    pub adapt_alpha: f64,
+    /// Minimum relative share change that commits a new plan (>= 0).
+    pub adapt_hysteresis: f64,
+    /// Shard failover (`--failover on`, `[service] failover = true`):
+    /// erroring or stalled shards trip out of the routable set, their
+    /// queued lanes drain onto survivors, and they re-admit through
+    /// probation after an in-place device rebuild.  Changes *which*
+    /// shard serves a frame under faults, never the frame's value.
+    pub failover: bool,
+    /// Consecutive device errors that trip a healthy shard (>= 1).
+    pub failover_trip_errors: u32,
+    /// A device call running longer than this is a stall (ms, >= 1).
+    pub failover_stall_ms: u64,
+    /// Tripped → probation re-admission delay (ms).
+    pub failover_probation_ms: u64,
+    /// Per-client admission rate in frames/s (`--admit-rate-fps N`).
+    /// `0` (the default) disables admission control; positive values
+    /// token-bucket each client with `admit_burst` frames of credit
+    /// and at most `admit_max_wait_ms` of backpressure before the
+    /// submission errors instead of queueing.
+    pub admit_rate_fps: f64,
+    /// Token-bucket burst credit in frames (>= 1).
+    pub admit_burst: f64,
+    /// Longest a submission may wait for admission tokens (ms).
+    pub admit_max_wait_ms: u64,
 }
 
 impl Default for TrainConfig {
@@ -219,6 +257,17 @@ impl Default for TrainConfig {
             tile_cache_stripes: 0,
             topology: None,
             topology_pool: PoolPolicy::Owned,
+            adapt_weights: false,
+            adapt_replan_every: 16,
+            adapt_alpha: 0.2,
+            adapt_hysteresis: 0.05,
+            failover: false,
+            failover_trip_errors: 3,
+            failover_stall_ms: 2000,
+            failover_probation_ms: 250,
+            admit_rate_fps: 0.0,
+            admit_burst: 256.0,
+            admit_max_wait_ms: 50,
         }
     }
 }
@@ -283,6 +332,73 @@ impl TrainConfig {
             }
             "topology.pool" => {
                 self.topology_pool = PoolPolicy::parse(value.want_str()?)?
+            }
+            "adapt_weights" | "service.adapt_weights" => {
+                self.adapt_weights = value.want_bool()?
+            }
+            "adapt_replan_every" | "service.adapt_replan_every" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("adapt_replan_every must be >= 1, got {n}");
+                }
+                self.adapt_replan_every = n as u64;
+            }
+            "adapt_alpha" | "service.adapt_alpha" => {
+                let a = value.want_float()?;
+                if !a.is_finite() || a <= 0.0 || a > 1.0 {
+                    bail!("adapt_alpha must be in (0, 1], got {a}");
+                }
+                self.adapt_alpha = a;
+            }
+            "adapt_hysteresis" | "service.adapt_hysteresis" => {
+                let h = value.want_float()?;
+                if !h.is_finite() || h < 0.0 {
+                    bail!("adapt_hysteresis must be finite and >= 0, got {h}");
+                }
+                self.adapt_hysteresis = h;
+            }
+            "failover" | "service.failover" => self.failover = value.want_bool()?,
+            "failover_trip_errors" | "service.failover_trip_errors" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("failover_trip_errors must be >= 1, got {n}");
+                }
+                self.failover_trip_errors = n as u32;
+            }
+            "failover_stall_ms" | "service.failover_stall_ms" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("failover_stall_ms must be >= 1, got {n}");
+                }
+                self.failover_stall_ms = n as u64;
+            }
+            "failover_probation_ms" | "service.failover_probation_ms" => {
+                let n = value.want_int()?;
+                if n < 0 {
+                    bail!("failover_probation_ms must be >= 0, got {n}");
+                }
+                self.failover_probation_ms = n as u64;
+            }
+            "admit_rate_fps" | "service.admit_rate_fps" => {
+                let r = value.want_float()?;
+                if !r.is_finite() || r < 0.0 {
+                    bail!("admit_rate_fps must be finite and >= 0 (0 disables), got {r}");
+                }
+                self.admit_rate_fps = r;
+            }
+            "admit_burst" | "service.admit_burst" => {
+                let b = value.want_float()?;
+                if !b.is_finite() || b < 1.0 {
+                    bail!("admit_burst must be >= 1 frame, got {b}");
+                }
+                self.admit_burst = b;
+            }
+            "admit_max_wait_ms" | "service.admit_max_wait_ms" => {
+                let n = value.want_int()?;
+                if n < 0 {
+                    bail!("admit_max_wait_ms must be >= 0, got {n}");
+                }
+                self.admit_max_wait_ms = n as u64;
             }
             other => bail!("unknown config key '{other}'"),
         }
@@ -391,6 +507,37 @@ impl TrainConfig {
         base.with_partition(self.partition)
             .with_backing(self.medium)
             .with_pool(self.topology_pool)
+    }
+
+    /// Map the control-plane knobs onto the sharded service's config
+    /// structs.  `admit_rate_fps == 0` leaves admission disabled; the
+    /// disabled struct keeps the service-side default rate so it stays
+    /// valid if a caller flips `enabled` later.
+    pub fn service_control(&self) -> (AdaptConfig, FailoverConfig, AdmissionConfig) {
+        let adapt = AdaptConfig {
+            enabled: self.adapt_weights,
+            replan_every: self.adapt_replan_every,
+            alpha: self.adapt_alpha,
+            hysteresis: self.adapt_hysteresis,
+        };
+        let failover = FailoverConfig {
+            enabled: self.failover,
+            trip_errors: self.failover_trip_errors,
+            stall_ms: self.failover_stall_ms,
+            probation_ms: self.failover_probation_ms,
+        };
+        let enabled = self.admit_rate_fps > 0.0;
+        let admission = AdmissionConfig {
+            enabled,
+            rate_fps: if enabled {
+                self.admit_rate_fps
+            } else {
+                AdmissionConfig::default().rate_fps
+            },
+            burst: self.admit_burst,
+            max_wait_ms: self.admit_max_wait_ms,
+        };
+        (adapt, failover, admission)
     }
 
     /// Load from a TOML file on top of `self`.
@@ -544,6 +691,93 @@ mod tests {
         assert_eq!(c2.tile_cache_stripes, 4);
         assert_eq!(c2.tile_cache_mb, 32);
         c2.validate_projection().unwrap();
+    }
+
+    #[test]
+    fn control_plane_knobs_default_off_and_mirror_service_defaults() {
+        let c = TrainConfig::default();
+        assert!(!c.adapt_weights);
+        assert!(!c.failover);
+        assert_eq!(c.admit_rate_fps, 0.0, "admission off by default");
+        let (a, f, ad) = c.service_control();
+        assert!(!a.enabled && !f.enabled && !ad.enabled);
+        // An untouched config maps onto exactly the service-side
+        // Defaults, so `ShardServiceConfig::default()` and the config
+        // path describe the same (deterministic) service.
+        let (da, df, dad) = (
+            AdaptConfig::default(),
+            FailoverConfig::default(),
+            AdmissionConfig::default(),
+        );
+        assert_eq!(a.replan_every, da.replan_every);
+        assert_eq!(a.alpha, da.alpha);
+        assert_eq!(a.hysteresis, da.hysteresis);
+        assert_eq!(f.trip_errors, df.trip_errors);
+        assert_eq!(f.stall_ms, df.stall_ms);
+        assert_eq!(f.probation_ms, df.probation_ms);
+        assert_eq!(ad.rate_fps, dad.rate_fps);
+        assert_eq!(ad.burst, dad.burst);
+        assert_eq!(ad.max_wait_ms, dad.max_wait_ms);
+    }
+
+    #[test]
+    fn control_plane_knobs_parse_validate_and_map() {
+        let mut c = TrainConfig::default();
+        c.set_kv("adapt_weights=true").unwrap();
+        c.set_kv("adapt_replan_every=8").unwrap();
+        c.set_kv("adapt_alpha=0.5").unwrap();
+        c.set_kv("adapt_hysteresis=0.1").unwrap();
+        c.set_kv("failover=true").unwrap();
+        c.set_kv("failover_trip_errors=2").unwrap();
+        c.set_kv("failover_stall_ms=500").unwrap();
+        c.set_kv("failover_probation_ms=100").unwrap();
+        c.set_kv("admit_rate_fps=2000").unwrap();
+        c.set_kv("admit_burst=64").unwrap();
+        c.set_kv("admit_max_wait_ms=20").unwrap();
+        let (a, f, ad) = c.service_control();
+        assert!(a.enabled && f.enabled && ad.enabled);
+        assert_eq!(a.replan_every, 8);
+        assert_eq!(a.alpha, 0.5);
+        assert_eq!(a.hysteresis, 0.1);
+        assert_eq!(f.trip_errors, 2);
+        assert_eq!(f.stall_ms, 500);
+        assert_eq!(f.probation_ms, 100);
+        assert_eq!(ad.rate_fps, 2000.0);
+        assert_eq!(ad.burst, 64.0);
+        assert_eq!(ad.max_wait_ms, 20);
+        // Out-of-range values are loud, not clamped.
+        assert!(c.set_kv("adapt_replan_every=0").is_err());
+        assert!(c.set_kv("adapt_alpha=0").is_err());
+        assert!(c.set_kv("adapt_alpha=1.5").is_err());
+        assert!(c.set_kv("adapt_hysteresis=-0.1").is_err());
+        assert!(c.set_kv("failover_trip_errors=0").is_err());
+        assert!(c.set_kv("failover_stall_ms=0").is_err());
+        assert!(c.set_kv("failover_probation_ms=-1").is_err());
+        assert!(c.set_kv("admit_rate_fps=-1").is_err());
+        assert!(c.set_kv("admit_burst=0.5").is_err());
+        assert!(c.set_kv("admit_max_wait_ms=-5").is_err());
+    }
+
+    #[test]
+    fn control_plane_service_section_round_trips() {
+        // The `[service]` section spelling maps to the same knobs as
+        // the bare `--set` keys.
+        let path = std::env::temp_dir().join("litl_cfg_service_section_test.toml");
+        std::fs::write(
+            &path,
+            "[service]\nadapt_weights = true\nfailover = true\n\
+             failover_trip_errors = 5\nadmit_rate_fps = 800.0\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert!(c.adapt_weights);
+        assert!(c.failover);
+        assert_eq!(c.failover_trip_errors, 5);
+        assert_eq!(c.admit_rate_fps, 800.0);
+        let (_, _, ad) = c.service_control();
+        assert!(ad.enabled);
+        assert_eq!(ad.rate_fps, 800.0);
     }
 
     #[test]

@@ -56,6 +56,15 @@
 //! * a panicking shard is contained: the batch fails with an error, the
 //!   panic is counted on the pool and surfaced through `metrics/`.
 //!
+//! Panic containment here is per-*call*: the farm fails the batch and
+//! stays usable, but a shard that keeps failing keeps getting work.
+//! The serving-path escalation of the same policy — trip a repeatedly
+//! failing or stalled shard, drain its lane onto survivors, re-admit it
+//! on probation — lives in the service control plane
+//! ([`ShardedProjectionService`](super::service::ShardedProjectionService),
+//! `FailoverConfig`), which `Topology::build_service` wires up with a
+//! device rebuild factory over this same build path.
+//!
 //! [`exec::ThreadPool`]: crate::exec::ThreadPool
 
 use std::sync::Arc;

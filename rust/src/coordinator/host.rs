@@ -10,7 +10,7 @@
 //!    OPU, every layer's update is independent.  [`AsyncDfaTrainer`]
 //!    actually runs the per-layer updates on a worker pool.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::Result;
 
@@ -296,7 +296,7 @@ impl AsyncDfaTrainer {
     pub fn snapshot(&self) -> HostMlp {
         let mut params = Vec::new();
         for l in &self.layer_state {
-            let l = l.lock().unwrap();
+            let l = l.lock().unwrap_or_else(PoisonError::into_inner);
             params.push(l.w.clone());
             params.push(l.b.clone());
         }
@@ -341,7 +341,7 @@ impl AsyncDfaTrainer {
                 crate::tensor::scale_inplace(&mut g, inv_b);
                 let dw = matmul_tn(&hprev, &g);
                 let db = Tensor::from_vec(&[g.cols()], col_sum(&g));
-                let mut layer = state.lock().unwrap();
+                let mut layer = state.lock().unwrap_or_else(PoisonError::into_inner);
                 let mut wb = vec![layer.w.clone(), layer.b.clone()];
                 layer.opt.step(&mut wb, &[dw, db]);
                 layer.b = wb.pop().unwrap();

@@ -56,8 +56,8 @@ pub mod trainer;
 pub use farm::ProjectorFarm;
 pub use projector::{DigitalProjector, HloOpticalProjector, NativeOpticalProjector, Projector};
 pub use service::{
-    ClientProjector, ProjectionClient, ProjectionService, ServiceConfig,
-    ShardServiceConfig, ShardedProjectionService,
+    AdaptConfig, AdmissionConfig, ClientProjector, FailoverConfig, ProjectionClient,
+    ProjectionService, ServiceConfig, ShardRebuild, ShardServiceConfig, ShardedProjectionService,
 };
 pub use topology::{DeviceKind, PoolPolicy, ShardSpec, Topology};
 pub use trainer::{EvalResult, TrainReport, Trainer};

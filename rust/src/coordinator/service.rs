@@ -32,6 +32,19 @@
 //! count under either partition; noiseless optics agree to fp/ADC
 //! tolerance.
 //!
+//! **Control plane** (every knob off by default — the defaults *are*
+//! the pinned deterministic schedule): [`ShardServiceConfig::adapt`]
+//! re-plans the batch-partition row weights live from worker-published
+//! service-rate EWMAs (`--adapt-weights`);
+//! [`ShardServiceConfig::failover`] trips erroring/stalled shards,
+//! drains their lanes onto survivors and re-admits them on probation
+//! (`--failover`); [`ShardServiceConfig::admission`] applies per-client
+//! token-bucket fairness with a bounded wait (`--admit-rate-fps`).
+//! Request latency is observed end-to-end in the `service_latency`
+//! histogram (`_p50`/`_p95`/`_p99` via `Registry::snapshot`).  Turning
+//! any of these on trades bitwise schedule determinism for
+//! liveness/fairness — see the per-struct docs for exactly what moves.
+//!
 //! Invariants (property-tested below and in `rust/tests/`):
 //! * every submitted frame is projected exactly once (no loss, no dup),
 //!   including frames still queued when `shutdown` is called — shutdown
@@ -47,9 +60,10 @@
 //!   every shard is charged every frame; batch: charges sum to the
 //!   submitted rows).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -71,6 +85,9 @@ pub const SHARD_ERRORS: &str = "service_shard_errors";
 /// One projection request: a few frames from one client.
 struct Request {
     frames: Tensor,
+    /// Submission wall time — the `service_latency` histogram observes
+    /// `submitted.elapsed()` when the reply is routed.
+    submitted: Instant,
     reply: oneshot::Sender<Result<(Tensor, Tensor), String>>,
 }
 
@@ -92,11 +109,90 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Per-client token bucket: `rate_fps` frames (rows) per second with
+/// `burst` frames of credit.  Pure — callers supply `now_s` — so the
+/// refill math is unit-testable without wall clocks.
+struct TokenBucket {
+    rate_fps: f64,
+    burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+impl TokenBucket {
+    fn new(rate_fps: f64, burst: f64) -> TokenBucket {
+        TokenBucket {
+            rate_fps,
+            burst,
+            tokens: burst,
+            last_s: 0.0,
+        }
+    }
+
+    /// Try to admit `n` frames at `now_s`; `Err(wait_s)` is the time
+    /// until enough tokens accrue.  A request wider than the whole
+    /// burst is admitted whenever the bucket is full — it can never
+    /// save more than `burst` tokens, and holding it forever would turn
+    /// a fairness knob into a correctness cliff.
+    fn try_take(&mut self, n: f64, now_s: f64) -> Result<(), f64> {
+        let dt = (now_s - self.last_s).max(0.0);
+        self.tokens = (self.tokens + dt * self.rate_fps).min(self.burst);
+        self.last_s = now_s;
+        let need = n.min(self.burst);
+        if self.tokens >= need {
+            self.tokens -= need;
+            Ok(())
+        } else {
+            Err((need - self.tokens) / self.rate_fps.max(1e-9))
+        }
+    }
+}
+
+/// Admission state attached to one [`ProjectionClient`] handle.  Clones
+/// of a handle share its bucket (they are the same client); call
+/// [`ShardedProjectionService::client`] again for an independent budget.
+#[derive(Clone)]
+struct ClientAdmission {
+    bucket: Arc<Mutex<TokenBucket>>,
+    epoch: Instant,
+    max_wait: Duration,
+    throttled: Counter,
+}
+
+impl ClientAdmission {
+    /// Block (bounded backpressure) until `rows` frames are admitted;
+    /// error once the projected wait exceeds `max_wait`.
+    fn admit(&self, rows: usize) -> Result<()> {
+        let deadline = Instant::now() + self.max_wait;
+        loop {
+            let now_s = self.epoch.elapsed().as_secs_f64();
+            let taken = {
+                let mut b = self.bucket.lock().unwrap_or_else(PoisonError::into_inner);
+                b.try_take(rows as f64, now_s)
+            };
+            let wait_s = match taken {
+                Ok(()) => return Ok(()),
+                Err(wait_s) => wait_s,
+            };
+            let now = Instant::now();
+            if now + Duration::from_secs_f64(wait_s) > deadline {
+                self.throttled.inc();
+                anyhow::bail!(
+                    "admission: request of {rows} frames exceeds this client's rate budget \
+                     (service_admission_throttled); retry later"
+                );
+            }
+            std::thread::sleep(Duration::from_secs_f64(wait_s).min(deadline - now));
+        }
+    }
+}
+
 /// Handle for submitting projection requests.
 #[derive(Clone)]
 pub struct ProjectionClient {
     queue: BoundedQueue<Request>,
     d_in: usize,
+    admission: Option<ClientAdmission>,
 }
 
 impl ProjectionClient {
@@ -105,6 +201,8 @@ impl ProjectionClient {
     /// request *larger* than `max_batch` is never split — it is
     /// scheduled as its own oversized frame sequence (pinned by
     /// `prop_service_preserves_payloads` in `rust/tests/props.rs`).
+    /// With admission control on, this call may block up to the
+    /// configured wait for this client's token budget and then error.
     pub fn submit(
         &self,
         frames: Tensor,
@@ -116,9 +214,16 @@ impl ProjectionClient {
             frames.shape()
         );
         anyhow::ensure!(frames.rows() > 0, "empty projection request");
+        if let Some(admission) = &self.admission {
+            admission.admit(frames.rows())?;
+        }
         let (tx, rx) = oneshot::channel();
         self.queue
-            .push(Request { frames, reply: tx })
+            .push(Request {
+                frames,
+                submitted: Instant::now(),
+                reply: tx,
+            })
             .map_err(|_| anyhow::anyhow!("projection service is shut down"))?;
         Ok(rx)
     }
@@ -227,13 +332,14 @@ impl ProjectionService {
         let frames_ctr = metrics.counter("service_frames");
         let batches_ctr = metrics.counter("service_batches");
         let occupancy = metrics.histogram("service_batch_occupancy");
+        let latency = metrics.histogram("service_latency");
         let dispatcher = std::thread::Builder::new()
             .name("litl-projection-service".into())
             .spawn(move || {
                 pack_loop(&q2, cfg.max_batch, |batch, total| {
                     frames_ctr.add(total as u64);
                     batches_ctr.inc();
-                    Self::run_batch(&mut *device, batch, &occupancy);
+                    Self::run_batch(&mut *device, batch, &occupancy, &latency);
                     true
                 });
             })
@@ -248,7 +354,8 @@ impl ProjectionService {
     fn run_batch(
         device: &mut dyn Projector,
         batch: Vec<Request>,
-        occupancy: &crate::metrics::Histogram,
+        occupancy: &Histogram,
+        latency: &Histogram,
     ) {
         let rows: usize = batch.iter().map(|r| r.frames.rows()).sum();
         occupancy.observe(rows as f64);
@@ -257,22 +364,22 @@ impl ProjectionService {
         match device.project(&packed) {
             Ok((p1, p2)) => {
                 let modes = device.modes();
-                send_replies(batch, &p1, &p2, modes);
+                send_replies(batch, &p1, &p2, modes, latency);
             }
             Err(e) => {
                 let msg = format!("{e:#}");
-                for req in batch {
-                    req.reply.send(Err(msg.clone()));
-                }
+                fail_batch(batch, &msg, latency);
             }
         }
     }
 
-    /// Create a client handle.
+    /// Create a client handle (the classic path has no admission
+    /// control — that is a sharded-service feature).
     pub fn client(&self) -> ProjectionClient {
         ProjectionClient {
             queue: self.queue.clone(),
             d_in: self.d_in,
+            admission: None,
         }
     }
 
@@ -350,7 +457,7 @@ fn pack_requests(batch: &[Request], total: usize, d_in: usize) -> Tensor {
 
 /// Slice a packed frame sequence's projections back out to the
 /// submitting clients, preserving request row order.
-fn send_replies(batch: Vec<Request>, p1: &Tensor, p2: &Tensor, modes: usize) {
+fn send_replies(batch: Vec<Request>, p1: &Tensor, p2: &Tensor, modes: usize, latency: &Histogram) {
     let mut row = 0usize;
     for req in batch {
         let b = req.frames.rows();
@@ -360,8 +467,114 @@ fn send_replies(batch: Vec<Request>, p1: &Tensor, p2: &Tensor, modes: usize) {
                 src.data()[row * modes..(row + b) * modes].to_vec(),
             )
         };
+        latency.observe(req.submitted.elapsed().as_secs_f64());
         req.reply.send(Ok((take(p1), take(p2))));
         row += b;
+    }
+}
+
+/// Fail every request in a batch with the same error: backpressure,
+/// device failures and failover must all degrade to *errors* the client
+/// observes, never hangs.
+fn fail_batch(batch: Vec<Request>, msg: &str, latency: &Histogram) {
+    for req in batch {
+        latency.observe(req.submitted.elapsed().as_secs_f64());
+        req.reply.send(Err(msg.to_string()));
+    }
+}
+
+/// Adaptive-weight re-planning knobs (off by default — the static
+/// declared plan is part of the determinism contract).  When on, the
+/// scheduler re-derives the effective batch-partition row weights every
+/// `replan_every` scheduled frame sequences from the per-shard
+/// service-rate EWMAs the workers publish
+/// (`service_shard{i}_rate_ewma`), ignoring proposals whose normalized
+/// share moves no shard by more than the `hysteresis` band.  Shards
+/// without a rate signal yet keep their declared relative share.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptConfig {
+    pub enabled: bool,
+    /// Re-plan cadence, in scheduled frame sequences.
+    pub replan_every: u64,
+    /// EWMA smoothing factor in (0, 1] (also smooths the `_util`
+    /// occupancy gauge, which is windowed even when adaptation is off).
+    pub alpha: f64,
+    /// Minimum relative share change that commits a new plan.
+    pub hysteresis: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig {
+            enabled: false,
+            replan_every: 16,
+            alpha: 0.2,
+            hysteresis: 0.05,
+        }
+    }
+}
+
+/// Shard failover (off by default).  A shard trips after `trip_errors`
+/// consecutive device errors, or when one device call exceeds
+/// `stall_ms` (the stall detector force-fails the wedged in-flight part
+/// so its clients see an error, never a hang).  Tripped shards stop
+/// receiving new work — their queued lane drains onto survivors under
+/// the batch partition (replica-trivial) and fails fast under modes —
+/// and re-enter on probation after `probation_ms`, where one more error
+/// re-trips immediately.  With a rebuild factory attached
+/// ([`ShardedProjectionService::start_full`], which
+/// `Topology::build_service` does automatically) an error-tripped
+/// worker replaces its own device in place — the factory re-windows the
+/// medium exactly as the original build did, which is what makes
+/// modes-partition failover recoverable.
+#[derive(Clone, Copy, Debug)]
+pub struct FailoverConfig {
+    pub enabled: bool,
+    /// Consecutive device errors that trip a healthy shard.
+    pub trip_errors: u32,
+    /// A single device call running longer than this is a stall.
+    pub stall_ms: u64,
+    /// Tripped → probation re-admission delay.
+    pub probation_ms: u64,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        FailoverConfig {
+            enabled: false,
+            trip_errors: 3,
+            stall_ms: 2000,
+            probation_ms: 250,
+        }
+    }
+}
+
+/// Per-client admission control (off by default): each
+/// [`ShardedProjectionService::client`] handle gets a token bucket of
+/// `rate_fps` frames (rows) per second with `burst` frames of credit;
+/// `submit` blocks up to `max_wait_ms` for tokens (bounded
+/// backpressure) and then errors, counting
+/// `service_admission_throttled`.  Clones of a handle share its bucket;
+/// call `client()` again for an independent budget.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    pub enabled: bool,
+    /// Steady-state admitted frames (rows) per second per client.
+    pub rate_fps: f64,
+    /// Burst credit in frames.
+    pub burst: f64,
+    /// Longest a `submit` may wait for tokens before erroring.
+    pub max_wait_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            enabled: false,
+            rate_fps: 1500.0,
+            burst: 256.0,
+            max_wait_ms: 50,
+        }
     }
 }
 
@@ -378,6 +591,12 @@ pub struct ShardServiceConfig {
     pub partition: Partition,
     /// Frame rate used for scheduler-side per-slot time attribution.
     pub frame_rate_hz: f64,
+    /// Adaptive weight re-planning (off = pinned static schedule).
+    pub adapt: AdaptConfig,
+    /// Shard health / failover policy (off = no trip, no re-route).
+    pub failover: FailoverConfig,
+    /// Per-client admission control (off = unlimited submits).
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ShardServiceConfig {
@@ -388,6 +607,9 @@ impl Default for ShardServiceConfig {
             lane_depth: 8,
             partition: Partition::Modes,
             frame_rate_hz: 1500.0,
+            adapt: AdaptConfig::default(),
+            failover: FailoverConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -417,22 +639,42 @@ struct FrameAssembly {
     modes_total: usize,
     /// Per-part mode counts (modes partition) or row counts (batch).
     part_dims: Vec<usize>,
+    latency: Histogram,
 }
 
+/// Record one part's result and, when it was the last pending part,
+/// assemble and reply.  Poison-tolerant (a client panicking around its
+/// reply must not kill the shard worker completing the frame) and
+/// *idempotent*: the stall detector force-fails a wedged part, and the
+/// wedged device call may still return later — a part that already has
+/// a result (or a frame already finished, which empties the vec) is
+/// dropped without touching `pending`.
 fn complete_part(
     assembly: &Arc<FrameAssembly>,
     part: usize,
     result: Result<(Tensor, Tensor), String>,
 ) {
-    assembly.parts.lock().unwrap()[part] = Some(result);
+    {
+        let mut parts = assembly.parts.lock().unwrap_or_else(PoisonError::into_inner);
+        if part >= parts.len() || parts[part].is_some() {
+            return;
+        }
+        parts[part] = Some(result);
+    }
     if assembly.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
         finish_frame(assembly);
     }
 }
 
 fn finish_frame(assembly: &FrameAssembly) {
-    let parts_raw = std::mem::take(&mut *assembly.parts.lock().unwrap());
-    let requests = std::mem::take(&mut *assembly.requests.lock().unwrap());
+    let parts_raw = {
+        let mut g = assembly.parts.lock().unwrap_or_else(PoisonError::into_inner);
+        std::mem::take(&mut *g)
+    };
+    let requests = {
+        let mut g = assembly.requests.lock().unwrap_or_else(PoisonError::into_inner);
+        std::mem::take(&mut *g)
+    };
     let mut parts: Vec<(Tensor, Tensor)> = Vec::with_capacity(parts_raw.len());
     let mut errors: Vec<String> = Vec::new();
     for (i, p) in parts_raw.into_iter().enumerate() {
@@ -444,13 +686,11 @@ fn finish_frame(assembly: &FrameAssembly) {
     }
     if !errors.is_empty() {
         let msg = errors.join("; ");
-        for req in requests {
-            req.reply.send(Err(msg.clone()));
-        }
+        fail_batch(requests, &msg, &assembly.latency);
         return;
     }
     let (p1, p2) = concat_parts(&parts, assembly);
-    send_replies(requests, &p1, &p2, assembly.modes_total);
+    send_replies(requests, &p1, &p2, assembly.modes_total, &assembly.latency);
 }
 
 /// Concatenate per-shard quadratures back into the full frame result:
@@ -470,82 +710,446 @@ fn concat_parts(
     }
 }
 
+/// Windowed exponential moving average, `v += α·(x − v)`, primed by the
+/// first observation.  This is the windowed statistic that replaced the
+/// old lifetime-cumulative `util` gauge: dividing lifetime `frames` by
+/// lifetime `calls · max_batch` meant an hour of idleness (or a burst
+/// of failed calls) skewed the gauge forever, which is exactly the
+/// signal the adaptive planner must be able to trust.
+struct Ewma {
+    alpha: f64,
+    value: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    fn new(alpha: f64) -> Ewma {
+        Ewma {
+            alpha,
+            value: 0.0,
+            primed: false,
+        }
+    }
+
+    fn observe(&mut self, x: f64) -> f64 {
+        if self.primed {
+            self.value += self.alpha * (x - self.value);
+        } else {
+            self.value = x;
+            self.primed = true;
+        }
+        self.value
+    }
+}
+
+/// Health states published in the `service_shard{i}_state` gauge.
+const STATE_HEALTHY: u8 = 0;
+const STATE_TRIPPED: u8 = 1;
+const STATE_PROBATION: u8 = 2;
+
+/// One shard's health state machine, shared lock-free between its
+/// worker (error/progress accounting) and the scheduler (stall
+/// detection, routing mask, probation re-admission).  Timestamps are
+/// milliseconds since the service epoch; `busy_since_ms` stores ms+1 so
+/// 0 can mean idle.
+struct ShardHealth {
+    state: AtomicU8,
+    consecutive_errors: AtomicU32,
+    busy_since_ms: AtomicU64,
+    tripped_at_ms: AtomicU64,
+}
+
+impl ShardHealth {
+    fn new() -> ShardHealth {
+        ShardHealth {
+            state: AtomicU8::new(STATE_HEALTHY),
+            consecutive_errors: AtomicU32::new(0),
+            busy_since_ms: AtomicU64::new(0),
+            tripped_at_ms: AtomicU64::new(0),
+        }
+    }
+
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::Relaxed)
+    }
+
+    fn begin_call(&self, now_ms: u64) {
+        self.busy_since_ms.store(now_ms + 1, Ordering::Relaxed);
+    }
+
+    fn end_call(&self) {
+        self.busy_since_ms.store(0, Ordering::Relaxed);
+    }
+
+    /// A success clears the error streak and heals any trip — a shard
+    /// that serves again is, by observation, serving.
+    fn note_success(&self) {
+        self.consecutive_errors.store(0, Ordering::Relaxed);
+        self.state.store(STATE_HEALTHY, Ordering::Relaxed);
+    }
+
+    /// Count one error; returns true when this error trips the shard
+    /// (streak reached on a healthy shard, or any error on probation).
+    fn note_error(&self, trip_errors: u32, now_ms: u64) -> bool {
+        let streak = self.consecutive_errors.fetch_add(1, Ordering::Relaxed) + 1;
+        let tripped = match self.state() {
+            STATE_PROBATION => true,
+            STATE_HEALTHY => streak >= trip_errors,
+            _ => false,
+        };
+        if tripped {
+            self.trip(now_ms);
+        }
+        tripped
+    }
+
+    fn trip(&self, now_ms: u64) {
+        self.state.store(STATE_TRIPPED, Ordering::Relaxed);
+        self.tripped_at_ms.store(now_ms, Ordering::Relaxed);
+    }
+
+    fn enter_probation(&self) {
+        self.consecutive_errors.store(0, Ordering::Relaxed);
+        self.state.store(STATE_PROBATION, Ordering::Relaxed);
+    }
+
+    /// True when a device call has been running longer than `stall_ms`.
+    fn stalled(&self, stall_ms: u64, now_ms: u64) -> bool {
+        let busy = self.busy_since_ms.load(Ordering::Relaxed);
+        busy != 0 && now_ms.saturating_sub(busy - 1) > stall_ms
+    }
+
+    /// Tripped shards receive no new work; probation shards do.
+    fn routable(&self) -> bool {
+        self.state() != STATE_TRIPPED
+    }
+
+    /// Probation re-admission: a shard tripped at least `probation_ms`
+    /// ago — and not still wedged inside a call — gets another chance.
+    fn maybe_readmit(&self, probation_ms: u64, stall_ms: u64, now_ms: u64) -> bool {
+        if self.state() != STATE_TRIPPED || self.stalled(stall_ms, now_ms) {
+            return false;
+        }
+        let tripped_at = self.tripped_at_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(tripped_at) < probation_ms {
+            return false;
+        }
+        self.enter_probation();
+        true
+    }
+}
+
+/// The (part index, gather state) of a job currently inside a device
+/// call — what the stall detector force-fails when the call never
+/// returns.
+type Inflight = Arc<Mutex<Option<(usize, Arc<FrameAssembly>)>>>;
+
+fn take_inflight(slot: &Inflight) -> Option<(usize, Arc<FrameAssembly>)> {
+    slot.lock().unwrap_or_else(PoisonError::into_inner).take()
+}
+
+fn set_inflight(slot: &Inflight, value: Option<(usize, Arc<FrameAssembly>)>) {
+    *slot.lock().unwrap_or_else(PoisonError::into_inner) = value;
+}
+
+/// Failover device factory: builds a fresh replacement device for shard
+/// `i` (mode windows re-derived from the medium, replicas re-cloned).
+/// `Topology::build_service` attaches one automatically.
+pub type ShardRebuild = Arc<dyn Fn(usize) -> Result<Box<dyn Projector + Send>> + Send + Sync>;
+
 /// One shard's worker: owns the device, drains its lane in FIFO order.
 /// A panicking device fails the frame (all clients in it see the error)
 /// but the worker — and the lane — stay alive, mirroring the farm's
-/// panic containment.
+/// panic containment.  With failover enabled the worker also runs its
+/// side of the health machine: error streaks trip the shard, and an
+/// error-tripped worker with a rebuild factory replaces its own device
+/// in place and re-enters on probation.
 struct ShardWorker {
     shard: usize,
     device: Box<dyn Projector + Send>,
     lanes: Lanes<ShardJob>,
     max_batch: usize,
+    failover: FailoverConfig,
+    rebuild: Option<ShardRebuild>,
+    health: Arc<ShardHealth>,
+    inflight: Inflight,
+    epoch: Instant,
+    occ_ewma: Ewma,
+    rate_ewma: Ewma,
     frames: Counter,
     calls: Counter,
     errors: Counter,
+    failovers: Counter,
     util: Gauge,
+    rate_gauge: Gauge,
+    state_gauge: Gauge,
     lane_depth: Gauge,
 }
 
 impl ShardWorker {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
     fn run(mut self) {
         while let Some(job) = self.lanes.pop(self.shard) {
             self.lane_depth.set(self.lanes.len(self.shard) as f64);
             let rows = job.frames.rows();
+            set_inflight(&self.inflight, Some((job.part, job.assembly.clone())));
+            self.health.begin_call(self.now_ms());
+            let t0 = Instant::now();
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || self.device.project(&job.frames),
             ))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("shard device panicked")))
             .map_err(|e| format!("{e:#}"));
+            let elapsed_s = t0.elapsed().as_secs_f64();
+            self.health.end_call();
+            set_inflight(&self.inflight, None);
             self.calls.inc();
             match &result {
-                Ok(_) => self.frames.add(rows as u64),
-                Err(_) => self.errors.inc(),
+                Ok(_) => {
+                    self.frames.add(rows as u64);
+                    self.note_success(rows, elapsed_s);
+                }
+                Err(_) => {
+                    self.errors.inc();
+                    self.note_error();
+                }
             }
-            // Occupancy utilization: rows actually projected per unit of
-            // offered frame-sequence capacity on this shard (clamped to
-            // 1.0 — an oversized pass-through request can exceed one
+            // Windowed occupancy: rows projected per offered frame-slot
+            // capacity for *this* call, EWMA-smoothed (clamped to 1.0 —
+            // an oversized pass-through request can exceed one
             // sequence's nominal capacity).
-            let done = self.frames.get() as f64;
-            let offered = (self.calls.get() * self.max_batch as u64) as f64;
-            self.util.set(done / offered.max(done).max(1.0));
+            let occ = (rows as f64 / self.max_batch as f64).min(1.0);
+            self.util.set(self.occ_ewma.observe(occ));
             complete_part(&job.assembly, job.part, result);
         }
     }
+
+    fn note_success(&mut self, rows: usize, elapsed_s: f64) {
+        let rate = rows as f64 / elapsed_s.max(1e-9);
+        self.rate_gauge.set(self.rate_ewma.observe(rate));
+        self.health.note_success();
+        self.state_gauge.set(self.health.state() as f64);
+    }
+
+    fn note_error(&mut self) {
+        self.rate_gauge.set(self.rate_ewma.observe(0.0));
+        if !self.failover.enabled {
+            return;
+        }
+        let now = self.now_ms();
+        if self.health.note_error(self.failover.trip_errors, now) {
+            self.failovers.inc();
+            if let Some(rebuild) = self.rebuild.clone() {
+                // In-place device replacement: the factory re-derives
+                // shard `shard`'s device (re-windowed medium under the
+                // modes partition), then the worker re-enters on
+                // probation.  A failing factory leaves the shard
+                // tripped for the scheduler to drain.
+                match rebuild(self.shard) {
+                    Ok(device) => {
+                        self.device = device;
+                        self.health.enter_probation();
+                    }
+                    Err(e) => {
+                        log::warn!("shard {} rebuild failed: {e:#}", self.shard);
+                    }
+                }
+            }
+        }
+        self.state_gauge.set(self.health.state() as f64);
+    }
 }
+
+/// Relative scale effective weights are normalized to on a re-plan.
+const WEIGHT_SCALE: f64 = 1000.0;
 
 /// The frame-slot scheduler: a single thread, so frame packing and
 /// (shard, slot) assignment are a pure function of submission order.
+/// With the control plane off every field beyond the PR-2/PR-4 set is
+/// inert: `eff_weights == weights` forever, no health transitions, no
+/// re-plans — the pinned schedules cannot move.
 struct FrameScheduler {
     cfg: ShardServiceConfig,
     d_in: usize,
     modes_total: usize,
     shard_modes: Vec<usize>,
-    /// Relative service weights, shard order: the batch partition
+    /// Declared service weights, shard order: the batch partition
     /// splits a frame's rows proportionally to these
     /// ([`weighted_widths`]); all-equal weights reproduce the
     /// historical even split bit for bit.
     weights: Vec<u32>,
+    /// Live plan: equals `weights` until an adaptive re-plan commits.
+    eff_weights: Vec<u32>,
     lanes: Lanes<ShardJob>,
+    health: Vec<Arc<ShardHealth>>,
+    inflight: Vec<Inflight>,
+    /// Per-shard "lane already drained for the current trip" latch.
+    drained: Vec<bool>,
+    /// Round-robin cursor for failover re-routing.
+    route_rr: usize,
+    batches_seen: u64,
+    epoch: Instant,
     frames_ctr: Counter,
     batches_ctr: Counter,
+    failovers: Counter,
+    replans: Counter,
     occupancy: Histogram,
+    latency: Histogram,
     queue_depth: Gauge,
     shard_slots: Vec<Counter>,
     slot_clocks: Vec<SimClock>,
     slot_gauges: Vec<Gauge>,
+    rate_gauges: Vec<Gauge>,
+    eff_gauges: Vec<Gauge>,
+    state_gauges: Vec<Gauge>,
 }
 
 impl FrameScheduler {
-    fn run(self, queue: BoundedQueue<Request>) {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn run(mut self, queue: BoundedQueue<Request>) {
         // `pack_loop` is the same greedy coalescing the device-agnostic
         // dispatcher runs — that shared implementation is what makes
         // `shards=1` bitwise-reproduce the classic path.  `pop` drains
         // the queue after close, so everything submitted before
         // shutdown still gets scheduled.
-        pack_loop(&queue, self.cfg.max_batch, |batch, total| {
+        let max_batch = self.cfg.max_batch;
+        pack_loop(&queue, max_batch, |batch, total| {
             self.queue_depth.set(queue.len() as f64);
             self.schedule_frame(batch, total).is_ok()
         });
+    }
+
+    /// Charge a scheduled slot range to one shard's accounts (whether
+    /// or not the device later errors — a failed exposure still
+    /// occupied the camera).
+    fn charge_slots(&self, shard: usize, slots: u64) {
+        self.shard_slots[shard].add(slots);
+        self.slot_clocks[shard].advance_slots(slots, self.cfg.frame_rate_hz);
+        self.slot_gauges[shard].set(self.slot_clocks[shard].now_secs());
+    }
+
+    /// Next routable shard other than `exclude`, round-robin so drained
+    /// work spreads over the survivors instead of piling onto one.
+    fn pick_routable(&mut self, exclude: usize) -> Option<usize> {
+        let n = self.health.len();
+        for k in 0..n {
+            let cand = (self.route_rr + k) % n;
+            if cand != exclude && self.health[cand].routable() {
+                self.route_rr = (cand + 1) % n;
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    /// Health pass, run once per scheduled batch when failover is on:
+    /// trip stalled shards (force-failing the wedged in-flight part so
+    /// its clients error instead of hanging), drain freshly tripped
+    /// lanes, and re-admit shards whose probation delay has elapsed.
+    fn failover_maintenance(&mut self) {
+        let fo = self.cfg.failover;
+        let now = self.now_ms();
+        for shard in 0..self.health.len() {
+            let h = self.health[shard].clone();
+            if h.state() != STATE_TRIPPED && h.stalled(fo.stall_ms, now) {
+                h.trip(now);
+                self.failovers.inc();
+                if let Some((part, assembly)) = take_inflight(&self.inflight[shard]) {
+                    let msg = format!("shard {shard} stalled (> {} ms)", fo.stall_ms);
+                    complete_part(&assembly, part, Err(msg));
+                }
+            }
+            if h.state() == STATE_TRIPPED && !self.drained[shard] {
+                self.drained[shard] = true;
+                self.drain_lane(shard);
+            }
+            h.maybe_readmit(fo.probation_ms, fo.stall_ms, now);
+            if h.state() != STATE_TRIPPED {
+                // Healed — by probation re-admission here or by the
+                // worker's in-place rebuild — so re-arm the drain
+                // latch for the next trip.
+                self.drained[shard] = false;
+            }
+            self.state_gauges[shard].set(h.state() as f64);
+        }
+    }
+
+    /// Move a tripped shard's queued-but-unstarted jobs off its lane:
+    /// batch-partition jobs re-route to a surviving replica (same part
+    /// index — the gather order is untouched); modes-partition jobs
+    /// fail fast, because survivors image *other* mode windows (the
+    /// in-place worker rebuild is the modes recovery path).  The worker
+    /// may be consuming the same lane concurrently; `try_pop` hands
+    /// each job to exactly one consumer either way.
+    fn drain_lane(&mut self, shard: usize) {
+        while let Some(job) = self.lanes.try_pop(shard) {
+            match self.cfg.partition {
+                Partition::Batch => match self.pick_routable(shard) {
+                    Some(target) => {
+                        self.charge_slots(target, job.frames.rows() as u64);
+                        if self.lanes.push(target, job).is_err() {
+                            return;
+                        }
+                    }
+                    None => {
+                        let msg = format!("shard {shard} tripped; no survivors");
+                        complete_part(&job.assembly, job.part, Err(msg));
+                    }
+                },
+                Partition::Modes => {
+                    let msg = format!("shard {shard} tripped (modes partition)");
+                    complete_part(&job.assembly, job.part, Err(msg));
+                }
+            }
+        }
+    }
+
+    /// Re-derive the effective weights from the worker-published rate
+    /// EWMAs: measured share for shards with a signal, declared share
+    /// until they have one, floor 1 (the `weighted_widths` contract).
+    /// Proposals inside the hysteresis band are dropped — weights only
+    /// move on sustained drift, not per-batch noise.
+    fn replan_weights(&mut self) {
+        let rates: Vec<f64> = self.rate_gauges.iter().map(|g| g.get()).collect();
+        let max_rate = rates.iter().cloned().fold(0.0_f64, f64::max);
+        if max_rate <= 0.0 {
+            return;
+        }
+        let declared_max = *self.weights.iter().max().expect("shards >= 1") as f64;
+        let proposed: Vec<u32> = rates
+            .iter()
+            .zip(&self.weights)
+            .map(|(&r, &w)| {
+                let share = if r > 0.0 {
+                    r / max_rate
+                } else {
+                    w as f64 / declared_max
+                };
+                (share * WEIGHT_SCALE).round().max(1.0) as u32
+            })
+            .collect();
+        let cur_sum: f64 = self.eff_weights.iter().map(|&w| w as f64).sum();
+        let new_sum: f64 = proposed.iter().map(|&w| w as f64).sum();
+        let band = self.cfg.adapt.hysteresis;
+        let moved = self
+            .eff_weights
+            .iter()
+            .zip(&proposed)
+            .any(|(&c, &p)| (p as f64 / new_sum - c as f64 / cur_sum).abs() > band);
+        if !moved {
+            return;
+        }
+        self.eff_weights = proposed;
+        self.replans.inc();
+        for (g, &w) in self.eff_gauges.iter().zip(&self.eff_weights) {
+            g.set(w as f64);
+        }
     }
 
     /// Pack `batch` into one frame sequence, carve it into per-shard
@@ -554,17 +1158,40 @@ impl FrameScheduler {
     /// time.  `Err` means the lanes closed under us (shutdown raced a
     /// schedule) — the unsent parts' requests get dropped senders, which
     /// clients observe as a dropped request.
-    fn schedule_frame(&self, batch: Vec<Request>, total: usize) -> Result<(), ()> {
+    fn schedule_frame(&mut self, batch: Vec<Request>, total: usize) -> Result<(), ()> {
+        if self.cfg.failover.enabled {
+            self.failover_maintenance();
+        }
+        if self.cfg.adapt.enabled {
+            self.batches_seen += 1;
+            if self.batches_seen % self.cfg.adapt.replan_every == 0 {
+                self.replan_weights();
+            }
+        }
         self.frames_ctr.add(total as u64);
         self.batches_ctr.inc();
         self.occupancy.observe(total as f64);
-        let packed = pack_requests(&batch, total, self.d_in);
         let shards = self.shard_modes.len();
+        let routable: Vec<usize> = if self.cfg.failover.enabled {
+            (0..shards).filter(|&s| self.health[s].routable()).collect()
+        } else {
+            (0..shards).collect()
+        };
+        let packed = pack_requests(&batch, total, self.d_in);
         // (frames, shard) in part order — the gather order.
         let mut jobs: Vec<(Arc<Tensor>, usize)> = Vec::with_capacity(shards);
         let mut part_dims: Vec<usize> = Vec::with_capacity(shards);
         match self.cfg.partition {
             Partition::Modes => {
+                if routable.len() < shards {
+                    // A tripped shard's mode window has no stand-in on
+                    // the survivors; fail the frame fast (error, never a
+                    // hang) until the worker's rebuild heals the shard.
+                    let down = shards - routable.len();
+                    let msg = format!("{down} of {shards} shards tripped (modes partition)");
+                    fail_batch(batch, &msg, &self.latency);
+                    return Ok(());
+                }
                 // Every shard images every frame: same slot range on
                 // each device, coalesced requests share the slots (and
                 // the one packed tensor — Arc, not a copy per shard).
@@ -575,12 +1202,17 @@ impl FrameScheduler {
                 }
             }
             Partition::Batch => {
-                // Contiguous weighted row ranges (the farm's split —
-                // equal weights are the historical balanced ranges);
-                // shards whose range is empty sit this frame out.
+                if routable.is_empty() {
+                    fail_batch(batch, "all shards tripped", &self.latency);
+                    return Ok(());
+                }
+                // Contiguous weighted row ranges over the routable
+                // shards (the farm's split — equal weights over a full
+                // fleet are the historical balanced ranges); shards
+                // whose range is empty sit this frame out.
+                let masked: Vec<u32> = routable.iter().map(|&s| self.eff_weights[s]).collect();
                 let mut row0 = 0usize;
-                for (shard, &c) in weighted_widths(total, &self.weights).iter().enumerate()
-                {
+                for (k, &c) in weighted_widths(total, &masked).iter().enumerate() {
                     if c == 0 {
                         continue;
                     }
@@ -590,7 +1222,7 @@ impl FrameScheduler {
                             packed.data()[row0 * self.d_in..(row0 + c) * self.d_in]
                                 .to_vec(),
                         )),
-                        shard,
+                        routable[k],
                     ));
                     part_dims.push(c);
                     row0 += c;
@@ -609,15 +1241,10 @@ impl FrameScheduler {
             rows_total: total,
             modes_total: self.modes_total,
             part_dims,
+            latency: self.latency.clone(),
         });
         for (part, (frames, shard)) in jobs.into_iter().enumerate() {
-            // The slot range is reserved on the shard's frame sequence
-            // at scheduling time, whether or not the device later errors
-            // (a failed exposure still occupied the camera).
-            let slots = frames.rows() as u64;
-            self.shard_slots[shard].add(slots);
-            self.slot_clocks[shard].advance_slots(slots, self.cfg.frame_rate_hz);
-            self.slot_gauges[shard].set(self.slot_clocks[shard].now_secs());
+            self.charge_slots(shard, frames.rows() as u64);
             let job = ShardJob {
                 frames,
                 part,
@@ -636,8 +1263,13 @@ pub struct ShardedProjectionService {
     queue: BoundedQueue<Request>,
     lanes: Lanes<ShardJob>,
     scheduler: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Vec<(usize, JoinHandle<()>)>,
     slot_clocks: Vec<SimClock>,
+    health: Vec<Arc<ShardHealth>>,
+    inflight: Vec<Inflight>,
+    epoch: Instant,
+    cfg: ShardServiceConfig,
+    throttled: Counter,
     d_in: usize,
 }
 
@@ -672,6 +1304,27 @@ impl ShardedProjectionService {
         cfg: ShardServiceConfig,
         metrics: Registry,
     ) -> Result<ShardedProjectionService> {
+        Self::start_full(shards, weights, d_in, cfg, metrics, None)
+    }
+
+    /// [`start_weighted`] plus an optional failover rebuild factory:
+    /// when a shard trips on device errors, its worker calls
+    /// `rebuild(shard)` for a fresh replacement device (the factory
+    /// re-windows the medium under the modes partition) and re-enters
+    /// on probation.  `Topology::build_service` attaches one
+    /// automatically; without one, error-tripped shards stay tripped
+    /// until probation re-admission.
+    ///
+    /// [`start_weighted`]: ShardedProjectionService::start_weighted
+    /// [`Topology::build_service`]: super::topology::Topology::build_service
+    pub fn start_full(
+        shards: Vec<Box<dyn Projector + Send>>,
+        weights: Vec<u32>,
+        d_in: usize,
+        cfg: ShardServiceConfig,
+        metrics: Registry,
+        rebuild: Option<ShardRebuild>,
+    ) -> Result<ShardedProjectionService> {
         anyhow::ensure!(!shards.is_empty(), "service needs at least one shard");
         anyhow::ensure!(
             weights.len() == shards.len(),
@@ -691,6 +1344,34 @@ impl ShardedProjectionService {
             cfg.frame_rate_hz > 0.0,
             "frame_rate_hz must be positive: {cfg:?}"
         );
+        anyhow::ensure!(
+            cfg.adapt.alpha > 0.0 && cfg.adapt.alpha <= 1.0,
+            "adapt.alpha must be in (0, 1]: {}",
+            cfg.adapt.alpha
+        );
+        if cfg.adapt.enabled {
+            anyhow::ensure!(
+                cfg.adapt.replan_every >= 1 && cfg.adapt.hysteresis >= 0.0,
+                "adapt knobs out of range: {:?}",
+                cfg.adapt
+            );
+        }
+        if cfg.failover.enabled {
+            anyhow::ensure!(
+                cfg.failover.trip_errors >= 1 && cfg.failover.stall_ms >= 1,
+                "failover knobs out of range: {:?}",
+                cfg.failover
+            );
+        }
+        if cfg.admission.enabled {
+            anyhow::ensure!(
+                cfg.admission.rate_fps.is_finite()
+                    && cfg.admission.rate_fps > 0.0
+                    && cfg.admission.burst >= 1.0,
+                "admission knobs out of range: {:?}",
+                cfg.admission
+            );
+        }
         let shard_modes: Vec<usize> = shards.iter().map(|s| s.modes()).collect();
         let modes_total = match cfg.partition {
             Partition::Modes => shard_modes.iter().sum(),
@@ -707,6 +1388,12 @@ impl ShardedProjectionService {
         let queue: BoundedQueue<Request> = BoundedQueue::new(cfg.queue_depth);
         let lanes: Lanes<ShardJob> = Lanes::new(n, cfg.lane_depth);
         let slot_clocks: Vec<SimClock> = (0..n).map(|_| SimClock::new()).collect();
+        let epoch = Instant::now();
+        let health: Vec<Arc<ShardHealth>> =
+            (0..n).map(|_| Arc::new(ShardHealth::new())).collect();
+        let inflight: Vec<Inflight> = (0..n).map(|_| Arc::new(Mutex::new(None))).collect();
+        let latency = metrics.histogram("service_latency");
+        let failovers = metrics.counter("service_failovers");
         let mut workers = Vec::with_capacity(n);
         for (i, device) in shards.into_iter().enumerate() {
             let worker = ShardWorker {
@@ -714,29 +1401,56 @@ impl ShardedProjectionService {
                 device,
                 lanes: lanes.clone(),
                 max_batch: cfg.max_batch,
+                failover: cfg.failover,
+                rebuild: rebuild.clone(),
+                health: health[i].clone(),
+                inflight: inflight[i].clone(),
+                epoch,
+                occ_ewma: Ewma::new(cfg.adapt.alpha),
+                rate_ewma: Ewma::new(cfg.adapt.alpha),
                 frames: metrics.counter(&format!("service_shard{i}_frames")),
                 calls: metrics.counter(&format!("service_shard{i}_calls")),
                 errors: metrics.counter(SHARD_ERRORS),
+                failovers: failovers.clone(),
                 util: metrics.gauge(&format!("service_shard{i}_util")),
+                rate_gauge: metrics.gauge(&format!("service_shard{i}_rate_ewma")),
+                state_gauge: metrics.gauge(&format!("service_shard{i}_state")),
                 lane_depth: metrics.gauge(&format!("service_shard{i}_lane_depth")),
             };
-            workers.push(
+            workers.push((
+                i,
                 std::thread::Builder::new()
                     .name(format!("litl-shard-worker-{i}"))
                     .spawn(move || worker.run())
                     .expect("spawn shard worker"),
-            );
+            ));
+        }
+        let eff_gauges: Vec<Gauge> = (0..n)
+            .map(|i| metrics.gauge(&format!("service_shard{i}_eff_weight")))
+            .collect();
+        for (g, &w) in eff_gauges.iter().zip(&weights) {
+            g.set(w as f64);
         }
         let scheduler = FrameScheduler {
             cfg,
             d_in,
             modes_total,
             shard_modes,
+            eff_weights: weights.clone(),
             weights,
             lanes: lanes.clone(),
+            health: health.clone(),
+            inflight: inflight.clone(),
+            drained: vec![false; n],
+            route_rr: 0,
+            batches_seen: 0,
+            epoch,
             frames_ctr: metrics.counter("service_frames"),
             batches_ctr: metrics.counter("service_batches"),
+            failovers,
+            replans: metrics.counter("service_replans"),
             occupancy: metrics.histogram("service_batch_occupancy"),
+            latency,
             queue_depth: metrics.gauge("service_queue_depth"),
             shard_slots: (0..n)
                 .map(|i| metrics.counter(&format!("service_shard{i}_slots")))
@@ -744,6 +1458,13 @@ impl ShardedProjectionService {
             slot_clocks: slot_clocks.clone(),
             slot_gauges: (0..n)
                 .map(|i| metrics.gauge(&format!("service_shard{i}_slot_s")))
+                .collect(),
+            rate_gauges: (0..n)
+                .map(|i| metrics.gauge(&format!("service_shard{i}_rate_ewma")))
+                .collect(),
+            eff_gauges,
+            state_gauges: (0..n)
+                .map(|i| metrics.gauge(&format!("service_shard{i}_state")))
                 .collect(),
         };
         let q2 = queue.clone();
@@ -757,6 +1478,11 @@ impl ShardedProjectionService {
             scheduler: Some(sched_handle),
             workers,
             slot_clocks,
+            health,
+            inflight,
+            epoch,
+            cfg,
+            throttled: metrics.counter("service_admission_throttled"),
             d_in,
         })
     }
@@ -783,11 +1509,27 @@ impl ShardedProjectionService {
     }
 
     /// Create a client handle (same submit/project API as the
-    /// device-agnostic service).
+    /// device-agnostic service).  With admission control on, every
+    /// handle from this call gets its own token-bucket budget — clones
+    /// of one handle share theirs.
     pub fn client(&self) -> ProjectionClient {
+        let admission = if self.cfg.admission.enabled {
+            Some(ClientAdmission {
+                bucket: Arc::new(Mutex::new(TokenBucket::new(
+                    self.cfg.admission.rate_fps,
+                    self.cfg.admission.burst,
+                ))),
+                epoch: self.epoch,
+                max_wait: Duration::from_millis(self.cfg.admission.max_wait_ms),
+                throttled: self.throttled.clone(),
+            })
+        } else {
+            None
+        };
         ProjectionClient {
             queue: self.queue.clone(),
             d_in: self.d_in,
+            admission,
         }
     }
 
@@ -807,8 +1549,30 @@ impl ShardedProjectionService {
             let _ = h.join();
         }
         self.lanes.close_all();
-        for h in self.workers.drain(..) {
-            let _ = h.join();
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        for (shard, h) in self.workers.drain(..) {
+            // A worker wedged inside a device call (stall-tripped)
+            // never observes the closed lane; joining it would hang
+            // shutdown, so it is detached and its in-flight frame and
+            // queued lane are failed below — clients get errors, not
+            // hangs.
+            let wedged = self.cfg.failover.enabled
+                && self.health[shard].stalled(self.cfg.failover.stall_ms, now_ms);
+            if wedged {
+                drop(h);
+            } else {
+                let _ = h.join();
+            }
+        }
+        for shard in 0..self.lanes.count() {
+            while let Some(job) = self.lanes.try_pop(shard) {
+                let msg = format!("service shut down; shard {shard} unavailable");
+                complete_part(&job.assembly, job.part, Err(msg));
+            }
+            if let Some((part, assembly)) = take_inflight(&self.inflight[shard]) {
+                let msg = format!("service shut down; shard {shard} stalled mid-call");
+                complete_part(&assembly, part, Err(msg));
+            }
         }
     }
 
@@ -1018,7 +1782,7 @@ mod tests {
                 queue_depth: 64,
                 lane_depth: 4,
                 partition,
-                frame_rate_hz: 1500.0,
+                ..Default::default()
             },
             reg.clone(),
         )
@@ -1201,7 +1965,7 @@ mod tests {
                 queue_depth: 32,
                 lane_depth: 4,
                 partition: Partition::Batch,
-                frame_rate_hz: 1500.0,
+                ..Default::default()
             },
             reg.clone(),
         )
@@ -1225,6 +1989,131 @@ mod tests {
             Registry::new(),
         )
         .is_err());
+    }
+
+    #[test]
+    fn occupancy_ewma_converges_after_idle() {
+        // The old gauge divided lifetime counters: an hour of empty
+        // calls dragged utilization down forever.  The windowed EWMA
+        // must converge to the true occupancy once the shard is busy.
+        let mut ewma = Ewma::new(0.2);
+        for _ in 0..1000 {
+            ewma.observe(0.0);
+        }
+        assert!(ewma.value < 1e-6);
+        let mut last = 0.0;
+        for _ in 0..50 {
+            last = ewma.observe(1.0);
+        }
+        assert!(last > 0.99, "idle-then-busy EWMA stuck at {last}");
+        // And back: a busy-then-idle shard decays toward zero.
+        for _ in 0..50 {
+            last = ewma.observe(0.0);
+        }
+        assert!(last < 0.01, "busy-then-idle EWMA stuck at {last}");
+    }
+
+    #[test]
+    fn token_bucket_refills_at_rate() {
+        let mut b = TokenBucket::new(100.0, 10.0);
+        // Burst drains immediately...
+        assert!(b.try_take(10.0, 0.0).is_ok());
+        // ...then a 5-frame ask must wait 50 ms.
+        let wait = b.try_take(5.0, 0.0).unwrap_err();
+        assert!((wait - 0.05).abs() < 1e-9, "{wait}");
+        assert!(b.try_take(5.0, 0.05).is_ok());
+        // A request wider than the whole burst is admitted at full
+        // bucket rather than starved forever.
+        let mut b = TokenBucket::new(100.0, 10.0);
+        assert!(b.try_take(500.0, 0.0).is_ok());
+        assert!(b.try_take(1.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn shard_health_trips_and_readmits() {
+        let h = ShardHealth::new();
+        assert!(h.routable());
+        assert!(!h.note_error(3, 10));
+        assert!(!h.note_error(3, 11));
+        assert!(h.note_error(3, 12), "third consecutive error trips");
+        assert_eq!(h.state(), STATE_TRIPPED);
+        assert!(!h.routable());
+        // Probation only after the delay...
+        assert!(!h.maybe_readmit(100, 1000, 50));
+        assert!(h.maybe_readmit(100, 1000, 120));
+        assert_eq!(h.state(), STATE_PROBATION);
+        assert!(h.routable());
+        // ...one error on probation re-trips immediately...
+        assert!(h.note_error(3, 130));
+        assert_eq!(h.state(), STATE_TRIPPED);
+        // ...and a success heals completely.
+        assert!(h.maybe_readmit(100, 1000, 300));
+        h.note_success();
+        assert_eq!(h.state(), STATE_HEALTHY);
+        // Stall detection: busy past the deadline, idle never.
+        h.begin_call(1000);
+        assert!(!h.stalled(500, 1400));
+        assert!(h.stalled(500, 1600));
+        h.end_call();
+        assert!(!h.stalled(500, 1_000_000));
+    }
+
+    #[test]
+    fn client_panic_mid_frame_does_not_wedge_the_lane() {
+        // Regression for the poisoned-lock cascade: a client thread
+        // panicking while holding assembly state must not kill the
+        // shard worker that completes the frame — later clients on the
+        // same lane must still be served.
+        for partition in [Partition::Modes, Partition::Batch] {
+            let (svc, medium, _) = sharded(partition, 2, 8, 16);
+            let client = svc.client();
+            let reply = client.submit(tern(2, 40)).unwrap();
+            let _ = std::thread::spawn(move || {
+                let _reply = reply;
+                panic!("client dies holding its reply");
+            })
+            .join();
+            // The lane must keep serving after the panicking client.
+            for i in 0..4 {
+                let e = tern(3, 41 + i);
+                let (p1, _) = client.project(e.clone()).unwrap();
+                assert_eq!(p1, matmul(&e, &medium.b_re), "{partition:?}");
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn complete_part_is_idempotent() {
+        // A force-failed stalled part may complete again later; the
+        // late result must not double-decrement pending or panic after
+        // the frame finished.
+        let reg = Registry::new();
+        let (tx, rx) = oneshot::channel();
+        let assembly = Arc::new(FrameAssembly {
+            requests: Mutex::new(vec![Request {
+                frames: tern(1, 0),
+                submitted: Instant::now(),
+                reply: tx,
+            }]),
+            parts: Mutex::new(vec![None, None]),
+            pending: AtomicUsize::new(2),
+            partition: Partition::Modes,
+            rows_total: 1,
+            modes_total: 2,
+            part_dims: vec![1, 1],
+            latency: reg.histogram("service_latency"),
+        });
+        complete_part(&assembly, 0, Err("forced stall failure".into()));
+        // Late duplicate for part 0: dropped, pending still 1.
+        complete_part(&assembly, 0, Ok((Tensor::zeros(&[1, 1]), Tensor::zeros(&[1, 1]))));
+        assert_eq!(assembly.pending.load(Ordering::Acquire), 1);
+        complete_part(&assembly, 1, Ok((Tensor::zeros(&[1, 1]), Tensor::zeros(&[1, 1]))));
+        // The frame finished with the forced error; a straggler after
+        // the finish (parts vec emptied) is also a no-op.
+        complete_part(&assembly, 1, Err("straggler".into()));
+        let err = rx.wait().unwrap().unwrap_err();
+        assert!(err.contains("forced stall failure"), "{err}");
     }
 
     #[test]

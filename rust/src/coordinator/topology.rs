@@ -78,7 +78,7 @@ use crate::util::weighted_widths;
 
 use super::farm::ProjectorFarm;
 use super::projector::{DigitalProjector, NativeOpticalProjector, Projector};
-use super::service::{ShardServiceConfig, ShardedProjectionService};
+use super::service::{ShardRebuild, ShardServiceConfig, ShardedProjectionService};
 
 /// What physics a shard device runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -569,6 +569,16 @@ impl Topology {
     /// one worker per shard device, the frame-slot scheduler splitting
     /// batch rows proportionally to the shard weights.  `cfg.partition`
     /// must match the topology's.
+    ///
+    /// The service also gets a failover *rebuild factory*: when
+    /// `cfg.failover` is on and a shard trips on device errors, its
+    /// worker rebuilds that shard's device from this same topology +
+    /// medium + seed — under the modes partition that re-windows the
+    /// medium exactly as the original build did
+    /// ([`Medium::window`](crate::optics::stream::Medium::window)
+    /// under the hood), under batch it re-clones the replica.  The
+    /// factory is inert while `cfg.failover.enabled` is false, so the
+    /// pinned deterministic schedules are untouched by default.
     pub fn build_service(
         &self,
         params: OpuParams,
@@ -585,7 +595,21 @@ impl Topology {
             cfg.partition
         );
         let devices = self.build_devices(params, medium, noise_seed)?;
-        ShardedProjectionService::start_weighted(devices, self.weights(), d_in, cfg, metrics)
+        let topo = self.clone();
+        let medium2 = medium.clone();
+        let rebuild: ShardRebuild = Arc::new(move |shard| {
+            let mut rebuilt = topo.build_devices(params, &medium2, noise_seed)?;
+            anyhow::ensure!(shard < rebuilt.len(), "no shard {shard} in topology");
+            Ok(rebuilt.swap_remove(shard))
+        });
+        ShardedProjectionService::start_full(
+            devices,
+            self.weights(),
+            d_in,
+            cfg,
+            metrics,
+            Some(rebuild),
+        )
     }
 
     fn ensure_backing_matches(&self, medium: &Medium) -> Result<()> {

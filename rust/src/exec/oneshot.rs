@@ -1,7 +1,15 @@
 //! Single-value rendezvous channel (the reply side of a projection
 //! request: submit → OPU frame → `Reply::wait()`).
+//!
+//! All slot locks are poison-tolerant (`unwrap_or_else
+//! (PoisonError::into_inner)`): the guarded state is a plain
+//! `Option<Option<T>>` with no invariant that a mid-update panic could
+//! break, and a client thread that panics around its `Reply` must never
+//! turn into a second panic inside the service worker that later calls
+//! `send` on the same slot — that worker is shared by every other
+//! client on the shard.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Duration;
 
 struct Slot<T> {
@@ -38,7 +46,7 @@ pub fn channel<T>() -> (Sender<T>, Reply<T>) {
 
 impl<T> Sender<T> {
     pub fn send(mut self, value: T) {
-        let mut guard = self.slot.value.lock().unwrap();
+        let mut guard = self.slot.value.lock().unwrap_or_else(PoisonError::into_inner);
         *guard = Some(Some(value));
         self.sent = true;
         self.slot.cv.notify_all();
@@ -48,7 +56,7 @@ impl<T> Sender<T> {
 impl<T> Drop for Sender<T> {
     fn drop(&mut self) {
         if !self.sent {
-            let mut guard = self.slot.value.lock().unwrap();
+            let mut guard = self.slot.value.lock().unwrap_or_else(PoisonError::into_inner);
             if guard.is_none() {
                 *guard = Some(None);
                 self.slot.cv.notify_all();
@@ -60,19 +68,19 @@ impl<T> Drop for Sender<T> {
 impl<T> Reply<T> {
     /// Block until the value arrives; `None` if the sender was dropped.
     pub fn wait(self) -> Option<T> {
-        let mut guard = self.slot.value.lock().unwrap();
+        let mut guard = self.slot.value.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(v) = guard.take() {
                 return v;
             }
-            guard = self.slot.cv.wait(guard).unwrap();
+            guard = self.slot.cv.wait(guard).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Wait with a timeout; `Err(self)` lets the caller retry.
     pub fn wait_timeout(self, timeout: Duration) -> Result<Option<T>, Reply<T>> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut guard = self.slot.value.lock().unwrap();
+        let mut guard = self.slot.value.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(v) = guard.take() {
                 return Ok(v);
@@ -82,14 +90,18 @@ impl<T> Reply<T> {
                 drop(guard);
                 return Err(self);
             }
-            let (g, _) = self.slot.cv.wait_timeout(guard, deadline - now).unwrap();
+            let (g, _) = self
+                .slot
+                .cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             guard = g;
         }
     }
 
     /// Non-blocking poll.
     pub fn try_take(self) -> Result<Option<T>, Reply<T>> {
-        let mut guard = self.slot.value.lock().unwrap();
+        let mut guard = self.slot.value.lock().unwrap_or_else(PoisonError::into_inner);
         if let Some(v) = guard.take() {
             Ok(v)
         } else {
@@ -123,6 +135,34 @@ mod tests {
     #[test]
     fn dropped_sender_yields_none() {
         let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert_eq!(rx.wait(), None);
+    }
+
+    #[test]
+    fn poisoned_slot_still_delivers() {
+        // A panic while holding the slot lock (a client dying mid-frame)
+        // must not cascade into the worker calling `send` later.
+        let (tx, rx) = channel::<u32>();
+        let slot = rx.slot.clone();
+        let _ = thread::spawn(move || {
+            let _guard = slot.value.lock().unwrap();
+            panic!("poison the reply slot");
+        })
+        .join();
+        tx.send(9);
+        assert_eq!(rx.wait(), Some(9));
+    }
+
+    #[test]
+    fn poisoned_slot_still_reports_a_dropped_sender() {
+        let (tx, rx) = channel::<u32>();
+        let slot = rx.slot.clone();
+        let _ = thread::spawn(move || {
+            let _guard = slot.value.lock().unwrap();
+            panic!("poison the reply slot");
+        })
+        .join();
         drop(tx);
         assert_eq!(rx.wait(), None);
     }

@@ -21,7 +21,7 @@
 use std::marker::PhantomData;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
 use crate::metrics::{Counter, Registry};
@@ -44,11 +44,11 @@ struct Tally {
 
 impl Tally {
     fn add_one(&self) {
-        *self.count.lock().unwrap() += 1;
+        *self.count.lock().unwrap_or_else(PoisonError::into_inner) += 1;
     }
 
     fn sub_one(&self) {
-        let mut c = self.count.lock().unwrap();
+        let mut c = self.count.lock().unwrap_or_else(PoisonError::into_inner);
         *c -= 1;
         if *c == 0 {
             self.zero.notify_all();
@@ -56,7 +56,7 @@ impl Tally {
     }
 
     fn read(&self) -> usize {
-        *self.count.lock().unwrap()
+        *self.count.lock().unwrap_or_else(PoisonError::into_inner)
     }
 }
 
@@ -99,7 +99,7 @@ impl Shared {
             while let Some(job) = self.queue.try_pop() {
                 self.run_job(job);
             }
-            let c = tally.count.lock().unwrap();
+            let c = tally.count.lock().unwrap_or_else(PoisonError::into_inner);
             if *c == 0 {
                 return;
             }
@@ -109,7 +109,7 @@ impl Shared {
             let (guard, _) = tally
                 .zero
                 .wait_timeout(c, std::time::Duration::from_millis(1))
-                .unwrap();
+                .unwrap_or_else(PoisonError::into_inner);
             if *guard == 0 {
                 return;
             }

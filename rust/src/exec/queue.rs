@@ -4,10 +4,15 @@
 //!
 //! Mutex + two condvars; `push` blocks when full (backpressure — the OPU
 //! frame clock is the slow consumer by design), `pop` blocks when empty,
-//! and `close()` wakes everyone so shutdown is prompt.
+//! and `close()` wakes everyone so shutdown is prompt.  Every lock and
+//! condvar wait is poison-tolerant (`unwrap_or_else
+//! (PoisonError::into_inner)`): the guarded state is a plain
+//! `VecDeque + bool` with no invariant a mid-update panic can break,
+//! and one panicking client must never wedge the queue for every other
+//! producer and consumer sharing it.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Duration;
 
 struct Inner<T> {
@@ -63,7 +68,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking push; returns `Err(Closed)` if the queue is closed.
     pub fn push(&self, item: T) -> Result<(), Closed> {
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if st.closed {
                 return Err(Closed);
@@ -73,13 +78,17 @@ impl<T> BoundedQueue<T> {
                 self.inner.not_empty.notify_one();
                 return Ok(());
             }
-            st = self.inner.not_full.wait(st).unwrap();
+            st = self
+                .inner
+                .not_full
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Blocking pop; `None` once closed AND drained.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.inner.not_full.notify_one();
@@ -88,7 +97,11 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.inner.not_empty.wait(st).unwrap();
+            st = self
+                .inner
+                .not_empty
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -96,7 +109,7 @@ impl<T> BoundedQueue<T> {
     /// and drained.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, Closed> {
         let deadline = std::time::Instant::now() + timeout;
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.inner.not_full.notify_one();
@@ -113,7 +126,7 @@ impl<T> BoundedQueue<T> {
                 .inner
                 .not_empty
                 .wait_timeout(st, deadline - now)
-                .unwrap();
+                .unwrap_or_else(PoisonError::into_inner);
             st = new_st;
             if res.timed_out() && st.items.is_empty() {
                 if st.closed {
@@ -128,7 +141,7 @@ impl<T> BoundedQueue<T> {
     /// queue so the caller can act (e.g. the thread pool runs a queued
     /// job itself instead of blocking — nested-scope deadlock freedom).
     pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         if st.closed {
             return Err(TryPushError::Closed(item));
         }
@@ -143,7 +156,7 @@ impl<T> BoundedQueue<T> {
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         let item = st.items.pop_front();
         if item.is_some() {
             self.inner.not_full.notify_one();
@@ -153,7 +166,7 @@ impl<T> BoundedQueue<T> {
 
     /// Drain everything currently queued (non-blocking).
     pub fn drain(&self) -> Vec<T> {
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         let out: Vec<T> = st.items.drain(..).collect();
         if !out.is_empty() {
             self.inner.not_full.notify_all();
@@ -162,7 +175,8 @@ impl<T> BoundedQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.queue.lock().unwrap().items.len()
+        let st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+        st.items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -171,14 +185,15 @@ impl<T> BoundedQueue<T> {
 
     /// Close: future pushes fail, pops drain then return None.
     pub fn close(&self) {
-        let mut st = self.inner.queue.lock().unwrap();
+        let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
         st.closed = true;
         self.inner.not_empty.notify_all();
         self.inner.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.queue.lock().unwrap().closed
+        let st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+        st.closed
     }
 }
 
@@ -221,6 +236,13 @@ impl<T> Lanes<T> {
     /// Blocking pop from one lane; `None` once closed AND drained.
     pub fn pop(&self, lane: usize) -> Option<T> {
         self.lanes[lane].pop()
+    }
+
+    /// Non-blocking pop from one lane (the failover drain: the lane's
+    /// worker may be consuming concurrently — each item still goes to
+    /// exactly one consumer).
+    pub fn try_pop(&self, lane: usize) -> Option<T> {
+        self.lanes[lane].try_pop()
     }
 
     /// Items currently queued in one lane.
@@ -403,6 +425,26 @@ mod tests {
         thread::sleep(Duration::from_millis(30));
         lanes.close_all();
         assert_eq!(handle.join().unwrap(), Err(Closed));
+    }
+
+    #[test]
+    fn poisoned_queue_keeps_serving() {
+        // A consumer that panics while holding the queue lock poisons
+        // the mutex; pushes and pops from other threads must carry on.
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let _ = thread::spawn(move || {
+            let _guard = q2.inner.queue.lock().unwrap();
+            panic!("poison the queue");
+        })
+        .join();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.len(), 0);
+        q.close();
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -171,6 +171,49 @@
 //! single-stripe, pinned in `stream_parity.rs`), and the CI
 //! `gen-kernel-bench` job gates per-thread hit throughput via the E6.4
 //! contention sweep.
+//!
+//! ## The serving control plane (adaptive weights, failover, admission)
+//!
+//! Static topology weights describe a fleet at deploy time; production
+//! fleets drift — thermal throttling, noisy neighbours, a dead OPU.
+//! The service carries a self-correcting control plane of three
+//! independent, individually-gated policies
+//! ([`coordinator::service::ShardServiceConfig`]):
+//!
+//! * **Adaptive weights** ([`coordinator::service::AdaptConfig`],
+//!   `--adapt-weights`): each shard worker publishes a windowed EWMA of
+//!   its observed rows/s (`service_shard{i}_rate_ewma`; the occupancy
+//!   `util` gauge is likewise a windowed EWMA, not a lifetime
+//!   cumulative), and every re-plan interval the scheduler re-derives
+//!   the [`util::weighted_widths`] split from those rates — with a
+//!   hysteresis band so measurement jitter does not thrash the plan
+//!   (`service_replans`, `service_shard{i}_eff_weight`).
+//! * **Failover** ([`coordinator::service::FailoverConfig`],
+//!   `--failover`): a per-shard health state machine — healthy, tripped
+//!   by an error streak or a stall timeout, probation on re-admission —
+//!   force-fails a tripped shard's in-flight slots and **drains its
+//!   lane onto survivors**.  Batch-partition shards are replicas, so
+//!   drained frames re-route trivially; modes-partition shards need
+//!   medium re-windowing, supplied by an optional rebuild factory
+//!   ([`coordinator::service::ShardRebuild`], wired automatically by
+//!   `Topology::build_service`), and fail fast otherwise
+//!   (`service_failovers`, `service_shard{i}_state`).
+//! * **Admission control** ([`coordinator::service::AdmissionConfig`],
+//!   `--admit-rate-fps`): per-client token buckets with a bounded
+//!   backpressure wait, so one hot client saturates its own budget
+//!   instead of the queue (`service_admission_throttled`), plus
+//!   `service_latency_p{50,95,99}` submit→reply SLO percentiles.
+//!
+//! **Determinism contract:** every knob defaults *off*, and off means
+//! bitwise-off — the scheduler runs the exact pre-control-plane
+//! schedule, pinned by `tests/{service_schedule,topology,
+//! stream_parity}.rs`.  With the plane on, the shutdown path guarantees
+//! no client ever hangs: in-flight and queued frames receive errors,
+//! never silence (`tests/service_control.rs`), and the whole story is
+//! load-proven by `benches/e7_loadgen.rs` — hundreds of concurrent
+//! clients, a mid-run shard kill, zero hangs, degraded throughput
+//! gated against the healthy baseline in the CI `loadgen-smoke` job
+//! (`E7_DEGRADED_MIN_FRAC`).
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

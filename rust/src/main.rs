@@ -25,6 +25,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
     "partition", "medium", "topology", "tile-cache-mb", "tile-cache-stripes",
+    "adapt-weights", "failover", "admit-rate-fps",
 ];
 
 fn main() {
@@ -117,6 +118,17 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(n) = args.flag_parse::<usize>("tile-cache-stripes")? {
         cfg.tile_cache_stripes = n;
     }
+    if let Some(v) = args.flag("adapt-weights") {
+        cfg.adapt_weights = parse_switch("adapt-weights", v)?;
+    }
+    if let Some(v) = args.flag("failover") {
+        cfg.failover = parse_switch("failover", v)?;
+    }
+    if let Some(r) = args.flag("admit-rate-fps") {
+        // Route through set_kv so the CLI and config-file spellings
+        // share one validation path.
+        cfg.set_kv(&format!("admit_rate_fps={r}"))?;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -126,6 +138,14 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+fn parse_switch(flag: &str, value: &str) -> Result<bool> {
+    match value {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("--{flag} expects on|off, got '{other}'"),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[TRAIN_FLAGS, &["config-file"]].concat())?;
     let cfg = build_config(args)?;
@@ -133,7 +153,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.validate_projection()?;
     log::info!(
         "train: algo={} lr={} epochs={} config={} projector={:?} shards={} \
-         partition={} medium={} tile_cache_mb={} tile_cache_stripes={}",
+         partition={} medium={} tile_cache_mb={} tile_cache_stripes={} \
+         adapt_weights={} failover={} admit_rate_fps={}",
         cfg.algo.name(),
         cfg.lr,
         cfg.epochs,
@@ -143,7 +164,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.partition.name(),
         cfg.medium.name(),
         cfg.tile_cache_mb,
-        cfg.tile_cache_stripes
+        cfg.tile_cache_stripes,
+        cfg.adapt_weights,
+        cfg.failover,
+        cfg.admit_rate_fps
     );
     if cfg.algo == Algo::Optical && cfg.projector != litl::config::ProjectorKind::OpticalHlo
     {
@@ -352,6 +376,18 @@ COMMANDS:
                                     default 0 = auto: next pow2 >= the
                                     projection pool's threads); stripes
                                     change contention only, never bits
+          --adapt-weights on|off    adapt shard weights to observed
+                                    service rates (windowed EWMA;
+                                    default off = the declared weights,
+                                    bitwise-deterministic schedule)
+          --failover on|off         trip erroring/stalled shards, drain
+                                    their queues onto survivors, rebuild
+                                    and re-admit via probation (default
+                                    off)
+          --admit-rate-fps F        per-client admission rate in
+                                    frames/s (token bucket; 0 = off);
+                                    tune admit_burst / admit_max_wait_ms
+                                    via --set
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::util::stats::Welford;
 
@@ -69,8 +69,16 @@ struct HistInner {
 const RING: usize = 4096;
 
 impl Histogram {
+    /// Poison-tolerant lock: the inner state is a plain accumulator (a
+    /// panic mid-`observe` cannot break any invariant worse than one
+    /// lost sample), and a metrics mutex poisoned by one dying thread
+    /// must never crash every other thread that reports through it.
+    fn lock(&self) -> MutexGuard<'_, HistInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn observe(&self, x: f64) {
-        let mut h = self.inner.lock().unwrap();
+        let mut h = self.lock();
         h.welford.push(x);
         if h.ring.len() < RING {
             h.ring.push(x);
@@ -82,28 +90,28 @@ impl Histogram {
     }
 
     pub fn count(&self) -> u64 {
-        self.inner.lock().unwrap().welford.count()
+        self.lock().welford.count()
     }
 
     pub fn mean(&self) -> f64 {
-        self.inner.lock().unwrap().welford.mean()
+        self.lock().welford.mean()
     }
 
     pub fn std(&self) -> f64 {
-        self.inner.lock().unwrap().welford.std()
+        self.lock().welford.std()
     }
 
     pub fn min(&self) -> f64 {
-        self.inner.lock().unwrap().welford.min()
+        self.lock().welford.min()
     }
 
     pub fn max(&self) -> f64 {
-        self.inner.lock().unwrap().welford.max()
+        self.lock().welford.max()
     }
 
     /// Percentile over the recent window.
     pub fn percentile(&self, q: f64) -> f64 {
-        let h = self.inner.lock().unwrap();
+        let h = self.lock();
         if h.ring.is_empty() {
             return f64::NAN;
         }
@@ -129,34 +137,25 @@ impl Registry {
         Self::default()
     }
 
+    /// Poison-tolerant lock (same reasoning as [`Histogram`]'s: plain
+    /// maps of handles, shared by every component in the process).
+    fn lock(&self) -> MutexGuard<'_, RegistryInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn counter(&self, name: &str) -> Counter {
-        self.inner
-            .lock()
-            .unwrap()
-            .counters
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        let mut inner = self.lock();
+        inner.counters.entry(name.to_string()).or_default().clone()
     }
 
     pub fn gauge(&self, name: &str) -> Gauge {
-        self.inner
-            .lock()
-            .unwrap()
-            .gauges
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        let mut inner = self.lock();
+        inner.gauges.entry(name.to_string()).or_default().clone()
     }
 
     pub fn histogram(&self, name: &str) -> Histogram {
-        self.inner
-            .lock()
-            .unwrap()
-            .histograms
-            .entry(name.to_string())
-            .or_default()
-            .clone()
+        let mut inner = self.lock();
+        inner.histograms.entry(name.to_string()).or_default().clone()
     }
 
     /// Sum of all counters whose name starts with `prefix` and ends with
@@ -167,7 +166,7 @@ impl Registry {
     /// never matches), so `("service_shard", "_shard")` cannot
     /// double-count an overlap.
     pub fn sum_counters(&self, prefix: &str, suffix: &str) -> f64 {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock();
         inner
             .counters
             .iter()
@@ -182,7 +181,7 @@ impl Registry {
     /// lane depth; divide by the shard count for intensive ones like
     /// utilization.
     pub fn sum_gauges(&self, prefix: &str, suffix: &str) -> f64 {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock();
         inner
             .gauges
             .iter()
@@ -193,7 +192,7 @@ impl Registry {
 
     /// Flat snapshot of every metric (histograms expand to _mean/_p50/...).
     pub fn snapshot(&self) -> BTreeMap<String, f64> {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.lock();
         let mut out = BTreeMap::new();
         for (name, c) in &inner.counters {
             out.insert(name.clone(), c.get() as f64);
@@ -208,6 +207,7 @@ impl Registry {
             out.insert(format!("{name}_count"), h.count() as f64);
             out.insert(format!("{name}_mean"), h.mean());
             out.insert(format!("{name}_p50"), h.percentile(50.0));
+            out.insert(format!("{name}_p95"), h.percentile(95.0));
             out.insert(format!("{name}_p99"), h.percentile(99.0));
             out.insert(format!("{name}_max"), h.max());
         }
@@ -353,6 +353,24 @@ mod tests {
         let snap = reg.snapshot();
         assert_eq!(snap["lat_count"], 100.0);
         assert_eq!(snap["lat_max"], 100.0);
+        assert!((snap["lat_p95"] - 95.5).abs() < 1.5, "{}", snap["lat_p95"]);
+        assert!(snap["lat_p50"] <= snap["lat_p95"] && snap["lat_p95"] <= snap["lat_p99"]);
+    }
+
+    #[test]
+    fn poisoned_registry_keeps_reporting() {
+        // One thread dying while it holds the registry lock must not
+        // take metrics away from every other component in the process.
+        let reg = Registry::new();
+        reg.counter("alive").inc();
+        let reg2 = reg.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = reg2.inner.lock().unwrap();
+            panic!("poison the registry");
+        })
+        .join();
+        reg.counter("alive").inc();
+        assert_eq!(reg.snapshot()["alive"], 2.0);
     }
 
     #[test]

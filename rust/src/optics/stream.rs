@@ -108,7 +108,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::exec::ThreadPool;
@@ -277,12 +277,16 @@ impl TileCache {
 
     /// Payload bytes resident in one stripe (the per-stripe gauge).
     pub fn stripe_resident_bytes(&self, stripe: usize) -> usize {
-        self.stripes[stripe].lock().unwrap().bytes
+        let st = self.stripes[stripe].lock().unwrap_or_else(PoisonError::into_inner);
+        st.bytes
     }
 
     /// Tiles currently resident across all stripes.
     pub fn tiles_resident(&self) -> usize {
-        self.stripes.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.stripes
+            .iter()
+            .map(|s| s.lock().unwrap_or_else(PoisonError::into_inner).map.len())
+            .sum()
     }
 
     /// Stable stripe assignment: a 64-bit avalanche mix of the key
@@ -301,7 +305,8 @@ impl TileCache {
 
     fn lookup(&self, seed: u64, row: usize, col0: usize, w: usize) -> Option<Arc<CachedTile>> {
         let key = TileKey { seed, row, col0, w };
-        let mut guard = self.stripes[self.stripe_of(&key)].lock().unwrap();
+        let stripe = &self.stripes[self.stripe_of(&key)];
+        let mut guard = stripe.lock().unwrap_or_else(PoisonError::into_inner);
         let inner = &mut *guard;
         let &idx = inner.map.get(&key)?;
         let slot = &mut inner.slots[idx];
@@ -333,7 +338,7 @@ impl TileCache {
             re: re.to_vec(),
             im: im.to_vec(),
         });
-        let mut guard = self.stripes[si].lock().unwrap();
+        let mut guard = self.stripes[si].lock().unwrap_or_else(PoisonError::into_inner);
         let inner = &mut *guard;
         if inner.map.contains_key(&key) {
             // A concurrent replica generated it first — identical bits,

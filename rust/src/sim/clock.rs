@@ -22,9 +22,21 @@ impl SimClock {
     }
 
     /// Charge `seconds` of simulated time.
+    ///
+    /// The charge is *explicitly* saturated: negative inputs charge 0 ns
+    /// (not a silent debug-only assertion that compiles out in release
+    /// and then truncates through `as u64`), and charges past `u64` nanos
+    /// pin at `u64::MAX` instead of wrapping.  Non-finite input is
+    /// rejected loudly — a NaN charge would otherwise poison every
+    /// downstream consumer of this clock (the adaptive scheduler derives
+    /// shard weights from slot clocks, so a single bad charge must not
+    /// be able to skew the whole schedule silently).
     pub fn advance_secs(&self, seconds: f64) {
-        debug_assert!(seconds >= 0.0);
-        let ns = (seconds * 1e9).round() as u64;
+        assert!(
+            seconds.is_finite(),
+            "non-finite sim-clock charge: {seconds} s"
+        );
+        let ns = (seconds * 1e9).round().clamp(0.0, u64::MAX as f64) as u64;
         self.nanos.fetch_add(ns, Ordering::Relaxed);
     }
 
@@ -33,7 +45,10 @@ impl SimClock {
     /// service (each scheduled slot occupies one frame period on its
     /// shard's clock, whether or not the frame was full).
     pub fn advance_slots(&self, slots: u64, frame_rate_hz: f64) {
-        debug_assert!(frame_rate_hz > 0.0);
+        assert!(
+            frame_rate_hz.is_finite() && frame_rate_hz > 0.0,
+            "frame rate must be positive and finite: {frame_rate_hz} Hz"
+        );
         self.advance_secs(slots as f64 / frame_rate_hz);
     }
 
@@ -65,6 +80,46 @@ mod tests {
         assert!((c.now_secs() - 3.0 / 1500.0).abs() < 1e-12);
         c.advance_slots(0, 1500.0);
         assert!((c.now_secs() - 3.0 / 1500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_charge_is_saturated_to_zero() {
+        // Release builds used to rely on `as u64` truncation semantics
+        // here; the clamp makes "never rewind the clock" explicit.
+        let c = SimClock::new();
+        c.advance_secs(0.25);
+        c.advance_secs(-5.0);
+        assert!((c.now_secs() - 0.25).abs() < 1e-12);
+        c.advance_secs(-0.0);
+        assert!((c.now_secs() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn huge_charge_saturates_instead_of_wrapping() {
+        let c = SimClock::new();
+        // 1e300 s * 1e9 ns/s is far beyond u64: the charge must pin at
+        // u64::MAX nanos (~584 years of sim time), not wrap to garbage.
+        c.advance_secs(1e300);
+        let max_secs = u64::MAX as f64 / 1e9;
+        assert!((c.now_secs() - max_secs).abs() < 1.0, "{}", c.now_secs());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sim-clock charge")]
+    fn nan_charge_is_rejected() {
+        SimClock::new().advance_secs(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite sim-clock charge")]
+    fn infinite_charge_is_rejected() {
+        SimClock::new().advance_secs(f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "frame rate must be positive")]
+    fn zero_frame_rate_is_rejected() {
+        SimClock::new().advance_slots(1, 0.0);
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Serving control plane: shutdown-with-in-flight guarantees, adaptive
+//! weights, shard failover (trip / drain / rebuild / probation) and
+//! per-client admission control.
+//!
+//! The contract under test (see `coordinator::service` docs): a client
+//! blocked on a reply must *always* be unblocked — with a result while
+//! the fleet is healthy, with an error when its shard is gone — and
+//! never hang, under both partition policies; adaptation and failover
+//! change which shard serves a frame, never the frame's value.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use litl::config::Partition;
+use litl::coordinator::projector::{DigitalProjector, Projector};
+use litl::coordinator::service::{
+    AdaptConfig, AdmissionConfig, FailoverConfig, ShardRebuild, ShardServiceConfig,
+    ShardedProjectionService,
+};
+use litl::coordinator::topology::{DeviceKind, Topology};
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
+use litl::optics::OpuParams;
+use litl::tensor::{matmul, Tensor};
+
+mod common;
+use common::ternary_batch;
+
+const D_IN: usize = 10;
+const MODES: usize = 24;
+
+/// Device wrapper that sleeps a fixed time per call — a wedged camera
+/// link, the stall-detector's target.
+struct Wedge {
+    inner: Box<dyn Projector + Send>,
+    sleep_ms: u64,
+}
+
+impl Projector for Wedge {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        thread::sleep(Duration::from_millis(self.sleep_ms));
+        self.inner.project(frames)
+    }
+
+    fn modes(&self) -> usize {
+        self.inner.modes()
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.inner.sim_seconds()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.inner.energy_joules()
+    }
+
+    fn kind(&self) -> &'static str {
+        "wedge"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.inner.requires_ternary()
+    }
+}
+
+/// Device wrapper that errors for the first `fail_remaining` calls —
+/// an injected fault burst for the trip/rebuild path.
+struct Flaky {
+    inner: Box<dyn Projector + Send>,
+    fail_remaining: Arc<AtomicUsize>,
+}
+
+impl Projector for Flaky {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        let left = self.fail_remaining.load(Ordering::Relaxed);
+        if left > 0 {
+            self.fail_remaining.store(left - 1, Ordering::Relaxed);
+            anyhow::bail!("injected device fault");
+        }
+        self.inner.project(frames)
+    }
+
+    fn modes(&self) -> usize {
+        self.inner.modes()
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.inner.sim_seconds()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.inner.energy_joules()
+    }
+
+    fn kind(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.inner.requires_ternary()
+    }
+}
+
+/// Device wrapper that sleeps per row — a slow replica, the adaptive
+/// planner's target.
+struct Throttled {
+    inner: Box<dyn Projector + Send>,
+    us_per_row: u64,
+}
+
+impl Projector for Throttled {
+    fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        thread::sleep(Duration::from_micros(self.us_per_row * frames.rows() as u64));
+        self.inner.project(frames)
+    }
+
+    fn modes(&self) -> usize {
+        self.inner.modes()
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.inner.sim_seconds()
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.inner.energy_joules()
+    }
+
+    fn kind(&self) -> &'static str {
+        "throttled"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.inner.requires_ternary()
+    }
+}
+
+/// Full-medium digital replica pair for the batch partition, shard 1
+/// wrapped by `wrap`.
+fn replica_pair(
+    medium: &TransmissionMatrix,
+    wrap: impl FnOnce(Box<dyn Projector + Send>) -> Box<dyn Projector + Send>,
+) -> Vec<Box<dyn Projector + Send>> {
+    vec![
+        Box::new(DigitalProjector::new(medium.clone())),
+        wrap(Box::new(DigitalProjector::new(medium.clone()))),
+    ]
+}
+
+/// Mode-windowed digital pair for the modes partition (via the
+/// `Topology` build path), shard 1 wrapped by `wrap`.
+fn windowed_pair(
+    medium: &TransmissionMatrix,
+    wrap: impl FnOnce(Box<dyn Projector + Send>) -> Box<dyn Projector + Send>,
+) -> Vec<Box<dyn Projector + Send>> {
+    let mut devices = Topology::homogeneous(DeviceKind::Digital, 2)
+        .with_partition(Partition::Modes)
+        .build_devices(OpuParams::default(), &Medium::Dense(medium.clone()), 0)
+        .unwrap();
+    let shard1 = devices.pop().unwrap();
+    devices.push(wrap(shard1));
+    devices
+}
+
+/// A reply that does not arrive within `secs` is a hang — the one
+/// outcome the control plane must make impossible.
+fn wait_bounded(
+    reply: litl::exec::oneshot::Reply<Result<(Tensor, Tensor), String>>,
+    secs: u64,
+) -> Option<Result<(Tensor, Tensor), String>> {
+    match reply.wait_timeout(Duration::from_secs(secs)) {
+        Ok(v) => v,
+        Err(_) => panic!("client hung for {secs}s waiting for a reply"),
+    }
+}
+
+/// Shutdown with frames in flight on a wedged shard: the blocked
+/// clients get errors, never hangs — the in-flight part is force-failed
+/// and the queued lane is error-drained, under both partitions.
+#[test]
+fn shutdown_with_inflight_frames_errors_instead_of_hanging() {
+    for partition in [Partition::Batch, Partition::Modes] {
+        let medium = TransmissionMatrix::sample(71, D_IN, MODES);
+        let wrap = |inner| -> Box<dyn Projector + Send> {
+            Box::new(Wedge {
+                inner,
+                sleep_ms: 3000,
+            })
+        };
+        let devices = match partition {
+            Partition::Batch => replica_pair(&medium, wrap),
+            Partition::Modes => windowed_pair(&medium, wrap),
+        };
+        let svc = ShardedProjectionService::start(
+            devices,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 16,
+                queue_depth: 32,
+                lane_depth: 4,
+                partition,
+                failover: FailoverConfig {
+                    enabled: true,
+                    stall_ms: 50,
+                    ..FailoverConfig::default()
+                },
+                ..Default::default()
+            },
+            Registry::new(),
+        )
+        .unwrap();
+        let client = svc.client();
+        // First request occupies the wedged worker; the second's shard-1
+        // part waits in the lane behind it.
+        let waiters: Vec<_> = (0..2u64)
+            .map(|i| {
+                let reply = client.submit(ternary_batch(8, D_IN, 700 + i)).unwrap();
+                let h = thread::spawn(move || wait_bounded(reply, 30));
+                thread::sleep(Duration::from_millis(100));
+                h
+            })
+            .collect();
+        thread::sleep(Duration::from_millis(100));
+        svc.shutdown();
+        for (i, h) in waiters.into_iter().enumerate() {
+            let outcome = h.join().unwrap();
+            let err = match outcome {
+                Some(Err(e)) => e,
+                Some(Ok(_)) => panic!("{partition:?} req {i}: wedged frame returned Ok"),
+                None => continue, // dropped sender: also a clean unblock
+            };
+            assert!(
+                err.contains("shut down"),
+                "{partition:?} req {i}: unexpected error '{err}'"
+            );
+        }
+    }
+}
+
+/// A shard stalled mid-call trips on the scheduler's stall timeout: the
+/// wedged frame's clients error (bounded, not hung), later frames route
+/// to the survivor and stay exact.
+#[test]
+fn stalled_shard_trips_and_later_frames_route_to_survivors() {
+    let medium = TransmissionMatrix::sample(72, D_IN, MODES);
+    let devices = replica_pair(&medium, |inner| {
+        Box::new(Wedge {
+            inner,
+            sleep_ms: 5000,
+        })
+    });
+    let reg = Registry::new();
+    let svc = ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 32,
+            lane_depth: 4,
+            partition: Partition::Batch,
+            failover: FailoverConfig {
+                enabled: true,
+                trip_errors: 1000, // stall path only
+                stall_ms: 100,
+                probation_ms: 600_000,
+            },
+            ..Default::default()
+        },
+        reg.clone(),
+    )
+    .unwrap();
+    let client = svc.client();
+    let first = client.submit(ternary_batch(8, D_IN, 710)).unwrap();
+    // Let the wedged worker pick up its part, then age past stall_ms.
+    thread::sleep(Duration::from_millis(300));
+    // Scheduling the next frame runs the health pass: trip + force-fail.
+    let e = ternary_batch(8, D_IN, 711);
+    let (p1, p2) = client.project(e.clone()).unwrap();
+    assert_eq!(p1, matmul(&e, &medium.b_re));
+    assert_eq!(p2, matmul(&e, &medium.b_im));
+    let err = match wait_bounded(first, 30) {
+        Some(Err(e)) => e,
+        other => panic!("wedged frame should error, got {other:?}"),
+    };
+    assert!(err.contains("stalled"), "unexpected error '{err}'");
+    let snap = reg.snapshot();
+    assert!(snap["service_failovers"] >= 1.0);
+    assert_eq!(snap["service_shard1_state"], 1.0, "shard 1 tripped");
+    svc.shutdown();
+}
+
+/// Error-burst trip under the batch partition without a rebuild
+/// factory: the frame that hit the fault errors, every later frame is
+/// served exactly by the survivor.
+#[test]
+fn error_tripped_batch_shard_drains_onto_survivor() {
+    let medium = TransmissionMatrix::sample(73, D_IN, MODES);
+    let devices = replica_pair(&medium, |inner| {
+        Box::new(Flaky {
+            inner,
+            fail_remaining: Arc::new(AtomicUsize::new(usize::MAX)),
+        })
+    });
+    let reg = Registry::new();
+    let svc = ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 32,
+            lane_depth: 4,
+            partition: Partition::Batch,
+            failover: FailoverConfig {
+                enabled: true,
+                trip_errors: 1,
+                stall_ms: 600_000,
+                probation_ms: 600_000,
+            },
+            ..Default::default()
+        },
+        reg.clone(),
+    )
+    .unwrap();
+    let client = svc.client();
+    let first = client.submit(ternary_batch(8, D_IN, 720)).unwrap();
+    match wait_bounded(first, 30) {
+        Some(Err(e)) => assert!(e.contains("injected device fault"), "{e}"),
+        other => panic!("faulted frame should error, got {other:?}"),
+    }
+    for i in 0..5u64 {
+        let e = ternary_batch(8, D_IN, 721 + i);
+        let (p1, p2) = client.project(e.clone()).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re), "survivor frame {i}");
+        assert_eq!(p2, matmul(&e, &medium.b_im), "survivor frame {i}");
+    }
+    let snap = reg.snapshot();
+    assert!(snap["service_failovers"] >= 1.0);
+    assert_eq!(snap["service_shard1_state"], 1.0);
+    svc.shutdown();
+}
+
+/// Modes-partition recovery: a tripped mode window has no stand-in on
+/// the survivors, so the worker rebuilds its own device through the
+/// factory and re-enters on probation — after which results are exact
+/// against the full medium again.
+#[test]
+fn modes_shard_heals_through_rebuild_factory_and_probation() {
+    let medium = TransmissionMatrix::sample(74, D_IN, MODES);
+    let devices = windowed_pair(&medium, |inner| {
+        Box::new(Flaky {
+            inner,
+            fail_remaining: Arc::new(AtomicUsize::new(1)),
+        })
+    });
+    let medium2 = medium.clone();
+    let rebuild: ShardRebuild = Arc::new(move |shard| {
+        let mut rebuilt = Topology::homogeneous(DeviceKind::Digital, 2)
+            .with_partition(Partition::Modes)
+            .build_devices(OpuParams::default(), &Medium::Dense(medium2.clone()), 0)?;
+        anyhow::ensure!(shard < rebuilt.len(), "no shard {shard}");
+        Ok(rebuilt.swap_remove(shard))
+    });
+    let reg = Registry::new();
+    let svc = ShardedProjectionService::start_full(
+        devices,
+        vec![1, 1],
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 32,
+            lane_depth: 4,
+            partition: Partition::Modes,
+            failover: FailoverConfig {
+                enabled: true,
+                trip_errors: 1,
+                stall_ms: 600_000,
+                probation_ms: 1,
+            },
+            ..Default::default()
+        },
+        reg.clone(),
+        Some(rebuild),
+    )
+    .unwrap();
+    let client = svc.client();
+    let first = client.submit(ternary_batch(8, D_IN, 730)).unwrap();
+    match wait_bounded(first, 30) {
+        Some(Err(e)) => assert!(e.contains("injected device fault"), "{e}"),
+        other => panic!("faulted frame should error, got {other:?}"),
+    }
+    // The worker tripped, rebuilt in place and re-entered on probation;
+    // the next frames run on both mode windows and are exact.
+    for i in 0..3u64 {
+        let e = ternary_batch(8, D_IN, 731 + i);
+        let (p1, p2) = client.project(e.clone()).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re), "healed frame {i}");
+        assert_eq!(p2, matmul(&e, &medium.b_im), "healed frame {i}");
+    }
+    let snap = reg.snapshot();
+    assert_eq!(snap["service_failovers"], 1.0);
+    assert_eq!(snap["service_shard1_state"], 0.0, "healed to HEALTHY");
+    svc.shutdown();
+}
+
+/// Adaptive weights shift scheduled rows toward the faster replica —
+/// visibly in `service_replans`, the effective-weight gauges and the
+/// slot accounts — while every result stays exact.
+#[test]
+fn adaptive_weights_shift_rows_toward_the_faster_shard() {
+    let medium = TransmissionMatrix::sample(75, D_IN, MODES);
+    let devices = replica_pair(&medium, |inner| {
+        Box::new(Throttled {
+            inner,
+            us_per_row: 400,
+        })
+    });
+    let reg = Registry::new();
+    let svc = ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 32,
+            lane_depth: 4,
+            partition: Partition::Batch,
+            adapt: AdaptConfig {
+                enabled: true,
+                replan_every: 2,
+                alpha: 0.5,
+                hysteresis: 0.01,
+            },
+            ..Default::default()
+        },
+        reg.clone(),
+    )
+    .unwrap();
+    let client = svc.client();
+    for i in 0..12u64 {
+        let e = ternary_batch(8, D_IN, 740 + i);
+        let (p1, p2) = client.project(e.clone()).unwrap();
+        assert_eq!(p1, matmul(&e, &medium.b_re), "adaptive frame {i}");
+        assert_eq!(p2, matmul(&e, &medium.b_im), "adaptive frame {i}");
+    }
+    let snap = reg.snapshot();
+    assert!(snap["service_replans"] >= 1.0, "no re-plan committed: {snap:?}");
+    assert!(
+        snap["service_shard0_eff_weight"] > snap["service_shard1_eff_weight"],
+        "weights did not shift toward the fast shard: {snap:?}"
+    );
+    assert!(
+        snap["service_shard0_slots"] > snap["service_shard1_slots"],
+        "slots did not follow the plan: {snap:?}"
+    );
+    assert!(
+        snap.contains_key("service_shard1_rate_ewma"),
+        "windowed rate gauge missing: {snap:?}"
+    );
+    svc.shutdown();
+}
+
+/// Admission control: a client that exhausts its token bucket gets a
+/// bounded-wait error (counted in `service_admission_throttled`), a
+/// fresh client handle has its own budget, and the end-to-end latency
+/// histogram lands in the snapshot with p50/p95/p99.
+#[test]
+fn admission_throttles_per_client_and_latency_lands_in_snapshot() {
+    let medium = TransmissionMatrix::sample(76, D_IN, MODES);
+    let devices: Vec<Box<dyn Projector + Send>> =
+        vec![Box::new(DigitalProjector::new(medium.clone()))];
+    let reg = Registry::new();
+    let svc = ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 32,
+            lane_depth: 4,
+            partition: Partition::Batch,
+            admission: AdmissionConfig {
+                enabled: true,
+                rate_fps: 10.0,
+                burst: 8.0,
+                max_wait_ms: 1,
+            },
+            ..Default::default()
+        },
+        reg.clone(),
+    )
+    .unwrap();
+    let client = svc.client();
+    let e = ternary_batch(8, D_IN, 750);
+    let (p1, _) = client.project(e.clone()).unwrap();
+    assert_eq!(p1, matmul(&e, &medium.b_re));
+    // The burst is spent; at 10 fps the next 8 rows are ~800 ms away,
+    // far past the 1 ms wait budget.
+    let err = client.project(ternary_batch(8, D_IN, 751)).unwrap_err();
+    assert!(format!("{err:#}").contains("rate budget"), "{err:#}");
+    // A fresh handle is a different client with its own bucket.
+    let other = svc.client();
+    let e2 = ternary_batch(8, D_IN, 752);
+    let (q1, _) = other.project(e2.clone()).unwrap();
+    assert_eq!(q1, matmul(&e2, &medium.b_re));
+    let snap = reg.snapshot();
+    assert!(snap["service_admission_throttled"] >= 1.0);
+    for key in ["service_latency_p50", "service_latency_p95", "service_latency_p99"] {
+        assert!(snap.contains_key(key), "missing {key}: {snap:?}");
+    }
+    svc.shutdown();
+}

@@ -218,6 +218,7 @@ fn streamed_shards_compose_with_the_sharded_service() {
                     lane_depth: 4,
                     partition,
                     frame_rate_hz: 1500.0,
+                    ..Default::default()
                 },
                 Registry::new(),
             )
@@ -326,6 +327,7 @@ fn cached_streamed_shards_compose_with_the_sharded_service() {
                     lane_depth: 4,
                     partition,
                     frame_rate_hz: 1500.0,
+                    ..Default::default()
                 },
                 Registry::new(),
             )
@@ -438,6 +440,7 @@ fn striped_cache_composes_with_the_sharded_service() {
                     lane_depth: 4,
                     partition,
                     frame_rate_hz: 1500.0,
+                    ..Default::default()
                 },
                 Registry::new(),
             )

@@ -131,6 +131,7 @@ fn weighted_service_splits_scheduled_rows_by_weight() {
                 lane_depth: 4,
                 partition: Partition::Batch,
                 frame_rate_hz: 1500.0,
+                ..Default::default()
             },
             reg.clone(),
         )
@@ -188,6 +189,7 @@ fn run_hetero_training(steps: u64, modes: usize) {
                 lane_depth: 4,
                 partition: Partition::Modes,
                 frame_rate_hz: 1500.0,
+                ..Default::default()
             },
             reg.clone(),
         )
@@ -268,6 +270,7 @@ fn run_hetero_mnist_smoke() {
                 lane_depth: 4,
                 partition: Partition::Modes,
                 frame_rate_hz: 1500.0,
+                ..Default::default()
             },
             reg.clone(),
         )

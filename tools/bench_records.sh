@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
-# Produce the committed bench records: run the e6 streaming and e4
-# scaling benches in release mode and collect every JSON record line
-# they print (compact objects whose first key is "bench":
+# Produce the committed bench records: run the e6 streaming, e4 scaling
+# and e7 loadgen benches in release mode and collect every JSON record
+# line they print (compact objects containing a "bench" key:
 # e6_genkernel / e6_streaming / e6_tile_cache / e6_cache_contention,
-# e4_shard_sweep / e4_service_sweep / e4_hetero_sweep) into
-# BENCH_e6.json / BENCH_e4.json at the repo root as JSON arrays.
+# e4_shard_sweep / e4_service_sweep / e4_hetero_sweep, e7_loadgen) into
+# BENCH_e6.json / BENCH_e4.json / BENCH_e7.json at the repo root as
+# JSON arrays.
 #
 # Usage: tools/bench_records.sh            (from anywhere in the repo)
 #
@@ -34,3 +35,4 @@ collect() {
 
 collect e6_streaming BENCH_e6.json
 collect e4_scaling BENCH_e4.json
+collect e7_loadgen BENCH_e7.json
