@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 use self::toml::TomlValue;
 use crate::coordinator::service::{AdaptConfig, AdmissionConfig, FailoverConfig};
 use crate::coordinator::topology::{DeviceKind, PoolPolicy, Topology};
+use crate::metrics::trace::TraceLevel;
 
 /// Which feedback path trains the hidden layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -230,6 +231,28 @@ pub struct TrainConfig {
     pub admit_burst: f64,
     /// Longest a submission may wait for admission tokens (ms).
     pub admit_max_wait_ms: u64,
+    /// Telemetry level (`--trace off|summary|full`, `[telemetry]
+    /// trace = "..."`).  `off` (the default) keeps the serving and
+    /// training paths free of span recording — pinned schedules stay
+    /// bitwise; `summary` enables the profiling histograms and the
+    /// periodic summary line; `full` additionally records span events
+    /// for the Chrome-trace export.
+    pub trace: TraceLevel,
+    /// Chrome `trace_event` JSON output path (`--trace-out trace.json`,
+    /// loadable at ui.perfetto.dev).  Requires `trace = "full"` — there
+    /// are no span events to write below that.
+    pub trace_out: Option<String>,
+    /// Prometheus text-exposition dump of the full metrics registry,
+    /// written at exit (`--metrics-out metrics.prom`).  Works at any
+    /// trace level (counters and gauges always populate).
+    pub metrics_out: Option<String>,
+    /// Per-thread span ring capacity, in events (`[telemetry]
+    /// trace_ring_events = N`).  Overflow drops the newest events and
+    /// counts them — recording never blocks the pipeline.
+    pub trace_ring_events: usize,
+    /// Emit the human-readable telemetry summary line every N training
+    /// batches (0 = never; needs `trace` at `summary` or `full`).
+    pub summary_every_batches: usize,
 }
 
 impl Default for TrainConfig {
@@ -268,6 +291,11 @@ impl Default for TrainConfig {
             admit_rate_fps: 0.0,
             admit_burst: 256.0,
             admit_max_wait_ms: 50,
+            trace: TraceLevel::Off,
+            trace_out: None,
+            metrics_out: None,
+            trace_ring_events: 65_536,
+            summary_every_batches: 0,
         }
     }
 }
@@ -400,6 +428,29 @@ impl TrainConfig {
                 }
                 self.admit_max_wait_ms = n as u64;
             }
+            "trace" | "telemetry.trace" => {
+                self.trace = TraceLevel::parse(value.want_str()?)?
+            }
+            "trace_out" | "telemetry.trace_out" => {
+                self.trace_out = Some(value.want_str()?.to_string())
+            }
+            "metrics_out" | "telemetry.metrics_out" => {
+                self.metrics_out = Some(value.want_str()?.to_string())
+            }
+            "trace_ring_events" | "telemetry.trace_ring_events" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("trace_ring_events must be >= 1, got {n}");
+                }
+                self.trace_ring_events = n as usize;
+            }
+            "summary_every_batches" | "telemetry.summary_every_batches" => {
+                let n = value.want_int()?;
+                if n < 0 {
+                    bail!("summary_every_batches must be >= 0 (0 disables), got {n}");
+                }
+                self.summary_every_batches = n as usize;
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -482,6 +533,14 @@ impl TrainConfig {
             // are legal).
             self.projection_topology().validate()?;
         }
+        // A trace file needs span events, which only `full` records —
+        // an output path below that would silently write an empty trace.
+        anyhow::ensure!(
+            self.trace_out.is_none() || self.trace == TraceLevel::Full,
+            "--trace-out requires --trace full (level '{}' records no \
+             span events)",
+            self.trace.name()
+        );
         Ok(())
     }
 
@@ -778,6 +837,76 @@ mod tests {
         let (_, _, ad) = c.service_control();
         assert!(ad.enabled);
         assert_eq!(ad.rate_fps, 800.0);
+    }
+
+    #[test]
+    fn telemetry_defaults_are_off() {
+        let c = TrainConfig::default();
+        assert_eq!(c.trace, TraceLevel::Off);
+        assert!(c.trace_out.is_none());
+        assert!(c.metrics_out.is_none());
+        assert_eq!(c.trace_ring_events, 65_536);
+        assert_eq!(c.summary_every_batches, 0);
+        // The defaults validate: no trace file is demanded without
+        // span recording.
+        c.validate_projection().unwrap();
+    }
+
+    #[test]
+    fn telemetry_kv_overrides_and_bounds() {
+        let mut c = TrainConfig::default();
+        c.set_kv("trace=full").unwrap();
+        c.set_kv("trace_out=trace.json").unwrap();
+        c.set_kv("metrics_out=metrics.prom").unwrap();
+        c.set_kv("trace_ring_events=1024").unwrap();
+        c.set_kv("summary_every_batches=50").unwrap();
+        assert_eq!(c.trace, TraceLevel::Full);
+        assert_eq!(c.trace_out.as_deref(), Some("trace.json"));
+        assert_eq!(c.metrics_out.as_deref(), Some("metrics.prom"));
+        assert_eq!(c.trace_ring_events, 1024);
+        assert_eq!(c.summary_every_batches, 50);
+        c.validate_projection().unwrap();
+        // Out-of-range values are loud, not clamped.
+        assert!(c.set_kv("trace=verbose").is_err());
+        assert!(c.set_kv("trace_ring_events=0").is_err());
+        assert!(c.set_kv("summary_every_batches=-1").is_err());
+        // A trace file without full-level recording is a config error.
+        c.set_kv("trace=summary").unwrap();
+        let err = c.validate_projection().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--trace full"),
+            "error names the fix: {err:#}"
+        );
+    }
+
+    #[test]
+    fn telemetry_toml_section_round_trips() {
+        // The `[telemetry]` section spelling maps to the same knobs as
+        // the bare `--set` keys (the `[service]` pattern).
+        let path = std::env::temp_dir().join("litl_cfg_telemetry_section_test.toml");
+        std::fs::write(
+            &path,
+            "[telemetry]\ntrace = \"full\"\ntrace_out = \"out/trace.json\"\n\
+             metrics_out = \"out/metrics.prom\"\ntrace_ring_events = 4096\n\
+             summary_every_batches = 25\n",
+        )
+        .unwrap();
+        let mut c = TrainConfig::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.trace, TraceLevel::Full);
+        assert_eq!(c.trace_out.as_deref(), Some("out/trace.json"));
+        assert_eq!(c.metrics_out.as_deref(), Some("out/metrics.prom"));
+        assert_eq!(c.trace_ring_events, 4096);
+        assert_eq!(c.summary_every_batches, 25);
+        // Re-emit via name() and reload: the level round trip is stable.
+        std::fs::write(
+            &path,
+            format!("[telemetry]\ntrace = \"{}\"\n", c.trace.name()),
+        )
+        .unwrap();
+        let mut c2 = TrainConfig::default();
+        c2.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c2.trace, c.trace);
     }
 
     #[test]

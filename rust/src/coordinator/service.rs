@@ -70,6 +70,7 @@ use anyhow::Result;
 use crate::config::Partition;
 use crate::exec::oneshot;
 use crate::exec::queue::{BoundedQueue, Lanes};
+use crate::metrics::trace::{self, NO_SHARD};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::sim::clock::SimClock;
 use crate::tensor::Tensor;
@@ -88,6 +89,9 @@ struct Request {
     /// Submission wall time — the `service_latency` histogram observes
     /// `submitted.elapsed()` when the reply is routed.
     submitted: Instant,
+    /// Trace frame id ([`trace::next_frame`]; `NO_FRAME` when tracing
+    /// is off) — keys this request's spans across pipeline threads.
+    trace_frame: u64,
     reply: oneshot::Sender<Result<(Tensor, Tensor), String>>,
 }
 
@@ -214,17 +218,31 @@ impl ProjectionClient {
             frames.shape()
         );
         anyhow::ensure!(frames.rows() > 0, "empty projection request");
+        let trace_frame = trace::next_frame();
+        trace::begin(trace::STAGE_REQUEST, trace_frame, NO_SHARD);
         if let Some(admission) = &self.admission {
-            admission.admit(frames.rows())?;
+            let t = trace::start();
+            let admitted = admission.admit(frames.rows());
+            trace::complete(trace::STAGE_ADMIT, trace_frame, NO_SHARD, t);
+            if let Err(e) = admitted {
+                trace::end(trace::STAGE_REQUEST, trace_frame, NO_SHARD);
+                return Err(e);
+            }
         }
         let (tx, rx) = oneshot::channel();
+        trace::begin(trace::STAGE_QUEUE_WAIT, trace_frame, NO_SHARD);
         self.queue
             .push(Request {
                 frames,
                 submitted: Instant::now(),
+                trace_frame,
                 reply: tx,
             })
-            .map_err(|_| anyhow::anyhow!("projection service is shut down"))?;
+            .map_err(|_| {
+                trace::end(trace::STAGE_QUEUE_WAIT, trace_frame, NO_SHARD);
+                trace::end(trace::STAGE_REQUEST, trace_frame, NO_SHARD);
+                anyhow::anyhow!("projection service is shut down")
+            })?;
         Ok(rx)
     }
 
@@ -361,7 +379,10 @@ impl ProjectionService {
         occupancy.observe(rows as f64);
         let d_in = batch[0].frames.cols();
         let packed = pack_requests(&batch, rows, d_in);
-        match device.project(&packed) {
+        let t = trace::start();
+        let projected = device.project(&packed);
+        trace::complete(trace::STAGE_PROJECT, batch[0].trace_frame, NO_SHARD, t);
+        match projected {
             Ok((p1, p2)) => {
                 let modes = device.modes();
                 send_replies(batch, &p1, &p2, modes, latency);
@@ -416,15 +437,18 @@ fn pack_loop(
     mut flush: impl FnMut(Vec<Request>, usize) -> bool,
 ) {
     while let Some(first) = queue.pop() {
+        trace::end(trace::STAGE_QUEUE_WAIT, first.trace_frame, NO_SHARD);
         let mut batch: Vec<Request> = vec![first];
         let mut total: usize = batch[0].frames.rows();
         while total < max_batch {
             match queue.try_pop() {
                 Some(req) if total + req.frames.rows() <= max_batch => {
+                    trace::end(trace::STAGE_QUEUE_WAIT, req.trace_frame, NO_SHARD);
                     total += req.frames.rows();
                     batch.push(req);
                 }
                 Some(req) => {
+                    trace::end(trace::STAGE_QUEUE_WAIT, req.trace_frame, NO_SHARD);
                     if !flush(batch, total) {
                         return;
                     }
@@ -468,6 +492,7 @@ fn send_replies(batch: Vec<Request>, p1: &Tensor, p2: &Tensor, modes: usize, lat
             )
         };
         latency.observe(req.submitted.elapsed().as_secs_f64());
+        trace::end(trace::STAGE_REQUEST, req.trace_frame, NO_SHARD);
         req.reply.send(Ok((take(p1), take(p2))));
         row += b;
     }
@@ -479,6 +504,7 @@ fn send_replies(batch: Vec<Request>, p1: &Tensor, p2: &Tensor, modes: usize, lat
 fn fail_batch(batch: Vec<Request>, msg: &str, latency: &Histogram) {
     for req in batch {
         latency.observe(req.submitted.elapsed().as_secs_f64());
+        trace::end(trace::STAGE_REQUEST, req.trace_frame, NO_SHARD);
         req.reply.send(Err(msg.to_string()));
     }
 }
@@ -621,6 +647,8 @@ struct ShardJob {
     frames: Arc<Tensor>,
     /// Index into the frame's part list (== gather position).
     part: usize,
+    /// The scheduled frame's trace id (first coalesced request's).
+    trace_frame: u64,
     assembly: Arc<FrameAssembly>,
 }
 
@@ -639,6 +667,8 @@ struct FrameAssembly {
     modes_total: usize,
     /// Per-part mode counts (modes partition) or row counts (batch).
     part_dims: Vec<usize>,
+    /// The scheduled frame's trace id (first coalesced request's).
+    trace_frame: u64,
     latency: Histogram,
 }
 
@@ -667,6 +697,9 @@ fn complete_part(
 }
 
 fn finish_frame(assembly: &FrameAssembly) {
+    // The gather span covers result assembly + concat only; it closes
+    // before the replies go out, so gather-end <= every request-end.
+    let t = trace::start();
     let parts_raw = {
         let mut g = assembly.parts.lock().unwrap_or_else(PoisonError::into_inner);
         std::mem::take(&mut *g)
@@ -686,10 +719,12 @@ fn finish_frame(assembly: &FrameAssembly) {
     }
     if !errors.is_empty() {
         let msg = errors.join("; ");
+        trace::complete(trace::STAGE_GATHER, assembly.trace_frame, NO_SHARD, t);
         fail_batch(requests, &msg, &assembly.latency);
         return;
     }
     let (p1, p2) = concat_parts(&parts, assembly);
+    trace::complete(trace::STAGE_GATHER, assembly.trace_frame, NO_SHARD, t);
     send_replies(requests, &p1, &p2, assembly.modes_total, &assembly.latency);
 }
 
@@ -893,16 +928,24 @@ impl ShardWorker {
 
     fn run(mut self) {
         while let Some(job) = self.lanes.pop(self.shard) {
+            trace::end(trace::STAGE_LANE_WAIT, job.trace_frame, self.shard as u32);
             self.lane_depth.set(self.lanes.len(self.shard) as f64);
             let rows = job.frames.rows();
             set_inflight(&self.inflight, Some((job.part, job.assembly.clone())));
             self.health.begin_call(self.now_ms());
             let t0 = Instant::now();
+            let tspan = trace::start();
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                 || self.device.project(&job.frames),
             ))
             .unwrap_or_else(|_| Err(anyhow::anyhow!("shard device panicked")))
             .map_err(|e| format!("{e:#}"));
+            trace::complete(
+                trace::STAGE_PROJECT,
+                job.trace_frame,
+                self.shard as u32,
+                tspan,
+            );
             let elapsed_s = t0.elapsed().as_secs_f64();
             self.health.end_call();
             set_inflight(&self.inflight, None);
@@ -1089,11 +1132,17 @@ impl FrameScheduler {
     /// each job to exactly one consumer either way.
     fn drain_lane(&mut self, shard: usize) {
         while let Some(job) = self.lanes.try_pop(shard) {
+            // The drained job's lane wait ends here; a re-route below
+            // opens a fresh one on the target shard's lane.
+            trace::end(trace::STAGE_LANE_WAIT, job.trace_frame, shard as u32);
             match self.cfg.partition {
                 Partition::Batch => match self.pick_routable(shard) {
                     Some(target) => {
                         self.charge_slots(target, job.frames.rows() as u64);
+                        let frame = job.trace_frame;
+                        trace::begin(trace::STAGE_LANE_WAIT, frame, target as u32);
                         if self.lanes.push(target, job).is_err() {
+                            trace::end(trace::STAGE_LANE_WAIT, frame, target as u32);
                             return;
                         }
                     }
@@ -1159,6 +1208,12 @@ impl FrameScheduler {
     /// schedule) — the unsent parts' requests get dropped senders, which
     /// clients observe as a dropped request.
     fn schedule_frame(&mut self, batch: Vec<Request>, total: usize) -> Result<(), ()> {
+        // The scheduled sequence traces under its first request's frame
+        // id.  The span is closed explicitly (not RAII) before the lane
+        // pushes so schedule-end <= every lane-wait begin — the ordering
+        // the per-frame breakdown's sum <= end-to-end bound rests on.
+        let trace_frame = batch[0].trace_frame;
+        trace::begin(trace::STAGE_SCHEDULE, trace_frame, NO_SHARD);
         if self.cfg.failover.enabled {
             self.failover_maintenance();
         }
@@ -1189,6 +1244,7 @@ impl FrameScheduler {
                     // hang) until the worker's rebuild heals the shard.
                     let down = shards - routable.len();
                     let msg = format!("{down} of {shards} shards tripped (modes partition)");
+                    trace::end(trace::STAGE_SCHEDULE, trace_frame, NO_SHARD);
                     fail_batch(batch, &msg, &self.latency);
                     return Ok(());
                 }
@@ -1203,6 +1259,7 @@ impl FrameScheduler {
             }
             Partition::Batch => {
                 if routable.is_empty() {
+                    trace::end(trace::STAGE_SCHEDULE, trace_frame, NO_SHARD);
                     fail_batch(batch, "all shards tripped", &self.latency);
                     return Ok(());
                 }
@@ -1241,16 +1298,21 @@ impl FrameScheduler {
             rows_total: total,
             modes_total: self.modes_total,
             part_dims,
+            trace_frame,
             latency: self.latency.clone(),
         });
+        trace::end(trace::STAGE_SCHEDULE, trace_frame, NO_SHARD);
         for (part, (frames, shard)) in jobs.into_iter().enumerate() {
             self.charge_slots(shard, frames.rows() as u64);
             let job = ShardJob {
                 frames,
                 part,
+                trace_frame,
                 assembly: assembly.clone(),
             };
+            trace::begin(trace::STAGE_LANE_WAIT, trace_frame, shard as u32);
             if self.lanes.push(shard, job).is_err() {
+                trace::end(trace::STAGE_LANE_WAIT, trace_frame, shard as u32);
                 return Err(());
             }
         }
@@ -2094,6 +2156,7 @@ mod tests {
             requests: Mutex::new(vec![Request {
                 frames: tern(1, 0),
                 submitted: Instant::now(),
+                trace_frame: trace::NO_FRAME,
                 reply: tx,
             }]),
             parts: Mutex::new(vec![None, None]),
@@ -2102,6 +2165,7 @@ mod tests {
             rows_total: 1,
             modes_total: 2,
             part_dims: vec![1, 1],
+            trace_frame: trace::NO_FRAME,
             latency: reg.histogram("service_latency"),
         });
         complete_part(&assembly, 0, Err("forced stall failure".into()));

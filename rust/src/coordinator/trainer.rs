@@ -14,20 +14,42 @@
 //! the weight update run in XLA ("silicon"), while the error projection
 //! leaves the digital world through a [`Projector`] device.
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::{Algo, MediumBacking, ProjectorKind, TrainConfig};
 use crate::data::{Dataset, Split};
+use crate::metrics::trace::{self, NO_SHARD};
 use crate::metrics::{CsvWriter, Registry};
 use crate::optics::medium::TransmissionMatrix;
-use crate::optics::stream::{Medium, StreamedMedium};
+use crate::optics::stream::{Medium, StreamedMedium, STREAM_CACHE_HITS, STREAM_CACHE_MISSES};
 use crate::runtime::{Engine, Model};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
 use super::projector::{HloOpticalProjector, Projector};
+
+/// Rolling window for the periodic `--trace` summary line: wall time,
+/// steps, and cache-counter baselines since the last line.
+struct SummaryWindow {
+    t0: Instant,
+    steps: u64,
+    hits0: u64,
+    misses0: u64,
+}
+
+impl SummaryWindow {
+    fn open(metrics: &Registry) -> SummaryWindow {
+        SummaryWindow {
+            t0: Instant::now(),
+            steps: 0,
+            hits0: metrics.counter(STREAM_CACHE_HITS).get(),
+            misses0: metrics.counter(STREAM_CACHE_MISSES).get(),
+        }
+    }
+}
 
 /// Result of one evaluation pass.
 #[derive(Clone, Copy, Debug)]
@@ -270,8 +292,11 @@ impl Trainer {
                 rest[0].data()[0]
             }
             Algo::Optical => {
+                // Trace spans mirror the phase histograms, keyed by the
+                // step index so a step's three phases group in Perfetto.
                 // (1) digital forward → error (+ Eq. 4 ternarization)
                 let t0 = Instant::now();
+                let tr = trace::start();
                 let mut args: Vec<&Tensor> = self.model.params.iter().collect();
                 args.extend([x, yoh, &self.theta_t]);
                 let outs = self.engine.call("fwd_train", &cfgname, &args)?;
@@ -281,16 +306,20 @@ impl Trainer {
                 self.metrics
                     .histogram("phase_fwd_s")
                     .observe(t0.elapsed().as_secs_f64());
+                trace::complete(trace::STAGE_TRAIN_FWD, self.step, NO_SHARD, tr);
                 // (2) light in the loop: the OPU projects the error
                 let t1 = Instant::now();
+                let tr = trace::start();
                 let projector =
                     self.projector.as_mut().context("optical algo needs projector")?;
                 let (p1, p2) = projector.project(&e_t)?;
                 self.metrics
                     .histogram("phase_project_s")
                     .observe(t1.elapsed().as_secs_f64());
+                trace::complete(trace::STAGE_TRAIN_PROJECT, self.step, NO_SHARD, tr);
                 // (3) digital fused DFA + Adam update
                 let t2 = Instant::now();
+                let tr = trace::start();
                 let mut args = self.model.state_refs();
                 args.extend([&t_t, &self.lr_t, x, &h1, &h2, &e, &p1, &p2]);
                 let outs = self.engine.call("dfa_apply", &cfgname, &args)?;
@@ -298,6 +327,7 @@ impl Trainer {
                 self.metrics
                     .histogram("phase_apply_s")
                     .observe(t2.elapsed().as_secs_f64());
+                trace::complete(trace::STAGE_TRAIN_APPLY, self.step, NO_SHARD, tr);
                 loss.data()[0]
             }
         };
@@ -344,18 +374,28 @@ impl Trainer {
         let run_start = Instant::now();
         let mut epochs = Vec::new();
         let step_hist = self.metrics.histogram("step_seconds");
+        let summary_every = self.cfg.summary_every_batches as u64;
+        let mut summary = SummaryWindow::open(&self.metrics);
 
         for epoch in 0..self.cfg.epochs {
             let ep_start = Instant::now();
             let mut loss_sum = 0.0f64;
             let mut steps = 0u64;
             let mut shuffle_rng = self.rng.split();
-            for (x, yoh) in ds.batches(Split::Train, batch, &mut shuffle_rng) {
+            let mut batches = ds.batches(Split::Train, batch, &mut shuffle_rng);
+            // Manual `next()` so the batch fetch itself gets a
+            // `data_load` span (keyed by the step it feeds).
+            loop {
+                let tr = trace::start();
+                let next = batches.next();
+                trace::complete(trace::STAGE_DATA_LOAD, self.step + 1, NO_SHARD, tr);
+                let Some((x, yoh)) = next else { break };
                 let t0 = Instant::now();
                 let loss = self.train_step(&x, &yoh)?;
                 step_hist.observe(t0.elapsed().as_secs_f64());
                 loss_sum += loss as f64;
                 steps += 1;
+                summary.steps += 1;
                 if let Some(csv) = csv.as_mut() {
                     csv.row(&[
                         self.step as f64,
@@ -364,6 +404,10 @@ impl Trainer {
                         run_start.elapsed().as_secs_f64(),
                         self.sim_device_seconds(),
                     ])?;
+                }
+                if summary_every > 0 && trace::enabled() && summary.steps >= summary_every
+                {
+                    summary = self.emit_trace_summary(summary, batch);
                 }
                 if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every as u64 == 0
                 {
@@ -412,6 +456,49 @@ impl Trainer {
             frames: self.step * batch as u64,
             num_params: self.model.num_params(),
         })
+    }
+
+    /// Emit one human-readable telemetry line covering the window since
+    /// `w` opened — frames/s, per-phase p50/p95/p99 (ms), tile-cache
+    /// hit rate — and open the next window.  The phase histograms are
+    /// `reset()` so each line reports fresh windowed percentiles; this
+    /// only runs under `--trace summary|full` with a summary cadence
+    /// configured, so default runs keep their lifetime histograms.
+    fn emit_trace_summary(&self, w: SummaryWindow, batch: usize) -> SummaryWindow {
+        let dt = w.t0.elapsed().as_secs_f64().max(1e-9);
+        let fps = (w.steps * batch as u64) as f64 / dt;
+        let mut line = format!("telemetry: {fps:.1} frames/s");
+        for (label, name) in [
+            ("fwd", "phase_fwd_s"),
+            ("project", "phase_project_s"),
+            ("apply", "phase_apply_s"),
+            ("step", "step_seconds"),
+        ] {
+            let h = self.metrics.histogram(name);
+            if h.count() == 0 {
+                continue;
+            }
+            let _ = write!(
+                line,
+                " | {label} p50/p95/p99 {:.2}/{:.2}/{:.2} ms",
+                h.percentile(50.0) * 1e3,
+                h.percentile(95.0) * 1e3,
+                h.percentile(99.0) * 1e3,
+            );
+            h.reset();
+        }
+        let hits = self.metrics.counter(STREAM_CACHE_HITS).get();
+        let misses = self.metrics.counter(STREAM_CACHE_MISSES).get();
+        let (dh, dm) = (hits - w.hits0, misses - w.misses0);
+        if dh + dm > 0 {
+            let _ = write!(
+                line,
+                " | cache hit {:.1}%",
+                100.0 * dh as f64 / (dh + dm) as f64
+            );
+        }
+        log::info!("{line}");
+        SummaryWindow::open(&self.metrics)
     }
 
     /// Simulated projector-device seconds (0 for fused digital paths).

@@ -24,6 +24,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
+use crate::metrics::trace::{self, NO_FRAME, NO_SHARD, NO_TOKEN};
 use crate::metrics::{Counter, Registry};
 
 use super::queue::{BoundedQueue, TryPushError};
@@ -95,13 +96,22 @@ impl Shared {
     /// running jobs are the submitters' responsibility: `submit` helps
     /// on a full queue and workers drain the rest).
     fn help_then_park(&self, tally: &Tally) {
+        // One self-timed `pool_park` span covers this call's wait phase
+        // (from the first blocked iteration until the tally drains); a
+        // call that never blocks never touches the tracer.
+        let mut park = NO_TOKEN;
         loop {
             while let Some(job) = self.queue.try_pop() {
                 self.run_job(job);
             }
             let c = tally.count.lock().unwrap_or_else(PoisonError::into_inner);
             if *c == 0 {
+                drop(c);
+                trace::complete(trace::STAGE_POOL_PARK, NO_FRAME, NO_SHARD, park);
                 return;
+            }
+            if park == NO_TOKEN {
+                park = trace::start();
             }
             // Park briefly; the 1 ms timeout bounds how long we go
             // without re-checking the queue, since a running job may
@@ -111,6 +121,8 @@ impl Shared {
                 .wait_timeout(c, std::time::Duration::from_millis(1))
                 .unwrap_or_else(PoisonError::into_inner);
             if *guard == 0 {
+                drop(guard);
+                trace::complete(trace::STAGE_POOL_PARK, NO_FRAME, NO_SHARD, park);
                 return;
             }
         }

@@ -15,6 +15,8 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Duration;
 
+use crate::metrics::trace::{self, NO_FRAME, NO_SHARD, NO_TOKEN};
+
 struct Inner<T> {
     queue: Mutex<State<T>>,
     not_full: Condvar,
@@ -67,16 +69,26 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Blocking push; returns `Err(Closed)` if the queue is closed.
+    ///
+    /// A push that actually blocks records a `queue_push_wait` trace
+    /// span (self-timed, opened on the first blocked iteration); the
+    /// uncontended fast path does not touch the tracer at all.
     pub fn push(&self, item: T) -> Result<(), Closed> {
         let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut wait = NO_TOKEN;
         loop {
             if st.closed {
+                trace::complete(trace::STAGE_QUEUE_PUSH_WAIT, NO_FRAME, NO_SHARD, wait);
                 return Err(Closed);
             }
             if st.items.len() < self.inner.capacity {
                 st.items.push_back(item);
                 self.inner.not_empty.notify_one();
+                trace::complete(trace::STAGE_QUEUE_PUSH_WAIT, NO_FRAME, NO_SHARD, wait);
                 return Ok(());
+            }
+            if wait == NO_TOKEN {
+                wait = trace::start();
             }
             st = self
                 .inner
@@ -87,15 +99,24 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Blocking pop; `None` once closed AND drained.
+    ///
+    /// Like [`push`](BoundedQueue::push), a pop that blocks records a
+    /// self-timed `queue_pop_wait` span.
     pub fn pop(&self) -> Option<T> {
         let mut st = self.inner.queue.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut wait = NO_TOKEN;
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.inner.not_full.notify_one();
+                trace::complete(trace::STAGE_QUEUE_POP_WAIT, NO_FRAME, NO_SHARD, wait);
                 return Some(item);
             }
             if st.closed {
+                trace::complete(trace::STAGE_QUEUE_POP_WAIT, NO_FRAME, NO_SHARD, wait);
                 return None;
+            }
+            if wait == NO_TOKEN {
+                wait = trace::start();
             }
             st = self
                 .inner

@@ -214,6 +214,39 @@
 //! clients, a mid-run shard kill, zero hangs, degraded throughput
 //! gated against the healthy baseline in the CI `loadgen-smoke` job
 //! (`E7_DEGRADED_MIN_FRAC`).
+//!
+//! ## Observability (frame-level tracing & telemetry export)
+//!
+//! Every frame's life — admit, queue wait, schedule, lane wait,
+//! per-shard project, gather — and every trainer step's phase split
+//! (forward vs optical projection vs DFA+Adam apply vs data load) is
+//! traceable end to end.  [`metrics::trace`] is the substrate: a
+//! process-global session ([`metrics::trace::TraceSession`]) over
+//! bounded per-thread span rings, gated by one atomic load so `--trace
+//! off` (the default) costs a few relaxed atomics and keeps pinned
+//! schedules bitwise-unchanged.  `--trace summary` turns on cheap
+//! profiling histograms (`stream_gen_ns` / `stream_cache_hit_ns` tile
+//! generation vs cache-hit latency in [`optics::stream`]) and periodic
+//! per-stage p50/p95/p99 summary lines from the trainer; `--trace
+//! full` additionally records span events, drained at session end into
+//! a [`metrics::trace::TraceReport`] with per-frame stage breakdowns
+//! ([`metrics::trace::FrameBreakdown`]) whose critical-path stage sum
+//! never exceeds the frame's end-to-end latency.  Spans survive
+//! failover re-routes (lane-wait hand-off between shards) and ring
+//! overflow degrades to counted drops, never corruption.
+//!
+//! [`metrics::export`] turns the same data into standard formats:
+//! Chrome `trace_event` JSON (`--trace-out trace.json`, loadable in
+//! Perfetto / `chrome://tracing`, one timeline row per pipeline
+//! thread) and Prometheus text exposition of the full
+//! [`metrics::Registry`] — counters, gauges, and histograms rendered
+//! as monotone cumulative `_bucket{le=...}` series — on `--metrics-out
+//! FILE` at exit.  Both emitters are pure functions over the report /
+//! registry, so tests and the CI `trace-smoke` job validate the bytes
+//! (jq-parsed Chrome JSON, collision-free Prometheus names) without a
+//! browser in the loop; `rust/tests/trace_spans.rs` pins span balance,
+//! the breakdown-vs-latency bound, overflow behaviour, and that
+//! tracing on vs off leaves pinned schedules bitwise identical.
 #![allow(clippy::needless_range_loop)]
 
 pub mod bench;

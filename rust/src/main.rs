@@ -25,7 +25,8 @@ const TRAIN_FLAGS: &[&str] = &[
     "config", "projector", "set", "artifacts", "out-dir", "eval-every",
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
     "partition", "medium", "topology", "tile-cache-mb", "tile-cache-stripes",
-    "adapt-weights", "failover", "admit-rate-fps",
+    "adapt-weights", "failover", "admit-rate-fps", "trace", "trace-out",
+    "metrics-out",
 ];
 
 fn main() {
@@ -129,6 +130,15 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
         // share one validation path.
         cfg.set_kv(&format!("admit_rate_fps={r}"))?;
     }
+    if let Some(l) = args.flag("trace") {
+        cfg.set_kv(&format!("trace={l}"))?;
+    }
+    if let Some(p) = args.flag("trace-out") {
+        cfg.set_kv(&format!("trace_out={p}"))?;
+    }
+    if let Some(p) = args.flag("metrics-out") {
+        cfg.set_kv(&format!("metrics_out={p}"))?;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -187,7 +197,32 @@ fn cmd_train(args: &Args) -> Result<()> {
         ds.len(Split::Test)
     );
     let mut trainer = Trainer::new(cfg.clone())?;
-    let report = trainer.run(&ds)?;
+    // Install the trace session around the whole run so every pipeline
+    // thread (packer, shard workers, trainer loop) shares one clock.
+    let session = litl::metrics::trace::TraceSession::begin(
+        cfg.trace,
+        litl::metrics::trace::TraceClock::wall(),
+        cfg.trace_ring_events,
+    );
+    let run = trainer.run(&ds);
+    // Uninstall and drain even when the run errored, so a failed run
+    // still leaves the process trace-free (and the buffers reclaimed).
+    let trace_report = session.finish();
+    let report = run?;
+    if let Some(path) = &cfg.trace_out {
+        litl::metrics::export::write_chrome_trace(path, &trace_report)?;
+        log::info!(
+            "chrome trace written to {path}: {} spans across {} threads \
+             ({} events dropped)",
+            trace_report.spans.len(),
+            trace_report.threads,
+            trace_report.dropped
+        );
+    }
+    if let Some(path) = &cfg.metrics_out {
+        litl::metrics::export::write_prometheus(path, trainer.metrics())?;
+        log::info!("prometheus metrics written to {path}");
+    }
     println!(
         "\n{} (lr={}): final test accuracy {:.2}%  ({} params)",
         report.algo.name(),
@@ -388,6 +423,20 @@ COMMANDS:
                                     frames/s (token bucket; 0 = off);
                                     tune admit_burst / admit_max_wait_ms
                                     via --set
+          --trace off|summary|full  frame-level tracing (default off =
+                                    zero overhead, pinned schedules stay
+                                    bitwise): summary enables profiling
+                                    histograms + periodic p50/p95/p99
+                                    lines (cadence via --set
+                                    summary_every_batches=N), full also
+                                    records per-span events
+          --trace-out FILE          write recorded spans as Chrome
+                                    trace_event JSON at exit (load in
+                                    Perfetto / chrome://tracing;
+                                    requires --trace full)
+          --metrics-out FILE        dump the metrics registry in
+                                    Prometheus text exposition format at
+                                    exit (any trace level)
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)

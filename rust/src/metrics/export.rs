@@ -1,0 +1,312 @@
+//! Telemetry exporters: Chrome `trace_event` JSON and Prometheus text.
+//!
+//! Two operator-facing formats, both built on in-tree primitives
+//! (`util::json`; no third-party serializers):
+//!
+//! * [`chrome_trace_json`] — a drained [`TraceReport`] as the Chrome
+//!   tracing / Perfetto `trace_event` format: one complete (`"ph":"X"`)
+//!   event per span, microsecond `ts`/`dur`, the session-local thread
+//!   index as `tid`, and `frame`/`shard` in `args`.  Load the file at
+//!   `ui.perfetto.dev` (or `chrome://tracing`) to see the pipeline.
+//! * [`prometheus_text`] — the full metrics [`Registry`] in Prometheus
+//!   text exposition: counters and gauges verbatim, histograms as
+//!   cumulative `_bucket{le="..."}` lines (bounds at the recent-window
+//!   p50/p90/p95/p99/max) plus `_sum`/`_count`.  Values are NaN-free
+//!   by construction and name collisions are skipped, not emitted.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+use crate::metrics::trace::{TraceReport, NO_FRAME, NO_SHARD};
+use crate::metrics::{Histogram, Registry};
+use crate::util::json::{self, Json};
+
+/// Render a drained trace as Chrome `trace_event` JSON.
+pub fn chrome_trace_json(report: &TraceReport) -> String {
+    let events: Vec<Json> = report
+        .spans
+        .iter()
+        .map(|s| {
+            let frame = if s.frame == NO_FRAME { -1.0 } else { s.frame as f64 };
+            let shard = if s.shard == NO_SHARD { -1.0 } else { s.shard as f64 };
+            json::obj(vec![
+                ("name", Json::Str(s.stage.to_string())),
+                ("cat", Json::Str("litl".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(s.tid as f64)),
+                ("ts", Json::Num(s.start_ns as f64 / 1e3)),
+                ("dur", Json::Num(s.dur_ns as f64 / 1e3)),
+                (
+                    "args",
+                    json::obj(vec![
+                        ("frame", Json::Num(frame)),
+                        ("shard", Json::Num(shard)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(events)),
+        (
+            "otherData",
+            json::obj(vec![
+                ("dropped", Json::Num(report.dropped as f64)),
+                (
+                    "unmatched_begins",
+                    Json::Num(report.unmatched_begins as f64),
+                ),
+                ("unmatched_ends", Json::Num(report.unmatched_ends as f64)),
+                ("threads", Json::Num(report.threads as f64)),
+            ]),
+        ),
+    ])
+    .to_string_compact()
+}
+
+/// Write [`chrome_trace_json`] to `path`, creating parent directories.
+pub fn write_chrome_trace(path: &str, report: &TraceReport) -> crate::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(report))?;
+    Ok(())
+}
+
+/// Finite-or-zero: exposition output must never contain NaN/inf.
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+/// Claim `names` against the emitted set; false (and no claim) if any
+/// collides.  Guards against e.g. a counter named `foo_count` clashing
+/// with histogram `foo`'s derived `_count` line.
+fn claim(seen: &mut BTreeSet<String>, names: &[String]) -> bool {
+    if names.iter().any(|n| seen.contains(n)) {
+        return false;
+    }
+    for n in names {
+        seen.insert(n.clone());
+    }
+    true
+}
+
+fn write_histogram(out: &mut String, name: &str, h: &Histogram) {
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut window = h.window();
+    window.sort_by(f64::total_cmp);
+    let count = h.count();
+    // Bucket bounds from the recent window's percentile grid (the
+    // ring holds the newest RING samples, so finite buckets describe
+    // the recent window; the +Inf bucket carries the lifetime count —
+    // cumulative counts stay monotone because window_len <= count).
+    let mut emitted_bounds: BTreeSet<String> = BTreeSet::new();
+    if !window.is_empty() {
+        for q in [50.0, 90.0, 95.0, 99.0, 100.0] {
+            let bound = crate::util::stats::percentile(&window, q);
+            let label = format!("{}", finite(bound));
+            if !emitted_bounds.insert(label.clone()) {
+                continue; // duplicate le label: already covered
+            }
+            let cum = window.iter().filter(|&&x| x <= bound).count();
+            let _ = writeln!(out, "{name}_bucket{{le=\"{label}\"}} {cum}");
+        }
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {count}");
+    let _ = writeln!(out, "{name}_sum {}", finite(h.sum()));
+    let _ = writeln!(out, "{name}_count {count}");
+}
+
+/// Render the full registry as Prometheus text exposition.
+pub fn prometheus_text(registry: &Registry) -> String {
+    let mut out = String::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for (name, c) in registry.counters() {
+        if !claim(&mut seen, std::slice::from_ref(&name)) {
+            let _ = writeln!(out, "# skipped duplicate {name}");
+            continue;
+        }
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {}", c.get());
+    }
+    for (name, g) in registry.gauges() {
+        if !claim(&mut seen, std::slice::from_ref(&name)) {
+            let _ = writeln!(out, "# skipped duplicate {name}");
+            continue;
+        }
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {}", finite(g.get()));
+    }
+    for (name, h) in registry.histograms() {
+        let derived = [
+            name.clone(),
+            format!("{name}_bucket"),
+            format!("{name}_sum"),
+            format!("{name}_count"),
+        ];
+        if !claim(&mut seen, &derived) {
+            let _ = writeln!(out, "# skipped duplicate {name}");
+            continue;
+        }
+        write_histogram(&mut out, &name, &h);
+    }
+    out
+}
+
+/// Write [`prometheus_text`] to `path`, creating parent directories.
+pub fn write_prometheus(path: &str, registry: &Registry) -> crate::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, prometheus_text(registry))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::CompletedSpan;
+
+    fn sample_report() -> TraceReport {
+        TraceReport {
+            spans: vec![
+                CompletedSpan {
+                    stage: "schedule",
+                    frame: 1,
+                    shard: NO_SHARD,
+                    tid: 0,
+                    start_ns: 1_000,
+                    dur_ns: 5_000,
+                },
+                CompletedSpan {
+                    stage: "project",
+                    frame: 1,
+                    shard: 2,
+                    tid: 3,
+                    start_ns: 7_500,
+                    dur_ns: 2_500,
+                },
+            ],
+            unmatched_begins: 0,
+            unmatched_ends: 0,
+            dropped: 4,
+            threads: 4,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_well_formed_and_loadable_shape() {
+        let text = chrome_trace_json(&sample_report());
+        let doc = Json::parse(&text).expect("emitted JSON must parse");
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        for ev in events {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            for key in ["pid", "tid", "ts", "dur"] {
+                assert!(
+                    ev.get(key).and_then(Json::as_f64).is_some(),
+                    "missing numeric {key}"
+                );
+            }
+            assert!(ev.get("name").and_then(Json::as_str).is_some());
+        }
+        // Microsecond conversion: 5_000 ns span -> dur 5 us.
+        assert_eq!(events[0].get("dur").and_then(Json::as_f64), Some(5.0));
+        // Shard sentinel becomes -1, real shard passes through.
+        let args = events[1].get("args").unwrap();
+        assert_eq!(args.get("shard").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            doc.get("otherData")
+                .and_then(|o| o.get("dropped"))
+                .and_then(Json::as_f64),
+            Some(4.0)
+        );
+    }
+
+    #[test]
+    fn prometheus_dump_round_trips_every_metric_without_collisions() {
+        let reg = Registry::new();
+        reg.counter("service_frames").add(42);
+        reg.gauge("service_queue_depth").set(3.5);
+        let h = reg.histogram("service_latency");
+        for i in 1..=100 {
+            h.observe(i as f64 / 1000.0);
+        }
+        reg.histogram("stream_gen_ns"); // registered but empty
+        let text = prometheus_text(&reg);
+        assert!(text.contains("# TYPE service_frames counter"));
+        assert!(text.contains("service_frames 42"));
+        assert!(text.contains("# TYPE service_queue_depth gauge"));
+        assert!(text.contains("service_queue_depth 3.5"));
+        assert!(text.contains("# TYPE service_latency histogram"));
+        assert!(text.contains("service_latency_count 100"));
+        // Empty histogram: well-formed, zero-valued, NaN-free.
+        assert!(text.contains("stream_gen_ns_bucket{le=\"+Inf\"} 0"));
+        assert!(text.contains("stream_gen_ns_count 0"));
+        assert!(!text.contains("NaN") && !text.contains("inf"));
+
+        // Every exposed base name is unique.
+        let mut names = BTreeSet::new();
+        for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let name = line.split_whitespace().nth(2).unwrap();
+            assert!(names.insert(name.to_string()), "duplicate {name}");
+        }
+        // Histogram bucket lines are cumulative-monotone and end +Inf.
+        let buckets: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("service_latency_bucket"))
+            .collect();
+        assert!(buckets.len() >= 2);
+        let counts: Vec<f64> = buckets
+            .iter()
+            .map(|l| l.split_whitespace().last().unwrap().parse().unwrap())
+            .collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+        assert!(buckets.last().unwrap().contains("le=\"+Inf\""));
+    }
+
+    #[test]
+    fn colliding_names_are_skipped_not_duplicated() {
+        let reg = Registry::new();
+        reg.counter("x").inc();
+        reg.gauge("x").set(2.0);
+        // Histogram whose derived `_count` collides with a counter.
+        reg.counter("lat_count").add(9);
+        reg.histogram("lat").observe(1.0);
+        let text = prometheus_text(&reg);
+        // The counter won the name; the gauge was skipped.
+        assert_eq!(
+            text.lines().filter(|l| l.starts_with("# TYPE x ")).count(),
+            1
+        );
+        assert!(text.contains("# skipped duplicate x"));
+        // The histogram lost to `lat_count` and emitted nothing.
+        assert!(text.contains("# skipped duplicate lat"));
+        assert!(!text.contains("# TYPE lat histogram"));
+    }
+
+    #[test]
+    fn non_finite_gauges_are_sanitized() {
+        let reg = Registry::new();
+        reg.gauge("weird").set(f64::NAN);
+        reg.gauge("hot").set(f64::INFINITY);
+        let text = prometheus_text(&reg);
+        assert!(text.contains("weird 0"));
+        assert!(text.contains("hot 0"));
+        assert!(!text.contains("NaN"));
+    }
+}

@@ -8,6 +8,11 @@
 //! * `snapshot()` → flat name→value map (logged / asserted in tests)
 //! * [`CsvWriter`] → one row per step for loss curves (EXPERIMENTS.md)
 //! * JSONL via `crate::util::json` for experiment records.
+//! * [`trace`] → frame-level span tracing (begin/end per pipeline stage)
+//! * [`export`] → Chrome `trace_event` JSON and Prometheus text dumps
+
+pub mod export;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -110,12 +115,40 @@ impl Histogram {
     }
 
     /// Percentile over the recent window.
+    ///
+    /// An empty histogram reports `0.0` — a well-defined, NaN-free
+    /// value.  The previous `f64::NAN` poisoned every downstream
+    /// consumer that compared or exported the number (NaN fails all
+    /// comparisons silently and is not valid Prometheus output).
     pub fn percentile(&self, q: f64) -> f64 {
         let h = self.lock();
         if h.ring.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         crate::util::stats::percentile(&h.ring, q)
+    }
+
+    /// Sum of all observed values (`mean * count`; exact enough for
+    /// exposition — Welford tracks the mean in f64).
+    pub fn sum(&self) -> f64 {
+        let h = self.lock();
+        h.welford.mean() * h.welford.count() as f64
+    }
+
+    /// Copy of the recent-window samples (insertion order, unsorted).
+    pub fn window(&self) -> Vec<f64> {
+        self.lock().ring.clone()
+    }
+
+    /// Clear all state — count, moments and the percentile window —
+    /// so the histogram starts a fresh window.  Used by the periodic
+    /// telemetry summary to report per-window (not lifetime)
+    /// percentiles.
+    pub fn reset(&self) {
+        let mut h = self.lock();
+        h.welford = Welford::default();
+        h.ring.clear();
+        h.pos = 0;
     }
 }
 
@@ -188,6 +221,39 @@ impl Registry {
             .filter(|(name, _)| name_matches(name, prefix, suffix))
             .map(|(_, g)| g.get())
             .sum()
+    }
+
+    /// Every registered counter, sorted by name (handles share state
+    /// with the registry — reading them later sees live values).  The
+    /// enumeration views exist for exporters ([`export::prometheus_text`]
+    /// dumps the full registry) without exposing the inner maps.
+    pub fn counters(&self) -> Vec<(String, Counter)> {
+        let inner = self.lock();
+        inner
+            .counters
+            .iter()
+            .map(|(n, c)| (n.clone(), c.clone()))
+            .collect()
+    }
+
+    /// Every registered gauge, sorted by name.
+    pub fn gauges(&self) -> Vec<(String, Gauge)> {
+        let inner = self.lock();
+        inner
+            .gauges
+            .iter()
+            .map(|(n, g)| (n.clone(), g.clone()))
+            .collect()
+    }
+
+    /// Every registered histogram, sorted by name.
+    pub fn histograms(&self) -> Vec<(String, Histogram)> {
+        let inner = self.lock();
+        inner
+            .histograms
+            .iter()
+            .map(|(n, h)| (n.clone(), h.clone()))
+            .collect()
     }
 
     /// Flat snapshot of every metric (histograms expand to _mean/_p50/...).
@@ -371,6 +437,60 @@ mod tests {
         .join();
         reg.counter("alive").inc();
         assert_eq!(reg.snapshot()["alive"], 2.0);
+    }
+
+    #[test]
+    fn empty_histogram_percentile_is_zero_not_nan() {
+        // Satellite fix: an empty window used to return f64::NAN, which
+        // silently fails every comparison and is not valid exposition
+        // output.  Empty must be a well-defined 0.0 at any quantile.
+        let h = Histogram::default();
+        for q in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let p = h.percentile(q);
+            assert_eq!(p, 0.0, "empty percentile({q}) must be 0.0, got {p}");
+            assert!(!p.is_nan());
+        }
+        assert_eq!(h.sum(), 0.0);
+        assert!(h.window().is_empty());
+    }
+
+    #[test]
+    fn histogram_reset_starts_a_fresh_window() {
+        let h = Histogram::default();
+        for i in 1..=10 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 10);
+        assert!((h.sum() - 55.0).abs() < 1e-9);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert!(h.window().is_empty());
+        // The handle keeps working after reset — and the ring position
+        // restarts, so the new window is exactly the new samples.
+        h.observe(7.0);
+        h.observe(9.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.window(), vec![7.0, 9.0]);
+        assert!((h.mean() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn registry_enumeration_matches_registrations() {
+        let reg = Registry::new();
+        reg.counter("b_ctr").add(2);
+        reg.counter("a_ctr").inc();
+        reg.gauge("g").set(1.5);
+        reg.histogram("h").observe(3.0);
+        let names: Vec<String> =
+            reg.counters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a_ctr".to_string(), "b_ctr".to_string()]);
+        assert_eq!(reg.gauges().len(), 1);
+        assert_eq!(reg.histograms().len(), 1);
+        // Handles are live views, not copies.
+        let (_, c) = &reg.counters()[0];
+        c.inc();
+        assert_eq!(reg.counter("a_ctr").get(), 2);
     }
 
     #[test]

@@ -1,0 +1,776 @@
+//! Frame-level span tracing through the serving pipeline.
+//!
+//! A *span* is one pipeline stage of one frame on one shard —
+//! `begin/end(stage, frame_id, shard)` — recorded into bounded
+//! per-thread buffers and drained by a collector into completed spans
+//! plus a per-frame stage breakdown.  The design goals, in order:
+//!
+//! 1. **Zero behavior change when off.**  The pinned determinism suites
+//!    (`service_schedule`, `stream_parity`, `topology`, `farm_parity`)
+//!    must stay bitwise-identical with tracing disabled, and the
+//!    disabled fast path must cost a few relaxed atomic loads — no
+//!    locks, no clock reads, no allocation.
+//! 2. **Lock-light when on.**  Each emitting thread owns its buffer
+//!    (one uncontended mutex per event); the only shared state touched
+//!    per event is the level atomic and, on first emit per thread per
+//!    session, a registration lock.
+//! 3. **Bounded.**  Buffers cap at `ring_events` events per thread;
+//!    overflow drops the event and counts it — the drain stays
+//!    well-formed no matter how long a session runs.
+//!
+//! Timestamps come from a [`TraceClock`]: wall monotonic
+//! ([`std::time::Instant`]) for live serving, or a [`SimClock`] so
+//! simulated-time experiments trace on the same axis their devices
+//! charge.  Sessions are process-global ([`TraceSession::begin`]
+//! installs one; instrumentation points call the free functions) so
+//! deep layers — the bounded queue, the thread pool — need no handle
+//! threading.  `finish()` drains every buffer into a [`TraceReport`].
+//!
+//! Stage taxonomy for the serving path (`coordinator::service`):
+//! `request` (client submit → reply) envelopes `admit` → `queue_wait`
+//! → `schedule` → `lane_wait` → `project` (per shard) → `gather`.
+//! The breakdown attributes `lane_wait`/`project` to the critical
+//! shard (the one maximizing their chained duration), so per-frame
+//! stage times always sum within the end-to-end request latency.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::sim::clock::SimClock;
+
+/// Sentinel frame id for events not attributable to one frame
+/// (queue/pool internals, or emission while tracing was off).
+pub const NO_FRAME: u64 = u64::MAX;
+/// Sentinel shard id for stages that are not shard-local.
+pub const NO_SHARD: u32 = u32::MAX;
+/// Sentinel start token returned by [`start`] when recording is off.
+pub const NO_TOKEN: u64 = u64::MAX;
+
+// Serving-pipeline stages (see module docs for the ordering contract).
+pub const STAGE_REQUEST: &str = "request";
+pub const STAGE_ADMIT: &str = "admit";
+pub const STAGE_QUEUE_WAIT: &str = "queue_wait";
+pub const STAGE_SCHEDULE: &str = "schedule";
+pub const STAGE_LANE_WAIT: &str = "lane_wait";
+pub const STAGE_PROJECT: &str = "project";
+pub const STAGE_GATHER: &str = "gather";
+// Execution-layer waits (no frame attribution).
+pub const STAGE_QUEUE_PUSH_WAIT: &str = "queue_push_wait";
+pub const STAGE_QUEUE_POP_WAIT: &str = "queue_pop_wait";
+pub const STAGE_POOL_PARK: &str = "pool_park";
+// Trainer step-loop stages (frame = step index).
+pub const STAGE_TRAIN_FWD: &str = "train_fwd";
+pub const STAGE_TRAIN_PROJECT: &str = "train_project";
+pub const STAGE_TRAIN_APPLY: &str = "train_apply";
+pub const STAGE_DATA_LOAD: &str = "data_load";
+
+/// How much the tracer does: `Off` (default) is a few atomics,
+/// `Summary` enables the profiling hooks (per-stage histograms and the
+/// periodic summary line) without buffering events, `Full` additionally
+/// records span events for the Chrome-trace export.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+#[repr(u8)]
+pub enum TraceLevel {
+    #[default]
+    Off = 0,
+    Summary = 1,
+    Full = 2,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "summary" => Ok(TraceLevel::Summary),
+            "full" => Ok(TraceLevel::Full),
+            other => bail!("trace level must be off|summary|full, got '{other}'"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Summary => "summary",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+/// Monotonic time source for span timestamps: wall time anchored at
+/// session start, or a shared [`SimClock`] (nanosecond-granular
+/// simulated time) so traces line up with device-charged time.
+#[derive(Clone)]
+pub enum TraceClock {
+    Wall(Instant),
+    Sim(SimClock),
+}
+
+impl TraceClock {
+    /// Wall clock anchored now (timestamps are ns since this call).
+    pub fn wall() -> Self {
+        TraceClock::Wall(Instant::now())
+    }
+
+    pub fn sim(clock: SimClock) -> Self {
+        TraceClock::Sim(clock)
+    }
+
+    fn now_ns(&self) -> u64 {
+        match self {
+            TraceClock::Wall(epoch) => epoch.elapsed().as_nanos() as u64,
+            TraceClock::Sim(c) => (c.now_secs() * 1e9).round() as u64,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    // Pairing order for equal timestamps: a begin sorts before the
+    // complete/end it encloses.
+    Begin = 0,
+    Complete = 1,
+    End = 2,
+}
+
+/// One raw ring-buffer entry.  `dur_ns` is meaningful only for
+/// `Complete` events (single-thread spans measured at the emit site);
+/// `Begin`/`End` pairs are matched by the collector, possibly across
+/// threads (e.g. `lane_wait`: begun by the scheduler, ended by the
+/// shard worker that pops the job).
+#[derive(Clone, Copy, Debug)]
+struct SpanEvent {
+    stage: &'static str,
+    frame: u64,
+    shard: u32,
+    tid: u32,
+    t_ns: u64,
+    dur_ns: u64,
+    kind: EventKind,
+}
+
+struct SpanBuffer {
+    tid: u32,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+struct SessionInner {
+    level: TraceLevel,
+    clock: TraceClock,
+    ring_events: usize,
+    generation: u64,
+    buffers: Mutex<Vec<Arc<SpanBuffer>>>,
+    next_frame: AtomicU64,
+    next_tid: AtomicU32,
+    dropped: AtomicU64,
+}
+
+/// Fast-path gate: the *only* state the disabled path touches.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+/// Session generation — bumped on begin *and* finish so thread-local
+/// buffer caches from a previous session never leak into the next.
+static GENERATION: AtomicU64 = AtomicU64::new(0);
+static ACTIVE: Mutex<Option<Arc<SessionInner>>> = Mutex::new(None);
+
+struct TlsSlot {
+    generation: u64,
+    session: Arc<SessionInner>,
+    buffer: Arc<SpanBuffer>,
+}
+
+thread_local! {
+    static TLS: RefCell<Option<TlsSlot>> = const { RefCell::new(None) };
+}
+
+fn lock_active() -> MutexGuard<'static, Option<Arc<SessionInner>>> {
+    // Poison-tolerant, like every lock in the serving path: a panicking
+    // emitter must not disable telemetry for the rest of the process.
+    ACTIVE.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// True when any tracing is on (`summary` or `full`) — gates the
+/// profiling hooks (histogram observation, summary lines).
+#[inline]
+pub fn enabled() -> bool {
+    LEVEL.load(Ordering::Relaxed) != 0
+}
+
+/// True when span events are being recorded (`full` only).
+#[inline]
+pub fn recording() -> bool {
+    LEVEL.load(Ordering::Relaxed) == TraceLevel::Full as u8
+}
+
+/// Run `f` with the calling thread's buffer for the active session,
+/// registering one on first use.  Returns `None` when no session is
+/// active (or it changed between the level check and here — benign
+/// race: the event is simply not recorded).
+fn with_session<R>(f: impl FnOnce(&SessionInner, &SpanBuffer) -> R) -> Option<R> {
+    TLS.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let gen_now = GENERATION.load(Ordering::Acquire);
+        let stale = match slot.as_ref() {
+            Some(s) => s.generation != gen_now,
+            None => true,
+        };
+        if stale {
+            let active = lock_active();
+            match active.as_ref() {
+                Some(inner) if inner.generation == gen_now => {
+                    let tid = inner.next_tid.fetch_add(1, Ordering::Relaxed);
+                    let buffer = Arc::new(SpanBuffer {
+                        tid,
+                        events: Mutex::new(Vec::new()),
+                    });
+                    inner
+                        .buffers
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .push(buffer.clone());
+                    *slot = Some(TlsSlot {
+                        generation: gen_now,
+                        session: inner.clone(),
+                        buffer,
+                    });
+                }
+                _ => {
+                    *slot = None;
+                    return None;
+                }
+            }
+        }
+        let s = slot.as_ref().expect("slot populated above");
+        Some(f(&s.session, &s.buffer))
+    })
+}
+
+fn push_event(session: &SessionInner, buffer: &SpanBuffer, ev: SpanEvent) {
+    let mut events = buffer
+        .events
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner);
+    if events.len() >= session.ring_events {
+        session.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    events.push(ev);
+}
+
+fn record(stage: &'static str, frame: u64, shard: u32, kind: EventKind) {
+    with_session(|session, buffer| {
+        let t_ns = session.clock.now_ns();
+        push_event(
+            session,
+            buffer,
+            SpanEvent {
+                stage,
+                frame,
+                shard,
+                tid: buffer.tid,
+                t_ns,
+                dur_ns: 0,
+                kind,
+            },
+        );
+    });
+}
+
+/// Next frame id for a new request, or [`NO_FRAME`] when tracing is
+/// off.  Ids are session-scoped, dense from 1.
+pub fn next_frame() -> u64 {
+    if !enabled() {
+        return NO_FRAME;
+    }
+    with_session(|session, _| session.next_frame.fetch_add(1, Ordering::Relaxed) + 1)
+        .unwrap_or(NO_FRAME)
+}
+
+/// Open a span.  Must be paired with [`end`] on the same
+/// `(stage, frame, shard)` key — the pair may close on another thread.
+#[inline]
+pub fn begin(stage: &'static str, frame: u64, shard: u32) {
+    if !recording() {
+        return;
+    }
+    record(stage, frame, shard, EventKind::Begin);
+}
+
+/// Close a span opened by [`begin`].
+#[inline]
+pub fn end(stage: &'static str, frame: u64, shard: u32) {
+    if !recording() {
+        return;
+    }
+    record(stage, frame, shard, EventKind::End);
+}
+
+/// Start token for a single-thread span; pass to [`complete`].  Costs
+/// one atomic load when recording is off.
+#[inline]
+pub fn start() -> u64 {
+    if !recording() {
+        return NO_TOKEN;
+    }
+    with_session(|session, _| session.clock.now_ns()).unwrap_or(NO_TOKEN)
+}
+
+/// Record a completed span from a [`start`] token.  Never dangles:
+/// the event carries its own duration, so it cannot unbalance a drain
+/// (used for waits that may still be open when a session ends).
+#[inline]
+pub fn complete(stage: &'static str, frame: u64, shard: u32, token: u64) {
+    if token == NO_TOKEN || !recording() {
+        return;
+    }
+    with_session(|session, buffer| {
+        let now = session.clock.now_ns();
+        push_event(
+            session,
+            buffer,
+            SpanEvent {
+                stage,
+                frame,
+                shard,
+                tid: buffer.tid,
+                t_ns: token,
+                dur_ns: now.saturating_sub(token),
+                kind: EventKind::Complete,
+            },
+        );
+    });
+}
+
+/// A completed (begin..end or self-timed) span.
+#[derive(Clone, Copy, Debug)]
+pub struct CompletedSpan {
+    pub stage: &'static str,
+    pub frame: u64,
+    pub shard: u32,
+    /// Session-local thread index of the *opening* event.
+    pub tid: u32,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// Per-frame stage breakdown; see [`TraceReport::frame_breakdown`].
+#[derive(Clone, Debug, Default)]
+pub struct FrameBreakdown {
+    /// Stage → attributed nanoseconds (critical-shard attribution for
+    /// `lane_wait`/`project`, duration sums for the serial stages).
+    pub stages: BTreeMap<&'static str, u64>,
+    /// End-to-end `request` span duration, when the frame has one.
+    pub e2e_ns: Option<u64>,
+}
+
+impl FrameBreakdown {
+    /// Sum of the attributed stage times.  By construction this is
+    /// `<= e2e_ns` for a frame whose stages were recorded within its
+    /// request span (the pipeline runs them sequentially and the
+    /// parallel shard legs are critical-path attributed).
+    pub fn stage_sum_ns(&self) -> u64 {
+        self.stages.values().sum()
+    }
+}
+
+/// Everything a drained session knows.
+#[derive(Debug, Default)]
+pub struct TraceReport {
+    pub spans: Vec<CompletedSpan>,
+    /// `begin` events that never saw a matching `end`.
+    pub unmatched_begins: u64,
+    /// `end` events with no open `begin` (e.g. its begin was dropped
+    /// by a full buffer).
+    pub unmatched_ends: u64,
+    /// Events dropped because a per-thread buffer hit `ring_events`.
+    pub dropped: u64,
+    /// Emitting threads observed by the session.
+    pub threads: u32,
+}
+
+impl TraceReport {
+    /// Every begin had an end and vice versa.
+    pub fn is_balanced(&self) -> bool {
+        self.unmatched_begins == 0 && self.unmatched_ends == 0
+    }
+
+    /// Group spans by frame and attribute stage time.
+    ///
+    /// `lane_wait` and `project` run once per shard leg and the legs
+    /// run in parallel, so summing them across shards would exceed
+    /// wall time.  Instead the breakdown picks the *critical* shard —
+    /// the one maximizing `lane_wait + project` — and reports its two
+    /// legs; every other stage (which runs serially for a frame) is
+    /// summed.  The result: stage times sum within the `request` span.
+    pub fn frame_breakdown(&self) -> BTreeMap<u64, FrameBreakdown> {
+        let mut out: BTreeMap<u64, FrameBreakdown> = BTreeMap::new();
+        // Per frame, per shard: (lane_wait, project) accumulators.
+        let mut legs: BTreeMap<u64, HashMap<u32, (u64, u64)>> = BTreeMap::new();
+        for s in &self.spans {
+            if s.frame == NO_FRAME {
+                continue;
+            }
+            let b = out.entry(s.frame).or_default();
+            match s.stage {
+                STAGE_REQUEST => {
+                    b.e2e_ns = Some(b.e2e_ns.unwrap_or(0).max(s.dur_ns));
+                }
+                STAGE_LANE_WAIT => {
+                    legs.entry(s.frame).or_default().entry(s.shard).or_default().0 +=
+                        s.dur_ns;
+                }
+                STAGE_PROJECT => {
+                    legs.entry(s.frame).or_default().entry(s.shard).or_default().1 +=
+                        s.dur_ns;
+                }
+                stage => *b.stages.entry(stage).or_default() += s.dur_ns,
+            }
+        }
+        for (frame, shards) in legs {
+            if let Some((lane, project)) =
+                shards.values().max_by_key(|(l, p)| l + p).copied()
+            {
+                let b = out.entry(frame).or_default();
+                b.stages.insert(STAGE_LANE_WAIT, lane);
+                b.stages.insert(STAGE_PROJECT, project);
+            }
+        }
+        out
+    }
+}
+
+/// An installed tracing session.  Exactly one is active at a time;
+/// beginning a new one supersedes the old (whose buffers drain empty).
+pub struct TraceSession {
+    inner: Arc<SessionInner>,
+}
+
+impl TraceSession {
+    /// Install a session process-wide.  `ring_events` bounds each
+    /// emitting thread's buffer (clamped to at least 16).
+    pub fn begin(level: TraceLevel, clock: TraceClock, ring_events: usize) -> Self {
+        let mut active = lock_active();
+        let generation = GENERATION.fetch_add(1, Ordering::AcqRel) + 1;
+        let inner = Arc::new(SessionInner {
+            level,
+            clock,
+            ring_events: ring_events.max(16),
+            generation,
+            buffers: Mutex::new(Vec::new()),
+            next_frame: AtomicU64::new(0),
+            next_tid: AtomicU32::new(0),
+            dropped: AtomicU64::new(0),
+        });
+        *active = Some(inner.clone());
+        LEVEL.store(level as u8, Ordering::Release);
+        TraceSession { inner }
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.inner.level
+    }
+
+    /// Uninstall and drain: pair up begin/end events (sorted on the
+    /// session clock), fold in self-timed completes, and count what
+    /// did not match.  Events recorded after this call are discarded.
+    pub fn finish(self) -> TraceReport {
+        {
+            let mut active = lock_active();
+            let still_ours = matches!(
+                active.as_ref(),
+                Some(cur) if cur.generation == self.inner.generation
+            );
+            if still_ours {
+                LEVEL.store(0, Ordering::Release);
+                *active = None;
+                // Invalidate thread-local caches pointing at us.
+                GENERATION.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        let buffers = self
+            .inner
+            .buffers
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        let mut events: Vec<SpanEvent> = Vec::new();
+        for buf in buffers.iter() {
+            let mut e = buf.events.lock().unwrap_or_else(PoisonError::into_inner);
+            events.append(&mut e);
+        }
+        let threads = self.inner.next_tid.load(Ordering::Relaxed);
+        let dropped = self.inner.dropped.load(Ordering::Relaxed);
+        drop(buffers);
+
+        events.sort_by_key(|e| (e.t_ns, e.kind));
+        let mut open: HashMap<(&'static str, u64, u32), Vec<(u64, u32)>> =
+            HashMap::new();
+        let mut spans = Vec::new();
+        let mut unmatched_ends = 0u64;
+        for ev in &events {
+            match ev.kind {
+                EventKind::Complete => spans.push(CompletedSpan {
+                    stage: ev.stage,
+                    frame: ev.frame,
+                    shard: ev.shard,
+                    tid: ev.tid,
+                    start_ns: ev.t_ns,
+                    dur_ns: ev.dur_ns,
+                }),
+                EventKind::Begin => open
+                    .entry((ev.stage, ev.frame, ev.shard))
+                    .or_default()
+                    .push((ev.t_ns, ev.tid)),
+                EventKind::End => {
+                    match open
+                        .get_mut(&(ev.stage, ev.frame, ev.shard))
+                        .and_then(Vec::pop)
+                    {
+                        Some((t0, tid)) => spans.push(CompletedSpan {
+                            stage: ev.stage,
+                            frame: ev.frame,
+                            shard: ev.shard,
+                            tid,
+                            start_ns: t0,
+                            dur_ns: ev.t_ns.saturating_sub(t0),
+                        }),
+                        None => unmatched_ends += 1,
+                    }
+                }
+            }
+        }
+        let unmatched_begins =
+            open.values().map(|v| v.len() as u64).sum::<u64>();
+        spans.sort_by_key(|s| (s.start_ns, s.tid));
+        TraceReport {
+            spans,
+            unmatched_begins,
+            unmatched_ends,
+            dropped,
+            threads,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The session is process-global; tests in this module serialize on
+    // one lock so their sessions never overlap.
+    static SESSION_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> MutexGuard<'static, ()> {
+        SESSION_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn level_parse_round_trips() {
+        for lvl in [TraceLevel::Off, TraceLevel::Summary, TraceLevel::Full] {
+            assert_eq!(TraceLevel::parse(lvl.name()).unwrap(), lvl);
+        }
+        assert!(TraceLevel::parse("verbose").is_err());
+        assert!(TraceLevel::Off < TraceLevel::Summary);
+        assert!(TraceLevel::Summary < TraceLevel::Full);
+    }
+
+    #[test]
+    fn disabled_emits_nothing_and_frames_are_sentinel() {
+        let _g = locked();
+        assert!(!enabled());
+        assert_eq!(next_frame(), NO_FRAME);
+        begin(STAGE_SCHEDULE, 1, 0);
+        end(STAGE_SCHEDULE, 1, 0);
+        assert_eq!(start(), NO_TOKEN);
+        // A later session must not see any of the above.
+        let session =
+            TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 1024);
+        let report = session.finish();
+        assert!(report.spans.is_empty());
+        assert!(report.is_balanced());
+        assert_eq!(report.dropped, 0);
+    }
+
+    #[test]
+    fn summary_level_enables_hooks_but_records_no_events() {
+        let _g = locked();
+        let session =
+            TraceSession::begin(TraceLevel::Summary, TraceClock::wall(), 1024);
+        assert!(enabled());
+        assert!(!recording());
+        assert_ne!(next_frame(), NO_FRAME);
+        begin(STAGE_SCHEDULE, 1, 0);
+        end(STAGE_SCHEDULE, 1, 0);
+        let report = session.finish();
+        assert!(report.spans.is_empty());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn begin_end_pairs_into_spans_with_simclock_time() {
+        let _g = locked();
+        let clock = SimClock::new();
+        let session = TraceSession::begin(
+            TraceLevel::Full,
+            TraceClock::sim(clock.clone()),
+            1024,
+        );
+        let f = next_frame();
+        begin(STAGE_SCHEDULE, f, NO_SHARD);
+        clock.advance_secs(0.5);
+        end(STAGE_SCHEDULE, f, NO_SHARD);
+        let tok = start();
+        clock.advance_secs(0.25);
+        complete(STAGE_PROJECT, f, 3, tok);
+        let report = session.finish();
+        assert!(report.is_balanced(), "{report:?}");
+        assert_eq!(report.spans.len(), 2);
+        let sched = report
+            .spans
+            .iter()
+            .find(|s| s.stage == STAGE_SCHEDULE)
+            .unwrap();
+        assert_eq!(sched.dur_ns, 500_000_000);
+        assert_eq!(sched.frame, f);
+        let proj = report
+            .spans
+            .iter()
+            .find(|s| s.stage == STAGE_PROJECT)
+            .unwrap();
+        assert_eq!(proj.dur_ns, 250_000_000);
+        assert_eq!(proj.shard, 3);
+    }
+
+    #[test]
+    fn cross_thread_pairs_match_by_key() {
+        let _g = locked();
+        let clock = SimClock::new();
+        let session = TraceSession::begin(
+            TraceLevel::Full,
+            TraceClock::sim(clock.clone()),
+            1024,
+        );
+        begin(STAGE_LANE_WAIT, 7, 2);
+        clock.advance_secs(0.1);
+        std::thread::spawn(|| end(STAGE_LANE_WAIT, 7, 2))
+            .join()
+            .unwrap();
+        let report = session.finish();
+        assert!(report.is_balanced(), "{report:?}");
+        assert_eq!(report.spans.len(), 1);
+        assert_eq!(report.spans[0].dur_ns, 100_000_000);
+        // Two threads emitted: this one and the spawned closer.
+        assert_eq!(report.threads, 2);
+    }
+
+    #[test]
+    fn overflow_drops_events_but_the_drain_stays_well_formed() {
+        let _g = locked();
+        let session =
+            TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 16);
+        for i in 0..100u64 {
+            begin(STAGE_SCHEDULE, i, NO_SHARD);
+            end(STAGE_SCHEDULE, i, NO_SHARD);
+        }
+        let report = session.finish();
+        assert!(report.dropped > 0, "expected drops at ring_events=16");
+        // 16 buffered events = 8 complete pairs: nothing corrupt, and
+        // accounting is exact (buffered + dropped = emitted).
+        assert_eq!(report.spans.len() * 2 + report.unmatched_begins as usize, 16);
+        assert_eq!(
+            report.spans.len() * 2
+                + report.unmatched_begins as usize
+                + report.dropped as usize,
+            200
+        );
+        assert_eq!(report.unmatched_ends, 0);
+    }
+
+    #[test]
+    fn unmatched_events_are_counted_not_fabricated() {
+        let _g = locked();
+        let session =
+            TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 1024);
+        begin(STAGE_GATHER, 1, NO_SHARD);
+        end(STAGE_GATHER, 2, NO_SHARD); // different frame: no match
+        let report = session.finish();
+        assert_eq!(report.spans.len(), 0);
+        assert_eq!(report.unmatched_begins, 1);
+        assert_eq!(report.unmatched_ends, 1);
+        assert!(!report.is_balanced());
+    }
+
+    #[test]
+    fn breakdown_attributes_parallel_legs_to_the_critical_shard() {
+        let _g = locked();
+        let clock = SimClock::new();
+        let session = TraceSession::begin(
+            TraceLevel::Full,
+            TraceClock::sim(clock.clone()),
+            1024,
+        );
+        let f = next_frame();
+        // request: 0 .. 1.0s
+        begin(STAGE_REQUEST, f, NO_SHARD);
+        // schedule: 0 .. 0.1s
+        begin(STAGE_SCHEDULE, f, NO_SHARD);
+        clock.advance_secs(0.1);
+        end(STAGE_SCHEDULE, f, NO_SHARD);
+        // shard 0 leg: lane 0.1s, project 0.2s; shard 1 leg: lane
+        // 0.05s, project 0.4s (critical: 0.45s total).  The sim clock
+        // is one global axis, so the "parallel" legs are laid out
+        // sequentially here — the breakdown only reads durations.
+        begin(STAGE_LANE_WAIT, f, 0);
+        begin(STAGE_LANE_WAIT, f, 1);
+        clock.advance_secs(0.05);
+        end(STAGE_LANE_WAIT, f, 1);
+        clock.advance_secs(0.05);
+        end(STAGE_LANE_WAIT, f, 0);
+        let t0 = start();
+        clock.advance_secs(0.2);
+        complete(STAGE_PROJECT, f, 0, t0);
+        let t1 = start();
+        clock.advance_secs(0.4);
+        complete(STAGE_PROJECT, f, 1, t1);
+        // gather: 0.05s
+        let tg = start();
+        clock.advance_secs(0.05);
+        complete(STAGE_GATHER, f, NO_SHARD, tg);
+        clock.advance_secs(0.25);
+        end(STAGE_REQUEST, f, NO_SHARD);
+        let report = session.finish();
+        assert!(report.is_balanced(), "{report:?}");
+        let frames = report.frame_breakdown();
+        let b = &frames[&f];
+        assert_eq!(b.e2e_ns, Some(1_100_000_000));
+        // Critical shard is 1: lane 0.05s + project 0.4s.
+        assert_eq!(b.stages[STAGE_LANE_WAIT], 50_000_000);
+        assert_eq!(b.stages[STAGE_PROJECT], 400_000_000);
+        assert_eq!(b.stages[STAGE_SCHEDULE], 100_000_000);
+        assert_eq!(b.stages[STAGE_GATHER], 50_000_000);
+        assert!(b.stage_sum_ns() <= b.e2e_ns.unwrap());
+    }
+
+    #[test]
+    fn a_new_session_supersedes_the_old_one() {
+        let _g = locked();
+        let s1 = TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 64);
+        begin(STAGE_SCHEDULE, 1, NO_SHARD);
+        end(STAGE_SCHEDULE, 1, NO_SHARD);
+        let s2 = TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 64);
+        begin(STAGE_GATHER, 2, NO_SHARD);
+        end(STAGE_GATHER, 2, NO_SHARD);
+        // s2 sees only its own events; finishing stale s1 afterwards
+        // must not disturb the live level (s2 finished first here).
+        let r2 = s2.finish();
+        assert_eq!(r2.spans.len(), 1);
+        assert_eq!(r2.spans[0].stage, STAGE_GATHER);
+        let r1 = s1.finish();
+        assert_eq!(r1.spans.len(), 1);
+        assert_eq!(r1.spans[0].stage, STAGE_SCHEDULE);
+        assert!(!enabled());
+    }
+}

@@ -112,7 +112,8 @@ use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::exec::ThreadPool;
-use crate::metrics::{Counter, Gauge, Registry};
+use crate::metrics::trace;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::sim::clock::SimClock;
 use crate::tensor::{axpy, matmul, matmul_pooled, Tensor};
 
@@ -141,6 +142,14 @@ pub const STREAM_CACHE_RESIDENT: &str = "stream_cache_resident_bytes";
 /// start with the stripe prefix, so the total is never double-counted.
 pub const STREAM_CACHE_STRIPE_PREFIX: &str = "stream_cache_stripe";
 pub const STREAM_CACHE_STRIPE_SUFFIX: &str = "_resident_bytes";
+
+/// Generation-profiling histograms (bound via
+/// [`StreamedMedium::with_metrics`], observed per projection only while
+/// a trace session is active — `--trace off` keeps the hot path free of
+/// extra clocks): nanoseconds spent generating tiles vs servicing
+/// cache hits.
+pub const STREAM_GEN_NS: &str = "stream_gen_ns";
+pub const STREAM_CACHE_HIT_NS: &str = "stream_cache_hit_ns";
 
 /// Gauge name for one stripe's resident payload bytes.
 pub fn stream_cache_stripe_gauge_name(stripe: usize) -> String {
@@ -432,6 +441,11 @@ pub struct StreamedMedium {
     bytes_ctr: Option<Counter>,
     cache_hits_ctr: Option<Counter>,
     cache_misses_ctr: Option<Counter>,
+    /// Trace-gated generation profiling ([`STREAM_GEN_NS`] /
+    /// [`STREAM_CACHE_HIT_NS`]): per-projection nanoseconds observed
+    /// only while a trace session is active.
+    gen_ns_hist: Option<Histogram>,
+    hit_ns_hist: Option<Histogram>,
     cache_gauge: Option<Gauge>,
     /// One gauge per cache stripe (`stream_cache_stripe<i>_resident_bytes`);
     /// empty until both a registry and a cache are attached (the two
@@ -445,9 +459,10 @@ pub struct StreamedMedium {
 
 /// One tile job's output: its column range of both quadratures plus its
 /// generation tallies — row-tiles, bytes, measured generation
-/// nanoseconds, and cache hits/misses (summed by the single-threaded
-/// epilogue, so the accounting is deterministic too).
-type TileOut = (Vec<f32>, Vec<f32>, u64, u64, u64, u64, u64);
+/// nanoseconds, measured cache-hit service nanoseconds (zero unless a
+/// trace session is active), and cache hits/misses (summed by the
+/// single-threaded epilogue, so the accounting is deterministic too).
+type TileOut = (Vec<f32>, Vec<f32>, u64, u64, u64, u64, u64, u64);
 
 impl StreamedMedium {
     /// Full-width streamed medium over `modes` output modes.
@@ -475,6 +490,8 @@ impl StreamedMedium {
             bytes_ctr: None,
             cache_hits_ctr: None,
             cache_misses_ctr: None,
+            gen_ns_hist: None,
+            hit_ns_hist: None,
             cache_gauge: None,
             stripe_gauges: Vec::new(),
             registry: None,
@@ -549,6 +566,8 @@ impl StreamedMedium {
         self.bytes_ctr = Some(registry.counter(STREAM_BYTES));
         self.cache_hits_ctr = Some(registry.counter(STREAM_CACHE_HITS));
         self.cache_misses_ctr = Some(registry.counter(STREAM_CACHE_MISSES));
+        self.gen_ns_hist = Some(registry.histogram(STREAM_GEN_NS));
+        self.hit_ns_hist = Some(registry.histogram(STREAM_CACHE_HIT_NS));
         self.cache_gauge = Some(registry.gauge(STREAM_CACHE_RESIDENT));
         self.registry = Some(registry.clone());
         self.bind_stripe_gauges();
@@ -744,12 +763,13 @@ impl StreamedMedium {
         let mut tiles = 0u64;
         let mut bytes = 0u64;
         let mut nanos = 0u64;
+        let mut hit_nanos = 0u64;
         let mut hits = 0u64;
         let mut misses = 0u64;
         let mut panicked = 0usize;
         for (job, slot) in slots.into_iter().enumerate() {
             match slot {
-                Some((t1, t2, tl, by, ns, hi, mi)) => {
+                Some((t1, t2, tl, by, ns, hns, hi, mi)) => {
                     let c0 = job * tile;
                     let w = tile.min(self.modes - c0);
                     for bi in 0..b {
@@ -762,6 +782,7 @@ impl StreamedMedium {
                     tiles += tl;
                     bytes += by;
                     nanos += ns;
+                    hit_nanos += hns;
                     hits += hi;
                     misses += mi;
                 }
@@ -790,6 +811,17 @@ impl StreamedMedium {
         }
         if let Some(c) = &self.cache_misses_ctr {
             c.add(misses);
+        }
+        // Generation profiling: per-projection gen vs hit-service time,
+        // observed only while a trace session is active (the same gate
+        // that enables the per-row hit clocks in `project_tile`).
+        if trace::enabled() {
+            if let Some(h) = &self.gen_ns_hist {
+                h.observe(nanos as f64);
+            }
+            if let Some(h) = &self.hit_ns_hist {
+                h.observe(hit_nanos as f64);
+            }
         }
         if let (Some(g), Some(cache)) = (&self.cache_gauge, &self.cache) {
             // One pass over the stripes: publish each stripe's gauge
@@ -829,18 +861,30 @@ impl StreamedMedium {
         let mut im: Vec<f32> = Vec::new();
         let mut tiles = 0u64;
         let mut gen_nanos = 0u64;
+        let mut hit_nanos = 0u64;
         let mut hits = 0u64;
         let mut misses = 0u64;
+        // Per-row hit clocks only exist under an active trace session;
+        // with tracing off the lookup path takes zero extra `Instant`s.
+        let profile_hits = self.cache.is_some() && trace::enabled();
         let col0 = self.col0 + c0;
         for r in 0..self.d_in {
             if !active[r] {
                 continue;
             }
+            let hit_t0: Option<Instant> = if profile_hits {
+                Some(Instant::now())
+            } else {
+                None
+            };
             let cached: Option<Arc<CachedTile>> =
                 self.cache.as_ref().and_then(|c| c.lookup(self.seed, r, col0, w));
             let (tile_re, tile_im): (&[f32], &[f32]) = match &cached {
                 Some(t) => {
                     hits += 1;
+                    if let Some(t0) = hit_t0 {
+                        hit_nanos += t0.elapsed().as_nanos() as u64;
+                    }
                     (&t.re, &t.im)
                 }
                 None => {
@@ -882,7 +926,7 @@ impl StreamedMedium {
         } else {
             job_t0.elapsed().as_nanos() as u64
         };
-        (p1, p2, tiles, tiles * (w as u64) * 8, nanos, hits, misses)
+        (p1, p2, tiles, tiles * (w as u64) * 8, nanos, hit_nanos, hits, misses)
     }
 }
 

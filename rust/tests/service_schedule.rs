@@ -344,6 +344,63 @@ fn shutdown_drains_pending_requests_before_join() {
     }
 }
 
+/// Tracing is observation only: replaying the pinned noisy-optical
+/// schedule under a `--trace full` session returns bitwise identical
+/// quadratures to the untraced replay — same packing, same (shard,
+/// slot) assignment, same noise draws.  (Digital would pass trivially
+/// since its projection is exact under any schedule; noise makes the
+/// bits a function of the schedule itself.)  Balance/breakdown
+/// assertions live in `trace_spans.rs`, which serializes on the
+/// process-global session; here concurrent sibling tests may emit into
+/// our session, so we only pin the projection bits.
+#[test]
+fn full_tracing_leaves_the_pinned_schedule_bitwise_unchanged() {
+    use litl::metrics::trace::{TraceClock, TraceLevel, TraceSession};
+    let medium = TransmissionMatrix::sample(66, D_IN, 28);
+    let run = |traced: bool| -> Vec<(Tensor, Tensor)> {
+        let session = traced
+            .then(|| TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 1 << 16));
+        let mut out = Vec::new();
+        for partition in [Partition::Modes, Partition::Batch] {
+            for shards in [1usize, 3] {
+                let devices = topology_devices(
+                    DeviceKind::Optical,
+                    OpuParams::default(),
+                    &Medium::Dense(medium.clone()),
+                    9,
+                    shards,
+                    partition,
+                )
+                .unwrap();
+                let svc = ShardedProjectionService::start(
+                    devices,
+                    D_IN,
+                    ShardServiceConfig {
+                        partition,
+                        ..Default::default()
+                    },
+                    Registry::new(),
+                )
+                .unwrap();
+                let client = svc.client();
+                for (i, &b) in SIZES.iter().enumerate() {
+                    let e = ternary_batch(b, D_IN, 900 + i as u64);
+                    out.push(client.project(e).unwrap());
+                }
+                svc.shutdown();
+            }
+        }
+        if let Some(s) = session {
+            let report = s.finish();
+            assert!(!report.spans.is_empty(), "traced replay recorded nothing");
+        }
+        out
+    };
+    let untraced = run(false);
+    let traced = run(true);
+    assert_eq!(untraced, traced, "tracing changed projection bits");
+}
+
 /// Quick (tier-1) concurrency check on a 4-shard service: concurrent
 /// clients each get their own exact answers, and the per-shard metrics
 /// explain the client-observed totals.  The heavyweight soak lives in

@@ -470,6 +470,46 @@ fn striped_cache_composes_with_the_sharded_service() {
 }
 
 #[test]
+fn profiling_hooks_leave_streamed_projection_bitwise_unchanged() {
+    // The ISSUE-8 generation profiling hooks (`stream_gen_ns` /
+    // `stream_cache_hit_ns`) observe wall time only: a metric-bound,
+    // cached, *noisy* farm under an enabled trace session returns the
+    // same bits as the unprofiled run.  Summary level also records no
+    // span events — it is histograms-only by contract.
+    use litl::metrics::trace::{TraceClock, TraceLevel, TraceSession};
+    use litl::optics::stream::{STREAM_CACHE_HIT_NS, STREAM_GEN_NS};
+    let run = |registry: Option<&Registry>| -> Vec<(Tensor, Tensor)> {
+        let (_, medium) = streamed_cached(4, 1);
+        let medium = match (registry, medium) {
+            (Some(reg), Medium::Streamed(sm)) => Medium::Streamed(sm.with_metrics(reg)),
+            (_, m) => m,
+        };
+        let mut farm = topology_farm(
+            DeviceKind::Optical,
+            OpuParams::default(),
+            &medium,
+            NOISE_SEED,
+            2,
+            Partition::Modes,
+            Registry::new(),
+        )
+        .unwrap();
+        (0..3)
+            .map(|step| farm.project(&ternary_batch(5, D_IN, 1200 + step)).unwrap())
+            .collect()
+    };
+    let plain = run(None);
+    let reg = Registry::new();
+    let session = TraceSession::begin(TraceLevel::Summary, TraceClock::wall(), 1 << 12);
+    let profiled = run(Some(&reg));
+    let report = session.finish();
+    assert_eq!(plain, profiled, "profiling hooks changed projection bits");
+    assert!(report.spans.is_empty(), "summary level must not record span events");
+    assert!(reg.histogram(STREAM_GEN_NS).count() > 0, "gen histogram unfed");
+    assert!(reg.histogram(STREAM_CACHE_HIT_NS).count() > 0, "hit histogram unfed");
+}
+
+#[test]
 fn streamed_farm_project_on_charges_one_shard_and_matches_the_slice() {
     let mut farm = topology_farm(
         DeviceKind::Digital,

@@ -1,0 +1,256 @@
+//! Frame-level tracing contract (ISSUE 8 acceptance):
+//!
+//! * **Balance** — a traced sharded run under either partition drains
+//!   to a balanced span set (every begin matched by an end), with a
+//!   per-frame stage breakdown whose critical-path sum stays within
+//!   the frame's end-to-end `request` latency.
+//! * **Bounded rings** — overflowing a per-thread ring drops newest
+//!   events and counts them; the drain stays clean (no corruption, no
+//!   panic), it never invents spans.
+//! * **Off is off** — an `Off` session records nothing.
+//! * **Export smoke** (`--ignored`, dedicated CI step) — a short
+//!   heterogeneous training run over a streamed+cached medium produces
+//!   a loadable Chrome trace and a Prometheus dump with the generation
+//!   profiling histograms populated.
+//!
+//! The tracer is process-global (one session at a time), so every test
+//! here serializes on `SESSION_LOCK` — same discipline as the unit
+//! tests in `metrics::trace`.
+
+use std::sync::Mutex;
+
+use litl::config::Partition;
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::service::{
+    ClientProjector, ShardServiceConfig, ShardedProjectionService,
+};
+use litl::coordinator::topology::{DeviceKind, Topology};
+use litl::metrics::export::{chrome_trace_json, write_chrome_trace, write_prometheus};
+use litl::metrics::trace::{self, TraceClock, TraceLevel, TraceSession};
+use litl::metrics::Registry;
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::{Medium, StreamedMedium};
+use litl::optics::OpuParams;
+
+mod common;
+use common::{task_batch, ternary_batch, topology_devices};
+
+const D_IN: usize = 10;
+
+/// One session at a time: serialize every test that installs one.
+static SESSION_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_session() -> std::sync::MutexGuard<'static, ()> {
+    SESSION_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn sharded_service(
+    medium: &TransmissionMatrix,
+    shards: usize,
+    partition: Partition,
+) -> ShardedProjectionService {
+    let devices = topology_devices(
+        DeviceKind::Digital,
+        OpuParams::default(),
+        &Medium::Dense(medium.clone()),
+        0,
+        shards,
+        partition,
+    )
+    .unwrap();
+    ShardedProjectionService::start(
+        devices,
+        D_IN,
+        ShardServiceConfig {
+            max_batch: 16,
+            queue_depth: 64,
+            lane_depth: 4,
+            partition,
+            ..Default::default()
+        },
+        Registry::new(),
+    )
+    .unwrap()
+}
+
+/// A full-level traced run through a 3-shard digital service, both
+/// partitions: the drained span set balances, nothing is dropped, and
+/// every frame's attributed stage sum fits inside its `request` span.
+#[test]
+fn sharded_spans_balance_and_breakdown_fits_e2e() {
+    let _guard = lock_session();
+    let medium = TransmissionMatrix::sample(61, D_IN, 28);
+    for partition in [Partition::Modes, Partition::Batch] {
+        let session = TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 1 << 16);
+        let svc = sharded_service(&medium, 3, partition);
+        let client = svc.client();
+        let sizes: &[usize] = &[1, 3, 2, 5, 8, 1, 4, 7, 2, 6];
+        let replies: Vec<_> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| client.submit(ternary_batch(b, D_IN, 300 + i as u64)).unwrap())
+            .collect();
+        for reply in replies {
+            reply.wait().unwrap().unwrap();
+        }
+        svc.shutdown();
+        let report = session.finish();
+
+        assert!(
+            report.is_balanced(),
+            "{partition:?}: {} unmatched begins, {} unmatched ends",
+            report.unmatched_begins,
+            report.unmatched_ends
+        );
+        assert_eq!(report.dropped, 0, "{partition:?}: ring overflowed");
+        assert!(!report.spans.is_empty(), "{partition:?}: no spans recorded");
+
+        let breakdown = report.frame_breakdown();
+        // Every request got its own trace frame with an e2e span.
+        let with_e2e = breakdown.values().filter(|b| b.e2e_ns.is_some()).count();
+        assert_eq!(with_e2e, sizes.len(), "{partition:?}: request spans");
+        for (frame, b) in &breakdown {
+            let Some(e2e) = b.e2e_ns else {
+                panic!("{partition:?}: frame {frame} has stages but no request span");
+            };
+            assert!(
+                b.stage_sum_ns() <= e2e,
+                "{partition:?}: frame {frame} stage sum {} > e2e {e2e}",
+                b.stage_sum_ns()
+            );
+        }
+        // The pipeline stages actually show up: at least one frame
+        // carried the scheduled work (coalescing may fold several
+        // requests into one scheduled frame, attributed to its first).
+        assert!(
+            breakdown.values().any(|b| {
+                b.stages.contains_key(trace::STAGE_PROJECT)
+                    && b.stages.contains_key(trace::STAGE_GATHER)
+                    && b.stages.contains_key(trace::STAGE_SCHEDULE)
+            }),
+            "{partition:?}: no frame carries schedule/project/gather stages"
+        );
+    }
+}
+
+/// Overflowing one thread's ring: newest events drop (and are counted),
+/// the surviving prefix still pairs up, and the drain never fabricates
+/// spans for dropped events.
+#[test]
+fn ring_overflow_drops_newest_and_drains_clean() {
+    let _guard = lock_session();
+    let session = TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 16);
+    for frame in 0..100u64 {
+        trace::begin(trace::STAGE_PROJECT, frame, 0);
+        trace::end(trace::STAGE_PROJECT, frame, 0);
+    }
+    let report = session.finish();
+    // 200 events offered, ring keeps the oldest 16 = 8 begin/end pairs.
+    assert_eq!(report.dropped, 184);
+    assert_eq!(report.spans.len(), 8);
+    assert!(report.is_balanced(), "kept prefix is whole pairs");
+    assert!(report.spans.iter().all(|s| s.frame < 8), "kept oldest, not newest");
+}
+
+/// An `Off` session records no events and allocates no buffers — the
+/// disabled path a production run takes by default.
+#[test]
+fn off_session_records_nothing() {
+    let _guard = lock_session();
+    let session = TraceSession::begin(TraceLevel::Off, TraceClock::wall(), 1 << 16);
+    assert!(!trace::enabled());
+    assert!(!trace::recording());
+    let medium = TransmissionMatrix::sample(62, D_IN, 24);
+    let svc = sharded_service(&medium, 2, Partition::Modes);
+    let client = svc.client();
+    for i in 0..4u64 {
+        client.project(ternary_batch(3, D_IN, 500 + i)).unwrap();
+    }
+    svc.shutdown();
+    let report = session.finish();
+    assert!(report.spans.is_empty());
+    assert_eq!(report.threads, 0, "no thread ever registered a buffer");
+    assert_eq!(report.dropped, 0);
+}
+
+/// The CI `trace-smoke` scenario: a heterogeneous weighted topology
+/// (2 optical @ weight 2 + 1 digital) over a streamed, tile-cached,
+/// metric-bound medium trains a host DFA model under `--trace full`,
+/// then exports the Chrome trace and the Prometheus dump.  The CI job
+/// validates the artifacts with jq / a text parser; this test pins the
+/// semantic half (balance, histogram population, non-empty exports).
+#[test]
+#[ignore = "trace smoke: run with --ignored (dedicated CI step)"]
+fn trace_smoke_export() {
+    let _guard = lock_session();
+    let trace_out = std::env::var("TRACE_SMOKE_TRACE_OUT")
+        .unwrap_or_else(|_| "target/trace_smoke/trace.json".to_string());
+    let metrics_out = std::env::var("TRACE_SMOKE_METRICS_OUT")
+        .unwrap_or_else(|_| "target/trace_smoke/metrics.prom".to_string());
+
+    let modes = 64usize;
+    let layers = [20usize, modes, modes, 10];
+    let reg = Registry::new();
+    let medium = Medium::Streamed(
+        StreamedMedium::new(91, D_IN, modes)
+            .with_metrics(&reg)
+            .with_tile_cache_mb(8),
+    );
+    let topo = Topology::parse("hetero:opt:2@2+dig:1").unwrap().with_backing_of(&medium);
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            &medium,
+            7,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition: Partition::Modes,
+                frame_rate_hz: 1500.0,
+                ..Default::default()
+            },
+            reg.clone(),
+        )
+        .unwrap();
+
+    let session = TraceSession::begin(TraceLevel::Full, TraceClock::wall(), 1 << 18);
+    let projector = Box::new(ClientProjector::new(svc.client(), modes));
+    let mut tr = HostTrainer::new(
+        11,
+        &layers,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    let batch = 16usize;
+    for t in 0..40u64 {
+        let (x, y) = task_batch(3_000 + t, batch, &layers);
+        tr.step(&x, &y).unwrap();
+    }
+    svc.shutdown();
+    let report = session.finish();
+
+    assert!(report.is_balanced(), "smoke spans unbalanced");
+    assert!(!report.spans.is_empty());
+    let json = chrome_trace_json(&report);
+    assert!(json.contains("\"traceEvents\""));
+    write_chrome_trace(&trace_out, &report).unwrap();
+    write_prometheus(&metrics_out, &reg).unwrap();
+
+    let prom = std::fs::read_to_string(&metrics_out).unwrap();
+    // The generation profiling hooks fed the histograms (cache hits
+    // need repeated steps over the same tiles — 40 steps is plenty).
+    assert!(prom.contains("# TYPE stream_gen_ns histogram"), "gen histogram missing");
+    assert!(
+        prom.contains("# TYPE stream_cache_hit_ns histogram"),
+        "cache-hit histogram missing"
+    );
+    assert!(!std::fs::read_to_string(&trace_out).unwrap().is_empty());
+    eprintln!(
+        "trace-smoke: {} spans / {} threads -> {trace_out}, metrics -> {metrics_out}",
+        report.spans.len(),
+        report.threads
+    );
+}

@@ -36,3 +36,13 @@ collect() {
 collect e6_streaming BENCH_e6.json
 collect e4_scaling BENCH_e4.json
 collect e7_loadgen BENCH_e7.json
+
+# Telemetry artifacts ride along with the perf records: a traced
+# heterogeneous training run (tests/trace_spans.rs, `--ignored` export
+# smoke) writes the Chrome trace + Prometheus dump next to the BENCH
+# files so a perf PR carries the timeline that explains its numbers.
+echo "== running trace smoke export (release) =="
+TRACE_SMOKE_TRACE_OUT=TRACE_smoke.json \
+TRACE_SMOKE_METRICS_OUT=METRICS_smoke.prom \
+    cargo test --release -q --test trace_spans -- --ignored trace_smoke_export
+echo "wrote TRACE_smoke.json METRICS_smoke.prom"

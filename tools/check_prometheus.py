@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Validate a Prometheus text-exposition dump (CI `trace-smoke` job).
+
+Checks, line by line, what `metrics::export::prometheus_text` promises:
+
+  * every ``# TYPE name kind`` line is unique (the exporter's collision
+    guard means a name is emitted at most once);
+  * every sample parses as ``name[{le="..."}] value`` with a finite
+    value (the exporter zeroes NaN/inf before writing);
+  * histogram buckets are cumulative-monotone with sorted finite ``le``
+    bounds, the ``+Inf`` bucket comes last, and ``<name>_count`` equals
+    the ``+Inf`` bucket count;
+  * every metric TYPEd as a histogram actually has bucket lines.
+
+Usage: tools/check_prometheus.py FILE
+
+Stdlib only, same policy as python/tests (no third-party packages).
+"""
+
+import math
+import re
+import sys
+
+SAMPLE = re.compile(
+    r'^(?P<name>[A-Za-z_:][A-Za-z0-9_:]*)'
+    r'(\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$'
+)
+
+
+def fail(msg):
+    sys.exit(f"check_prometheus: {msg}")
+
+
+def main(path):
+    types = {}  # metric name -> kind
+    samples = {}  # unlabeled sample name -> value
+    buckets = {}  # histogram name -> [(le_label, count)] in file order
+    with open(path) as f:
+        lines = f.read().splitlines()
+    for ln, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                fail(f"{path}:{ln}: malformed TYPE line: {line!r}")
+            name, kind = parts[2], parts[3]
+            if name in types:
+                fail(f"{path}:{ln}: duplicate TYPE for {name}")
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        m = SAMPLE.match(line)
+        if not m:
+            fail(f"{path}:{ln}: unparseable sample: {line!r}")
+        name, labels = m.group("name"), m.group("labels")
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            fail(f"{path}:{ln}: non-numeric value: {line!r}")
+        if not math.isfinite(value):
+            fail(f"{path}:{ln}: non-finite value: {line!r}")
+        if name.endswith("_bucket"):
+            if not (labels and labels.startswith('le="') and labels.endswith('"')):
+                fail(f"{path}:{ln}: bucket without an le label: {line!r}")
+            hist = name[: -len("_bucket")]
+            buckets.setdefault(hist, []).append((labels[4:-1], value))
+        else:
+            if labels:
+                fail(f"{path}:{ln}: unexpected labels: {line!r}")
+            if name in samples:
+                fail(f"{path}:{ln}: duplicate sample name {name}")
+            samples[name] = value
+    for hist, bs in buckets.items():
+        if types.get(hist) != "histogram":
+            fail(f"{path}: buckets for {hist} but no histogram TYPE")
+        les = [le for le, _ in bs]
+        counts = [c for _, c in bs]
+        if les[-1] != "+Inf":
+            fail(f"{path}: {hist}: last bucket is le={les[-1]!r}, not +Inf")
+        if "+Inf" in les[:-1]:
+            fail(f"{path}: {hist}: multiple +Inf buckets")
+        bounds = [float(le) for le in les[:-1]]
+        if any(b <= a for a, b in zip(bounds, bounds[1:])):
+            fail(f"{path}: {hist}: le bounds not strictly sorted: {les}")
+        if any(b < a for a, b in zip(counts, counts[1:])):
+            fail(f"{path}: {hist}: bucket counts not monotone: {counts}")
+        if samples.get(f"{hist}_count") != counts[-1]:
+            fail(f"{path}: {hist}_count != +Inf bucket count")
+        if f"{hist}_sum" not in samples:
+            fail(f"{path}: {hist}_sum missing")
+    for name, kind in types.items():
+        if kind == "histogram" and name not in buckets:
+            fail(f"{path}: histogram {name} has no bucket lines")
+    print(f"{path}: OK — {len(types)} metrics, {len(buckets)} histograms")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        fail("usage: check_prometheus.py FILE")
+    main(sys.argv[1])
