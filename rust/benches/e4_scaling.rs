@@ -312,6 +312,7 @@ fn main() -> anyhow::Result<()> {
                         OpuParams::default(),
                         &Medium::Dense(sv_medium.clone()),
                         9,
+                        &Registry::new(),
                     )?;
                 let svc = ShardedProjectionService::start(
                     devices,

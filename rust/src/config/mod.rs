@@ -14,6 +14,7 @@ use self::toml::TomlValue;
 use crate::coordinator::service::{AdaptConfig, AdmissionConfig, FailoverConfig};
 use crate::coordinator::topology::{DeviceKind, PoolPolicy, Topology};
 use crate::metrics::trace::TraceLevel;
+use crate::net::NetOptions;
 
 /// Which feedback path trains the hidden layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -253,6 +254,26 @@ pub struct TrainConfig {
     /// Emit the human-readable telemetry summary line every N training
     /// batches (0 = never; needs `trace` at `summary` or `full`).
     pub summary_every_batches: usize,
+    /// Resume from a training checkpoint (`--resume file.ckpt`): model +
+    /// optimizer state load before the run and the already-trained
+    /// batches are skipped, so killed-and-resumed equals uninterrupted
+    /// for deterministic projectors.
+    pub resume: Option<String>,
+    /// Write a tile-cache snapshot at run end (`--tile-cache-save
+    /// file.tiles`; needs `--medium streamed` + `--tile-cache-mb`).
+    pub tile_cache_save: Option<String>,
+    /// Warm-start the tile cache from a snapshot before training
+    /// (`--tile-cache-load file.tiles`).  Tiles are keyed by
+    /// (seed, row, col0, width), so replayed tiles are bitwise the
+    /// regenerated ones — a stale or foreign snapshot is simply a miss.
+    pub tile_cache_load: Option<String>,
+    /// Per-attempt dial timeout for remote projector shards (ms, >= 1).
+    pub net_connect_timeout_ms: u64,
+    /// Reply timeout per remote projection (ms, >= 1); expiry errors
+    /// the in-flight frame (never a silent retry).
+    pub net_request_timeout_ms: u64,
+    /// Dial attempts per remote (re)connection before giving up (>= 1).
+    pub net_reconnect_tries: u32,
 }
 
 impl Default for TrainConfig {
@@ -296,6 +317,12 @@ impl Default for TrainConfig {
             metrics_out: None,
             trace_ring_events: 65_536,
             summary_every_batches: 0,
+            resume: None,
+            tile_cache_save: None,
+            tile_cache_load: None,
+            net_connect_timeout_ms: NetOptions::default().connect_timeout_ms,
+            net_request_timeout_ms: NetOptions::default().request_timeout_ms,
+            net_reconnect_tries: NetOptions::default().reconnect_tries,
         }
     }
 }
@@ -451,6 +478,34 @@ impl TrainConfig {
                 }
                 self.summary_every_batches = n as usize;
             }
+            "resume" => self.resume = Some(value.want_str()?.to_string()),
+            "tile_cache_save" | "topology.tile_cache_save" => {
+                self.tile_cache_save = Some(value.want_str()?.to_string())
+            }
+            "tile_cache_load" | "topology.tile_cache_load" => {
+                self.tile_cache_load = Some(value.want_str()?.to_string())
+            }
+            "net_connect_timeout_ms" | "net.connect_timeout_ms" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("net_connect_timeout_ms must be >= 1, got {n}");
+                }
+                self.net_connect_timeout_ms = n as u64;
+            }
+            "net_request_timeout_ms" | "net.request_timeout_ms" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("net_request_timeout_ms must be >= 1, got {n}");
+                }
+                self.net_request_timeout_ms = n as u64;
+            }
+            "net_reconnect_tries" | "net.reconnect_tries" => {
+                let n = value.want_int()?;
+                if n < 1 {
+                    bail!("net_reconnect_tries must be >= 1, got {n}");
+                }
+                self.net_reconnect_tries = n as u32;
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -541,7 +596,38 @@ impl TrainConfig {
              span events)",
             self.trace.name()
         );
+        // Tile-cache snapshots only exist where a tile cache exists:
+        // the streamed backing with a nonzero budget.
+        for (knob, path) in [
+            ("--tile-cache-save", &self.tile_cache_save),
+            ("--tile-cache-load", &self.tile_cache_load),
+        ] {
+            if path.is_some() {
+                anyhow::ensure!(
+                    self.medium == MediumBacking::Streamed,
+                    "{knob} only applies to --medium streamed (the \
+                     materialized backing has no tile cache to snapshot)"
+                );
+                anyhow::ensure!(
+                    self.tile_cache_mb > 0,
+                    "{knob} needs --tile-cache-mb >= 1 (with the cache \
+                     disabled there is nothing to snapshot or warm)"
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// The remote-shard transport tuning these knobs describe
+    /// (operational only — stamped onto the resolved topology but
+    /// excluded from its canonical identity).
+    pub fn net_options(&self) -> NetOptions {
+        NetOptions {
+            connect_timeout_ms: self.net_connect_timeout_ms,
+            request_timeout_ms: self.net_request_timeout_ms,
+            reconnect_tries: self.net_reconnect_tries,
+            ..NetOptions::default()
+        }
     }
 
     /// The device topology this config trains through: the explicit
@@ -566,6 +652,7 @@ impl TrainConfig {
         base.with_partition(self.partition)
             .with_backing(self.medium)
             .with_pool(self.topology_pool)
+            .with_net(self.net_options())
     }
 
     /// Map the control-plane knobs onto the sharded service's config
@@ -1069,6 +1156,92 @@ mod tests {
         c.set_kv("partition=batch").unwrap();
         c.validate_projection().unwrap();
         assert_eq!(c.projection_topology().weights(), vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn warm_start_knobs_parse_and_validate() {
+        let mut c = TrainConfig::default();
+        assert!(c.resume.is_none());
+        assert!(c.tile_cache_save.is_none() && c.tile_cache_load.is_none());
+        c.set_kv("resume=run.ckpt").unwrap();
+        assert_eq!(c.resume.as_deref(), Some("run.ckpt"));
+        c.validate_projection().unwrap();
+        // Snapshots demand a cache to snapshot: streamed + a budget.
+        c.set_kv("tile_cache_save=warm.tiles").unwrap();
+        let err = c.validate_projection().unwrap_err().to_string();
+        assert!(err.contains("streamed"), "{err}");
+        c.set_kv("medium=streamed").unwrap();
+        let err = c.validate_projection().unwrap_err().to_string();
+        assert!(err.contains("tile-cache-mb"), "{err}");
+        c.set_kv("tile_cache_mb=16").unwrap();
+        c.set_kv("tile_cache_load=warm.tiles").unwrap();
+        c.validate_projection().unwrap();
+        // The `[topology]` section spelling maps to the same knobs.
+        let path = std::env::temp_dir().join("litl_cfg_warm_start_test.toml");
+        std::fs::write(
+            &path,
+            "[topology]\nmedium = \"streamed\"\ntile_cache_mb = 8\n\
+             tile_cache_save = \"a.tiles\"\ntile_cache_load = \"b.tiles\"\n",
+        )
+        .unwrap();
+        let mut c2 = TrainConfig::default();
+        c2.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c2.tile_cache_save.as_deref(), Some("a.tiles"));
+        assert_eq!(c2.tile_cache_load.as_deref(), Some("b.tiles"));
+        c2.validate_projection().unwrap();
+    }
+
+    #[test]
+    fn net_knobs_parse_validate_and_stamp_the_topology() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.net_options(), NetOptions::default());
+        c.set_kv("net_connect_timeout_ms=250").unwrap();
+        c.set_kv("net_request_timeout_ms=5000").unwrap();
+        c.set_kv("net_reconnect_tries=7").unwrap();
+        let n = c.net_options();
+        assert_eq!(n.connect_timeout_ms, 250);
+        assert_eq!(n.request_timeout_ms, 5000);
+        assert_eq!(n.reconnect_tries, 7);
+        assert!(c.set_kv("net_connect_timeout_ms=0").is_err());
+        assert!(c.set_kv("net_request_timeout_ms=0").is_err());
+        assert!(c.set_kv("net_reconnect_tries=0").is_err());
+        // The resolved topology carries the tuning (without it changing
+        // the topology's canonical identity).
+        c.set_kv("topology=\"opt:2!tcp:127.0.0.1:9000\"").unwrap();
+        let t = c.projection_topology();
+        assert_eq!(t.net.reconnect_tries, 7);
+        assert_eq!(
+            t.stable_hash(),
+            Topology::parse("opt:2!tcp:127.0.0.1:9000")
+                .unwrap()
+                .with_partition(c.partition)
+                .stable_hash()
+        );
+        // The `[net]` section spelling maps to the same knobs.
+        let path = std::env::temp_dir().join("litl_cfg_net_section_test.toml");
+        std::fs::write(
+            &path,
+            "[net]\nconnect_timeout_ms = 100\nrequest_timeout_ms = 2000\n\
+             reconnect_tries = 2\n",
+        )
+        .unwrap();
+        let mut c2 = TrainConfig::default();
+        c2.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c2.net_connect_timeout_ms, 100);
+        assert_eq!(c2.net_request_timeout_ms, 2000);
+        assert_eq!(c2.net_reconnect_tries, 2);
+    }
+
+    #[test]
+    fn topology_with_remote_endpoint_parses_through_config() {
+        let mut c = TrainConfig::default();
+        c.set_kv("topology=\"opt:1!tcp:127.0.0.1:9000+dig:1\"").unwrap();
+        c.validate_projection().unwrap();
+        let t = c.projection_topology();
+        assert_eq!(t.shard_count(), 2);
+        assert_eq!(t.shards[0].endpoint.as_deref(), Some("tcp:127.0.0.1:9000"));
+        assert!(t.shards[1].endpoint.is_none());
+        assert!(c.set_kv("topology=\"opt:1!nowhere\"").is_err());
     }
 
     #[test]

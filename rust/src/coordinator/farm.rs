@@ -264,7 +264,7 @@ impl ProjectorFarm {
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
         Topology::homogeneous(DeviceKind::Optical, shards)
             .with_partition(partition)
-            .build_devices(params, &Medium::Dense(medium.clone()), noise_seed)
+            .build_devices(params, &Medium::Dense(medium.clone()), noise_seed, &Registry::new())
     }
 
     /// [`ProjectorFarm::optical_shard_devices`] over either [`Medium`]
@@ -280,7 +280,7 @@ impl ProjectorFarm {
         Topology::homogeneous(DeviceKind::Optical, shards)
             .with_partition(partition)
             .with_backing_of(medium)
-            .build_devices(params, medium, noise_seed)
+            .build_devices(params, medium, noise_seed, &Registry::new())
     }
 
     /// Digital farm under either [`Partition`].  Exactly equal to the
@@ -314,7 +314,12 @@ impl ProjectorFarm {
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
         Topology::homogeneous(DeviceKind::Digital, shards)
             .with_partition(partition)
-            .build_devices(OpuParams::default(), &Medium::Dense(medium.clone()), 0)
+            .build_devices(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                0,
+                &Registry::new(),
+            )
     }
 
     /// [`ProjectorFarm::digital_shard_devices`] over either [`Medium`]
@@ -328,7 +333,7 @@ impl ProjectorFarm {
         Topology::homogeneous(DeviceKind::Digital, shards)
             .with_partition(partition)
             .with_backing_of(medium)
-            .build_devices(OpuParams::default(), medium, 0)
+            .build_devices(OpuParams::default(), medium, 0, &Registry::new())
     }
 
     /// Digital farm: the silicon comparator sharded the same way.

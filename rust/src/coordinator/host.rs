@@ -243,6 +243,52 @@ impl HostTrainer {
     pub fn projector(&self) -> &dyn Projector {
         self.projector.as_ref()
     }
+
+    /// Save model + optimizer state in the coordinator checkpoint format
+    /// (params, then Adam `m`, then `v`; step = `opt.t`).  A trainer
+    /// restored with [`HostTrainer::load_state`] continues bitwise where
+    /// this one stopped — the host-side half of `--resume`.
+    pub fn save_state(&self, path: &str) -> Result<()> {
+        let tensors: Vec<&Tensor> = self
+            .mlp
+            .params
+            .iter()
+            .chain(self.opt.m.iter())
+            .chain(self.opt.v.iter())
+            .collect();
+        super::checkpoint::save(path, &tensors, self.opt.t)
+    }
+
+    /// Restore state written by [`HostTrainer::save_state`] into a
+    /// trainer of the same architecture.
+    pub fn load_state(&mut self, path: &str) -> Result<()> {
+        let (tensors, t) = super::checkpoint::load(path)?;
+        let want = 3 * self.mlp.params.len();
+        anyhow::ensure!(
+            tensors.len() == want,
+            "checkpoint has {} tensors, expected {want}",
+            tensors.len()
+        );
+        let mut it = tensors.into_iter();
+        for slot in self
+            .mlp
+            .params
+            .iter_mut()
+            .chain(self.opt.m.iter_mut())
+            .chain(self.opt.v.iter_mut())
+        {
+            let t = it.next().unwrap();
+            anyhow::ensure!(
+                t.shape() == slot.shape(),
+                "checkpoint shape {:?} vs model {:?}",
+                t.shape(),
+                slot.shape()
+            );
+            *slot = t;
+        }
+        self.opt.t = t;
+        Ok(())
+    }
 }
 
 /// Per-layer state for the asynchronous DFA engine.

@@ -1669,7 +1669,12 @@ mod tests {
     ) -> Vec<Box<dyn Projector + Send>> {
         Topology::homogeneous(DeviceKind::Digital, shards)
             .with_partition(partition)
-            .build_devices(OpuParams::default(), &Medium::Dense(medium.clone()), 0)
+            .build_devices(
+                OpuParams::default(),
+                &Medium::Dense(medium.clone()),
+                0,
+                &Registry::new(),
+            )
             .unwrap()
     }
 

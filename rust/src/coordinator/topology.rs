@@ -53,13 +53,27 @@
 //! Shorthand grammar (CLI `--topology`, TOML `topology = "..."`):
 //!
 //! ```text
-//! [hetero:]KIND:COUNT[@WEIGHT](+KIND:COUNT[@WEIGHT])*
+//! [hetero:]GROUP(+GROUP)*
+//! GROUP := KIND:COUNT[@WEIGHT][!ADDR]
 //! KIND  := opt | optical | dig | digital
+//! ADDR  := tcp:host:port | uds:/path | host:port
 //! ```
 //!
 //! e.g. `opt:4` (4 equal optical shards), `hetero:opt:4+dig:2` (4
 //! optical + 2 digital), `opt:2@3+dig:1` (2 optical shards at weight 3
-//! each, 1 digital at weight 1).
+//! each, 1 digital at weight 1), `opt:2+opt:2!tcp:10.0.0.7:9000` (2
+//! local optical shards plus 2 served by the projector server at
+//! `10.0.0.7:9000` — a mixed local+remote fleet in one descriptor).
+//!
+//! **Remote shards**: a shard spec with an `endpoint` builds a
+//! [`RemoteProjector`](crate::net::RemoteProjector) speaking the
+//! [`crate::net::frame`] wire protocol to a `litl serve` process
+//! instead of instantiating the device locally.  The endpoint is part
+//! of the descriptor's identity (shorthand/canonical/stable-hash); the
+//! transport *tuning* ([`crate::net::NetOptions`], set via
+//! [`Topology::with_net`]) is not — timeouts shape when a dial gives
+//! up, never what bits a projection returns.  A loopback remote shard
+//! is bitwise the in-process shard (`rust/tests/net_parity.rs`).
 //!
 //! [`balanced_widths`]: crate::util::balanced_widths
 //! [`weighted_widths`]: crate::util::weighted_widths
@@ -72,6 +86,7 @@ use anyhow::{bail, Result};
 use crate::config::{MediumBacking, Partition};
 use crate::exec::ThreadPool;
 use crate::metrics::Registry;
+use crate::net::{Addr, NetOptions, RemoteProjector};
 use crate::optics::stream::Medium;
 use crate::optics::{OpuParams, NOISE_STREAM_BASE};
 use crate::util::weighted_widths;
@@ -152,6 +167,12 @@ pub struct ShardSpec {
     /// the legacy `NOISE_STREAM_BASE + shard_index`, which is what keeps
     /// equal-weight topologies bitwise on the legacy noise draws.
     pub noise_stream: Option<u64>,
+    /// Remote endpoint (`tcp:host:port` / `uds:/path`).  `None` (the
+    /// default) instantiates the device in-process; `Some` builds a
+    /// [`RemoteProjector`] to a `litl serve` process hosting this shard
+    /// id.  The spec's `device` then documents the *expected* remote
+    /// physics; the wire hello verifies the mode width.
+    pub endpoint: Option<String>,
 }
 
 impl ShardSpec {
@@ -162,7 +183,14 @@ impl ShardSpec {
             weight,
             mode_range: None,
             noise_stream: None,
+            endpoint: None,
         }
+    }
+
+    /// Builder: serve this shard from the projector server at `addr`.
+    pub fn remote(mut self, addr: impl Into<String>) -> ShardSpec {
+        self.endpoint = Some(addr.into());
+        self
     }
 }
 
@@ -174,6 +202,10 @@ pub struct Topology {
     pub partition: Partition,
     pub backing: MediumBacking,
     pub pool: PoolPolicy,
+    /// Transport tuning for any remote shards (timeouts/backoff).
+    /// Operational only: excluded from [`Topology::canonical`] — two
+    /// topologies differing solely in `net` are the same deployment.
+    pub net: NetOptions,
 }
 
 impl Topology {
@@ -185,6 +217,7 @@ impl Topology {
             partition: Partition::Modes,
             backing: MediumBacking::Materialized,
             pool: PoolPolicy::Owned,
+            net: NetOptions::default(),
         }
     }
 
@@ -212,6 +245,23 @@ impl Topology {
         self
     }
 
+    /// Builder: set the remote-shard transport tuning.
+    pub fn with_net(mut self, net: NetOptions) -> Topology {
+        self.net = net;
+        self
+    }
+
+    /// A copy with every remote endpoint cleared — what `litl serve`
+    /// builds locally so the *hosting* process instantiates real
+    /// devices instead of dialing itself.
+    pub fn strip_endpoints(&self) -> Topology {
+        let mut t = self.clone();
+        for spec in &mut t.shards {
+            spec.endpoint = None;
+        }
+        t
+    }
+
     /// Builder: append a shard spec.
     pub fn push(mut self, spec: ShardSpec) -> Topology {
         self.shards.push(spec);
@@ -228,19 +278,30 @@ impl Topology {
         }
         let mut shards = Vec::new();
         for group in body.split('+') {
-            let (kind_count, weight) = match group.split_once('@') {
+            // `!ADDR` (remote endpoint) splits off first: the address
+            // itself contains ':' and may contain '@'-free host names.
+            let (local_part, endpoint) = match group.split_once('!') {
+                Some((lp, addr)) => {
+                    let addr = Addr::parse(addr).map_err(|e| {
+                        anyhow::anyhow!("topology group '{group}': {e}")
+                    })?;
+                    (lp, Some(addr.canonical()))
+                }
+                None => (group, None),
+            };
+            let (kind_count, weight) = match local_part.split_once('@') {
                 Some((kc, w)) => {
                     let w: u32 = w
                         .parse()
                         .map_err(|e| anyhow::anyhow!("topology weight '{w}': {e}"))?;
                     (kc, w)
                 }
-                None => (group, 1),
+                None => (local_part, 1),
             };
             let Some((kind, count)) = kind_count.split_once(':') else {
                 bail!(
-                    "topology group '{group}' is not KIND:COUNT[@WEIGHT] \
-                     (e.g. 'opt:4' or 'dig:2@3')"
+                    "topology group '{group}' is not KIND:COUNT[@WEIGHT][!ADDR] \
+                     (e.g. 'opt:4', 'dig:2@3' or 'opt:2!tcp:host:9000')"
                 );
             };
             let device = DeviceKind::parse(kind)?;
@@ -254,7 +315,9 @@ impl Topology {
                 bail!("topology group '{group}': zero-weight shard (weights must be >= 1)");
             }
             for _ in 0..count {
-                shards.push(ShardSpec::new(device, weight));
+                let mut spec = ShardSpec::new(device, weight);
+                spec.endpoint = endpoint.clone();
+                shards.push(spec);
             }
         }
         let topo = Topology {
@@ -262,35 +325,44 @@ impl Topology {
             partition: Partition::Modes,
             backing: MediumBacking::Materialized,
             pool: PoolPolicy::Owned,
+            net: NetOptions::default(),
         };
         topo.validate()?;
         Ok(topo)
     }
 
-    /// Canonical shorthand: adjacent same-(kind, weight) shards coalesce
-    /// into one `KIND:COUNT[@WEIGHT]` group; `@1` is omitted.  For any
-    /// topology without explicit mode ranges or noise streams,
-    /// `Topology::parse(t.shorthand())` reproduces `t`'s shard list.
+    /// Canonical shorthand: adjacent same-(kind, weight, endpoint)
+    /// shards coalesce into one `KIND:COUNT[@WEIGHT][!ADDR]` group;
+    /// `@1` is omitted.  For any topology without explicit mode ranges
+    /// or noise streams, `Topology::parse(t.shorthand())` reproduces
+    /// `t`'s shard list — remote endpoints included.
     pub fn shorthand(&self) -> String {
-        let mut groups: Vec<(DeviceKind, u32, usize)> = Vec::new();
+        let mut groups: Vec<(DeviceKind, u32, Option<&String>, usize)> = Vec::new();
         for spec in &self.shards {
             match groups.last_mut() {
-                Some((kind, weight, count))
-                    if *kind == spec.device && *weight == spec.weight =>
+                Some((kind, weight, endpoint, count))
+                    if *kind == spec.device
+                        && *weight == spec.weight
+                        && *endpoint == spec.endpoint.as_ref() =>
                 {
                     *count += 1
                 }
-                _ => groups.push((spec.device, spec.weight, 1)),
+                _ => groups.push((spec.device, spec.weight, spec.endpoint.as_ref(), 1)),
             }
         }
         groups
             .iter()
-            .map(|(kind, weight, count)| {
-                if *weight == 1 {
+            .map(|(kind, weight, endpoint, count)| {
+                let mut g = if *weight == 1 {
                     format!("{}:{count}", kind.name())
                 } else {
                     format!("{}:{count}@{weight}", kind.name())
+                };
+                if let Some(ep) = endpoint {
+                    g.push('!');
+                    g.push_str(ep);
                 }
+                g
             })
             .collect::<Vec<_>>()
             .join("+")
@@ -377,6 +449,11 @@ impl Topology {
                      partition (batch shards are full-medium replicas)"
                 );
             }
+            if let Some(ep) = &spec.endpoint {
+                Addr::parse(ep).map_err(|e| {
+                    anyhow::anyhow!("shard {i}: bad remote endpoint '{ep}': {e}")
+                })?;
+            }
         }
         let explicit = self.shards.iter().filter(|s| s.mode_range.is_some()).count();
         anyhow::ensure!(
@@ -452,55 +529,74 @@ impl Topology {
     /// under the modes partition, full-medium replicas under batch.
     /// Optical shard `i` draws camera noise from PCG stream
     /// `NOISE_STREAM_BASE + i` of `noise_seed` unless its spec pins one.
+    ///
+    /// A shard with a remote endpoint dials its projector server
+    /// instead (eagerly — a dead server fails the build, not the first
+    /// projection) and is checked against the mode width the topology
+    /// carves for that slot; its net counters report into `registry`.
     pub fn build_devices(
         &self,
         params: OpuParams,
         medium: &Medium,
         noise_seed: u64,
+        registry: &Registry,
     ) -> Result<Vec<Box<dyn Projector + Send>>> {
         self.validate()?;
         self.ensure_backing_matches(medium)?;
-        let media: Vec<Medium> = match self.partition {
-            Partition::Modes => {
-                let widths = self.mode_widths(medium.modes())?;
-                let mut out = Vec::with_capacity(widths.len());
-                let mut c0 = 0usize;
-                for w in widths {
-                    out.push(medium.window(c0, w));
-                    c0 += w;
-                }
-                out
-            }
-            Partition::Batch => {
-                warn_streamed_batch_cost(medium, self.shards.len());
-                (0..self.shards.len()).map(|_| medium.clone()).collect()
-            }
+        // Expected output width per shard: its carved window under the
+        // modes partition, the full medium under batch replicas.
+        let widths: Vec<usize> = match self.partition {
+            Partition::Modes => self.mode_widths(medium.modes())?,
+            Partition::Batch => vec![medium.modes(); self.shards.len()],
         };
-        Ok(self
-            .shards
-            .iter()
-            .zip(media)
-            .enumerate()
-            .map(|(i, (spec, shard_medium))| {
-                let stream = spec
-                    .noise_stream
-                    .unwrap_or(NOISE_STREAM_BASE + i as u64);
-                match spec.device {
-                    DeviceKind::Optical => Box::new(
-                        NativeOpticalProjector::with_medium_stream(
-                            params,
-                            shard_medium,
-                            noise_seed,
-                            stream,
-                        ),
-                    ) as Box<dyn Projector + Send>,
-                    DeviceKind::Digital => {
-                        Box::new(DigitalProjector::with_medium(shard_medium))
-                            as Box<dyn Projector + Send>
-                    }
+        if self.partition == Partition::Batch {
+            let local = self.shards.iter().filter(|s| s.endpoint.is_none()).count();
+            warn_streamed_batch_cost(medium, local);
+        }
+        let mut out: Vec<Box<dyn Projector + Send>> =
+            Vec::with_capacity(self.shards.len());
+        let mut c0 = 0usize;
+        for (i, (spec, &w)) in self.shards.iter().zip(&widths).enumerate() {
+            let col0 = c0;
+            if self.partition == Partition::Modes {
+                c0 += w;
+            }
+            if let Some(ep) = &spec.endpoint {
+                let addr = Addr::parse(ep)?;
+                let remote =
+                    RemoteProjector::connect(&addr, i as u32, self.net, registry)?;
+                anyhow::ensure!(
+                    remote.modes() == w,
+                    "remote shard {i} at {addr} serves {} modes, topology \
+                     expects {w}",
+                    remote.modes()
+                );
+                out.push(Box::new(remote));
+                continue;
+            }
+            // Local shard: carve/clone the medium only now, so remote
+            // shards never pay for (or touch) a local medium copy.
+            let shard_medium = match self.partition {
+                Partition::Modes => medium.window(col0, w),
+                Partition::Batch => medium.clone(),
+            };
+            let stream = spec.noise_stream.unwrap_or(NOISE_STREAM_BASE + i as u64);
+            out.push(match spec.device {
+                DeviceKind::Optical => {
+                    Box::new(NativeOpticalProjector::with_medium_stream(
+                        params,
+                        shard_medium,
+                        noise_seed,
+                        stream,
+                    )) as Box<dyn Projector + Send>
                 }
-            })
-            .collect())
+                DeviceKind::Digital => {
+                    Box::new(DigitalProjector::with_medium(shard_medium))
+                        as Box<dyn Projector + Send>
+                }
+            });
+        }
+        Ok(out)
     }
 
     /// Build a [`ProjectorFarm`]: the devices above, the topology's
@@ -513,7 +609,7 @@ impl Topology {
         noise_seed: u64,
         registry: Registry,
     ) -> Result<ProjectorFarm> {
-        let devices = self.build_devices(params, medium, noise_seed)?;
+        let devices = self.build_devices(params, medium, noise_seed, &registry)?;
         let pool: Option<Arc<ThreadPool>> = match self.pool {
             PoolPolicy::Owned => None,
             PoolPolicy::Shared => Some(crate::exec::shared_pool()),
@@ -594,11 +690,12 @@ impl Topology {
             self.partition,
             cfg.partition
         );
-        let devices = self.build_devices(params, medium, noise_seed)?;
+        let devices = self.build_devices(params, medium, noise_seed, &metrics)?;
         let topo = self.clone();
         let medium2 = medium.clone();
+        let reg2 = metrics.clone();
         let rebuild: ShardRebuild = Arc::new(move |shard| {
-            let mut rebuilt = topo.build_devices(params, &medium2, noise_seed)?;
+            let mut rebuilt = topo.build_devices(params, &medium2, noise_seed, &reg2)?;
             anyhow::ensure!(shard < rebuilt.len(), "no shard {shard} in topology");
             Ok(rebuilt.swap_remove(shard))
         });
@@ -678,7 +775,16 @@ mod tests {
 
     #[test]
     fn shorthand_round_trips() {
-        for s in ["opt:4", "dig:2", "opt:4+dig:2", "opt:2@3+dig:1", "opt:1@2+opt:1"] {
+        for s in [
+            "opt:4",
+            "dig:2",
+            "opt:4+dig:2",
+            "opt:2@3+dig:1",
+            "opt:1@2+opt:1",
+            "opt:2!tcp:127.0.0.1:9000",
+            "opt:1+dig:1!uds:/tmp/litl.sock",
+            "opt:1@2!tcp:10.0.0.7:9000+opt:1",
+        ] {
             let t = Topology::parse(s).unwrap();
             assert_eq!(t.shorthand(), s, "canonical form of '{s}'");
             assert_eq!(Topology::parse(&t.shorthand()).unwrap(), t);
@@ -695,10 +801,27 @@ mod tests {
     fn parse_rejects_malformed_shorthand() {
         for bad in [
             "", "opt", "opt:", "opt:x", "opt:0", "opt:2@0", "laser:2", "opt:2@x",
-            "opt:2++dig:1",
+            "opt:2++dig:1", "opt:2!", "opt:2!tcp:", "opt:2!uds:", "opt:2!nohost",
         ] {
             assert!(Topology::parse(bad).is_err(), "'{bad}' should be rejected");
         }
+    }
+
+    #[test]
+    fn endpoints_strip_and_hash_distinctly() {
+        let remote = Topology::parse("opt:2!tcp:127.0.0.1:9000").unwrap();
+        assert_eq!(remote.shards[0].endpoint.as_deref(), Some("tcp:127.0.0.1:9000"));
+        let local = remote.strip_endpoints();
+        assert!(local.shards.iter().all(|s| s.endpoint.is_none()));
+        assert_eq!(local, Topology::parse("opt:2").unwrap());
+        // Endpoint placement is part of the canonical identity; net
+        // tuning knobs are not.
+        assert_ne!(remote.stable_hash(), local.stable_hash());
+        let tuned = remote.clone().with_net(NetOptions {
+            reconnect_tries: 9,
+            ..NetOptions::default()
+        });
+        assert_eq!(tuned.stable_hash(), remote.stable_hash());
     }
 
     #[test]
@@ -748,6 +871,7 @@ mod tests {
             partition: Partition::Modes,
             backing: MediumBacking::Materialized,
             pool: PoolPolicy::Owned,
+            net: NetOptions::default(),
         };
         assert_eq!(t.mode_widths(40).unwrap(), vec![30, 10]);
         // Starvation is an error, not a silent zero-width shard.
@@ -759,6 +883,7 @@ mod tests {
             partition: Partition::Modes,
             backing: MediumBacking::Materialized,
             pool: PoolPolicy::Owned,
+            net: NetOptions::default(),
         };
         assert!(skew.mode_widths(4).is_err());
     }
@@ -835,7 +960,7 @@ mod tests {
             .unwrap()
             .with_backing(MediumBacking::Streamed);
         let err = topo
-            .build_devices(OpuParams::default(), &medium, 1)
+            .build_devices(OpuParams::default(), &medium, 1, &Registry::new())
             .unwrap_err()
             .to_string();
         assert!(err.contains("backing"), "{err}");
@@ -874,6 +999,8 @@ mod tests {
     fn rejects_more_shards_than_modes() {
         let medium = Medium::Dense(TransmissionMatrix::sample(1, 10, 4));
         let topo = Topology::homogeneous(DeviceKind::Digital, 5);
-        assert!(topo.build_devices(OpuParams::default(), &medium, 1).is_err());
+        assert!(topo
+            .build_devices(OpuParams::default(), &medium, 1, &Registry::new())
+            .is_err());
     }
 }

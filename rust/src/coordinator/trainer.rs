@@ -167,6 +167,21 @@ impl Trainer {
                 )
             }
         };
+        // Warm-start the shared tile cache before the topology carves
+        // shard windows (clones share the cache Arc, so tiles loaded
+        // here serve every shard).  `validate_projection` has already
+        // required streamed backing + a cache budget for this knob.
+        if let Some(path) = &cfg.tile_cache_load {
+            if let Medium::Streamed(sm) = &medium {
+                let cache = sm.tile_cache().ok_or_else(|| {
+                    anyhow::anyhow!("--tile-cache-load needs --tile-cache-mb >= 1")
+                })?;
+                let n = cache
+                    .load_snapshot(path)
+                    .with_context(|| format!("loading tile cache snapshot {path}"))?;
+                log::info!("tile cache warm-started: {n} tiles from {path}");
+            }
+        }
         let projector: Option<Box<dyn Projector>> = match cfg.algo {
             Algo::Optical => Some(match cfg.projector {
                 ProjectorKind::OpticalHlo => {
@@ -362,6 +377,19 @@ impl Trainer {
 
     /// Full run: epochs × batches, periodic eval, optional CSV logging.
     pub fn run(&mut self, ds: &Dataset) -> Result<TrainReport> {
+        // Resume: restore model + optimizer state, then fast-forward the
+        // data pipeline past the steps the checkpoint already trained.
+        // Skipped batches are still DRAWN from each epoch's shuffle
+        // stream (and every epoch still splits the trainer rng once), so
+        // the remaining schedule is bitwise the schedule an
+        // uninterrupted run would have executed.
+        let mut to_skip = 0u64;
+        if let Some(path) = self.cfg.resume.clone() {
+            self.load_checkpoint(&path)?;
+            self.step = self.model.t as u64;
+            to_skip = self.step;
+            log::info!("resumed from {path}: continuing at step {}", self.step);
+        }
         self.warmup()?;
         let batch = self.model.batch;
         let mut csv = match &self.cfg.out_dir {
@@ -390,6 +418,14 @@ impl Trainer {
                 let next = batches.next();
                 trace::complete(trace::STAGE_DATA_LOAD, self.step + 1, NO_SHARD, tr);
                 let Some((x, yoh)) = next else { break };
+                if to_skip > 0 {
+                    // Replayed prefix of a resumed run: the batch was
+                    // consumed (the shuffle stream advances exactly as
+                    // it did pre-kill) but was trained before the
+                    // checkpoint, so it is not trained again.
+                    to_skip -= 1;
+                    continue;
+                }
                 let t0 = Instant::now();
                 let loss = self.train_step(&x, &yoh)?;
                 step_hist.observe(t0.elapsed().as_secs_f64());
@@ -438,6 +474,22 @@ impl Trainer {
         }
         if let Some(csv) = csv.as_mut() {
             csv.flush()?;
+        }
+
+        // Persist the resident TM tiles so the next run (or a projector
+        // server) warm-starts with zero regeneration for cached tiles.
+        if let Some(path) = &self.cfg.tile_cache_save {
+            if let Medium::Streamed(sm) = &self.medium {
+                if let Some(cache) = sm.tile_cache() {
+                    cache
+                        .save_snapshot(path)
+                        .with_context(|| format!("saving tile cache snapshot {path}"))?;
+                    log::info!(
+                        "tile cache snapshot saved to {path} ({} tiles)",
+                        cache.tiles_resident()
+                    );
+                }
+            }
         }
 
         let final_eval = self.evaluate(ds, Split::Test)?;

@@ -235,6 +235,39 @@
 //! failover re-routes (lane-wait hand-off between shards) and ring
 //! overflow degrades to counted drops, never corruption.
 //!
+//! ## Networked projector servers (the fleet of boxes)
+//!
+//! The paper's co-processor is a separate physical device behind a
+//! link; [`net`] makes the repo's shards separable the same way.  The
+//! service's submission protocol is promoted into a versioned wire
+//! format ([`net::frame`]: length-prefixed binary frames — magic,
+//! version, CRC32, request/response/error/health opcodes — over TCP or
+//! Unix domain sockets, untrusted lengths capped and `try_reserve`d),
+//! `litl serve` hosts shards of a `Topology` behind a listener
+//! ([`net::ProjectorServer`]), and [`net::RemoteProjector`] stands in
+//! for them behind the same [`coordinator::projector::Projector`]
+//! surface the trainer and the sharded service already consume —
+//! declared per shard via `remote:<addr>` topology endpoints
+//! (`opt:2!tcp:host:9000` shorthand), so one descriptor builds a mixed
+//! local+remote fleet.  Reconnects use bounded exponential backoff and
+//! happen only *between* requests; an in-flight frame on a dead
+//! connection completes with an error, so the failover state machine
+//! trips naturally on a killed server.  Warm-start persistence rides
+//! along: hot [`optics::stream::TileCache`] tiles snapshot to disk
+//! (`--tile-cache-save`/`--tile-cache-load`) and training resumes from
+//! checkpoints (`--resume`) through [`coordinator::checkpoint`].
+//!
+//! **Parity guarantee:** a loopback remote shard — TCP or UDS — is
+//! **bitwise identical** to the same shard in-process, noisy optics
+//! and streamed+cached media included: tensors travel as raw IEEE-754
+//! bits, each shard's requests serialize on its own device (noise-draw
+//! order = submission order), and in-flight requests are never
+//! silently retried.  Pinned in `rust/tests/net_parity.rs`; the CI
+//! `net-smoke` job proves it across real process boundaries and kills
+//! a server mid-run to prove failover drains onto survivors with zero
+//! client hangs.  `docs/operator-guide.md` and
+//! `docs/cutover-rehearsal-checklist.md` cover running the fleet.
+//!
 //! [`metrics::export`] turns the same data into standard formats:
 //! Chrome `trace_event` JSON (`--trace-out trace.json`, loadable in
 //! Perfetto / `chrome://tracing`, one timeline row per pipeline
@@ -256,6 +289,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exec;
 pub mod metrics;
+pub mod net;
 pub mod optics;
 pub mod runtime;
 pub mod sim;

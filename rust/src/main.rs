@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! litl train   [--algo bp|dfa-float|dfa-ternary|optical] [--epochs N] ...
+//! litl serve   --listen tcp:HOST:PORT|uds:/PATH [--topology opt:2] ...
 //! litl eval    --checkpoint file.ckpt [--config paper]
 //! litl opu     [--modes N]            # device self-test + info
 //! litl trace   [--algo optical]       # one-step dataflow trace (Fig. 1)
@@ -14,7 +15,10 @@ use litl::config::{Algo, MediumBacking, Partition, TrainConfig};
 use litl::coordinator::topology::Topology;
 use litl::coordinator::Trainer;
 use litl::data::{self, Split};
+use litl::metrics::Registry;
+use litl::net::{Addr, ProjectorServer};
 use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::{Medium, StreamedMedium};
 use litl::optics::{OpticalOpu, OpuParams};
 use litl::tensor::Tensor;
 use litl::util::logging;
@@ -26,7 +30,8 @@ const TRAIN_FLAGS: &[&str] = &[
     "checkpoint", "paper-lr", "n-ph", "read-sigma", "metrics", "shards",
     "partition", "medium", "topology", "tile-cache-mb", "tile-cache-stripes",
     "adapt-weights", "failover", "admit-rate-fps", "trace", "trace-out",
-    "metrics-out",
+    "metrics-out", "resume", "tile-cache-save", "tile-cache-load",
+    "net-connect-timeout-ms", "net-request-timeout-ms", "net-reconnect-tries",
 ];
 
 fn main() {
@@ -42,6 +47,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "opu" => cmd_opu(&args),
         "trace" => cmd_trace(&args),
@@ -138,6 +144,24 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     }
     if let Some(p) = args.flag("metrics-out") {
         cfg.set_kv(&format!("metrics_out={p}"))?;
+    }
+    if let Some(p) = args.flag("resume") {
+        cfg.set_kv(&format!("resume={p}"))?;
+    }
+    if let Some(p) = args.flag("tile-cache-save") {
+        cfg.set_kv(&format!("tile_cache_save={p}"))?;
+    }
+    if let Some(p) = args.flag("tile-cache-load") {
+        cfg.set_kv(&format!("tile_cache_load={p}"))?;
+    }
+    if let Some(v) = args.flag("net-connect-timeout-ms") {
+        cfg.set_kv(&format!("net_connect_timeout_ms={v}"))?;
+    }
+    if let Some(v) = args.flag("net-request-timeout-ms") {
+        cfg.set_kv(&format!("net_request_timeout_ms={v}"))?;
+    }
+    if let Some(v) = args.flag("net-reconnect-tries") {
+        cfg.set_kv(&format!("net_reconnect_tries={v}"))?;
     }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
@@ -248,6 +272,125 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Host shards of a topology behind a wire-protocol listener — the
+/// remote end of `--topology 'opt:2!tcp:HOST:PORT'`.  Devices are built
+/// through the SAME `Topology::build_devices` path a local run uses, so
+/// a loopback remote shard answers bitwise what the in-process shard
+/// would, noisy optics included: the leader and the server only have to
+/// agree on shapes and seeds (pass the leader's `--seed` as
+/// `--train-seed` and the derivations match `Trainer` exactly).
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "listen", "topology", "partition", "medium", "d-in", "modes",
+        "train-seed", "medium-seed", "noise-seed", "serve-shards",
+        "tile-cache-mb", "tile-cache-stripes", "tile-cache-load", "n-ph",
+        "read-sigma",
+    ])?;
+    let listen = args
+        .flag("listen")
+        .ok_or_else(|| anyhow::anyhow!("--listen tcp:HOST:PORT|uds:/PATH required"))?;
+    let addr = Addr::parse(listen)?;
+    let d_in = args.flag_parse::<usize>("d-in")?.unwrap_or(10);
+    let modes = args.flag_parse::<usize>("modes")?.unwrap_or(1024);
+    let train_seed = args
+        .flag_parse::<u64>("train-seed")?
+        .unwrap_or(TrainConfig::default().seed);
+    let medium_seed =
+        args.flag_parse::<u64>("medium-seed")?.unwrap_or(train_seed ^ 0xB);
+    let noise_seed =
+        args.flag_parse::<u64>("noise-seed")?.unwrap_or(train_seed ^ 0xF00);
+    let backing = MediumBacking::parse(args.flag("medium").unwrap_or("materialized"))?;
+    let tile_mb = args.flag_parse::<usize>("tile-cache-mb")?.unwrap_or(0);
+    let stripes =
+        args.flag_parse::<usize>("tile-cache-stripes")?.unwrap_or(0).max(1);
+    let medium = match backing {
+        MediumBacking::Materialized => {
+            Medium::Dense(TransmissionMatrix::sample(medium_seed, d_in, modes))
+        }
+        MediumBacking::Streamed => {
+            Medium::Streamed(StreamedMedium::new(medium_seed, d_in, modes))
+                .with_tile_cache_mb_striped(tile_mb, stripes)
+        }
+    };
+    if let Some(path) = args.flag("tile-cache-load") {
+        match &medium {
+            Medium::Streamed(sm) => {
+                let cache = sm.tile_cache().ok_or_else(|| {
+                    anyhow::anyhow!("--tile-cache-load needs --tile-cache-mb >= 1")
+                })?;
+                let n = cache.load_snapshot(path)?;
+                log::info!("tile cache warm-started: {n} tiles from {path}");
+            }
+            Medium::Dense(_) => {
+                bail!("--tile-cache-load only applies to --medium streamed")
+            }
+        }
+    }
+    // Endpoints in the spec describe the LEADER's dial plan; this
+    // process builds every shard locally and serves the requested ones.
+    let spec = args.flag("topology").unwrap_or("opt:1");
+    let mut topo = Topology::parse(spec)?.strip_endpoints().with_backing(backing);
+    if let Some(p) = args.flag("partition") {
+        topo = topo.with_partition(Partition::parse(p)?);
+    }
+    let mut params = OpuParams::default();
+    if let Some(n) = args.flag_parse::<f32>("n-ph")? {
+        params.n_ph = n;
+    }
+    if let Some(r) = args.flag_parse::<f32>("read-sigma")? {
+        params.read_sigma = r;
+    }
+    let registry = Registry::new();
+    let devices = topo.build_devices(params, &medium, noise_seed, &registry)?;
+    let total = devices.len();
+    let mut slots: Vec<Option<_>> = devices.into_iter().map(Some).collect();
+    let ids: Vec<usize> = match args.flag("serve-shards") {
+        Some(list) => list
+            .split(',')
+            .map(|t| {
+                t.trim().parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!(
+                        "--serve-shards expects comma-separated shard \
+                         indices, got '{t}'"
+                    )
+                })
+            })
+            .collect::<Result<_>>()?,
+        None => (0..total).collect(),
+    };
+    let mut serve = Vec::with_capacity(ids.len());
+    for i in ids {
+        anyhow::ensure!(
+            i < total,
+            "--serve-shards index {i} out of range (topology has {total} shards)"
+        );
+        let dev = slots[i]
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("--serve-shards lists shard {i} twice"))?;
+        serve.push((i as u32, dev));
+    }
+    let hosted = serve.len();
+    let server = ProjectorServer::bind(&addr, serve, registry)?;
+    log::info!(
+        "serving {hosted} of {total} '{}' shards (partition={}, medium={}, \
+         d_in={d_in}, modes={modes})",
+        topo.shorthand(),
+        topo.partition.name(),
+        backing.name(),
+    );
+    // The sentinel line is the spawn contract: parent processes (tests,
+    // operators' scripts) read it to learn the bound address — with
+    // `tcp:HOST:0` the kernel picks the port, so print what was bound.
+    println!("litl-serve listening on {}", server.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    // Serve until killed: connections are handled by the listener's own
+    // threads, so the main thread just parks.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -392,7 +535,12 @@ COMMANDS:
                                     hetero:opt:4+dig:2 or opt:2@3+dig:1
                                     (KIND:COUNT[@WEIGHT] groups joined
                                     by '+'; weights drive the batch-row
-                                    split; replaces --shards)
+                                    split; replaces --shards); append
+                                    !tcp:HOST:PORT or !uds:/PATH to a
+                                    group to dial a `litl serve` process
+                                    for those shards instead of building
+                                    them in-process (bitwise identical
+                                    either way)
           --partition modes|batch   farm partition axis: output-mode
                                     slices (default) or batch-row ranges
           --medium materialized|streamed
@@ -437,11 +585,38 @@ COMMANDS:
           --metrics-out FILE        dump the metrics registry in
                                     Prometheus text exposition format at
                                     exit (any trace level)
+          --resume FILE             load a checkpoint first and continue
+                                    training from its step (killed-and-
+                                    resumed == uninterrupted, bitwise,
+                                    for deterministic projectors)
+          --tile-cache-save FILE    snapshot the resident TM tiles at
+                                    exit (streamed medium + cache only);
+                                    --tile-cache-load FILE warm-starts
+                                    the next run from it (bitwise replay,
+                                    zero regeneration for cached tiles)
+          --net-connect-timeout-ms N / --net-request-timeout-ms N /
+          --net-reconnect-tries N   remote-shard client knobs (dial,
+                                    per-request deadline, bounded
+                                    exponential-backoff redial)
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)
           --checkpoint FILE         save state at the end
           --set key=value           raw config override (repeatable)
+  serve   Host topology shards behind a wire-protocol listener — the
+          remote end of --topology 'opt:2!tcp:HOST:PORT'
+          --listen tcp:HOST:PORT|uds:/PATH   (tcp HOST:0 = pick a port;
+                                    the bound address is printed as
+                                    `litl-serve listening on ...`)
+          --topology SPEC --partition modes|batch
+          --medium materialized|streamed --d-in N --modes N
+          --train-seed S            derive medium/noise seeds exactly as
+                                    the leader with --seed S does, so a
+                                    loopback shard is bitwise identical
+                                    (or set --medium-seed/--noise-seed)
+          --serve-shards 0,2        host a subset of the shard indices
+          --tile-cache-mb N --tile-cache-stripes N --tile-cache-load FILE
+          --n-ph F --read-sigma F   OPU noise, as in train
   eval    Evaluate a checkpoint: --checkpoint FILE [--config paper]
   opu     Simulated device info + self-test [--modes N --n-ph F]
   trace   One-step dataflow trace (Fig. 1) [--algo optical]

@@ -69,6 +69,9 @@ pub const STAGE_TRAIN_FWD: &str = "train_fwd";
 pub const STAGE_TRAIN_PROJECT: &str = "train_project";
 pub const STAGE_TRAIN_APPLY: &str = "train_apply";
 pub const STAGE_DATA_LOAD: &str = "data_load";
+// Networked projector client stages (frame = per-client request seq).
+pub const STAGE_NET_SEND: &str = "net_send";
+pub const STAGE_NET_RECV: &str = "net_recv";
 
 /// How much the tracer does: `Off` (default) is a few atomics,
 /// `Summary` enables the profiling hooks (per-stage histograms and the

@@ -1,0 +1,277 @@
+//! The remote projector client: a [`Projector`] whose device lives in
+//! another process.
+//!
+//! One [`RemoteProjector`] owns one connection to one shard of a
+//! [`super::server::ProjectorServer`].  Construction dials eagerly and
+//! exchanges `Hello`/`HelloOk`, caching the remote device's identity
+//! (modes, ternary requirement, kind) so every `Projector` query after
+//! that is answered locally; each `project` call is one
+//! `Project`/`ProjectOk` round trip.
+//!
+//! **Failure semantics** (load-bearing for the serving layer's
+//! failover): a connection is (re)established with bounded
+//! exponential-backoff dial attempts, but an *in-flight* request is
+//! never retried — a resent frame would advance the remote device's
+//! noise stream a second time and silently diverge the bits.  Any
+//! transport error or reply timeout mid-request kills the connection
+//! and surfaces as `Err`, which the sharded service counts toward its
+//! error-streak trip; the *next* request redials (counting
+//! `net_reconnects`).
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{self, Msg};
+use super::{
+    Addr, NetOptions, NetStream, NET_BYTES_RX, NET_BYTES_TX, NET_FRAMES_RX, NET_FRAMES_TX,
+    NET_RECONNECTS, NET_RTT,
+};
+use crate::coordinator::projector::Projector;
+use crate::metrics::trace::{self, STAGE_NET_RECV, STAGE_NET_SEND};
+use crate::metrics::{Counter, Histogram, Registry};
+use crate::tensor::Tensor;
+
+/// Client half of one remote shard.
+pub struct RemoteProjector {
+    addr: Addr,
+    shard: u32,
+    opts: NetOptions,
+    conn: Option<NetStream>,
+    // Cached from HelloOk.
+    modes: usize,
+    requires_ternary: bool,
+    // Server-side cumulative accounts, updated from each ProjectOk.
+    sim_seconds: f64,
+    energy_joules: f64,
+    // Observability.
+    frames_tx: Counter,
+    frames_rx: Counter,
+    bytes_tx: Counter,
+    bytes_rx: Counter,
+    reconnects: Counter,
+    rtt: Histogram,
+    seq: u64,
+}
+
+impl RemoteProjector {
+    /// Dial `addr`, greet `shard`, and cache its identity.  Fails fast
+    /// (after the bounded dial attempts) if the server is unreachable —
+    /// a topology build should not hand out dead devices.
+    pub fn connect(
+        addr: &Addr,
+        shard: u32,
+        opts: NetOptions,
+        metrics: &Registry,
+    ) -> Result<RemoteProjector> {
+        let mut rp = RemoteProjector {
+            addr: addr.clone(),
+            shard,
+            opts,
+            conn: None,
+            modes: 0,
+            requires_ternary: true,
+            sim_seconds: 0.0,
+            energy_joules: 0.0,
+            frames_tx: metrics.counter(NET_FRAMES_TX),
+            frames_rx: metrics.counter(NET_FRAMES_RX),
+            bytes_tx: metrics.counter(NET_BYTES_TX),
+            bytes_rx: metrics.counter(NET_BYTES_RX),
+            reconnects: metrics.counter(NET_RECONNECTS),
+            rtt: metrics.histogram(NET_RTT),
+            seq: 0,
+        };
+        rp.ensure_conn(true)
+            .with_context(|| format!("connecting to projector server {addr} shard {shard}"))?;
+        Ok(rp)
+    }
+
+    /// The endpoint this client talks to.
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// The remote shard id.
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    /// Dial + greet with bounded exponential backoff.  `first` skips
+    /// the reconnect counter (an initial connect is not a reconnect).
+    fn ensure_conn(&mut self, first: bool) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        if !first {
+            self.reconnects.inc();
+        }
+        let tries = self.opts.reconnect_tries.max(1);
+        let mut backoff = Duration::from_millis(self.opts.reconnect_base_ms);
+        let mut last_err = None;
+        for attempt in 0..tries {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2)
+                    .min(Duration::from_millis(self.opts.reconnect_max_ms));
+            }
+            match NetStream::connect(
+                &self.addr,
+                Duration::from_millis(self.opts.connect_timeout_ms),
+            ) {
+                Ok(stream) => match self.hello(stream) {
+                    Ok(()) => return Ok(()),
+                    Err(e) => last_err = Some(e),
+                },
+                Err(e) => last_err = Some(e),
+            }
+        }
+        bail!(
+            "projector server {} unreachable after {tries} attempts: {}",
+            self.addr,
+            last_err.map_or_else(|| "no error recorded".into(), |e| e.to_string())
+        )
+    }
+
+    fn hello(&mut self, mut stream: NetStream) -> Result<()> {
+        stream.set_read_timeout(Some(Duration::from_millis(self.opts.request_timeout_ms)))?;
+        let n = frame::send(&mut stream, &Msg::Hello { shard: self.shard })?;
+        stream.flush()?;
+        self.frames_tx.inc();
+        self.bytes_tx.add(n as u64);
+        let (reply, n) = frame::recv(&mut stream)?;
+        self.frames_rx.inc();
+        self.bytes_rx.add(n as u64);
+        match reply {
+            Msg::HelloOk {
+                modes,
+                requires_ternary,
+                kind: _,
+            } => {
+                self.modes = modes as usize;
+                self.requires_ternary = requires_ternary;
+                self.conn = Some(stream);
+                Ok(())
+            }
+            Msg::Error { message } => bail!("server rejected hello: {message}"),
+            other => bail!("unexpected hello reply {other:?}"),
+        }
+    }
+
+    /// Health-check round trip on the current connection.
+    pub fn health(&mut self) -> Result<()> {
+        self.ensure_conn(false)?;
+        let stream = self.conn.as_mut().unwrap();
+        let res = (|| -> Result<()> {
+            frame::send(stream, &Msg::Health)?;
+            stream.flush()?;
+            match frame::recv(stream)?.0 {
+                Msg::HealthOk => Ok(()),
+                other => bail!("unexpected health reply {other:?}"),
+            }
+        })();
+        if res.is_err() {
+            self.conn = None;
+        }
+        res
+    }
+}
+
+impl Projector for RemoteProjector {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        // Reconnect (bounded backoff) happens here, BETWEEN requests.
+        self.ensure_conn(false)?;
+        self.seq += 1;
+        let seq = self.seq;
+        let started = Instant::now();
+        let stream = self.conn.as_mut().unwrap();
+        let send_res = (|| -> Result<usize> {
+            let token = trace::start();
+            let n = frame::send(
+                stream,
+                &Msg::Project {
+                    shard: self.shard,
+                    frames: frames.clone(),
+                },
+            )?;
+            stream.flush()?;
+            trace::complete(STAGE_NET_SEND, seq, self.shard, token);
+            Ok(n)
+        })();
+        let n = match send_res {
+            Ok(n) => n,
+            Err(e) => {
+                // The frame may be half-written: the framing on this
+                // connection is unusable, and the request must NOT be
+                // resent (the server may already have projected it).
+                self.conn = None;
+                return Err(e.context("remote projection send failed"));
+            }
+        };
+        self.frames_tx.inc();
+        self.bytes_tx.add(n as u64);
+
+        let token = trace::start();
+        let recv_res = frame::recv(stream);
+        let (reply, n) = match recv_res {
+            Ok(ok) => ok,
+            Err(e) => {
+                // Timeout or dead transport with a request in flight:
+                // complete it with an error (never silence, never a
+                // retry) so the failover machinery sees the failure.
+                self.conn = None;
+                return Err(anyhow::Error::new(e).context(format!(
+                    "remote projection reply from {} shard {} failed",
+                    self.addr, self.shard
+                )));
+            }
+        };
+        trace::complete(STAGE_NET_RECV, seq, self.shard, token);
+        self.frames_rx.inc();
+        self.bytes_rx.add(n as u64);
+        self.rtt.observe(started.elapsed().as_secs_f64());
+        match reply {
+            Msg::ProjectOk {
+                p1,
+                p2,
+                sim_seconds,
+                energy_joules,
+            } => {
+                self.sim_seconds = sim_seconds;
+                self.energy_joules = energy_joules;
+                Ok((p1, p2))
+            }
+            // A structured server-side error: the connection and its
+            // framing are fine, keep it.
+            Msg::Error { message } => bail!(
+                "remote shard {} at {}: {message}",
+                self.shard,
+                self.addr
+            ),
+            other => {
+                self.conn = None;
+                bail!("unexpected projection reply {other:?}")
+            }
+        }
+    }
+
+    fn modes(&self) -> usize {
+        self.modes
+    }
+
+    fn sim_seconds(&self) -> f64 {
+        self.sim_seconds
+    }
+
+    fn energy_joules(&self) -> f64 {
+        self.energy_joules
+    }
+
+    fn kind(&self) -> &'static str {
+        "remote"
+    }
+
+    fn requires_ternary(&self) -> bool {
+        self.requires_ternary
+    }
+}

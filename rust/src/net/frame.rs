@@ -1,0 +1,628 @@
+//! The versioned wire format for networked projector servers.
+//!
+//! Every message on the link is one *frame*:
+//!
+//! ```text
+//! magic    "LITL"              4 bytes
+//! version  u16 LE              = 1
+//! opcode   u16 LE              (see the OP_* constants)
+//! len      u32 LE              payload byte count (<= MAX_PAYLOAD)
+//! payload  len bytes
+//! crc32    u32 LE              over version..payload (flate2's crc)
+//! ```
+//!
+//! Design rules, in order:
+//!
+//! 1. **Never trust a length field.**  `len` is capped at
+//!    [`MAX_PAYLOAD`] before any allocation, the allocation itself goes
+//!    through `try_reserve_exact` (an adversarial header cannot abort
+//!    the process), and tensor dimensions are re-capped inside the
+//!    payload decode.
+//! 2. **Typed errors, never panics.**  Every malformed input — short
+//!    read, wrong magic, wrong version, unknown opcode, corrupt CRC,
+//!    trailing bytes — maps to a [`WireError`] variant.  The decode
+//!    robustness suite at the bottom of this file feeds truncations and
+//!    bit flips at every byte position and requires an `Err`, not a
+//!    panic.
+//! 3. **Bit-exact tensors.**  `f32` values travel as their IEEE-754
+//!    bits (`to_bits`/`from_bits`, little-endian), so a projection that
+//!    crossed the wire is the same bits as one that never left the
+//!    process — the parity pin in `tests/net_parity.rs` depends on it.
+//!
+//! The message vocabulary ([`Msg`]) is the projector-service submission
+//! protocol, promoted: a client greets a shard (`Hello`/`HelloOk`,
+//! carrying the device's modes/kind so the client can stand in for it
+//! behind the [`crate::coordinator::projector::Projector`] trait),
+//! submits frames (`Project`/`ProjectOk`, the reply carrying the
+//! server-side cumulative sim-clock and energy account), and probes
+//! liveness (`Health`/`HealthOk`).  Any server-side failure travels as
+//! `Error` with a message, so a client never hangs on a reply.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::tensor::Tensor;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"LITL";
+/// Wire protocol version (bump on any incompatible layout change).
+pub const VERSION: u16 = 1;
+/// Fixed header size: magic + version + opcode + payload length.
+pub const HEADER_LEN: usize = 12;
+/// Trailing CRC size.
+pub const CRC_LEN: usize = 4;
+/// Hard cap on a payload an untrusted peer can declare (1 GiB).
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+/// Hard cap on either tensor dimension inside a payload.
+pub const MAX_TENSOR_DIM: u32 = 1 << 24;
+
+// Opcodes (request/response pairs, then the error/health singles).
+pub const OP_HELLO: u16 = 1;
+pub const OP_HELLO_OK: u16 = 2;
+pub const OP_PROJECT: u16 = 3;
+pub const OP_PROJECT_OK: u16 = 4;
+pub const OP_ERROR: u16 = 5;
+pub const OP_HEALTH: u16 = 6;
+pub const OP_HEALTH_OK: u16 = 7;
+
+/// Typed decode/transport failure.  Every variant is a protocol or I/O
+/// condition a hostile or broken peer can cause; none of them panic.
+#[derive(Debug)]
+pub enum WireError {
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// The stream ended (or a field overran its buffer) mid-frame.
+    Truncated,
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version field differs from [`VERSION`].
+    BadVersion(u16),
+    /// Opcode outside the known vocabulary.
+    BadOpcode(u16),
+    /// A declared length exceeded its cap — rejected *before* any
+    /// allocation or read.
+    Oversize(u64),
+    /// CRC32 over the frame body disagreed with the trailer.
+    BadCrc { want: u32, got: u32 },
+    /// `try_reserve` refused the (already capped) allocation.
+    Alloc(usize),
+    /// Structurally invalid payload (trailing bytes, bad UTF-8, …).
+    Malformed(&'static str),
+    /// Underlying transport error (timeouts surface here).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported wire version {v} (want {VERSION})")
+            }
+            WireError::BadOpcode(op) => write!(f, "unknown opcode {op}"),
+            WireError::Oversize(n) => write!(f, "declared length {n} exceeds cap"),
+            WireError::BadCrc { want, got } => {
+                write!(f, "frame CRC mismatch (want {want:08x}, got {got:08x})")
+            }
+            WireError::Alloc(n) => write!(f, "allocation of {n} bytes refused"),
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+            WireError::Io(e) => write!(f, "wire i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WireError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e)
+        }
+    }
+}
+
+/// The message vocabulary carried over frames.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Client → server: bind this connection's requests to `shard`.
+    Hello { shard: u32 },
+    /// Server → client: the greeted shard's device identity, so the
+    /// remote client can answer `Projector` queries locally.
+    HelloOk {
+        modes: u32,
+        requires_ternary: bool,
+        kind: String,
+    },
+    /// Client → server: project `frames` on `shard`.
+    Project { shard: u32, frames: Tensor },
+    /// Server → client: the two quadratures plus the shard device's
+    /// *cumulative* sim-clock/energy account after this projection.
+    ProjectOk {
+        p1: Tensor,
+        p2: Tensor,
+        sim_seconds: f64,
+        energy_joules: f64,
+    },
+    /// Server → client: the request failed; the message explains why.
+    Error { message: String },
+    /// Liveness probe.
+    Health,
+    /// Liveness reply.
+    HealthOk,
+}
+
+// ---------------------------------------------------------------------------
+// Frame transport
+
+/// Read exactly `buf.len()` bytes.  `clean_eof` marks a frame boundary:
+/// EOF before the first byte is a graceful [`WireError::Closed`], EOF
+/// anywhere else is [`WireError::Truncated`].
+fn read_full(r: &mut impl Read, buf: &mut [u8], clean_eof: bool) -> Result<(), WireError> {
+    let mut at = 0usize;
+    while at < buf.len() {
+        match r.read(&mut buf[at..]) {
+            Ok(0) => {
+                return Err(if clean_eof && at == 0 {
+                    WireError::Closed
+                } else {
+                    WireError::Truncated
+                })
+            }
+            Ok(n) => at += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::from(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame: validates magic, version, the length cap, and the
+/// CRC; returns the raw `(opcode, payload)`.  Opcode vocabulary is
+/// checked by [`decode`], not here, so a future version can skip
+/// unknown frames without re-parsing.
+pub fn read_frame(r: &mut impl Read) -> Result<(u16, Vec<u8>), WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    read_full(r, &mut header, true)?;
+    if header[..4] != MAGIC {
+        return Err(WireError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let opcode = u16::from_le_bytes([header[6], header[7]]);
+    let len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireError::Oversize(len as u64));
+    }
+    let mut payload: Vec<u8> = Vec::new();
+    payload
+        .try_reserve_exact(len as usize)
+        .map_err(|_| WireError::Alloc(len as usize))?;
+    payload.resize(len as usize, 0);
+    read_full(r, &mut payload, false)?;
+    let mut crc_bytes = [0u8; CRC_LEN];
+    read_full(r, &mut crc_bytes, false)?;
+    let want = u32::from_le_bytes(crc_bytes);
+    let mut hasher = flate2::Crc::new();
+    hasher.update(&header[4..]);
+    hasher.update(&payload);
+    let got = hasher.sum();
+    if got != want {
+        return Err(WireError::BadCrc { want, got });
+    }
+    Ok((opcode, payload))
+}
+
+/// Write one frame; returns the total bytes put on the wire (for the
+/// `net_bytes_tx` counter).
+pub fn write_frame(w: &mut impl Write, opcode: u16, payload: &[u8]) -> Result<usize, WireError> {
+    if payload.len() as u64 > MAX_PAYLOAD as u64 {
+        return Err(WireError::Oversize(payload.len() as u64));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6..8].copy_from_slice(&opcode.to_le_bytes());
+    header[8..12].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    let mut hasher = flate2::Crc::new();
+    hasher.update(&header[4..]);
+    hasher.update(payload);
+    let crc = hasher.sum().to_le_bytes();
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.write_all(&crc)?;
+    Ok(HEADER_LEN + payload.len() + CRC_LEN)
+}
+
+/// Encode + write one message; returns bytes written.
+pub fn send(w: &mut impl Write, msg: &Msg) -> Result<usize, WireError> {
+    let (opcode, payload) = encode(msg);
+    write_frame(w, opcode, &payload)
+}
+
+/// Read + decode one message; returns it with the bytes read (for the
+/// `net_bytes_rx` counter).
+pub fn recv(r: &mut impl Read) -> Result<(Msg, usize), WireError> {
+    let (opcode, payload) = read_frame(r)?;
+    let n = HEADER_LEN + payload.len() + CRC_LEN;
+    Ok((decode(opcode, &payload)?, n))
+}
+
+// ---------------------------------------------------------------------------
+// Payload codec
+
+/// Bounds-checked little-endian payload reader.
+struct Dec<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, at: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.buf.len() - self.at {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(u64::from_le_bytes(
+            self.bytes(8)?.try_into().unwrap(),
+        )))
+    }
+
+    /// Decode must consume the payload exactly — trailing bytes mean a
+    /// peer speaking a different dialect.
+    fn done(&self) -> Result<(), WireError> {
+        if self.at != self.buf.len() {
+            return Err(WireError::Malformed("trailing payload bytes"));
+        }
+        Ok(())
+    }
+}
+
+/// `[rows, cols]` + bit-exact little-endian f32 data.
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.extend_from_slice(&(t.rows() as u32).to_le_bytes());
+    out.extend_from_slice(&(t.cols() as u32).to_le_bytes());
+    for &v in t.data() {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn get_tensor(d: &mut Dec) -> Result<Tensor, WireError> {
+    let rows = d.u32()?;
+    let cols = d.u32()?;
+    if rows > MAX_TENSOR_DIM || cols > MAX_TENSOR_DIM {
+        return Err(WireError::Oversize(rows.max(cols) as u64));
+    }
+    let numel = rows as u64 * cols as u64;
+    if numel * 4 > MAX_PAYLOAD as u64 {
+        return Err(WireError::Oversize(numel * 4));
+    }
+    let raw = d.bytes(numel as usize * 4)?;
+    let mut data: Vec<f32> = Vec::new();
+    data.try_reserve_exact(numel as usize)
+        .map_err(|_| WireError::Alloc(numel as usize * 4))?;
+    for c in raw.chunks_exact(4) {
+        data.push(f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())));
+    }
+    Ok(Tensor::from_vec(&[rows as usize, cols as usize], data))
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(d: &mut Dec) -> Result<String, WireError> {
+    let n = d.u32()?;
+    if n > MAX_PAYLOAD {
+        return Err(WireError::Oversize(n as u64));
+    }
+    let raw = d.bytes(n as usize)?;
+    String::from_utf8(raw.to_vec()).map_err(|_| WireError::Malformed("non-utf8 string"))
+}
+
+/// Encode a message into `(opcode, payload)`.
+pub fn encode(msg: &Msg) -> (u16, Vec<u8>) {
+    let mut p = Vec::new();
+    let op = match msg {
+        Msg::Hello { shard } => {
+            p.extend_from_slice(&shard.to_le_bytes());
+            OP_HELLO
+        }
+        Msg::HelloOk {
+            modes,
+            requires_ternary,
+            kind,
+        } => {
+            p.extend_from_slice(&modes.to_le_bytes());
+            p.push(u8::from(*requires_ternary));
+            put_str(&mut p, kind);
+            OP_HELLO_OK
+        }
+        Msg::Project { shard, frames } => {
+            p.extend_from_slice(&shard.to_le_bytes());
+            put_tensor(&mut p, frames);
+            OP_PROJECT
+        }
+        Msg::ProjectOk {
+            p1,
+            p2,
+            sim_seconds,
+            energy_joules,
+        } => {
+            put_tensor(&mut p, p1);
+            put_tensor(&mut p, p2);
+            p.extend_from_slice(&sim_seconds.to_bits().to_le_bytes());
+            p.extend_from_slice(&energy_joules.to_bits().to_le_bytes());
+            OP_PROJECT_OK
+        }
+        Msg::Error { message } => {
+            put_str(&mut p, message);
+            OP_ERROR
+        }
+        Msg::Health => OP_HEALTH,
+        Msg::HealthOk => OP_HEALTH_OK,
+    };
+    (op, p)
+}
+
+/// Decode a raw `(opcode, payload)` into a [`Msg`].
+pub fn decode(opcode: u16, payload: &[u8]) -> Result<Msg, WireError> {
+    let mut d = Dec::new(payload);
+    let msg = match opcode {
+        OP_HELLO => Msg::Hello { shard: d.u32()? },
+        OP_HELLO_OK => Msg::HelloOk {
+            modes: d.u32()?,
+            requires_ternary: d.u8()? != 0,
+            kind: get_str(&mut d)?,
+        },
+        OP_PROJECT => Msg::Project {
+            shard: d.u32()?,
+            frames: get_tensor(&mut d)?,
+        },
+        OP_PROJECT_OK => Msg::ProjectOk {
+            p1: get_tensor(&mut d)?,
+            p2: get_tensor(&mut d)?,
+            sim_seconds: d.f64()?,
+            energy_joules: d.f64()?,
+        },
+        OP_ERROR => Msg::Error {
+            message: get_str(&mut d)?,
+        },
+        OP_HEALTH => Msg::Health,
+        OP_HEALTH_OK => Msg::HealthOk,
+        other => return Err(WireError::BadOpcode(other)),
+    };
+    d.done()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn frame_bytes(msg: &Msg) -> Vec<u8> {
+        let mut out = Vec::new();
+        send(&mut out, msg).unwrap();
+        out
+    }
+
+    fn sample_msgs() -> Vec<Msg> {
+        let mut rng = Pcg64::seeded(42);
+        let t1 = Tensor::randn(&[3, 5], &mut rng, 1.0);
+        let t2 = Tensor::randn(&[3, 5], &mut rng, 2.0);
+        vec![
+            Msg::Hello { shard: 7 },
+            Msg::HelloOk {
+                modes: 128,
+                requires_ternary: true,
+                kind: "optical-native".into(),
+            },
+            Msg::Project {
+                shard: 2,
+                frames: t1.clone(),
+            },
+            Msg::ProjectOk {
+                p1: t1,
+                p2: t2,
+                sim_seconds: 0.125,
+                energy_joules: 3.75,
+            },
+            Msg::Error {
+                message: "shard 9 not hosted here".into(),
+            },
+            Msg::Health,
+            Msg::HealthOk,
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips_bit_exactly() {
+        for msg in sample_msgs() {
+            let bytes = frame_bytes(&msg);
+            let mut r = &bytes[..];
+            let (back, n) = recv(&mut r).unwrap();
+            assert_eq!(back, msg);
+            assert_eq!(n, bytes.len());
+            assert!(r.is_empty(), "reader consumed the exact frame");
+        }
+    }
+
+    #[test]
+    fn tensor_bits_survive_the_wire() {
+        // Values a lossy text/float path would mangle: negative zero,
+        // subnormals, extreme magnitudes.
+        let t = Tensor::from_vec(
+            &[1, 4],
+            vec![-0.0f32, f32::MIN_POSITIVE / 2.0, 3.4e38, -1.1754944e-38],
+        );
+        let msg = Msg::Project {
+            shard: 0,
+            frames: t.clone(),
+        };
+        let bytes = frame_bytes(&msg);
+        let (back, _) = recv(&mut &bytes[..]).unwrap();
+        let Msg::Project { frames, .. } = back else {
+            panic!("wrong opcode back")
+        };
+        for (a, b) in t.data().iter().zip(frames.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn clean_eof_at_frame_boundary_is_closed() {
+        let empty: &[u8] = &[];
+        assert!(matches!(recv(&mut &empty[..]), Err(WireError::Closed)));
+    }
+
+    #[test]
+    fn every_truncation_point_is_a_typed_error() {
+        let bytes = frame_bytes(&Msg::Hello { shard: 3 });
+        for cut in 1..bytes.len() {
+            let err = recv(&mut &bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, WireError::Truncated),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupted_crc_is_detected() {
+        let mut bytes = frame_bytes(&Msg::Hello { shard: 3 });
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        assert!(matches!(
+            recv(&mut &bytes[..]),
+            Err(WireError::BadCrc { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_rejected() {
+        let mut bytes = frame_bytes(&Msg::Health);
+        bytes[0] = b'X';
+        assert!(matches!(recv(&mut &bytes[..]), Err(WireError::BadMagic(_))));
+
+        let mut bytes = frame_bytes(&Msg::Health);
+        bytes[4] = 0xff; // version LE low byte
+        assert!(matches!(
+            recv(&mut &bytes[..]),
+            Err(WireError::BadVersion(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_opcode_is_rejected() {
+        let mut out = Vec::new();
+        write_frame(&mut out, 0x7777, b"").unwrap();
+        assert!(matches!(
+            recv(&mut &out[..]),
+            Err(WireError::BadOpcode(0x7777))
+        ));
+    }
+
+    #[test]
+    fn oversize_length_is_rejected_before_allocation() {
+        // A header claiming u32::MAX payload bytes, followed by nothing:
+        // must fail on the cap *without* attempting the allocation or a
+        // read (the reader behind it is empty, so an attempted read
+        // would surface Truncated instead).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&OP_HEALTH.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            recv(&mut &bytes[..]),
+            Err(WireError::Oversize(_))
+        ));
+    }
+
+    #[test]
+    fn oversize_tensor_dims_are_rejected() {
+        // A legal frame whose *payload* declares an absurd tensor: the
+        // inner caps must catch it even though the frame layer passed.
+        let mut p = Vec::new();
+        p.extend_from_slice(&0u32.to_le_bytes()); // shard
+        p.extend_from_slice(&(MAX_TENSOR_DIM + 1).to_le_bytes()); // rows
+        p.extend_from_slice(&1u32.to_le_bytes()); // cols
+        let mut out = Vec::new();
+        write_frame(&mut out, OP_PROJECT, &p).unwrap();
+        assert!(matches!(
+            recv(&mut &out[..]),
+            Err(WireError::Oversize(_))
+        ));
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let mut p = 5u32.to_le_bytes().to_vec();
+        p.push(0xAB); // one byte beyond Hello's fixed payload
+        let mut out = Vec::new();
+        write_frame(&mut out, OP_HELLO, &p).unwrap();
+        assert!(matches!(
+            recv(&mut &out[..]),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn single_bit_flips_never_panic_and_never_pass_silently() {
+        // Flip one bit at every position of a valid frame: decode must
+        // return *something* (Ok only if the flip cancels out, which a
+        // CRC makes practically impossible here) and must never panic.
+        for msg in sample_msgs() {
+            let clean = frame_bytes(&msg);
+            for pos in 0..clean.len() {
+                let mut dirty = clean.clone();
+                dirty[pos] ^= 1 << (pos % 8);
+                let res = recv(&mut &dirty[..]);
+                assert!(res.is_err(), "bit flip at {pos} decoded silently");
+            }
+        }
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        let mut rng = Pcg64::seeded(9);
+        for len in [0usize, 1, 7, 12, 13, 40, 256] {
+            for _ in 0..64 {
+                let bytes: Vec<u8> =
+                    (0..len).map(|_| rng.next_below(256) as u8).collect();
+                let _ = recv(&mut &bytes[..]); // must not panic
+            }
+        }
+    }
+}

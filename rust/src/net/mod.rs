@@ -1,0 +1,214 @@
+//! Networked projector servers: the wire protocol, the server that
+//! hosts shard devices behind a listener, and the client that stands in
+//! for them behind the [`crate::coordinator::projector::Projector`]
+//! trait.
+//!
+//! The paper's co-processor is a *separate physical device* the trainer
+//! talks to over a link; this module is that link.  A `litl serve`
+//! process hosts one or more shards of a
+//! [`crate::coordinator::topology::Topology`] behind a TCP or Unix-
+//! domain-socket listener ([`server::ProjectorServer`]); a trainer (or
+//! the sharded projection service) reaches them through
+//! [`client::RemoteProjector`], declared per shard via the topology's
+//! `remote:<addr>` endpoints — one descriptor, mixed local+remote
+//! fleet, same single build path.
+//!
+//! **Standing contract:** a loopback remote shard is **bitwise
+//! identical** to the same shard in-process, noisy optics included.
+//! The wire codec ([`frame`]) moves f32 tensors as raw IEEE-754 bits,
+//! the server serializes each shard's requests on its own device (so
+//! the per-shard noise-draw order is the submission order, exactly as
+//! in-process), and the client *never* silently retries an in-flight
+//! projection — a resend would advance the device's noise stream and
+//! diverge the bits.  Reconnection with bounded exponential backoff
+//! happens only *between* requests; a request cut mid-flight completes
+//! with an error so the serving layer's failover state machine trips
+//! naturally on a dead server.  Pinned in `tests/net_parity.rs` and
+//! enforced by the CI `net-smoke` job.
+//!
+//! **Observability:** both ends count `net_frames_{tx,rx}` /
+//! `net_bytes_{tx,rx}`, the client counts `net_reconnects` and times
+//! each round trip into the `net_rtt` histogram, all through the
+//! ordinary [`crate::metrics::Registry`] (and hence the Prometheus
+//! export), plus a `net_send`/`net_recv` trace span pair per request.
+
+pub mod client;
+pub mod frame;
+pub mod server;
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+pub use client::RemoteProjector;
+pub use frame::{Msg, WireError};
+pub use server::ProjectorServer;
+
+// Registry metric names (client + server share the vocabulary).
+pub const NET_FRAMES_TX: &str = "net_frames_tx";
+pub const NET_FRAMES_RX: &str = "net_frames_rx";
+pub const NET_BYTES_TX: &str = "net_bytes_tx";
+pub const NET_BYTES_RX: &str = "net_bytes_rx";
+pub const NET_RECONNECTS: &str = "net_reconnects";
+pub const NET_RTT: &str = "net_rtt";
+
+/// A listener/dial address: TCP (`tcp:host:port`, or bare `host:port`)
+/// or a Unix domain socket (`uds:/path/to.sock`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Addr {
+    Tcp(String),
+    Uds(String),
+}
+
+impl Addr {
+    /// Parse the `tcp:`/`uds:` spelling (bare `host:port` means TCP).
+    pub fn parse(s: &str) -> Result<Addr> {
+        if let Some(rest) = s.strip_prefix("tcp:") {
+            if rest.is_empty() {
+                bail!("empty tcp address in '{s}'");
+            }
+            Ok(Addr::Tcp(rest.to_string()))
+        } else if let Some(rest) = s.strip_prefix("uds:") {
+            if rest.is_empty() {
+                bail!("empty uds path in '{s}'");
+            }
+            Ok(Addr::Uds(rest.to_string()))
+        } else if s.contains(':') {
+            Ok(Addr::Tcp(s.to_string()))
+        } else {
+            bail!("address '{s}' is neither tcp:host:port nor uds:/path");
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Addr::parse`]).
+    pub fn canonical(&self) -> String {
+        match self {
+            Addr::Tcp(hp) => format!("tcp:{hp}"),
+            Addr::Uds(p) => format!("uds:{p}"),
+        }
+    }
+}
+
+impl fmt::Display for Addr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+/// Client-side transport tuning.  Operational knobs only — they shape
+/// *when* a connection attempt gives up, never *what* bits a successful
+/// projection returns — so they are deliberately excluded from
+/// [`crate::coordinator::topology::Topology::canonical`] identity.
+///
+/// All times are integer milliseconds so the containing types keep
+/// their derived `Eq`/`Hash`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NetOptions {
+    /// Per-attempt dial timeout (TCP; UDS connects are local and fast).
+    pub connect_timeout_ms: u64,
+    /// Read timeout while awaiting a reply; an expiry kills the
+    /// connection and errors the in-flight frame.
+    pub request_timeout_ms: u64,
+    /// Dial attempts per (re)connection before giving up.
+    pub reconnect_tries: u32,
+    /// First backoff sleep between dial attempts …
+    pub reconnect_base_ms: u64,
+    /// … doubling up to this ceiling.
+    pub reconnect_max_ms: u64,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            connect_timeout_ms: 1_000,
+            request_timeout_ms: 30_000,
+            reconnect_tries: 3,
+            reconnect_base_ms: 50,
+            reconnect_max_ms: 2_000,
+        }
+    }
+}
+
+/// One connected byte stream over either transport.
+pub enum NetStream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl NetStream {
+    /// Dial `addr` once (no retries — backoff lives in the client).
+    pub fn connect(addr: &Addr, connect_timeout: Duration) -> Result<NetStream> {
+        match addr {
+            Addr::Tcp(hp) => {
+                use std::net::ToSocketAddrs;
+                let sa = hp
+                    .to_socket_addrs()?
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("'{hp}' resolved to no address"))?;
+                let s = TcpStream::connect_timeout(&sa, connect_timeout)?;
+                s.set_nodelay(true)?;
+                Ok(NetStream::Tcp(s))
+            }
+            Addr::Uds(path) => Ok(NetStream::Uds(UnixStream::connect(path)?)),
+        }
+    }
+
+    /// Bound the blocking wait for a reply (`None` = wait forever).
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_read_timeout(d)?,
+            NetStream::Uds(s) => s.set_read_timeout(d)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            NetStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            NetStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            NetStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parses_and_round_trips() {
+        for (input, want) in [
+            ("tcp:127.0.0.1:9000", Addr::Tcp("127.0.0.1:9000".into())),
+            ("127.0.0.1:9000", Addr::Tcp("127.0.0.1:9000".into())),
+            ("uds:/tmp/litl.sock", Addr::Uds("/tmp/litl.sock".into())),
+        ] {
+            let addr = Addr::parse(input).unwrap();
+            assert_eq!(addr, want);
+            assert_eq!(Addr::parse(&addr.canonical()).unwrap(), addr);
+        }
+        assert!(Addr::parse("not-an-address").is_err());
+        assert!(Addr::parse("tcp:").is_err());
+        assert!(Addr::parse("uds:").is_err());
+    }
+}

@@ -1,0 +1,274 @@
+//! The projector server: shard devices behind a TCP/UDS listener.
+//!
+//! One [`ProjectorServer`] hosts a set of `(shard id, device)` pairs —
+//! typically the local shards of one [`Topology`] — and speaks the
+//! [`super::frame`] protocol.  Each accepted connection gets its own
+//! handler thread with fully *blocking* reads (no server-side read
+//! timeout: a half-received frame must never be abandoned mid-stream,
+//! or the framing desyncs); handlers exit on client EOF.
+//!
+//! **Determinism:** each shard's device sits behind its own mutex, so
+//! that shard's projections happen strictly in request order no matter
+//! how many connections multiplex onto it — the per-shard noise-draw
+//! order is the submission order, exactly as in-process.  A device
+//! panic (e.g. a medium shape assert) is caught and returned as an
+//! `Error` frame instead of killing the handler.
+//!
+//! [`Topology`]: crate::coordinator::topology::Topology
+
+use std::io::Write;
+use std::net::TcpListener;
+use std::os::unix::net::UnixListener;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::frame::{self, Msg, WireError};
+use super::{Addr, NetStream, NET_BYTES_RX, NET_BYTES_TX, NET_FRAMES_RX, NET_FRAMES_TX};
+use crate::coordinator::projector::Projector;
+use crate::metrics::Registry;
+
+/// One hosted shard: its wire-visible id and the device behind it.
+struct Hosted {
+    shard: u32,
+    device: Mutex<Box<dyn Projector + Send>>,
+}
+
+/// A running projector server (accept loop on a background thread).
+pub struct ProjectorServer {
+    local: Addr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    /// The bound UDS path, removed on shutdown.
+    uds_path: Option<String>,
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Uds(UnixListener),
+}
+
+impl ProjectorServer {
+    /// Bind `addr` and serve `devices` until [`shutdown`] or drop.
+    /// `tcp:host:0` binds an ephemeral port; read the actual one back
+    /// from [`local_addr`].  An existing socket file at a UDS path is
+    /// replaced.
+    ///
+    /// [`shutdown`]: ProjectorServer::shutdown
+    /// [`local_addr`]: ProjectorServer::local_addr
+    pub fn bind(
+        addr: &Addr,
+        devices: Vec<(u32, Box<dyn Projector + Send>)>,
+        metrics: Registry,
+    ) -> Result<ProjectorServer> {
+        anyhow::ensure!(!devices.is_empty(), "projector server needs >= 1 device");
+        let (listener, local, uds_path) = match addr {
+            Addr::Tcp(hp) => {
+                let l = TcpListener::bind(hp.as_str())
+                    .with_context(|| format!("binding tcp listener on {hp}"))?;
+                let actual = l.local_addr()?;
+                (Listener::Tcp(l), Addr::Tcp(actual.to_string()), None)
+            }
+            Addr::Uds(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("binding uds listener on {path}"))?;
+                (Listener::Uds(l), Addr::Uds(path.clone()), Some(path.clone()))
+            }
+        };
+        match &listener {
+            Listener::Tcp(l) => l.set_nonblocking(true)?,
+            Listener::Uds(l) => l.set_nonblocking(true)?,
+        }
+        let hosted: Arc<Vec<Hosted>> = Arc::new(
+            devices
+                .into_iter()
+                .map(|(shard, device)| Hosted {
+                    shard,
+                    device: Mutex::new(device),
+                })
+                .collect(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            thread::Builder::new()
+                .name("litl-net-accept".into())
+                .spawn(move || accept_loop(listener, hosted, metrics, stop))?
+        };
+        Ok(ProjectorServer {
+            local,
+            stop,
+            accept: Some(accept),
+            uds_path,
+        })
+    }
+
+    /// The actually-bound address (ephemeral TCP ports resolved).
+    pub fn local_addr(&self) -> &Addr {
+        &self.local
+    }
+
+    /// Stop accepting and join the accept loop.  Handler threads for
+    /// already-connected clients are detached; they exit when their
+    /// client disconnects (in-flight requests still complete — the
+    /// graceful half of a cutover; a *killed* server process is the
+    /// abrupt half, and the client errors its in-flight frame).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(path) = self.uds_path.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Drop for ProjectorServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: Listener,
+    hosted: Arc<Vec<Hosted>>,
+    metrics: Registry,
+    stop: Arc<AtomicBool>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        let conn = match &listener {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                NetStream::Tcp(s)
+            }),
+            Listener::Uds(l) => l.accept().map(|(s, _)| NetStream::Uds(s)),
+        };
+        match conn {
+            Ok(mut stream) => {
+                // Handlers block in read; nonblocking was a listener
+                // property only.
+                match &stream {
+                    NetStream::Tcp(s) => {
+                        let _ = s.set_nonblocking(false);
+                    }
+                    NetStream::Uds(s) => {
+                        let _ = s.set_nonblocking(false);
+                    }
+                }
+                let hosted = hosted.clone();
+                let metrics = metrics.clone();
+                let spawned = thread::Builder::new()
+                    .name("litl-net-conn".into())
+                    .spawn(move || handle_conn(&mut stream, &hosted, &metrics));
+                if spawned.is_err() {
+                    log::warn!("projector server could not spawn a handler thread");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log::warn!("projector server accept error: {e}");
+                thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: &mut NetStream, hosted: &[Hosted], metrics: &Registry) {
+    let frames_rx = metrics.counter(NET_FRAMES_RX);
+    let frames_tx = metrics.counter(NET_FRAMES_TX);
+    let bytes_rx = metrics.counter(NET_BYTES_RX);
+    let bytes_tx = metrics.counter(NET_BYTES_TX);
+    loop {
+        let msg = match frame::recv(stream) {
+            Ok((msg, n)) => {
+                frames_rx.inc();
+                bytes_rx.add(n as u64);
+                msg
+            }
+            Err(WireError::Closed) => return,
+            Err(e) => {
+                // Protocol violation or dead transport: tell the peer
+                // why (best effort) and drop the connection — framing
+                // cannot be trusted past this point.
+                let _ = frame::send(
+                    stream,
+                    &Msg::Error {
+                        message: format!("protocol error: {e}"),
+                    },
+                );
+                return;
+            }
+        };
+        let reply = match msg {
+            Msg::Hello { shard } => match find(hosted, shard) {
+                Some(h) => {
+                    let dev = h.device.lock().unwrap_or_else(PoisonError::into_inner);
+                    Msg::HelloOk {
+                        modes: dev.modes() as u32,
+                        requires_ternary: dev.requires_ternary(),
+                        kind: dev.kind().to_string(),
+                    }
+                }
+                None => not_hosted(shard, hosted),
+            },
+            Msg::Project { shard, frames } => match find(hosted, shard) {
+                Some(h) => {
+                    let mut dev =
+                        h.device.lock().unwrap_or_else(PoisonError::into_inner);
+                    // A device panic (shape assert deep in the medium)
+                    // must not kill the handler thread: catch it and
+                    // report it like any projection error.
+                    let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        dev.project(&frames)
+                    }));
+                    match res {
+                        Ok(Ok((p1, p2))) => Msg::ProjectOk {
+                            p1,
+                            p2,
+                            sim_seconds: dev.sim_seconds(),
+                            energy_joules: dev.energy_joules(),
+                        },
+                        Ok(Err(e)) => Msg::Error {
+                            message: format!("projection failed: {e}"),
+                        },
+                        Err(_) => Msg::Error {
+                            message: format!("projection panicked on shard {shard}"),
+                        },
+                    }
+                }
+                None => not_hosted(shard, hosted),
+            },
+            Msg::Health => Msg::HealthOk,
+            other => Msg::Error {
+                message: format!("unexpected client message {other:?}"),
+            },
+        };
+        match frame::send(stream, &reply) {
+            Ok(n) => {
+                frames_tx.inc();
+                bytes_tx.add(n as u64);
+                let _ = stream.flush();
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn find(hosted: &[Hosted], shard: u32) -> Option<&Hosted> {
+    hosted.iter().find(|h| h.shard == shard)
+}
+
+fn not_hosted(shard: u32, hosted: &[Hosted]) -> Msg {
+    let here: Vec<u32> = hosted.iter().map(|h| h.shard).collect();
+    Msg::Error {
+        message: format!("shard {shard} not hosted here (hosting {here:?})"),
+    }
+}

@@ -111,6 +111,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
+use anyhow::{bail, Context};
+
 use crate::exec::ThreadPool;
 use crate::metrics::trace;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
@@ -389,7 +391,139 @@ impl TileCache {
         inner.map.insert(key, idx);
         inner.bytes += entry_bytes;
     }
+
+    /// Write every resident tile to `path` (atomic via temp + rename) —
+    /// the warm-start snapshot `--tile-cache-save` produces.
+    ///
+    /// Layout (little-endian):
+    /// ```text
+    /// magic   "LITLTILE"           8 bytes
+    /// version u32                  = 1
+    /// count   u32
+    /// per tile: seed u64, row u64, col0 u64, w u64,
+    ///           re f32×w, im f32×w
+    /// crc32   u32 over everything above (flate2's crc)
+    /// ```
+    ///
+    /// Tiles are emitted in key order, so two caches holding the same
+    /// tiles snapshot to byte-identical files regardless of stripe
+    /// layout or insertion history.
+    pub fn save_snapshot(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        // Collect under the stripe locks, serialize outside them.
+        let mut tiles: Vec<(TileKey, Arc<CachedTile>)> = Vec::new();
+        for stripe in &self.stripes {
+            let inner = stripe.lock().unwrap_or_else(PoisonError::into_inner);
+            tiles.extend(inner.slots.iter().map(|s| (s.key, s.tile.clone())));
+        }
+        tiles.sort_by_key(|(k, _)| *k);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(SNAPSHOT_MAGIC);
+        buf.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(tiles.len() as u32).to_le_bytes());
+        for (key, tile) in &tiles {
+            for wd in [key.seed, key.row as u64, key.col0 as u64, key.w as u64] {
+                buf.extend_from_slice(&wd.to_le_bytes());
+            }
+            for quad in [&tile.re, &tile.im] {
+                for &v in quad.iter() {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let mut hasher = flate2::Crc::new();
+        hasher.update(&buf);
+        buf.extend_from_slice(&hasher.sum().to_le_bytes());
+
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Warm-start from a [`TileCache::save_snapshot`] file, returning
+    /// the number of tiles offered to the cache.  Every tile goes
+    /// through the ordinary insert path, so the byte budget, stripe
+    /// layout and eviction rules hold exactly as if the tiles had been
+    /// generated — a snapshot larger than the budget simply stops
+    /// sticking.  Keys carry the generating seed, so a foreign
+    /// snapshot's tiles can never serve another medium's lookups: they
+    /// are misses, not wrong bits.
+    pub fn load_snapshot(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<usize> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading tile snapshot {}", path.display()))?;
+        if buf.len() < 8 + 4 + 4 + 4 {
+            bail!("tile snapshot truncated ({} bytes)", buf.len());
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let want_crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let mut hasher = flate2::Crc::new();
+        hasher.update(body);
+        if hasher.sum() != want_crc {
+            bail!("tile snapshot CRC mismatch (corrupt file)");
+        }
+        fn take<'a>(body: &'a [u8], at: &mut usize, n: usize) -> anyhow::Result<&'a [u8]> {
+            if *at + n > body.len() {
+                bail!("tile snapshot truncated at byte {at}");
+            }
+            let s = &body[*at..*at + n];
+            *at += n;
+            Ok(s)
+        }
+        fn u64_at(body: &[u8], at: &mut usize) -> anyhow::Result<u64> {
+            Ok(u64::from_le_bytes(take(body, at, 8)?.try_into().unwrap()))
+        }
+        let mut at = 0usize;
+        if take(body, &mut at, 8)? != SNAPSHOT_MAGIC {
+            bail!("not a litl tile snapshot (bad magic)");
+        }
+        let version = u32::from_le_bytes(take(body, &mut at, 4)?.try_into().unwrap());
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported tile snapshot version {version}");
+        }
+        let count = u32::from_le_bytes(take(body, &mut at, 4)?.try_into().unwrap()) as usize;
+        if count > 1 << 20 {
+            bail!("implausible tile count {count}");
+        }
+        for _ in 0..count {
+            let seed = u64_at(body, &mut at)?;
+            let row = u64_at(body, &mut at)? as usize;
+            let col0 = u64_at(body, &mut at)? as usize;
+            let w = u64_at(body, &mut at)? as usize;
+            if w == 0 || w > 1 << 24 {
+                bail!("implausible tile width {w}");
+            }
+            let mut quads: [Vec<f32>; 2] = [Vec::new(), Vec::new()];
+            for quad in &mut quads {
+                quad.try_reserve_exact(w)
+                    .map_err(|_| anyhow::anyhow!("tile of {w} columns exceeds memory"))?;
+                let raw = take(body, &mut at, w * 4)?;
+                quad.extend(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+                );
+            }
+            self.insert(seed, row, col0, &quads[0], &quads[1]);
+        }
+        if at != body.len() {
+            bail!("trailing bytes in tile snapshot");
+        }
+        Ok(count)
+    }
 }
+
+const SNAPSHOT_MAGIC: &[u8; 8] = b"LITLTILE";
+const SNAPSHOT_VERSION: u32 = 1;
 
 /// Snapshot of a streamed medium's lifetime accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -1473,6 +1607,79 @@ mod tests {
             let t = cache.lookup(3, row, 0, 16).unwrap();
             assert_eq!(t.re[0].to_bits(), 1.0f32.to_bits(), "row {row} incumbent");
         }
+    }
+
+    #[test]
+    fn snapshot_warm_start_replays_bitwise_with_zero_generation() {
+        let path = std::env::temp_dir().join("litl_tiles_warm_test.tiles");
+        let src = StreamedMedium::new(21, 6, 96)
+            .with_tile_cols(32)
+            .with_tile_cache_mb(2);
+        let e = tern(2, 6, 41);
+        let want = src.project(&e);
+        src.tile_cache().unwrap().save_snapshot(&path).unwrap();
+        // A fresh process's cache warm-starts from the snapshot: the
+        // same projection is bitwise identical and generates NOTHING —
+        // zero tiles, zero bytes, zero generation sim-seconds.
+        let dst = StreamedMedium::new(21, 6, 96)
+            .with_tile_cols(32)
+            .with_tile_cache_mb(2);
+        let n = dst.tile_cache().unwrap().load_snapshot(&path).unwrap();
+        assert!(n > 0, "snapshot carried tiles");
+        assert_eq!(dst.project(&e), want, "warm replay is bitwise");
+        let st = dst.stats();
+        assert_eq!(st.tiles, 0, "nothing regenerated");
+        assert_eq!(st.bytes_generated, 0);
+        assert_eq!(st.gen_seconds, 0.0, "zero generation sim-seconds");
+        assert_eq!(st.cache_misses, 0);
+        assert!(st.cache_hits > 0);
+        // A foreign medium (different seed) loading the same snapshot
+        // gets misses, never wrong bits: the seed is part of the key.
+        let foreign = StreamedMedium::new(99, 6, 96)
+            .with_tile_cols(32)
+            .with_tile_cache_mb(2);
+        foreign.tile_cache().unwrap().load_snapshot(&path).unwrap();
+        let plain = StreamedMedium::new(99, 6, 96).with_tile_cols(32);
+        assert_eq!(foreign.project(&e), plain.project(&e));
+        assert_eq!(foreign.stats().cache_hits, 0, "cross-seed isolation");
+    }
+
+    #[test]
+    fn snapshot_bytes_are_stripe_independent_and_corruption_is_loud() {
+        // Same tiles through different stripe layouts snapshot to
+        // byte-identical files (tiles are emitted in key order).
+        let (re, im) = (vec![1.5f32; 8], vec![-2.5f32; 8]);
+        let a = TileCache::with_budget_bytes_striped(64 * 1024, 1);
+        let b = TileCache::with_budget_bytes_striped(64 * 1024, 8);
+        for row in 0..12 {
+            a.insert(4, 11 - row, 0, &re, &im);
+            b.insert(4, row, 0, &re, &im);
+        }
+        let pa = std::env::temp_dir().join("litl_tiles_a_test.tiles");
+        let pb = std::env::temp_dir().join("litl_tiles_b_test.tiles");
+        a.save_snapshot(&pa).unwrap();
+        b.save_snapshot(&pb).unwrap();
+        assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+        // Loading honors the byte budget through the ordinary insert
+        // path: a small cache keeps at most its budget resident.
+        let small = TileCache::with_budget_bytes(128);
+        small.load_snapshot(&pa).unwrap();
+        assert!(small.resident_bytes() <= 128);
+        // Corruption and truncation are loud, never wrong tiles.
+        let mut bytes = std::fs::read(&pa).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&pb, &bytes).unwrap();
+        let err = TileCache::with_budget_mb(1)
+            .load_snapshot(&pb)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("CRC"), "{err}");
+        let good = std::fs::read(&pa).unwrap();
+        std::fs::write(&pb, &good[..good.len() - 7]).unwrap();
+        assert!(TileCache::with_budget_mb(1).load_snapshot(&pb).is_err());
+        std::fs::write(&pb, b"not a tile snapshot").unwrap();
+        assert!(TileCache::with_budget_mb(1).load_snapshot(&pb).is_err());
     }
 
     #[test]

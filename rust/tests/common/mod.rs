@@ -76,7 +76,7 @@ pub fn topology_devices(
     Topology::homogeneous(kind, shards)
         .with_partition(partition)
         .with_backing_of(medium)
-        .build_devices(params, medium, noise_seed)
+        .build_devices(params, medium, noise_seed, &Registry::new())
 }
 
 use litl::tensor::matmul;

@@ -1,0 +1,564 @@
+//! Networked projector servers: the standing contract is that a
+//! loopback remote shard is **bitwise identical** to the same shard
+//! in-process — noisy optics included — because both ends build their
+//! devices through the one `Topology::build_devices` path.
+//!
+//! In-process tests here cover TCP + UDS parity across shard counts and
+//! both partitions, streamed+cached backing, a mixed local+remote fleet
+//! training through the sharded service, wire robustness against
+//! garbage, dead-server error completion (no hangs), and bitwise
+//! kill-and-resume through the host trainer checkpoint.  The
+//! `#[ignore]`d `net_smoke_*` tests spawn real `litl serve` child
+//! processes and run under CI's `net-smoke` job.
+
+use std::io::{BufRead, BufReader, Read as _, Write as _};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use litl::config::Partition;
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::projector::{DigitalProjector, Projector};
+use litl::coordinator::service::{
+    ClientProjector, FailoverConfig, ShardServiceConfig, SHARD_ERRORS,
+};
+use litl::coordinator::topology::{DeviceKind, Topology};
+use litl::metrics::Registry;
+use litl::net::{
+    frame, Addr, NetOptions, ProjectorServer, RemoteProjector, NET_FRAMES_RX,
+    NET_FRAMES_TX, NET_RECONNECTS, NET_RTT,
+};
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::{Medium, StreamedMedium};
+use litl::optics::OpuParams;
+use litl::tensor::matmul;
+
+mod common;
+use common::{task_batch, ternary_batch};
+
+const D_IN: usize = 10;
+
+/// Client knobs tuned for tests: fast bounded redials so failure paths
+/// resolve in milliseconds, not the operator-scale defaults.
+fn fast_net() -> NetOptions {
+    NetOptions {
+        connect_timeout_ms: 2_000,
+        request_timeout_ms: 10_000,
+        reconnect_tries: 2,
+        reconnect_base_ms: 10,
+        reconnect_max_ms: 50,
+    }
+}
+
+/// Serve `opt:n` over `addr` and check every remote shard answers
+/// bitwise what its freshly built in-process twin answers — three
+/// requests deep, so the per-shard noise streams advance in lockstep.
+/// Returns the remote client's metrics registry for telemetry asserts.
+fn parity_case(n: usize, partition: Partition, addr: &Addr, medium: &Medium) -> Registry {
+    // Noisy optics stay ON: parity must hold through shot + read noise,
+    // not just the deterministic physics.
+    let params = OpuParams::default();
+    let topo = Topology::homogeneous(DeviceKind::Optical, n)
+        .with_partition(partition)
+        .with_backing_of(medium);
+    let mut local = topo
+        .build_devices(params, medium, 7, &Registry::new())
+        .unwrap();
+    let served: Vec<_> = topo
+        .build_devices(params, medium, 7, &Registry::new())
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| (i as u32, d))
+        .collect();
+    let server = ProjectorServer::bind(addr, served, Registry::new()).unwrap();
+    let ep = server.local_addr().to_string();
+    let net_reg = Registry::new();
+    let mut remote = Topology::parse(&format!("opt:{n}!{ep}"))
+        .unwrap()
+        .with_partition(partition)
+        .with_backing_of(medium)
+        .with_net(fast_net())
+        .build_devices(params, medium, 7, &net_reg)
+        .unwrap();
+    assert_eq!(remote.len(), n);
+    assert_eq!(remote[0].kind(), "remote");
+    for step in 0..3u64 {
+        for s in 0..n {
+            let e = ternary_batch(4 + s, D_IN, 500 + 10 * step + s as u64);
+            let (lp1, lp2) = local[s].project(&e).unwrap();
+            let (rp1, rp2) = remote[s].project(&e).unwrap();
+            let tag = format!("{} n={n} shard {s} step {step}", partition.name());
+            assert_eq!(lp1, rp1, "{tag} p1");
+            assert_eq!(lp2, rp2, "{tag} p2");
+            assert_eq!(local[s].sim_seconds(), remote[s].sim_seconds(), "{tag} clock");
+        }
+    }
+    net_reg
+}
+
+#[test]
+fn tcp_loopback_remote_shards_are_bitwise_in_process() {
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, 64));
+    let addr = Addr::parse("tcp:127.0.0.1:0").unwrap();
+    for n in [1usize, 2, 4] {
+        for partition in [Partition::Modes, Partition::Batch] {
+            let reg = parity_case(n, partition, &addr, &medium);
+            // Telemetry contract: one hello + three projects per shard
+            // client, a round trip observed per project, no redials.
+            assert_eq!(reg.counter(NET_FRAMES_TX).get(), 4 * n as u64);
+            assert_eq!(reg.counter(NET_FRAMES_RX).get(), 4 * n as u64);
+            assert_eq!(reg.histogram(NET_RTT).count(), 3 * n as u64);
+            assert_eq!(reg.counter(NET_RECONNECTS).get(), 0);
+        }
+    }
+}
+
+#[test]
+fn uds_loopback_remote_shards_are_bitwise_in_process() {
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, 64));
+    for n in [1usize, 2, 4] {
+        for partition in [Partition::Modes, Partition::Batch] {
+            let path = std::env::temp_dir().join(format!(
+                "litl_np_{}_{n}_{}.sock",
+                std::process::id(),
+                partition.name()
+            ));
+            let _ = std::fs::remove_file(&path);
+            let addr = Addr::parse(&format!("uds:{}", path.display())).unwrap();
+            parity_case(n, partition, &addr, &medium);
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+}
+
+#[test]
+fn streamed_cached_medium_keeps_remote_parity() {
+    // The seed-defined backing with a shared tile cache: the server
+    // regenerates (or hits) the same tiles the in-process twin does.
+    let medium =
+        Medium::Streamed(StreamedMedium::new(33, D_IN, 96).with_tile_cache_mb(2));
+    let addr = Addr::parse("tcp:127.0.0.1:0").unwrap();
+    parity_case(2, Partition::Modes, &addr, &medium);
+    parity_case(2, Partition::Batch, &addr, &medium);
+}
+
+/// Train through the sharded service with `topo`, returning the trainer
+/// and the per-step losses.
+fn train_through_service(
+    topo: Topology,
+    medium: &Medium,
+    noise_seed: u64,
+    layers: &[usize],
+    modes: usize,
+    steps: u64,
+) -> (HostTrainer, Vec<f32>) {
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            medium,
+            noise_seed,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition: topo.partition,
+                frame_rate_hz: 1500.0,
+                ..Default::default()
+            },
+            Registry::new(),
+        )
+        .unwrap();
+    let projector = Box::new(ClientProjector::new(svc.client(), modes));
+    let mut tr = HostTrainer::new(
+        11,
+        layers,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    let mut losses = Vec::new();
+    for t in 0..steps {
+        let (x, y) = task_batch(3_000 + t, 16, layers);
+        losses.push(tr.step(&x, &y).unwrap());
+    }
+    svc.shutdown();
+    (tr, losses)
+}
+
+#[test]
+fn mixed_local_and_remote_fleet_matches_the_all_local_fleet_bitwise() {
+    let modes = 48usize;
+    let layers = [20usize, 48, 48, 10];
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, modes));
+    // The server hosts shard 1 of the stripped topology — exactly what
+    // `litl serve --serve-shards 1` does for this fleet.
+    let stripped = Topology::parse("opt:1+opt:1+dig:1")
+        .unwrap()
+        .with_backing_of(&medium);
+    let served: Vec<_> = stripped
+        .build_devices(OpuParams::default(), &medium, 7, &Registry::new())
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| *i == 1)
+        .map(|(i, d)| (i as u32, d))
+        .collect();
+    let server = ProjectorServer::bind(
+        &Addr::parse("tcp:127.0.0.1:0").unwrap(),
+        served,
+        Registry::new(),
+    )
+    .unwrap();
+    let ep = server.local_addr().to_string();
+    // All-local run first (it never dials), then the mixed fleet, so
+    // the served device's noise stream starts fresh for its one run.
+    let (tr_local, losses_local) =
+        train_through_service(stripped, &medium, 7, &layers, modes, 25);
+    let mixed = Topology::parse(&format!("opt:1+opt:1!{ep}+dig:1"))
+        .unwrap()
+        .with_backing_of(&medium)
+        .with_net(fast_net());
+    let (tr_remote, losses_remote) =
+        train_through_service(mixed, &medium, 7, &layers, modes, 25);
+    assert_eq!(losses_local, losses_remote, "per-step losses diverged");
+    for (i, (a, b)) in
+        tr_local.mlp.params.iter().zip(&tr_remote.mlp.params).enumerate()
+    {
+        assert_eq!(a, b, "param {i} diverged between local and mixed fleets");
+    }
+}
+
+#[test]
+fn server_survives_garbage_and_keeps_serving_bitwise() {
+    let medium = Medium::Dense(TransmissionMatrix::sample(5, D_IN, 16));
+    let served: Vec<_> = Topology::homogeneous(DeviceKind::Digital, 1)
+        .with_backing_of(&medium)
+        .build_devices(OpuParams::default(), &medium, 0, &Registry::new())
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| (i as u32, d))
+        .collect();
+    let server = ProjectorServer::bind(
+        &Addr::parse("tcp:127.0.0.1:0").unwrap(),
+        served,
+        Registry::new(),
+    )
+    .unwrap();
+    let addr = server.local_addr().clone();
+    let host = addr.to_string();
+    let host = host.trim_start_matches("tcp:").to_string();
+    // 1) Not our protocol at all.
+    {
+        let mut s = TcpStream::connect(&host).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink); // server errors/closes, never panics
+    }
+    // 2) Right magic and version, hostile declared length.
+    {
+        let mut s = TcpStream::connect(&host).unwrap();
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&frame::MAGIC);
+        hdr.extend_from_slice(&frame::VERSION.to_le_bytes());
+        hdr.extend_from_slice(&frame::OP_PROJECT.to_le_bytes());
+        hdr.extend_from_slice(&u32::MAX.to_le_bytes());
+        s.write_all(&hdr).unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    // 3) Wrong version.
+    {
+        let mut s = TcpStream::connect(&host).unwrap();
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&frame::MAGIC);
+        hdr.extend_from_slice(&(frame::VERSION + 1).to_le_bytes());
+        hdr.extend_from_slice(&frame::OP_HELLO.to_le_bytes());
+        hdr.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&hdr).unwrap();
+        let mut sink = Vec::new();
+        let _ = s.read_to_end(&mut sink);
+    }
+    // A legitimate client still gets exact service afterwards.
+    let mut rp =
+        RemoteProjector::connect(&addr, 0, fast_net(), &Registry::new()).unwrap();
+    let e = ternary_batch(4, D_IN, 3);
+    let (p1, p2) = rp.project(&e).unwrap();
+    let tm = TransmissionMatrix::sample(5, D_IN, 16);
+    assert_eq!(p1, matmul(&e, &tm.b_re));
+    assert_eq!(p2, matmul(&e, &tm.b_im));
+}
+
+#[test]
+fn dead_server_errors_in_flight_requests_without_hanging() {
+    use litl::net::Msg;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let fake = std::thread::spawn(move || {
+        // Greet one client, swallow its first request, then vanish —
+        // connection and listener both die with this thread.
+        let (mut s, _) = listener.accept().unwrap();
+        let (msg, _) = frame::recv(&mut s).unwrap();
+        match msg {
+            Msg::Hello { shard } => assert_eq!(shard, 0),
+            other => panic!("expected hello, got {other:?}"),
+        }
+        frame::send(
+            &mut s,
+            &Msg::HelloOk {
+                modes: 16,
+                requires_ternary: true,
+                kind: "optical".to_string(),
+            },
+        )
+        .unwrap();
+        let _ = frame::recv(&mut s);
+    });
+    let addr = Addr::parse(&format!("tcp:127.0.0.1:{port}")).unwrap();
+    let reg = Registry::new();
+    let mut rp = RemoteProjector::connect(&addr, 0, fast_net(), &reg).unwrap();
+    assert_eq!(rp.modes(), 16);
+    let e = ternary_batch(4, D_IN, 1);
+    let t0 = Instant::now();
+    // The in-flight frame completes with an ERROR — never resent, never
+    // hung — which is exactly what lets service failover trip the shard.
+    assert!(rp.project(&e).is_err(), "dead server must fail the in-flight frame");
+    fake.join().unwrap();
+    // The next request redials with bounded backoff against a dead
+    // address and errors too, quickly.
+    assert!(rp.project(&e).is_err());
+    assert!(reg.counter(NET_RECONNECTS).get() >= 1, "redial was attempted");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "failure path must be bounded, not hung"
+    );
+}
+
+#[test]
+fn host_trainer_kill_and_resume_is_bitwise_uninterrupted() {
+    let layers = [20usize, 16, 16, 10];
+    let digital = || -> Box<dyn Projector> {
+        Box::new(DigitalProjector::new(TransmissionMatrix::sample(99, D_IN, 16)))
+    };
+    let fresh = |seed: u64| {
+        HostTrainer::new(seed, &layers, 0.01, HostAlgo::DfaTernary { theta: 0.1 }, digital())
+    };
+    // The uninterrupted reference: 20 straight steps.
+    let mut full = fresh(0);
+    for t in 0..20 {
+        let (x, y) = task_batch(700 + t, 32, &layers);
+        full.step(&x, &y).unwrap();
+    }
+    // The "killed" twin: 10 steps, checkpoint, then a brand-new process
+    // stand-in (different init seed, so the restore must carry
+    // everything) resumes for the remaining 10.
+    let path = std::env::temp_dir().join(format!(
+        "litl_resume_{}.ckpt",
+        std::process::id()
+    ));
+    let path = path.to_str().unwrap().to_string();
+    let mut first_half = fresh(0);
+    for t in 0..10 {
+        let (x, y) = task_batch(700 + t, 32, &layers);
+        first_half.step(&x, &y).unwrap();
+    }
+    first_half.save_state(&path).unwrap();
+    let mut resumed = fresh(12345);
+    resumed.load_state(&path).unwrap();
+    assert_eq!(resumed.opt.t, first_half.opt.t);
+    for t in 10..20 {
+        let (x, y) = task_batch(700 + t, 32, &layers);
+        resumed.step(&x, &y).unwrap();
+    }
+    for (i, (a, b)) in full.mlp.params.iter().zip(&resumed.mlp.params).enumerate() {
+        assert_eq!(a, b, "param {i}: resumed run diverged from uninterrupted");
+    }
+    for (a, b) in full.opt.m.iter().zip(&resumed.opt.m) {
+        assert_eq!(a, b, "adam m diverged");
+    }
+    for (a, b) in full.opt.v.iter().zip(&resumed.opt.v) {
+        assert_eq!(a, b, "adam v diverged");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process smoke (CI `net-smoke` job: `cargo test -- --ignored net_smoke`)
+
+/// A spawned `litl serve` child.  Killed (not just dropped) on scope
+/// exit so a failing assert never leaks listeners.
+struct ServeProc {
+    child: Child,
+}
+
+impl ServeProc {
+    /// Spawn `litl serve <args>` and block until it prints its
+    /// `litl-serve listening on ADDR` sentinel; returns the bound ADDR.
+    fn spawn(args: &[&str]) -> (ServeProc, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_litl"))
+            .arg("serve")
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn litl serve");
+        let out = child.stdout.take().unwrap();
+        let mut lines = BufReader::new(out).lines();
+        let ep = loop {
+            match lines.next() {
+                Some(Ok(l)) => {
+                    if let Some(rest) = l.strip_prefix("litl-serve listening on ") {
+                        break rest.trim().to_string();
+                    }
+                }
+                other => panic!("serve child exited before its sentinel: {other:?}"),
+            }
+        };
+        (ServeProc { child }, ep)
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+const TRAIN_SEED: u64 = 42;
+
+#[test]
+#[ignore = "multi-process: run via the CI net-smoke job (--ignored net_smoke)"]
+fn net_smoke_multiprocess_training_parity() {
+    let modes = 48usize;
+    let layers = [20usize, 48, 48, 10];
+    // The leader derives its medium/noise seeds exactly as `Trainer`
+    // does from `--seed`; the children derive the same from
+    // `--train-seed` — that agreement IS the cutover contract.
+    let medium =
+        Medium::Dense(TransmissionMatrix::sample(TRAIN_SEED ^ 0xB, D_IN, modes));
+    let noise_seed = TRAIN_SEED ^ 0xF00;
+    let base = [
+        "--listen", "tcp:127.0.0.1:0", "--topology", "opt:2", "--partition",
+        "modes", "--medium", "materialized", "--d-in", "10", "--modes", "48",
+        "--train-seed", "42",
+    ];
+    let (_a, ep_a) = ServeProc::spawn(&[&base[..], &["--serve-shards", "0"]].concat());
+    let (_b, ep_b) = ServeProc::spawn(&[&base[..], &["--serve-shards", "1"]].concat());
+    let (tr_local, losses_local) = train_through_service(
+        Topology::parse("opt:2").unwrap().with_backing_of(&medium),
+        &medium,
+        noise_seed,
+        &layers,
+        modes,
+        25,
+    );
+    let remote_topo = Topology::parse(&format!("opt:1!{ep_a}+opt:1!{ep_b}"))
+        .unwrap()
+        .with_backing_of(&medium)
+        .with_net(fast_net());
+    let (tr_remote, losses_remote) =
+        train_through_service(remote_topo, &medium, noise_seed, &layers, modes, 25);
+    assert_eq!(
+        losses_local, losses_remote,
+        "multi-process fleet diverged from in-process"
+    );
+    for (i, (a, b)) in
+        tr_local.mlp.params.iter().zip(&tr_remote.mlp.params).enumerate()
+    {
+        assert_eq!(a, b, "param {i} diverged across the process boundary");
+    }
+}
+
+#[test]
+#[ignore = "multi-process: run via the CI net-smoke job (--ignored net_smoke)"]
+fn net_smoke_server_kill_failover_drains_to_survivors() {
+    let modes = 48usize;
+    let layers = [20usize, 48, 48, 10];
+    let medium =
+        Medium::Dense(TransmissionMatrix::sample(TRAIN_SEED ^ 0xB, D_IN, modes));
+    let (mut victim, ep) = ServeProc::spawn(&[
+        "--listen", "tcp:127.0.0.1:0", "--topology", "opt:1+dig:1",
+        "--partition", "batch", "--medium", "materialized", "--d-in", "10",
+        "--modes", "48", "--train-seed", "42", "--serve-shards", "0",
+    ]);
+    let topo = Topology::parse(&format!("opt:1!{ep}+dig:1"))
+        .unwrap()
+        .with_partition(Partition::Batch)
+        .with_backing_of(&medium)
+        .with_net(NetOptions {
+            connect_timeout_ms: 500,
+            request_timeout_ms: 2_000,
+            reconnect_tries: 1,
+            reconnect_base_ms: 10,
+            reconnect_max_ms: 20,
+        });
+    let reg = Registry::new();
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            &medium,
+            TRAIN_SEED ^ 0xF00,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition: Partition::Batch,
+                frame_rate_hz: 1500.0,
+                failover: FailoverConfig {
+                    enabled: true,
+                    trip_errors: 1,
+                    stall_ms: 2_000,
+                    probation_ms: 500,
+                },
+                ..Default::default()
+            },
+            reg.clone(),
+        )
+        .unwrap();
+    let projector = Box::new(ClientProjector::new(svc.client(), modes));
+    let mut tr = HostTrainer::new(
+        11,
+        &layers,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    // Ten healthy steps, kill the remote's process mid-run, then keep
+    // training: the tripped shard's rows drain onto the digital
+    // survivor.  A few client-visible errors are tolerated around the
+    // kill; hangs are not (every step returns, Ok or Err).
+    let mut errors = 0u32;
+    let mut tail_ok = 0u32;
+    for t in 0..40u64 {
+        if t == 10 {
+            victim.kill();
+        }
+        let (x, y) = task_batch(9_000 + t, 16, &layers);
+        match tr.step(&x, &y) {
+            Ok(_) => {
+                if t >= 30 {
+                    tail_ok += 1;
+                }
+            }
+            Err(e) => {
+                assert!(t >= 10, "pre-kill step {t} failed: {e:#}");
+                errors += 1;
+            }
+        }
+    }
+    svc.shutdown();
+    assert!(errors <= 5, "failover leaked {errors} errors to the client");
+    assert!(tail_ok >= 9, "post-failover steps still failing ({tail_ok}/10 ok)");
+    assert!(
+        reg.snapshot()[SHARD_ERRORS] >= 1.0,
+        "the kill never tripped the shard"
+    );
+}

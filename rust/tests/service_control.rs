@@ -158,7 +158,12 @@ fn windowed_pair(
 ) -> Vec<Box<dyn Projector + Send>> {
     let mut devices = Topology::homogeneous(DeviceKind::Digital, 2)
         .with_partition(Partition::Modes)
-        .build_devices(OpuParams::default(), &Medium::Dense(medium.clone()), 0)
+        .build_devices(
+            OpuParams::default(),
+            &Medium::Dense(medium.clone()),
+            0,
+            &Registry::new(),
+        )
         .unwrap();
     let shard1 = devices.pop().unwrap();
     devices.push(wrap(shard1));
@@ -359,7 +364,12 @@ fn modes_shard_heals_through_rebuild_factory_and_probation() {
     let rebuild: ShardRebuild = Arc::new(move |shard| {
         let mut rebuilt = Topology::homogeneous(DeviceKind::Digital, 2)
             .with_partition(Partition::Modes)
-            .build_devices(OpuParams::default(), &Medium::Dense(medium2.clone()), 0)?;
+            .build_devices(
+                OpuParams::default(),
+                &Medium::Dense(medium2.clone()),
+                0,
+                &Registry::new(),
+            )?;
         anyhow::ensure!(shard < rebuilt.len(), "no shard {shard}");
         Ok(rebuilt.swap_remove(shard))
     });

@@ -22,6 +22,7 @@ use litl::coordinator::projector::Projector;
 use litl::coordinator::service::{ClientProjector, ShardServiceConfig};
 use litl::coordinator::topology::{DeviceKind, PoolPolicy, ShardSpec, Topology};
 use litl::metrics::Registry;
+use litl::net::NetOptions;
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::stream::Medium;
 use litl::optics::OpuParams;
@@ -329,17 +330,20 @@ fn explicit_ranges_and_streams_build_and_match_windows() {
                 weight: 1,
                 mode_range: Some((0, 10)),
                 noise_stream: None,
+                endpoint: None,
             },
             ShardSpec {
                 device: DeviceKind::Digital,
                 weight: 1,
                 mode_range: Some((10, 24)),
                 noise_stream: None,
+                endpoint: None,
             },
         ],
         partition: Partition::Modes,
         backing: MediumBacking::Materialized,
         pool: PoolPolicy::Owned,
+        net: NetOptions::default(),
     };
     let mut farm = topo
         .build_farm(OpuParams::default(), &dense(24), 0, Registry::new())
