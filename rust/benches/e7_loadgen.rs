@@ -21,6 +21,12 @@
 //!   shape (defaults 200 / 6 / 8 / 3).
 //! * `E7_DEGRADED_MIN_FRAC=0.35` — hard floor on the degraded
 //!   throughput fraction (the CI loadgen-smoke gate).
+//! * `E7_FAULT_PLAN=seed=7,dev_err_ppm=40000` — replace the wall-clock
+//!   kill timer with a seeded [`FaultPlanCfg`]: the victim shard dies
+//!   permanently at the first arrival whose `dev_err` decision fires,
+//!   so the kill point is a deterministic *arrival index*, reproducible
+//!   run-to-run regardless of machine speed (the CI loadgen-smoke
+//!   schedule).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -33,6 +39,7 @@ use litl::coordinator::service::{
     AdaptConfig, FailoverConfig, ProjectionClient, ShardServiceConfig, ShardedProjectionService,
 };
 use litl::metrics::Registry;
+use litl::net::FaultPlanCfg;
 use litl::optics::medium::TransmissionMatrix;
 use litl::tensor::Tensor;
 use litl::util::json::Json;
@@ -51,16 +58,32 @@ fn env_usize(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// Throttled digital replica with a kill switch: once armed, every
-/// call errors instantly — the induced fault the failover plane must
-/// absorb.
+/// Throttled digital replica with two kill paths: a wall-clock switch
+/// (the default timer schedule) and an optional seeded fault plan — the
+/// first arrival whose `dev_err` decision fires kills the device
+/// permanently, making the kill point a deterministic arrival index.
 struct LoadDevice {
     inner: DigitalProjector,
     killed: Arc<AtomicBool>,
+    faults: Option<FaultPlanCfg>,
+    shard: u32,
+    arrivals: u64,
+    dead: bool,
 }
 
 impl Projector for LoadDevice {
     fn project(&mut self, frames: &Tensor) -> anyhow::Result<(Tensor, Tensor)> {
+        if let Some(plan) = &self.faults {
+            let n = self.arrivals;
+            self.arrivals += 1;
+            if self.dead || plan.dev_err(self.shard, n) {
+                self.dead = true; // seeded kills are permanent, like the switch
+                anyhow::bail!(
+                    "shard {} killed by fault plan at arrival {n}",
+                    self.shard
+                );
+            }
+        }
         if self.killed.load(Ordering::Relaxed) {
             anyhow::bail!("shard killed by loadgen");
         }
@@ -93,15 +116,23 @@ fn start_fleet(
     medium: &TransmissionMatrix,
     shards: usize,
     metrics: Registry,
+    // The seeded plan arms ONLY the victim shard (the last one) so the
+    // degraded pass kills exactly one replica, as the timer path does.
+    plan: Option<FaultPlanCfg>,
 ) -> (ShardedProjectionService, Vec<Arc<AtomicBool>>) {
     let switches: Vec<Arc<AtomicBool>> =
         (0..shards).map(|_| Arc::new(AtomicBool::new(false))).collect();
     let devices: Vec<Box<dyn Projector + Send>> = switches
         .iter()
-        .map(|k| {
+        .enumerate()
+        .map(|(s, k)| {
             Box::new(LoadDevice {
                 inner: DigitalProjector::new(medium.clone()),
                 killed: k.clone(),
+                faults: plan.filter(|_| s == shards - 1),
+                shard: s as u32,
+                arrivals: 0,
+                dead: false,
             }) as Box<dyn Projector + Send>
         })
         .collect();
@@ -216,15 +247,24 @@ fn main() -> anyhow::Result<()> {
     let rows = env_usize("E7_ROWS", 8);
     let shards = env_usize("E7_SHARDS", 3);
     anyhow::ensure!(shards >= 2, "E7_SHARDS must be >= 2 (one gets killed)");
+    let plan = FaultPlanCfg::from_env("E7_FAULT_PLAN")?;
+    if let Some(p) = &plan {
+        anyhow::ensure!(
+            p.dev_err_ppm > 0,
+            "E7_FAULT_PLAN needs dev_err_ppm > 0 (that's the seeded kill)"
+        );
+    }
     let medium = TransmissionMatrix::sample(77, D_IN, MODES);
 
     println!(
         "== E7: serving control plane loadgen ({clients} clients x {submissions} x \
-         {rows} rows, {shards} shards) =="
+         {rows} rows, {shards} shards, kill schedule: {}) ==",
+        plan.map(|p| format!("seeded [{p}]"))
+            .unwrap_or_else(|| "wall-clock timer".to_string())
     );
 
-    // Pass 1: healthy fleet baseline.
-    let (svc, _switches) = start_fleet(&medium, shards, Registry::new());
+    // Pass 1: healthy fleet baseline (never armed with the plan).
+    let (svc, _switches) = start_fleet(&medium, shards, Registry::new(), None);
     let healthy = drive(&svc.client(), clients, submissions, rows, None);
     svc.shutdown();
     let healthy_rate = healthy.ok_rows as f64 / healthy.secs.max(1e-9);
@@ -239,11 +279,17 @@ fn main() -> anyhow::Result<()> {
         healthy.hung_clients
     );
 
-    // Pass 2: same workload, one shard killed ~30% in.
+    // Pass 2: same workload, one shard killed — by the seeded plan's
+    // deterministic arrival index when E7_FAULT_PLAN is set, by the
+    // wall-clock timer (~30% in) otherwise.
     let reg = Registry::new();
-    let (svc, switches) = start_fleet(&medium, shards, reg.clone());
-    let kill_after = Duration::from_secs_f64((healthy.secs * 0.3).max(0.01));
-    let kill = Some((switches[shards - 1].clone(), kill_after));
+    let (svc, switches) = start_fleet(&medium, shards, reg.clone(), plan);
+    let kill = if plan.is_some() {
+        None // the armed device kills itself at the planned arrival
+    } else {
+        let kill_after = Duration::from_secs_f64((healthy.secs * 0.3).max(0.01));
+        Some((switches[shards - 1].clone(), kill_after))
+    };
     let degraded = drive(&svc.client(), clients, submissions, rows, kill);
     svc.shutdown();
     let snap = reg.snapshot();
@@ -284,6 +330,13 @@ fn main() -> anyhow::Result<()> {
     rec.insert(
         "failovers".to_string(),
         Json::Num(snap.get("service_failovers").copied().unwrap_or(0.0)),
+    );
+    rec.insert(
+        "kill_schedule".to_string(),
+        Json::Str(match plan {
+            Some(p) => p.canonical(),
+            None => "timer".to_string(),
+        }),
     );
     println!("{}", Json::Obj(rec).to_string_compact());
 

@@ -14,7 +14,7 @@ use self::toml::TomlValue;
 use crate::coordinator::service::{AdaptConfig, AdmissionConfig, FailoverConfig};
 use crate::coordinator::topology::{DeviceKind, PoolPolicy, Topology};
 use crate::metrics::trace::TraceLevel;
-use crate::net::NetOptions;
+use crate::net::{FaultPlanCfg, NetOptions, RESUME_TRIES_DEFAULT};
 
 /// Which feedback path trains the hidden layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -274,6 +274,16 @@ pub struct TrainConfig {
     pub net_request_timeout_ms: u64,
     /// Dial attempts per remote (re)connection before giving up (>= 1).
     pub net_reconnect_tries: u32,
+    /// Session-resume for remote shards (`--net-resume on`): a redialed
+    /// client re-attaches its stream and re-requests the in-flight
+    /// frame, which the server's replay journal executes exactly once —
+    /// off (the default) keeps the pre-v2 semantics where any mid-frame
+    /// failure errors into failover.
+    pub net_resume: bool,
+    /// Seeded deterministic fault plan for chaos drills
+    /// (`--fault-plan seed=7,cut_every=50,...`); `None` = no injection,
+    /// zero cost.  See `net::FaultPlanCfg::parse` for the spec grammar.
+    pub fault_plan: Option<FaultPlanCfg>,
 }
 
 impl Default for TrainConfig {
@@ -323,6 +333,8 @@ impl Default for TrainConfig {
             net_connect_timeout_ms: NetOptions::default().connect_timeout_ms,
             net_request_timeout_ms: NetOptions::default().request_timeout_ms,
             net_reconnect_tries: NetOptions::default().reconnect_tries,
+            net_resume: false,
+            fault_plan: None,
         }
     }
 }
@@ -506,6 +518,10 @@ impl TrainConfig {
                 }
                 self.net_reconnect_tries = n as u32;
             }
+            "net_resume" | "net.resume" => self.net_resume = value.want_bool()?,
+            "fault_plan" | "net.fault_plan" => {
+                self.fault_plan = Some(FaultPlanCfg::parse(value.want_str()?)?)
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -626,6 +642,12 @@ impl TrainConfig {
             connect_timeout_ms: self.net_connect_timeout_ms,
             request_timeout_ms: self.net_request_timeout_ms,
             reconnect_tries: self.net_reconnect_tries,
+            resume_tries: if self.net_resume {
+                RESUME_TRIES_DEFAULT
+            } else {
+                0
+            },
+            faults: self.fault_plan,
             ..NetOptions::default()
         }
     }
@@ -1230,6 +1252,44 @@ mod tests {
         assert_eq!(c2.net_connect_timeout_ms, 100);
         assert_eq!(c2.net_request_timeout_ms, 2000);
         assert_eq!(c2.net_reconnect_tries, 2);
+    }
+
+    #[test]
+    fn resume_and_fault_plan_knobs_flow_into_net_options() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.net_options().resume_tries, 0, "resume defaults off");
+        assert!(c.net_options().faults.is_none());
+        c.set_kv("net_resume=true").unwrap();
+        assert_eq!(c.net_options().resume_tries, RESUME_TRIES_DEFAULT);
+        // The fault-plan spec contains '=' — set_kv splits on the FIRST
+        // '=' so the whole spec reaches the parser as the value.
+        c.set_kv("fault_plan=seed=7,cut_every=5,corrupt_ppm=20000")
+            .unwrap();
+        let fp = c.net_options().faults.expect("plan armed");
+        assert_eq!(fp.seed, 7);
+        assert_eq!(fp.cut_every, 5);
+        assert_eq!(fp.corrupt_ppm, 20_000);
+        assert!(c.set_kv("fault_plan=bogus_key=1").is_err());
+        // Neither knob perturbs the topology's canonical identity.
+        c.set_kv("topology=\"opt:2!tcp:127.0.0.1:9000\"").unwrap();
+        assert_eq!(
+            c.projection_topology().stable_hash(),
+            Topology::parse("opt:2!tcp:127.0.0.1:9000")
+                .unwrap()
+                .with_partition(c.partition)
+                .stable_hash()
+        );
+        // The `[net]` section spelling maps to the same knobs.
+        let path = std::env::temp_dir().join("litl_cfg_net_resume_test.toml");
+        std::fs::write(
+            &path,
+            "[net]\nresume = true\nfault_plan = \"seed=3,dev_err_ppm=1000\"\n",
+        )
+        .unwrap();
+        let mut c2 = TrainConfig::default();
+        c2.load_file(path.to_str().unwrap()).unwrap();
+        assert!(c2.net_resume);
+        assert_eq!(c2.fault_plan.unwrap().dev_err_ppm, 1000);
     }
 
     #[test]

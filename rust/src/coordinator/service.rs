@@ -553,6 +553,17 @@ impl Default for AdaptConfig {
 /// worker replaces its own device in place — the factory re-windows the
 /// medium exactly as the original build did, which is what makes
 /// modes-partition failover recoverable.
+///
+/// **Layering with session resume** (remote shards,
+/// `NetOptions::resume_tries` > 0): resume absorbs *transport* death —
+/// a cut connection redials, re-attaches its stream, and replays or
+/// re-executes the in-flight frame exactly once, so the worker never
+/// sees an error and failover never trips.  What still reaches this
+/// state machine is everything resume cannot fix: device/app errors,
+/// an exhausted retry budget, or a poisoned session (cursor mismatch
+/// after a server-side failure) — each surfaces as one typed worker
+/// error and trips the shard deterministically.  `rust/tests/chaos.rs`
+/// pins both halves under a seeded fault plan.
 #[derive(Clone, Copy, Debug)]
 pub struct FailoverConfig {
     pub enabled: bool,

@@ -71,9 +71,14 @@
 //! instead of instantiating the device locally.  The endpoint is part
 //! of the descriptor's identity (shorthand/canonical/stable-hash); the
 //! transport *tuning* ([`crate::net::NetOptions`], set via
-//! [`Topology::with_net`]) is not — timeouts shape when a dial gives
-//! up, never what bits a projection returns.  A loopback remote shard
-//! is bitwise the in-process shard (`rust/tests/net_parity.rs`).
+//! [`Topology::with_net`]) is not — timeouts, the session-resume
+//! budget (`resume_tries`), and any injected
+//! [`FaultPlanCfg`](crate::net::FaultPlanCfg) shape when a dial gives
+//! up or how a dead connection re-attaches, never what bits a
+//! projection returns.  A loopback remote shard is bitwise the
+//! in-process shard (`rust/tests/net_parity.rs`), and stays bitwise
+//! under seeded fault injection with resume on
+//! (`rust/tests/chaos.rs`).
 //!
 //! [`balanced_widths`]: crate::util::balanced_widths
 //! [`weighted_widths`]: crate::util::weighted_widths
@@ -202,7 +207,8 @@ pub struct Topology {
     pub partition: Partition,
     pub backing: MediumBacking,
     pub pool: PoolPolicy,
-    /// Transport tuning for any remote shards (timeouts/backoff).
+    /// Transport tuning for any remote shards (timeouts/backoff,
+    /// session-resume budget, chaos fault plan).
     /// Operational only: excluded from [`Topology::canonical`] — two
     /// topologies differing solely in `net` are the same deployment.
     pub net: NetOptions,

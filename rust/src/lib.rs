@@ -250,23 +250,39 @@
 //! declared per shard via `remote:<addr>` topology endpoints
 //! (`opt:2!tcp:host:9000` shorthand), so one descriptor builds a mixed
 //! local+remote fleet.  Reconnects use bounded exponential backoff and
-//! happen only *between* requests; an in-flight frame on a dead
-//! connection completes with an error, so the failover state machine
-//! trips naturally on a killed server.  Warm-start persistence rides
-//! along: hot [`optics::stream::TileCache`] tiles snapshot to disk
+//! happen only *between* requests; with session resume off, an
+//! in-flight frame on a dead connection completes with an error, so
+//! the failover state machine trips naturally on a killed server.
+//! With `--net-resume on`, a redialed client re-attaches its stream
+//! (`resume`/`resume_ok` cursor negotiation) and re-requests the
+//! in-flight frame, which the server's bounded per-session replay
+//! journal executes **exactly once** — transport death costs retries,
+//! never bits, and never a double noise draw.  Both ends also take a
+//! seeded [`net::FaultPlanCfg`] (`--fault-plan`) for deterministic
+//! chaos drills: connection cuts, partial writes, bit corruption,
+//! stalls, and device error bursts, reproducible from one seed and
+//! zero-cost when absent.  Warm-start persistence rides along: hot
+//! [`optics::stream::TileCache`] tiles snapshot to disk
 //! (`--tile-cache-save`/`--tile-cache-load`) and training resumes from
-//! checkpoints (`--resume`) through [`coordinator::checkpoint`].
+//! checkpoints (`--resume`) through [`coordinator::checkpoint`];
+//! `litl serve` drains in-flight work and flushes its snapshot on
+//! SIGTERM, and reclaims stale UDS socket files safely at bind.
 //!
 //! **Parity guarantee:** a loopback remote shard — TCP or UDS — is
 //! **bitwise identical** to the same shard in-process, noisy optics
 //! and streamed+cached media included: tensors travel as raw IEEE-754
 //! bits, each shard's requests serialize on its own device (noise-draw
 //! order = submission order), and in-flight requests are never
-//! silently retried.  Pinned in `rust/tests/net_parity.rs`; the CI
-//! `net-smoke` job proves it across real process boundaries and kills
-//! a server mid-run to prove failover drains onto survivors with zero
-//! client hangs.  `docs/operator-guide.md` and
-//! `docs/cutover-rehearsal-checklist.md` cover running the fleet.
+//! *blindly* retried — resume re-requests only the exact in-flight
+//! frame, deduplicated by the journal.  Pinned in
+//! `rust/tests/net_parity.rs`; `rust/tests/chaos.rs` (CI
+//! `chaos-smoke`) extends the pin through seeded fault injection —
+//! faulted runs with resume on finish bitwise identical to fault-free
+//! at shards 1/2/4 × both partitions; the CI `net-smoke` job proves
+//! parity across real process boundaries and kills a server mid-run to
+//! prove failover drains onto survivors with zero client hangs.
+//! `docs/operator-guide.md` and `docs/cutover-rehearsal-checklist.md`
+//! cover running the fleet and the chaos drill.
 //!
 //! [`metrics::export`] turns the same data into standard formats:
 //! Chrome `trace_event` JSON (`--trace-out trace.json`, loadable in

@@ -9,14 +9,14 @@
 //! litl help
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use litl::cli::Args;
 use litl::config::{Algo, MediumBacking, Partition, TrainConfig};
 use litl::coordinator::topology::Topology;
 use litl::coordinator::Trainer;
 use litl::data::{self, Split};
 use litl::metrics::Registry;
-use litl::net::{Addr, ProjectorServer};
+use litl::net::{Addr, ProjectorServer, ServerOptions};
 use litl::optics::medium::TransmissionMatrix;
 use litl::optics::stream::{Medium, StreamedMedium};
 use litl::optics::{OpticalOpu, OpuParams};
@@ -32,6 +32,7 @@ const TRAIN_FLAGS: &[&str] = &[
     "adapt-weights", "failover", "admit-rate-fps", "trace", "trace-out",
     "metrics-out", "resume", "tile-cache-save", "tile-cache-load",
     "net-connect-timeout-ms", "net-request-timeout-ms", "net-reconnect-tries",
+    "net-resume", "fault-plan",
 ];
 
 fn main() {
@@ -163,6 +164,17 @@ fn build_config(args: &Args) -> Result<TrainConfig> {
     if let Some(v) = args.flag("net-reconnect-tries") {
         cfg.set_kv(&format!("net_reconnect_tries={v}"))?;
     }
+    if let Some(v) = args.flag("net-resume") {
+        cfg.net_resume = parse_switch("net-resume", v)?;
+    }
+    if let Some(spec) = args.flag("fault-plan") {
+        cfg.set_kv(&format!("fault_plan={spec}"))?;
+    } else if cfg.fault_plan.is_none() {
+        // Env spelling for chaos drills on deployments whose launch
+        // scripts can't grow flags; --fault-plan and the config file
+        // both win over the environment.
+        cfg.fault_plan = litl::net::FaultPlanCfg::from_env("LITL_FAULT_PLAN")?;
+    }
     for kv in args.flag_all("set") {
         cfg.set_kv(kv)?;
     }
@@ -285,8 +297,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "listen", "topology", "partition", "medium", "d-in", "modes",
         "train-seed", "medium-seed", "noise-seed", "serve-shards",
-        "tile-cache-mb", "tile-cache-stripes", "tile-cache-load", "n-ph",
-        "read-sigma",
+        "tile-cache-mb", "tile-cache-stripes", "tile-cache-load",
+        "tile-cache-save", "n-ph", "read-sigma", "fault-plan", "journal-cap",
     ])?;
     let listen = args
         .flag("listen")
@@ -325,6 +337,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             Medium::Dense(_) => {
                 bail!("--tile-cache-load only applies to --medium streamed")
+            }
+        }
+    }
+    // Validate --tile-cache-save up front (the snapshot happens at
+    // graceful shutdown — a bad combination must fail at startup, not
+    // after hours of serving).
+    if args.flag("tile-cache-save").is_some() {
+        match &medium {
+            Medium::Streamed(sm) if sm.tile_cache().is_some() => {}
+            Medium::Streamed(_) => {
+                bail!("--tile-cache-save needs --tile-cache-mb >= 1")
+            }
+            Medium::Dense(_) => {
+                bail!("--tile-cache-save only applies to --medium streamed")
             }
         }
     }
@@ -371,8 +397,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--serve-shards lists shard {i} twice"))?;
         serve.push((i as u32, dev));
     }
+    let mut server_opts = ServerOptions::default();
+    if let Some(spec) = args.flag("fault-plan") {
+        server_opts.faults = Some(litl::net::FaultPlanCfg::parse(spec)?);
+    }
+    if let Some(cap) = args.flag_parse::<usize>("journal-cap")? {
+        server_opts.journal_cap = cap;
+    }
     let hosted = serve.len();
-    let server = ProjectorServer::bind(&addr, serve, registry)?;
+    install_shutdown_handler();
+    let mut server = ProjectorServer::bind_with(&addr, serve, registry, server_opts)?;
     log::info!(
         "serving {hosted} of {total} '{}' shards (partition={}, medium={}, \
          d_in={d_in}, modes={modes})",
@@ -386,10 +420,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("litl-serve listening on {}", server.local_addr());
     use std::io::Write as _;
     std::io::stdout().flush().ok();
-    // Serve until killed: connections are handled by the listener's own
-    // threads, so the main thread just parks.
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    // Serve until SIGTERM/Ctrl-C: connections are handled by the
+    // listener's own threads, so the main thread just polls the flag.
+    while !SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    // Graceful shutdown: stop accepting, let in-flight projections
+    // reply, then persist the warm tile cache before exit.
+    log::info!("shutdown signal received: draining in-flight requests");
+    server.shutdown();
+    if !server.drain(std::time::Duration::from_secs(30)) {
+        log::warn!("drain timed out with requests still executing");
+    }
+    if let Some(path) = args.flag("tile-cache-save") {
+        if let Medium::Streamed(sm) = &medium {
+            if let Some(cache) = sm.tile_cache() {
+                cache
+                    .save_snapshot(path)
+                    .with_context(|| format!("saving tile cache snapshot {path}"))?;
+                log::info!(
+                    "tile cache snapshot saved to {path} ({} tiles)",
+                    cache.tiles_resident()
+                );
+            }
+        }
+    }
+    log::info!("litl-serve exiting cleanly");
+    Ok(())
+}
+
+/// Set by the SIGTERM/SIGINT handler; the serve loop polls it.
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_shutdown_signal(_sig: i32) {
+    // Async-signal-safe: a single atomic store, nothing else.
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT (Ctrl-C) to the shutdown flag via libc's
+/// `signal(2)` — no new dependency, and the default disposition (kill)
+/// is replaced only for `litl serve`, where abrupt death would skip the
+/// drain + tile-cache flush.
+fn install_shutdown_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_shutdown_signal);
+        signal(SIGTERM, on_shutdown_signal);
     }
 }
 
@@ -598,6 +678,19 @@ COMMANDS:
           --net-reconnect-tries N   remote-shard client knobs (dial,
                                     per-request deadline, bounded
                                     exponential-backoff redial)
+          --net-resume on|off       session resume for remote shards
+                                    (default off): a redialed client
+                                    re-attaches its stream and re-
+                                    requests the in-flight frame, which
+                                    the server's replay journal executes
+                                    exactly once — faulted runs finish
+                                    bitwise identical to fault-free
+          --fault-plan SPEC         seeded deterministic fault injection
+                                    for chaos drills, e.g.
+                                    seed=7,cut_every=50,corrupt_ppm=2000
+                                    (env: LITL_FAULT_PLAN; see
+                                    docs/operator-guide.md; never
+                                    set in production)
           --train-size N --test-size N --eval-every N
           --paper-lr                use the paper's lr for the algo
           --out-dir DIR             write loss curves (CSV)
@@ -616,6 +709,15 @@ COMMANDS:
                                     (or set --medium-seed/--noise-seed)
           --serve-shards 0,2        host a subset of the shard indices
           --tile-cache-mb N --tile-cache-stripes N --tile-cache-load FILE
+          --tile-cache-save FILE    snapshot the warm tile cache during
+                                    graceful shutdown (SIGTERM/Ctrl-C
+                                    stops accepting, drains in-flight
+                                    requests, then flushes the snapshot)
+          --journal-cap N           session-resume journal entries kept
+                                    (default 256; 0 disables resume
+                                    server-side)
+          --fault-plan SPEC         server-side device faults for chaos
+                                    drills (dev_err_ppm, dev_stall_ppm…)
           --n-ph F --read-sigma F   OPU noise, as in train
   eval    Evaluate a checkpoint: --checkpoint FILE [--config paper]
   opu     Simulated device info + self-test [--modes N --n-ph F]

@@ -72,6 +72,8 @@ pub const STAGE_DATA_LOAD: &str = "data_load";
 // Networked projector client stages (frame = per-client request seq).
 pub const STAGE_NET_SEND: &str = "net_send";
 pub const STAGE_NET_RECV: &str = "net_recv";
+// Session-resume handshake after a redial (frame = resumed cursor).
+pub const STAGE_NET_RESUME: &str = "net_resume";
 
 /// How much the tracer does: `Off` (default) is a few atomics,
 /// `Summary` enables the profiling hooks (per-stage histograms and the

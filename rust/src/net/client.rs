@@ -6,32 +6,90 @@
 //! exchanges `Hello`/`HelloOk`, caching the remote device's identity
 //! (modes, ternary requirement, kind) so every `Projector` query after
 //! that is answered locally; each `project` call is one
-//! `Project`/`ProjectOk` round trip.
+//! `Project`/`ProjectOk` round trip carrying a monotone per-shard frame
+//! sequence number.
 //!
 //! **Failure semantics** (load-bearing for the serving layer's
 //! failover): a connection is (re)established with bounded
-//! exponential-backoff dial attempts, but an *in-flight* request is
-//! never retried — a resent frame would advance the remote device's
-//! noise stream a second time and silently diverge the bits.  Any
-//! transport error or reply timeout mid-request kills the connection
-//! and surfaces as `Err`, which the sharded service counts toward its
-//! error-streak trip; the *next* request redials (counting
-//! `net_reconnects`).
+//! exponential-backoff dial attempts, and what happens to an
+//! *in-flight* request depends on the resume budget
+//! ([`NetOptions::resume_tries`]):
+//!
+//! * **Resume off** (`resume_tries == 0`, the default): an in-flight
+//!   request is never retried — a blindly resent frame would advance
+//!   the remote device's noise stream a second time and silently
+//!   diverge the bits.  Any transport error or reply timeout
+//!   mid-request kills the connection and surfaces as `Err`, which the
+//!   sharded service counts toward its error-streak trip; the *next*
+//!   request redials (counting `net_reconnects`).  This is the pre-v2
+//!   behavior, byte for byte.
+//! * **Resume on**: the client greets with a nonzero session id, and a
+//!   failed attempt redials, re-attaches the session with a
+//!   `Resume`/`ResumeOk` cursor handshake (counting `net_resumes`),
+//!   and re-requests the same sequence number — safe because the
+//!   server's replay journal executes each `(session, seq)` exactly
+//!   once and replays the journaled reply otherwise.  Fatal replies
+//!   (`ERR_APP`, `ERR_CURSOR`) are never retried: they surface
+//!   immediately so failover trips deterministically instead of
+//!   burning the budget.
+//!
+//! When a [`FaultPlanCfg`] is armed ([`NetOptions::faults`]), the send
+//! path injects the plan's wire faults — stalls, connection cuts,
+//! partial writes, single-bit corruption — keyed on this client's
+//! per-shard send-attempt counter, so chaos drills are reproducible
+//! and retried attempts draw fresh decisions.  No plan means a single
+//! `Option` test per request.
 
 use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use super::frame::{self, Msg};
+use super::frame::{self, Msg, ERR_PROTO, ERR_UNAVAILABLE};
 use super::{
-    Addr, NetOptions, NetStream, NET_BYTES_RX, NET_BYTES_TX, NET_FRAMES_RX, NET_FRAMES_TX,
-    NET_RECONNECTS, NET_RTT,
+    Addr, FaultPlanCfg, NetOptions, NetStream, NET_BYTES_RX, NET_BYTES_TX, NET_FAULTS_INJECTED,
+    NET_FRAMES_RX, NET_FRAMES_TX, NET_RECONNECTS, NET_RESUMES, NET_RTT,
 };
 use crate::coordinator::projector::Projector;
-use crate::metrics::trace::{self, STAGE_NET_RECV, STAGE_NET_SEND};
+use crate::metrics::trace::{self, STAGE_NET_RECV, STAGE_NET_RESUME, STAGE_NET_SEND};
 use crate::metrics::{Counter, Histogram, Registry};
 use crate::tensor::Tensor;
+
+/// A process-unique, nonzero session id for the server's replay
+/// journal.  Uniqueness (not secrecy) is the requirement: two clients
+/// sharing an id would cross their journal cursors.  The id never
+/// feeds any training draw, so wall-clock entropy here cannot perturb
+/// the math.
+fn fresh_session_id() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let x = (std::process::id() as u64)
+        ^ nanos
+        ^ COUNTER
+            .fetch_add(1, Ordering::Relaxed)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    // splitmix64 finalizer: spreads the xor'd entropy over all bits.
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    z.max(1)
+}
+
+/// One attempt's failure, classified for the resume loop.
+enum Fail {
+    /// Never retried: the frame's fate is decided (app error, cursor
+    /// mismatch, protocol confusion on *our* side).
+    Fatal(anyhow::Error),
+    /// Retryable within the resume budget (dead transport, injected
+    /// fault, transient server unavailability).  With resume off the
+    /// budget is 1, so this surfaces unchanged.
+    Retry(anyhow::Error),
+}
 
 /// Client half of one remote shard.
 pub struct RemoteProjector {
@@ -39,6 +97,19 @@ pub struct RemoteProjector {
     shard: u32,
     opts: NetOptions,
     conn: Option<NetStream>,
+    /// Nonzero iff session resume is enabled — 0 tells the server to
+    /// skip journaling for this client entirely.
+    session: u64,
+    /// Last sequence number we hold a `ProjectOk` for; the next frame
+    /// is `acked + 1`, and a resume handshake states this cursor.
+    acked: u64,
+    /// Whether any hello ever succeeded: the resume handshake only
+    /// runs on *re*connects (a first connect has nothing in flight).
+    ever_connected: bool,
+    /// Armed fault plan (pre-filtered: `None` if absent or a no-op).
+    faults: Option<FaultPlanCfg>,
+    /// Send-attempt counter keying the client-side fault schedule.
+    send_attempts: u64,
     // Cached from HelloOk.
     modes: usize,
     requires_ternary: bool,
@@ -51,8 +122,9 @@ pub struct RemoteProjector {
     bytes_tx: Counter,
     bytes_rx: Counter,
     reconnects: Counter,
+    resumes: Counter,
+    faults_injected: Counter,
     rtt: Histogram,
-    seq: u64,
 }
 
 impl RemoteProjector {
@@ -65,11 +137,22 @@ impl RemoteProjector {
         opts: NetOptions,
         metrics: &Registry,
     ) -> Result<RemoteProjector> {
+        let session = if opts.resume_tries > 0 {
+            fresh_session_id()
+        } else {
+            0
+        };
+        let faults = opts.faults.filter(|f| !f.is_noop());
         let mut rp = RemoteProjector {
             addr: addr.clone(),
             shard,
             opts,
             conn: None,
+            session,
+            acked: 0,
+            ever_connected: false,
+            faults,
+            send_attempts: 0,
             modes: 0,
             requires_ternary: true,
             sim_seconds: 0.0,
@@ -79,8 +162,9 @@ impl RemoteProjector {
             bytes_tx: metrics.counter(NET_BYTES_TX),
             bytes_rx: metrics.counter(NET_BYTES_RX),
             reconnects: metrics.counter(NET_RECONNECTS),
+            resumes: metrics.counter(NET_RESUMES),
+            faults_injected: metrics.counter(NET_FAULTS_INJECTED),
             rtt: metrics.histogram(NET_RTT),
-            seq: 0,
         };
         rp.ensure_conn(true)
             .with_context(|| format!("connecting to projector server {addr} shard {shard}"))?;
@@ -135,7 +219,13 @@ impl RemoteProjector {
 
     fn hello(&mut self, mut stream: NetStream) -> Result<()> {
         stream.set_read_timeout(Some(Duration::from_millis(self.opts.request_timeout_ms)))?;
-        let n = frame::send(&mut stream, &Msg::Hello { shard: self.shard })?;
+        let n = frame::send(
+            &mut stream,
+            &Msg::Hello {
+                shard: self.shard,
+                session: self.session,
+            },
+        )?;
         stream.flush()?;
         self.frames_tx.inc();
         self.bytes_tx.add(n as u64);
@@ -150,18 +240,65 @@ impl RemoteProjector {
             } => {
                 self.modes = modes as usize;
                 self.requires_ternary = requires_ternary;
-                self.conn = Some(stream);
-                Ok(())
             }
-            Msg::Error { message } => bail!("server rejected hello: {message}"),
+            Msg::Error { message, .. } => bail!("server rejected hello: {message}"),
             other => bail!("unexpected hello reply {other:?}"),
         }
+        // Session-resume handshake, reconnects only: state the last seq
+        // we hold a reply for, and require the server's journal cursor
+        // to be there or exactly one ahead (the in-flight frame
+        // executed and its reply is replayable).  Anything else means
+        // the server cannot prove our in-flight frame's fate — error
+        // out so failover trips instead of risking a double draw.
+        if self.session != 0 && self.ever_connected {
+            let token = trace::start();
+            let n = frame::send(
+                &mut stream,
+                &Msg::Resume {
+                    session: self.session,
+                    shard: self.shard,
+                    cursor: self.acked,
+                },
+            )?;
+            stream.flush()?;
+            self.frames_tx.inc();
+            self.bytes_tx.add(n as u64);
+            let (reply, n) = frame::recv(&mut stream)?;
+            self.frames_rx.inc();
+            self.bytes_rx.add(n as u64);
+            match reply {
+                Msg::ResumeOk { cursor }
+                    if cursor == self.acked || cursor == self.acked + 1 =>
+                {
+                    trace::complete(STAGE_NET_RESUME, self.acked, self.shard, token);
+                    self.resumes.inc();
+                }
+                Msg::ResumeOk { cursor } => bail!(
+                    "resume cursor mismatch on shard {}: client acked {}, \
+                     server journal at {cursor}",
+                    self.shard,
+                    self.acked
+                ),
+                Msg::Error { code, message } => {
+                    bail!("server rejected resume (code {code}): {message}")
+                }
+                other => bail!("unexpected resume reply {other:?}"),
+            }
+        }
+        self.conn = Some(stream);
+        self.ever_connected = true;
+        Ok(())
     }
 
     /// Health-check round trip on the current connection.
     pub fn health(&mut self) -> Result<()> {
         self.ensure_conn(false)?;
-        let stream = self.conn.as_mut().unwrap();
+        let Some(stream) = self.conn.as_mut() else {
+            bail!(
+                "no live connection to {} after reconnect (internal invariant)",
+                self.addr
+            );
+        };
         let res = (|| -> Result<()> {
             frame::send(stream, &Msg::Health)?;
             stream.flush()?;
@@ -175,58 +312,140 @@ impl RemoteProjector {
         }
         res
     }
-}
 
-impl Projector for RemoteProjector {
-    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
-        // Reconnect (bounded backoff) happens here, BETWEEN requests.
-        self.ensure_conn(false)?;
-        self.seq += 1;
-        let seq = self.seq;
+    /// One round trip for frame `seq`: connect if needed (the resume
+    /// handshake lives in [`hello`]), inject any scheduled wire faults,
+    /// send, and classify the reply.
+    ///
+    /// [`hello`]: RemoteProjector::hello
+    fn project_attempt(
+        &mut self,
+        seq: u64,
+        frames: &Tensor,
+    ) -> std::result::Result<(Tensor, Tensor), Fail> {
+        // Reconnect (bounded backoff) happens here, BETWEEN round
+        // trips; a redial with resume on re-attaches the session first.
+        self.ensure_conn(false).map_err(Fail::Retry)?;
+        let shard = self.shard;
+
+        // Scheduled wire faults, keyed on the send-attempt counter (a
+        // retry draws fresh — bounded budgets converge through bursts).
+        let attempt_n = self.send_attempts;
+        if let Some(fp) = &self.faults {
+            self.send_attempts += 1;
+            if let Some(d) = fp.stall(shard, attempt_n) {
+                self.faults_injected.inc();
+                std::thread::sleep(d);
+            }
+            if fp.cut(shard, attempt_n) {
+                self.faults_injected.inc();
+                self.conn = None;
+                return Err(Fail::Retry(anyhow!(
+                    "injected connection cut on shard {shard} (send attempt {attempt_n})"
+                )));
+            }
+        }
+        let msg = Msg::Project {
+            shard,
+            seq,
+            frames: frames.clone(),
+        };
+        // Frame-level mutations need the encoded bytes; decide them
+        // before borrowing the stream.
+        let mut wire_bytes: Option<Vec<u8>> = None;
+        let mut partial_cut: Option<usize> = None;
+        if let Some(fp) = &self.faults {
+            let (op, payload) = frame::encode(&msg);
+            let mut buf = Vec::new();
+            frame::write_frame(&mut buf, op, &payload)
+                .map_err(|e| Fail::Fatal(anyhow!("encoding projection frame: {e}")))?;
+            if let Some(bit) = fp.corrupt(shard, attempt_n, buf.len() as u64 * 8) {
+                self.faults_injected.inc();
+                buf[(bit / 8) as usize] ^= 1 << (bit % 8);
+            }
+            if fp.partial(shard, attempt_n) {
+                self.faults_injected.inc();
+                partial_cut = Some((buf.len() / 2).max(1));
+            }
+            wire_bytes = Some(buf);
+        }
+
         let started = Instant::now();
-        let stream = self.conn.as_mut().unwrap();
-        let send_res = (|| -> Result<usize> {
-            let token = trace::start();
-            let n = frame::send(
-                stream,
-                &Msg::Project {
-                    shard: self.shard,
-                    frames: frames.clone(),
-                },
-            )?;
-            stream.flush()?;
-            trace::complete(STAGE_NET_SEND, seq, self.shard, token);
-            Ok(n)
-        })();
+        let token = trace::start();
+        let send_res: Result<usize> = {
+            let stream = match self.conn.as_mut() {
+                Some(s) => s,
+                None => {
+                    return Err(Fail::Fatal(anyhow!(
+                        "connection to {} vanished after reconnect (internal invariant)",
+                        self.addr
+                    )))
+                }
+            };
+            (|| {
+                if let Some(buf) = &wire_bytes {
+                    let cut = partial_cut.unwrap_or(buf.len());
+                    stream.write_all(&buf[..cut])?;
+                    stream.flush()?;
+                    Ok(cut)
+                } else {
+                    let n = frame::send(stream, &msg)?;
+                    stream.flush()?;
+                    Ok(n)
+                }
+            })()
+        };
+        if partial_cut.is_some() {
+            // The frame is knowingly truncated mid-stream: this
+            // connection's framing is unusable, whatever write_all said.
+            self.conn = None;
+            return Err(Fail::Retry(anyhow!(
+                "injected partial write on shard {shard} (send attempt {attempt_n})"
+            )));
+        }
         let n = match send_res {
             Ok(n) => n,
             Err(e) => {
                 // The frame may be half-written: the framing on this
                 // connection is unusable, and the request must NOT be
-                // resent (the server may already have projected it).
+                // blindly resent (the server may already have projected
+                // it) — only a resume handshake can make a retry safe.
                 self.conn = None;
-                return Err(e.context("remote projection send failed"));
+                return Err(Fail::Retry(e.context("remote projection send failed")));
             }
         };
+        trace::complete(STAGE_NET_SEND, seq, shard, token);
         self.frames_tx.inc();
         self.bytes_tx.add(n as u64);
 
         let token = trace::start();
-        let recv_res = frame::recv(stream);
+        let recv_res = {
+            let stream = match self.conn.as_mut() {
+                Some(s) => s,
+                None => {
+                    return Err(Fail::Fatal(anyhow!(
+                        "connection to {} vanished mid-request (internal invariant)",
+                        self.addr
+                    )))
+                }
+            };
+            frame::recv(stream)
+        };
         let (reply, n) = match recv_res {
             Ok(ok) => ok,
             Err(e) => {
                 // Timeout or dead transport with a request in flight:
                 // complete it with an error (never silence, never a
-                // retry) so the failover machinery sees the failure.
+                // blind retry) so either the resume loop re-attaches or
+                // the failover machinery sees the failure.
                 self.conn = None;
-                return Err(anyhow::Error::new(e).context(format!(
+                return Err(Fail::Retry(anyhow::Error::new(e).context(format!(
                     "remote projection reply from {} shard {} failed",
-                    self.addr, self.shard
-                )));
+                    self.addr, shard
+                ))));
             }
         };
-        trace::complete(STAGE_NET_RECV, seq, self.shard, token);
+        trace::complete(STAGE_NET_RECV, seq, shard, token);
         self.frames_rx.inc();
         self.bytes_rx.add(n as u64);
         self.rtt.observe(started.elapsed().as_secs_f64());
@@ -241,17 +460,67 @@ impl Projector for RemoteProjector {
                 self.energy_joules = energy_joules;
                 Ok((p1, p2))
             }
-            // A structured server-side error: the connection and its
-            // framing are fine, keep it.
-            Msg::Error { message } => bail!(
-                "remote shard {} at {}: {message}",
-                self.shard,
+            // Transient server-side refusal: the frame was NOT executed
+            // — retryable as-is, connection and framing are fine.
+            Msg::Error {
+                code: ERR_UNAVAILABLE,
+                message,
+            } => Err(Fail::Retry(anyhow!(
+                "remote shard {shard} at {}: {message}",
                 self.addr
-            ),
+            ))),
+            // The server distrusts this connection's framing (e.g. an
+            // injected corruption tripped its CRC) and will close it:
+            // retryable after a redial — our frame was never parsed.
+            Msg::Error {
+                code: ERR_PROTO,
+                message,
+            } => {
+                self.conn = None;
+                Err(Fail::Retry(anyhow!(
+                    "remote shard {shard} at {}: {message}",
+                    self.addr
+                )))
+            }
+            // ERR_APP, ERR_CURSOR, unknown codes: the frame's fate is
+            // decided — surface immediately so failover trips.
+            Msg::Error { message, .. } => Err(Fail::Fatal(anyhow!(
+                "remote shard {shard} at {}: {message}",
+                self.addr
+            ))),
             other => {
                 self.conn = None;
-                bail!("unexpected projection reply {other:?}")
+                Err(Fail::Fatal(anyhow!("unexpected projection reply {other:?}")))
             }
+        }
+    }
+}
+
+impl Projector for RemoteProjector {
+    fn project(&mut self, frames: &Tensor) -> Result<(Tensor, Tensor)> {
+        let seq = self.acked + 1;
+        // Resume off → budget 1: one attempt, errors surface unchanged
+        // (the pre-v2 semantics, byte for byte).
+        let tries = self.opts.resume_tries.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for _ in 0..tries {
+            match self.project_attempt(seq, frames) {
+                Ok(out) => {
+                    self.acked = seq;
+                    return Ok(out);
+                }
+                Err(Fail::Fatal(e)) => return Err(e),
+                Err(Fail::Retry(e)) => last = Some(e),
+            }
+        }
+        let e = last.unwrap_or_else(|| anyhow!("no attempt recorded"));
+        if tries > 1 {
+            Err(e.context(format!(
+                "projection seq {seq} on shard {} failed after {tries} resume attempts",
+                self.shard
+            )))
+        } else {
+            Err(e)
         }
     }
 

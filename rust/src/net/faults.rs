@@ -1,0 +1,393 @@
+//! Deterministic fault injection for the networked fleet.
+//!
+//! A [`FaultPlanCfg`] is a seeded, fully reproducible schedule of
+//! transport and device faults: every decision is a pure function of
+//! `(plan seed, fault site, shard, event counter)` through a
+//! counter-addressed [`Pcg64`] stream, so the *same plan against the
+//! same traffic produces the same faults* — independent of thread
+//! interleaving, wall clock, or retry timing.  That is what makes the
+//! chaos suite (`tests/chaos.rs`) a pin rather than a flake: a
+//! fault-ridden run with session resume enabled must finish bitwise
+//! identical to the fault-free run.
+//!
+//! Two injection planes share one plan:
+//!
+//! * **Client/wire** (consumed by [`super::client::RemoteProjector`]),
+//!   keyed on the per-shard *send-attempt* counter: connection cuts
+//!   (`cut_every` / `cut_ppm`), stalled sends (`stall_ppm` ×
+//!   `stall_ms`), partial writes that truncate a frame mid-stream
+//!   (`partial_ppm`), and single-bit payload corruption that exercises
+//!   the CRC path end to end (`corrupt_ppm`).
+//! * **Server/device** (consumed by [`super::server::ProjectorServer`]),
+//!   keyed on the per-shard *arrival* counter: error bursts
+//!   (`dev_err_ppm` × `dev_err_burst` consecutive arrivals) and stall
+//!   windows (`dev_stall_ppm` × `dev_stall_ms`).  A device fault
+//!   replies `ERR_UNAVAILABLE` *without executing the projection*, so
+//!   the noise stream never advances for a faulted frame and a resumed
+//!   retry still lands exactly once.
+//!
+//! Keying retries on the attempt/arrival counters (not the frame seq)
+//! is deliberate: a retried frame draws a *fresh* decision, so bounded
+//! retries converge through error bursts while the overall schedule
+//! stays reproducible for the one-client-per-shard topologies the
+//! trainer builds.
+//!
+//! The config is all-integer and `Copy + Eq + Hash` so it embeds
+//! directly in [`super::NetOptions`] (and hence flows through the one
+//! topology build path) without touching the topology's canonical
+//! identity.  `None` everywhere means the hot paths skip injection with
+//! a single `Option` test — zero cost when chaos is off.
+
+use anyhow::{bail, Result};
+use std::fmt;
+
+use crate::util::rng::Pcg64;
+
+/// Parts-per-million denominator for every probability knob.
+pub const PPM: u64 = 1_000_000;
+
+// Decision sites: each fault type draws from its own derived stream so
+// the knobs are independent (raising `corrupt_ppm` never shifts which
+// frames get cut).
+const SITE_CUT: u64 = 0x11;
+const SITE_PARTIAL: u64 = 0x22;
+const SITE_CORRUPT: u64 = 0x33;
+const SITE_CORRUPT_POS: u64 = 0x44;
+const SITE_STALL: u64 = 0x55;
+const SITE_DEV_ERR: u64 = 0x66;
+const SITE_DEV_STALL: u64 = 0x77;
+
+/// A seeded fault plan: the `--fault-plan` / `[net] fault_plan` spec,
+/// parsed.  All probabilities are parts-per-million; all durations are
+/// integer milliseconds; zero disables the knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FaultPlanCfg {
+    /// Seed of the plan's own `Pcg64` streams (independent of every
+    /// training seed — chaos never perturbs the math's draws).
+    pub seed: u64,
+    /// Cut the connection before every Nth send attempt (0 = off) —
+    /// the deterministic "cut after the Nth frame" schedule.
+    pub cut_every: u32,
+    /// Probabilistic connection cut before a send attempt.
+    pub cut_ppm: u32,
+    /// Write only a frame prefix, then cut — the peer sees `Truncated`.
+    pub partial_ppm: u32,
+    /// Flip one bit of an encoded frame — the peer sees `BadCrc`.
+    pub corrupt_ppm: u32,
+    /// Stall this send attempt for `stall_ms` before writing.
+    pub stall_ppm: u32,
+    /// Stalled-send duration (ms).
+    pub stall_ms: u32,
+    /// Server-side: begin an error burst at this arrival.
+    pub dev_err_ppm: u32,
+    /// Consecutive arrivals each burst errors (>= 1 when triggered).
+    pub dev_err_burst: u32,
+    /// Server-side: stall the device for `dev_stall_ms` at this arrival.
+    pub dev_stall_ppm: u32,
+    /// Device stall-window duration (ms).
+    pub dev_stall_ms: u32,
+}
+
+impl Default for FaultPlanCfg {
+    fn default() -> Self {
+        FaultPlanCfg {
+            seed: 0,
+            cut_every: 0,
+            cut_ppm: 0,
+            partial_ppm: 0,
+            corrupt_ppm: 0,
+            stall_ppm: 0,
+            stall_ms: 0,
+            dev_err_ppm: 0,
+            dev_err_burst: 1,
+            dev_stall_ppm: 0,
+            dev_stall_ms: 0,
+        }
+    }
+}
+
+impl FaultPlanCfg {
+    /// Parse the spec string: comma-separated `key=value` pairs, e.g.
+    /// `seed=7,cut_every=5,corrupt_ppm=20000,dev_err_ppm=50000,
+    /// dev_err_burst=2`.  Unknown keys and non-integer values are
+    /// loud errors; every key is optional (defaults above).
+    pub fn parse(spec: &str) -> Result<FaultPlanCfg> {
+        let mut cfg = FaultPlanCfg::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("fault plan entry '{part}' is not key=value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let parse_u32 = |what: &str| -> Result<u32> {
+                value
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("fault plan {what} '{value}' is not a u32"))
+            };
+            match key {
+                "seed" => {
+                    cfg.seed = value
+                        .parse::<u64>()
+                        .map_err(|_| anyhow::anyhow!("fault plan seed '{value}' is not a u64"))?
+                }
+                "cut_every" => cfg.cut_every = parse_u32(key)?,
+                "cut_ppm" => cfg.cut_ppm = parse_u32(key)?,
+                "partial_ppm" => cfg.partial_ppm = parse_u32(key)?,
+                "corrupt_ppm" => cfg.corrupt_ppm = parse_u32(key)?,
+                "stall_ppm" => cfg.stall_ppm = parse_u32(key)?,
+                "stall_ms" => cfg.stall_ms = parse_u32(key)?,
+                "dev_err_ppm" => cfg.dev_err_ppm = parse_u32(key)?,
+                "dev_err_burst" => cfg.dev_err_burst = parse_u32(key)?,
+                "dev_stall_ppm" => cfg.dev_stall_ppm = parse_u32(key)?,
+                "dev_stall_ms" => cfg.dev_stall_ms = parse_u32(key)?,
+                other => bail!(
+                    "unknown fault plan key '{other}' (known: seed, cut_every, \
+                     cut_ppm, partial_ppm, corrupt_ppm, stall_ppm, stall_ms, \
+                     dev_err_ppm, dev_err_burst, dev_stall_ppm, dev_stall_ms)"
+                ),
+            }
+        }
+        for (ppm, name) in [
+            (cfg.cut_ppm, "cut_ppm"),
+            (cfg.partial_ppm, "partial_ppm"),
+            (cfg.corrupt_ppm, "corrupt_ppm"),
+            (cfg.stall_ppm, "stall_ppm"),
+            (cfg.dev_err_ppm, "dev_err_ppm"),
+            (cfg.dev_stall_ppm, "dev_stall_ppm"),
+        ] {
+            if ppm as u64 > PPM {
+                bail!("fault plan {name}={ppm} exceeds {PPM} (parts-per-million)");
+            }
+        }
+        if cfg.dev_err_burst == 0 {
+            bail!("fault plan dev_err_burst must be >= 1");
+        }
+        Ok(cfg)
+    }
+
+    /// Parse from an environment variable (benches): `Ok(None)` when
+    /// unset or empty, a loud error on a malformed spec.
+    pub fn from_env(var: &str) -> Result<Option<FaultPlanCfg>> {
+        match std::env::var(var) {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(FaultPlanCfg::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Canonical spec spelling: round-trips through [`parse`], emitting
+    /// only non-default knobs (an all-default plan prints `seed=N`).
+    ///
+    /// [`parse`]: FaultPlanCfg::parse
+    pub fn canonical(&self) -> String {
+        let mut out = format!("seed={}", self.seed);
+        let d = FaultPlanCfg::default();
+        for (val, def, name) in [
+            (self.cut_every, d.cut_every, "cut_every"),
+            (self.cut_ppm, d.cut_ppm, "cut_ppm"),
+            (self.partial_ppm, d.partial_ppm, "partial_ppm"),
+            (self.corrupt_ppm, d.corrupt_ppm, "corrupt_ppm"),
+            (self.stall_ppm, d.stall_ppm, "stall_ppm"),
+            (self.stall_ms, d.stall_ms, "stall_ms"),
+            (self.dev_err_ppm, d.dev_err_ppm, "dev_err_ppm"),
+            (self.dev_err_burst, d.dev_err_burst, "dev_err_burst"),
+            (self.dev_stall_ppm, d.dev_stall_ppm, "dev_stall_ppm"),
+            (self.dev_stall_ms, d.dev_stall_ms, "dev_stall_ms"),
+        ] {
+            if val != def {
+                out.push_str(&format!(",{name}={val}"));
+            }
+        }
+        out
+    }
+
+    /// True when no knob can ever fire — callers may skip injection
+    /// entirely (equivalent to no plan at all).
+    pub fn is_noop(&self) -> bool {
+        self.cut_every == 0
+            && self.cut_ppm == 0
+            && self.partial_ppm == 0
+            && self.corrupt_ppm == 0
+            && self.stall_ppm == 0
+            && self.dev_err_ppm == 0
+            && self.dev_stall_ppm == 0
+    }
+
+    // -- decision functions -------------------------------------------------
+    //
+    // Each is a pure function of (seed, site, shard, counter): the
+    // counter-addressed draw makes decisions independent of evaluation
+    // order, so concurrent shards and retried frames never perturb
+    // each other's schedules.
+
+    fn draw(&self, site: u64, shard: u32, n: u64) -> u64 {
+        // One derived stream per (site, shard); `advance` addresses the
+        // nth output directly (O(log n), no sequential walk).
+        let mut rng = Pcg64::new(
+            self.seed ^ site.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            0xC0FF_EE00 ^ (shard as u64),
+        );
+        rng.advance(n as u128);
+        rng.next_u64()
+    }
+
+    fn hit(&self, site: u64, shard: u32, n: u64, ppm: u32) -> bool {
+        ppm > 0 && self.draw(site, shard, n) % PPM < ppm as u64
+    }
+
+    /// Client: cut the connection before send attempt `n` (0-based)?
+    pub fn cut(&self, shard: u32, n: u64) -> bool {
+        (self.cut_every > 0 && (n + 1) % self.cut_every as u64 == 0)
+            || self.hit(SITE_CUT, shard, n, self.cut_ppm)
+    }
+
+    /// Client: truncate this send attempt's frame mid-stream?
+    pub fn partial(&self, shard: u32, n: u64) -> bool {
+        self.hit(SITE_PARTIAL, shard, n, self.partial_ppm)
+    }
+
+    /// Client: corrupt one bit of this send attempt's frame?  Returns
+    /// the bit index to flip (deterministic per attempt).
+    pub fn corrupt(&self, shard: u32, n: u64, frame_bits: u64) -> Option<u64> {
+        if frame_bits == 0 || !self.hit(SITE_CORRUPT, shard, n, self.corrupt_ppm) {
+            return None;
+        }
+        Some(self.draw(SITE_CORRUPT_POS, shard, n) % frame_bits)
+    }
+
+    /// Client: stall duration before send attempt `n`, if any.
+    pub fn stall(&self, shard: u32, n: u64) -> Option<std::time::Duration> {
+        if self.stall_ms > 0 && self.hit(SITE_STALL, shard, n, self.stall_ppm) {
+            Some(std::time::Duration::from_millis(self.stall_ms as u64))
+        } else {
+            None
+        }
+    }
+
+    /// Server: does arrival `n` on `shard` fall inside an error burst?
+    /// A hit at arrival `k` errors arrivals `k ..= k + burst - 1`, so a
+    /// client retrying with fresh arrival numbers eventually passes.
+    pub fn dev_err(&self, shard: u32, n: u64) -> bool {
+        if self.dev_err_ppm == 0 {
+            return false;
+        }
+        let burst = self.dev_err_burst.max(1) as u64;
+        let lo = n.saturating_sub(burst - 1);
+        (lo..=n).any(|k| self.hit(SITE_DEV_ERR, shard, k, self.dev_err_ppm))
+    }
+
+    /// Server: stall-window duration at arrival `n`, if any.
+    pub fn dev_stall(&self, shard: u32, n: u64) -> Option<std::time::Duration> {
+        if self.dev_stall_ms > 0 && self.hit(SITE_DEV_STALL, shard, n, self.dev_stall_ppm) {
+            Some(std::time::Duration::from_millis(self.dev_stall_ms as u64))
+        } else {
+            None
+        }
+    }
+}
+
+impl fmt::Display for FaultPlanCfg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        let spec = "seed=7,cut_every=5,corrupt_ppm=20000,stall_ppm=1000,\
+                    stall_ms=3,dev_err_ppm=50000,dev_err_burst=2";
+        let cfg = FaultPlanCfg::parse(spec).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.cut_every, 5);
+        assert_eq!(cfg.corrupt_ppm, 20_000);
+        assert_eq!(cfg.dev_err_burst, 2);
+        let back = FaultPlanCfg::parse(&cfg.canonical()).unwrap();
+        assert_eq!(back, cfg);
+        // Whitespace and trailing commas are tolerated.
+        assert_eq!(
+            FaultPlanCfg::parse(" seed=7 , cut_every=5 ,").unwrap().cut_every,
+            5
+        );
+    }
+
+    #[test]
+    fn malformed_specs_are_loud() {
+        assert!(FaultPlanCfg::parse("bogus_key=1").is_err());
+        assert!(FaultPlanCfg::parse("seed").is_err());
+        assert!(FaultPlanCfg::parse("cut_ppm=notanint").is_err());
+        assert!(FaultPlanCfg::parse("cut_ppm=2000000").is_err(), "ppm > 1e6");
+        assert!(FaultPlanCfg::parse("dev_err_burst=0").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_order_free() {
+        let cfg = FaultPlanCfg::parse("seed=11,cut_ppm=300000,corrupt_ppm=300000").unwrap();
+        // Same (shard, counter) always answers the same, in any order.
+        let forward: Vec<bool> = (0..64).map(|n| cfg.cut(1, n)).collect();
+        let backward: Vec<bool> = (0..64).rev().map(|n| cfg.cut(1, n)).rev().collect();
+        assert_eq!(forward, backward);
+        assert!(forward.iter().any(|&b| b), "30% over 64 draws must hit");
+        assert!(!forward.iter().all(|&b| b), "and must not always hit");
+        // Sites are independent: the cut schedule differs from corrupt.
+        let corrupt: Vec<bool> =
+            (0..64).map(|n| cfg.corrupt(1, n, 1024).is_some()).collect();
+        assert_ne!(forward, corrupt);
+        // Shards are independent streams.
+        let other: Vec<bool> = (0..64).map(|n| cfg.cut(2, n)).collect();
+        assert_ne!(forward, other);
+    }
+
+    #[test]
+    fn cut_every_is_an_exact_schedule() {
+        let cfg = FaultPlanCfg::parse("seed=1,cut_every=4").unwrap();
+        for n in 0..32 {
+            assert_eq!(cfg.cut(0, n), (n + 1) % 4 == 0, "attempt {n}");
+        }
+    }
+
+    #[test]
+    fn dev_err_bursts_cover_consecutive_arrivals() {
+        let cfg = FaultPlanCfg::parse("seed=3,dev_err_ppm=60000,dev_err_burst=3").unwrap();
+        // Find a triggering arrival, then the burst must span it.
+        let trigger = (0..4096)
+            .find(|&n| cfg.hit(super::SITE_DEV_ERR, 0, n, cfg.dev_err_ppm))
+            .expect("6% over 4096 draws must trigger");
+        for k in trigger..trigger + 3 {
+            assert!(cfg.dev_err(0, k), "arrival {k} inside the burst");
+        }
+    }
+
+    #[test]
+    fn zero_plan_is_a_noop() {
+        let cfg = FaultPlanCfg::parse("seed=9").unwrap();
+        assert!(cfg.is_noop());
+        for n in 0..128 {
+            assert!(!cfg.cut(0, n));
+            assert!(!cfg.partial(0, n));
+            assert!(cfg.corrupt(0, n, 4096).is_none());
+            assert!(cfg.stall(0, n).is_none());
+            assert!(!cfg.dev_err(0, n));
+            assert!(cfg.dev_stall(0, n).is_none());
+        }
+    }
+
+    #[test]
+    fn env_parsing_is_optional_but_strict() {
+        std::env::remove_var("LITL_TEST_FAULT_PLAN");
+        assert!(FaultPlanCfg::from_env("LITL_TEST_FAULT_PLAN").unwrap().is_none());
+        std::env::set_var("LITL_TEST_FAULT_PLAN", "seed=5,cut_every=2");
+        assert_eq!(
+            FaultPlanCfg::from_env("LITL_TEST_FAULT_PLAN").unwrap().unwrap().cut_every,
+            2
+        );
+        std::env::set_var("LITL_TEST_FAULT_PLAN", "nope");
+        assert!(FaultPlanCfg::from_env("LITL_TEST_FAULT_PLAN").is_err());
+        std::env::remove_var("LITL_TEST_FAULT_PLAN");
+    }
+}

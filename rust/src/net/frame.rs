@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! magic    "LITL"              4 bytes
-//! version  u16 LE              = 1
+//! version  u16 LE              = 2
 //! opcode   u16 LE              (see the OP_* constants)
 //! len      u32 LE              payload byte count (<= MAX_PAYLOAD)
 //! payload  len bytes
@@ -32,11 +32,27 @@
 //! The message vocabulary ([`Msg`]) is the projector-service submission
 //! protocol, promoted: a client greets a shard (`Hello`/`HelloOk`,
 //! carrying the device's modes/kind so the client can stand in for it
-//! behind the [`crate::coordinator::projector::Projector`] trait),
-//! submits frames (`Project`/`ProjectOk`, the reply carrying the
-//! server-side cumulative sim-clock and energy account), and probes
-//! liveness (`Health`/`HealthOk`).  Any server-side failure travels as
-//! `Error` with a message, so a client never hangs on a reply.
+//! behind the [`crate::coordinator::projector::Projector`] trait, plus
+//! a client-chosen session id for the server's replay journal), submits
+//! frames (`Project`/`ProjectOk`, the request carrying a monotone
+//! per-shard frame sequence number, the reply carrying the server-side
+//! cumulative sim-clock and energy account), re-attaches after a
+//! redial (`Resume`/`ResumeOk`, the session-resume handshake: the
+//! client states the last sequence number it holds a reply for and the
+//! server answers with its journal cursor, so an in-flight frame can be
+//! re-requested *exactly once* — see `super::server` for the journal
+//! semantics), and probes liveness (`Health`/`HealthOk`).  Any
+//! server-side failure travels as `Error` with a machine-readable code
+//! (the `ERR_*` constants) and a message, so a client never hangs on a
+//! reply and can distinguish retryable conditions (an injected device
+//! fault, a framing desync) from fatal ones (an application error, a
+//! journal-cursor mismatch).
+//!
+//! **v1 → v2:** `Hello` gained `session`, `Project` gained `seq`,
+//! `Error` gained `code`, and the `Resume`/`ResumeOk` pair is new.  The
+//! layouts are incompatible, so the version was bumped: a v1 peer is
+//! rejected with a typed [`WireError::BadVersion`] before any payload
+//! is trusted.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -46,7 +62,10 @@ use crate::tensor::Tensor;
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"LITL";
 /// Wire protocol version (bump on any incompatible layout change).
-pub const VERSION: u16 = 1;
+/// v2: session-resume handshake — `Hello` carries a session id,
+/// `Project` a frame sequence number, `Error` a typed code, and the
+/// `Resume`/`ResumeOk` opcodes exist.
+pub const VERSION: u16 = 2;
 /// Fixed header size: magic + version + opcode + payload length.
 pub const HEADER_LEN: usize = 12;
 /// Trailing CRC size.
@@ -64,6 +83,26 @@ pub const OP_PROJECT_OK: u16 = 4;
 pub const OP_ERROR: u16 = 5;
 pub const OP_HEALTH: u16 = 6;
 pub const OP_HEALTH_OK: u16 = 7;
+pub const OP_RESUME: u16 = 8;
+pub const OP_RESUME_OK: u16 = 9;
+
+// `Msg::Error` codes: machine-readable failure classes, so clients can
+// route without parsing prose.
+/// The projection itself failed (device error / panic): fatal for this
+/// frame — the client surfaces it to the failover plane, never retries.
+pub const ERR_APP: u16 = 1;
+/// The server could not trust this connection's framing (bad CRC,
+/// truncation, …) and will close it: the request is retryable after a
+/// redial + resume.
+pub const ERR_PROTO: u16 = 2;
+/// Transient server-side unavailability (e.g. an injected device error
+/// burst): the request was NOT executed and may be retried as-is.
+pub const ERR_UNAVAILABLE: u16 = 3;
+/// Session-resume cursor mismatch: the server cannot prove the
+/// in-flight frame's fate (journal evicted, server restarted, or a
+/// stale session).  Fatal — the client errors deterministically into
+/// failover instead of risking a double noise draw.
+pub const ERR_CURSOR: u16 = 4;
 
 /// Typed decode/transport failure.  Every variant is a protocol or I/O
 /// condition a hostile or broken peer can cause; none of them panic.
@@ -136,7 +175,9 @@ impl From<std::io::Error> for WireError {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Client → server: bind this connection's requests to `shard`.
-    Hello { shard: u32 },
+    /// `session` keys the server's replay journal; 0 opts out of
+    /// journaling entirely (the pre-resume semantics).
+    Hello { shard: u32, session: u64 },
     /// Server → client: the greeted shard's device identity, so the
     /// remote client can answer `Projector` queries locally.
     HelloOk {
@@ -144,8 +185,11 @@ pub enum Msg {
         requires_ternary: bool,
         kind: String,
     },
-    /// Client → server: project `frames` on `shard`.
-    Project { shard: u32, frames: Tensor },
+    /// Client → server: project `frames` on `shard`.  `seq` is the
+    /// client's monotone per-shard frame number (1-based); the server's
+    /// journal dedups on it so a resumed re-request executes exactly
+    /// once.
+    Project { shard: u32, seq: u64, frames: Tensor },
     /// Server → client: the two quadratures plus the shard device's
     /// *cumulative* sim-clock/energy account after this projection.
     ProjectOk {
@@ -154,8 +198,17 @@ pub enum Msg {
         sim_seconds: f64,
         energy_joules: f64,
     },
-    /// Server → client: the request failed; the message explains why.
-    Error { message: String },
+    /// Client → server after a redial: `cursor` is the last seq the
+    /// client holds a reply for; the server answers `ResumeOk` with its
+    /// journal cursor (== `cursor` if the in-flight frame never
+    /// executed, `cursor + 1` if it did and the reply is replayable) or
+    /// `Error { code: ERR_CURSOR }` if it cannot prove either.
+    Resume { session: u64, shard: u32, cursor: u64 },
+    /// Server → client: the journal cursor for the resumed session.
+    ResumeOk { cursor: u64 },
+    /// Server → client: the request failed; `code` is one of the
+    /// `ERR_*` constants, the message explains why.
+    Error { code: u16, message: String },
     /// Liveness probe.
     Health,
     /// Liveness reply.
@@ -287,8 +340,21 @@ impl<'a> Dec<'a> {
         Ok(self.bytes(1)?[0])
     }
 
+    fn u16(&mut self) -> Result<u16, WireError> {
+        // The `try_into().unwrap()`s below are infallible, not hostile-
+        // reachable: `bytes(n)` either returns exactly `n` bytes or a
+        // typed `Truncated` — the conversion can only see a correctly
+        // sized slice.  (Audited; the decoder property fuzz at the
+        // bottom of this file exercises every truncation.)
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
     fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
     fn f64(&mut self) -> Result<f64, WireError> {
@@ -354,8 +420,9 @@ fn get_str(d: &mut Dec) -> Result<String, WireError> {
 pub fn encode(msg: &Msg) -> (u16, Vec<u8>) {
     let mut p = Vec::new();
     let op = match msg {
-        Msg::Hello { shard } => {
+        Msg::Hello { shard, session } => {
             p.extend_from_slice(&shard.to_le_bytes());
+            p.extend_from_slice(&session.to_le_bytes());
             OP_HELLO
         }
         Msg::HelloOk {
@@ -368,8 +435,9 @@ pub fn encode(msg: &Msg) -> (u16, Vec<u8>) {
             put_str(&mut p, kind);
             OP_HELLO_OK
         }
-        Msg::Project { shard, frames } => {
+        Msg::Project { shard, seq, frames } => {
             p.extend_from_slice(&shard.to_le_bytes());
+            p.extend_from_slice(&seq.to_le_bytes());
             put_tensor(&mut p, frames);
             OP_PROJECT
         }
@@ -385,7 +453,22 @@ pub fn encode(msg: &Msg) -> (u16, Vec<u8>) {
             p.extend_from_slice(&energy_joules.to_bits().to_le_bytes());
             OP_PROJECT_OK
         }
-        Msg::Error { message } => {
+        Msg::Resume {
+            session,
+            shard,
+            cursor,
+        } => {
+            p.extend_from_slice(&session.to_le_bytes());
+            p.extend_from_slice(&shard.to_le_bytes());
+            p.extend_from_slice(&cursor.to_le_bytes());
+            OP_RESUME
+        }
+        Msg::ResumeOk { cursor } => {
+            p.extend_from_slice(&cursor.to_le_bytes());
+            OP_RESUME_OK
+        }
+        Msg::Error { code, message } => {
+            p.extend_from_slice(&code.to_le_bytes());
             put_str(&mut p, message);
             OP_ERROR
         }
@@ -399,7 +482,10 @@ pub fn encode(msg: &Msg) -> (u16, Vec<u8>) {
 pub fn decode(opcode: u16, payload: &[u8]) -> Result<Msg, WireError> {
     let mut d = Dec::new(payload);
     let msg = match opcode {
-        OP_HELLO => Msg::Hello { shard: d.u32()? },
+        OP_HELLO => Msg::Hello {
+            shard: d.u32()?,
+            session: d.u64()?,
+        },
         OP_HELLO_OK => Msg::HelloOk {
             modes: d.u32()?,
             requires_ternary: d.u8()? != 0,
@@ -407,6 +493,7 @@ pub fn decode(opcode: u16, payload: &[u8]) -> Result<Msg, WireError> {
         },
         OP_PROJECT => Msg::Project {
             shard: d.u32()?,
+            seq: d.u64()?,
             frames: get_tensor(&mut d)?,
         },
         OP_PROJECT_OK => Msg::ProjectOk {
@@ -415,7 +502,14 @@ pub fn decode(opcode: u16, payload: &[u8]) -> Result<Msg, WireError> {
             sim_seconds: d.f64()?,
             energy_joules: d.f64()?,
         },
+        OP_RESUME => Msg::Resume {
+            session: d.u64()?,
+            shard: d.u32()?,
+            cursor: d.u64()?,
+        },
+        OP_RESUME_OK => Msg::ResumeOk { cursor: d.u64()? },
         OP_ERROR => Msg::Error {
+            code: d.u16()?,
             message: get_str(&mut d)?,
         },
         OP_HEALTH => Msg::Health,
@@ -442,7 +536,10 @@ mod tests {
         let t1 = Tensor::randn(&[3, 5], &mut rng, 1.0);
         let t2 = Tensor::randn(&[3, 5], &mut rng, 2.0);
         vec![
-            Msg::Hello { shard: 7 },
+            Msg::Hello {
+                shard: 7,
+                session: 0xDEAD_BEEF_0042,
+            },
             Msg::HelloOk {
                 modes: 128,
                 requires_ternary: true,
@@ -450,6 +547,7 @@ mod tests {
             },
             Msg::Project {
                 shard: 2,
+                seq: 19,
                 frames: t1.clone(),
             },
             Msg::ProjectOk {
@@ -458,7 +556,14 @@ mod tests {
                 sim_seconds: 0.125,
                 energy_joules: 3.75,
             },
+            Msg::Resume {
+                session: 0xDEAD_BEEF_0042,
+                shard: 2,
+                cursor: 18,
+            },
+            Msg::ResumeOk { cursor: 19 },
             Msg::Error {
+                code: ERR_APP,
                 message: "shard 9 not hosted here".into(),
             },
             Msg::Health,
@@ -488,6 +593,7 @@ mod tests {
         );
         let msg = Msg::Project {
             shard: 0,
+            seq: 1,
             frames: t.clone(),
         };
         let bytes = frame_bytes(&msg);
@@ -508,7 +614,7 @@ mod tests {
 
     #[test]
     fn every_truncation_point_is_a_typed_error() {
-        let bytes = frame_bytes(&Msg::Hello { shard: 3 });
+        let bytes = frame_bytes(&Msg::Hello { shard: 3, session: 9 });
         for cut in 1..bytes.len() {
             let err = recv(&mut &bytes[..cut]).unwrap_err();
             assert!(
@@ -520,7 +626,7 @@ mod tests {
 
     #[test]
     fn corrupted_crc_is_detected() {
-        let mut bytes = frame_bytes(&Msg::Hello { shard: 3 });
+        let mut bytes = frame_bytes(&Msg::Hello { shard: 3, session: 9 });
         let last = bytes.len() - 1;
         bytes[last] ^= 0x01;
         assert!(matches!(
@@ -589,12 +695,36 @@ mod tests {
     #[test]
     fn trailing_payload_bytes_are_rejected() {
         let mut p = 5u32.to_le_bytes().to_vec();
+        p.extend_from_slice(&7u64.to_le_bytes()); // session
         p.push(0xAB); // one byte beyond Hello's fixed payload
         let mut out = Vec::new();
         write_frame(&mut out, OP_HELLO, &p).unwrap();
         assert!(matches!(
             recv(&mut &out[..]),
             Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn v1_frames_are_rejected_with_a_typed_bad_version() {
+        // A pre-resume (v1) peer: same magic, version 1, a v1 Hello
+        // payload (bare shard id).  The version gate must fire before
+        // the payload shape is ever trusted.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.extend_from_slice(&OP_HELLO.to_le_bytes());
+        let payload = 3u32.to_le_bytes();
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let mut hasher = flate2::Crc::new();
+        hasher.update(&bytes[4..]);
+        hasher.update(&payload);
+        let crc = hasher.sum().to_le_bytes();
+        bytes.extend_from_slice(&payload);
+        bytes.extend_from_slice(&crc);
+        assert!(matches!(
+            recv(&mut &bytes[..]),
+            Err(WireError::BadVersion(1))
         ));
     }
 
@@ -623,6 +753,90 @@ mod tests {
                     (0..len).map(|_| rng.next_below(256) as u8).collect();
                 let _ = recv(&mut &bytes[..]); // must not panic
             }
+        }
+    }
+
+    /// Seeded property fuzz beyond single-bit flips: mutated length
+    /// fields, truncations at arbitrary offsets, and opcode/version
+    /// extremes.  Every mutation must yield a typed [`WireError`] —
+    /// never a panic, and never an allocation driven by the hostile
+    /// length (the `Oversize` cap and `try_reserve` guard fire before
+    /// any buffer exists).
+    #[test]
+    fn decoder_property_fuzz_yields_typed_errors_only() {
+        let mut rng = Pcg64::seeded(0xC4A05);
+        let samples: Vec<Vec<u8>> = sample_msgs().iter().map(frame_bytes).collect();
+        for round in 0..200u64 {
+            let clean = &samples[(round % samples.len() as u64) as usize];
+            let mut dirty = clean.clone();
+            match rng.next_below(5) {
+                // Length field rewritten to an arbitrary u32 (including
+                // values far beyond the real payload and beyond
+                // MAX_PAYLOAD): the frame layer must either cap it or
+                // fail the read/CRC — never trust it.
+                0 => {
+                    let len = rng.next_u64() as u32;
+                    dirty[8..12].copy_from_slice(&len.to_le_bytes());
+                }
+                // Truncation at an arbitrary byte offset.
+                1 => {
+                    let cut = 1 + rng.next_below(dirty.len() as u64 - 1) as usize;
+                    dirty.truncate(cut);
+                }
+                // Opcode extremes: 0, u16::MAX, and random unknowns.
+                2 => {
+                    let op = match rng.next_below(3) {
+                        0 => 0u16,
+                        1 => u16::MAX,
+                        _ => rng.next_u64() as u16,
+                    };
+                    dirty[6..8].copy_from_slice(&op.to_le_bytes());
+                }
+                // Version extremes: 0, u16::MAX, VERSION±1.
+                3 => {
+                    let v = match rng.next_below(4) {
+                        0 => 0u16,
+                        1 => u16::MAX,
+                        2 => VERSION.wrapping_sub(1),
+                        _ => VERSION + 1,
+                    };
+                    dirty[4..6].copy_from_slice(&v.to_le_bytes());
+                }
+                // A random splice of garbage bytes mid-frame.
+                _ => {
+                    let at = rng.next_below(dirty.len() as u64) as usize;
+                    let n = 1 + rng.next_below(16) as usize;
+                    for i in 0..n {
+                        if at + i < dirty.len() {
+                            dirty[at + i] = rng.next_below(256) as u8;
+                        }
+                    }
+                }
+            }
+            if dirty == *clean {
+                continue; // the splice can no-op; nothing to assert
+            }
+            let res = recv(&mut &dirty[..]);
+            assert!(
+                res.is_err(),
+                "round {round}: mutated frame decoded silently"
+            );
+        }
+    }
+
+    /// The declared-length mutations above must be rejected *by type*:
+    /// anything above MAX_PAYLOAD is `Oversize` before any allocation,
+    /// anything below the real payload breaks the CRC or framing.
+    #[test]
+    fn mutated_length_fields_never_drive_allocation() {
+        let clean = frame_bytes(&Msg::Health);
+        for len in [MAX_PAYLOAD + 1, u32::MAX, u32::MAX - 1] {
+            let mut dirty = clean.clone();
+            dirty[8..12].copy_from_slice(&len.to_le_bytes());
+            assert!(matches!(
+                recv(&mut &dirty[..]),
+                Err(WireError::Oversize(_))
+            ));
         }
     }
 }

@@ -18,21 +18,55 @@
 //! The wire codec ([`frame`]) moves f32 tensors as raw IEEE-754 bits,
 //! the server serializes each shard's requests on its own device (so
 //! the per-shard noise-draw order is the submission order, exactly as
-//! in-process), and the client *never* silently retries an in-flight
-//! projection — a resend would advance the device's noise stream and
-//! diverge the bits.  Reconnection with bounded exponential backoff
-//! happens only *between* requests; a request cut mid-flight completes
-//! with an error so the serving layer's failover state machine trips
-//! naturally on a dead server.  Pinned in `tests/net_parity.rs` and
-//! enforced by the CI `net-smoke` job.
+//! in-process), and the client *never* blindly retries an in-flight
+//! projection — a resend the server had already executed would advance
+//! the device's noise stream a second time and diverge the bits.
+//!
+//! Since the v2 wire protocol there are two ways to complete an
+//! in-flight frame on a dying connection:
+//!
+//! * **Resume off** (`resume_tries == 0`, the default): the request
+//!   completes with an error so the serving layer's failover state
+//!   machine trips naturally on a dead server — exactly the pre-v2
+//!   semantics.  Reconnection with bounded exponential backoff still
+//!   happens only *between* requests.
+//! * **Resume on**: the client redials, re-attaches its session with a
+//!   `Resume`/`ResumeOk` cursor handshake, and re-requests the
+//!   in-flight frame; the server's bounded replay journal guarantees
+//!   the projection executes **exactly once** (a journaled reply is
+//!   replayed, a never-executed frame runs now).  If the server cannot
+//!   prove the frame's fate it answers a typed cursor mismatch and the
+//!   client errors deterministically into failover — never a silent
+//!   double draw, never a hang.
+//!
+//! Pinned in `tests/net_parity.rs` and `tests/chaos.rs` (the seeded
+//! fault-injection soak: a fault-ridden run with resume on finishes
+//! bitwise identical to the fault-free run) and enforced by the CI
+//! `net-smoke` + `chaos-smoke` jobs.  [`faults`] provides the seeded,
+//! fully reproducible [`FaultPlanCfg`] both the client and server
+//! layers inject from.
+//!
+//! **Audit note (`unwrap`/`expect` in this module):** the only
+//! remaining `unwrap()`s under `net/` are (a) slice→array conversions
+//! in the payload decoder that follow an explicit bounds check (see
+//! `frame::Dec`) and (b) lock poisoning recovery via
+//! `unwrap_or_else(PoisonError::into_inner)`.  Everything reachable
+//! from hostile input or I/O failure returns a typed
+//! [`frame::WireError`] — exercised by the decoder property fuzz and
+//! the chaos suite.
 //!
 //! **Observability:** both ends count `net_frames_{tx,rx}` /
-//! `net_bytes_{tx,rx}`, the client counts `net_reconnects` and times
-//! each round trip into the `net_rtt` histogram, all through the
-//! ordinary [`crate::metrics::Registry`] (and hence the Prometheus
-//! export), plus a `net_send`/`net_recv` trace span pair per request.
+//! `net_bytes_{tx,rx}`, the client counts `net_reconnects` and
+//! `net_resumes` and times each round trip into the `net_rtt`
+//! histogram, the server counts `net_journal_replays` /
+//! `net_journal_evictions` and gauges `net_journal_sessions`, and both
+//! ends count injected faults in `net_faults_injected` — all through
+//! the ordinary [`crate::metrics::Registry`] (and hence the Prometheus
+//! export), plus `net_send`/`net_recv` trace spans per request and a
+//! `net_resume` span per resume handshake.
 
 pub mod client;
+pub mod faults;
 pub mod frame;
 pub mod server;
 
@@ -45,8 +79,9 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 pub use client::RemoteProjector;
+pub use faults::FaultPlanCfg;
 pub use frame::{Msg, WireError};
-pub use server::ProjectorServer;
+pub use server::{ProjectorServer, ServerOptions};
 
 // Registry metric names (client + server share the vocabulary).
 pub const NET_FRAMES_TX: &str = "net_frames_tx";
@@ -55,6 +90,20 @@ pub const NET_BYTES_TX: &str = "net_bytes_tx";
 pub const NET_BYTES_RX: &str = "net_bytes_rx";
 pub const NET_RECONNECTS: &str = "net_reconnects";
 pub const NET_RTT: &str = "net_rtt";
+/// Client: completed session-resume handshakes (a redial that
+/// re-attached its stream instead of tripping failover).
+pub const NET_RESUMES: &str = "net_resumes";
+/// Server: journaled replies replayed to a resumed client (the
+/// projection itself ran exactly once, at first arrival).
+pub const NET_JOURNAL_REPLAYS: &str = "net_journal_replays";
+/// Server: journal entries evicted by the LRU cap — a later resume of
+/// an evicted session is a cursor mismatch, i.e. a failover.
+pub const NET_JOURNAL_EVICTIONS: &str = "net_journal_evictions";
+/// Server: live journal entries (gauge).
+pub const NET_JOURNAL_SESSIONS: &str = "net_journal_sessions";
+/// Both ends: faults injected by the active [`FaultPlanCfg`] (cuts,
+/// corruptions, stalls, device errors — chaos drills only).
+pub const NET_FAULTS_INJECTED: &str = "net_faults_injected";
 
 /// A listener/dial address: TCP (`tcp:host:port`, or bare `host:port`)
 /// or a Unix domain socket (`uds:/path/to.sock`).
@@ -119,7 +168,25 @@ pub struct NetOptions {
     pub reconnect_base_ms: u64,
     /// … doubling up to this ceiling.
     pub reconnect_max_ms: u64,
+    /// Session-resume budget: how many times one projection may be
+    /// re-requested across redials before the client gives up and
+    /// errors into failover.  0 disables resume entirely (the pre-v2
+    /// semantics: an in-flight frame on a dying connection errors and
+    /// is never resent).  Resume never changes successful bits — the
+    /// server's journal executes each frame exactly once — so this
+    /// stays outside the topology's canonical identity like every
+    /// other knob here.
+    pub resume_tries: u32,
+    /// Client-side deterministic fault plan (chaos drills; `None` =
+    /// zero-cost no-op).  The same plan struct drives server-side
+    /// device faults when passed to [`ServerOptions`].
+    pub faults: Option<FaultPlanCfg>,
 }
+
+/// The resume budget `--net-resume on` selects: generous enough to
+/// ride out an injected error burst, small enough that a genuinely
+/// dead server still fails fast into failover.
+pub const RESUME_TRIES_DEFAULT: u32 = 8;
 
 impl Default for NetOptions {
     fn default() -> Self {
@@ -129,6 +196,8 @@ impl Default for NetOptions {
             reconnect_tries: 3,
             reconnect_base_ms: 50,
             reconnect_max_ms: 2_000,
+            resume_tries: 0,
+            faults: None,
         }
     }
 }

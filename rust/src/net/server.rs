@@ -14,28 +14,153 @@
 //! panic (e.g. a medium shape assert) is caught and returned as an
 //! `Error` frame instead of killing the handler.
 //!
+//! **Session-resume journal (wire v2):** for every `(session, shard)`
+//! pair that greeted with a nonzero session id, the server keeps the
+//! sequence number of the last executed frame (the *cursor*) and a
+//! copy of its reply.  The dedup rules make a redialed re-request safe:
+//!
+//! * `seq == cursor + 1` — a new frame: execute, advance the cursor,
+//!   journal the reply.
+//! * `seq == cursor` — the client never saw the reply (the connection
+//!   died between execute and deliver): **replay the journaled reply**;
+//!   the device is not touched, so its noise stream advanced exactly
+//!   once for this frame.
+//! * anything else — `Error { code: ERR_CURSOR }`: the server cannot
+//!   prove the frame's fate (journal evicted, restarted, stale
+//!   session), so the client must error into failover rather than risk
+//!   a double draw.
+//!
+//! An application-level projection failure *removes* the journal entry:
+//! the client never re-requests a failed frame (ERR_APP is fatal on its
+//! side), and poisoning the session keeps a later out-of-step frame
+//! from executing against an ambiguous cursor.  The journal is a
+//! bounded LRU ([`ServerOptions::journal_cap`]); evictions are counted
+//! and an evicted session resumes into a cursor mismatch — bounded
+//! memory trades a failover, never correctness.
+//!
 //! [`Topology`]: crate::coordinator::topology::Topology
 
 use std::io::Write;
 use std::net::TcpListener;
-use std::os::unix::net::UnixListener;
+use std::os::unix::net::{UnixListener, UnixStream};
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, PoisonError};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::frame::{self, Msg, WireError};
-use super::{Addr, NetStream, NET_BYTES_RX, NET_BYTES_TX, NET_FRAMES_RX, NET_FRAMES_TX};
+use super::frame::{self, Msg, WireError, ERR_APP, ERR_CURSOR, ERR_PROTO, ERR_UNAVAILABLE};
+use super::{
+    Addr, FaultPlanCfg, NetStream, NET_BYTES_RX, NET_BYTES_TX, NET_FAULTS_INJECTED,
+    NET_FRAMES_RX, NET_FRAMES_TX, NET_JOURNAL_EVICTIONS, NET_JOURNAL_REPLAYS,
+    NET_JOURNAL_SESSIONS,
+};
 use crate::coordinator::projector::Projector;
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Gauge, Registry};
 
-/// One hosted shard: its wire-visible id and the device behind it.
+/// Server-side tuning: the session-resume journal bound and the
+/// optional device-fault plan (chaos drills).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ServerOptions {
+    /// Max journal entries (one per live `(session, shard)` pair);
+    /// least-recently-used entries are evicted beyond this.  0 disables
+    /// journaling entirely — every resume then fails with a typed
+    /// cursor mismatch (the pre-v2 failure semantics).
+    pub journal_cap: usize,
+    /// Server-side deterministic fault plan: device error bursts and
+    /// stall windows, keyed on the per-shard arrival counter.
+    pub faults: Option<FaultPlanCfg>,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions {
+            journal_cap: 256,
+            faults: None,
+        }
+    }
+}
+
+/// One hosted shard: its wire-visible id, the device behind it, and the
+/// arrival counter the fault plan keys on.
 struct Hosted {
     shard: u32,
     device: Mutex<Box<dyn Projector + Send>>,
+    arrivals: AtomicU64,
+}
+
+/// One `(session, shard)` replay-journal entry.
+struct JournalEntry {
+    session: u64,
+    shard: u32,
+    /// Seq of the last executed frame; `reply` is its journaled answer.
+    cursor: u64,
+    reply: Msg,
+    /// LRU clock value of the last touch.
+    tick: u64,
+}
+
+/// Bounded LRU of the last completed frame per `(session, shard)`.
+/// Linear scans are fine: the cap is small (hundreds) and every entry
+/// touch is already serialized by the mutex around this struct.
+struct Journal {
+    cap: usize,
+    tick: u64,
+    entries: Vec<JournalEntry>,
+    evictions: Counter,
+    sessions: Gauge,
+}
+
+impl Journal {
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn find(&mut self, session: u64, shard: u32) -> Option<&mut JournalEntry> {
+        self.entries
+            .iter_mut()
+            .find(|e| e.session == session && e.shard == shard)
+    }
+
+    /// Record `reply` as the journaled answer for `seq`, inserting or
+    /// updating the entry and evicting LRU entries beyond the cap.
+    fn record(&mut self, session: u64, shard: u32, seq: u64, reply: Msg) {
+        let tick = self.touch();
+        if let Some(e) = self.find(session, shard) {
+            e.cursor = seq;
+            e.reply = reply;
+            e.tick = tick;
+        } else {
+            self.entries.push(JournalEntry {
+                session,
+                shard,
+                cursor: seq,
+                reply,
+                tick,
+            });
+            while self.entries.len() > self.cap {
+                let (lru, _) = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| e.tick)
+                    .map(|(i, e)| (i, e.tick))
+                    .unwrap_or((0, 0));
+                self.entries.swap_remove(lru);
+                self.evictions.inc();
+            }
+        }
+        self.sessions.set(self.entries.len() as f64);
+    }
+
+    fn remove(&mut self, session: u64, shard: u32) {
+        self.entries
+            .retain(|e| !(e.session == session && e.shard == shard));
+        self.sessions.set(self.entries.len() as f64);
+    }
 }
 
 /// A running projector server (accept loop on a background thread).
@@ -43,6 +168,9 @@ pub struct ProjectorServer {
     local: Addr,
     stop: Arc<AtomicBool>,
     accept: Option<thread::JoinHandle<()>>,
+    /// Requests currently executing across all handler threads — the
+    /// drain target for a graceful shutdown.
+    busy: Arc<AtomicUsize>,
     /// The bound UDS path, removed on shutdown.
     uds_path: Option<String>,
 }
@@ -52,11 +180,19 @@ enum Listener {
     Uds(UnixListener),
 }
 
+/// Shared per-server state every handler thread sees.
+struct Shared {
+    hosted: Vec<Hosted>,
+    journal: Mutex<Journal>,
+    journal_cap: usize,
+    faults: Option<FaultPlanCfg>,
+    busy: Arc<AtomicUsize>,
+}
+
 impl ProjectorServer {
-    /// Bind `addr` and serve `devices` until [`shutdown`] or drop.
-    /// `tcp:host:0` binds an ephemeral port; read the actual one back
-    /// from [`local_addr`].  An existing socket file at a UDS path is
-    /// replaced.
+    /// Bind `addr` and serve `devices` with default [`ServerOptions`]
+    /// until [`shutdown`] or drop.  `tcp:host:0` binds an ephemeral
+    /// port; read the actual one back from [`local_addr`].
     ///
     /// [`shutdown`]: ProjectorServer::shutdown
     /// [`local_addr`]: ProjectorServer::local_addr
@@ -64,6 +200,22 @@ impl ProjectorServer {
         addr: &Addr,
         devices: Vec<(u32, Box<dyn Projector + Send>)>,
         metrics: Registry,
+    ) -> Result<ProjectorServer> {
+        Self::bind_with(addr, devices, metrics, ServerOptions::default())
+    }
+
+    /// [`bind`] with explicit [`ServerOptions`].  A UDS path holding a
+    /// *dead* socket (bind leftover of a killed server) is unlinked and
+    /// reused; a path with a live server behind it, or occupied by
+    /// anything that is not a socket, is a typed error — never an
+    /// unlink.
+    ///
+    /// [`bind`]: ProjectorServer::bind
+    pub fn bind_with(
+        addr: &Addr,
+        devices: Vec<(u32, Box<dyn Projector + Send>)>,
+        metrics: Registry,
+        opts: ServerOptions,
     ) -> Result<ProjectorServer> {
         anyhow::ensure!(!devices.is_empty(), "projector server needs >= 1 device");
         let (listener, local, uds_path) = match addr {
@@ -74,7 +226,7 @@ impl ProjectorServer {
                 (Listener::Tcp(l), Addr::Tcp(actual.to_string()), None)
             }
             Addr::Uds(path) => {
-                let _ = std::fs::remove_file(path);
+                reclaim_uds_path(path)?;
                 let l = UnixListener::bind(path)
                     .with_context(|| format!("binding uds listener on {path}"))?;
                 (Listener::Uds(l), Addr::Uds(path.clone()), Some(path.clone()))
@@ -84,26 +236,39 @@ impl ProjectorServer {
             Listener::Tcp(l) => l.set_nonblocking(true)?,
             Listener::Uds(l) => l.set_nonblocking(true)?,
         }
-        let hosted: Arc<Vec<Hosted>> = Arc::new(
-            devices
+        let busy = Arc::new(AtomicUsize::new(0));
+        let shared = Arc::new(Shared {
+            hosted: devices
                 .into_iter()
                 .map(|(shard, device)| Hosted {
                     shard,
                     device: Mutex::new(device),
+                    arrivals: AtomicU64::new(0),
                 })
                 .collect(),
-        );
+            journal: Mutex::new(Journal {
+                cap: opts.journal_cap.max(1),
+                tick: 0,
+                entries: Vec::new(),
+                evictions: metrics.counter(NET_JOURNAL_EVICTIONS),
+                sessions: metrics.gauge(NET_JOURNAL_SESSIONS),
+            }),
+            journal_cap: opts.journal_cap,
+            faults: opts.faults.filter(|f| !f.is_noop()),
+            busy: busy.clone(),
+        });
         let stop = Arc::new(AtomicBool::new(false));
         let accept = {
             let stop = stop.clone();
             thread::Builder::new()
                 .name("litl-net-accept".into())
-                .spawn(move || accept_loop(listener, hosted, metrics, stop))?
+                .spawn(move || accept_loop(listener, shared, metrics, stop))?
         };
         Ok(ProjectorServer {
             local,
             stop,
             accept: Some(accept),
+            busy,
             uds_path,
         })
     }
@@ -113,11 +278,17 @@ impl ProjectorServer {
         &self.local
     }
 
+    /// Requests currently executing (for drain loops and tests).
+    pub fn in_flight(&self) -> usize {
+        self.busy.load(Ordering::SeqCst)
+    }
+
     /// Stop accepting and join the accept loop.  Handler threads for
     /// already-connected clients are detached; they exit when their
     /// client disconnects (in-flight requests still complete — the
     /// graceful half of a cutover; a *killed* server process is the
-    /// abrupt half, and the client errors its in-flight frame).
+    /// abrupt half, and the client errors or resumes its in-flight
+    /// frame).
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept.take() {
@@ -127,6 +298,25 @@ impl ProjectorServer {
             let _ = std::fs::remove_file(path);
         }
     }
+
+    /// Wait (bounded) for every in-flight request to complete.  Call
+    /// after [`shutdown`] for a graceful exit: no new connections are
+    /// accepted, and this returns `true` once the last executing
+    /// projection has replied (idle-but-connected clients don't count —
+    /// only requests actually on a device).  `false` means the timeout
+    /// expired with work still running.
+    ///
+    /// [`shutdown`]: ProjectorServer::shutdown
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.busy.load(Ordering::SeqCst) > 0 {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
 }
 
 impl Drop for ProjectorServer {
@@ -135,9 +325,42 @@ impl Drop for ProjectorServer {
     }
 }
 
+/// Stale-socket handling for a UDS bind target: nothing there is fine;
+/// a *dead* socket (its listener's process is gone, so connect gives
+/// ECONNREFUSED) is unlinked; a live socket or a non-socket file is a
+/// typed error.  This is what lets a crashed `litl serve` restart on
+/// the same path without an operator `rm`, while never stealing a
+/// path from a running server or clobbering an unrelated file.
+fn reclaim_uds_path(path: &str) -> Result<()> {
+    use std::os::unix::fs::FileTypeExt;
+    let md = match std::fs::symlink_metadata(path) {
+        Ok(md) => md,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(()),
+        Err(e) => return Err(e).with_context(|| format!("inspecting uds path {path}")),
+    };
+    anyhow::ensure!(
+        md.file_type().is_socket(),
+        "uds path {path} exists and is not a socket — refusing to unlink it"
+    );
+    match UnixStream::connect(path) {
+        Ok(_) => anyhow::bail!(
+            "uds path {path} has a live server behind it — refusing to bind over it"
+        ),
+        Err(e) if e.kind() == std::io::ErrorKind::ConnectionRefused => {
+            std::fs::remove_file(path)
+                .with_context(|| format!("unlinking stale uds socket {path}"))?;
+            log::info!("reclaimed stale uds socket {path}");
+            Ok(())
+        }
+        Err(e) => Err(e).with_context(|| {
+            format!("probing uds path {path} (neither live nor provably dead)")
+        }),
+    }
+}
+
 fn accept_loop(
     listener: Listener,
-    hosted: Arc<Vec<Hosted>>,
+    shared: Arc<Shared>,
     metrics: Registry,
     stop: Arc<AtomicBool>,
 ) {
@@ -161,11 +384,11 @@ fn accept_loop(
                         let _ = s.set_nonblocking(false);
                     }
                 }
-                let hosted = hosted.clone();
+                let shared = shared.clone();
                 let metrics = metrics.clone();
                 let spawned = thread::Builder::new()
                     .name("litl-net-conn".into())
-                    .spawn(move || handle_conn(&mut stream, &hosted, &metrics));
+                    .spawn(move || handle_conn(&mut stream, &shared, &metrics));
                 if spawned.is_err() {
                     log::warn!("projector server could not spawn a handler thread");
                 }
@@ -181,11 +404,32 @@ fn accept_loop(
     }
 }
 
-fn handle_conn(stream: &mut NetStream, hosted: &[Hosted], metrics: &Registry) {
+/// RAII guard bumping the server's in-flight request count.
+struct BusyGuard<'a>(&'a AtomicUsize);
+
+impl<'a> BusyGuard<'a> {
+    fn enter(busy: &'a AtomicUsize) -> Self {
+        busy.fetch_add(1, Ordering::SeqCst);
+        BusyGuard(busy)
+    }
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(stream: &mut NetStream, shared: &Shared, metrics: &Registry) {
     let frames_rx = metrics.counter(NET_FRAMES_RX);
     let frames_tx = metrics.counter(NET_FRAMES_TX);
     let bytes_rx = metrics.counter(NET_BYTES_RX);
     let bytes_tx = metrics.counter(NET_BYTES_TX);
+    let journal_replays = metrics.counter(NET_JOURNAL_REPLAYS);
+    let faults_injected = metrics.counter(NET_FAULTS_INJECTED);
+    // The session this connection greeted with (0 = journaling off for
+    // this client, the pre-resume semantics).
+    let mut session: u64 = 0;
     loop {
         let msg = match frame::recv(stream) {
             Ok((msg, n)) => {
@@ -197,19 +441,28 @@ fn handle_conn(stream: &mut NetStream, hosted: &[Hosted], metrics: &Registry) {
             Err(e) => {
                 // Protocol violation or dead transport: tell the peer
                 // why (best effort) and drop the connection — framing
-                // cannot be trusted past this point.
+                // cannot be trusted past this point.  ERR_PROTO marks
+                // the condition retryable-after-redial for a resuming
+                // client (its frame was never parsed, so it never
+                // executed).
                 let _ = frame::send(
                     stream,
                     &Msg::Error {
+                        code: ERR_PROTO,
                         message: format!("protocol error: {e}"),
                     },
                 );
                 return;
             }
         };
+        let _busy = BusyGuard::enter(&shared.busy);
         let reply = match msg {
-            Msg::Hello { shard } => match find(hosted, shard) {
+            Msg::Hello {
+                shard,
+                session: client_session,
+            } => match find(&shared.hosted, shard) {
                 Some(h) => {
+                    session = client_session;
                     let dev = h.device.lock().unwrap_or_else(PoisonError::into_inner);
                     Msg::HelloOk {
                         modes: dev.modes() as u32,
@@ -217,37 +470,42 @@ fn handle_conn(stream: &mut NetStream, hosted: &[Hosted], metrics: &Registry) {
                         kind: dev.kind().to_string(),
                     }
                 }
-                None => not_hosted(shard, hosted),
+                None => not_hosted(shard, &shared.hosted),
             },
-            Msg::Project { shard, frames } => match find(hosted, shard) {
-                Some(h) => {
-                    let mut dev =
-                        h.device.lock().unwrap_or_else(PoisonError::into_inner);
-                    // A device panic (shape assert deep in the medium)
-                    // must not kill the handler thread: catch it and
-                    // report it like any projection error.
-                    let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                        dev.project(&frames)
-                    }));
-                    match res {
-                        Ok(Ok((p1, p2))) => Msg::ProjectOk {
-                            p1,
-                            p2,
-                            sim_seconds: dev.sim_seconds(),
-                            energy_joules: dev.energy_joules(),
-                        },
-                        Ok(Err(e)) => Msg::Error {
-                            message: format!("projection failed: {e}"),
-                        },
-                        Err(_) => Msg::Error {
-                            message: format!("projection panicked on shard {shard}"),
-                        },
+            Msg::Project { shard, seq, frames } => match find(&shared.hosted, shard) {
+                Some(h) => project_reply(
+                    h,
+                    shared,
+                    session,
+                    seq,
+                    &frames,
+                    &journal_replays,
+                    &faults_injected,
+                ),
+                None => not_hosted(shard, &shared.hosted),
+            },
+            Msg::Resume {
+                session: resume_session,
+                shard,
+                cursor,
+            } => {
+                if resume_session != session || session == 0 {
+                    Msg::Error {
+                        code: ERR_PROTO,
+                        message: format!(
+                            "resume session {resume_session:#x} does not match this \
+                             connection's hello session {session:#x}"
+                        ),
                     }
+                } else if find(&shared.hosted, shard).is_none() {
+                    not_hosted(shard, &shared.hosted)
+                } else {
+                    resume_reply(shared, session, shard, cursor)
                 }
-                None => not_hosted(shard, hosted),
-            },
+            }
             Msg::Health => Msg::HealthOk,
             other => Msg::Error {
+                code: ERR_PROTO,
                 message: format!("unexpected client message {other:?}"),
             },
         };
@@ -262,6 +520,162 @@ fn handle_conn(stream: &mut NetStream, hosted: &[Hosted], metrics: &Registry) {
     }
 }
 
+/// One `Project` request against its hosted shard: fault injection,
+/// journal dedup/replay, execution, journal record.  The journal lock
+/// is never held across the projection itself — only the device mutex
+/// serializes execution, exactly as before resume existed.
+fn project_reply(
+    h: &Hosted,
+    shared: &Shared,
+    session: u64,
+    seq: u64,
+    frames: &crate::tensor::Tensor,
+    journal_replays: &Counter,
+    faults_injected: &Counter,
+) -> Msg {
+    // Device-side fault plan, keyed on the arrival counter so a
+    // resumed retry draws fresh (bursts end; retries converge).  An
+    // injected error replies WITHOUT touching the device or journal —
+    // the noise stream must not advance for a frame that "failed".
+    if let Some(fp) = &shared.faults {
+        let arrival = h.arrivals.fetch_add(1, Ordering::SeqCst);
+        if let Some(d) = fp.dev_stall(h.shard, arrival) {
+            faults_injected.inc();
+            thread::sleep(d);
+        }
+        if fp.dev_err(h.shard, arrival) {
+            faults_injected.inc();
+            return Msg::Error {
+                code: ERR_UNAVAILABLE,
+                message: format!(
+                    "injected device fault on shard {} (arrival {arrival})",
+                    h.shard
+                ),
+            };
+        }
+    }
+    let journaling = session != 0 && shared.journal_cap > 0;
+    if journaling {
+        enum Disposition {
+            Replay(Msg),
+            Execute,
+            Mismatch(String),
+        }
+        let mut j = shared.journal.lock().unwrap_or_else(PoisonError::into_inner);
+        let tick = j.touch();
+        let disp = match j.find(session, h.shard) {
+            // The client never saw this frame's reply: replay it.  The
+            // device is untouched — its noise stream advanced exactly
+            // once, at first execution.
+            Some(e) if seq == e.cursor => {
+                e.tick = tick;
+                Disposition::Replay(e.reply.clone())
+            }
+            // In order: fall through to execute.
+            Some(e) if seq == e.cursor + 1 => Disposition::Execute,
+            None if seq == 1 => Disposition::Execute,
+            // Out of step: the journal cannot prove this frame's fate.
+            Some(e) => Disposition::Mismatch(format!("cursor {}", e.cursor)),
+            None => Disposition::Mismatch("no journal entry".to_string()),
+        };
+        drop(j);
+        match disp {
+            Disposition::Replay(reply) => {
+                journal_replays.inc();
+                return reply;
+            }
+            Disposition::Execute => {}
+            Disposition::Mismatch(have) => {
+                return Msg::Error {
+                    code: ERR_CURSOR,
+                    message: format!(
+                        "cursor mismatch on shard {} session {session:#x}: \
+                         client sent seq {seq}, server has {have}",
+                        h.shard
+                    ),
+                };
+            }
+        }
+    }
+    let reply = {
+        let mut dev = h.device.lock().unwrap_or_else(PoisonError::into_inner);
+        // A device panic (shape assert deep in the medium) must not
+        // kill the handler thread: catch it and report it like any
+        // projection error.
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| dev.project(frames)));
+        match res {
+            Ok(Ok((p1, p2))) => Msg::ProjectOk {
+                p1,
+                p2,
+                sim_seconds: dev.sim_seconds(),
+                energy_joules: dev.energy_joules(),
+            },
+            Ok(Err(e)) => Msg::Error {
+                code: ERR_APP,
+                message: format!("projection failed: {e}"),
+            },
+            Err(_) => Msg::Error {
+                code: ERR_APP,
+                message: format!("projection panicked on shard {}", h.shard),
+            },
+        }
+    };
+    if journaling {
+        let mut j = shared.journal.lock().unwrap_or_else(PoisonError::into_inner);
+        if matches!(reply, Msg::ProjectOk { .. }) {
+            j.record(session, h.shard, seq, reply.clone());
+        } else {
+            // An app-level failure poisons the session: the client
+            // treats ERR_APP as fatal (failover), and without a trusted
+            // cursor any later frame on this session must mismatch
+            // loudly instead of executing ambiguously.
+            j.remove(session, h.shard);
+        }
+    }
+    reply
+}
+
+/// One `Resume` request: answer with the journal cursor when it can
+/// prove the in-flight frame's fate, a typed mismatch otherwise.
+fn resume_reply(shared: &Shared, session: u64, shard: u32, cursor: u64) -> Msg {
+    if shared.journal_cap == 0 {
+        return Msg::Error {
+            code: ERR_CURSOR,
+            message: "session journal disabled on this server (journal_cap = 0)".into(),
+        };
+    }
+    let mut j = shared.journal.lock().unwrap_or_else(PoisonError::into_inner);
+    let tick = j.tick + 1;
+    j.tick = tick;
+    match j.find(session, shard) {
+        // The server is at the client's cursor (nothing in flight
+        // executed) or exactly one ahead (the in-flight frame executed
+        // and its reply is replayable): both are provably safe.
+        Some(e) if e.cursor == cursor || e.cursor == cursor + 1 => {
+            e.tick = tick;
+            Msg::ResumeOk { cursor: e.cursor }
+        }
+        Some(e) => Msg::Error {
+            code: ERR_CURSOR,
+            message: format!(
+                "cursor mismatch on shard {shard} session {session:#x}: \
+                 client resumed at {cursor}, server journal at {}",
+                e.cursor
+            ),
+        },
+        // A fresh session (nothing executed yet) legitimately has no
+        // entry; anything else means the journal lost this session.
+        None if cursor == 0 => Msg::ResumeOk { cursor: 0 },
+        None => Msg::Error {
+            code: ERR_CURSOR,
+            message: format!(
+                "no journal entry for shard {shard} session {session:#x} \
+                 (evicted or server restarted); client resumed at {cursor}"
+            ),
+        },
+    }
+}
+
 fn find(hosted: &[Hosted], shard: u32) -> Option<&Hosted> {
     hosted.iter().find(|h| h.shard == shard)
 }
@@ -269,6 +683,7 @@ fn find(hosted: &[Hosted], shard: u32) -> Option<&Hosted> {
 fn not_hosted(shard: u32, hosted: &[Hosted]) -> Msg {
     let here: Vec<u32> = hosted.iter().map(|h| h.shard).collect();
     Msg::Error {
+        code: ERR_APP,
         message: format!("shard {shard} not hosted here (hosting {here:?})"),
     }
 }

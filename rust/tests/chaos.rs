@@ -1,0 +1,528 @@
+//! Chaos soak: the networked fleet under seeded fault injection.
+//!
+//! The standing contract this suite pins (new in the v2 wire protocol):
+//! with **session resume enabled**, a fault-ridden loopback run —
+//! connection cuts, partial writes, single-bit corruption, stalls, and
+//! server-side device error bursts, all from one seeded
+//! [`FaultPlanCfg`] — finishes **bitwise identical** to the fault-free
+//! run, noisy optics included, at shards 1/2/4 × both partitions.  The
+//! server's replay journal executes every frame exactly once, so a
+//! resumed re-request can never double-advance a device's noise stream.
+//!
+//! With resume **disabled**, behavior degrades exactly as PR-9 pinned:
+//! an in-flight frame on a dying connection completes with an error
+//! (zero hangs, bounded wall time) and the serving layer's failover
+//! drains the tripped shard onto survivors.
+//!
+//! Also covered here: the wire-version bump (v1 clients rejected with a
+//! typed error before any payload is trusted), stale-UDS-socket
+//! reclamation at bind, and (under the CI `chaos-smoke` job) graceful
+//! SIGTERM shutdown of a real `litl serve` process with a tile-cache
+//! flush.  The headline test prints a `{"bench":"chaos",...}` summary
+//! line that `tools/bench_records.sh` collects as `BENCH_chaos.json`.
+
+use std::io::{BufRead, BufReader, Read as _, Write as _};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use litl::config::Partition;
+use litl::coordinator::host::{HostAlgo, HostTrainer};
+use litl::coordinator::projector::{DigitalProjector, Projector};
+use litl::coordinator::service::{
+    ClientProjector, FailoverConfig, ShardServiceConfig, SHARD_ERRORS,
+};
+use litl::coordinator::topology::{DeviceKind, Topology};
+use litl::metrics::Registry;
+use litl::net::{
+    frame, Addr, FaultPlanCfg, Msg, NetOptions, ProjectorServer, RemoteProjector,
+    ServerOptions, NET_FAULTS_INJECTED, NET_JOURNAL_REPLAYS, NET_RESUMES,
+};
+use litl::optics::medium::TransmissionMatrix;
+use litl::optics::stream::Medium;
+use litl::optics::OpuParams;
+
+mod common;
+use common::{task_batch, ternary_batch};
+
+const D_IN: usize = 10;
+const MODES: usize = 32;
+const LAYERS: [usize; 4] = [20, 32, 32, 10];
+const STEPS: u64 = 8;
+
+/// Client knobs tuned for tests: fast bounded redials so chaos resolves
+/// in milliseconds, not the operator-scale defaults.
+fn fast_net() -> NetOptions {
+    NetOptions {
+        connect_timeout_ms: 2_000,
+        request_timeout_ms: 10_000,
+        reconnect_tries: 3,
+        reconnect_base_ms: 5,
+        reconnect_max_ms: 20,
+        ..NetOptions::default()
+    }
+}
+
+/// The headline seeded plan: every fault class fires somewhere in an
+/// 8-step run (the deterministic `cut_every` guarantees at least the
+/// cuts), rates low enough that the bounded resume budget always
+/// converges through the bursts.
+fn chaos_plan() -> FaultPlanCfg {
+    FaultPlanCfg::parse(
+        "seed=1337,cut_every=5,cut_ppm=20000,partial_ppm=30000,corrupt_ppm=30000,\
+         stall_ppm=20000,stall_ms=2,dev_err_ppm=30000,dev_err_burst=2,\
+         dev_stall_ppm=10000,dev_stall_ms=2",
+    )
+    .unwrap()
+}
+
+/// Train `STEPS` steps through the sharded service on `topo`, returning
+/// the trainer (for param inspection) and the per-step losses.
+fn train_losses(topo: Topology, medium: &Medium, reg: Registry) -> (HostTrainer, Vec<f32>) {
+    let partition = topo.partition;
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            medium,
+            7,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition,
+                frame_rate_hz: 1500.0,
+                ..Default::default()
+            },
+            reg,
+        )
+        .unwrap();
+    let projector = Box::new(ClientProjector::new(svc.client(), MODES));
+    let mut tr = HostTrainer::new(
+        11,
+        &LAYERS,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    let mut losses = Vec::new();
+    for t in 0..STEPS {
+        let (x, y) = task_batch(3_000 + t, 16, &LAYERS);
+        losses.push(tr.step(&x, &y).unwrap());
+    }
+    svc.shutdown();
+    (tr, losses)
+}
+
+/// The tentpole pin: seeded chaos + session resume == fault-free run,
+/// bitwise, across shard counts and both partitions.
+#[test]
+fn faulted_resume_runs_are_bitwise_identical_to_fault_free() {
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, MODES));
+    let plan = chaos_plan();
+    let t0 = Instant::now();
+    let (mut faults_total, mut resumes_total, mut replays_total) = (0u64, 0u64, 0u64);
+    let mut cases = 0u32;
+    for n in [1usize, 2, 4] {
+        for partition in [Partition::Modes, Partition::Batch] {
+            // Fault-free reference: the all-local fleet (never dials).
+            let local_topo = Topology::homogeneous(DeviceKind::Optical, n)
+                .with_partition(partition)
+                .with_backing_of(&medium);
+            let (tr_local, losses_local) =
+                train_losses(local_topo, &medium, Registry::new());
+            // Chaos fleet: the same shards served over TCP with the
+            // plan armed on BOTH ends and a resume budget on the client.
+            let srv_reg = Registry::new();
+            let served: Vec<_> = Topology::homogeneous(DeviceKind::Optical, n)
+                .with_partition(partition)
+                .with_backing_of(&medium)
+                .build_devices(OpuParams::default(), &medium, 7, &Registry::new())
+                .unwrap()
+                .into_iter()
+                .enumerate()
+                .map(|(i, d)| (i as u32, d))
+                .collect();
+            let server = ProjectorServer::bind_with(
+                &Addr::parse("tcp:127.0.0.1:0").unwrap(),
+                served,
+                srv_reg.clone(),
+                ServerOptions {
+                    journal_cap: 256,
+                    faults: Some(plan),
+                },
+            )
+            .unwrap();
+            let ep = server.local_addr().to_string();
+            let cli_reg = Registry::new();
+            let remote_topo = Topology::parse(&format!("opt:{n}!{ep}"))
+                .unwrap()
+                .with_partition(partition)
+                .with_backing_of(&medium)
+                .with_net(NetOptions {
+                    resume_tries: 8,
+                    faults: Some(plan),
+                    ..fast_net()
+                });
+            let (tr_remote, losses_remote) =
+                train_losses(remote_topo, &medium, cli_reg.clone());
+            let tag = format!("n={n} partition={}", partition.name());
+            assert_eq!(losses_local, losses_remote, "{tag}: per-step losses diverged");
+            for (i, (a, b)) in
+                tr_local.mlp.params.iter().zip(&tr_remote.mlp.params).enumerate()
+            {
+                assert_eq!(a, b, "{tag}: param {i} diverged under chaos");
+            }
+            faults_total += cli_reg.counter(NET_FAULTS_INJECTED).get()
+                + srv_reg.counter(NET_FAULTS_INJECTED).get();
+            resumes_total += cli_reg.counter(NET_RESUMES).get();
+            replays_total += srv_reg.counter(NET_JOURNAL_REPLAYS).get();
+            cases += 1;
+        }
+    }
+    // A soak that injected nothing proves nothing.
+    assert!(faults_total > 0, "the chaos plan never fired — the soak is vacuous");
+    assert!(resumes_total > 0, "no redial ever resumed — cuts were never exercised");
+    // Summary line for tools/bench_records.sh (BENCH_chaos.json).
+    println!(
+        "{{\"bench\":\"chaos\",\"cases\":{cases},\"steps\":{STEPS},\
+         \"plan\":\"{}\",\"faults_injected\":{faults_total},\
+         \"net_resumes\":{resumes_total},\"journal_replays\":{replays_total},\
+         \"bitwise_identical\":true,\"wall_s\":{:.2}}}",
+        chaos_plan(),
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+/// Resume disabled: the same fault class degrades exactly as PR-9
+/// pinned — the in-flight frame errors (never hangs), failover trips
+/// the faulted shard, and the survivors carry the run.
+#[test]
+fn resume_off_degrades_to_failover_with_zero_hangs() {
+    let medium = Medium::Dense(TransmissionMatrix::sample(91, D_IN, MODES));
+    // Deterministic cut on every 3rd send attempt: the first two frames
+    // land, the third dies mid-flight.
+    let plan = FaultPlanCfg::parse("seed=7,cut_every=3").unwrap();
+    let served: Vec<_> = Topology::parse("opt:1+dig:1")
+        .unwrap()
+        .with_partition(Partition::Batch)
+        .with_backing_of(&medium)
+        .build_devices(OpuParams::default(), &medium, 7, &Registry::new())
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| *i == 0)
+        .map(|(i, d)| (i as u32, d))
+        .collect();
+    let server = ProjectorServer::bind(
+        &Addr::parse("tcp:127.0.0.1:0").unwrap(),
+        served,
+        Registry::new(),
+    )
+    .unwrap();
+    let ep = server.local_addr().to_string();
+    let topo = Topology::parse(&format!("opt:1!{ep}+dig:1"))
+        .unwrap()
+        .with_partition(Partition::Batch)
+        .with_backing_of(&medium)
+        .with_net(NetOptions {
+            resume_tries: 0, // resume OFF: pre-v2 semantics
+            faults: Some(plan),
+            ..fast_net()
+        });
+    let reg = Registry::new();
+    let svc = topo
+        .build_service(
+            OpuParams::default(),
+            &medium,
+            7,
+            D_IN,
+            ShardServiceConfig {
+                max_batch: 64,
+                queue_depth: 64,
+                lane_depth: 4,
+                partition: Partition::Batch,
+                frame_rate_hz: 1500.0,
+                failover: FailoverConfig {
+                    enabled: true,
+                    trip_errors: 1,
+                    stall_ms: 5_000,
+                    // Long probation: once tripped, the shard stays out
+                    // for the whole test — the tail must be all-green
+                    // on the digital survivor.
+                    probation_ms: 120_000,
+                },
+                ..Default::default()
+            },
+            reg.clone(),
+        )
+        .unwrap();
+    let projector = Box::new(ClientProjector::new(svc.client(), MODES));
+    let mut tr = HostTrainer::new(
+        11,
+        &LAYERS,
+        0.01,
+        HostAlgo::DfaTernary { theta: 0.1 },
+        projector,
+    );
+    let t0 = Instant::now();
+    let mut errors = 0u32;
+    let mut tail_ok = 0u32;
+    for t in 0..20u64 {
+        let (x, y) = task_batch(9_000 + t, 16, &LAYERS);
+        // Every step RETURNS (Ok or Err) — a hang here is the failure.
+        match tr.step(&x, &y) {
+            Ok(_) => {
+                if t >= 15 {
+                    tail_ok += 1;
+                }
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    svc.shutdown();
+    assert!(errors >= 1, "the cut plan never errored a step — nothing degraded");
+    assert!(errors <= 5, "failover leaked {errors} errors to the client");
+    assert_eq!(tail_ok, 5, "post-failover tail still failing on the survivor");
+    assert!(
+        reg.snapshot()[SHARD_ERRORS] >= 1.0,
+        "the injected cut never tripped the shard"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "resume-off degradation must be bounded, not hung"
+    );
+}
+
+/// A client that insists on resuming against a server with journaling
+/// disabled errors deterministically (typed cursor mismatch surfaced
+/// through the resume handshake) — never a hang, never a double draw.
+#[test]
+fn resume_against_a_journal_less_server_errors_deterministically() {
+    let served: Vec<(u32, Box<dyn Projector + Send>)> = vec![(
+        0,
+        Box::new(DigitalProjector::new(TransmissionMatrix::sample(5, D_IN, 16))),
+    )];
+    let server = ProjectorServer::bind_with(
+        &Addr::parse("tcp:127.0.0.1:0").unwrap(),
+        served,
+        Registry::new(),
+        ServerOptions {
+            journal_cap: 0, // journaling off server-side
+            faults: None,
+        },
+    )
+    .unwrap();
+    let mut rp = RemoteProjector::connect(
+        server.local_addr(),
+        0,
+        NetOptions {
+            resume_tries: 4,
+            // Cut every 2nd send attempt: frame 1 lands, frame 2's
+            // attempt is cut and forces a redial + resume.
+            faults: Some(FaultPlanCfg::parse("seed=1,cut_every=2").unwrap()),
+            ..fast_net()
+        },
+        &Registry::new(),
+    )
+    .unwrap();
+    let e = ternary_batch(4, D_IN, 3);
+    rp.project(&e).unwrap();
+    let t0 = Instant::now();
+    let err = rp.project(&e).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("rejected resume"),
+        "expected a typed resume rejection, got: {msg}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "the rejection path must be bounded"
+    );
+}
+
+/// Wire-version bump: a v1 peer is answered with a typed protocol
+/// error naming the version mismatch, then disconnected — before any
+/// payload is trusted.  (The typed client-side `WireError::BadVersion`
+/// path is pinned in `net::frame`'s unit tests.)
+#[test]
+fn v1_clients_are_rejected_by_a_live_server() {
+    let served: Vec<(u32, Box<dyn Projector + Send>)> = vec![(
+        0,
+        Box::new(DigitalProjector::new(TransmissionMatrix::sample(5, D_IN, 16))),
+    )];
+    let server = ProjectorServer::bind(
+        &Addr::parse("tcp:127.0.0.1:0").unwrap(),
+        served,
+        Registry::new(),
+    )
+    .unwrap();
+    let host = server.local_addr().to_string();
+    let host = host.trim_start_matches("tcp:").to_string();
+    let mut s = TcpStream::connect(&host).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    // A hand-built v1 hello: same magic, version 1, the v1 payload
+    // layout (bare shard id), CRC correct for its own bytes.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&frame::MAGIC);
+    bytes.extend_from_slice(&1u16.to_le_bytes());
+    bytes.extend_from_slice(&frame::OP_HELLO.to_le_bytes());
+    let payload = 0u32.to_le_bytes();
+    bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    let mut hasher = flate2::Crc::new();
+    hasher.update(&bytes[4..]);
+    hasher.update(&payload);
+    let crc = hasher.sum().to_le_bytes();
+    bytes.extend_from_slice(&payload);
+    bytes.extend_from_slice(&crc);
+    s.write_all(&bytes).unwrap();
+    let (reply, _) = frame::recv(&mut s).unwrap();
+    match reply {
+        Msg::Error { code, message } => {
+            assert_eq!(code, frame::ERR_PROTO);
+            assert!(
+                message.contains("unsupported wire version 1"),
+                "rejection must name the version: {message}"
+            );
+        }
+        other => panic!("expected a typed version rejection, got {other:?}"),
+    }
+    // The server closes the connection after rejecting the framing.
+    let mut buf = [0u8; 1];
+    assert_eq!(s.read(&mut buf).unwrap_or(0), 0, "connection must be closed");
+}
+
+/// Stale-UDS handling at bind: a dead socket file is reclaimed, a live
+/// server's socket is refused, and a non-socket file is never unlinked.
+#[test]
+fn stale_uds_sockets_are_reclaimed_live_and_foreign_paths_refused() {
+    let path = std::env::temp_dir().join(format!("litl_chaos_uds_{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let addr = Addr::parse(&format!("uds:{}", path.display())).unwrap();
+    let mk = || -> Vec<(u32, Box<dyn Projector + Send>)> {
+        vec![(
+            0,
+            Box::new(DigitalProjector::new(TransmissionMatrix::sample(5, D_IN, 16))),
+        )]
+    };
+    // 1) Live server on the path: a second bind refuses loudly and the
+    //    incumbent keeps serving.
+    let srv = ProjectorServer::bind(&addr, mk(), Registry::new()).unwrap();
+    let err = ProjectorServer::bind(&addr, mk(), Registry::new()).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("live server"),
+        "live-socket refusal must say so: {err:#}"
+    );
+    let mut rp = RemoteProjector::connect(&addr, 0, fast_net(), &Registry::new()).unwrap();
+    rp.project(&ternary_batch(2, D_IN, 5)).unwrap();
+    drop(rp);
+    drop(srv); // graceful shutdown unlinks the path
+    // 2) A dead socket (bind leftover of a killed process): reclaimed.
+    {
+        let _leftover = std::os::unix::net::UnixListener::bind(&path).unwrap();
+        // dropping the listener leaves the socket inode behind
+    }
+    assert!(path.exists(), "dead socket file should linger for this test");
+    let srv = ProjectorServer::bind(&addr, mk(), Registry::new()).unwrap();
+    drop(srv);
+    // 3) A regular file on the path: typed refusal, file untouched.
+    std::fs::write(&path, b"precious").unwrap();
+    let err = ProjectorServer::bind(&addr, mk(), Registry::new()).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("not a socket"),
+        "non-socket refusal must say so: {err:#}"
+    );
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        b"precious",
+        "bind must never unlink a non-socket file"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process smoke (CI `chaos-smoke` job: `cargo test -- --ignored chaos_smoke`)
+
+/// A spawned `litl serve` child.  Killed (not just dropped) on scope
+/// exit so a failing assert never leaks listeners.
+struct ServeProc {
+    child: Child,
+}
+
+impl ServeProc {
+    fn spawn(args: &[&str]) -> (ServeProc, String) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_litl"))
+            .arg("serve")
+            .args(args)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .expect("spawn litl serve");
+        let out = child.stdout.take().unwrap();
+        let mut lines = BufReader::new(out).lines();
+        let ep = loop {
+            match lines.next() {
+                Some(Ok(l)) => {
+                    if let Some(rest) = l.strip_prefix("litl-serve listening on ") {
+                        break rest.trim().to_string();
+                    }
+                }
+                other => panic!("serve child exited before its sentinel: {other:?}"),
+            }
+        };
+        (ServeProc { child }, ep)
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+#[ignore = "multi-process: run via the CI chaos-smoke job (--ignored chaos_smoke)"]
+fn chaos_smoke_graceful_sigterm_drains_and_flushes_tile_cache() {
+    let snap = std::env::temp_dir().join(format!(
+        "litl_chaos_sigterm_{}.tiles",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&snap);
+    let snap_s = snap.to_str().unwrap().to_string();
+    let (mut proc_, ep) = ServeProc::spawn(&[
+        "--listen", "tcp:127.0.0.1:0", "--topology", "opt:1", "--medium",
+        "streamed", "--d-in", "10", "--modes", "64", "--train-seed", "42",
+        "--tile-cache-mb", "4", "--tile-cache-save", &snap_s,
+    ]);
+    // Warm the server's tile cache with a real projection.
+    let addr = Addr::parse(&ep).unwrap();
+    let mut rp = RemoteProjector::connect(&addr, 0, fast_net(), &Registry::new()).unwrap();
+    rp.project(&ternary_batch(4, D_IN, 3)).unwrap();
+    drop(rp);
+    // SIGTERM → the server stops accepting, drains, flushes the
+    // snapshot, and exits 0 (abrupt kill would exit nonzero and skip
+    // the flush).
+    let status = Command::new("kill")
+        .arg(proc_.child.id().to_string())
+        .status()
+        .expect("send SIGTERM");
+    assert!(status.success(), "kill(1) failed");
+    let t0 = Instant::now();
+    let exit = loop {
+        match proc_.child.try_wait().expect("wait on serve child") {
+            Some(st) => break st,
+            None => {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(30),
+                    "serve child did not exit after SIGTERM"
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    assert!(exit.success(), "graceful shutdown must exit 0, got {exit:?}");
+    let meta = std::fs::metadata(&snap).expect("tile-cache snapshot must exist");
+    assert!(meta.len() > 0, "tile-cache snapshot must be non-empty");
+    let _ = std::fs::remove_file(&snap);
+}

@@ -47,6 +47,7 @@ fn fast_net() -> NetOptions {
         reconnect_tries: 2,
         reconnect_base_ms: 10,
         reconnect_max_ms: 50,
+        ..NetOptions::default()
     }
 }
 
@@ -302,7 +303,10 @@ fn dead_server_errors_in_flight_requests_without_hanging() {
         let (mut s, _) = listener.accept().unwrap();
         let (msg, _) = frame::recv(&mut s).unwrap();
         match msg {
-            Msg::Hello { shard } => assert_eq!(shard, 0),
+            Msg::Hello { shard, session } => {
+                assert_eq!(shard, 0);
+                assert_eq!(session, 0, "resume off greets with session 0");
+            }
             other => panic!("expected hello, got {other:?}"),
         }
         frame::send(
@@ -498,6 +502,7 @@ fn net_smoke_server_kill_failover_drains_to_survivors() {
             reconnect_tries: 1,
             reconnect_base_ms: 10,
             reconnect_max_ms: 20,
+            ..NetOptions::default()
         });
     let reg = Registry::new();
     let svc = topo

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Produce the committed bench records: run the e6 streaming, e4 scaling
-# and e7 loadgen benches in release mode and collect every JSON record
-# line they print (compact objects containing a "bench" key:
-# e6_genkernel / e6_streaming / e6_tile_cache / e6_cache_contention,
-# e4_shard_sweep / e4_service_sweep / e4_hetero_sweep, e7_loadgen) into
-# BENCH_e6.json / BENCH_e4.json / BENCH_e7.json at the repo root as
+# and e7 loadgen benches plus the chaos soak in release mode and collect
+# every JSON record line they print (compact objects containing a
+# "bench" key: e6_genkernel / e6_streaming / e6_tile_cache /
+# e6_cache_contention, e4_shard_sweep / e4_service_sweep /
+# e4_hetero_sweep, e7_loadgen, chaos) into BENCH_e6.json /
+# BENCH_e4.json / BENCH_e7.json / BENCH_chaos.json at the repo root as
 # JSON arrays.
 #
 # Usage: tools/bench_records.sh            (from anywhere in the repo)
@@ -36,6 +37,26 @@ collect() {
 collect e6_streaming BENCH_e6.json
 collect e4_scaling BENCH_e4.json
 collect e7_loadgen BENCH_e7.json
+
+# The chaos soak is a test, not a bench, but its headline case prints
+# the same kind of compact record ({"bench":"chaos",...} — injected
+# fault / resume / replay counts next to the bitwise verdict).
+collect_test() {
+    local test="$1" out="$2"
+    local log
+    log=$(mktemp)
+    echo "== running $test test (release) =="
+    cargo test --release -q --test "$test" -- --nocapture | tee "$log"
+    {
+        echo '['
+        grep '^{.*"bench":' "$log" | sed '$!s/$/,/'
+        echo ']'
+    } >"$out"
+    rm -f "$log"
+    echo "wrote $out"
+}
+
+collect_test chaos BENCH_chaos.json
 
 # Telemetry artifacts ride along with the perf records: a traced
 # heterogeneous training run (tests/trace_spans.rs, `--ignored` export
